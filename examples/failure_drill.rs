@@ -1,0 +1,137 @@
+//! Failure drill (Figure 9): mockup -> detect -> recover, end to end.
+//!
+//! The §3.2.8 loop: the failure-mockup tool injects a GPU fault, the
+//! diagnostic engine classifies it and recommends an action, the cluster
+//! cordons the node, the RayClusterFleet controller re-provisions the lost
+//! capacity elsewhere, and serving resumes — with the whole timeline
+//! printed. Also demonstrates engine-level drain/re-route of in-flight
+//! requests.
+//!
+//! Run: `cargo run --release --example failure_drill`
+
+use aibrix::cluster::{ClusterState, GpuKind};
+use aibrix::diagnostics::{diagnose, Action, FailureInjector, InjectedFault};
+use aibrix::engine::{EngineConfig, EngineSim, ModelSpec};
+use aibrix::orchestration::{
+    FleetController, FleetSpec, PlacementStrategy, RayClusterSpec,
+};
+use aibrix::workload::Request;
+
+fn main() {
+    // ---- cluster: 3 nodes x 2 A100s, one 2-GPU inference cluster --------
+    let mut state = ClusterState::new();
+    for _ in 0..3 {
+        state.add_node(GpuKind::A100, 2, 256);
+    }
+    let mut fleet = FleetController::new(FleetSpec {
+        name: "dsr1".into(),
+        replicas: 2,
+        cluster: RayClusterSpec {
+            model: "deepseek-r1-sim".into(),
+            gpu: GpuKind::A100,
+            workers: 1,
+            placement: PlacementStrategy::Pack,
+        },
+        generation: 1,
+        max_unavailable: 1,
+    });
+    fleet.reconcile(0, &mut state);
+    let pending: Vec<u64> = state.pods.keys().copied().collect();
+    for p in pending {
+        state.mark_ready(1, p);
+    }
+    fleet.reconcile(1, &mut state);
+    println!(
+        "t=1s   fleet up: {} RayClusters ready, {} pods",
+        fleet.ready_clusters(),
+        state.pods.len()
+    );
+
+    // ---- engine serving traffic on node 0 -------------------------------
+    let mut engine = EngineSim::new(0, 0, EngineConfig::new(GpuKind::A100, ModelSpec::llama_8b()));
+    for i in 0..12 {
+        engine.enqueue(Request {
+            id: i,
+            session: 0,
+            tokens: vec![5; 400],
+            output_len: 32,
+            arrival: 0,
+            model: "llama-8b".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+        });
+    }
+    let mut now = 1_000_000u64;
+    for _ in 0..3 {
+        if let Some(dt) = engine.step(now, None) {
+            now += dt;
+        }
+    }
+    println!("t=2s   engine serving: {} in flight", 12 - engine.completions.len());
+
+    // ---- inject a fault on node 0, GPU 0 ---------------------------------
+    let mut injector = FailureInjector::new();
+    injector.inject(0, 0, InjectedFault::EccUncorrectable);
+    println!("t=3s   MOCKUP: injected uncorrectable ECC fault on node 0 / gpu 0");
+
+    // ---- diagnostics sweep ----------------------------------------------
+    let mut cordoned = false;
+    for node in 0..3u64 {
+        for gpu in 0..2u32 {
+            let telemetry = injector.sample(node, gpu, now);
+            for d in diagnose(&telemetry) {
+                println!(
+                    "t=4s   DIAGNOSE node {} gpu {}: {:?} ({:?}) -> {:?}   [{}]",
+                    node, gpu, d.fault, d.severity, d.action, d.detail
+                );
+                if d.action == Action::DrainAndCordon {
+                    // Drain the engine, fail the node.
+                    let requeued = engine.fail_and_drain();
+                    println!(
+                        "t=5s   CORDON node {}: drained {} in-flight requests for re-route",
+                        node,
+                        requeued.len()
+                    );
+                    let failed_pods = state.fail_node(now, node);
+                    println!("t=5s   node {} down: {} pods failed", node, failed_pods.len());
+                    cordoned = true;
+                }
+            }
+        }
+    }
+    assert!(cordoned, "diagnostic must have fired");
+
+    // ---- recovery: controller re-provisions on healthy nodes ------------
+    for pass in 0..3 {
+        fleet.reconcile(now + pass, &mut state);
+        let pending: Vec<u64> = state
+            .pods
+            .values()
+            .filter(|p| p.phase == aibrix::cluster::PodPhase::Pending)
+            .map(|p| p.id)
+            .collect();
+        for p in pending {
+            state.mark_ready(now + pass + 1, p);
+        }
+    }
+    fleet.reconcile(now + 10, &mut state);
+    println!(
+        "t=6s   RECOVERED: {} RayClusters ready again (on healthy nodes only)",
+        fleet.ready_clusters()
+    );
+    assert_eq!(fleet.ready_clusters(), 2);
+    for c in fleet.clusters() {
+        for pod in c.pods() {
+            let node = state.pods[&pod].node.unwrap();
+            assert_ne!(node, 0, "no pod may sit on the cordoned node");
+        }
+    }
+
+    // ---- clear the fault, node returns ----------------------------------
+    injector.clear(0, 0);
+    state.recover_node(now + 20, 0);
+    engine.recover();
+    println!("t=9s   fault cleared, node 0 uncordoned, engine back in rotation");
+    println!("\ndrill complete: inject -> diagnose -> cordon -> re-provision -> recover");
+}

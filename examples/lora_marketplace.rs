@@ -1,0 +1,85 @@
+//! High-density LoRA management (Figure 2): a "marketplace" of 64 fine-
+//! tunes served by 4 base-model pods.
+//!
+//! Shows the §3.2.1 pipeline: dynamic adapter registration -> controller
+//! placement (weight-balanced bin packing) -> EndpointSlice-style discovery
+//! -> LoRA-affinity routing, and measures how affinity routing avoids
+//! adapter reload penalties under a Zipf-skewed adapter workload.
+//!
+//! Run: `cargo run --release --example lora_marketplace`
+
+use aibrix::cluster::GpuKind;
+use aibrix::engine::{EngineConfig, ModelSpec};
+use aibrix::gateway::Policy;
+use aibrix::harness::{run, HarnessConfig};
+use aibrix::lora::{AdapterSpec, LoraController, PodInfo};
+use aibrix::workload::{ArrivalProcess, ShareGptConfig, ShareGptWorkload};
+
+fn main() {
+    // --- control plane: register 64 adapters against 4 pods -------------
+    let mut ctl = LoraController::new(24);
+    for i in 0..64 {
+        let mut spec = AdapterSpec::new(&format!("lora-{i}"), "llama-8b");
+        spec.weight = 1.0 / (i as f64 + 1.0); // Zipf-ish popularity
+        spec.min_replicas = if i < 4 { 2 } else { 1 }; // hot adapters replicated
+        ctl.register(spec);
+    }
+    let pods: Vec<PodInfo> = (0..4)
+        .map(|id| PodInfo { id, base_model: "llama-8b".into(), ready: true })
+        .collect();
+    let actions = ctl.reconcile(&pods);
+    println!(
+        "registered 64 adapters -> {} placements across 4 pods ({} loads issued)",
+        ctl.total_placements(),
+        actions.len()
+    );
+    for p in 0..4 {
+        let on = ctl.adapters_on(p);
+        println!("  pod {p}: {} adapters (e.g. {:?})", on.len(), &on[..on.len().min(4)]);
+    }
+    println!(
+        "discovery: lora-0 -> pods {:?}, lora-63 -> pods {:?}\n",
+        ctl.endpoints("lora-0"),
+        ctl.endpoints("lora-63")
+    );
+
+    // --- data plane: affinity routing vs random ------------------------
+    let serve = |affinity: bool| {
+        let mut ec = EngineConfig::new(GpuKind::A10, ModelSpec::llama_8b());
+        ec.max_loras = 24;
+        let mut wl = ShareGptWorkload::new(ShareGptConfig {
+            n_requests: 500,
+            adapter_fraction: 0.8,
+            n_adapters: 64,
+            turns_mean: 1.2,
+            prompt_median: 150.0,
+            output_median: 60.0,
+            ..Default::default()
+        });
+        let cfg = HarnessConfig {
+            engines: (0..4).map(|i| (ec.clone(), i as u64)).collect(),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 10.0 },
+            kv_pool: None,
+            seed: 9,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        aibrix::harness::run_with_router_config(cfg, &mut wl, affinity)
+    };
+
+    let plain = serve(false);
+    let affine = serve(true);
+    println!("LoRA-aware routing vs adapter-blind (80% of 500 requests carry one of 64 adapters):");
+    println!(
+        "  blind   : mean TTFT {:>6.0}ms  p99 latency {:>7.0}ms",
+        plain.ttft_summary().mean,
+        plain.latency_summary().p99
+    );
+    println!(
+        "  affinity: mean TTFT {:>6.0}ms  p99 latency {:>7.0}ms",
+        affine.ttft_summary().mean,
+        affine.latency_summary().p99
+    );
+    println!("\naffinity keeps hot adapters resident, avoiding the 200ms reload on miss.");
+}

@@ -1,0 +1,135 @@
+"""AOT export: lower TinyLM prefill/decode to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out, default ../artifacts):
+  tinylm_prefill_b{B}_s{S}.hlo.txt   (params..., tokens[B,S]) -> (logits, k, v)
+  tinylm_decode_b{B}.hlo.txt         (params..., tok[B], pos[B], k, v) -> (logits, k, v)
+  params.bin                         all params, f32 little-endian, manifest order
+  manifest.json                      model config + param table + artifact table
+
+Python runs ONCE at build time (`make artifacts`); the Rust runtime
+(rust/src/runtime/) loads these and serves with no Python on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+PREFILL_BATCHES = (1, 4)
+DECODE_BATCHES = (1, 4, 8)
+PREFILL_SEQ = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, cfg: M.TinyLMConfig, seed: int = 0,
+           prefill_seq: int = None) -> dict:
+    if prefill_seq is None:
+        # Leave decode headroom; default cfg (max_seq=160) gives 128.
+        prefill_seq = min(PREFILL_SEQ, max(cfg.max_seq // 2, cfg.max_seq - 32))
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_params(cfg, seed=seed)
+    shapes = M.param_shapes(cfg)
+
+    # params.bin + table
+    param_table = []
+    offset = 0
+    with open(os.path.join(out_dir, "params.bin"), "wb") as f:
+        for (name, shape), arr in zip(shapes, params):
+            data = np.asarray(arr, dtype="<f4").tobytes()
+            f.write(data)
+            param_table.append(
+                {"name": name, "shape": list(shape), "offset": offset,
+                 "numel": int(np.prod(shape))}
+            )
+            offset += int(np.prod(shape))
+
+    n_params = len(params)
+    h, hd = cfg.n_heads, cfg.head_dim
+    cache_sds = lambda b: jax.ShapeDtypeStruct(
+        (cfg.n_layers, b, cfg.max_seq, h, hd), jnp.float32
+    )
+    artifacts = []
+
+    prefill_fn = M.make_prefill_fn(cfg)
+    for b in PREFILL_BATCHES:
+        name = f"tinylm_prefill_b{b}_s{prefill_seq}"
+        args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+        args.append(jax.ShapeDtypeStruct((b, prefill_seq), jnp.int32))
+        lowered = jax.jit(lambda *a: prefill_fn(list(a[:n_params]), a[n_params])).lower(*args)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts.append({"name": name, "kind": "prefill", "batch": b,
+                          "seq": prefill_seq, "file": name + ".hlo.txt"})
+
+    decode_fn = M.make_decode_fn(cfg)
+    for b in DECODE_BATCHES:
+        name = f"tinylm_decode_b{b}"
+        args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+        args += [
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # token
+            jax.ShapeDtypeStruct((b,), jnp.int32),  # pos
+            cache_sds(b),
+            cache_sds(b),
+        ]
+        lowered = jax.jit(
+            lambda *a: decode_fn(
+                list(a[:n_params]), a[n_params], a[n_params + 1],
+                a[n_params + 2], a[n_params + 3],
+            )
+        ).lower(*args)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts.append({"name": name, "kind": "decode", "batch": b,
+                          "file": name + ".hlo.txt"})
+
+    manifest = {
+        "model": "tinylm",
+        "seed": seed,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "page_size": cfg.page_size, "head_dim": cfg.head_dim,
+        },
+        "params": param_table,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.TinyLMConfig()
+    manifest = export(args.out, cfg, seed=args.seed)
+    total = sum(p["numel"] for p in manifest["params"])
+    print(f"exported {len(manifest['artifacts'])} HLO artifacts, "
+          f"{total} params ({total * 4 / 1e6:.1f} MB) to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Fused causal prefill attention as a Pallas kernel (flash-style).
+
+TPU adaptation of the CUDA flash/paged-attention design (DESIGN.md
+§Hardware-Adaptation): instead of one threadblock per (seq, head) streaming
+K/V through shared memory, we run one Pallas grid program per
+(batch, head, q-tile). BlockSpec stages the q tile and the full K/V rows for
+that head from HBM into VMEM; inside the kernel an online-softmax loop walks
+K/V in `blk_k`-sized tiles, feeding (blk_q x D) x (D x blk_k) contractions to
+the MXU and keeping the running (max, sum, acc) statistics in VPU registers.
+
+Runs under interpret=True on CPU (Mosaic custom-calls cannot execute on the
+CPU PJRT plugin); structure is what we optimize — see EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_k: int, q_tile: int, causal: bool):
+    """One (batch, head, q-tile) program: online softmax over K/V tiles."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0]  # [blk_q, D]
+    blk_q, d = q.shape
+    s_k = k_ref.shape[2]
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+
+    q_start = qi * q_tile
+
+    def body(kt, carry):
+        acc, m, l = carry
+        k_start = kt * blk_k
+        k_tile = jax.lax.dynamic_slice(k_ref[0, 0], (k_start, 0), (blk_k, d))
+        v_tile = jax.lax.dynamic_slice(v_ref[0, 0], (k_start, 0), (blk_k, d))
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p.astype(v_tile.dtype), v_tile, preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    n_k = s_k // blk_k
+    acc = jnp.zeros((blk_q, d), jnp.float32)
+    m = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((blk_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc, m, l))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k"))
+def flash_attention(q, k, v, causal=True, blk_q=None, blk_k=None):
+    """Causal multi-head attention, Pallas flash kernel.
+
+    Args:
+      q, k, v: [B, H, S, D].
+      blk_q, blk_k: tile sizes; must divide S. Defaults pick the largest
+        divisor of S that is <= 128 (lane-friendly on TPU).
+
+    Returns:
+      [B, H, S, D] attention output; matches kernels.ref.ref_attention.
+    """
+    b, h, s, d = q.shape
+
+    def pick(limit):
+        t = min(limit, s)
+        while s % t:
+            t -= 1
+        return t
+
+    blk_q = blk_q or pick(128)
+    blk_k = blk_k or pick(128)
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+
+    grid = (b, h, s // blk_q)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, blk_k=blk_k, q_tile=blk_q, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

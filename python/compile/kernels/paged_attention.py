@@ -1,0 +1,88 @@
+"""Decode-time paged attention as a Pallas kernel.
+
+vLLM's PagedAttention CUDA kernel chases block-table pointers from HBM with
+one threadblock per (seq, head). The TPU rethink (DESIGN.md
+§Hardware-Adaptation): one grid program per batch row; the page pool stays in
+ANY/HBM-resident memory and the kernel gathers only that row's pages into
+VMEM via a block-table indexed dynamic gather, then computes all H heads at
+once as dense (H x D) x (D x K) contractions — big 2-D tiles for the MXU
+instead of warp-level reductions. Sequence-length masking replaces the CUDA
+kernel's per-thread bounds checks.
+
+interpret=True only (CPU PJRT cannot run Mosaic); see EXPERIMENTS.md §Perf
+for the VMEM/MXU estimate on real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(q_ref, bt_ref, len_ref, kp_ref, vp_ref, o_ref):
+    """One batch row: gather pages by block table, masked attention, all heads."""
+    q = q_ref[0]  # [H, D]
+    h, d = q.shape
+    table = bt_ref[0]  # [max_blocks]
+    seq_len = len_ref[0]
+    max_blocks = table.shape[0]
+    page = kp_ref.shape[1]
+    kv_len = max_blocks * page
+
+    # Gather this row's pages: [max_blocks, page, H, D] -> [K, H, D].
+    k_seq = kp_ref[table].reshape(kv_len, h, d)
+    v_seq = vp_ref[table].reshape(kv_len, h, d)
+
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    # [H, K] scores on the MXU: contract D.
+    s = jax.lax.dot_general(
+        q, k_seq, (((1,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale
+    mask = jax.lax.broadcasted_iota(jnp.int32, (h, kv_len), 1) < seq_len
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    # [H, K] x [K, H, D] contracting K, batched over H.
+    o = jax.lax.dot_general(
+        p.astype(v_seq.dtype),
+        v_seq,
+        (((1,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    )  # [H, D]
+    o_ref[0] = (o / l).astype(o_ref.dtype)
+
+
+@jax.jit
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens):
+    """Single-token attention over a paged KV pool.
+
+    Args:
+      q: [B, H, D] new-token queries.
+      k_pages, v_pages: [P, page_size, H, D] page pool.
+      block_tables: [B, max_blocks] int32 page ids.
+      seq_lens: [B] int32 valid token counts.
+
+    Returns:
+      [B, H, D]; matches kernels.ref.ref_paged_decode.
+    """
+    b, h, d = q.shape
+    p, page, _, _ = k_pages.shape
+    max_blocks = block_tables.shape[1]
+    return pl.pallas_call(
+        _paged_decode_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, max_blocks), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((p, page, h, d), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((p, page, h, d), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, block_tables, seq_lens, k_pages, v_pages)

@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also used by the L2 model tests to
+cross-check the full prefill/decode graphs.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, causal=True):
+    """Dense (optionally causal) multi-head attention.
+
+    Args:
+      q, k, v: [B, H, S, D] float arrays.
+      causal: apply a lower-triangular mask when True.
+
+    Returns:
+      [B, H, S, D] attention output.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s_q, s_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s_q, s_k), dtype=bool), k=s_k - s_q)
+        scores = jnp.where(mask[None, None], scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+def ref_paged_decode(q, k_pages, v_pages, block_tables, seq_lens):
+    """Decode-time attention over a paged KV cache.
+
+    Args:
+      q: [B, H, D] query for the single new token of each sequence.
+      k_pages, v_pages: [P, page_size, H, D] global page pool.
+      block_tables: [B, max_blocks] int32, page ids per sequence (row-major).
+      seq_lens: [B] int32, number of valid tokens per sequence.
+
+    Returns:
+      [B, H, D] attention output.
+    """
+    b, h, d = q.shape
+    max_blocks = block_tables.shape[1]
+    page_size = k_pages.shape[1]
+    outs = []
+    for i in range(b):
+        # Gather this row's pages into one contiguous [max_blocks*page, H, D].
+        k_seq = k_pages[block_tables[i]].reshape(max_blocks * page_size, h, d)
+        v_seq = v_pages[block_tables[i]].reshape(max_blocks * page_size, h, d)
+        scores = jnp.einsum("hd,khd->hk", q[i], k_seq) / jnp.sqrt(d).astype(q.dtype)
+        mask = jnp.arange(max_blocks * page_size) < seq_lens[i]
+        scores = jnp.where(mask[None, :], scores, jnp.finfo(scores.dtype).min)
+        probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+        probs = probs / probs.sum(axis=-1, keepdims=True)
+        outs.append(jnp.einsum("hk,khd->hd", probs.astype(q.dtype), v_seq))
+    return jnp.stack(outs)

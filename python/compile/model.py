@@ -1,0 +1,177 @@
+"""L2: TinyLM — a small GPT-style decoder in JAX, calling the L1 Pallas kernels.
+
+This is the "real small model" of the end-to-end example (DESIGN.md §7): a
+4-layer RoPE transformer with RMSNorm and a GELU MLP, deterministically
+initialized, AOT-lowered by aot.py to HLO text, and served from the Rust
+coordinator via PJRT. Two entry points:
+
+  * prefill(params, tokens[B, S])          -> logits[B, S, V], k/v caches
+  * decode(params, token[B], pos[B], k, v) -> logits[B, V], updated k/v caches
+
+KV caches are laid out [L, B, Smax, H, D]. Decode views the cache as a paged
+pool ([B*Smax/page, page, H, D]) and calls the paged_attention Pallas kernel
+with the (static) identity block table, so the decode hot path exercises the
+same paged-gather code path a vLLM-style engine uses.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.paged_attention import paged_decode_attention
+
+
+@dataclass(frozen=True)
+class TinyLMConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 160  # prefill budget + decode budget
+    page_size: int = 16
+    rope_base: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def param_shapes(cfg: TinyLMConfig):
+    """Ordered (name, shape) list — the AOT manifest and Rust loader follow it."""
+    shapes = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w_in", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_out", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes.append(("ln_f", (cfg.d_model,)))
+    return shapes
+
+
+def init_params(cfg: TinyLMConfig, seed: int = 0):
+    """Deterministic init; scale keeps logits O(1) so greedy decode is stable."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else cfg.d_model
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return params
+
+
+def _rms_norm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _rope(x, pos, base):
+    """x: [..., S, H, D]; pos: [..., S] absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack(params, cfg):
+    names = [n for n, _ in param_shapes(cfg)]
+    return dict(zip(names, params))
+
+
+def prefill(params, tokens, cfg: TinyLMConfig):
+    """Full-prompt forward. tokens: [B, S] int32 (padded to S).
+
+    Returns (logits [B, S, V], k_cache, v_cache [L, B, Smax, H, D]).
+    Positions past the true prompt length hold pad garbage in the caches;
+    decode masks them out via seq_lens, so they are never attended to.
+    """
+    p = _unpack(params, cfg)
+    b, s = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = p["embed"][tokens]  # [B, S, Dm]
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    k_cache = jnp.zeros((cfg.n_layers, b, cfg.max_seq, h, hd), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for i in range(cfg.n_layers):
+        xn = _rms_norm(x, p[f"l{i}.ln1"])
+        q = (xn @ p[f"l{i}.wq"]).reshape(b, s, h, hd)
+        k = (xn @ p[f"l{i}.wk"]).reshape(b, s, h, hd)
+        v = (xn @ p[f"l{i}.wv"]).reshape(b, s, h, hd)
+        q = _rope(q, pos, cfg.rope_base)
+        k = _rope(k, pos, cfg.rope_base)
+        k_cache = k_cache.at[i, :, :s].set(k)
+        v_cache = v_cache.at[i, :, :s].set(v)
+        # L1 kernel: [B, H, S, D] layout.
+        attn = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        ).transpose(0, 2, 1, 3)
+        x = x + attn.reshape(b, s, cfg.d_model) @ p[f"l{i}.wo"]
+        xn = _rms_norm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(xn @ p[f"l{i}.w_in"]) @ p[f"l{i}.w_out"]
+    x = _rms_norm(x, p["ln_f"])
+    logits = x @ p["embed"].T
+    return logits, k_cache, v_cache
+
+
+def decode(params, token, pos, k_cache, v_cache, cfg: TinyLMConfig):
+    """One decode step. token: [B] int32, pos: [B] int32 (write position).
+
+    Attends to cache positions < pos+1 through the paged-attention kernel.
+    Returns (logits [B, V], k_cache, v_cache) with the new token written.
+    """
+    p = _unpack(params, cfg)
+    b = token.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    pages_per_seq = cfg.max_seq // cfg.page_size
+    # Static identity block table: row i owns pages [i*pps, (i+1)*pps).
+    block_tables = (
+        jnp.arange(b)[:, None] * pages_per_seq + jnp.arange(pages_per_seq)[None, :]
+    ).astype(jnp.int32)
+    seq_lens = (pos + 1).astype(jnp.int32)
+
+    x = p["embed"][token]  # [B, Dm]
+    for i in range(cfg.n_layers):
+        xn = _rms_norm(x, p[f"l{i}.ln1"])
+        q = (xn @ p[f"l{i}.wq"]).reshape(b, h, hd)
+        k = (xn @ p[f"l{i}.wk"]).reshape(b, h, hd)
+        v = (xn @ p[f"l{i}.wv"]).reshape(b, h, hd)
+        q = _rope(q.reshape(b, 1, h, hd), pos[:, None], cfg.rope_base).reshape(b, h, hd)
+        k = _rope(k.reshape(b, 1, h, hd), pos[:, None], cfg.rope_base).reshape(b, h, hd)
+        # Write the new k/v at each row's position.
+        bidx = jnp.arange(b)
+        k_cache = k_cache.at[i, bidx, pos].set(k)
+        v_cache = v_cache.at[i, bidx, pos].set(v)
+        k_pages = k_cache[i].reshape(b * pages_per_seq, cfg.page_size, h, hd)
+        v_pages = v_cache[i].reshape(b * pages_per_seq, cfg.page_size, h, hd)
+        attn = paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens)
+        x = x + attn.reshape(b, cfg.d_model) @ p[f"l{i}.wo"]
+        xn = _rms_norm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(xn @ p[f"l{i}.w_in"]) @ p[f"l{i}.w_out"]
+    x = _rms_norm(x, p["ln_f"])
+    logits = x @ p["embed"].T
+    return logits, k_cache, v_cache
+
+
+def make_prefill_fn(cfg: TinyLMConfig):
+    return functools.partial(prefill, cfg=cfg)
+
+
+def make_decode_fn(cfg: TinyLMConfig):
+    return functools.partial(decode, cfg=cfg)

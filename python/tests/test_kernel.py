@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal for the compute layer. Hypothesis sweeps shapes
+and dtypes; every case asserts allclose against kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.paged_attention import paged_decode_attention
+from compile.kernels.ref import ref_attention, ref_paged_decode
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- flash
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 8, 8), (2, 4, 64, 32), (1, 2, 128, 64), (3, 1, 32, 16)])
+    def test_matches_ref_causal(self, b, h, s, d):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * 1000 + s), 3)
+        q, k, v = rand(k1, (b, h, s, d), jnp.float32), rand(k2, (b, h, s, d), jnp.float32), rand(k3, (b, h, s, d), jnp.float32)
+        np.testing.assert_allclose(flash_attention(q, k, v), ref_attention(q, k, v), rtol=2e-5, atol=2e-5)
+
+    def test_non_causal(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+        q, k, v = (rand(ki, (2, 2, 32, 16), jnp.float32) for ki in (k1, k2, k3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, causal=False),
+            ref_attention(q, k, v, causal=False),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+        q, k, v = (rand(ki, (1, 2, 32, 32), dtype) for ki in (k1, k2, k3))
+        out = flash_attention(q, k, v)
+        ref = ref_attention(q, k, v)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), **tol(dtype)
+        )
+
+    @pytest.mark.parametrize("blk_q,blk_k", [(8, 8), (16, 32), (32, 16), (64, 64)])
+    def test_tile_shapes(self, blk_q, blk_k):
+        """Output must be tile-shape invariant (pure refactoring of the loop)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+        q, k, v = (rand(ki, (1, 1, 64, 16), jnp.float32) for ki in (k1, k2, k3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, blk_q=blk_q, blk_k=blk_k),
+            ref_attention(q, k, v),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_softmax_rows_sum_to_one_effect(self):
+        """With v = ones, attention output must be exactly ones (softmax sums to 1)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3), 2)
+        q, k = (rand(ki, (1, 2, 16, 8), jnp.float32) for ki in (k1, k2))
+        v = jnp.ones((1, 2, 16, 8), jnp.float32)
+        np.testing.assert_allclose(flash_attention(q, k, v), jnp.ones_like(v), rtol=1e-5, atol=1e-5)
+
+    def test_large_magnitude_stability(self):
+        """Online softmax must survive large score magnitudes (no inf/nan)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = rand(k1, (1, 1, 16, 8), jnp.float32) * 100
+        k = rand(k2, (1, 1, 16, 8), jnp.float32) * 100
+        v = rand(k3, (1, 1, 16, 8), jnp.float32)
+        out = flash_attention(q, k, v)
+        assert bool(jnp.isfinite(out).all())
+        np.testing.assert_allclose(out, ref_attention(q, k, v), rtol=1e-4, atol=1e-4)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s_exp=st.integers(3, 7),
+        d_exp=st.integers(3, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, h, s_exp, d_exp, seed):
+        s, d = 2**s_exp, 2**d_exp
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q, k, v = (rand(ki, (b, h, s, d), jnp.float32) for ki in (k1, k2, k3))
+        np.testing.assert_allclose(flash_attention(q, k, v), ref_attention(q, k, v), rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------- paged
+
+
+def make_paged(key, b, h, d, pages, page_size, max_blocks, seed_lens):
+    ks = jax.random.split(key, 4)
+    q = rand(ks[0], (b, h, d), jnp.float32)
+    kp = rand(ks[1], (pages, page_size, h, d), jnp.float32)
+    vp = rand(ks[2], (pages, page_size, h, d), jnp.float32)
+    # Disjoint random block tables.
+    perm = jax.random.permutation(ks[3], pages)[: b * max_blocks]
+    bt = perm.reshape(b, max_blocks).astype(jnp.int32)
+    sl = jnp.asarray(seed_lens, jnp.int32)
+    return q, kp, vp, bt, sl
+
+
+class TestPagedDecode:
+    @pytest.mark.parametrize("b,h,d", [(1, 1, 8), (2, 4, 32), (4, 2, 64)])
+    def test_matches_ref(self, b, h, d):
+        key = jax.random.PRNGKey(b * 31 + d)
+        max_blocks, page = 4, 16
+        lens = [(i * 13) % (max_blocks * page - 1) + 1 for i in range(b)]
+        q, kp, vp, bt, sl = make_paged(key, b, h, d, b * max_blocks + 2, page, max_blocks, lens)
+        np.testing.assert_allclose(
+            paged_decode_attention(q, kp, vp, bt, sl),
+            ref_paged_decode(q, kp, vp, bt, sl),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_full_length(self):
+        key = jax.random.PRNGKey(42)
+        q, kp, vp, bt, sl = make_paged(key, 2, 2, 16, 10, 8, 4, [32, 32])
+        np.testing.assert_allclose(
+            paged_decode_attention(q, kp, vp, bt, sl),
+            ref_paged_decode(q, kp, vp, bt, sl),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_length_one(self):
+        """Only the first token is attended: output == v[first token]."""
+        key = jax.random.PRNGKey(43)
+        q, kp, vp, bt, sl = make_paged(key, 1, 2, 8, 6, 4, 2, [1])
+        out = paged_decode_attention(q, kp, vp, bt, sl)
+        expected = vp[bt[0, 0], 0]  # [H, D]
+        np.testing.assert_allclose(out[0], expected, rtol=1e-5, atol=1e-5)
+
+    def test_mask_excludes_stale_pages(self):
+        """Poisoning pages beyond seq_len must not change the output."""
+        key = jax.random.PRNGKey(44)
+        q, kp, vp, bt, sl = make_paged(key, 1, 2, 8, 8, 4, 4, [5])
+        out1 = paged_decode_attention(q, kp, vp, bt, sl)
+        # Positions 0..4 are valid (block 0 fully, block 1 slot 0). Poison
+        # everything from position 5 on in this row's pages.
+        kp2, vp2 = kp, vp
+        for blk in range(2, 4):
+            kp2 = kp2.at[bt[0, blk]].set(1e9)
+            vp2 = vp2.at[bt[0, blk]].set(-1e9)
+        kp2 = kp2.at[bt[0, 1], 1:].set(1e9)
+        vp2 = vp2.at[bt[0, 1], 1:].set(-1e9)
+        out2 = paged_decode_attention(q, kp2, vp2, bt, sl)
+        np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        b=st.integers(1, 4),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16, 32]),
+        page=st.sampled_from([4, 8, 16]),
+        max_blocks=st.integers(2, 5),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, b, h, d, page, max_blocks, seed, data):
+        lens = [
+            data.draw(st.integers(1, max_blocks * page), label=f"len{i}")
+            for i in range(b)
+        ]
+        key = jax.random.PRNGKey(seed)
+        q, kp, vp, bt, sl = make_paged(key, b, h, d, b * max_blocks + 1, page, max_blocks, lens)
+        np.testing.assert_allclose(
+            paged_decode_attention(q, kp, vp, bt, sl),
+            ref_paged_decode(q, kp, vp, bt, sl),
+            rtol=3e-5, atol=3e-5,
+        )

@@ -1,0 +1,130 @@
+"""L2 correctness: TinyLM prefill/decode graphs.
+
+Checks the invariants the Rust serving path depends on:
+  * prefill and step-by-step decode agree (KV cache correctness),
+  * padded prompts do not pollute live positions,
+  * shapes/dtypes match what aot.py advertises in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.TinyLMConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=32, page_size=8
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def test_param_shapes_cover_init(params):
+    shapes = M.param_shapes(CFG)
+    assert len(shapes) == len(params)
+    for (name, shape), arr in zip(shapes, params):
+        assert tuple(arr.shape) == tuple(shape), name
+
+
+def test_prefill_shapes(params):
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits, kc, vc = M.prefill(params, toks, CFG)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.n_heads, CFG.head_dim)
+    assert vc.shape == kc.shape
+
+
+def test_prefill_decode_consistency(params):
+    """Decoding token S-1 with the cache of tokens 0..S-2 must reproduce the
+    prefill logits at position S-1 (the KV cache is exact)."""
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 16), 0, CFG.vocab)
+    logits_full, _, _ = M.prefill(params, toks, CFG)
+    # Prefill only the first 15 tokens (pad one), then decode the 16th.
+    logits_p, kc, vc = M.prefill(params, toks, CFG)
+    lg, _, _ = M.decode(
+        params, toks[:, -1], jnp.full((2,), 15, jnp.int32), kc, vc, CFG
+    )
+    np.testing.assert_allclose(lg, logits_full[:, -1], rtol=1e-4, atol=1e-4)
+
+
+def test_multi_step_decode_matches_prefill(params):
+    """Prefill 8 tokens then decode 4 more; logits at each step must match a
+    longer prefill over the concatenated sequence."""
+    key = jax.random.PRNGKey(2)
+    toks = jax.random.randint(key, (1, 12), 0, CFG.vocab)
+    ref_logits, _, _ = M.prefill(params, toks, CFG)
+
+    _, kc, vc = M.prefill(params, toks[:, :8], CFG)
+    for step in range(4):
+        pos = jnp.array([8 + step], jnp.int32)
+        lg, kc, vc = M.decode(params, toks[:, 8 + step], pos, kc, vc, CFG)
+        np.testing.assert_allclose(
+            lg[0], ref_logits[0, 8 + step], rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_padding_does_not_pollute(params):
+    """A prompt padded to S and one padded with different garbage must produce
+    identical decode logits — pad KV is overwritten or masked."""
+    key = jax.random.PRNGKey(3)
+    real = jax.random.randint(key, (1, 8), 0, CFG.vocab)
+    padded_a = jnp.concatenate([real, jnp.zeros((1, 8), jnp.int32)], axis=1)
+    padded_b = jnp.concatenate([real, jnp.full((1, 8), 7, jnp.int32)], axis=1)
+    _, kca, vca = M.prefill(params, padded_a, CFG)
+    _, kcb, vcb = M.prefill(params, padded_b, CFG)
+    nxt = jnp.array([3], jnp.int32)
+    pos = jnp.array([8], jnp.int32)  # true length 8 -> write at 8
+    la, _, _ = M.decode(params, nxt, pos, kca, vca, CFG)
+    lb, _, _ = M.decode(params, nxt, pos, kcb, vcb, CFG)
+    np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_rows_independent(params):
+    """Batch rows must not leak into each other: decoding [a, b] equals
+    decoding a and b separately."""
+    key = jax.random.PRNGKey(4)
+    toks = jax.random.randint(key, (2, 8), 0, CFG.vocab)
+    _, kc, vc = M.prefill(params, toks, CFG)
+    pos = jnp.array([8, 8], jnp.int32)
+    nxt = jnp.array([5, 9], jnp.int32)
+    lg_batch, _, _ = M.decode(params, nxt, pos, kc, vc, CFG)
+
+    for i in range(2):
+        _, kci, vci = M.prefill(params, toks[i : i + 1], CFG)
+        lg_i, _, _ = M.decode(
+            params, nxt[i : i + 1], pos[i : i + 1], kci, vci, CFG
+        )
+        np.testing.assert_allclose(lg_batch[i], lg_i[0], rtol=2e-4, atol=2e-4)
+
+
+def test_deterministic_init():
+    a = M.init_params(CFG, seed=0)
+    b = M.init_params(CFG, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = M.init_params(CFG, seed=1)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, c))
+
+
+def test_greedy_decode_is_stable(params):
+    """Greedy continuation must be deterministic across runs."""
+    toks = jnp.arange(8, dtype=jnp.int32)[None, :] % CFG.vocab
+    _, kc, vc = M.prefill(params, toks, CFG)
+    outs = []
+    for _ in range(2):
+        kci, vci = kc, vc
+        cur = toks[:, -1]
+        seq = []
+        for step in range(4):
+            lg, kci, vci = M.decode(
+                params, cur, jnp.array([8 + step], jnp.int32), kci, vci, CFG
+            )
+            cur = lg.argmax(-1).astype(jnp.int32)
+            seq.append(int(cur[0]))
+        outs.append(seq)
+    assert outs[0] == outs[1]

@@ -1,0 +1,32 @@
+//! EXP-AS — regenerates the §3.2.4 autoscaling comparison: HPA vs KPA vs
+//! APA on a bursty workload with cold-start delays.
+//!
+//! Run: `cargo bench --bench autoscaling`
+
+use aibrix::autoscaler::simulate::ScalingSimConfig;
+use aibrix::experiments::scaling::{render, run_scaling};
+use std::time::Instant;
+
+fn main() {
+    let cfg = ScalingSimConfig::default_burst();
+    println!(
+        "== LLM-specific autoscaling (burst 4->20 req/s @120-300s, {}s cold start, {}s run) ==\n",
+        cfg.cold_start_us / 1_000_000,
+        cfg.duration / 1_000_000
+    );
+    let t0 = Instant::now();
+    let rows = run_scaling(&cfg);
+    println!("{}", render(&rows));
+    println!("(bench wall time: {:.1}s)", t0.elapsed().as_secs_f64());
+
+    let hpa = &rows.iter().find(|r| r.name == "hpa").unwrap().report;
+    let apa = &rows.iter().find(|r| r.name == "apa").unwrap().report;
+    println!("\npaper: KPA/APA vs HPA: -11.5% latency, +11.4% token throughput, -33% oscillations");
+    println!(
+        "ours : APA vs HPA: {:+.1}% latency, {:+.1}% throughput, {:+.1}% oscillations",
+        (apa.latency_ms.mean - hpa.latency_ms.mean) / hpa.latency_ms.mean * 100.0,
+        (apa.token_throughput - hpa.token_throughput) / hpa.token_throughput * 100.0,
+        (apa.oscillations as f64 - hpa.oscillations as f64) / (hpa.oscillations.max(1) as f64)
+            * 100.0
+    );
+}

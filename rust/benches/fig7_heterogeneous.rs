@@ -1,0 +1,29 @@
+//! EXP-F7 — regenerates **Figure 7**: (a) per-GPU throughput across the
+//! (input, output) token grid for deepseek-coder-7b; (b) the cheapest-GPU
+//! preference map with its A10/L20 crossover.
+//!
+//! Run: `cargo bench --bench fig7_heterogeneous`
+
+use aibrix::experiments::fig7::{crossover, render_fig7a, render_fig7b, run_fig7};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let f = run_fig7();
+    println!("== Figure 7a: throughput under SLO (req/s), deepseek-coder-7b ==\n");
+    println!("{}", render_fig7a(&f));
+    println!("== Figure 7b: most cost-efficient GPU per (input, output) bin ==\n");
+    println!("{}", render_fig7b(&f));
+    let s = crossover(&f);
+    println!(
+        "crossover: A10 optimal in {} bins, L20 in {}, V100 in {}; small-request corner -> {}",
+        s.a10_bins,
+        s.l20_bins,
+        s.v100_bins,
+        if s.small_corner_is_a10 { "A10 (matches paper)" } else { "NOT A10 (mismatch!)" }
+    );
+    println!(
+        "paper: most requests favor L20; <200 input & <100 output tokens prefer A10"
+    );
+    println!("(bench wall time: {:.2}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,155 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! The coordinator must never be the bottleneck: engine steps are ms-scale,
+//! so routing decisions, allocator ops, prefix hashing, window ingest, and
+//! the ILP must stay µs-scale. Measured with a self-contained harness
+//! (warmup + median-of-runs; no criterion offline).
+//!
+//! Run: `cargo bench --bench microbench`
+
+use aibrix::cluster::GpuKind;
+use aibrix::engine::prefix::{prompt_block_keys, PrefixCache};
+use aibrix::engine::{BlockAllocator, EngineStats, ModelSpec};
+use aibrix::gateway::{PodSnapshot, Policy, Router};
+use aibrix::kvcache::{EvictionKind, EvictionPolicy};
+use aibrix::metrics::SlidingWindow;
+use aibrix::optimizer::ilp::{solve, IlpProblem};
+use aibrix::optimizer::loadmonitor::DemandVector;
+use aibrix::optimizer::profiles::{ProfileTable, Slo, TokenBin};
+use aibrix::util::Rng;
+use aibrix::workload::Request;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Median ns/op over `runs` timed batches of `iters` calls.
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+    // Warmup.
+    for _ in 0..iters / 4 {
+        f();
+    }
+    let mut samples = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("{name:<44} {:>10.0} ns/op", samples[2]);
+}
+
+fn request(tokens: usize) -> Request {
+    Request {
+        id: 0,
+        session: 0,
+        tokens: vec![7; tokens],
+        output_len: 32,
+        arrival: 0,
+        model: "m".into(),
+        adapter: None,
+        user: 0,
+        shared_prefix_len: 0,
+    }
+}
+
+fn snapshots(n: usize) -> Vec<PodSnapshot> {
+    (0..n)
+        .map(|i| PodSnapshot {
+            pod: i,
+            ready: true,
+            stats: EngineStats {
+                waiting: i % 5,
+                running: (i * 3) % 7,
+                kv_utilization: (i as f64 * 0.13) % 1.0,
+                tokens_per_s: 1000.0 + i as f64,
+                avg_latency_us: 50_000.0 + (i as f64 * 1234.0) % 90_000.0,
+                prefix_hit_rate: 0.4,
+            },
+            prefix_match_blocks: i % 10,
+            prompt_blocks: 100,
+            resident_adapters: vec![],
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== coordinator hot-path microbenchmarks ==\n");
+
+    // Router decision @ 8 pods, every policy.
+    let snaps = snapshots(8);
+    let req = request(1600);
+    for policy in Policy::all() {
+        let mut router = Router::new(policy, 1);
+        bench(&format!("router.select[{}] @8 pods", policy.name()), 200_000, || {
+            black_box(router.select(&req, &snaps));
+        });
+    }
+    let snaps64 = snapshots(64);
+    let mut router = Router::new(Policy::LeastRequest, 1);
+    bench("router.select[least-request] @64 pods", 100_000, || {
+        black_box(router.select(&req, &snaps64));
+    });
+
+    // Block allocator.
+    let mut alloc = BlockAllocator::new(4096, 16);
+    bench("block alloc+release", 500_000, || {
+        let b = alloc.alloc().unwrap();
+        alloc.release(b);
+    });
+
+    // Prefix hashing of a Bird-SQL-sized prompt.
+    let prompt = vec![42u32; 1700];
+    bench("prompt_block_keys (1700 tokens)", 20_000, || {
+        black_box(prompt_block_keys(&prompt, 16));
+    });
+
+    // Prefix-cache lookup (warm, 100-block chain).
+    let keys = prompt_block_keys(&prompt, 16);
+    let mut pc = PrefixCache::new();
+    let mut alloc2 = BlockAllocator::new(8192, 16);
+    let blocks: Vec<u32> = keys.iter().map(|_| alloc2.alloc().unwrap()).collect();
+    for (k, b) in keys.iter().zip(&blocks) {
+        pc.insert(*k, *b);
+    }
+    bench("prefix_cache.match_len (106 blocks)", 100_000, || {
+        black_box(pc.match_len(&keys));
+    });
+
+    // Sliding-window ingest.
+    let mut w = SlidingWindow::new(10_000_000);
+    let mut t = 0u64;
+    bench("sliding_window.record", 1_000_000, || {
+        t += 100;
+        w.record(t, 1.0);
+    });
+
+    // S3-FIFO insert+evict churn.
+    let mut s3 = EvictionKind::S3Fifo.build();
+    let mut key = 0u64;
+    for _ in 0..1000 {
+        s3.on_insert(key);
+        key += 1;
+    }
+    bench("s3fifo insert+evict (1k resident)", 200_000, || {
+        s3.on_insert(key);
+        key += 1;
+        black_box(s3.evict());
+    });
+
+    // ILP solve, realistic size (24 bins x 2 GPUs).
+    let profiles = ProfileTable::build(
+        &ModelSpec::deepseek_coder_7b(),
+        &[GpuKind::A10, GpuKind::L20],
+        Slo::default(),
+    );
+    let mut rng = Rng::new(3);
+    let mut demand = DemandVector::new();
+    for b in TokenBin::grid() {
+        demand.insert(b, rng.uniform(0.2, 5.0));
+    }
+    let problem = IlpProblem::build(&profiles, &[GpuKind::A10, GpuKind::L20], &demand, 64);
+    bench("ilp.solve (24 bins x 2 GPUs)", 200, || {
+        black_box(solve(&problem));
+    });
+}

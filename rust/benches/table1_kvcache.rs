@@ -1,0 +1,40 @@
+//! EXP-T1 — regenerates **Table 1**: distributed KV cache vs vLLM configs
+//! on the Bird-SQL workload (4xA10, deepseek-coder-7b).
+//!
+//! Run: `cargo bench --bench table1_kvcache`
+//! Smaller/larger scale: `AIBRIX_T1_REQUESTS=160 cargo bench ...`
+
+use aibrix::experiments::table1::{render, run_table1, Table1Params};
+use aibrix::workload::BirdSqlConfig;
+use std::time::Instant;
+
+fn main() {
+    let mut params = Table1Params::default();
+    if let Ok(n) = std::env::var("AIBRIX_T1_REQUESTS") {
+        params.workload = BirdSqlConfig {
+            n_requests: n.parse().expect("AIBRIX_T1_REQUESTS must be a number"),
+            ..params.workload
+        };
+    }
+    println!("== Table 1: AIBrix distributed KV cache (Bird-SQL, 4xA10, deepseek-coder-7b) ==");
+    println!(
+        "workload: {} requests, {} schemas, ~{} schema tokens, {} closed-loop clients\n",
+        params.workload.n_requests,
+        params.workload.n_schemas,
+        params.workload.schema_tokens_mean,
+        params.clients
+    );
+    let t0 = Instant::now();
+    let rows = run_table1(&params);
+    println!("{}", render(&rows));
+    println!("(bench wall time: {:.1}s)", t0.elapsed().as_secs_f64());
+
+    // Paper-shape summary, printed so regressions are visible in bench logs.
+    let tput = |label: &str| rows.iter().find(|r| r.label == label).unwrap().total_tput;
+    let ttft = |label: &str| rows.iter().find(|r| r.label == label).unwrap().ttft_avg_ms;
+    let gain = (tput("AIBrix DistKV + Prefix Caching") / tput("vLLM Prefix Caching") - 1.0) * 100.0;
+    let ttft_cut =
+        (1.0 - ttft("AIBrix DistKV + Prefix Caching") / ttft("vLLM Prefix Caching")) * 100.0;
+    println!("\npaper: +51.6% tput, -65% avg TTFT vs prefix caching");
+    println!("ours : {gain:+.1}% tput, -{ttft_cut:.1}% avg TTFT vs prefix caching");
+}

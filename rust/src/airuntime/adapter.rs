@@ -1,0 +1,278 @@
+//! Vendor-agnostic engine adapters.
+//!
+//! "Directly supporting these engines in the control plane is not scalable
+//! due to the wide variety of protocols they use" — the runtime translates
+//! one [`UnifiedConfig`] into engine-specific launch arguments and maps
+//! engine metrics back to unified names, so the controllers never see
+//! vendor detail.
+
+use std::collections::BTreeMap;
+
+/// Inference-engine vendors the runtime abstracts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineVendor {
+    Vllm,
+    Sglang,
+    TrtLlm,
+}
+
+impl EngineVendor {
+    pub fn all() -> &'static [EngineVendor] {
+        &[EngineVendor::Vllm, EngineVendor::Sglang, EngineVendor::TrtLlm]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineVendor::Vllm => "vllm",
+            EngineVendor::Sglang => "sglang",
+            EngineVendor::TrtLlm => "tensorrt-llm",
+        }
+    }
+}
+
+/// The unified engine configuration the control plane speaks.
+#[derive(Debug, Clone)]
+pub struct UnifiedConfig {
+    pub model: String,
+    pub tensor_parallel: u32,
+    pub max_num_seqs: usize,
+    pub enable_prefix_caching: bool,
+    pub enable_chunked_prefill: bool,
+    pub max_loras: usize,
+    pub kv_cache_fraction: f64,
+}
+
+impl Default for UnifiedConfig {
+    fn default() -> Self {
+        UnifiedConfig {
+            model: String::new(),
+            tensor_parallel: 1,
+            max_num_seqs: 256,
+            enable_prefix_caching: false,
+            enable_chunked_prefill: false,
+            max_loras: 0,
+            kv_cache_fraction: 0.9,
+        }
+    }
+}
+
+/// One engine's management surface, as exposed to the sidecar.
+pub trait EngineAdapter {
+    fn vendor(&self) -> EngineVendor;
+    /// Engine-specific launch arguments for the unified config.
+    fn launch_args(&self, cfg: &UnifiedConfig) -> Vec<String>;
+    /// Map a vendor metric name to the unified name (None = untranslated).
+    fn unify_metric(&self, vendor_metric: &str) -> Option<&'static str>;
+    /// Whether dynamic LoRA load/unload is supported (vLLM's dynamic
+    /// registration is the paper's contribution upstream).
+    fn supports_dynamic_lora(&self) -> bool;
+}
+
+pub struct VllmAdapter;
+
+impl EngineAdapter for VllmAdapter {
+    fn vendor(&self) -> EngineVendor {
+        EngineVendor::Vllm
+    }
+
+    fn launch_args(&self, cfg: &UnifiedConfig) -> Vec<String> {
+        let mut args = vec![
+            format!("--model={}", cfg.model),
+            format!("--tensor-parallel-size={}", cfg.tensor_parallel),
+            format!("--max-num-seqs={}", cfg.max_num_seqs),
+            format!("--gpu-memory-utilization={}", cfg.kv_cache_fraction),
+        ];
+        if cfg.enable_prefix_caching {
+            args.push("--enable-prefix-caching".into());
+        }
+        if cfg.enable_chunked_prefill {
+            args.push("--enable-chunked-prefill".into());
+        }
+        if cfg.max_loras > 0 {
+            args.push("--enable-lora".into());
+            args.push(format!("--max-loras={}", cfg.max_loras));
+        }
+        args
+    }
+
+    fn unify_metric(&self, m: &str) -> Option<&'static str> {
+        match m {
+            "vllm:num_requests_running" => Some("engine_running_requests"),
+            "vllm:num_requests_waiting" => Some("engine_waiting_requests"),
+            "vllm:gpu_cache_usage_perc" => Some("engine_kv_utilization"),
+            "vllm:time_to_first_token_seconds" => Some("engine_ttft_seconds"),
+            _ => None,
+        }
+    }
+
+    fn supports_dynamic_lora(&self) -> bool {
+        true
+    }
+}
+
+pub struct SglangAdapter;
+
+impl EngineAdapter for SglangAdapter {
+    fn vendor(&self) -> EngineVendor {
+        EngineVendor::Sglang
+    }
+
+    fn launch_args(&self, cfg: &UnifiedConfig) -> Vec<String> {
+        let mut args = vec![
+            format!("--model-path={}", cfg.model),
+            format!("--tp-size={}", cfg.tensor_parallel),
+            format!("--max-running-requests={}", cfg.max_num_seqs),
+            format!("--mem-fraction-static={}", cfg.kv_cache_fraction),
+        ];
+        // SGLang's RadixAttention means prefix caching is always on; the
+        // unified flag is a no-op rather than an error.
+        if cfg.enable_chunked_prefill {
+            args.push("--chunked-prefill-size=512".into());
+        }
+        args
+    }
+
+    fn unify_metric(&self, m: &str) -> Option<&'static str> {
+        match m {
+            "sglang:num_running_reqs" => Some("engine_running_requests"),
+            "sglang:num_queue_reqs" => Some("engine_waiting_requests"),
+            "sglang:token_usage" => Some("engine_kv_utilization"),
+            _ => None,
+        }
+    }
+
+    fn supports_dynamic_lora(&self) -> bool {
+        false
+    }
+}
+
+pub struct TrtLlmAdapter;
+
+impl EngineAdapter for TrtLlmAdapter {
+    fn vendor(&self) -> EngineVendor {
+        EngineVendor::TrtLlm
+    }
+
+    fn launch_args(&self, cfg: &UnifiedConfig) -> Vec<String> {
+        vec![
+            format!("--engine_dir={}", cfg.model),
+            format!("--tp_size={}", cfg.tensor_parallel),
+            format!("--max_batch_size={}", cfg.max_num_seqs),
+            format!(
+                "--kv_cache_free_gpu_mem_fraction={}",
+                cfg.kv_cache_fraction
+            ),
+            format!(
+                "--enable_kv_cache_reuse={}",
+                if cfg.enable_prefix_caching { "true" } else { "false" }
+            ),
+        ]
+    }
+
+    fn unify_metric(&self, m: &str) -> Option<&'static str> {
+        match m {
+            "trtllm:active_requests" => Some("engine_running_requests"),
+            "trtllm:scheduled_requests" => Some("engine_waiting_requests"),
+            "trtllm:kv_cache_utilization" => Some("engine_kv_utilization"),
+            _ => None,
+        }
+    }
+
+    fn supports_dynamic_lora(&self) -> bool {
+        false
+    }
+}
+
+/// Build the adapter for a vendor.
+pub fn adapter_for(vendor: EngineVendor) -> Box<dyn EngineAdapter> {
+    match vendor {
+        EngineVendor::Vllm => Box::new(VllmAdapter),
+        EngineVendor::Sglang => Box::new(SglangAdapter),
+        EngineVendor::TrtLlm => Box::new(TrtLlmAdapter),
+    }
+}
+
+/// Translate a scrape of vendor metrics into the unified namespace.
+pub fn unify_metrics(
+    adapter: &dyn EngineAdapter,
+    scrape: &BTreeMap<String, f64>,
+) -> BTreeMap<String, f64> {
+    scrape
+        .iter()
+        .filter_map(|(k, v)| adapter.unify_metric(k).map(|u| (u.to_string(), *v)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> UnifiedConfig {
+        UnifiedConfig {
+            model: "deepseek-coder-7b".into(),
+            tensor_parallel: 2,
+            enable_prefix_caching: true,
+            enable_chunked_prefill: true,
+            max_loras: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_vendor_produces_launch_args() {
+        for &v in EngineVendor::all() {
+            let a = adapter_for(v);
+            let args = a.launch_args(&cfg());
+            assert!(!args.is_empty(), "{v:?}");
+            assert!(
+                args.iter().any(|s| s.contains("deepseek-coder-7b")),
+                "{v:?}: {args:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn vllm_flags_match_unified_toggles() {
+        let args = VllmAdapter.launch_args(&cfg());
+        assert!(args.contains(&"--enable-prefix-caching".to_string()));
+        assert!(args.contains(&"--enable-chunked-prefill".to_string()));
+        assert!(args.contains(&"--max-loras=8".to_string()));
+        assert!(args.contains(&"--tensor-parallel-size=2".to_string()));
+    }
+
+    #[test]
+    fn disabled_toggles_omit_flags() {
+        let plain = UnifiedConfig { model: "m".into(), ..Default::default() };
+        let args = VllmAdapter.launch_args(&plain);
+        assert!(!args.iter().any(|a| a.contains("prefix-caching")));
+        assert!(!args.iter().any(|a| a.contains("lora")));
+    }
+
+    #[test]
+    fn metric_unification_across_vendors() {
+        for &v in EngineVendor::all() {
+            let a = adapter_for(v);
+            let mut scrape = BTreeMap::new();
+            let vendor_names: Vec<&str> = match v {
+                EngineVendor::Vllm => vec!["vllm:num_requests_running", "vllm:gpu_cache_usage_perc"],
+                EngineVendor::Sglang => vec!["sglang:num_running_reqs", "sglang:token_usage"],
+                EngineVendor::TrtLlm => vec!["trtllm:active_requests", "trtllm:kv_cache_utilization"],
+            };
+            for (i, n) in vendor_names.iter().enumerate() {
+                scrape.insert(n.to_string(), i as f64 + 1.0);
+            }
+            scrape.insert("irrelevant:metric".into(), 9.0);
+            let unified = unify_metrics(a.as_ref(), &scrape);
+            assert_eq!(unified.len(), 2, "{v:?}");
+            assert!(unified.contains_key("engine_running_requests"), "{v:?}");
+            assert!(unified.contains_key("engine_kv_utilization"), "{v:?}");
+        }
+    }
+
+    #[test]
+    fn lora_capability_flags() {
+        assert!(VllmAdapter.supports_dynamic_lora());
+        assert!(!SglangAdapter.supports_dynamic_lora());
+        assert!(!TrtLlmAdapter.supports_dynamic_lora());
+    }
+}

@@ -1,0 +1,15 @@
+//! Unified AI runtime (§3.2.3, Figure 4).
+//!
+//! The sidecar between the control plane and heterogeneous inference
+//! engines: [`adapter`] gives vendor-agnostic engine management (vLLM /
+//! SGLang / TensorRT-LLM protocol shims over one unified config), and
+//! [`artifacts`] implements model-artifact handling — the tiered
+//! DRAM/disk/remote store, the **cold-start manager** that picks the
+//! fastest source, and the **GPU streaming loader** that bypasses disk
+//! (remote -> GPU chunks) to cut model-load time.
+
+pub mod adapter;
+pub mod artifacts;
+
+pub use adapter::{EngineAdapter, EngineVendor, UnifiedConfig};
+pub use artifacts::{ArtifactStore, ColdStartManager, LoadPath, Tier};

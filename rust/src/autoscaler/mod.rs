@@ -1,0 +1,376 @@
+//! LLM-specific autoscaling (§3.2.4).
+//!
+//! Three autoscalers over the same metric stream (total in-flight requests,
+//! an LLM-meaningful load signal — unlike CPU, it tracks KV pressure):
+//!
+//! * [`Hpa`] — native K8s semantics: 15s sync, 10% tolerance, and crucially
+//!   the metric arrives through the **custom-metrics pipeline with
+//!   propagation delay** — the paper's reason HPA reacts late;
+//! * [`Kpa`] — Knative: stable (60s) + panic (6s) windows, panic threshold
+//!   2x, scale-to-demand in panic mode, no scale-down while panicking;
+//! * [`Apa`] — AIBrix Pod Autoscaler: reads the **in-process sliding
+//!   window** (no propagation delay — §3.2.4 "bypasses the custom metrics
+//!   path") and applies asymmetric fluctuation tolerances to suppress
+//!   oscillation.
+//!
+//! [`simulate`] runs them against a bursty workload on dynamically scaled
+//! engine pods with cold-start delays; the EXP-AS bench compares latency,
+//! token throughput, and scaling oscillations (paper: −11.5% latency,
+//! +11.4% throughput, −33% oscillation for the LLM-specific scalers).
+
+pub mod simulate;
+
+use crate::metrics::SlidingWindow;
+use crate::sim::{SimTime, SECONDS};
+use std::collections::VecDeque;
+
+/// A horizontal scaler over one deployment.
+pub trait Scaler {
+    fn name(&self) -> &'static str;
+    /// How often `desired` should be consulted.
+    fn sync_period(&self) -> u64;
+    /// Ingest one instantaneous sample of the load metric (total in-flight
+    /// requests across the deployment).
+    fn observe(&mut self, now: SimTime, total_load: f64);
+    /// Desired replica count.
+    fn desired(&mut self, now: SimTime, current: usize) -> usize;
+}
+
+fn clamp(v: usize, lo: usize, hi: usize) -> usize {
+    v.max(lo).min(hi)
+}
+
+// -------------------------------------------------------------------- HPA
+
+/// Native Kubernetes HPA with a delayed custom-metrics path.
+pub struct Hpa {
+    pub target_per_pod: f64,
+    pub tolerance: f64,
+    pub min: usize,
+    pub max: usize,
+    /// Custom-metrics propagation delay (adapter scrape + aggregation).
+    pub metrics_delay: u64,
+    samples: VecDeque<(SimTime, f64)>,
+}
+
+impl Hpa {
+    pub fn new(target_per_pod: f64, min: usize, max: usize) -> Hpa {
+        Hpa {
+            target_per_pod,
+            tolerance: 0.1,
+            min,
+            max,
+            metrics_delay: 30 * SECONDS,
+            samples: VecDeque::new(),
+        }
+    }
+
+    fn delayed_value(&self, now: SimTime) -> Option<f64> {
+        if now < self.metrics_delay {
+            return None; // pipeline has not delivered anything yet
+        }
+        let cutoff = now - self.metrics_delay;
+        self.samples
+            .iter()
+            .rev()
+            .find(|&&(t, _)| t <= cutoff)
+            .map(|&(_, v)| v)
+    }
+}
+
+impl Scaler for Hpa {
+    fn name(&self) -> &'static str {
+        "hpa"
+    }
+
+    fn sync_period(&self) -> u64 {
+        15 * SECONDS
+    }
+
+    fn observe(&mut self, now: SimTime, total_load: f64) {
+        self.samples.push_back((now, total_load));
+        let horizon = now.saturating_sub(self.metrics_delay + 60 * SECONDS);
+        while self.samples.front().map(|&(t, _)| t < horizon).unwrap_or(false) {
+            self.samples.pop_front();
+        }
+    }
+
+    fn desired(&mut self, now: SimTime, current: usize) -> usize {
+        let Some(metric) = self.delayed_value(now) else { return current };
+        let per_pod = metric / current.max(1) as f64;
+        let ratio = per_pod / self.target_per_pod;
+        if (ratio - 1.0).abs() <= self.tolerance {
+            return current;
+        }
+        clamp(
+            (current as f64 * ratio).ceil() as usize,
+            self.min,
+            self.max,
+        )
+    }
+}
+
+// -------------------------------------------------------------------- KPA
+
+/// Knative Pod Autoscaler: stable/panic windows.
+pub struct Kpa {
+    pub target_per_pod: f64,
+    pub min: usize,
+    pub max: usize,
+    pub panic_threshold: f64,
+    stable: SlidingWindow,
+    panic: SlidingWindow,
+    panic_until: SimTime,
+    panic_floor: usize,
+}
+
+impl Kpa {
+    pub fn new(target_per_pod: f64, min: usize, max: usize) -> Kpa {
+        Kpa {
+            target_per_pod,
+            min,
+            max,
+            panic_threshold: 2.0,
+            stable: SlidingWindow::new(60 * SECONDS),
+            panic: SlidingWindow::new(6 * SECONDS),
+            panic_until: 0,
+            panic_floor: 0,
+        }
+    }
+}
+
+impl Scaler for Kpa {
+    fn name(&self) -> &'static str {
+        "kpa"
+    }
+
+    fn sync_period(&self) -> u64 {
+        2 * SECONDS
+    }
+
+    fn observe(&mut self, now: SimTime, total_load: f64) {
+        self.stable.record(now, total_load);
+        self.panic.record(now, total_load);
+    }
+
+    fn desired(&mut self, now: SimTime, current: usize) -> usize {
+        let stable_avg = self.stable.mean(now).unwrap_or(0.0);
+        let panic_avg = self.panic.mean(now).unwrap_or(stable_avg);
+        let want_stable = (stable_avg / self.target_per_pod).ceil() as usize;
+        let want_panic = (panic_avg / self.target_per_pod).ceil() as usize;
+        // Enter panic when the short window demands 2x current capacity.
+        if want_panic as f64 >= self.panic_threshold * current.max(1) as f64 {
+            self.panic_until = now + 60 * SECONDS;
+            self.panic_floor = self.panic_floor.max(current);
+        }
+        let desired = if now < self.panic_until {
+            // Panic mode: scale up to the panic-window demand, never down.
+            self.panic_floor = self.panic_floor.max(want_panic.min(self.max));
+            self.panic_floor.max(current)
+        } else {
+            self.panic_floor = 0;
+            want_stable
+        };
+        clamp(desired, self.min, self.max)
+    }
+}
+
+// -------------------------------------------------------------------- APA
+
+/// AIBrix Pod Autoscaler: direct sliding-window metrics, asymmetric
+/// fluctuation tolerance bands.
+pub struct Apa {
+    pub target_per_pod: f64,
+    pub min: usize,
+    pub max: usize,
+    /// Scale up only when demand exceeds capacity by this fraction.
+    pub up_fluctuation: f64,
+    /// Scale down only when demand is below capacity by this fraction.
+    pub down_fluctuation: f64,
+    /// Scale-down stabilization: downscale only to the max of the desired
+    /// values seen over this trailing window (suppresses oscillation when
+    /// load dips transiently — scale-ups remain immediate).
+    pub down_stabilization: u64,
+    window: SlidingWindow,
+    recent_desired: VecDeque<(SimTime, usize)>,
+}
+
+impl Apa {
+    pub fn new(target_per_pod: f64, min: usize, max: usize) -> Apa {
+        Apa {
+            target_per_pod,
+            min,
+            max,
+            up_fluctuation: 0.1,
+            down_fluctuation: 0.3,
+            down_stabilization: 90 * SECONDS,
+            window: SlidingWindow::new(10 * SECONDS),
+            recent_desired: VecDeque::new(),
+        }
+    }
+}
+
+impl Scaler for Apa {
+    fn name(&self) -> &'static str {
+        "apa"
+    }
+
+    fn sync_period(&self) -> u64 {
+        SECONDS
+    }
+
+    fn observe(&mut self, now: SimTime, total_load: f64) {
+        self.window.record(now, total_load);
+    }
+
+    fn desired(&mut self, now: SimTime, current: usize) -> usize {
+        let Some(avg) = self.window.mean(now) else { return current };
+        let raw = clamp(
+            (avg / self.target_per_pod).ceil().max(1.0) as usize,
+            self.min,
+            self.max,
+        );
+        self.recent_desired.push_back((now, raw));
+        let cutoff = now.saturating_sub(self.down_stabilization);
+        while self
+            .recent_desired
+            .front()
+            .map(|&(t, _)| t < cutoff)
+            .unwrap_or(false)
+        {
+            self.recent_desired.pop_front();
+        }
+        let capacity = current as f64 * self.target_per_pod;
+        if avg > capacity * (1.0 + self.up_fluctuation) {
+            raw.max(current)
+        } else if avg < capacity * (1.0 - self.down_fluctuation) {
+            // Stabilized downscale: never below the recent desired max.
+            let floor = self
+                .recent_desired
+                .iter()
+                .map(|&(_, d)| d)
+                .max()
+                .unwrap_or(raw);
+            floor.min(current).max(self.min)
+        } else {
+            current
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hpa_reacts_only_after_delay() {
+        let mut h = Hpa::new(8.0, 1, 20);
+        // Load jumps to 80 at t=0 (10 pods worth) with 1 current pod.
+        h.observe(0, 80.0);
+        // Immediately: no delayed sample old enough -> hold.
+        assert_eq!(h.desired(1 * SECONDS, 1), 1);
+        // Keep observing; after the 30s delay the jump becomes visible.
+        for s in 1..=31 {
+            h.observe(s * SECONDS, 80.0);
+        }
+        assert_eq!(h.desired(31 * SECONDS, 1), 10);
+    }
+
+    #[test]
+    fn hpa_tolerance_suppresses_noise() {
+        let mut h = Hpa::new(8.0, 1, 20);
+        for s in 0..40 {
+            h.observe(s * SECONDS, 33.0); // 8.25 per pod on 4 pods: +3%
+        }
+        assert_eq!(h.desired(40 * SECONDS, 4), 4, "within 10% tolerance");
+    }
+
+    #[test]
+    fn kpa_panics_on_burst() {
+        let mut k = Kpa::new(8.0, 1, 20);
+        // Calm baseline.
+        for s in 0..60 {
+            k.observe(s * SECONDS, 8.0);
+        }
+        assert_eq!(k.desired(60 * SECONDS, 1), 1);
+        // Sudden 10x burst: the 6s panic window sees it immediately even
+        // though the 60s stable window barely moves.
+        for ds in 0..6 {
+            k.observe((61 + ds) * SECONDS, 160.0);
+        }
+        let want = k.desired(66 * SECONDS, 1);
+        assert!(want >= 10, "panic should scale to demand, got {want}");
+    }
+
+    #[test]
+    fn kpa_no_scale_down_during_panic() {
+        let mut k = Kpa::new(8.0, 1, 20);
+        for s in 0..6 {
+            k.observe(s * SECONDS, 160.0);
+        }
+        let up = k.desired(6 * SECONDS, 2);
+        assert!(up >= 10);
+        // Burst ends; within the 60s panic hold, no scale down.
+        for s in 7..30 {
+            k.observe(s * SECONDS, 4.0);
+        }
+        assert!(k.desired(30 * SECONDS, up) >= up, "held during panic");
+    }
+
+    #[test]
+    fn apa_tolerance_band_prevents_flipflop() {
+        let mut a = Apa::new(8.0, 1, 20);
+        // Load oscillating ±15% around 4 pods' capacity (32).
+        let mut changes = 0;
+        let mut current = 4;
+        for s in 0..120u64 {
+            let v = if s % 2 == 0 { 32.0 * 1.08 } else { 32.0 * 0.92 };
+            a.observe(s * SECONDS, v);
+            let d = a.desired(s * SECONDS, current);
+            if d != current {
+                changes += 1;
+                current = d;
+            }
+        }
+        assert_eq!(changes, 0, "±8% noise must not trigger scaling");
+    }
+
+    #[test]
+    fn apa_scales_up_fast_beyond_band() {
+        let mut a = Apa::new(8.0, 1, 20);
+        for s in 0..12u64 {
+            a.observe(s * SECONDS, 100.0);
+        }
+        assert_eq!(a.desired(12 * SECONDS, 4), 13);
+    }
+
+    #[test]
+    fn apa_scale_down_needs_larger_gap() {
+        let mut a = Apa::new(8.0, 1, 20);
+        // 20% below capacity: inside the 30% down band -> hold.
+        for s in 0..12u64 {
+            a.observe(s * SECONDS, 25.6);
+        }
+        assert_eq!(a.desired(12 * SECONDS, 4), 4);
+        // 50% below: scale down.
+        let mut a2 = Apa::new(8.0, 1, 20);
+        for s in 0..12u64 {
+            a2.observe(s * SECONDS, 16.0);
+        }
+        assert_eq!(a2.desired(12 * SECONDS, 4), 2);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut a = Apa::new(8.0, 2, 6);
+        for s in 0..12u64 {
+            a.observe(s * SECONDS, 1000.0);
+        }
+        assert_eq!(a.desired(12 * SECONDS, 4), 6);
+        let mut a2 = Apa::new(8.0, 2, 6);
+        for s in 0..12u64 {
+            a2.observe(s * SECONDS, 0.1);
+        }
+        assert_eq!(a2.desired(12 * SECONDS, 4), 2);
+    }
+}

@@ -1,0 +1,25 @@
+//! perf_probe: micro-timings of the real PJRT path (prefill / decode /
+//! generate per batch size). Used by the §Perf pass in EXPERIMENTS.md.
+//! Run: `cargo run --release --bin perf_probe` (needs `make artifacts`).
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let dir_buf = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let dir = dir_buf.as_path();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts; run `make artifacts`");
+        return Ok(());
+    }
+    let rt = aibrix::runtime::TinyLmRuntime::load(dir)?;
+    for &b in &[1usize, 4, 8] {
+        if !rt.prefill_batches().contains(&b) && !rt.decode_batches().contains(&b) { continue; }
+        if !rt.prefill_batches().contains(&b) { continue; }
+        let prompts: Vec<Vec<u32>> = (0..b).map(|i| vec![(i as u32)+1; 60]).collect();
+        rt.generate(&prompts, 12)?; // warm
+        let t0 = Instant::now();
+        let n = 5;
+        for _ in 0..n { rt.generate(&prompts, 12)?; }
+        let ms = t0.elapsed().as_secs_f64()*1e3/n as f64;
+        println!("generate b{b} 12 steps: {ms:.1} ms  ({:.1} ms/req)", ms / b as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Tiny declarative CLI parser (no clap offline — DESIGN.md §2).
+//!
+//! Supports `binary <subcommand> --flag value --switch` with typed lookups
+//! and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0} has invalid value {1:?}: {2}")]
+    BadValue(String, String, String),
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand;
+    /// `--key value` pairs become flags, bare `--key` followed by another
+    /// flag or end-of-args becomes a switch.
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() {
+                    out.subcommand = Some(tok.clone());
+                } // extra positionals ignored
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| {
+                CliError::BadValue(name.to_string(), v.clone(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv("serve --port 8080 --verbose --policy least-request")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get::<u16>("port", 0).unwrap(), 8080);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_flag("policy"), Some("least-request"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("bench")).unwrap();
+        assert_eq!(a.get::<usize>("requests", 640).unwrap(), 640);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = Args::parse(&argv("x --n abc")).unwrap();
+        assert!(a.get::<usize>("n", 1).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv("--flag v")).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.str_flag("flag"), Some("v"));
+    }
+}

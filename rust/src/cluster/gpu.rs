@@ -1,0 +1,143 @@
+//! Accelerator catalog.
+//!
+//! Perf/cost characteristics of the GPU types the paper evaluates (A10, L20,
+//! V100 — §3.2.7 / Figure 7) plus A100 for headroom experiments. Values are
+//! public datasheet numbers; $/hr are representative cloud on-demand prices
+//! (documented as estimates in DESIGN.md §2 — only *relative* cost
+//! efficiency matters for the optimizer).
+
+/// GPU model identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuKind {
+    A10,
+    L20,
+    V100,
+    A100,
+    /// The CPU-PJRT "accelerator" backing the real E2E example.
+    CpuSim,
+}
+
+impl GpuKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuKind::A10 => "A10",
+            GpuKind::L20 => "L20",
+            GpuKind::V100 => "V100",
+            GpuKind::A100 => "A100",
+            GpuKind::CpuSim => "CPU-sim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GpuKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "A10" => Some(GpuKind::A10),
+            "L20" => Some(GpuKind::L20),
+            "V100" => Some(GpuKind::V100),
+            "A100" => Some(GpuKind::A100),
+            "CPU-SIM" | "CPU" => Some(GpuKind::CpuSim),
+            _ => None,
+        }
+    }
+
+    pub fn all_real() -> &'static [GpuKind] {
+        &[GpuKind::A10, GpuKind::L20, GpuKind::V100, GpuKind::A100]
+    }
+}
+
+/// Datasheet characteristics of one accelerator type.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub kind: GpuKind,
+    /// Dense FP16/BF16 tensor throughput, TFLOP/s.
+    pub fp16_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Device memory, GiB.
+    pub vram_gib: f64,
+    /// On-demand price, $/hr (representative; relative values drive Fig 7b).
+    pub dollars_per_hour: f64,
+}
+
+impl GpuSpec {
+    pub fn of(kind: GpuKind) -> GpuSpec {
+        match kind {
+            GpuKind::A10 => GpuSpec {
+                kind,
+                fp16_tflops: 125.0,
+                hbm_gbps: 600.0,
+                vram_gib: 24.0,
+                dollars_per_hour: 0.90,
+            },
+            GpuKind::L20 => GpuSpec {
+                kind,
+                fp16_tflops: 119.5,
+                hbm_gbps: 864.0,
+                vram_gib: 48.0,
+                dollars_per_hour: 1.28,
+            },
+            GpuKind::V100 => GpuSpec {
+                kind,
+                fp16_tflops: 112.0,
+                hbm_gbps: 900.0,
+                vram_gib: 16.0,
+                dollars_per_hour: 2.00,
+            },
+            GpuKind::A100 => GpuSpec {
+                kind,
+                fp16_tflops: 312.0,
+                hbm_gbps: 1555.0,
+                vram_gib: 40.0,
+                dollars_per_hour: 3.40,
+            },
+            GpuKind::CpuSim => GpuSpec {
+                kind,
+                fp16_tflops: 0.05,
+                hbm_gbps: 20.0,
+                vram_gib: 8.0,
+                dollars_per_hour: 0.10,
+            },
+        }
+    }
+
+    pub fn vram_bytes(&self) -> u64 {
+        (self.vram_gib * (1u64 << 30) as f64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_complete_and_sane() {
+        for &k in GpuKind::all_real() {
+            let s = GpuSpec::of(k);
+            assert!(s.fp16_tflops > 50.0, "{k:?}");
+            assert!(s.hbm_gbps > 100.0);
+            assert!(s.vram_gib >= 16.0);
+            assert!(s.dollars_per_hour > 0.0);
+        }
+    }
+
+    #[test]
+    fn relative_characteristics_match_fig7_premise() {
+        // The Fig 7b crossover depends on: A10 cheapest, L20 has the most
+        // memory (larger batches for long workloads), V100 priciest per hour.
+        let a10 = GpuSpec::of(GpuKind::A10);
+        let l20 = GpuSpec::of(GpuKind::L20);
+        let v100 = GpuSpec::of(GpuKind::V100);
+        assert!(a10.dollars_per_hour < l20.dollars_per_hour);
+        assert!(l20.dollars_per_hour < v100.dollars_per_hour);
+        assert!(l20.vram_gib > a10.vram_gib);
+        assert!(l20.vram_gib > v100.vram_gib);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for &k in GpuKind::all_real() {
+            assert_eq!(GpuKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(GpuKind::parse("a10"), Some(GpuKind::A10));
+        assert_eq!(GpuKind::parse("H100"), None);
+    }
+}

@@ -1,0 +1,15 @@
+//! Cluster substrate: the K8s-shaped object model the controllers reconcile
+//! against (DESIGN.md §2 substitution for a real Kubernetes cluster).
+//!
+//! [`gpu`] holds the accelerator catalog (perf/cost characteristics used by
+//! the engine cost model and the GPU optimizer); [`pod`] the Pod/Node object
+//! model with phases and conditions; [`state`] the watchable cluster state
+//! the controllers (autoscaler, LoRA controller, RayClusterFleet) operate on.
+
+pub mod gpu;
+pub mod pod;
+pub mod state;
+
+pub use gpu::{GpuKind, GpuSpec};
+pub use pod::{Node, Pod, PodPhase};
+pub use state::{ClusterEvent, ClusterState};

@@ -1,0 +1,152 @@
+//! Pod/Node object model (the slice of the K8s API the controllers need).
+
+use super::gpu::GpuKind;
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Pod lifecycle phase, K8s semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PodPhase {
+    /// Scheduled, image pulling / model loading — not yet serving.
+    Pending,
+    /// Passing readiness; may receive traffic.
+    Running,
+    /// Draining before deletion (rolling upgrade, scale-down).
+    Terminating,
+    /// Crashed or evicted.
+    Failed,
+}
+
+/// A serving pod: one inference-engine replica plus its AI-runtime sidecar.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: u64,
+    pub name: String,
+    /// Deployment this pod belongs to (model deployments in §3.2.7 map 1:1
+    /// to a GPU type).
+    pub deployment: String,
+    pub model: String,
+    pub gpu: GpuKind,
+    pub node: Option<u64>,
+    pub phase: PodPhase,
+    /// When the pod was created (cold-start accounting).
+    pub created_at: SimTime,
+    /// When it became Running (readiness).
+    pub ready_at: Option<SimTime>,
+    /// Labels for service discovery (LoRA EndpointSlice emulation).
+    pub labels: BTreeMap<String, String>,
+}
+
+impl Pod {
+    pub fn new(id: u64, deployment: &str, model: &str, gpu: GpuKind, created_at: SimTime) -> Pod {
+        Pod {
+            id,
+            name: format!("{deployment}-{id}"),
+            deployment: deployment.to_string(),
+            model: model.to_string(),
+            gpu,
+            node: None,
+            phase: PodPhase::Pending,
+            created_at,
+            ready_at: None,
+            labels: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.phase == PodPhase::Running
+    }
+
+    /// Mark ready at `now`.
+    pub fn set_ready(&mut self, now: SimTime) {
+        self.phase = PodPhase::Running;
+        self.ready_at = Some(now);
+    }
+}
+
+/// A node hosting up to `gpu_count` accelerators of one kind.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: u64,
+    pub name: String,
+    pub gpu: GpuKind,
+    pub gpu_count: u32,
+    pub gpu_allocated: u32,
+    /// Host DRAM available to the distributed KV cache, bytes.
+    pub dram_bytes: u64,
+    pub ready: bool,
+}
+
+impl Node {
+    pub fn new(id: u64, gpu: GpuKind, gpu_count: u32, dram_gib: u64) -> Node {
+        Node {
+            id,
+            name: format!("node-{id}"),
+            gpu,
+            gpu_count,
+            gpu_allocated: 0,
+            dram_bytes: dram_gib << 30,
+            ready: true,
+        }
+    }
+
+    pub fn gpus_free(&self) -> u32 {
+        self.gpu_count - self.gpu_allocated
+    }
+
+    pub fn try_allocate(&mut self) -> bool {
+        if self.ready && self.gpu_allocated < self.gpu_count {
+            self.gpu_allocated += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self) {
+        assert!(self.gpu_allocated > 0, "release without allocate");
+        self.gpu_allocated -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_lifecycle() {
+        let mut p = Pod::new(1, "llama-a10", "llama-8b", GpuKind::A10, 100);
+        assert_eq!(p.phase, PodPhase::Pending);
+        assert!(!p.is_ready());
+        p.set_ready(5_000);
+        assert!(p.is_ready());
+        assert_eq!(p.ready_at, Some(5_000));
+        assert_eq!(p.name, "llama-a10-1");
+    }
+
+    #[test]
+    fn node_allocation_bounds() {
+        let mut n = Node::new(0, GpuKind::L20, 2, 128);
+        assert!(n.try_allocate());
+        assert!(n.try_allocate());
+        assert!(!n.try_allocate());
+        assert_eq!(n.gpus_free(), 0);
+        n.release();
+        assert_eq!(n.gpus_free(), 1);
+        assert!(n.try_allocate());
+    }
+
+    #[test]
+    #[should_panic(expected = "release without allocate")]
+    fn node_release_underflow_panics() {
+        let mut n = Node::new(0, GpuKind::A10, 1, 64);
+        n.release();
+    }
+
+    #[test]
+    fn not_ready_node_rejects() {
+        let mut n = Node::new(0, GpuKind::A10, 4, 64);
+        n.ready = false;
+        assert!(!n.try_allocate());
+    }
+}

@@ -1,0 +1,226 @@
+//! Watchable cluster state — the "API server" the controllers reconcile
+//! against.
+//!
+//! Controllers (autoscaler, LoRA controller, RayClusterFleet, GPU optimizer)
+//! mutate desired state through this object and observe actuals through the
+//! event log, mirroring the K8s watch pattern without the machinery.
+
+use super::gpu::GpuKind;
+use super::pod::{Node, Pod, PodPhase};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Cluster change notifications (a minimal watch stream).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterEvent {
+    PodCreated(u64),
+    PodReady(u64),
+    PodTerminating(u64),
+    PodDeleted(u64),
+    PodFailed(u64),
+    NodeDown(u64),
+    NodeUp(u64),
+}
+
+/// In-memory cluster: nodes, pods, and an event log.
+#[derive(Debug, Default)]
+pub struct ClusterState {
+    next_pod_id: u64,
+    next_node_id: u64,
+    pub nodes: BTreeMap<u64, Node>,
+    pub pods: BTreeMap<u64, Pod>,
+    pub events: Vec<(SimTime, ClusterEvent)>,
+}
+
+impl ClusterState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, gpu: GpuKind, gpu_count: u32, dram_gib: u64) -> u64 {
+        let id = self.next_node_id;
+        self.next_node_id += 1;
+        self.nodes.insert(id, Node::new(id, gpu, gpu_count, dram_gib));
+        id
+    }
+
+    /// Create a pod in Pending phase; schedules onto the first node with a
+    /// free GPU of the right kind (first-fit — the paper's fine-grained
+    /// placement lives in `orchestration/`).
+    pub fn create_pod(
+        &mut self,
+        now: SimTime,
+        deployment: &str,
+        model: &str,
+        gpu: GpuKind,
+    ) -> Option<u64> {
+        let node_id = self
+            .nodes
+            .values_mut()
+            .find(|n| n.gpu == gpu && n.gpus_free() > 0 && n.ready)
+            .map(|n| {
+                n.try_allocate();
+                n.id
+            })?;
+        let id = self.next_pod_id;
+        self.next_pod_id += 1;
+        let mut pod = Pod::new(id, deployment, model, gpu, now);
+        pod.node = Some(node_id);
+        self.pods.insert(id, pod);
+        self.events.push((now, ClusterEvent::PodCreated(id)));
+        Some(id)
+    }
+
+    pub fn mark_ready(&mut self, now: SimTime, pod_id: u64) {
+        if let Some(p) = self.pods.get_mut(&pod_id) {
+            p.set_ready(now);
+            self.events.push((now, ClusterEvent::PodReady(pod_id)));
+        }
+    }
+
+    pub fn mark_terminating(&mut self, now: SimTime, pod_id: u64) {
+        if let Some(p) = self.pods.get_mut(&pod_id) {
+            p.phase = PodPhase::Terminating;
+            self.events.push((now, ClusterEvent::PodTerminating(pod_id)));
+        }
+    }
+
+    pub fn mark_failed(&mut self, now: SimTime, pod_id: u64) {
+        if let Some(p) = self.pods.get_mut(&pod_id) {
+            p.phase = PodPhase::Failed;
+            self.events.push((now, ClusterEvent::PodFailed(pod_id)));
+        }
+    }
+
+    /// Remove the pod, releasing its GPU.
+    pub fn delete_pod(&mut self, now: SimTime, pod_id: u64) {
+        if let Some(p) = self.pods.remove(&pod_id) {
+            if let Some(nid) = p.node {
+                if let Some(n) = self.nodes.get_mut(&nid) {
+                    n.release();
+                }
+            }
+            self.events.push((now, ClusterEvent::PodDeleted(pod_id)));
+        }
+    }
+
+    /// Node failure: node unschedulable, resident pods fail (GPUs released).
+    pub fn fail_node(&mut self, now: SimTime, node_id: u64) -> Vec<u64> {
+        let mut failed = Vec::new();
+        if let Some(n) = self.nodes.get_mut(&node_id) {
+            n.ready = false;
+            self.events.push((now, ClusterEvent::NodeDown(node_id)));
+        }
+        let victims: Vec<u64> = self
+            .pods
+            .values()
+            .filter(|p| p.node == Some(node_id) && p.phase != PodPhase::Failed)
+            .map(|p| p.id)
+            .collect();
+        for id in victims {
+            self.mark_failed(now, id);
+            failed.push(id);
+        }
+        failed
+    }
+
+    pub fn recover_node(&mut self, now: SimTime, node_id: u64) {
+        if let Some(n) = self.nodes.get_mut(&node_id) {
+            n.ready = true;
+            self.events.push((now, ClusterEvent::NodeUp(node_id)));
+        }
+    }
+
+    /// Ready pods of a deployment.
+    pub fn ready_pods(&self, deployment: &str) -> Vec<&Pod> {
+        self.pods
+            .values()
+            .filter(|p| p.deployment == deployment && p.is_ready())
+            .collect()
+    }
+
+    /// All non-terminated pods of a deployment (the HPA "current replicas").
+    pub fn replicas(&self, deployment: &str) -> usize {
+        self.pods
+            .values()
+            .filter(|p| {
+                p.deployment == deployment
+                    && matches!(p.phase, PodPhase::Pending | PodPhase::Running)
+            })
+            .count()
+    }
+
+    /// Events at or after `since`, for watch-style consumers.
+    pub fn events_since(&self, since: SimTime) -> &[(SimTime, ClusterEvent)] {
+        let idx = self.events.partition_point(|&(t, _)| t < since);
+        &self.events[idx..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster_with(gpu: GpuKind, nodes: u32, per_node: u32) -> ClusterState {
+        let mut c = ClusterState::new();
+        for _ in 0..nodes {
+            c.add_node(gpu, per_node, 64);
+        }
+        c
+    }
+
+    #[test]
+    fn create_pod_allocates_gpu() {
+        let mut c = cluster_with(GpuKind::A10, 1, 2);
+        let p1 = c.create_pod(0, "d", "m", GpuKind::A10, ).unwrap();
+        let _p2 = c.create_pod(0, "d", "m", GpuKind::A10).unwrap();
+        assert!(c.create_pod(0, "d", "m", GpuKind::A10).is_none(), "no free GPU");
+        c.delete_pod(1, p1);
+        assert!(c.create_pod(2, "d", "m", GpuKind::A10).is_some());
+    }
+
+    #[test]
+    fn wrong_gpu_kind_unschedulable() {
+        let mut c = cluster_with(GpuKind::A10, 1, 4);
+        assert!(c.create_pod(0, "d", "m", GpuKind::L20).is_none());
+    }
+
+    #[test]
+    fn ready_pods_filter() {
+        let mut c = cluster_with(GpuKind::A10, 2, 2);
+        let a = c.create_pod(0, "d", "m", GpuKind::A10).unwrap();
+        let _b = c.create_pod(0, "d", "m", GpuKind::A10).unwrap();
+        assert_eq!(c.ready_pods("d").len(), 0);
+        c.mark_ready(10, a);
+        assert_eq!(c.ready_pods("d").len(), 1);
+        assert_eq!(c.replicas("d"), 2);
+    }
+
+    #[test]
+    fn node_failure_fails_pods_and_blocks_scheduling() {
+        let mut c = cluster_with(GpuKind::A10, 1, 2);
+        let a = c.create_pod(0, "d", "m", GpuKind::A10).unwrap();
+        c.mark_ready(1, a);
+        let failed = c.fail_node(5, 0);
+        assert_eq!(failed, vec![a]);
+        assert_eq!(c.pods[&a].phase, PodPhase::Failed);
+        assert!(c.create_pod(6, "d", "m", GpuKind::A10).is_none());
+        c.recover_node(7, 0);
+        // GPU of the failed pod is still held until the pod object is deleted.
+        c.delete_pod(8, a);
+        assert!(c.create_pod(9, "d", "m", GpuKind::A10).is_some());
+    }
+
+    #[test]
+    fn event_log_ordering_and_since() {
+        let mut c = cluster_with(GpuKind::A10, 1, 4);
+        let a = c.create_pod(0, "d", "m", GpuKind::A10).unwrap();
+        c.mark_ready(10, a);
+        c.mark_terminating(20, a);
+        c.delete_pod(30, a);
+        assert_eq!(c.events.len(), 4);
+        let late = c.events_since(15);
+        assert_eq!(late.len(), 2);
+        assert_eq!(late[0].1, ClusterEvent::PodTerminating(a));
+    }
+}

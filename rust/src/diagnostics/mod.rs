@@ -1,0 +1,334 @@
+//! AI accelerator diagnostics and failure mockup tools (§3.2.8, Figure 9).
+//!
+//! Two halves, as in the paper:
+//!   * **Diagnostics** — a rule engine over accelerator telemetry
+//!     (XID-style error codes, ECC counters, thermals, clocks, NVLink
+//!     errors) that classifies faults and recommends remediation, including
+//!     the "silent degradation" case (clocks sagging under load with no
+//!     explicit error);
+//!   * **Failure mockup** — an injector that synthesizes faulty telemetry
+//!     and degrades the simulated engines/cluster, so recovery paths
+//!     (diagnose -> cordon -> reschedule) are testable end-to-end
+//!     (examples/failure_drill.rs).
+
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// One telemetry sample from an accelerator.
+#[derive(Debug, Clone)]
+pub struct GpuTelemetry {
+    pub node: u64,
+    pub gpu_index: u32,
+    pub time: SimTime,
+    pub temperature_c: f64,
+    pub power_w: f64,
+    pub sm_clock_mhz: f64,
+    /// Expected clock under the current load (from spec sheet).
+    pub expected_clock_mhz: f64,
+    pub utilization: f64,
+    pub ecc_sbe: u64,
+    pub ecc_dbe: u64,
+    pub xid_codes: Vec<u32>,
+    pub nvlink_errors: u64,
+}
+
+impl GpuTelemetry {
+    pub fn healthy(node: u64, gpu_index: u32, time: SimTime) -> GpuTelemetry {
+        GpuTelemetry {
+            node,
+            gpu_index,
+            time,
+            temperature_c: 55.0,
+            power_w: 150.0,
+            sm_clock_mhz: 1695.0,
+            expected_clock_mhz: 1695.0,
+            utilization: 0.8,
+            ecc_sbe: 0,
+            ecc_dbe: 0,
+            xid_codes: vec![],
+            nvlink_errors: 0,
+        }
+    }
+}
+
+/// Diagnosed fault class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    EccUncorrectable,
+    EccPageRetirementPressure,
+    ThermalThrottle,
+    SilentDegradation,
+    NvlinkDegraded,
+    HardwareFatal,
+    PowerAnomaly,
+}
+
+/// Severity drives remediation urgency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Critical,
+    Fatal,
+}
+
+/// Recommended remediation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    Monitor,
+    ThrottleWorkload,
+    DrainAndCordon,
+    ReplaceDevice,
+}
+
+#[derive(Debug, Clone)]
+pub struct Diagnosis {
+    pub node: u64,
+    pub gpu_index: u32,
+    pub fault: FaultKind,
+    pub severity: Severity,
+    pub action: Action,
+    pub detail: String,
+}
+
+/// XID codes that indicate unrecoverable hardware trouble (subset of the
+/// NVIDIA XID catalogue the paper's tool keys on).
+const FATAL_XIDS: &[u32] = &[48, 61, 62, 74, 79, 119];
+const ECC_XIDS: &[u32] = &[63, 64];
+
+/// Rule-based diagnosis over one telemetry sample.
+pub fn diagnose(t: &GpuTelemetry) -> Vec<Diagnosis> {
+    let mut out = Vec::new();
+    let mk = |fault, severity, action, detail: String| Diagnosis {
+        node: t.node,
+        gpu_index: t.gpu_index,
+        fault,
+        severity,
+        action,
+        detail,
+    };
+
+    for &xid in &t.xid_codes {
+        if FATAL_XIDS.contains(&xid) {
+            out.push(mk(
+                FaultKind::HardwareFatal,
+                Severity::Fatal,
+                Action::ReplaceDevice,
+                format!("fatal XID {xid}"),
+            ));
+        } else if ECC_XIDS.contains(&xid) {
+            out.push(mk(
+                FaultKind::EccPageRetirementPressure,
+                Severity::Warning,
+                Action::Monitor,
+                format!("ECC page retirement XID {xid}"),
+            ));
+        }
+    }
+    if t.ecc_dbe > 0 {
+        out.push(mk(
+            FaultKind::EccUncorrectable,
+            Severity::Critical,
+            Action::DrainAndCordon,
+            format!("{} uncorrectable ECC errors", t.ecc_dbe),
+        ));
+    } else if t.ecc_sbe > 1000 {
+        out.push(mk(
+            FaultKind::EccPageRetirementPressure,
+            Severity::Warning,
+            Action::Monitor,
+            format!("{} correctable ECC errors", t.ecc_sbe),
+        ));
+    }
+    if t.temperature_c >= 90.0 {
+        out.push(mk(
+            FaultKind::ThermalThrottle,
+            Severity::Critical,
+            Action::ThrottleWorkload,
+            format!("{:.0}C >= 90C throttle point", t.temperature_c),
+        ));
+    }
+    // Silent degradation: heavy utilization but clocks well below expected,
+    // without a thermal excuse.
+    if t.utilization > 0.5
+        && t.sm_clock_mhz < 0.8 * t.expected_clock_mhz
+        && t.temperature_c < 90.0
+    {
+        out.push(mk(
+            FaultKind::SilentDegradation,
+            Severity::Critical,
+            Action::DrainAndCordon,
+            format!(
+                "clock {:.0}MHz < 80% of expected {:.0}MHz under load",
+                t.sm_clock_mhz, t.expected_clock_mhz
+            ),
+        ));
+    }
+    if t.nvlink_errors > 10 {
+        out.push(mk(
+            FaultKind::NvlinkDegraded,
+            Severity::Warning,
+            Action::Monitor,
+            format!("{} NVLink CRC errors", t.nvlink_errors),
+        ));
+    }
+    if t.power_w > 450.0 {
+        out.push(mk(
+            FaultKind::PowerAnomaly,
+            Severity::Warning,
+            Action::ThrottleWorkload,
+            format!("{:.0}W power draw anomaly", t.power_w),
+        ));
+    }
+    out
+}
+
+// --------------------------------------------------------------- injector
+
+/// Faults the mockup tool can synthesize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    XidFatal,
+    EccUncorrectable,
+    Overheat,
+    ClockSag,
+    NvlinkErrors,
+}
+
+/// Failure mockup tool: produces telemetry with the requested faults and
+/// tracks which (node, gpu) pairs are currently faulted.
+#[derive(Debug, Default)]
+pub struct FailureInjector {
+    active: BTreeMap<(u64, u32), InjectedFault>,
+}
+
+impl FailureInjector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inject(&mut self, node: u64, gpu: u32, fault: InjectedFault) {
+        self.active.insert((node, gpu), fault);
+    }
+
+    pub fn clear(&mut self, node: u64, gpu: u32) {
+        self.active.remove(&(node, gpu));
+    }
+
+    pub fn active_faults(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Telemetry for (node, gpu) at `time`, with any injected fault applied.
+    pub fn sample(&self, node: u64, gpu: u32, time: SimTime) -> GpuTelemetry {
+        let mut t = GpuTelemetry::healthy(node, gpu, time);
+        match self.active.get(&(node, gpu)) {
+            None => {}
+            Some(InjectedFault::XidFatal) => t.xid_codes.push(79),
+            Some(InjectedFault::EccUncorrectable) => t.ecc_dbe = 3,
+            Some(InjectedFault::Overheat) => t.temperature_c = 96.0,
+            Some(InjectedFault::ClockSag) => {
+                t.sm_clock_mhz = 0.55 * t.expected_clock_mhz;
+            }
+            Some(InjectedFault::NvlinkErrors) => t.nvlink_errors = 240,
+        }
+        t
+    }
+
+    /// Expected diagnosis for an injected fault (drill verification).
+    pub fn expected_fault(injected: InjectedFault) -> FaultKind {
+        match injected {
+            InjectedFault::XidFatal => FaultKind::HardwareFatal,
+            InjectedFault::EccUncorrectable => FaultKind::EccUncorrectable,
+            InjectedFault::Overheat => FaultKind::ThermalThrottle,
+            InjectedFault::ClockSag => FaultKind::SilentDegradation,
+            InjectedFault::NvlinkErrors => FaultKind::NvlinkDegraded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_telemetry_diagnoses_clean() {
+        let t = GpuTelemetry::healthy(0, 0, 0);
+        assert!(diagnose(&t).is_empty());
+    }
+
+    #[test]
+    fn every_injected_fault_is_detected_correctly() {
+        let mut inj = FailureInjector::new();
+        for fault in [
+            InjectedFault::XidFatal,
+            InjectedFault::EccUncorrectable,
+            InjectedFault::Overheat,
+            InjectedFault::ClockSag,
+            InjectedFault::NvlinkErrors,
+        ] {
+            inj.inject(1, 0, fault);
+            let t = inj.sample(1, 0, 100);
+            let ds = diagnose(&t);
+            let expected = FailureInjector::expected_fault(fault);
+            assert!(
+                ds.iter().any(|d| d.fault == expected),
+                "{fault:?} -> {ds:?}"
+            );
+            inj.clear(1, 0);
+        }
+        assert_eq!(inj.active_faults(), 0);
+    }
+
+    #[test]
+    fn fatal_xid_recommends_replacement() {
+        let mut t = GpuTelemetry::healthy(0, 0, 0);
+        t.xid_codes.push(79);
+        let ds = diagnose(&t);
+        assert_eq!(ds[0].severity, Severity::Fatal);
+        assert_eq!(ds[0].action, Action::ReplaceDevice);
+    }
+
+    #[test]
+    fn thermal_not_misdiagnosed_as_silent_degradation() {
+        // Hot GPU with sagging clock: that's thermal throttle, not a silent
+        // fault.
+        let mut t = GpuTelemetry::healthy(0, 0, 0);
+        t.temperature_c = 95.0;
+        t.sm_clock_mhz = 0.6 * t.expected_clock_mhz;
+        let ds = diagnose(&t);
+        assert!(ds.iter().any(|d| d.fault == FaultKind::ThermalThrottle));
+        assert!(
+            !ds.iter().any(|d| d.fault == FaultKind::SilentDegradation),
+            "{ds:?}"
+        );
+    }
+
+    #[test]
+    fn idle_gpu_with_low_clock_is_fine() {
+        let mut t = GpuTelemetry::healthy(0, 0, 0);
+        t.utilization = 0.05; // idle: clocks drop legitimately
+        t.sm_clock_mhz = 300.0;
+        assert!(diagnose(&t).is_empty());
+    }
+
+    #[test]
+    fn ecc_sbe_warning_threshold() {
+        let mut t = GpuTelemetry::healthy(0, 0, 0);
+        t.ecc_sbe = 500;
+        assert!(diagnose(&t).is_empty());
+        t.ecc_sbe = 5_000;
+        let ds = diagnose(&t);
+        assert_eq!(ds[0].fault, FaultKind::EccPageRetirementPressure);
+        assert_eq!(ds[0].severity, Severity::Warning);
+    }
+
+    #[test]
+    fn untargeted_gpus_stay_healthy() {
+        let mut inj = FailureInjector::new();
+        inj.inject(1, 0, InjectedFault::Overheat);
+        let clean = inj.sample(1, 1, 0);
+        assert!(diagnose(&clean).is_empty());
+        let faulted = inj.sample(1, 0, 0);
+        assert!(!diagnose(&faulted).is_empty());
+    }
+}

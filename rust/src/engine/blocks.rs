@@ -1,0 +1,255 @@
+//! Paged KV block allocator (vLLM's PagedAttention bookkeeping).
+//!
+//! Blocks are fixed-size token runs; sequences hold lists of block ids.
+//! Blocks are reference-counted so prefix-cache sharing (multiple sequences
+//! mapping the same prompt blocks) is a refcount bump, not a copy. The
+//! simulator tracks occupancy only — actual tensors live on the (simulated)
+//! GPU; the real-engine twin holds PJRT literals instead.
+
+/// Fixed-capacity, refcounted block pool.
+///
+/// A block is in exactly one of three states:
+///   * free      — refcount 0, on the free list;
+///   * live      — refcount > 0, owned by sequences;
+///   * cached    — refcount 0 but resident under prefix-cache management
+///                 (not on the free list; revived by `retain_from_zero` or
+///                 reclaimed by `free_cached`).
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_size: usize,
+    refs: Vec<u32>,
+    cached: Vec<bool>,
+    free: Vec<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0);
+        BlockAllocator {
+            block_size,
+            refs: vec![0; total_blocks],
+            cached: vec![false; total_blocks],
+            free: (0..total_blocks as u32).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used(&self) -> usize {
+        self.total() - self.free_count()
+    }
+
+    /// Fraction of blocks in use — the `least-kv-cache` routing signal.
+    pub fn utilization(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.used() as f64 / self.total() as f64
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Allocate one block with refcount 1.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refs[id as usize], 0);
+        self.refs[id as usize] = 1;
+        Some(id)
+    }
+
+    /// Increment the refcount of a live block (prefix sharing).
+    pub fn retain(&mut self, id: u32) {
+        assert!(self.refs[id as usize] > 0, "retain of dead block {id}");
+        self.refs[id as usize] += 1;
+    }
+
+    /// Decrement; returns true when the block became free.
+    pub fn release(&mut self, id: u32) -> bool {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "release of dead block {id}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Decrement but keep the block resident under cache management when it
+    /// hits zero (prefix cache's evictable state). Returns true when it
+    /// transitioned to cached.
+    pub fn release_cached(&mut self, id: u32) -> bool {
+        let r = &mut self.refs[id as usize];
+        assert!(*r > 0, "release_cached of dead block {id}");
+        *r -= 1;
+        if *r == 0 {
+            self.cached[id as usize] = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Revive a cached (refcount-0, resident) block to refcount 1.
+    /// Returns false if the block is not in the cached state.
+    pub fn retain_from_zero(&mut self, id: u32) -> bool {
+        if self.cached[id as usize] && self.refs[id as usize] == 0 {
+            self.cached[id as usize] = false;
+            self.refs[id as usize] = 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reclaim an evicted cached block onto the free list.
+    pub fn free_cached(&mut self, id: u32) {
+        assert!(
+            self.cached[id as usize] && self.refs[id as usize] == 0,
+            "free_cached of non-cached block {id}"
+        );
+        self.cached[id as usize] = false;
+        self.free.push(id);
+    }
+
+    /// Number of cached (evictable-resident) blocks.
+    pub fn cached_count(&self) -> usize {
+        self.cached.iter().filter(|&&c| c).count()
+    }
+
+    /// Invariant check (used by property tests): every block is in exactly
+    /// one state — free (ref 0, on list), cached (ref 0, off list), or live
+    /// (ref > 0, off list) — and counts add up.
+    pub fn check_invariants(&self) -> bool {
+        let free_set: std::collections::HashSet<u32> = self.free.iter().copied().collect();
+        if free_set.len() != self.free.len() {
+            return false; // double free
+        }
+        for (i, &r) in self.refs.iter().enumerate() {
+            let in_free = free_set.contains(&(i as u32));
+            let cached = self.cached[i];
+            let ok = match (r, cached, in_free) {
+                (0, false, true) => true,  // free
+                (0, true, false) => true,  // cached
+                (r, false, false) if r > 0 => true, // live
+                _ => false,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        self.used() + self.free_count() == self.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = BlockAllocator::new(4, 16);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        assert_ne!(b1, b2);
+        assert_eq!(a.used(), 2);
+        assert!(a.release(b1));
+        assert_eq!(a.free_count(), 3);
+        assert!(a.check_invariants());
+        let _ = b2;
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(2, 16);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn sharing_via_retain() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc().unwrap();
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 2);
+        assert!(!a.release(b), "still referenced");
+        assert!(a.release(b), "now free");
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    #[should_panic(expected = "release of dead block")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(1, 16);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = BlockAllocator::new(1, 16);
+        assert_eq!(a.blocks_for(0), 0);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn cached_state_round_trip() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc().unwrap();
+        assert!(a.release_cached(b));
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.cached_count(), 1);
+        assert_eq!(a.free_count(), 1, "cached block not on free list");
+        assert!(a.check_invariants());
+        // Revive.
+        assert!(a.retain_from_zero(b));
+        assert_eq!(a.ref_count(b), 1);
+        assert!(a.check_invariants());
+        // Cache then reclaim.
+        a.release_cached(b);
+        a.free_cached(b);
+        assert_eq!(a.free_count(), 2);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn retain_from_zero_rejects_live_and_free() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc().unwrap();
+        assert!(!a.retain_from_zero(b), "live block");
+        a.release(b);
+        assert!(!a.retain_from_zero(b), "free block");
+    }
+
+    #[test]
+    fn utilization() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert_eq!(a.utilization(), 0.0);
+        a.alloc();
+        a.alloc();
+        assert_eq!(a.utilization(), 0.5);
+    }
+}

@@ -1,0 +1,179 @@
+//! Roofline latency model: (model, GPU) -> step times.
+//!
+//! Prefill is compute-bound (MXU/tensor-core GEMMs over every prompt token);
+//! decode is bandwidth-bound (every step streams the weights plus the live
+//! KV cache from HBM). Efficiency factors are calibrated so the *ratios*
+//! between engine configurations land in the paper's Table-1 range —
+//! absolute numbers are this substrate's, not the authors' testbed's
+//! (DESIGN.md §2).
+
+use super::spec::ModelSpec;
+use crate::cluster::{GpuKind, GpuSpec};
+
+/// Latency model for one (GPU, model) pairing.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub gpu: GpuSpec,
+    pub model: ModelSpec,
+    /// Achieved fraction of peak FLOPs during prefill.
+    pub prefill_eff: f64,
+    /// Achieved fraction of peak HBM bandwidth during decode.
+    pub decode_bw_eff: f64,
+    /// Fixed per-step overhead (scheduler, kernel launch, sampling), µs.
+    pub step_overhead_us: u64,
+    /// Fraction of VRAM usable for KV after weights (activations, runtime).
+    pub kv_headroom_frac: f64,
+}
+
+impl CostModel {
+    pub fn new(gpu: GpuKind, model: ModelSpec) -> CostModel {
+        CostModel {
+            gpu: GpuSpec::of(gpu),
+            model,
+            prefill_eff: 0.45,
+            decode_bw_eff: 0.75,
+            step_overhead_us: 2_000,
+            kv_headroom_frac: 0.92,
+        }
+    }
+
+    /// Time to prefill `new_tokens` prompt tokens whose sequences already
+    /// hold `ctx_tokens` of context (attention reads grow with context), µs.
+    pub fn prefill_us(&self, new_tokens: usize, ctx_tokens: usize) -> u64 {
+        if new_tokens == 0 {
+            return 0;
+        }
+        let m = &self.model;
+        let gemm = m.flops_per_token() * new_tokens as f64;
+        // Attention score+value FLOPs: 2 GEMMs of [new, ctx+new/2] per layer.
+        let attn = 4.0
+            * m.n_layers as f64
+            * m.d_model as f64
+            * new_tokens as f64
+            * (ctx_tokens as f64 + new_tokens as f64 / 2.0);
+        let flops = gemm + attn;
+        let us = flops / (self.gpu.fp16_tflops * 1e12 * self.prefill_eff) * 1e6;
+        us as u64
+    }
+
+    /// Time for one decode step over `batch` sequences with `kv_tokens`
+    /// total live KV tokens, µs. Bandwidth-bound: weights + KV stream once.
+    pub fn decode_step_us(&self, batch: usize, kv_tokens: usize) -> u64 {
+        if batch == 0 {
+            return 0;
+        }
+        let bytes = self.model.weights_bytes() as f64
+            + self.model.kv_bytes_per_token() as f64 * kv_tokens as f64;
+        let bw_us = bytes / (self.gpu.hbm_gbps * 1e9 * self.decode_bw_eff) * 1e6;
+        // Compute floor (batch GEMV aggregates into GEMM at large batch).
+        let flops = self.model.flops_per_token() * batch as f64;
+        let fl_us = flops / (self.gpu.fp16_tflops * 1e12 * self.prefill_eff) * 1e6;
+        bw_us.max(fl_us) as u64 + self.step_overhead_us
+    }
+
+    /// One fused chunked-prefill step: `prefill_tokens` of prompt plus
+    /// `decode_batch` decode tokens in the same iteration, µs.
+    pub fn fused_step_us(
+        &self,
+        prefill_tokens: usize,
+        prefill_ctx: usize,
+        decode_batch: usize,
+        kv_tokens: usize,
+    ) -> u64 {
+        let pf = self.prefill_us(prefill_tokens, prefill_ctx);
+        let dc = self.decode_step_us(decode_batch, kv_tokens);
+        // Weights are streamed once for the fused step: take the max of the
+        // two roofline components rather than their sum, plus one overhead.
+        pf.max(dc)
+    }
+
+    /// KV tokens that fit in device memory alongside the weights.
+    pub fn kv_capacity_tokens(&self) -> usize {
+        let budget = self.gpu.vram_bytes() as f64 * self.kv_headroom_frac
+            - self.model.weights_bytes() as f64;
+        if budget <= 0.0 {
+            return 0;
+        }
+        (budget / self.model.kv_bytes_per_token() as f64) as usize
+    }
+
+    /// Model-load time from remote storage at `gbps` effective bandwidth, µs
+    /// (cold-start modeling for the autoscaler / AI runtime).
+    pub fn model_load_us(&self, gbps: f64) -> u64 {
+        (self.model.weights_bytes() as f64 / (gbps * 1e9) * 1e6) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+
+    fn a10_7b() -> CostModel {
+        CostModel::new(GpuKind::A10, ModelSpec::deepseek_coder_7b())
+    }
+
+    #[test]
+    fn prefill_scales_linearly_in_tokens() {
+        let cm = a10_7b();
+        let t1 = cm.prefill_us(100, 0);
+        let t2 = cm.prefill_us(200, 0);
+        assert!(t2 > (t1 as f64 * 1.9) as u64 && t2 < (t1 as f64 * 2.2) as u64);
+    }
+
+    #[test]
+    fn prefill_magnitude_sane() {
+        // ~1690-token prompt on A10/7B: few hundred ms.
+        let cm = a10_7b();
+        let t = cm.prefill_us(1690, 0);
+        assert!((200_000..900_000).contains(&t), "{t}µs");
+    }
+
+    #[test]
+    fn decode_step_weights_bound_at_small_batch() {
+        let cm = a10_7b();
+        let t = cm.decode_step_us(1, 100);
+        // Weights 13.4GB / (600GB/s * 0.75) ≈ 30ms + overhead.
+        assert!((25_000..45_000).contains(&t), "{t}µs");
+        // KV grows the step.
+        let t2 = cm.decode_step_us(16, 40_000);
+        assert!(t2 > t, "{t2} vs {t}");
+    }
+
+    #[test]
+    fn kv_capacity_positive_and_realistic() {
+        let cm = a10_7b();
+        let cap = cm.kv_capacity_tokens();
+        // ~8-25k tokens on a 24GiB card with 13.4GB of weights.
+        assert!((8_000..25_000).contains(&cap), "{cap}");
+        // V100 (16GiB) barely fits the weights: tiny KV budget.
+        let v100 = CostModel::new(GpuKind::V100, ModelSpec::deepseek_coder_7b());
+        assert!(v100.kv_capacity_tokens() < cap / 3, "{}", v100.kv_capacity_tokens());
+        // L20 (48GiB) holds far more.
+        let l20 = CostModel::new(GpuKind::L20, ModelSpec::deepseek_coder_7b());
+        assert!(l20.kv_capacity_tokens() > 3 * cap);
+    }
+
+    #[test]
+    fn fused_step_bounded_by_components() {
+        let cm = a10_7b();
+        let fused = cm.fused_step_us(512, 1000, 8, 10_000);
+        assert!(fused >= cm.prefill_us(512, 1000));
+        assert!(fused >= cm.decode_step_us(8, 10_000) - cm.step_overhead_us);
+        assert!(fused <= cm.prefill_us(512, 1000) + cm.decode_step_us(8, 10_000));
+    }
+
+    #[test]
+    fn faster_gpu_prefills_faster() {
+        let a100 = CostModel::new(GpuKind::A100, ModelSpec::deepseek_coder_7b());
+        assert!(a100.prefill_us(1000, 0) < a10_7b().prefill_us(1000, 0) / 2);
+    }
+
+    #[test]
+    fn model_load_time() {
+        let cm = a10_7b();
+        // 13.4GB at 1 GB/s ≈ 13.4s.
+        let us = cm.model_load_us(1.0);
+        assert!((13_000_000..14_000_000).contains(&us));
+    }
+}

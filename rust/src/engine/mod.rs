@@ -1,0 +1,20 @@
+//! vLLM-like inference engine substrate (DESIGN.md §2).
+//!
+//! The paper's system sits *above* an inference engine; to reproduce its
+//! experiments we built the engine layer it assumes: a paged-KV continuous-
+//! batching engine with optional chunked prefill and prefix caching, timed
+//! by a roofline cost model over the GPU catalog. `RealEngine`
+//! (rust/src/runtime/) is the PJRT-backed twin used by the E2E example.
+
+pub mod blocks;
+pub mod costmodel;
+pub mod prefix;
+pub mod real;
+pub mod sim_engine;
+pub mod spec;
+
+pub use blocks::BlockAllocator;
+pub use costmodel::CostModel;
+pub use prefix::PrefixCache;
+pub use sim_engine::{Completion, EngineConfig, EngineSim, EngineStats, ExternalKv, KvFetch};
+pub use spec::ModelSpec;

@@ -1,0 +1,259 @@
+//! RealEngine: the PJRT-backed twin of [`super::EngineSim`].
+//!
+//! Wraps [`TinyLmRuntime`] with a continuous-batching worker loop: requests
+//! queue in, the engine forms batches up to the largest compiled batch
+//! size, runs real prefill + greedy decode on the AOT artifacts, and
+//! reports per-request TTFT/latency. Used by the E2E example and the HTTP
+//! server — Python is never involved.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::TinyLmRuntime;
+
+/// A queued real request.
+#[derive(Debug, Clone)]
+pub struct RealRequest {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+/// A served completion with wall-clock timings.
+#[derive(Debug, Clone)]
+pub struct RealCompletion {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    pub queue_us: u64,
+    pub serve_us: u64,
+}
+
+impl RealCompletion {
+    pub fn latency_us(&self) -> u64 {
+        self.queue_us + self.serve_us
+    }
+}
+
+/// The real engine: runtime + queue + batch loop.
+pub struct RealEngine {
+    runtime: TinyLmRuntime,
+    queue: VecDeque<(RealRequest, Instant)>,
+    pub completions: Vec<RealCompletion>,
+    max_batch: usize,
+    prefill_window: usize,
+    decode_budget: usize,
+}
+
+impl RealEngine {
+    pub fn load(artifacts: &Path) -> Result<RealEngine> {
+        let runtime = TinyLmRuntime::load(artifacts)?;
+        let max_batch = runtime.prefill_batches().into_iter().max().unwrap_or(1);
+        let prefill_window = runtime.prefill_seq(max_batch).unwrap_or(128);
+        let decode_budget = runtime.cfg.max_seq - prefill_window;
+        Ok(RealEngine {
+            runtime,
+            queue: VecDeque::new(),
+            completions: Vec::new(),
+            max_batch,
+            prefill_window,
+            decode_budget,
+        })
+    }
+
+    pub fn runtime(&self) -> &TinyLmRuntime {
+        &self.runtime
+    }
+
+    /// Longest admissible prompt.
+    pub fn max_prompt(&self) -> usize {
+        self.prefill_window
+    }
+
+    /// Largest decode budget per request.
+    pub fn max_new_tokens(&self) -> usize {
+        self.decode_budget
+    }
+
+    pub fn enqueue(&mut self, req: RealRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve one batch from the queue; returns completions produced.
+    /// Batches are padded up to a compiled batch size (1, 4, 8, ...).
+    pub fn step(&mut self) -> Result<Vec<RealCompletion>> {
+        if self.queue.is_empty() {
+            return Ok(vec![]);
+        }
+        let take = self.queue.len().min(self.max_batch);
+        // Pick the largest compiled batch <= take, padding up if none fits.
+        let sizes = self.runtime.prefill_batches();
+        let batch_size = sizes
+            .iter()
+            .copied()
+            .filter(|&b| b <= take)
+            .max()
+            .or_else(|| sizes.iter().copied().min())
+            .unwrap();
+        let mut reqs = Vec::new();
+        for _ in 0..take.min(batch_size) {
+            reqs.push(self.queue.pop_front().unwrap());
+        }
+        let t_serve = Instant::now();
+
+        let mut prompts: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|(r, _)| {
+                let mut t = r.tokens.clone();
+                t.truncate(self.prefill_window);
+                t
+            })
+            .collect();
+        // Pad the batch with dummy rows if the compiled size is larger.
+        while prompts.len() < batch_size {
+            prompts.push(vec![0u32]);
+        }
+        let steps = reqs
+            .iter()
+            .map(|(r, _)| r.max_new_tokens)
+            .max()
+            .unwrap_or(1)
+            .clamp(1, self.decode_budget);
+        let generated = self.runtime.generate(&prompts, steps)?;
+        let serve_us = t_serve.elapsed().as_micros() as u64;
+
+        let mut out = Vec::new();
+        for (i, (req, enq)) in reqs.into_iter().enumerate() {
+            let mut toks = generated[i].clone();
+            toks.truncate(req.max_new_tokens.max(1));
+            let total_wait = enq.elapsed().as_micros() as u64;
+            let completion = RealCompletion {
+                id: req.id,
+                generated: toks,
+                queue_us: total_wait.saturating_sub(serve_us),
+                serve_us,
+            };
+            self.completions.push(completion.clone());
+            out.push(completion);
+        }
+        Ok(out)
+    }
+
+    /// Drain the queue completely.
+    pub fn run_to_drain(&mut self) -> Result<usize> {
+        let mut served = 0;
+        while !self.queue.is_empty() {
+            served += self.step()?.len();
+        }
+        Ok(served)
+    }
+}
+
+// ------------------------------------------------------------- threading
+
+use std::sync::mpsc;
+
+/// Commands into the engine thread.
+enum Cmd {
+    Serve(RealRequest, mpsc::Sender<RealCompletion>),
+    Stop,
+}
+
+/// A `Send + Clone` handle to a [`RealEngine`] running on its own thread.
+///
+/// PJRT wrapper types are not `Send` (Rc + raw pointers), so the engine
+/// lives on one dedicated thread that drains the command channel into
+/// batches — which is also the correct serving shape: one batching loop per
+/// engine replica, HTTP workers only enqueue.
+#[derive(Clone)]
+pub struct RealEngineHandle {
+    tx: mpsc::Sender<Cmd>,
+    pub max_prompt: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl RealEngineHandle {
+    /// Spawn the engine thread; fails fast if artifacts cannot be loaded.
+    pub fn spawn(artifacts: &Path) -> Result<RealEngineHandle> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+        let dir = artifacts.to_path_buf();
+        std::thread::spawn(move || {
+            let mut engine = match RealEngine::load(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok((
+                        e.max_prompt(),
+                        e.max_new_tokens(),
+                        e.runtime().cfg.vocab,
+                    )));
+                    e
+                }
+                Err(err) => {
+                    let _ = ready_tx.send(Err(err));
+                    return;
+                }
+            };
+            let mut waiters: std::collections::HashMap<u64, mpsc::Sender<RealCompletion>> =
+                Default::default();
+            loop {
+                // Block for one command, then drain greedily to batch.
+                let first = match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let mut stop = false;
+                for cmd in std::iter::once(first).chain(rx.try_iter()) {
+                    match cmd {
+                        Cmd::Serve(req, reply) => {
+                            waiters.insert(req.id, reply);
+                            engine.enqueue(req);
+                        }
+                        Cmd::Stop => stop = true,
+                    }
+                }
+                while engine.pending() > 0 {
+                    match engine.step() {
+                        Ok(done) => {
+                            for c in done {
+                                if let Some(reply) = waiters.remove(&c.id) {
+                                    let _ = reply.send(c);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("engine step failed: {e}");
+                            break;
+                        }
+                    }
+                }
+                if stop {
+                    return;
+                }
+            }
+        });
+        let (max_prompt, max_new_tokens, vocab) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during load"))??;
+        Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab })
+    }
+
+    /// Serve one request, blocking until its completion.
+    pub fn serve(&self, req: RealRequest) -> Result<RealCompletion> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Serve(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped request"))
+    }
+
+    pub fn stop(&self) {
+        let _ = self.tx.send(Cmd::Stop);
+    }
+}

@@ -1,0 +1,938 @@
+//! Continuous-batching engine simulator.
+//!
+//! Models a vLLM-style engine closely enough to reproduce the paper's
+//! Table 1 dynamics:
+//!   * paged KV with refcounted prefix sharing ([`BlockAllocator`]),
+//!   * optional engine-local prefix caching (LRU, [`PrefixCache`]),
+//!   * optional chunked prefill (token-budget fused steps),
+//!   * default mode = whole-prompt prefill steps that stall decodes (the
+//!     source of the paper's multi-second P99 ITL for "vLLM Default"),
+//!   * an [`ExternalKv`] hook where the distributed KV pool (kvcache/)
+//!     plugs in: prefix tokens it holds skip compute and pay a transfer
+//!     cost instead.
+//!
+//! The engine is driven by `step(now)`: each call performs one iteration
+//! (admission + one batch) and returns its duration; the discrete-event
+//! harness schedules the next step at `now + duration`.
+
+use std::collections::VecDeque;
+
+use super::blocks::BlockAllocator;
+use super::costmodel::CostModel;
+use super::prefix::{prompt_block_keys, BlockKey, PrefixCache};
+use super::spec::ModelSpec;
+use crate::cluster::GpuKind;
+use crate::metrics::SlidingWindow;
+use crate::sim::{SimTime, SECONDS};
+use crate::workload::Request;
+
+/// Engine configuration (mirrors the vLLM flags the paper toggles).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub gpu: GpuKind,
+    pub model: ModelSpec,
+    pub block_size: usize,
+    /// Max concurrent sequences (running batch).
+    pub max_num_seqs: usize,
+    /// Token budget per iteration (chunked) / prefill batch cap (default).
+    /// vLLM defaults: 8192 for whole-prompt prefill, 512 when chunked.
+    pub max_batched_tokens: usize,
+    pub chunked_prefill: bool,
+    pub prefix_caching: bool,
+    /// LoRA slots resident at once; adapter misses pay `adapter_load_us`.
+    pub max_loras: usize,
+    pub adapter_load_us: u64,
+}
+
+impl EngineConfig {
+    pub fn new(gpu: GpuKind, model: ModelSpec) -> EngineConfig {
+        EngineConfig {
+            gpu,
+            model,
+            block_size: 16,
+            max_num_seqs: 48,
+            max_batched_tokens: 8192,
+            chunked_prefill: false,
+            prefix_caching: false,
+            max_loras: 4,
+            adapter_load_us: 200_000,
+        }
+    }
+}
+
+/// Result of an external (distributed pool) prefix lookup.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvFetch {
+    /// Full blocks whose KV the pool can supply.
+    pub blocks_hit: usize,
+    /// Transfer time to load them into HBM, µs.
+    pub fetch_us: u64,
+}
+
+/// Distributed KV pool interface the engine calls at admission/completion.
+pub trait ExternalKv {
+    /// Longest prefix of `keys` (beyond the locally-hit `skip` blocks) the
+    /// pool holds for a consumer on `node`.
+    fn lookup(&mut self, now: SimTime, node: u64, keys: &[BlockKey]) -> KvFetch;
+    /// Offer freshly computed prefix blocks (write-back is asynchronous —
+    /// the engine pays nothing here; the pool models metadata delay).
+    fn insert(&mut self, now: SimTime, node: u64, keys: &[BlockKey], block_tokens: usize);
+}
+
+/// A finished request record (the harness aggregates these into the
+/// paper-style TTFT/ITL/throughput tables).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub req_id: u64,
+    pub user: u32,
+    pub engine: usize,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Prompt tokens served from local prefix cache or the external pool.
+    pub cached_tokens: usize,
+    pub arrival: SimTime,
+    pub first_token_at: SimTime,
+    pub finished_at: SimTime,
+}
+
+impl Completion {
+    pub fn ttft_us(&self) -> u64 {
+        self.first_token_at - self.arrival
+    }
+
+    pub fn latency_us(&self) -> u64 {
+        self.finished_at - self.arrival
+    }
+}
+
+struct Seq {
+    req: Request,
+    keys: Vec<BlockKey>,
+    blocks: Vec<u32>,
+    /// Prompt full blocks registered in the local prefix cache (shared or
+    /// registered at admit) — released via the cached path on finish.
+    registered_blocks: usize,
+    /// Prompt tokens computed or loaded so far.
+    computed: usize,
+    /// Tokens from local + external cache (for the Completion record).
+    cached_tokens: usize,
+    generated: usize,
+    /// External-fetch / adapter-load cost: delays *this* sequence's first
+    /// token (the transfer overlaps other sequences' compute), it does not
+    /// block the engine step.
+    fetch_penalty_us: u64,
+    first_token_at: Option<SimTime>,
+    last_token_at: SimTime,
+}
+
+impl Seq {
+    fn prompt_len(&self) -> usize {
+        self.req.tokens.len()
+    }
+
+    fn is_prefilling(&self) -> bool {
+        self.computed < self.prompt_len()
+    }
+
+    fn live_tokens(&self) -> usize {
+        self.computed + self.generated
+    }
+
+    fn is_finished(&self) -> bool {
+        !self.is_prefilling() && self.generated >= self.req.output_len
+    }
+}
+
+/// Per-engine observable state — the routing signals of §3.2.2.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub waiting: usize,
+    pub running: usize,
+    /// Fraction of KV blocks resident (live + cached).
+    pub kv_utilization: f64,
+    /// Tokens/s over the recent window (the `throughput` policy signal).
+    pub tokens_per_s: f64,
+    /// Mean request latency (queue + serve) over recent completions, µs.
+    pub avg_latency_us: f64,
+    /// Local prefix-cache hit rate since start.
+    pub prefix_hit_rate: f64,
+}
+
+/// The simulated engine.
+pub struct EngineSim {
+    pub id: usize,
+    /// Node hosting this engine (KV-pool colocation).
+    pub node: u64,
+    cfg: EngineConfig,
+    cost: CostModel,
+    alloc: BlockAllocator,
+    prefix: PrefixCache,
+    waiting: VecDeque<Request>,
+    running: Vec<Seq>,
+    loras: Vec<String>, // LRU order, most recent last
+    pub completions: Vec<Completion>,
+    /// (emission time, inter-token latency) per decode token.
+    pub itl_us: Vec<(SimTime, u64)>,
+    token_window: SlidingWindow,
+    latency_window: SlidingWindow,
+    pub prompt_tokens_done: u64,
+    pub decode_tokens_done: u64,
+    pub busy_us: u64,
+    pub preemptions: u64,
+    failed: bool,
+}
+
+impl EngineSim {
+    pub fn new(id: usize, node: u64, cfg: EngineConfig) -> EngineSim {
+        let cost = CostModel::new(cfg.gpu, cfg.model.clone());
+        let cap_tokens = cost.kv_capacity_tokens();
+        let total_blocks = (cap_tokens / cfg.block_size).max(1);
+        EngineSim {
+            id,
+            node,
+            alloc: BlockAllocator::new(total_blocks, cfg.block_size),
+            prefix: PrefixCache::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            loras: Vec::new(),
+            completions: Vec::new(),
+            itl_us: Vec::new(),
+            token_window: SlidingWindow::new(10 * SECONDS),
+            latency_window: SlidingWindow::new(30 * SECONDS),
+            prompt_tokens_done: 0,
+            decode_tokens_done: 0,
+            busy_us: 0,
+            preemptions: 0,
+            failed: false,
+            cost,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    pub fn kv_total_blocks(&self) -> usize {
+        self.alloc.total()
+    }
+
+    pub fn enqueue(&mut self, req: Request) {
+        assert!(!self.failed, "enqueue on failed engine");
+        self.waiting.push_back(req);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.failed && (!self.waiting.is_empty() || !self.running.is_empty())
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Observable signals for the router.
+    pub fn stats(&mut self, now: SimTime) -> EngineStats {
+        EngineStats {
+            waiting: self.waiting.len(),
+            running: self.running.len(),
+            kv_utilization: self.alloc.utilization(),
+            tokens_per_s: self.token_window.rate_per_unit(now) * SECONDS as f64,
+            avg_latency_us: self.latency_window.mean(now).unwrap_or(0.0),
+            prefix_hit_rate: self.prefix.hit_rate(),
+        }
+    }
+
+    /// Peek how many prompt blocks of `keys` the local prefix cache holds
+    /// (router support — no refcount mutation).
+    pub fn prefix_match_blocks(&self, keys: &[BlockKey]) -> usize {
+        if !self.cfg.prefix_caching {
+            return 0;
+        }
+        self.prefix.match_len(keys)
+    }
+
+    /// Fail the engine, draining all in-flight work for re-routing.
+    pub fn fail_and_drain(&mut self) -> Vec<Request> {
+        self.failed = true;
+        let mut out: Vec<Request> = self.waiting.drain(..).collect();
+        for seq in self.running.drain(..) {
+            out.push(seq.req);
+        }
+        // KV content is lost with the device.
+        let total = self.alloc.total();
+        let bs = self.alloc.block_size();
+        self.alloc = BlockAllocator::new(total, bs);
+        self.prefix = PrefixCache::new();
+        out
+    }
+
+    pub fn recover(&mut self) {
+        self.failed = false;
+    }
+
+    // ---------------------------------------------------------- admission
+
+    /// Allocate a block, evicting from the local prefix cache if needed.
+    fn alloc_or_evict(alloc: &mut BlockAllocator, prefix: &mut PrefixCache) -> Option<u32> {
+        if let Some(b) = alloc.alloc() {
+            return Some(b);
+        }
+        let victim = prefix.evict_lru()?;
+        alloc.free_cached(victim);
+        alloc.alloc()
+    }
+
+    fn try_admit(&mut self, now: SimTime, external: &mut Option<&mut dyn ExternalKv>) {
+        while self.running.len() < self.cfg.max_num_seqs {
+            let Some(front) = self.waiting.front() else { break };
+            let prompt_len = front.tokens.len();
+            let keys = prompt_block_keys(&front.tokens, self.cfg.block_size);
+            let local_hit = self.prefix_match_blocks(&keys);
+            let blocks_needed = self.alloc.blocks_for(prompt_len + 1);
+            let fresh_needed = blocks_needed - local_hit;
+            let reclaimable = self.alloc.free_count() + self.prefix.evictable();
+            if fresh_needed > reclaimable {
+                break; // engine full — wait for completions
+            }
+
+            let mut req = self.waiting.pop_front().unwrap();
+
+            // LoRA residency (§3.2.1): a miss charges a load penalty.
+            let mut fetch_us = self.adapter_penalty(&mut req);
+
+            // Local prefix-cache hit (refcounts bumped).
+            let hit_blocks = if self.cfg.prefix_caching {
+                self.prefix.lookup(&keys[..local_hit], &mut self.alloc)
+            } else {
+                Vec::new()
+            };
+            let mut computed = hit_blocks.len() * self.cfg.block_size;
+            let mut cached_tokens = computed;
+
+            // External pool: ask for what local cache misses.
+            if let Some(pool) = external.as_deref_mut() {
+                let fetch = pool.lookup(now, self.node, &keys[hit_blocks.len()..]);
+                if fetch.blocks_hit > 0 {
+                    computed += fetch.blocks_hit * self.cfg.block_size;
+                    cached_tokens += fetch.blocks_hit * self.cfg.block_size;
+                    fetch_us += fetch.fetch_us;
+                }
+            }
+
+            // Allocate the rest of the prompt (+ 1 slot for the first
+            // generated token's block growth headroom).
+            let mut blocks = hit_blocks.clone();
+            let mut ok = true;
+            while blocks.len() < blocks_needed {
+                match Self::alloc_or_evict(&mut self.alloc, &mut self.prefix) {
+                    Some(b) => blocks.push(b),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                // Roll back and stop admitting.
+                for (i, b) in blocks.iter().enumerate() {
+                    if i < hit_blocks.len() {
+                        self.release_prompt_block(*b, true);
+                    } else {
+                        self.alloc.release(*b);
+                    }
+                }
+                self.waiting.push_front(req);
+                break;
+            }
+
+            // Register this prompt's full blocks in the local cache so
+            // concurrent/later requests share them.
+            let mut registered = hit_blocks.len();
+            if self.cfg.prefix_caching {
+                for (k, b) in keys.iter().zip(&blocks).skip(hit_blocks.len()) {
+                    self.prefix.insert(*k, *b);
+                    registered += 1;
+                }
+            }
+
+            self.running.push(Seq {
+                keys,
+                blocks,
+                registered_blocks: registered,
+                computed,
+                cached_tokens,
+                generated: 0,
+                fetch_penalty_us: fetch_us,
+                first_token_at: None,
+                last_token_at: now,
+                req,
+            });
+        }
+    }
+
+    fn adapter_penalty(&mut self, req: &mut Request) -> u64 {
+        let Some(name) = req.adapter.clone() else { return 0 };
+        if let Some(pos) = self.loras.iter().position(|a| *a == name) {
+            let a = self.loras.remove(pos);
+            self.loras.push(a); // LRU bump
+            0
+        } else {
+            if self.loras.len() >= self.cfg.max_loras {
+                self.loras.remove(0);
+            }
+            self.loras.push(name);
+            self.cfg.adapter_load_us
+        }
+    }
+
+    /// Which adapters are currently resident (LoRA-aware routing signal).
+    pub fn resident_adapters(&self) -> &[String] {
+        &self.loras
+    }
+
+    // ---------------------------------------------------------- stepping
+
+    /// One engine iteration. Returns the step duration in µs, or None when
+    /// idle (nothing admitted, nothing running).
+    pub fn step(
+        &mut self,
+        now: SimTime,
+        mut external: Option<&mut dyn ExternalKv>,
+    ) -> Option<u64> {
+        if self.failed {
+            return None;
+        }
+        self.try_admit(now, &mut external);
+        if self.running.is_empty() {
+            return None;
+        }
+
+        let dt = if self.cfg.chunked_prefill {
+            self.step_chunked(now)
+        } else {
+            self.step_default(now)
+        };
+
+        self.finish_sweep(now + dt, &mut external);
+        self.busy_us += dt;
+        Some(dt)
+    }
+
+    /// vLLM v0 default: pending prefills run as whole-prompt batches that
+    /// exclude decodes; otherwise one decode step over all running seqs.
+    fn step_default(&mut self, now: SimTime) -> u64 {
+        let any_prefill = self.running.iter().any(|s| s.is_prefilling());
+        if any_prefill {
+            let mut budget = self.cfg.max_batched_tokens.max(1);
+            let mut new_tokens = 0usize;
+            let mut ctx_tokens = 0usize;
+            let mut first = true;
+            let mut finishers: Vec<usize> = Vec::new();
+            for (i, seq) in self.running.iter_mut().enumerate() {
+                if !seq.is_prefilling() {
+                    continue;
+                }
+                let remaining = seq.prompt_len() - seq.computed;
+                if !first && remaining > budget {
+                    continue; // FCFS skip: doesn't fit this batch
+                }
+                first = false;
+                budget = budget.saturating_sub(remaining);
+                ctx_tokens += seq.computed;
+                new_tokens += remaining;
+                seq.computed = seq.prompt_len();
+                finishers.push(i);
+                if budget == 0 {
+                    break;
+                }
+            }
+            let dt = self.cost.prefill_us(new_tokens, ctx_tokens) + self.cost.step_overhead_us;
+            let end = now + dt;
+            for &i in &finishers {
+                let seq = &mut self.running[i];
+                // Prefill emits the first sampled token; the seq's own
+                // KV-fetch/adapter-load latency lands on its first token.
+                seq.generated = 1;
+                let t = end + seq.fetch_penalty_us;
+                seq.fetch_penalty_us = 0;
+                seq.first_token_at = Some(t);
+                seq.last_token_at = t;
+            }
+            self.prompt_tokens_done += new_tokens as u64;
+            self.decode_tokens_done += finishers.len() as u64;
+            self.token_window.record(now, new_tokens as f64 + finishers.len() as f64);
+            dt
+        } else {
+            self.decode_step(now)
+        }
+    }
+
+    fn decode_step(&mut self, now: SimTime) -> u64 {
+        // Collect by request id: advance_decode may preempt (remove) a seq,
+        // shifting positions, so indices must be re-resolved per step.
+        let batch: Vec<u64> = self
+            .running
+            .iter()
+            .filter(|s| !s.is_prefilling() && !s.is_finished())
+            .map(|s| s.req.id)
+            .collect();
+        if batch.is_empty() {
+            // Nothing decodable (can happen transiently); charge overhead.
+            return self.cost.step_overhead_us;
+        }
+        let kv_tokens: usize = self.running.iter().map(|s| s.live_tokens()).sum();
+        let dt = self.cost.decode_step_us(batch.len(), kv_tokens);
+        let end = now + dt;
+        let mut advanced = 0u64;
+        for id in batch {
+            if let Some(i) = self.running.iter().position(|s| s.req.id == id) {
+                if !self.running[i].is_prefilling() && !self.running[i].is_finished() {
+                    self.advance_decode(i, end);
+                    advanced += 1;
+                }
+            }
+        }
+        self.decode_tokens_done += advanced;
+        self.token_window.record(now, advanced as f64);
+        dt
+    }
+
+    /// Chunked prefill: decodes every iteration, prefill fills the leftover
+    /// token budget in FCFS chunks.
+    fn step_chunked(&mut self, now: SimTime) -> u64 {
+        let decode_ids: Vec<u64> = self
+            .running
+            .iter()
+            .filter(|s| !s.is_prefilling() && !s.is_finished())
+            .map(|s| s.req.id)
+            .collect();
+        let mut budget = self.cfg.max_batched_tokens.saturating_sub(decode_ids.len());
+
+        let mut prefill_tokens = 0usize;
+        let mut prefill_ctx = 0usize;
+        let mut completed_prefill: Vec<u64> = Vec::new();
+        for seq in self.running.iter_mut() {
+            if budget == 0 {
+                break;
+            }
+            if !seq.is_prefilling() {
+                continue;
+            }
+            let remaining = seq.prompt_len() - seq.computed;
+            let take = remaining.min(budget);
+            budget -= take;
+            prefill_ctx += seq.computed;
+            prefill_tokens += take;
+            seq.computed += take;
+            if !seq.is_prefilling() {
+                completed_prefill.push(seq.req.id);
+            }
+        }
+
+        let kv_tokens: usize = self.running.iter().map(|s| s.live_tokens()).sum();
+        let dt = self
+            .cost
+            .fused_step_us(prefill_tokens, prefill_ctx, decode_ids.len(), kv_tokens)
+            + self.cost.step_overhead_us;
+        let end = now + dt;
+
+        let mut advanced = 0u64;
+        for id in &decode_ids {
+            if let Some(i) = self.running.iter().position(|s| s.req.id == *id) {
+                self.advance_decode(i, end);
+                advanced += 1;
+            }
+        }
+        for id in &completed_prefill {
+            if let Some(i) = self.running.iter().position(|s| s.req.id == *id) {
+                let seq = &mut self.running[i];
+                seq.generated = 1;
+                let t = end + seq.fetch_penalty_us;
+                seq.fetch_penalty_us = 0;
+                seq.first_token_at = Some(t);
+                seq.last_token_at = t;
+            }
+        }
+        self.prompt_tokens_done += prefill_tokens as u64;
+        self.decode_tokens_done += advanced + completed_prefill.len() as u64;
+        self.token_window
+            .record(now, prefill_tokens as f64 + advanced as f64);
+        dt
+    }
+
+    fn advance_decode(&mut self, i: usize, end: SimTime) {
+        // Block growth first (may preempt — not modeled per-seq here; the
+        // admission headroom `prompt + 1` plus completion churn keeps
+        // allocation failures rare; on failure we drop into preemption).
+        let need_block = {
+            let seq = &self.running[i];
+            (seq.live_tokens() + 1).div_ceil(self.cfg.block_size) > seq.blocks.len()
+        };
+        if need_block {
+            match Self::alloc_or_evict(&mut self.alloc, &mut self.prefix) {
+                Some(b) => self.running[i].blocks.push(b),
+                None => {
+                    self.preempt_latest();
+                    // The preempted seq freed blocks; retry once.
+                    if let Some(b) = Self::alloc_or_evict(&mut self.alloc, &mut self.prefix) {
+                        if i < self.running.len() {
+                            self.running[i].blocks.push(b);
+                        }
+                    }
+                }
+            }
+        }
+        if i >= self.running.len() {
+            return; // `i` was the preempted victim
+        }
+        let seq = &mut self.running[i];
+        seq.generated += 1;
+        // A fetch-penalized first token may sit past this step's end; clamp.
+        let itl = end.saturating_sub(seq.last_token_at);
+        self.itl_us.push((end, itl));
+        seq.last_token_at = end.max(seq.last_token_at);
+    }
+
+    /// Preempt the most recently admitted prefilled seq: free its blocks and
+    /// push it back to the waiting queue for full recompute (vLLM recompute
+    /// preemption).
+    fn preempt_latest(&mut self) {
+        let Some(victim_idx) = (0..self.running.len()).rev().find(|&i| !self.running[i].is_finished())
+        else {
+            return;
+        };
+        let seq = self.running.remove(victim_idx);
+        self.release_seq_blocks(&seq);
+        self.preemptions += 1;
+        // Recompute preemption: the request restarts from scratch.
+        self.waiting.push_front(seq.req);
+    }
+
+    fn release_prompt_block(&mut self, block: u32, registered: bool) {
+        if registered {
+            if self.alloc.release_cached(block) {
+                if let Some(key) = self.key_of_block(block) {
+                    self.prefix.mark_evictable(key);
+                } else {
+                    // Not actually tracked (registration raced) — free it.
+                    self.alloc.retain_from_zero(block);
+                    self.alloc.release(block);
+                }
+            }
+        } else {
+            self.alloc.release(block);
+        }
+    }
+
+    fn key_of_block(&self, block: u32) -> Option<BlockKey> {
+        self.prefix.key_of_block(block)
+    }
+
+    fn release_seq_blocks(&mut self, seq: &Seq) {
+        for (i, b) in seq.blocks.iter().enumerate() {
+            let registered = self.cfg.prefix_caching && i < seq.registered_blocks;
+            self.release_prompt_block(*b, registered);
+        }
+    }
+
+    fn finish_sweep(&mut self, end: SimTime, external: &mut Option<&mut dyn ExternalKv>) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].is_finished() {
+                let seq = self.running.remove(i);
+                self.release_seq_blocks(&seq);
+                // Write freshly computed prefix blocks back to the pool.
+                if let Some(pool) = external.as_deref_mut() {
+                    pool.insert(end, self.node, &seq.keys, self.cfg.block_size);
+                }
+                let completion = Completion {
+                    req_id: seq.req.id,
+                    user: seq.req.user,
+                    engine: self.id,
+                    prompt_len: seq.req.tokens.len(),
+                    output_len: seq.generated,
+                    cached_tokens: seq.cached_tokens,
+                    arrival: seq.req.arrival,
+                    first_token_at: seq.first_token_at.unwrap_or(end),
+                    finished_at: end,
+                };
+                self.latency_window.record(end, completion.latency_us() as f64);
+                self.completions.push(completion);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Allocator invariants (property tests).
+    pub fn check_invariants(&self) -> bool {
+        self.alloc.check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Request;
+
+    fn req(id: u64, prompt: Vec<u32>, out: usize) -> Request {
+        Request {
+            id,
+            session: 0,
+            tokens: prompt,
+            output_len: out,
+            arrival: 0,
+            model: "deepseek-coder-7b".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+        }
+    }
+
+    fn engine(chunked: bool, prefix: bool) -> EngineSim {
+        let mut cfg = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+        cfg.chunked_prefill = chunked;
+        if chunked {
+            cfg.max_batched_tokens = 512; // vLLM's chunked-prefill budget
+        }
+        cfg.prefix_caching = prefix;
+        EngineSim::new(0, 0, cfg)
+    }
+
+    fn drive(e: &mut EngineSim, now: &mut SimTime, deadline_steps: usize) {
+        for _ in 0..deadline_steps {
+            match e.step(*now, None) {
+                Some(dt) => *now += dt,
+                None => break,
+            }
+        }
+    }
+
+    fn run_to_completion(e: &mut EngineSim, deadline_steps: usize) -> SimTime {
+        let mut now = 0;
+        drive(e, &mut now, deadline_steps);
+        now
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(false, false);
+        e.enqueue(req(1, vec![7; 100], 10));
+        run_to_completion(&mut e, 100);
+        assert_eq!(e.completions.len(), 1);
+        let c = &e.completions[0];
+        assert_eq!(c.output_len, 10);
+        assert!(c.first_token_at > 0);
+        assert!(c.finished_at > c.first_token_at);
+        assert!(e.check_invariants());
+        // All blocks returned.
+        assert_eq!(e.alloc.used(), 0);
+    }
+
+    #[test]
+    fn prefill_blocks_decode_in_default_mode() {
+        // Two requests staggered: the second's prefill stalls the first's
+        // decode, producing a large ITL spike — the Table 1 "default" story.
+        let mut e = engine(false, false);
+        e.enqueue(req(1, vec![7; 1600], 50));
+        let mut now = 0;
+        // Prefill req 1.
+        now += e.step(now, None).unwrap();
+        // A few decode steps.
+        for _ in 0..3 {
+            now += e.step(now, None).unwrap();
+        }
+        let base_itl = e.itl_us.last().unwrap().1;
+        // Big second request arrives; its prefill interrupts decoding.
+        e.enqueue(req(2, vec![9; 1600], 10));
+        now += e.step(now, None).unwrap(); // prefill step for req 2
+        let _ = e.step(now, None).unwrap(); // decode resumes
+        let spike = e.itl_us.iter().map(|&(_, v)| v).max().unwrap();
+        assert!(
+            spike > base_itl * 3,
+            "expected ITL spike: base {base_itl} spike {spike}"
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_caps_itl() {
+        let run = |chunked: bool| -> u64 {
+            let mut e = engine(chunked, false);
+            e.enqueue(req(1, vec![7; 1600], 60));
+            let mut now = 0;
+            now += e.step(now, None).unwrap();
+            for _ in 0..5 {
+                now += e.step(now, None).unwrap();
+            }
+            e.enqueue(req(2, vec![9; 1600], 10));
+            for _ in 0..30 {
+                if let Some(dt) = e.step(now, None) {
+                    now += dt;
+                } else {
+                    break;
+                }
+            }
+            e.itl_us.iter().map(|&(_, v)| v).max().unwrap()
+        };
+        let default_spike = run(false);
+        let chunked_spike = run(true);
+        assert!(
+            chunked_spike < default_spike / 2,
+            "chunked {chunked_spike} vs default {default_spike}"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompt() {
+        let mut e = engine(false, true);
+        let shared: Vec<u32> = (0..1600).collect();
+        let mut p1 = shared.clone();
+        p1.extend([1, 1, 1, 1]);
+        let mut p2 = shared.clone();
+        p2.extend([2, 2, 2, 2]);
+        let mut now = 0;
+        e.enqueue(req(1, p1, 8));
+        drive(&mut e, &mut now, 50);
+        assert_eq!(e.completions.len(), 1);
+        assert_eq!(e.completions[0].cached_tokens, 0, "cold cache");
+        let mut r2 = req(2, p2, 8);
+        r2.arrival = now;
+        e.enqueue(r2);
+        drive(&mut e, &mut now, 50);
+        assert_eq!(e.completions.len(), 2);
+        let c2 = &e.completions[1];
+        assert!(
+            c2.cached_tokens >= 1500,
+            "warm cache should cover the shared prefix, got {}",
+            c2.cached_tokens
+        );
+        // Warm TTFT must be much cheaper (served from cache).
+        let cold_serve = e.completions[0].first_token_at - e.completions[0].arrival;
+        let warm_serve = c2.first_token_at - c2.arrival;
+        assert!(warm_serve * 2 < cold_serve, "warm {warm_serve} cold {cold_serve}");
+        assert!(e.check_invariants());
+    }
+
+    #[test]
+    fn admission_respects_kv_capacity() {
+        let mut cfg = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+        cfg.max_num_seqs = 1000;
+        let mut e = EngineSim::new(0, 0, cfg);
+        let cap_tokens = e.cost_model().kv_capacity_tokens();
+        // Enqueue 3x more work than fits.
+        let n = 3 * cap_tokens / 2000;
+        for i in 0..n as u64 {
+            e.enqueue(req(i, vec![3; 2000], 4));
+        }
+        e.step(0, None);
+        let used_tokens = e.alloc.used() * e.config().block_size;
+        assert!(used_tokens <= cap_tokens + 2000, "over capacity: {used_tokens}");
+        assert!(e.running.len() < n, "some must wait");
+        // Everything eventually completes.
+        run_to_completion(&mut e, 10_000);
+        assert_eq!(e.completions.len(), n);
+        assert!(e.check_invariants());
+    }
+
+    #[test]
+    fn lora_miss_penalty_once() {
+        let mut e = engine(false, false);
+        let mut r1 = req(1, vec![5; 64], 4);
+        r1.adapter = Some("lora-a".into());
+        let mut now = 0;
+        e.enqueue(r1);
+        drive(&mut e, &mut now, 50);
+        let t1 = e.completions[0].first_token_at - e.completions[0].arrival;
+        let mut r2 = req(2, vec![6; 64], 4);
+        r2.adapter = Some("lora-a".into());
+        r2.arrival = now;
+        e.enqueue(r2);
+        drive(&mut e, &mut now, 50);
+        let c2 = &e.completions[1];
+        let t2 = c2.first_token_at - c2.arrival;
+        assert!(t1 > t2 + e.config().adapter_load_us / 2, "t1 {t1} t2 {t2}");
+        assert_eq!(e.resident_adapters(), &["lora-a".to_string()]);
+    }
+
+    #[test]
+    fn fail_and_drain_requeues_everything() {
+        let mut e = engine(false, false);
+        e.enqueue(req(1, vec![1; 500], 10));
+        e.enqueue(req(2, vec![2; 500], 10));
+        e.step(0, None); // admits + prefills
+        let drained = e.fail_and_drain();
+        assert_eq!(drained.len(), 2);
+        assert!(e.is_failed());
+        assert!(!e.has_work());
+        assert_eq!(e.alloc.used(), 0);
+        e.recover();
+        assert!(!e.is_failed());
+    }
+
+    #[test]
+    fn stats_reflect_load() {
+        let mut e = engine(false, false);
+        for i in 0..60 {
+            e.enqueue(req(i, vec![4; 1000], 8));
+        }
+        e.step(0, None);
+        let s = e.stats(0);
+        assert!(s.running > 0);
+        assert!(s.kv_utilization > 0.0);
+    }
+
+    #[test]
+    fn external_pool_hit_skips_compute() {
+        struct FakePool {
+            hit_blocks: usize,
+            fetch_us: u64,
+            inserts: usize,
+        }
+        impl ExternalKv for FakePool {
+            fn lookup(&mut self, _: SimTime, _: u64, keys: &[BlockKey]) -> KvFetch {
+                KvFetch { blocks_hit: self.hit_blocks.min(keys.len()), fetch_us: self.fetch_us }
+            }
+            fn insert(&mut self, _: SimTime, _: u64, _: &[BlockKey], _: usize) {
+                self.inserts += 1;
+            }
+        }
+        // Cold: no hit.
+        let mut e1 = engine(false, false);
+        let mut cold = FakePool { hit_blocks: 0, fetch_us: 0, inserts: 0 };
+        e1.enqueue(req(1, vec![7; 1600], 4));
+        let mut now = 0;
+        while let Some(dt) = e1.step(now, Some(&mut cold)) {
+            now += dt;
+        }
+        let cold_ttft = e1.completions[0].ttft_us();
+        assert_eq!(cold.inserts, 1, "write-back on completion");
+
+        // Warm: pool supplies 90 of 100 blocks cheaply.
+        let mut e2 = engine(false, false);
+        let mut warm = FakePool { hit_blocks: 90, fetch_us: 20_000, inserts: 0 };
+        e2.enqueue(req(1, vec![7; 1600], 4));
+        let mut now = 0;
+        while let Some(dt) = e2.step(now, Some(&mut warm)) {
+            now += dt;
+        }
+        let warm_ttft = e2.completions[0].ttft_us();
+        assert!(
+            warm_ttft * 2 < cold_ttft,
+            "pool hit should slash TTFT: warm {warm_ttft} cold {cold_ttft}"
+        );
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let mut e = engine(false, false);
+        e.enqueue(req(1, vec![7; 320], 16));
+        run_to_completion(&mut e, 100);
+        assert_eq!(e.prompt_tokens_done, 320);
+        assert_eq!(e.decode_tokens_done, 16);
+        assert!(e.busy_us > 0);
+    }
+}

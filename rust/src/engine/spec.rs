@@ -1,0 +1,124 @@
+//! Model specifications for the cost model.
+//!
+//! Only the arithmetic characteristics matter (weights bytes, KV bytes per
+//! token, FLOPs per token); presets cover the models the paper's evaluation
+//! mentions plus TinyLM (the real AOT-compiled model).
+
+/// Architecture numbers of a served model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub n_params: u64,
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// KV heads (GQA); == n_heads for MHA.
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    pub vocab: u32,
+    /// Bytes per weight/KV element (2 = fp16/bf16).
+    pub dtype_bytes: f64,
+}
+
+impl ModelSpec {
+    /// deepseek-coder-6.7b (the Table 1 / Fig 7 model): MHA, 32 layers.
+    pub fn deepseek_coder_7b() -> ModelSpec {
+        ModelSpec {
+            name: "deepseek-coder-7b".into(),
+            n_params: 6_700_000_000,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 32,
+            head_dim: 128,
+            vocab: 32_256,
+            dtype_bytes: 2.0,
+        }
+    }
+
+    /// llama-3-8b-style GQA model (EXP-RT / EXP-HET mix).
+    pub fn llama_8b() -> ModelSpec {
+        ModelSpec {
+            name: "llama-8b".into(),
+            n_params: 8_000_000_000,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            vocab: 128_256,
+            dtype_bytes: 2.0,
+        }
+    }
+
+    /// The real AOT-compiled model served by the E2E example.
+    pub fn tinylm() -> ModelSpec {
+        ModelSpec {
+            name: "tinylm".into(),
+            n_params: 853_120,
+            n_layers: 4,
+            d_model: 128,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 32,
+            vocab: 512,
+            dtype_bytes: 4.0, // f32 artifacts
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "deepseek-coder-7b" => Some(Self::deepseek_coder_7b()),
+            "llama-8b" => Some(Self::llama_8b()),
+            "tinylm" => Some(Self::tinylm()),
+            _ => None,
+        }
+    }
+
+    /// Weight bytes resident in device memory.
+    pub fn weights_bytes(&self) -> u64 {
+        (self.n_params as f64 * self.dtype_bytes) as u64
+    }
+
+    /// KV cache bytes per token (k + v across layers).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.head_dim as f64
+            * self.dtype_bytes) as u64
+    }
+
+    /// Dense FLOPs per processed token (weights GEMMs; attention term added
+    /// separately by the cost model since it depends on context length).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.n_params as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deepseek_kv_is_half_mib_per_token() {
+        let m = ModelSpec::deepseek_coder_7b();
+        // 2 * 32 layers * 32 heads * 128 dim * 2 bytes = 512 KiB.
+        assert_eq!(m.kv_bytes_per_token(), 524_288);
+        assert_eq!(m.weights_bytes(), 13_400_000_000);
+    }
+
+    #[test]
+    fn gqa_shrinks_kv() {
+        let l = ModelSpec::llama_8b();
+        let d = ModelSpec::deepseek_coder_7b();
+        assert!(l.kv_bytes_per_token() < d.kv_bytes_per_token() / 3);
+    }
+
+    #[test]
+    fn by_name_round_trip() {
+        for n in ["deepseek-coder-7b", "llama-8b", "tinylm"] {
+            assert_eq!(ModelSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+}

@@ -1,0 +1,122 @@
+//! EXP-F7 — Figure 7: workload-dependent GPU selection.
+//!
+//! (a) throughput of deepseek-coder-7b workloads on L20 / V100 / A10 across
+//! the (input, output) token grid; (b) the per-bin most-cost-efficient GPU
+//! map. Paper claim: "most requests favor L20 for cost-efficiency, while
+//! those with <200 input and <100 output tokens prefer A10".
+
+use super::{fmt_f, TextTable};
+use crate::cluster::GpuKind;
+use crate::engine::ModelSpec;
+use crate::optimizer::profiles::{ProfileTable, Slo, TokenBin};
+
+pub struct Fig7 {
+    pub table: ProfileTable,
+    pub gpus: Vec<GpuKind>,
+}
+
+pub fn run_fig7() -> Fig7 {
+    let gpus = vec![GpuKind::A10, GpuKind::L20, GpuKind::V100];
+    let table = ProfileTable::build(&ModelSpec::deepseek_coder_7b(), &gpus, Slo::default());
+    Fig7 { table, gpus }
+}
+
+/// Figure 7a: throughput (req/s) per GPU per bin.
+pub fn render_fig7a(f: &Fig7) -> String {
+    let mut t = TextTable::new(&["in", "out", "A10 rps", "L20 rps", "V100 rps"]);
+    for bin in TokenBin::grid() {
+        let cell = |g: GpuKind| {
+            f.table
+                .get(g, bin)
+                .map(|p| fmt_f(p.max_rps, 2))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(vec![
+            bin.input.to_string(),
+            bin.output.to_string(),
+            cell(GpuKind::A10),
+            cell(GpuKind::L20),
+            cell(GpuKind::V100),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 7b: cheapest GPU per bin ($/1k requests in parentheses).
+pub fn render_fig7b(f: &Fig7) -> String {
+    let mut t = TextTable::new(&["in\\out", "50", "100", "200", "400"]);
+    for &input in &[50u32, 100, 200, 400, 800, 1600] {
+        let mut cells = vec![input.to_string()];
+        for &output in &[50u32, 100, 200, 400] {
+            let bin = TokenBin { input, output };
+            let cell = match f.table.best_gpu(bin, &f.gpus) {
+                Some(g) => {
+                    let p = f.table.get(g, bin).unwrap();
+                    format!("{} (${:.3})", g.name(), p.dollars_per_kreq)
+                }
+                None => "-".into(),
+            };
+            cells.push(cell);
+        }
+        t.row(cells);
+    }
+    t.render()
+}
+
+/// The paper's crossover summary: fraction of bins preferring each GPU and
+/// whether the small-request corner prefers A10.
+pub struct CrossoverSummary {
+    pub a10_bins: usize,
+    pub l20_bins: usize,
+    pub v100_bins: usize,
+    pub small_corner_is_a10: bool,
+}
+
+pub fn crossover(f: &Fig7) -> CrossoverSummary {
+    let mut counts = [0usize; 3];
+    for bin in TokenBin::grid() {
+        match f.table.best_gpu(bin, &f.gpus) {
+            Some(GpuKind::A10) => counts[0] += 1,
+            Some(GpuKind::L20) => counts[1] += 1,
+            Some(GpuKind::V100) => counts[2] += 1,
+            _ => {}
+        }
+    }
+    let small = TokenBin { input: 100, output: 50 };
+    CrossoverSummary {
+        a10_bins: counts[0],
+        l20_bins: counts[1],
+        v100_bins: counts[2],
+        small_corner_is_a10: f.table.best_gpu(small, &f.gpus) == Some(GpuKind::A10),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7b_shape_matches_paper() {
+        let f = run_fig7();
+        let s = crossover(&f);
+        assert!(s.small_corner_is_a10, "small requests must prefer A10");
+        assert!(s.l20_bins > 0, "larger workloads must prefer L20");
+        assert_eq!(s.v100_bins, 0, "V100 is never cost-optimal for the 7B model");
+        // "Most requests favor L20": majority of bins.
+        assert!(
+            s.l20_bins > s.a10_bins,
+            "l20 {} vs a10 {}",
+            s.l20_bins,
+            s.a10_bins
+        );
+    }
+
+    #[test]
+    fn fig7a_renders_full_grid() {
+        let f = run_fig7();
+        let a = render_fig7a(&f);
+        assert_eq!(a.lines().count(), 2 + TokenBin::grid().len());
+        let b = render_fig7b(&f);
+        assert!(b.contains("A10") && b.contains("L20"));
+    }
+}

@@ -1,0 +1,287 @@
+//! EXP-HET — §3.2.7: SLO-driven heterogeneous serving.
+//!
+//! A ShareGPT + Text2SQL mix is profiled by the load monitor, the GPU
+//! optimizer picks fleets for (a) heterogeneous {A10, L20} and (b)
+//! homogeneous {L20}, and both fleets serve the same trace. Paper claim:
+//! the heterogeneous fleet raises latency ≤20% while staying within SLO and
+//! cutting cost ~10%.
+
+use super::{fmt_f, TextTable};
+use crate::cluster::{GpuKind, GpuSpec};
+use crate::engine::{EngineConfig, ModelSpec};
+use crate::gateway::Policy;
+use crate::harness::{run, HarnessConfig, RunReport};
+use crate::optimizer::ilp::{solve, IlpProblem};
+use crate::optimizer::loadmonitor::LoadMonitor;
+use crate::optimizer::profiles::{ProfileTable, Slo};
+use crate::sim::SimTime;
+use crate::util::percentile;
+use crate::workload::{ArrivalProcess, Request, ShareGptConfig, ShareGptWorkload, Workload};
+
+/// The evaluation mix: conversational ShareGPT plus Text2SQL-ish requests
+/// (short-in/short-out bursts from the SQL side, long chat turns from the
+/// other).
+pub struct HeteroMix {
+    sharegpt: ShareGptWorkload,
+    sql: ShareGptWorkload,
+    toggle: bool,
+    remaining: usize,
+}
+
+impl HeteroMix {
+    pub fn new(n_requests: usize, seed: u64) -> HeteroMix {
+        HeteroMix {
+            sharegpt: ShareGptWorkload::new(ShareGptConfig {
+                n_requests: n_requests / 2 + 1,
+                model: "deepseek-coder-7b".into(),
+                seed,
+                ..Default::default()
+            }),
+            sql: ShareGptWorkload::new(ShareGptConfig {
+                n_requests: n_requests / 2 + 1,
+                prompt_median: 110.0,
+                prompt_sigma: 0.5,
+                output_median: 40.0,
+                output_sigma: 0.5,
+                turns_mean: 1.2,
+                model: "deepseek-coder-7b".into(),
+                seed: seed ^ 0x9E37,
+                ..Default::default()
+            }),
+            toggle: false,
+            remaining: n_requests,
+        }
+    }
+}
+
+impl Workload for HeteroMix {
+    fn next(&mut self, now: SimTime) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.toggle = !self.toggle;
+        if self.toggle {
+            self.sharegpt.next(now)
+        } else {
+            self.sql.next(now)
+        }
+    }
+}
+
+pub struct HeteroParams {
+    pub n_requests: usize,
+    pub arrival_rps: f64,
+    pub seed: u64,
+    pub slo: Slo,
+    /// TTFT SLO for attainment accounting, ms.
+    pub ttft_slo_ms: f64,
+}
+
+impl Default for HeteroParams {
+    fn default() -> Self {
+        HeteroParams {
+            n_requests: 600,
+            arrival_rps: 9.0,
+            seed: 7,
+            slo: Slo::default(),
+            ttft_slo_ms: 5_000.0,
+        }
+    }
+}
+
+pub struct FleetOutcome {
+    pub label: String,
+    pub counts: Vec<(GpuKind, usize)>,
+    pub planned_cost_per_hour: f64,
+    pub mean_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub slo_attainment: f64,
+    /// Cost of the fleet over the run's duration, $.
+    pub run_cost: f64,
+    pub completed: usize,
+}
+
+fn demand_from_mix(p: &HeteroParams) -> LoadMonitor {
+    let mut monitor = LoadMonitor::new();
+    let mut mix = HeteroMix::new(p.n_requests, p.seed);
+    let mut n = 0usize;
+    while let Some(r) = mix.next(0) {
+        monitor.record(r.prompt_len(), r.output_len, 1.0);
+        n += 1;
+    }
+    // Normalize counts into rates: the whole trace arrives over
+    // n/arrival_rps seconds.
+    let duration_s = n as f64 / p.arrival_rps;
+    // LoadMonitor's window is 10s; re-scale by feeding demand() consumers
+    // directly — we build the demand vector manually instead.
+    let _ = duration_s;
+    monitor
+}
+
+fn serve(p: &HeteroParams, counts: &[(GpuKind, usize)], label: &str) -> FleetOutcome {
+    let model = ModelSpec::deepseek_coder_7b();
+    let mut engines = Vec::new();
+    let mut node = 0u64;
+    for &(gpu, n) in counts {
+        for _ in 0..n {
+            let mut ec = EngineConfig::new(gpu, model.clone());
+            ec.prefix_caching = true;
+            engines.push((ec, node));
+            node += 1;
+        }
+    }
+    let mut mix = HeteroMix::new(p.n_requests, p.seed);
+    let r: RunReport = run(
+        HarnessConfig {
+            engines,
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: p.arrival_rps },
+            kv_pool: None,
+            seed: p.seed,
+            deadline: 0,
+            closed_loop_clients: 0,
+        },
+        &mut mix,
+    );
+    let lat = r.latency_ms();
+    let ttft = r.ttft_ms();
+    let within = ttft.iter().filter(|&&t| t <= p.ttft_slo_ms).count();
+    let cost_per_hour: f64 = counts
+        .iter()
+        .map(|&(g, n)| GpuSpec::of(g).dollars_per_hour * n as f64)
+        .sum();
+    FleetOutcome {
+        label: label.to_string(),
+        counts: counts.to_vec(),
+        planned_cost_per_hour: cost_per_hour,
+        mean_latency_ms: crate::util::mean(&lat),
+        p99_latency_ms: percentile(&lat, 99.0),
+        slo_attainment: if ttft.is_empty() {
+            0.0
+        } else {
+            within as f64 / ttft.len() as f64
+        },
+        run_cost: cost_per_hour * (r.completion_time_s() / 3600.0),
+        completed: r.completions.len(),
+    }
+}
+
+/// Optimize a fleet for the mix over `gpus`, then serve with it.
+pub fn plan_and_serve(p: &HeteroParams, gpus: &[GpuKind], label: &str) -> FleetOutcome {
+    let model = ModelSpec::deepseek_coder_7b();
+    let profiles = ProfileTable::build(&model, gpus, p.slo);
+    let monitor = demand_from_mix(p);
+    // Scale bin demand to the arrival rate: counts were recorded over the
+    // whole trace; convert to per-second rates.
+    let total: f64 = monitor.demand().values().sum();
+    let scale = p.arrival_rps / total.max(1e-9);
+    let mut demand = monitor.demand();
+    for v in demand.values_mut() {
+        *v *= scale;
+    }
+    let problem = IlpProblem::build(&profiles, gpus, &demand, 64);
+    let sol = solve(&problem);
+    assert!(sol.feasible, "optimizer found no feasible fleet for {label}");
+    let counts: Vec<(GpuKind, usize)> = gpus
+        .iter()
+        .zip(&sol.counts)
+        .map(|(&g, &n)| (g, n))
+        .filter(|&(_, n)| n > 0)
+        .collect();
+    serve(p, &counts, label)
+}
+
+pub fn run_hetero(p: &HeteroParams) -> (FleetOutcome, FleetOutcome) {
+    let hetero = plan_and_serve(p, &[GpuKind::A10, GpuKind::L20], "heterogeneous A10+L20");
+    let homo = plan_and_serve(p, &[GpuKind::L20], "homogeneous L20");
+    (hetero, homo)
+}
+
+pub fn render(hetero: &FleetOutcome, homo: &FleetOutcome) -> String {
+    let mut t = TextTable::new(&[
+        "Fleet",
+        "GPUs",
+        "$/hr",
+        "Mean lat(ms)",
+        "P99 lat(ms)",
+        "SLO attain",
+        "Run cost($)",
+        "Completed",
+    ]);
+    for o in [homo, hetero] {
+        let gpus = o
+            .counts
+            .iter()
+            .map(|(g, n)| format!("{}x{}", n, g.name()))
+            .collect::<Vec<_>>()
+            .join("+");
+        t.row(vec![
+            o.label.clone(),
+            gpus,
+            fmt_f(o.planned_cost_per_hour, 2),
+            fmt_f(o.mean_latency_ms, 1),
+            fmt_f(o.p99_latency_ms, 1),
+            format!("{:.1}%", o.slo_attainment * 100.0),
+            fmt_f(o.run_cost, 4),
+            o.completed.to_string(),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "\ncost delta: {:+.1}%   latency delta: {:+.1}%\n",
+        (hetero.planned_cost_per_hour - homo.planned_cost_per_hour) / homo.planned_cost_per_hour
+            * 100.0,
+        (hetero.mean_latency_ms - homo.mean_latency_ms) / homo.mean_latency_ms * 100.0,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> HeteroParams {
+        HeteroParams { n_requests: 150, arrival_rps: 6.0, ..Default::default() }
+    }
+
+    #[test]
+    fn hetero_cheaper_within_slo() {
+        let p = quick();
+        let (het, homo) = run_hetero(&p);
+        assert_eq!(het.completed, p.n_requests);
+        assert_eq!(homo.completed, p.n_requests);
+        // Paper shape: heterogeneous costs no more than homogeneous…
+        assert!(
+            het.planned_cost_per_hour <= homo.planned_cost_per_hour,
+            "het {} vs homo {}",
+            het.planned_cost_per_hour,
+            homo.planned_cost_per_hour
+        );
+        // …and stays within a 20%-ish latency band and high SLO attainment.
+        assert!(
+            het.mean_latency_ms <= homo.mean_latency_ms * 1.35,
+            "latency blowup: het {} homo {}",
+            het.mean_latency_ms,
+            homo.mean_latency_ms
+        );
+        assert!(het.slo_attainment > 0.9, "{}", het.slo_attainment);
+    }
+
+    #[test]
+    fn hetero_fleet_actually_mixes() {
+        let p = quick();
+        let het = plan_and_serve(&p, &[GpuKind::A10, GpuKind::L20], "het");
+        // With a mixed small/large workload the optimizer should buy both
+        // kinds (or at minimum prefer some A10 for the small bins).
+        assert!(het.counts.iter().any(|&(g, _)| g == GpuKind::A10), "{:?}", het.counts);
+    }
+
+    #[test]
+    fn renders() {
+        let p = quick();
+        let (het, homo) = run_hetero(&p);
+        let text = render(&het, &homo);
+        assert!(text.contains("cost delta"));
+    }
+}

@@ -1,0 +1,283 @@
+//! EXP-T1 — Table 1: distributed KV cache on the Bird-SQL workload.
+//!
+//! 4 engines on 4 A10 nodes serving deepseek-coder-7b, closed-loop clients
+//! (the vLLM serving-bench "peak throughput" style), six configurations:
+//! {default, chunked prefill, prefix caching} x {with/without the AIBrix
+//! distributed KV cache}. Reported columns match the paper: prompt/decode
+//! tokens, total & decode throughput, TTFT avg/P99, ITL avg/P99, completion
+//! time. Absolute numbers come from the roofline cost model; the claims
+//! under test are the *relative* improvements (DESIGN.md §2).
+
+use super::{fmt_f, TextTable};
+use crate::cluster::GpuKind;
+use crate::engine::{EngineConfig, ModelSpec};
+use crate::gateway::Policy;
+use crate::harness::{run, HarnessConfig, RunReport};
+use crate::kvcache::KvPoolConfig;
+use crate::workload::{ArrivalProcess, BirdSqlConfig, BirdSqlWorkload};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BaseConfig {
+    Default,
+    ChunkedPrefill,
+    PrefixCaching,
+}
+
+impl BaseConfig {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BaseConfig::Default => "vLLM Default",
+            BaseConfig::ChunkedPrefill => "vLLM Chunked Prefill",
+            BaseConfig::PrefixCaching => "vLLM Prefix Caching",
+        }
+    }
+
+    pub fn aibrix_label(&self) -> &'static str {
+        match self {
+            BaseConfig::Default => "AIBrix DistKV + Default",
+            BaseConfig::ChunkedPrefill => "AIBrix DistKV + Chunked Prefill",
+            BaseConfig::PrefixCaching => "AIBrix DistKV + Prefix Caching",
+        }
+    }
+}
+
+/// One Table 1 row.
+pub struct Row {
+    pub label: String,
+    pub prompt_tokens: u64,
+    pub decode_tokens: u64,
+    pub total_tput: f64,
+    pub decode_tput: f64,
+    pub ttft_avg_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub itl_avg_ms: f64,
+    pub itl_p99_ms: f64,
+    pub completion_s: f64,
+}
+
+impl Row {
+    /// Latency stats exclude the cold warmup wave (the first `warmup`
+    /// completions — every config pays identical cold-start prefill there,
+    /// which would otherwise pin the P99 columns to the same value).
+    fn from_report(label: &str, r: &RunReport, warmup: usize) -> Row {
+        let cutoff = r.warmup_cutoff(warmup);
+        let steady: Vec<f64> = r
+            .completions_after(cutoff)
+            .iter()
+            .map(|c| c.ttft_us() as f64 / 1e3)
+            .collect();
+        let itl = r.itl_ms_after(cutoff);
+        Row {
+            label: label.to_string(),
+            prompt_tokens: r.served_prompt_tokens(),
+            decode_tokens: r.total_decode_tokens,
+            total_tput: r.total_throughput(),
+            decode_tput: r.decode_throughput(),
+            ttft_avg_ms: crate::util::mean(&steady),
+            ttft_p99_ms: crate::util::percentile(&steady, 99.0),
+            itl_avg_ms: crate::util::mean(&itl),
+            itl_p99_ms: crate::util::percentile(&itl, 99.0),
+            completion_s: r.completion_time_s(),
+        }
+    }
+}
+
+pub struct Table1Params {
+    pub n_engines: usize,
+    pub clients: usize,
+    pub workload: BirdSqlConfig,
+    /// DRAM GiB per node for the distributed pool.
+    pub pool_gib_per_node: u64,
+    pub seed: u64,
+}
+
+impl Default for Table1Params {
+    fn default() -> Self {
+        Table1Params {
+            n_engines: 4,
+            clients: 32,
+            workload: BirdSqlConfig::default(),
+            pool_gib_per_node: 64,
+            seed: 2025,
+        }
+    }
+}
+
+fn engine_config(base: BaseConfig) -> EngineConfig {
+    let mut ec = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+    match base {
+        BaseConfig::Default => {}
+        BaseConfig::ChunkedPrefill => {
+            ec.chunked_prefill = true;
+            ec.max_batched_tokens = 512;
+        }
+        BaseConfig::PrefixCaching => {
+            ec.prefix_caching = true;
+        }
+    }
+    ec
+}
+
+/// Run one (base config, ±dist-KV) cell.
+pub fn run_cell(p: &Table1Params, base: BaseConfig, dist_kv: bool) -> RunReport {
+    let ec = engine_config(base);
+    let engines: Vec<_> = (0..p.n_engines).map(|i| (ec.clone(), i as u64)).collect();
+    let kv_pool = if dist_kv {
+        Some(KvPoolConfig::new(
+            (0..p.n_engines as u64)
+                .map(|i| (i, p.pool_gib_per_node << 30))
+                .collect(),
+            ec.model.kv_bytes_per_token(),
+            ec.block_size,
+        ))
+    } else {
+        None
+    };
+    let mut wl = BirdSqlWorkload::new(p.workload.clone());
+    run(
+        HarnessConfig {
+            engines,
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Batch,
+            kv_pool,
+            seed: p.seed,
+            deadline: 0,
+            closed_loop_clients: p.clients,
+        },
+        &mut wl,
+    )
+}
+
+/// The full six-row table.
+pub fn run_table1(p: &Table1Params) -> Vec<Row> {
+    let mut rows = Vec::new();
+    let warmup = p.clients * 2;
+    for base in [BaseConfig::Default, BaseConfig::ChunkedPrefill, BaseConfig::PrefixCaching] {
+        let baseline = run_cell(p, base, false);
+        rows.push(Row::from_report(base.label(), &baseline, warmup));
+        let aibrix = run_cell(p, base, true);
+        rows.push(Row::from_report(base.aibrix_label(), &aibrix, warmup));
+    }
+    rows
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut t = TextTable::new(&[
+        "Method",
+        "Prompt",
+        "Decode",
+        "Tput(tok/s)",
+        "DecodeTput",
+        "TTFT avg(ms)",
+        "TTFT p99(ms)",
+        "ITL avg(ms)",
+        "ITL p99(ms)",
+        "Time(s)",
+    ]);
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            r.label.clone(),
+            r.prompt_tokens.to_string(),
+            r.decode_tokens.to_string(),
+            fmt_f(r.total_tput, 1),
+            fmt_f(r.decode_tput, 2),
+            fmt_f(r.ttft_avg_ms, 0),
+            fmt_f(r.ttft_p99_ms, 0),
+            fmt_f(r.itl_avg_ms, 1),
+            fmt_f(r.itl_p99_ms, 1),
+            fmt_f(r.completion_s, 1),
+        ]);
+        // Improvement row after each AIBrix variant, like the paper.
+        if i % 2 == 1 {
+            let b = &rows[i - 1];
+            let pct = |new: f64, old: f64, lower_better: bool| {
+                if old == 0.0 || new == 0.0 {
+                    return "-".to_string();
+                }
+                let v = if lower_better {
+                    (old - new) / old * 100.0
+                } else {
+                    (new - old) / old * 100.0
+                };
+                format!("{v:+.1}%")
+            };
+            t.row(vec![
+                "  Improvement".into(),
+                String::new(),
+                String::new(),
+                pct(r.total_tput, b.total_tput, false),
+                pct(r.decode_tput, b.decode_tput, false),
+                pct(r.ttft_avg_ms, b.ttft_avg_ms, true),
+                pct(r.ttft_p99_ms, b.ttft_p99_ms, true),
+                pct(r.itl_avg_ms, b.itl_avg_ms, true),
+                pct(r.itl_p99_ms, b.itl_p99_ms, true),
+                pct(r.completion_s, b.completion_s, true),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> Table1Params {
+        Table1Params {
+            n_engines: 2,
+            clients: 8,
+            workload: BirdSqlConfig {
+                n_requests: 60,
+                n_schemas: 8,
+                schema_tokens_mean: 700,
+                question_tokens_mean: 150,
+                ..Default::default()
+            },
+            pool_gib_per_node: 32,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn dist_kv_improves_prefix_caching_config() {
+        // The paper's headline: DistKV + prefix caching beats prefix caching
+        // alone on throughput and TTFT.
+        let p = quick_params();
+        let base = run_cell(&p, BaseConfig::PrefixCaching, false);
+        let aibrix = run_cell(&p, BaseConfig::PrefixCaching, true);
+        assert_eq!(base.completions.len(), 60);
+        assert_eq!(aibrix.completions.len(), 60);
+        assert!(
+            aibrix.completion_time_s() < base.completion_time_s(),
+            "aibrix {} vs base {}",
+            aibrix.completion_time_s(),
+            base.completion_time_s()
+        );
+        let ps = aibrix.pool_stats.unwrap();
+        assert!(ps.blocks_hit > 0, "pool must contribute hits");
+    }
+
+    #[test]
+    fn chunked_prefill_tames_itl_tail() {
+        let p = quick_params();
+        let default = run_cell(&p, BaseConfig::Default, false);
+        let chunked = run_cell(&p, BaseConfig::ChunkedPrefill, false);
+        let p99_default = crate::util::percentile(&default.itl_ms(), 99.0);
+        let p99_chunked = crate::util::percentile(&chunked.itl_ms(), 99.0);
+        assert!(
+            p99_chunked < p99_default,
+            "chunked {p99_chunked} vs default {p99_default}"
+        );
+    }
+
+    #[test]
+    fn table_has_six_rows_and_renders() {
+        let p = quick_params();
+        let rows = run_table1(&p);
+        assert_eq!(rows.len(), 6);
+        let text = render(&rows);
+        assert!(text.contains("vLLM Default"));
+        assert!(text.contains("AIBrix DistKV + Prefix Caching"));
+        assert!(text.contains("Improvement"));
+    }
+}

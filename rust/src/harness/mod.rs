@@ -1,0 +1,385 @@
+//! End-to-end simulation harness: workload -> gateway -> engines (+ KV pool)
+//! on the discrete-event clock.
+//!
+//! Every paper experiment that involves serving (Table 1, EXP-RT, EXP-HET)
+//! is a [`HarnessConfig`] run; benches construct configs and compare
+//! [`RunReport`]s. The event loop mirrors production shape: arrivals hit
+//! the gateway, the router picks an engine from fresh pod snapshots, idle
+//! engines get a step scheduled, and each step schedules the next at
+//! `now + step_duration`.
+
+use crate::engine::{Completion, EngineConfig, EngineSim, ExternalKv};
+use crate::engine::prefix::prompt_block_keys;
+use crate::gateway::{Decision, Gateway, PodSnapshot, Policy};
+use crate::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
+use crate::sim::{SimTime, Simulator};
+use crate::util::stats::Summary;
+use crate::workload::{ArrivalProcess, Workload};
+
+/// One serving experiment.
+pub struct HarnessConfig {
+    /// One engine per serving pod, with its hosting node id.
+    pub engines: Vec<(EngineConfig, u64)>,
+    pub policy: Policy,
+    pub arrival: ArrivalProcess,
+    /// Distributed KV pool; None = engines stand alone (vLLM baseline).
+    pub kv_pool: Option<KvPoolConfig>,
+    pub seed: u64,
+    /// Hard stop (µs of sim time); 0 = run to drain.
+    pub deadline: SimTime,
+    /// Closed-loop mode: this many concurrent clients, each submitting its
+    /// next request when the previous one completes (the vLLM serving-bench
+    /// style behind Table 1's "peak throughput"). 0 = open loop driven by
+    /// `arrival`.
+    pub closed_loop_clients: usize,
+}
+
+/// Aggregated outcome of a run.
+pub struct RunReport {
+    pub completions: Vec<Completion>,
+    /// (emission time, inter-token latency µs) per decode token.
+    pub itl_us: Vec<(SimTime, u64)>,
+    /// Time when the last request finished.
+    pub makespan: SimTime,
+    pub total_prompt_tokens: u64,
+    pub total_decode_tokens: u64,
+    pub rejected: u64,
+    pub preemptions: u64,
+    pub pool_stats: Option<PoolStats>,
+    /// Local prefix-cache hit rates per engine.
+    pub prefix_hit_rates: Vec<f64>,
+}
+
+impl RunReport {
+    pub fn ttft_ms(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.ttft_us() as f64 / 1e3).collect()
+    }
+
+    pub fn itl_ms(&self) -> Vec<f64> {
+        self.itl_us.iter().map(|&(_, v)| v as f64 / 1e3).collect()
+    }
+
+    /// ITL samples emitted at or after `cutoff` (warmup exclusion).
+    pub fn itl_ms_after(&self, cutoff: SimTime) -> Vec<f64> {
+        self.itl_us
+            .iter()
+            .filter(|&&(t, _)| t >= cutoff)
+            .map(|&(_, v)| v as f64 / 1e3)
+            .collect()
+    }
+
+    /// Completions finishing at or after `cutoff`.
+    pub fn completions_after(&self, cutoff: SimTime) -> Vec<&Completion> {
+        self.completions.iter().filter(|c| c.finished_at >= cutoff).collect()
+    }
+
+    /// Time by which the first `n` requests (the cold warmup wave) had
+    /// finished; 0 when fewer than n completions exist.
+    pub fn warmup_cutoff(&self, n: usize) -> SimTime {
+        let mut finishes: Vec<SimTime> = self.completions.iter().map(|c| c.finished_at).collect();
+        finishes.sort_unstable();
+        finishes.get(n.saturating_sub(1)).copied().unwrap_or(0)
+    }
+
+    /// Prompt tokens of completed requests (served, whether computed or
+    /// loaded from cache — the denominator the paper's throughput uses).
+    pub fn served_prompt_tokens(&self) -> u64 {
+        self.completions.iter().map(|c| c.prompt_len as u64).sum()
+    }
+
+    pub fn latency_ms(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency_us() as f64 / 1e3).collect()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttft_ms())
+    }
+
+    pub fn itl_summary(&self) -> Summary {
+        Summary::of(&self.itl_ms())
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latency_ms())
+    }
+
+    pub fn completion_time_s(&self) -> f64 {
+        self.makespan as f64 / 1e6
+    }
+
+    /// Total throughput: served prompt + decode tokens per second. Served
+    /// (not computed) prompt tokens, so configurations that *skip* prefill
+    /// compute via caching are credited for the tokens they answered —
+    /// matching how the paper's Table 1 counts.
+    pub fn total_throughput(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        (self.served_prompt_tokens() + self.total_decode_tokens) as f64
+            / (self.makespan as f64 / 1e6)
+    }
+
+    /// Decode-only throughput (the paper's second throughput column).
+    pub fn decode_throughput(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.total_decode_tokens as f64 / (self.makespan as f64 / 1e6)
+    }
+}
+
+enum Ev {
+    Arrive,
+    Step(usize),
+}
+
+/// Run one experiment to completion (or deadline).
+pub fn run(cfg: HarnessConfig, workload: &mut dyn Workload) -> RunReport {
+    run_with_router_config(cfg, workload, true)
+}
+
+/// `run` with explicit router knobs (`lora_affinity` toggle for ablations).
+pub fn run_with_router_config(
+    cfg: HarnessConfig,
+    workload: &mut dyn Workload,
+    lora_affinity: bool,
+) -> RunReport {
+    let mut sim: Simulator<Ev> = Simulator::new();
+    let mut engines: Vec<EngineSim> = cfg
+        .engines
+        .iter()
+        .enumerate()
+        .map(|(i, (ec, node))| EngineSim::new(i, *node, ec.clone()))
+        .collect();
+    let mut gateway = Gateway::new(cfg.policy, cfg.seed);
+    gateway.router.lora_affinity = lora_affinity;
+    let mut pool = cfg.kv_pool.clone().map(DistKvPool::new);
+    let mut arrival_rng = crate::util::Rng::new(cfg.seed ^ 0xA221_44AA);
+    let mut idle: Vec<bool> = vec![true; engines.len()];
+    let mut rejected = 0u64;
+    let mut exhausted = false;
+
+    if cfg.closed_loop_clients > 0 {
+        for _ in 0..cfg.closed_loop_clients {
+            sim.schedule_at(0, Ev::Arrive);
+        }
+    } else {
+        sim.schedule_at(0, Ev::Arrive);
+    }
+    let deadline = if cfg.deadline == 0 { SimTime::MAX } else { cfg.deadline };
+    let mut completed_seen: Vec<usize> = vec![0; engines.len()];
+
+    while let Some((now, ev)) = sim.next_event() {
+        if now >= deadline {
+            break;
+        }
+        match ev {
+            Ev::Arrive => {
+                if exhausted {
+                    continue;
+                }
+                let Some(req) = workload.next(now) else {
+                    exhausted = true;
+                    continue;
+                };
+                // Build routing snapshots (prefix matching per engine).
+                let bs = engines[0].config().block_size;
+                let keys = prompt_block_keys(&req.tokens, bs);
+                let prompt_blocks = keys.len().max(1);
+                let snaps: Vec<PodSnapshot> = engines
+                    .iter_mut()
+                    .map(|e| PodSnapshot {
+                        pod: e.id,
+                        ready: !e.is_failed(),
+                        stats: e.stats(now),
+                        prefix_match_blocks: e.prefix_match_blocks(&keys),
+                        prompt_blocks,
+                        resident_adapters: e.resident_adapters().to_vec(),
+                    })
+                    .collect();
+                match gateway.dispatch(now, &req, &snaps) {
+                    Decision::Route(pod) => {
+                        engines[pod].enqueue(req);
+                        if idle[pod] {
+                            idle[pod] = false;
+                            sim.schedule_at(now, Ev::Step(pod));
+                        }
+                    }
+                    _ => rejected += 1,
+                }
+                // Next arrival (open loop only; closed loop re-arms on
+                // completion).
+                if cfg.closed_loop_clients == 0 {
+                    let next = cfg.arrival.next_after(now, &mut arrival_rng);
+                    sim.schedule_at(next, Ev::Arrive);
+                }
+            }
+            Ev::Step(i) => {
+                let ext: Option<&mut dyn ExternalKv> =
+                    pool.as_mut().map(|p| p as &mut dyn ExternalKv);
+                match engines[i].step(now, ext) {
+                    Some(dt) => sim.schedule_in(dt, Ev::Step(i)),
+                    None => idle[i] = true,
+                }
+                if cfg.closed_loop_clients > 0 {
+                    let done = engines[i].completions.len();
+                    for _ in completed_seen[i]..done {
+                        sim.schedule_at(now, Ev::Arrive);
+                    }
+                    completed_seen[i] = done;
+                }
+            }
+        }
+    }
+
+    let mut completions = Vec::new();
+    let mut itl = Vec::new();
+    let mut prompt_tokens = 0;
+    let mut decode_tokens = 0;
+    let mut preemptions = 0;
+    let mut hit_rates = Vec::new();
+    let mut makespan = 0;
+    for (i, e) in engines.iter_mut().enumerate() {
+        completions.extend(e.completions.iter().cloned());
+        itl.extend(e.itl_us.iter().copied());
+        prompt_tokens += e.prompt_tokens_done;
+        decode_tokens += e.decode_tokens_done;
+        preemptions += e.preemptions;
+        hit_rates.push(e.stats(deadline.min(1 << 60)).prefix_hit_rate);
+        let _ = i;
+    }
+    for c in &completions {
+        makespan = makespan.max(c.finished_at);
+    }
+    RunReport {
+        completions,
+        itl_us: itl,
+        makespan,
+        total_prompt_tokens: prompt_tokens,
+        total_decode_tokens: decode_tokens,
+        rejected,
+        preemptions,
+        pool_stats: pool.map(|p| p.stats.clone()),
+        prefix_hit_rates: hit_rates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuKind;
+    use crate::engine::ModelSpec;
+    use crate::workload::{BirdSqlConfig, BirdSqlWorkload};
+
+    fn small_workload(n: usize) -> BirdSqlWorkload {
+        BirdSqlWorkload::new(BirdSqlConfig {
+            n_requests: n,
+            n_schemas: 4,
+            schema_tokens_mean: 400,
+            question_tokens_mean: 100,
+            ..Default::default()
+        })
+    }
+
+    fn engines(n: usize, prefix: bool) -> Vec<(EngineConfig, u64)> {
+        (0..n)
+            .map(|i| {
+                let mut ec = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+                ec.prefix_caching = prefix;
+                (ec, i as u64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let cfg = HarnessConfig {
+            engines: engines(2, false),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 20.0 },
+            kv_pool: None,
+            seed: 1,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let mut w = small_workload(50);
+        let r = run(cfg, &mut w);
+        assert_eq!(r.completions.len(), 50);
+        assert_eq!(r.rejected, 0);
+        assert!(r.makespan > 0);
+        assert!(r.total_prompt_tokens > 0);
+        assert!(r.total_decode_tokens > 0);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let mk = || HarnessConfig {
+            engines: engines(3, true),
+            policy: Policy::PrefixCacheAware { threshold: 0.3 },
+            arrival: ArrivalProcess::Poisson { rate: 10.0 },
+            kv_pool: None,
+            seed: 99,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let a = run(mk(), &mut small_workload(40));
+        let b = run(mk(), &mut small_workload(40));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.ttft_ms(), b.ttft_ms());
+    }
+
+    #[test]
+    fn pool_improves_ttft_on_shared_prefixes() {
+        let base = HarnessConfig {
+            engines: engines(4, true),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 12.0 },
+            kv_pool: None,
+            seed: 5,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let no_pool = run(base, &mut small_workload(120));
+
+        let kv_bytes = ModelSpec::deepseek_coder_7b().kv_bytes_per_token();
+        let with_pool_cfg = HarnessConfig {
+            engines: engines(4, true),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 12.0 },
+            kv_pool: Some(KvPoolConfig::new(
+                (0..4u64).map(|i| (i, 64u64 << 30)).collect(),
+                kv_bytes,
+                16,
+            )),
+            seed: 5,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let with_pool = run(with_pool_cfg, &mut small_workload(120));
+        assert_eq!(with_pool.completions.len(), 120);
+        let ps = with_pool.pool_stats.as_ref().unwrap();
+        assert!(ps.blocks_hit > 0, "pool must get hits on shared schemas");
+        assert!(
+            with_pool.ttft_summary().mean <= no_pool.ttft_summary().mean * 1.05,
+            "pool {} vs none {}",
+            with_pool.ttft_summary().mean,
+            no_pool.ttft_summary().mean
+        );
+    }
+
+    #[test]
+    fn deadline_stops_run() {
+        let cfg = HarnessConfig {
+            engines: engines(1, false),
+            policy: Policy::Random,
+            arrival: ArrivalProcess::Poisson { rate: 5.0 },
+            kv_pool: None,
+            seed: 2,
+            deadline: 2_000_000, // 2s
+            closed_loop_clients: 0,
+        };
+        let r = run(cfg, &mut small_workload(10_000));
+        assert!(r.completions.len() < 10_000);
+        assert!(r.makespan <= 2_500_000);
+    }
+}

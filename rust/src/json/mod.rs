@@ -1,0 +1,96 @@
+//! Minimal JSON: value model, recursive-descent parser, serializer.
+//!
+//! Used for the AOT artifact manifest, config files, and the HTTP API
+//! bodies. Implemented in-repo because no serde is vendored (DESIGN.md §2).
+//! Supports the full JSON grammar minus exotic number forms; numbers are
+//! held as f64 (adequate: the manifest's largest integer is a param offset
+//! well under 2^53).
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Json;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_scalars() {
+        for text in ["null", "true", "false", "0", "-1.5", "\"hi\""] {
+            let v = parse(text).unwrap();
+            assert_eq!(parse(&v.to_string()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v["a"][2]["b"], Json::Null);
+        assert_eq!(v["c"].as_str().unwrap(), "x");
+        assert_eq!(v["a"][0].as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\n\t\"\\A""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\t\"\\A");
+        // Serializer must escape back.
+        let s = v.to_string();
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn unicode_escape_surrogate_pair() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for text in ["", "{", "[1,]", "{\"a\":}", "tru", "1.2.3", "\"unterminated"] {
+            assert!(parse(text).is_err(), "{text:?} should fail");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(parse("1 2").is_err());
+        assert!(parse("{} x").is_err());
+    }
+
+    #[test]
+    fn builder_api() {
+        let v = Json::obj([
+            ("name", Json::from("tinylm")),
+            ("n", Json::from(3.0)),
+            ("ok", Json::from(true)),
+            ("xs", Json::arr([Json::from(1.0), Json::from(2.0)])),
+        ]);
+        let t = v.to_string();
+        let back = parse(&t).unwrap();
+        assert_eq!(back["name"].as_str().unwrap(), "tinylm");
+        assert_eq!(back["xs"][1].as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn object_get_missing_is_null() {
+        let v = parse("{}").unwrap();
+        assert_eq!(v["nope"], Json::Null);
+        assert!(v["nope"].as_f64().is_none());
+    }
+
+    #[test]
+    fn parses_real_manifest_shape() {
+        let text = r#"{
+          "model": "tinylm", "seed": 0,
+          "config": {"vocab": 512, "max_seq": 160},
+          "params": [{"name": "embed", "shape": [512, 128], "offset": 0, "numel": 65536}],
+          "artifacts": [{"name": "tinylm_decode_b1", "kind": "decode", "batch": 1, "file": "tinylm_decode_b1.hlo.txt"}]
+        }"#;
+        let v = parse(text).unwrap();
+        assert_eq!(v["params"][0]["numel"].as_u64().unwrap(), 65536);
+        assert_eq!(v["artifacts"][0]["kind"].as_str().unwrap(), "decode");
+    }
+}

@@ -1,0 +1,23 @@
+//! Distributed KV cache pool (§3.2.5, Figure 5, Table 1).
+//!
+//! "AIBrix introduces a distributed KV cache, enabling high-capacity,
+//! cross-engine KV reuse while optimizing network and memory efficiency.
+//! The system employs a scan-resistant eviction policy to selectively
+//! persist hot KV tensors, reducing unnecessary data transfers.
+//! Additionally, asynchronous metadata updates minimize overhead, while
+//! cache-engine colocation accelerates data transfer through shared
+//! memory."
+//!
+//! Pieces:
+//!   * [`eviction`] — S3-FIFO (the scan-resistant policy) plus LRU/FIFO
+//!     baselines for the ablation bench;
+//!   * [`pool`] — the multi-node DRAM pool with a global (async-updated)
+//!     metadata index, shared-memory vs cross-node transfer costing, and
+//!     redundant-transfer dedup. It implements `engine::ExternalKv` so the
+//!     engine simulator plugs it in at admission/completion.
+
+pub mod eviction;
+pub mod pool;
+
+pub use eviction::{EvictionKind, EvictionPolicy, Fifo, Lru, S3Fifo};
+pub use pool::{DistKvPool, KvPoolConfig, PoolStats};

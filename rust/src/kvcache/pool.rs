@@ -1,0 +1,374 @@
+//! The distributed KV cache pool (Figure 5).
+//!
+//! A DRAM tier spread over the cluster's nodes, shared by every engine:
+//!   * **colocation**: blocks stored on the consumer's own node move over
+//!     shared memory (fast); remote blocks pay the network;
+//!   * **async metadata**: the global index is updated asynchronously —
+//!     an inserted block becomes *visible* to lookups only after
+//!     `metadata_delay_us`, modeling the paper's out-of-band index updates
+//!     (lookups never block on writers);
+//!   * **dedup**: re-inserting a key that is already resident (or in
+//!     flight) is dropped, the paper's "reduced redundant data transfers";
+//!   * **scan-resistant eviction**: per-node policy, S3-FIFO by default.
+//!
+//! Implements [`ExternalKv`], the hook the engine simulator calls at
+//! admission (lookup) and completion (write-back insert).
+
+use std::collections::HashMap;
+
+use super::eviction::{EvictionKind, EvictionPolicy};
+use crate::engine::{ExternalKv, KvFetch};
+use crate::sim::SimTime;
+
+pub type BlockKey = u64;
+
+#[derive(Debug, Clone)]
+pub struct KvPoolConfig {
+    /// (node id, DRAM capacity in bytes) per participating node.
+    pub nodes: Vec<(u64, u64)>,
+    /// KV bytes per cached token (model-dependent).
+    pub kv_bytes_per_token: u64,
+    /// Tokens per block (must match the engine's block size).
+    pub block_tokens: usize,
+    /// Shared-memory bandwidth for colocated reads, GB/s.
+    pub shm_gbps: f64,
+    /// Cross-node network bandwidth, GB/s.
+    pub net_gbps: f64,
+    /// Metadata visibility delay (async index updates), µs.
+    pub metadata_delay_us: u64,
+    pub eviction: EvictionKind,
+    /// Drop redundant inserts (paper's transfer dedup) — disable only for
+    /// the ablation bench.
+    pub dedup: bool,
+}
+
+impl KvPoolConfig {
+    pub fn new(nodes: Vec<(u64, u64)>, kv_bytes_per_token: u64, block_tokens: usize) -> Self {
+        KvPoolConfig {
+            nodes,
+            kv_bytes_per_token,
+            block_tokens,
+            shm_gbps: 20.0,
+            net_gbps: 10.0,
+            metadata_delay_us: 50_000,
+            eviction: EvictionKind::S3Fifo,
+            dedup: true,
+        }
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.kv_bytes_per_token * self.block_tokens as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    node: u64,
+    visible_at: SimTime,
+}
+
+struct NodeShard {
+    capacity: u64,
+    used: u64,
+    policy: Box<dyn EvictionPolicy + Send>,
+}
+
+/// Pool statistics (Table 1 analysis + ablations).
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    pub lookups: u64,
+    pub blocks_requested: u64,
+    pub blocks_hit: u64,
+    pub blocks_hit_local: u64,
+    pub blocks_hit_remote: u64,
+    pub inserts: u64,
+    pub inserts_deduped: u64,
+    pub evictions: u64,
+    pub bytes_transferred: u64,
+}
+
+impl PoolStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.blocks_requested == 0 {
+            0.0
+        } else {
+            self.blocks_hit as f64 / self.blocks_requested as f64
+        }
+    }
+}
+
+/// The distributed pool.
+pub struct DistKvPool {
+    cfg: KvPoolConfig,
+    index: HashMap<BlockKey, Entry>,
+    shards: HashMap<u64, NodeShard>,
+    pub stats: PoolStats,
+}
+
+impl DistKvPool {
+    pub fn new(cfg: KvPoolConfig) -> DistKvPool {
+        let shards = cfg
+            .nodes
+            .iter()
+            .map(|&(node, capacity)| {
+                (node, NodeShard { capacity, used: 0, policy: cfg.eviction.build() })
+            })
+            .collect();
+        DistKvPool { cfg, index: HashMap::new(), shards, stats: PoolStats::default() }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    /// Total resident bytes.
+    pub fn used_bytes(&self) -> u64 {
+        self.shards.values().map(|s| s.used).sum()
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.shards.values().map(|s| s.capacity).sum()
+    }
+
+    pub fn resident_blocks(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Pick the shard for a new block: the inserting node if it has a shard
+    /// (colocation), else the least-utilized shard.
+    fn placement(&self, writer: u64) -> Option<u64> {
+        if self.shards.contains_key(&writer) {
+            return Some(writer);
+        }
+        self.shards
+            .iter()
+            .min_by(|a, b| {
+                let ua = a.1.used as f64 / a.1.capacity.max(1) as f64;
+                let ub = b.1.used as f64 / b.1.capacity.max(1) as f64;
+                ua.partial_cmp(&ub).unwrap()
+            })
+            .map(|(id, _)| *id)
+    }
+
+    fn evict_from(&mut self, node: u64) -> bool {
+        let shard = self.shards.get_mut(&node).unwrap();
+        if let Some(victim) = shard.policy.evict() {
+            shard.used = shard.used.saturating_sub(self.cfg.block_bytes());
+            self.index.remove(&victim);
+            self.stats.evictions += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Consistency: index size == sum of per-shard policy sizes, and used
+    /// bytes == blocks * block_bytes.
+    pub fn check_invariants(&self) -> bool {
+        let policy_total: usize = self.shards.values().map(|s| s.policy.len()).sum();
+        if policy_total != self.index.len() {
+            return false;
+        }
+        let used: u64 = self.used_bytes();
+        used == self.index.len() as u64 * self.cfg.block_bytes()
+            && self.shards.values().all(|s| s.used <= s.capacity)
+    }
+}
+
+impl ExternalKv for DistKvPool {
+    /// Longest visible prefix of `keys`; cost = bytes over shm (colocated)
+    /// or network (remote), whichever each block needs.
+    fn lookup(&mut self, now: SimTime, node: u64, keys: &[BlockKey]) -> KvFetch {
+        self.stats.lookups += 1;
+        self.stats.blocks_requested += keys.len() as u64;
+        let mut local = 0u64;
+        let mut remote = 0u64;
+        let mut hit = 0usize;
+        for key in keys {
+            match self.index.get(key) {
+                Some(e) if e.visible_at <= now => {
+                    if e.node == node {
+                        local += 1;
+                    } else {
+                        remote += 1;
+                    }
+                    hit += 1;
+                    let home = e.node;
+                    if let Some(shard) = self.shards.get_mut(&home) {
+                        shard.policy.on_access(*key);
+                    }
+                }
+                _ => break, // prefixes are contiguous
+            }
+        }
+        self.stats.blocks_hit += hit as u64;
+        self.stats.blocks_hit_local += local;
+        self.stats.blocks_hit_remote += remote;
+        let bb = self.cfg.block_bytes() as f64;
+        let fetch_us = (local as f64 * bb / (self.cfg.shm_gbps * 1e9)
+            + remote as f64 * bb / (self.cfg.net_gbps * 1e9))
+            * 1e6;
+        self.stats.bytes_transferred += (local + remote) * self.cfg.block_bytes();
+        KvFetch { blocks_hit: hit, fetch_us: fetch_us as u64 }
+    }
+
+    /// Write-back of freshly computed prefix blocks. Asynchronous from the
+    /// engine's perspective: no cost charged to the request; visibility is
+    /// delayed by `metadata_delay_us`.
+    fn insert(&mut self, now: SimTime, node: u64, keys: &[BlockKey], _block_tokens: usize) {
+        let Some(target_default) = self.placement(node) else { return };
+        for key in keys {
+            self.stats.inserts += 1;
+            if self.cfg.dedup && self.index.contains_key(key) {
+                self.stats.inserts_deduped += 1;
+                continue;
+            }
+            let target = target_default;
+            // Make room.
+            let bb = self.cfg.block_bytes();
+            loop {
+                let shard = self.shards.get_mut(&target).unwrap();
+                if shard.used + bb <= shard.capacity {
+                    break;
+                }
+                if !self.evict_from(target) {
+                    return; // block bigger than shard; drop
+                }
+            }
+            // Without dedup, a re-insert replaces the old entry (and the old
+            // copy's bytes must be accounted out first).
+            if let Some(old) = self.index.remove(key) {
+                if let Some(old_shard) = self.shards.get_mut(&old.node) {
+                    old_shard.used = old_shard.used.saturating_sub(bb);
+                    old_shard.policy.remove(*key);
+                }
+            }
+            let shard = self.shards.get_mut(&target).unwrap();
+            shard.used += bb;
+            shard.policy.on_insert(*key);
+            self.index.insert(
+                *key,
+                Entry { node: target, visible_at: now + self.cfg.metadata_delay_us },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(nodes: usize, gib_each: u64) -> DistKvPool {
+        let nodes: Vec<(u64, u64)> = (0..nodes as u64).map(|i| (i, gib_each << 30)).collect();
+        // 0.5 MiB per token, 16-token blocks -> 8 MiB per block.
+        DistKvPool::new(KvPoolConfig::new(nodes, 524_288, 16))
+    }
+
+    #[test]
+    fn insert_then_lookup_after_delay() {
+        let mut p = pool(2, 4);
+        let keys = [1u64, 2, 3];
+        p.insert(0, 0, &keys, 16);
+        // Not yet visible.
+        let f = p.lookup(10, 0, &keys);
+        assert_eq!(f.blocks_hit, 0, "async metadata not yet visible");
+        // Visible after the delay.
+        let f = p.lookup(60_000, 0, &keys);
+        assert_eq!(f.blocks_hit, 3);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn colocated_cheaper_than_remote() {
+        let mut p = pool(2, 4);
+        let keys = [7u64, 8];
+        p.insert(0, 0, &keys, 16);
+        let local = p.lookup(100_000, 0, &keys);
+        let remote = p.lookup(100_000, 1, &keys);
+        assert_eq!(local.blocks_hit, 2);
+        assert_eq!(remote.blocks_hit, 2);
+        assert!(local.fetch_us < remote.fetch_us, "{} vs {}", local.fetch_us, remote.fetch_us);
+        assert_eq!(p.stats.blocks_hit_local, 2);
+        assert_eq!(p.stats.blocks_hit_remote, 2);
+    }
+
+    #[test]
+    fn prefix_contiguity() {
+        let mut p = pool(1, 4);
+        p.insert(0, 0, &[1, 3], 16); // 2 is missing
+        let f = p.lookup(100_000, 0, &[1, 2, 3]);
+        assert_eq!(f.blocks_hit, 1, "stop at first miss");
+    }
+
+    #[test]
+    fn dedup_drops_redundant_insert() {
+        let mut p = pool(1, 4);
+        p.insert(0, 0, &[1, 2], 16);
+        p.insert(0, 0, &[1, 2], 16);
+        assert_eq!(p.stats.inserts_deduped, 2);
+        assert_eq!(p.resident_blocks(), 2);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn capacity_enforced_with_eviction() {
+        // 64 MiB shard = 8 blocks of 8 MiB.
+        let mut p = DistKvPool::new(KvPoolConfig::new(vec![(0, 64 << 20)], 524_288, 16));
+        let keys: Vec<u64> = (0..20).collect();
+        p.insert(0, 0, &keys, 16);
+        assert!(p.resident_blocks() <= 8);
+        assert!(p.stats.evictions >= 12);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn scan_resistant_pool_keeps_hot_prefix() {
+        // Small pool: 16 blocks. Hot schema of 8 blocks + scan of 200
+        // distinct one-off blocks. With S3-FIFO the schema survives.
+        let mut p = DistKvPool::new(KvPoolConfig::new(vec![(0, 128 << 20)], 524_288, 16));
+        let hot: Vec<u64> = (1..=8).collect();
+        p.insert(0, 0, &hot, 16);
+        for round in 0..25u64 {
+            // Hot prefix accessed...
+            p.lookup(1_000_000 + round, 0, &hot);
+            // ...interleaved with distinct suffix blocks written back.
+            let scan: Vec<u64> = (0..8).map(|i| 1000 + round * 8 + i).collect();
+            p.insert(1_000_000 + round, 0, &scan, 16);
+        }
+        let f = p.lookup(10_000_000, 0, &hot);
+        assert_eq!(f.blocks_hit, 8, "hot schema must survive the scan");
+    }
+
+    #[test]
+    fn lru_pool_loses_hot_prefix_under_scan() {
+        let mut cfg = KvPoolConfig::new(vec![(0, 128 << 20)], 524_288, 16);
+        cfg.eviction = EvictionKind::Lru;
+        let mut p = DistKvPool::new(cfg);
+        let hot: Vec<u64> = (1..=8).collect();
+        p.insert(0, 0, &hot, 16);
+        for round in 0..25u64 {
+            // Scan *between* hot accesses, long enough to flush LRU.
+            let scan: Vec<u64> = (0..16).map(|i| 1000 + round * 16 + i).collect();
+            p.insert(1_000_000 + round, 0, &scan, 16);
+        }
+        let f = p.lookup(10_000_000, 0, &hot);
+        assert!(f.blocks_hit < 8, "LRU should have evicted some of the hot set");
+    }
+
+    #[test]
+    fn remote_writer_places_on_least_utilized() {
+        let mut p = pool(2, 4);
+        // Writer node 99 has no shard; placement balances.
+        p.insert(0, 99, &[1, 2, 3, 4], 16);
+        assert_eq!(p.resident_blocks(), 4);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn stats_hit_rate() {
+        let mut p = pool(1, 4);
+        p.insert(0, 0, &[1, 2], 16);
+        p.lookup(100_000, 0, &[1, 2, 3, 4]); // 2/4
+        assert!((p.stats.hit_rate() - 0.5).abs() < 1e-9);
+    }
+}

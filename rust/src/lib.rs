@@ -1,0 +1,36 @@
+//! # AIBrix (reproduction)
+//!
+//! Cloud-native LLM inference infrastructure, reproduced as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the entire control and
+//! data plane — gateway routing, LLM-specific autoscaling, the distributed
+//! KV-cache pool, high-density LoRA management, the SLO-driven GPU
+//! optimizer, mixed-grain orchestration, the unified AI runtime, and the
+//! accelerator diagnostics tools — plus every substrate they need (cluster
+//! object model, vLLM-like engine, workload generators, discrete-event
+//! simulator, JSON/CLI/bench/property-test support).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod autoscaler;
+pub mod airuntime;
+pub mod cli;
+pub mod cluster;
+pub mod diagnostics;
+pub mod engine;
+pub mod experiments;
+pub mod gateway;
+pub mod harness;
+pub mod json;
+pub mod kvcache;
+pub mod lora;
+pub mod metrics;
+pub mod optimizer;
+pub mod pt;
+pub mod orchestration;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,289 @@
+//! High-density LoRA management (§3.2.1, Figure 2).
+//!
+//! The paper's LoRA story: adapters are *dynamically registered* CRDs
+//! (ModelAdapter), a controller reconciles them onto base-model pods with
+//! high density (many adapters per pod), service discovery exposes
+//! adapter -> pod endpoints (the K8s Service/EndpointSlice mechanism), and
+//! the router uses that plus residency for LoRA-aware routing
+//! (gateway::Router::lora_affinity). The engine side (residency LRU and
+//! load penalties) lives in `engine::sim_engine`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// ModelAdapter custom resource.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterSpec {
+    pub name: String,
+    pub base_model: String,
+    pub rank: u32,
+    pub size_mb: u64,
+    /// Minimum pods that must expose this adapter.
+    pub min_replicas: usize,
+    /// Expected share of traffic (popularity weight for balancing).
+    pub weight: f64,
+}
+
+impl AdapterSpec {
+    pub fn new(name: &str, base_model: &str) -> AdapterSpec {
+        AdapterSpec {
+            name: name.to_string(),
+            base_model: base_model.to_string(),
+            rank: 16,
+            size_mb: 64,
+            min_replicas: 1,
+            weight: 1.0,
+        }
+    }
+}
+
+/// Reconciliation actions the controller emits (applied by the AI runtime
+/// sidecar against the engine's dynamic-LoRA API).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlacementAction {
+    Load { pod: u64, adapter: String },
+    Unload { pod: u64, adapter: String },
+}
+
+/// A serving pod from the controller's perspective.
+#[derive(Debug, Clone)]
+pub struct PodInfo {
+    pub id: u64,
+    pub base_model: String,
+    pub ready: bool,
+}
+
+/// The LoRA adapter controller.
+///
+/// Placement objective (high density): every adapter reaches its
+/// `min_replicas` while (a) respecting `max_per_pod` slots, (b) balancing
+/// *popularity weight* across pods to minimize interference, and
+/// (c) minimizing churn (existing placements are kept when legal).
+#[derive(Debug, Default)]
+pub struct LoraController {
+    adapters: BTreeMap<String, AdapterSpec>,
+    /// adapter -> pods currently exposing it.
+    placements: BTreeMap<String, BTreeSet<u64>>,
+    pub max_per_pod: usize,
+}
+
+impl LoraController {
+    pub fn new(max_per_pod: usize) -> LoraController {
+        LoraController { max_per_pod, ..Default::default() }
+    }
+
+    /// Register (or update) an adapter — the dynamic path the paper adds
+    /// over static attachment.
+    pub fn register(&mut self, spec: AdapterSpec) {
+        self.adapters.insert(spec.name.clone(), spec);
+    }
+
+    /// Deregister: next reconcile unloads it everywhere.
+    pub fn deregister(&mut self, name: &str) {
+        self.adapters.remove(name);
+    }
+
+    pub fn adapters(&self) -> impl Iterator<Item = &AdapterSpec> {
+        self.adapters.values()
+    }
+
+    /// EndpointSlice-style discovery: pods exposing `adapter`.
+    pub fn endpoints(&self, adapter: &str) -> Vec<u64> {
+        self.placements
+            .get(adapter)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Adapters placed on `pod` (what the sidecar should ensure loaded).
+    pub fn adapters_on(&self, pod: u64) -> Vec<String> {
+        self.placements
+            .iter()
+            .filter(|(_, pods)| pods.contains(&pod))
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    /// Reconcile placements against the current pod set; returns actions.
+    pub fn reconcile(&mut self, pods: &[PodInfo]) -> Vec<PlacementAction> {
+        let mut actions = Vec::new();
+        let ready: Vec<&PodInfo> = pods.iter().filter(|p| p.ready).collect();
+
+        // Drop placements for deregistered adapters or gone pods.
+        let pod_ids: BTreeSet<u64> = ready.iter().map(|p| p.id).collect();
+        let stale: Vec<String> = self
+            .placements
+            .keys()
+            .filter(|a| !self.adapters.contains_key(*a))
+            .cloned()
+            .collect();
+        for a in stale {
+            for pod in self.placements.remove(&a).unwrap() {
+                actions.push(PlacementAction::Unload { pod, adapter: a.clone() });
+            }
+        }
+        for (a, pods) in self.placements.iter_mut() {
+            let gone: Vec<u64> = pods.iter().filter(|p| !pod_ids.contains(p)).copied().collect();
+            for p in gone {
+                pods.remove(&p);
+                // Pod is gone — no unload action needed, but record intent
+                // for observability symmetry.
+                let _ = a;
+            }
+        }
+
+        // Per-pod weight/slots bookkeeping.
+        let mut slots: BTreeMap<u64, usize> = pod_ids.iter().map(|&p| (p, 0)).collect();
+        let mut weights: BTreeMap<u64, f64> = pod_ids.iter().map(|&p| (p, 0.0)).collect();
+        for (a, pods) in &self.placements {
+            if let Some(spec) = self.adapters.get(a) {
+                for p in pods {
+                    *slots.entry(*p).or_default() += 1;
+                    *weights.entry(*p).or_default() += spec.weight;
+                }
+            }
+        }
+
+        // Place under-replicated adapters, heaviest first.
+        let mut order: Vec<AdapterSpec> = self.adapters.values().cloned().collect();
+        order.sort_by(|a, b| b.weight.partial_cmp(&a.weight).unwrap());
+        for spec in order {
+            let placed = self.placements.entry(spec.name.clone()).or_default();
+            while placed.len() < spec.min_replicas.min(ready.len()) {
+                // Eligible: right base model, has a slot, not already placed.
+                let candidate = ready
+                    .iter()
+                    .filter(|p| {
+                        p.base_model == spec.base_model
+                            && !placed.contains(&p.id)
+                            && slots.get(&p.id).copied().unwrap_or(0) < self.max_per_pod
+                    })
+                    .min_by(|a, b| {
+                        weights[&a.id]
+                            .partial_cmp(&weights[&b.id])
+                            .unwrap()
+                            .then(slots[&a.id].cmp(&slots[&b.id]))
+                    });
+                let Some(pod) = candidate else { break };
+                placed.insert(pod.id);
+                *slots.get_mut(&pod.id).unwrap() += 1;
+                *weights.get_mut(&pod.id).unwrap() += spec.weight;
+                actions.push(PlacementAction::Load { pod: pod.id, adapter: spec.name.clone() });
+            }
+        }
+        actions
+    }
+
+    /// Total placements (density metric).
+    pub fn total_placements(&self) -> usize {
+        self.placements.values().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pods(n: u64) -> Vec<PodInfo> {
+        (0..n)
+            .map(|id| PodInfo { id, base_model: "llama-8b".into(), ready: true })
+            .collect()
+    }
+
+    #[test]
+    fn places_adapter_on_registration() {
+        let mut c = LoraController::new(4);
+        c.register(AdapterSpec::new("lora-a", "llama-8b"));
+        let actions = c.reconcile(&pods(2));
+        assert_eq!(actions.len(), 1);
+        assert!(matches!(&actions[0], PlacementAction::Load { adapter, .. } if adapter == "lora-a"));
+        assert_eq!(c.endpoints("lora-a").len(), 1);
+    }
+
+    #[test]
+    fn respects_min_replicas() {
+        let mut c = LoraController::new(4);
+        let mut s = AdapterSpec::new("lora-a", "llama-8b");
+        s.min_replicas = 3;
+        c.register(s);
+        c.reconcile(&pods(4));
+        assert_eq!(c.endpoints("lora-a").len(), 3);
+    }
+
+    #[test]
+    fn high_density_packing_balances_weight() {
+        let mut c = LoraController::new(8);
+        for i in 0..8 {
+            let mut s = AdapterSpec::new(&format!("lora-{i}"), "llama-8b");
+            s.weight = if i < 2 { 10.0 } else { 1.0 }; // two hot adapters
+            c.register(s);
+        }
+        c.reconcile(&pods(2));
+        // The two hot adapters must land on different pods.
+        let hot0 = c.endpoints("lora-0");
+        let hot1 = c.endpoints("lora-1");
+        assert_ne!(hot0, hot1, "hot adapters should not share a pod");
+        assert_eq!(c.total_placements(), 8);
+    }
+
+    #[test]
+    fn max_per_pod_enforced() {
+        let mut c = LoraController::new(2);
+        for i in 0..5 {
+            c.register(AdapterSpec::new(&format!("lora-{i}"), "llama-8b"));
+        }
+        c.reconcile(&pods(2));
+        // Only 4 slots exist.
+        assert_eq!(c.total_placements(), 4);
+        for p in 0..2 {
+            assert!(c.adapters_on(p).len() <= 2);
+        }
+    }
+
+    #[test]
+    fn deregister_unloads() {
+        let mut c = LoraController::new(4);
+        c.register(AdapterSpec::new("lora-a", "llama-8b"));
+        c.reconcile(&pods(1));
+        c.deregister("lora-a");
+        let actions = c.reconcile(&pods(1));
+        assert!(actions
+            .iter()
+            .any(|a| matches!(a, PlacementAction::Unload { adapter, .. } if adapter == "lora-a")));
+        assert!(c.endpoints("lora-a").is_empty());
+    }
+
+    #[test]
+    fn wrong_base_model_not_placed() {
+        let mut c = LoraController::new(4);
+        c.register(AdapterSpec::new("lora-q", "qwen-7b"));
+        let actions = c.reconcile(&pods(3));
+        assert!(actions.is_empty());
+        assert!(c.endpoints("lora-q").is_empty());
+    }
+
+    #[test]
+    fn pod_loss_triggers_replacement() {
+        let mut c = LoraController::new(4);
+        let mut s = AdapterSpec::new("lora-a", "llama-8b");
+        s.min_replicas = 2;
+        c.register(s);
+        c.reconcile(&pods(3));
+        let before = c.endpoints("lora-a");
+        assert_eq!(before.len(), 2);
+        // Pod 0 disappears.
+        let remaining: Vec<PodInfo> = pods(3).into_iter().filter(|p| p.id != before[0]).collect();
+        let actions = c.reconcile(&remaining);
+        assert_eq!(c.endpoints("lora-a").len(), 2, "replaced on another pod");
+        assert!(actions.iter().any(|a| matches!(a, PlacementAction::Load { .. })));
+    }
+
+    #[test]
+    fn reconcile_is_idempotent() {
+        let mut c = LoraController::new(4);
+        c.register(AdapterSpec::new("lora-a", "llama-8b"));
+        let first = c.reconcile(&pods(2));
+        assert!(!first.is_empty());
+        let second = c.reconcile(&pods(2));
+        assert!(second.is_empty(), "no churn on steady state: {second:?}");
+    }
+}

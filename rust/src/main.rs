@@ -1,0 +1,225 @@
+//! `aibrix` — the leader binary.
+//!
+//! Subcommands:
+//!   serve        real HTTP serving of the AOT-compiled TinyLM (PJRT)
+//!   bench-table1 Table 1 (distributed KV cache)
+//!   bench-routing, bench-autoscaling, bench-fig7, bench-hetero
+//!   optimize     one-shot GPU-optimizer recommendation for a demand spec
+//!   diagnose     run the accelerator diagnostic over injected faults
+//!
+//! Every bench subcommand mirrors a `cargo bench` target (DESIGN.md §6).
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use aibrix::cli::Args;
+use aibrix::cluster::GpuKind;
+use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
+use aibrix::engine::real::{RealEngineHandle, RealRequest};
+use aibrix::engine::ModelSpec;
+use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
+use aibrix::json::{parse, Json};
+use aibrix::optimizer::loadmonitor::LoadMonitor;
+use aibrix::optimizer::profiles::{ProfileTable, Slo};
+use aibrix::optimizer::GpuOptimizer;
+use aibrix::server::{Handler, HttpRequest, HttpResponse, HttpServer};
+use aibrix::tokenizer::Tokenizer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("bench-table1") => {
+            let mut p = table1::Table1Params::default();
+            p.workload.n_requests = args.get("requests", 640).unwrap_or(640);
+            println!("{}", table1::render(&table1::run_table1(&p)));
+            0
+        }
+        Some("bench-routing") => {
+            let p = routing::RoutingParams::default();
+            println!("{}", routing::render(&routing::run_routing(&p)));
+            0
+        }
+        Some("bench-autoscaling") => {
+            let cfg = aibrix::autoscaler::simulate::ScalingSimConfig::default_burst();
+            println!("{}", scaling::render(&scaling::run_scaling(&cfg)));
+            0
+        }
+        Some("bench-fig7") => {
+            let f = fig7::run_fig7();
+            println!("{}", fig7::render_fig7a(&f));
+            println!("{}", fig7::render_fig7b(&f));
+            0
+        }
+        Some("bench-hetero") => {
+            let p = hetero::HeteroParams::default();
+            let (het, homo) = hetero::run_hetero(&p);
+            println!("{}", hetero::render(&het, &homo));
+            0
+        }
+        Some("optimize") => cmd_optimize(&args),
+        Some("diagnose") => cmd_diagnose(),
+        _ => {
+            eprintln!(
+                "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Real serving: HTTP front over a dedicated PJRT engine thread, an
+/// OpenAI-ish /v1/completions surface plus /metrics and /healthz.
+fn cmd_serve(args: &Args) -> i32 {
+    let artifacts = PathBuf::from(args.str_flag("artifacts").unwrap_or("artifacts"));
+    let port: u16 = args.get("port", 8100).unwrap_or(8100);
+    let engine = match RealEngineHandle::spawn(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!(
+                "failed to load artifacts from {artifacts:?}: {e}\nrun `make artifacts` first"
+            );
+            return 1;
+        }
+    };
+    println!(
+        "loaded tinylm: vocab={} max_prompt={} max_new={}",
+        engine.vocab, engine.max_prompt, engine.max_new_tokens
+    );
+    let max_prompt = engine.max_prompt;
+    let max_new = engine.max_new_tokens;
+    let tokenizer = Tokenizer::new(engine.vocab as u32);
+    let served = Arc::new(Mutex::new(0u64));
+    let next_id = Arc::new(Mutex::new(0u64));
+
+    let handler: Handler = Arc::new(move |req: &HttpRequest| {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => HttpResponse::text(200, "ok"),
+            ("GET", "/metrics") => {
+                let n = *served.lock().unwrap();
+                HttpResponse::text(200, &format!("aibrix_completions_total {n}\n"))
+            }
+            ("POST", "/v1/completions") => {
+                let Ok(body) = parse(&req.body_str()) else {
+                    return HttpResponse::json(400, r#"{"error":"invalid json"}"#);
+                };
+                let Some(prompt) = body["prompt"].as_str() else {
+                    return HttpResponse::json(400, r#"{"error":"missing prompt"}"#);
+                };
+                let max_tokens = body["max_tokens"].as_usize().unwrap_or(16).clamp(1, max_new);
+                let mut tokens = tokenizer.encode(prompt);
+                tokens.truncate(max_prompt);
+                if tokens.is_empty() {
+                    tokens.push(tokenizer.bos());
+                }
+                let id = {
+                    let mut n = next_id.lock().unwrap();
+                    *n += 1;
+                    *n
+                };
+                let completion =
+                    engine.serve(RealRequest { id, tokens, max_new_tokens: max_tokens });
+                match completion {
+                    Ok(c) => {
+                        *served.lock().unwrap() += 1;
+                        let text = tokenizer.decode(&c.generated);
+                        let out = Json::obj([
+                            ("id", Json::from(format!("cmpl-{id}"))),
+                            ("object", Json::from("text_completion")),
+                            ("model", Json::from("tinylm")),
+                            ("text", Json::from(text)),
+                            (
+                                "usage",
+                                Json::obj([
+                                    ("completion_tokens", Json::from(c.generated.len())),
+                                    ("latency_us", Json::from(c.latency_us())),
+                                ]),
+                            ),
+                        ]);
+                        HttpResponse::json(200, &out.to_string())
+                    }
+                    Err(err) => HttpResponse::json(500, &format!(r#"{{"error":"{err}"}}"#)),
+                }
+            }
+            _ => HttpResponse::text(404, "not found"),
+        }
+    });
+
+    let server = match HttpServer::start(&format!("127.0.0.1:{port}"), 4, handler) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            return 1;
+        }
+    };
+    println!("serving tinylm on http://{}  (Ctrl-C to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// One-shot optimizer recommendation for a synthetic demand description:
+/// `aibrix optimize --rps 10 --input 400 --output 100 [--gpus A10,L20]`.
+fn cmd_optimize(args: &Args) -> i32 {
+    let rps: f64 = args.get("rps", 8.0).unwrap_or(8.0);
+    let input: usize = args.get("input", 400).unwrap_or(400);
+    let output: usize = args.get("output", 100).unwrap_or(100);
+    let gpus: Vec<GpuKind> = args
+        .str_flag("gpus")
+        .unwrap_or("A10,L20,V100")
+        .split(',')
+        .filter_map(GpuKind::parse)
+        .collect();
+    let model = ModelSpec::deepseek_coder_7b();
+    let profiles = ProfileTable::build(&model, &gpus, Slo::default());
+    let mut opt = GpuOptimizer::new(profiles, gpus);
+    let mut monitor = LoadMonitor::new();
+    for _ in 0..(rps * 10.0) as usize {
+        monitor.record(input, output, 1.0);
+    }
+    opt.monitor = monitor;
+    let rec = opt.recommend();
+    println!("demand: {rps} req/s of ({input} in, {output} out) tokens");
+    for (g, n) in &rec {
+        println!("  {}: {} replicas", g.name(), n);
+    }
+    println!("cost: ${:.2}/hr", opt.cost_per_hour(&rec));
+    0
+}
+
+/// Inject every mockable fault and show the diagnostic verdicts.
+fn cmd_diagnose() -> i32 {
+    let mut inj = FailureInjector::new();
+    let faults = [
+        InjectedFault::XidFatal,
+        InjectedFault::EccUncorrectable,
+        InjectedFault::Overheat,
+        InjectedFault::ClockSag,
+        InjectedFault::NvlinkErrors,
+    ];
+    for (i, &f) in faults.iter().enumerate() {
+        inj.inject(0, i as u32, f);
+    }
+    println!("{:<22} {:<26} {:<10} {:?}", "injected", "diagnosed", "severity", "action");
+    for (i, &f) in faults.iter().enumerate() {
+        let t = inj.sample(0, i as u32, 0);
+        for d in diagnose(&t) {
+            println!(
+                "{:<22} {:<26} {:<10} {:?}",
+                format!("{f:?}"),
+                format!("{:?}", d.fault),
+                format!("{:?}", d.severity),
+                d.action
+            );
+        }
+    }
+    0
+}

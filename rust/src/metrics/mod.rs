@@ -1,0 +1,83 @@
+//! Metrics: histograms and the paper's sliding-window aggregator.
+//!
+//! §3.2.4: AIBrix "bypasses the custom metrics path and maintains sliding
+//! window metric aggregation directly in the autoscaler for real-time load
+//! reporting" — [`SlidingWindow`] is that component. The native-HPA baseline
+//! instead reads metrics through a delayed custom-metrics pipeline, modeled
+//! in `autoscaler/` by sampling the window with a propagation lag.
+
+mod histogram;
+mod window;
+
+pub use histogram::Histogram;
+pub use window::SlidingWindow;
+
+use std::collections::BTreeMap;
+
+/// A process-wide registry of named counters/gauges, for observability
+/// surfaces (`/metrics`, AI runtime sidecar).
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_counter_and_gauge() {
+        let mut r = Registry::new();
+        r.inc("requests_total", 1);
+        r.inc("requests_total", 2);
+        r.set_gauge("kv_util", 0.5);
+        assert_eq!(r.counter("requests_total"), 3);
+        assert_eq!(r.gauge("kv_util"), 0.5);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn render_exposition() {
+        let mut r = Registry::new();
+        r.inc("a_total", 5);
+        r.set_gauge("b", 1.5);
+        let text = r.render();
+        assert!(text.contains("a_total 5"));
+        assert!(text.contains("b 1.5"));
+    }
+}

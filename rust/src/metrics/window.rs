@@ -1,0 +1,156 @@
+//! Sliding-window metric aggregation (§3.2.4).
+//!
+//! The autoscaler ingests raw samples (e.g. KV-cache utilization, running
+//! request counts) tagged with sim timestamps; queries aggregate over a
+//! trailing window. This is AIBrix's replacement for the K8s custom-metrics
+//! pipeline, which adds tens of seconds of propagation delay — here the
+//! freshest sample is visible immediately.
+//!
+//! Implementation: ring buffer of (time, value) with lazy eviction on both
+//! push and query; O(1) amortized push, O(n_window) aggregate.
+
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// Trailing-window aggregator over timestamped f64 samples.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    window: u64,
+    samples: VecDeque<(SimTime, f64)>,
+    /// Running sum for O(1) mean — rebuilt on eviction drift.
+    sum: f64,
+}
+
+impl SlidingWindow {
+    /// `window`: trailing duration in the same unit as the timestamps.
+    pub fn new(window: u64) -> Self {
+        assert!(window > 0);
+        SlidingWindow { window, samples: VecDeque::new(), sum: 0.0 }
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Record a sample at `now`. Timestamps must be non-decreasing.
+    pub fn record(&mut self, now: SimTime, value: f64) {
+        debug_assert!(
+            self.samples.back().map(|&(t, _)| t <= now).unwrap_or(true),
+            "samples must arrive in time order"
+        );
+        self.samples.push_back((now, value));
+        self.sum += value;
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: SimTime) {
+        let cutoff = now.saturating_sub(self.window);
+        while let Some(&(t, v)) = self.samples.front() {
+            if t < cutoff {
+                self.samples.pop_front();
+                self.sum -= v;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Number of live samples as of `now`.
+    pub fn len(&mut self, now: SimTime) -> usize {
+        self.evict(now);
+        self.samples.len()
+    }
+
+    pub fn is_empty(&mut self, now: SimTime) -> bool {
+        self.len(now) == 0
+    }
+
+    /// Mean over the live window; None when empty.
+    pub fn mean(&mut self, now: SimTime) -> Option<f64> {
+        self.evict(now);
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.sum / self.samples.len() as f64)
+        }
+    }
+
+    /// Max over the live window; None when empty.
+    pub fn max(&mut self, now: SimTime) -> Option<f64> {
+        self.evict(now);
+        self.samples
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Most recent sample value.
+    pub fn last(&self) -> Option<f64> {
+        self.samples.back().map(|&(_, v)| v)
+    }
+
+    /// Sum of samples in the window divided by window length — a rate, for
+    /// count-style samples (e.g. tokens admitted).
+    pub fn rate_per_unit(&mut self, now: SimTime) -> f64 {
+        self.evict(now);
+        self.sum / self.window as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_over_window_only() {
+        let mut w = SlidingWindow::new(100);
+        w.record(0, 10.0);
+        w.record(50, 20.0);
+        assert_eq!(w.mean(50), Some(15.0));
+        // At t=150 the t=0 sample (age 150 > 100) is gone; t=50 (age 100) stays.
+        assert_eq!(w.mean(150), Some(20.0));
+        // At t=151 the t=50 sample ages out too.
+        assert_eq!(w.mean(151), None);
+    }
+
+    #[test]
+    fn max_and_last() {
+        let mut w = SlidingWindow::new(10);
+        w.record(0, 5.0);
+        w.record(1, 9.0);
+        w.record(2, 3.0);
+        assert_eq!(w.max(2), Some(9.0));
+        assert_eq!(w.last(), Some(3.0));
+        assert_eq!(w.max(20), None);
+    }
+
+    #[test]
+    fn sum_tracks_eviction_exactly() {
+        let mut w = SlidingWindow::new(5);
+        for t in 0..1_000u64 {
+            w.record(t, (t % 7) as f64);
+        }
+        // Recompute from scratch and compare.
+        let expected: f64 = (995..1_000).map(|t| (t % 7) as f64).sum::<f64>() + 0.0;
+        let live: f64 = w.mean(999).unwrap() * w.len(999) as f64;
+        assert!((live - expected).abs() < 1e-9, "{live} vs {expected}");
+    }
+
+    #[test]
+    fn rate_per_unit() {
+        let mut w = SlidingWindow::new(1_000);
+        for t in [100u64, 200, 300, 400] {
+            w.record(t, 250.0); // 250 tokens each
+        }
+        // 1000 tokens over a 1000-unit window = 1 token/unit.
+        assert!((w.rate_per_unit(400) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let mut w = SlidingWindow::new(10);
+        assert_eq!(w.mean(0), None);
+        assert_eq!(w.last(), None);
+        assert!(w.is_empty(0));
+    }
+}

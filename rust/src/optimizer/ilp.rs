@@ -1,0 +1,429 @@
+//! The Mélange-style ILP, solved exactly.
+//!
+//! Decision: how much of each token-bin's demand each GPU type serves, and
+//! how many GPUs of each type to buy. Formally:
+//!
+//!   minimize   Σ_g  price_g · n_g
+//!   subject to Σ_g  x_{g,b} = demand_b            (demand met)
+//!              Σ_b  x_{g,b} / rps_{g,b} ≤ n_g     (capacity, SLO-profiled)
+//!              n_g ≤ max_replicas, n_g ∈ ℤ≥0, x ≥ 0
+//!
+//! With bins assigned *fractionally*, for fixed assignment the optimal
+//! n_g = ceil(load_g). We branch-and-bound over per-bin assignment among
+//! GPU types (bins ≤ 24, types ≤ 4), with a fractional lower bound: the
+//! remaining bins' cheapest possible cost (no ceiling) plus current loads.
+//! Exactness is validated against brute force in the tests.
+
+use super::loadmonitor::DemandVector;
+use super::profiles::{ProfileTable, TokenBin};
+use crate::cluster::{GpuKind, GpuSpec};
+
+/// Prepared problem: per-bin demand and per-(gpu,bin) service rates.
+#[derive(Debug, Clone)]
+pub struct IlpProblem {
+    pub gpus: Vec<GpuKind>,
+    pub prices: Vec<f64>,
+    pub bins: Vec<TokenBin>,
+    pub demand: Vec<f64>,
+    /// rps[g][b]: profiled max requests/s (0 = infeasible pairing).
+    pub rps: Vec<Vec<f64>>,
+    pub max_replicas: usize,
+}
+
+impl IlpProblem {
+    pub fn build(
+        profiles: &ProfileTable,
+        gpus: &[GpuKind],
+        demand: &DemandVector,
+        max_replicas: usize,
+    ) -> IlpProblem {
+        let bins: Vec<TokenBin> = demand.keys().copied().collect();
+        let d: Vec<f64> = bins.iter().map(|b| demand[b]).collect();
+        let rps = gpus
+            .iter()
+            .map(|&g| {
+                bins.iter()
+                    .map(|&b| profiles.get(g, b).map(|p| p.max_rps).unwrap_or(0.0))
+                    .collect()
+            })
+            .collect();
+        IlpProblem {
+            gpus: gpus.to_vec(),
+            prices: gpus.iter().map(|&g| GpuSpec::of(g).dollars_per_hour).collect(),
+            bins,
+            demand: d,
+            rps,
+            max_replicas,
+        }
+    }
+}
+
+/// Ceil with epsilon tolerance: backtracking accumulates tiny float
+/// residues in the load vector; without this, ceil(1e-16) = 1 buys a GPU
+/// for nothing and corrupts the search.
+#[inline]
+fn iceil(l: f64) -> f64 {
+    (l - 1e-9).ceil().max(0.0)
+}
+
+/// Solver output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IlpSolution {
+    /// GPUs per type (aligned with problem.gpus).
+    pub counts: Vec<usize>,
+    /// assignment[b] = gpu index serving bin b (whole-bin assignment).
+    pub assignment: Vec<usize>,
+    pub cost_per_hour: f64,
+    pub feasible: bool,
+}
+
+/// Exact branch-and-bound over whole-bin assignments.
+pub fn solve(problem: &IlpProblem) -> IlpSolution {
+    let nb = problem.bins.len();
+    let ng = problem.gpus.len();
+    if nb == 0 {
+        return IlpSolution { counts: vec![0; ng], assignment: vec![], cost_per_hour: 0.0, feasible: true };
+    }
+
+    // Order bins by demand (largest first) for better pruning.
+    let mut order: Vec<usize> = (0..nb).collect();
+    order.sort_by(|&a, &b| problem.demand[b].partial_cmp(&problem.demand[a]).unwrap());
+
+    // Cheapest fractional $/rps per bin (lower-bound helper).
+    let frac_floor: Vec<f64> = (0..nb)
+        .map(|b| {
+            (0..ng)
+                .filter(|&g| problem.rps[g][b] > 0.0)
+                .map(|g| problem.prices[g] / problem.rps[g][b] * problem.demand[b])
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    if frac_floor.iter().any(|f| f.is_infinite()) {
+        // Some bin is unservable by every GPU type.
+        return IlpSolution {
+            counts: vec![0; ng],
+            assignment: vec![usize::MAX; nb],
+            cost_per_hour: f64::INFINITY,
+            feasible: false,
+        };
+    }
+    // Suffix sums of fractional floors in search order.
+    let mut floor_suffix = vec![0.0; nb + 1];
+    for i in (0..nb).rev() {
+        floor_suffix[i] = floor_suffix[i + 1] + frac_floor[order[i]];
+    }
+
+    struct Search<'a> {
+        p: &'a IlpProblem,
+        order: &'a [usize],
+        floor_suffix: &'a [f64],
+        best_cost: f64,
+        best: Option<(Vec<usize>, Vec<usize>)>,
+        loads: Vec<f64>,
+        assignment: Vec<usize>,
+    }
+
+    impl Search<'_> {
+        fn cost_of(&self, loads: &[f64]) -> f64 {
+            loads
+                .iter()
+                .zip(&self.p.prices)
+                .map(|(&l, &pr)| iceil(l) * pr)
+                .sum()
+        }
+
+        fn dfs(&mut self, depth: usize) {
+            if depth == self.order.len() {
+                let cost = self.cost_of(&self.loads);
+                let max_ok = self
+                    .loads
+                    .iter()
+                    .all(|&l| (iceil(l) as usize) <= self.p.max_replicas);
+                if max_ok && cost < self.best_cost - 1e-9 {
+                    self.best_cost = cost;
+                    self.best = Some((
+                        self.loads.iter().map(|l| iceil(*l) as usize).collect(),
+                        self.assignment.clone(),
+                    ));
+                }
+                return;
+            }
+            // Admissible lower bound on any completion of this partial
+            // assignment: final cost >= Σ ceil(load_g)·p_g (ceilings only
+            // grow) AND final cost >= Σ load_g·p_g + fractional floor of
+            // every remaining bin (ceil(x) >= x). Prune on the max.
+            let committed_ceil = self.cost_of(&self.loads);
+            let committed_frac: f64 = self
+                .loads
+                .iter()
+                .zip(&self.p.prices)
+                .map(|(&l, &pr)| l * pr)
+                .sum();
+            let bound = committed_ceil.max(committed_frac + self.floor_suffix[depth]);
+            if bound >= self.best_cost - 1e-9 {
+                return;
+            }
+            let b = self.order[depth];
+            // Try cheapest $/req GPU first: good incumbents early = more
+            // pruning later.
+            let mut gs: Vec<usize> = (0..self.p.gpus.len())
+                .filter(|&g| self.p.rps[g][b] > 0.0)
+                .collect();
+            gs.sort_by(|&x, &y| {
+                (self.p.prices[x] / self.p.rps[x][b])
+                    .partial_cmp(&(self.p.prices[y] / self.p.rps[y][b]))
+                    .unwrap()
+            });
+            for g in gs {
+                let add = self.p.demand[b] / self.p.rps[g][b];
+                self.loads[g] += add;
+                if iceil(self.loads[g]) as usize <= self.p.max_replicas {
+                    self.assignment[b] = g;
+                    self.dfs(depth + 1);
+                }
+                self.loads[g] -= add;
+            }
+        }
+    }
+
+    // Seed the incumbent with the greedy solution (upper bound).
+    let greedy = solve_greedy(problem);
+    let mut s = Search {
+        p: problem,
+        order: &order,
+        floor_suffix: &floor_suffix,
+        best_cost: if greedy.feasible
+            && greedy.counts.iter().all(|&n| n <= problem.max_replicas)
+        {
+            greedy.cost_per_hour + 1e-9
+        } else {
+            f64::INFINITY
+        },
+        best: if greedy.feasible
+            && greedy.counts.iter().all(|&n| n <= problem.max_replicas)
+        {
+            Some((greedy.counts.clone(), greedy.assignment.clone()))
+        } else {
+            None
+        },
+        loads: vec![0.0; ng],
+        assignment: vec![usize::MAX; nb],
+    };
+    s.dfs(0);
+
+    match s.best {
+        Some((counts, assignment)) => IlpSolution {
+            cost_per_hour: s.best_cost,
+            counts,
+            assignment,
+            feasible: true,
+        },
+        None => IlpSolution {
+            counts: vec![0; ng],
+            assignment: vec![usize::MAX; nb],
+            cost_per_hour: f64::INFINITY,
+            feasible: false,
+        },
+    }
+}
+
+/// Greedy baseline: assign each bin to its cheapest $/req GPU, then ceil.
+/// Used as an upper-bound sanity check and an ablation point.
+pub fn solve_greedy(problem: &IlpProblem) -> IlpSolution {
+    let nb = problem.bins.len();
+    let ng = problem.gpus.len();
+    let mut loads = vec![0.0; ng];
+    let mut assignment = vec![usize::MAX; nb];
+    for b in 0..nb {
+        let mut best = usize::MAX;
+        let mut best_cost = f64::INFINITY;
+        for g in 0..ng {
+            if problem.rps[g][b] > 0.0 {
+                let c = problem.prices[g] / problem.rps[g][b];
+                if c < best_cost {
+                    best_cost = c;
+                    best = g;
+                }
+            }
+        }
+        if best == usize::MAX {
+            return IlpSolution {
+                counts: vec![0; ng],
+                assignment,
+                cost_per_hour: f64::INFINITY,
+                feasible: false,
+            };
+        }
+        assignment[b] = best;
+        loads[best] += problem.demand[b] / problem.rps[best][b];
+    }
+    let counts: Vec<usize> = loads.iter().map(|l| iceil(*l) as usize).collect();
+    let cost = counts
+        .iter()
+        .zip(&problem.prices)
+        .map(|(&n, &p)| n as f64 * p)
+        .sum();
+    IlpSolution { counts, assignment, cost_per_hour: cost, feasible: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ModelSpec;
+    use crate::optimizer::profiles::Slo;
+
+    fn problem(demands: &[((u32, u32), f64)]) -> IlpProblem {
+        let profiles = ProfileTable::build(
+            &ModelSpec::deepseek_coder_7b(),
+            &[GpuKind::A10, GpuKind::L20],
+            Slo::default(),
+        );
+        let mut d = DemandVector::new();
+        for &((i, o), rps) in demands {
+            d.insert(TokenBin { input: i, output: o }, rps);
+        }
+        IlpProblem::build(&profiles, &[GpuKind::A10, GpuKind::L20], &d, 64)
+    }
+
+    /// Brute force over all assignments (exactness oracle).
+    fn brute(p: &IlpProblem) -> f64 {
+        let nb = p.bins.len();
+        let ng = p.gpus.len();
+        let mut best = f64::INFINITY;
+        let mut asg = vec![0usize; nb];
+        loop {
+            let mut loads = vec![0.0; ng];
+            let mut ok = true;
+            for b in 0..nb {
+                let g = asg[b];
+                if p.rps[g][b] <= 0.0 {
+                    ok = false;
+                    break;
+                }
+                loads[g] += p.demand[b] / p.rps[g][b];
+            }
+            if ok && loads.iter().all(|&l| l.ceil() as usize <= p.max_replicas) {
+                let c: f64 = loads
+                    .iter()
+                    .zip(&p.prices)
+                    .map(|(&l, &pr)| iceil(l) * pr)
+                    .sum();
+                best = best.min(c);
+            }
+            // Increment mixed-radix counter.
+            let mut i = 0;
+            loop {
+                if i == nb {
+                    return best;
+                }
+                asg[i] += 1;
+                if asg[i] < ng {
+                    break;
+                }
+                asg[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let p = problem(&[
+            ((100, 50), 3.0),
+            ((400, 100), 2.0),
+            ((1600, 200), 0.5),
+            ((200, 100), 4.0),
+            ((800, 400), 0.8),
+        ]);
+        let s = solve(&p);
+        assert!(s.feasible);
+        let b = brute(&p);
+        assert!((s.cost_per_hour - b).abs() < 1e-6, "bnb {} brute {}", s.cost_per_hour, b);
+    }
+
+    #[test]
+    fn never_worse_than_greedy() {
+        for seed in 0..5u64 {
+            let mut rng = crate::util::Rng::new(seed);
+            let mut demands: Vec<((u32, u32), f64)> = Vec::new();
+            for b in TokenBin::grid() {
+                if rng.chance(0.4) {
+                    demands.push(((b.input, b.output), rng.uniform(0.2, 6.0)));
+                }
+            }
+            if demands.is_empty() {
+                continue;
+            }
+            let p = problem(&demands);
+            let exact = solve(&p);
+            let greedy = solve_greedy(&p);
+            assert!(
+                exact.cost_per_hour <= greedy.cost_per_hour + 1e-9,
+                "seed {seed}: exact {} > greedy {}",
+                exact.cost_per_hour,
+                greedy.cost_per_hour
+            );
+        }
+    }
+
+    #[test]
+    fn solution_satisfies_demand_capacity() {
+        let p = problem(&[((100, 50), 5.0), ((1600, 400), 1.0)]);
+        let s = solve(&p);
+        assert!(s.feasible);
+        // Verify capacity: per-GPU load <= count.
+        let mut loads = vec![0.0; p.gpus.len()];
+        for (b, &g) in s.assignment.iter().enumerate() {
+            loads[g] += p.demand[b] / p.rps[g][b];
+        }
+        for (g, &l) in loads.iter().enumerate() {
+            assert!(l <= s.counts[g] as f64 + 1e-9, "gpu {g}: load {l} count {}", s.counts[g]);
+        }
+    }
+
+    #[test]
+    fn empty_demand_costs_nothing() {
+        let p = problem(&[]);
+        let s = solve(&p);
+        assert!(s.feasible);
+        assert_eq!(s.cost_per_hour, 0.0);
+    }
+
+    #[test]
+    fn infeasible_when_no_gpu_can_serve() {
+        // CPU-sim only, 7B model: infeasible.
+        let profiles = ProfileTable::build(
+            &ModelSpec::deepseek_coder_7b(),
+            &[GpuKind::CpuSim],
+            Slo::default(),
+        );
+        let mut d = DemandVector::new();
+        d.insert(TokenBin { input: 100, output: 50 }, 1.0);
+        let p = IlpProblem::build(&profiles, &[GpuKind::CpuSim], &d, 8);
+        assert!(!solve(&p).feasible);
+    }
+
+    #[test]
+    fn heterogeneous_mix_beats_homogeneous_for_mixed_demand() {
+        // The EXP-HET premise: mixed small+large demand served by A10+L20
+        // costs less than L20-only.
+        let p = problem(&[
+            ((100, 50), 8.0),   // small -> A10-friendly
+            ((1600, 400), 1.2), // large -> L20 (A10 can serve but poorly)
+        ]);
+        let het = solve(&p);
+        // Force homogeneous L20 by zeroing A10 rates.
+        let mut homo_p = p.clone();
+        for b in 0..homo_p.bins.len() {
+            homo_p.rps[0][b] = 0.0;
+        }
+        let homo = solve(&homo_p);
+        assert!(het.feasible && homo.feasible);
+        assert!(
+            het.cost_per_hour <= homo.cost_per_hour,
+            "het {} vs homo {}",
+            het.cost_per_hour,
+            homo.cost_per_hour
+        );
+    }
+}

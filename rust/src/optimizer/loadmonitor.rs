@@ -1,0 +1,128 @@
+//! Load monitor: dominant workload pattern from gateway statistics.
+//!
+//! "Load Monitor tracks deployment changes ... and analyzes AIBrix Gateway
+//! statistics to identify dominant workload patterns." Requests are
+//! bucketed into the profiling grid's token bins with exponentially decayed
+//! rates, yielding the demand vector the ILP consumes.
+
+use super::profiles::TokenBin;
+use std::collections::BTreeMap;
+
+/// Demand in requests/s per token bin.
+pub type DemandVector = BTreeMap<TokenBin, f64>;
+
+/// Decayed per-bin request-rate estimator.
+#[derive(Debug, Default)]
+pub struct LoadMonitor {
+    rates: BTreeMap<TokenBin, f64>,
+    /// Decay factor applied on `tick` (per aggregation period).
+    pub decay: f64,
+    window_s: f64,
+    pending: BTreeMap<TokenBin, u64>,
+}
+
+impl LoadMonitor {
+    pub fn new() -> LoadMonitor {
+        LoadMonitor { rates: BTreeMap::new(), decay: 0.5, window_s: 10.0, pending: BTreeMap::new() }
+    }
+
+    /// Record one observed request (from gateway stats or completions);
+    /// `weight` supports pre-aggregated counts.
+    pub fn record(&mut self, input_tokens: usize, output_tokens: usize, weight: f64) {
+        let bin = TokenBin::of(input_tokens, output_tokens);
+        *self.pending.entry(bin).or_insert(0) += weight as u64;
+    }
+
+    /// Close an aggregation window of `window_s` seconds, folding pending
+    /// counts into the decayed rates.
+    pub fn tick(&mut self) {
+        for (bin, n) in std::mem::take(&mut self.pending) {
+            let inst = n as f64 / self.window_s;
+            let r = self.rates.entry(bin).or_insert(0.0);
+            *r = *r * self.decay + inst * (1.0 - self.decay);
+        }
+        // Decay bins with no new traffic too.
+        for (bin, r) in self.rates.iter_mut() {
+            if !self.pending.contains_key(bin) {
+                *r *= self.decay;
+            }
+        }
+        self.rates.retain(|_, r| *r > 1e-6);
+    }
+
+    /// Demand vector: includes the un-ticked pending window so callers get
+    /// a usable estimate without explicit tick discipline.
+    pub fn demand(&self) -> DemandVector {
+        let mut d = self.rates.clone();
+        for (bin, n) in &self.pending {
+            let inst = *n as f64 / self.window_s;
+            let e = d.entry(*bin).or_insert(0.0);
+            *e = e.max(inst);
+        }
+        d
+    }
+
+    /// Total demand (rps) across bins.
+    pub fn total_rps(&self) -> f64 {
+        self.demand().values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_bucket_into_bins() {
+        let mut m = LoadMonitor::new();
+        for _ in 0..100 {
+            m.record(180, 60, 1.0);
+        }
+        let d = m.demand();
+        let bin = TokenBin::of(180, 60);
+        assert!(d[&bin] > 0.0);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn tick_smooths_rates() {
+        let mut m = LoadMonitor::new();
+        for _ in 0..100 {
+            m.record(100, 50, 1.0);
+        }
+        m.tick();
+        let r1 = m.total_rps();
+        // Silent window decays.
+        m.tick();
+        let r2 = m.total_rps();
+        assert!(r2 < r1);
+        assert!(r2 > 0.0);
+    }
+
+    #[test]
+    fn dominant_pattern_identified() {
+        let mut m = LoadMonitor::new();
+        for _ in 0..900 {
+            m.record(150, 40, 1.0); // dominant
+        }
+        for _ in 0..100 {
+            m.record(1500, 300, 1.0);
+        }
+        m.tick();
+        let d = m.demand();
+        let dom = TokenBin::of(150, 40);
+        let minor = TokenBin::of(1500, 300);
+        assert!(d[&dom] > 5.0 * d[&minor]);
+    }
+
+    #[test]
+    fn stale_bins_evicted() {
+        let mut m = LoadMonitor::new();
+        m.record(100, 50, 1.0);
+        m.tick();
+        for _ in 0..40 {
+            m.tick();
+        }
+        assert!(m.demand().is_empty());
+    }
+}

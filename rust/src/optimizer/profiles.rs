@@ -1,0 +1,240 @@
+//! Offline profiling tables: throughput and cost per (GPU, workload bin).
+//!
+//! The paper: "the GPU optimizer supports an ILP-based solution inspired by
+//! Melange, requiring pre-deployment profiling. AIBrix provides toolkits
+//! for workload benchmarking and profiling." Our profiler computes the same
+//! tables from the engine cost model (DESIGN.md §2 substitution): for a
+//! given model and GPU, the max sustainable request rate for requests of
+//! (input, output) tokens under a (TTFT, ITL) SLO — reproducing Figure 7a —
+//! and the implied $/1k-requests — reproducing Figure 7b's preference map.
+
+use crate::cluster::{GpuKind, GpuSpec};
+use crate::engine::{CostModel, ModelSpec};
+use std::collections::BTreeMap;
+
+/// Latency SLO for profiling.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    pub ttft_ms: f64,
+    pub itl_ms: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        // E2E-latency-oriented targets typical of interactive serving.
+        Slo { ttft_ms: 5_000.0, itl_ms: 120.0 }
+    }
+}
+
+/// (input, output) token bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TokenBin {
+    pub input: u32,
+    pub output: u32,
+}
+
+impl TokenBin {
+    /// Bucketize arbitrary lengths into the profiling grid.
+    pub fn of(input: usize, output: usize) -> TokenBin {
+        fn bucket(v: usize) -> u32 {
+            for b in [50u32, 100, 200, 400, 800, 1600, 3200] {
+                if v <= b as usize {
+                    return b;
+                }
+            }
+            6400
+        }
+        TokenBin { input: bucket(input), output: bucket(output) }
+    }
+
+    pub fn grid() -> Vec<TokenBin> {
+        let mut v = Vec::new();
+        for &i in &[50u32, 100, 200, 400, 800, 1600] {
+            for &o in &[50u32, 100, 200, 400] {
+                v.push(TokenBin { input: i, output: o });
+            }
+        }
+        v
+    }
+
+    /// Every bucket `of()` can produce — the profiler covers this so any
+    /// observed demand bin has an entry.
+    pub fn full_grid() -> Vec<TokenBin> {
+        const B: [u32; 8] = [50, 100, 200, 400, 800, 1600, 3200, 6400];
+        let mut v = Vec::new();
+        for &i in &B {
+            for &o in &B {
+                v.push(TokenBin { input: i, output: o });
+            }
+        }
+        v
+    }
+}
+
+/// Profiled capability of one GPU type for one bin.
+#[derive(Debug, Clone, Copy)]
+pub struct BinProfile {
+    /// Max sustainable requests/s under SLO (0 = infeasible).
+    pub max_rps: f64,
+    /// Max concurrent sequences used to reach it.
+    pub batch: usize,
+    /// $ per 1000 requests at full utilization.
+    pub dollars_per_kreq: f64,
+}
+
+/// The full (GPU x bin) profile table.
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    pub model: String,
+    pub slo: Slo,
+    entries: BTreeMap<(GpuKind, TokenBin), BinProfile>,
+}
+
+impl ProfileTable {
+    /// Profile `gpus` for `model` across the standard bin grid.
+    pub fn build(model: &ModelSpec, gpus: &[GpuKind], slo: Slo) -> ProfileTable {
+        let mut entries = BTreeMap::new();
+        for &g in gpus {
+            let cm = CostModel::new(g, model.clone());
+            for bin in TokenBin::full_grid() {
+                entries.insert((g, bin), Self::profile_bin(&cm, g, bin, slo));
+            }
+        }
+        ProfileTable { model: model.name.clone(), slo, entries }
+    }
+
+    /// Steady-state throughput model: at concurrency B, each request costs
+    /// the GPU `prefill(in)` exclusive compute (prefill steps serve one
+    /// request's prompt) plus `out` decode-token slots in steps shared by
+    /// the whole batch: GPU-time per request = prefill + out*step(B)/B, and
+    /// rps = 1 / that. Larger B always helps throughput (decode sharing),
+    /// so the largest B that honors the ITL SLO (step time) and the TTFT
+    /// SLO (prefill + one step) wins. This is where A10's better compute/$
+    /// (prefill-heavy small bins) vs L20's memory capacity (decode-heavy
+    /// large bins) produces the Figure 7b crossover.
+    fn profile_bin(cm: &CostModel, g: GpuKind, bin: TokenBin, slo: Slo) -> BinProfile {
+        let kv_cap = cm.kv_capacity_tokens();
+        let tokens_per_req = (bin.input + bin.output) as usize;
+        if kv_cap < tokens_per_req {
+            return BinProfile { max_rps: 0.0, batch: 0, dollars_per_kreq: f64::INFINITY };
+        }
+        let max_batch = (kv_cap / tokens_per_req).clamp(1, 256);
+        let prefill_us = cm.prefill_us(bin.input as usize, 0);
+        let mut b = max_batch;
+        while b >= 1 {
+            let kv_tokens = b * tokens_per_req;
+            let itl_us = cm.decode_step_us(b, kv_tokens);
+            if itl_us as f64 / 1e3 <= slo.itl_ms
+                && (prefill_us + itl_us) as f64 / 1e3 <= slo.ttft_ms
+            {
+                let gpu_time_per_req_us =
+                    prefill_us as f64 + bin.output as f64 * itl_us as f64 / b as f64;
+                let rps = 1e6 / gpu_time_per_req_us;
+                let dollars_per_s = GpuSpec::of(g).dollars_per_hour / 3600.0;
+                return BinProfile {
+                    max_rps: rps,
+                    batch: b,
+                    dollars_per_kreq: dollars_per_s / rps * 1000.0,
+                };
+            }
+            // Shrink until the ITL SLO holds.
+            b -= (b / 4).max(1);
+        }
+        BinProfile { max_rps: 0.0, batch: 0, dollars_per_kreq: f64::INFINITY }
+    }
+
+    pub fn get(&self, gpu: GpuKind, bin: TokenBin) -> Option<BinProfile> {
+        self.entries.get(&(gpu, bin)).copied()
+    }
+
+    /// Cheapest feasible GPU for a bin — the Figure 7b map.
+    pub fn best_gpu(&self, bin: TokenBin, gpus: &[GpuKind]) -> Option<GpuKind> {
+        gpus.iter()
+            .filter_map(|&g| {
+                let p = self.get(g, bin)?;
+                if p.max_rps > 0.0 {
+                    Some((g, p.dollars_per_kreq))
+                } else {
+                    None
+                }
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(g, _)| g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ProfileTable {
+        ProfileTable::build(
+            &ModelSpec::deepseek_coder_7b(),
+            &[GpuKind::A10, GpuKind::L20, GpuKind::V100],
+            Slo::default(),
+        )
+    }
+
+    #[test]
+    fn grid_fully_profiled() {
+        let t = table();
+        for bin in TokenBin::grid() {
+            for g in [GpuKind::A10, GpuKind::L20, GpuKind::V100] {
+                assert!(t.get(g, bin).is_some(), "{g:?} {bin:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn l20_outthroughputs_a10_on_long_workloads() {
+        // Fig 7a shape: L20's 48GiB allows far larger batches for the 7B
+        // model, so its throughput on long (in, out) dominates.
+        let t = table();
+        let long = TokenBin { input: 1600, output: 400 };
+        let a10 = t.get(GpuKind::A10, long).unwrap();
+        let l20 = t.get(GpuKind::L20, long).unwrap();
+        assert!(l20.max_rps > a10.max_rps, "l20 {} a10 {}", l20.max_rps, a10.max_rps);
+    }
+
+    #[test]
+    fn v100_infeasible_or_poor_for_7b() {
+        // 16GiB cannot hold meaningful KV beyond the 13.4GB weights.
+        let t = table();
+        let bin = TokenBin { input: 800, output: 200 };
+        let v = t.get(GpuKind::V100, bin).unwrap();
+        let a = t.get(GpuKind::A10, bin).unwrap();
+        assert!(v.max_rps < a.max_rps, "v100 {} vs a10 {}", v.max_rps, a.max_rps);
+    }
+
+    #[test]
+    fn fig7b_crossover_small_requests_prefer_a10() {
+        // Paper: "requests with <200 input and <100 output tokens prefer
+        // A10", larger ones L20.
+        let t = table();
+        let gpus = [GpuKind::A10, GpuKind::L20];
+        let small = TokenBin { input: 100, output: 50 };
+        assert_eq!(t.best_gpu(small, &gpus), Some(GpuKind::A10));
+        let large = TokenBin { input: 1600, output: 400 };
+        assert_eq!(t.best_gpu(large, &gpus), Some(GpuKind::L20));
+    }
+
+    #[test]
+    fn tokenbin_bucketing() {
+        assert_eq!(TokenBin::of(70, 30), TokenBin { input: 100, output: 50 });
+        assert_eq!(TokenBin::of(1500, 20), TokenBin { input: 1600, output: 50 });
+        assert_eq!(TokenBin::of(9999, 9999), TokenBin { input: 6400, output: 6400 });
+    }
+
+    #[test]
+    fn infeasible_bin_rps_zero() {
+        // CPU-sim "GPU" has 8GiB; 7B weights don't fit.
+        let t = ProfileTable::build(
+            &ModelSpec::deepseek_coder_7b(),
+            &[GpuKind::CpuSim],
+            Slo::default(),
+        );
+        let p = t.get(GpuKind::CpuSim, TokenBin { input: 400, output: 100 }).unwrap();
+        assert_eq!(p.max_rps, 0.0);
+        assert_eq!(t.best_gpu(TokenBin { input: 400, output: 100 }, &[GpuKind::CpuSim]), None);
+    }
+}

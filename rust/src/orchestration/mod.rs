@@ -1,0 +1,393 @@
+//! Mixed-grain multi-node inference orchestration (§3.2.6, Figure 6).
+//!
+//! Kubernetes handles **coarse-grained** resource management (pods, nodes,
+//! rolling upgrades); a Ray-like layer handles **fine-grained** application
+//! orchestration (placement groups, head/worker wiring). The
+//! `RayClusterFleet` controller reconciles a fleet of multi-node inference
+//! clusters — the unit a tensor/pipeline-parallel vLLM deployment needs —
+//! against the cluster substrate, giving service-level operations
+//! (scaling, rolling upgrade, failure recovery) the engine's native
+//! distributed mode lacks.
+
+use crate::cluster::{ClusterState, GpuKind, PodPhase};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Placement strategy for a cluster's worker pods (Ray placement groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// All pods on one node (NVLink/PCIe locality for tensor parallel).
+    Pack,
+    /// Pods spread across nodes (pipeline parallel / fault isolation).
+    Spread,
+}
+
+/// Desired shape of one multi-node inference cluster.
+#[derive(Debug, Clone)]
+pub struct RayClusterSpec {
+    pub model: String,
+    pub gpu: GpuKind,
+    /// Worker pods (the head also serves).
+    pub workers: usize,
+    pub placement: PlacementStrategy,
+}
+
+/// Desired fleet state.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub name: String,
+    pub replicas: usize,
+    pub cluster: RayClusterSpec,
+    /// Spec generation — bump to trigger a rolling upgrade.
+    pub generation: u64,
+    /// Rolling upgrade: clusters that may be down simultaneously.
+    pub max_unavailable: usize,
+}
+
+/// Observed phase of one RayCluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPhase {
+    Provisioning,
+    Ready,
+    Degraded,
+    Terminating,
+}
+
+/// One multi-node inference cluster (head + workers).
+#[derive(Debug, Clone)]
+pub struct RayCluster {
+    pub id: u64,
+    pub generation: u64,
+    pub head: u64,
+    pub workers: Vec<u64>,
+    pub phase: ClusterPhase,
+}
+
+impl RayCluster {
+    pub fn pods(&self) -> impl Iterator<Item = u64> + '_ {
+        std::iter::once(self.head).chain(self.workers.iter().copied())
+    }
+}
+
+/// The RayClusterFleet controller.
+pub struct FleetController {
+    pub spec: FleetSpec,
+    clusters: BTreeMap<u64, RayCluster>,
+    next_cluster_id: u64,
+}
+
+impl FleetController {
+    pub fn new(spec: FleetSpec) -> FleetController {
+        FleetController { spec, clusters: BTreeMap::new(), next_cluster_id: 0 }
+    }
+
+    pub fn clusters(&self) -> impl Iterator<Item = &RayCluster> {
+        self.clusters.values()
+    }
+
+    pub fn ready_clusters(&self) -> usize {
+        self.clusters.values().filter(|c| c.phase == ClusterPhase::Ready).count()
+    }
+
+    /// Update desired spec (a generation bump triggers rolling replace).
+    pub fn set_spec(&mut self, spec: FleetSpec) {
+        self.spec = spec;
+    }
+
+    /// One reconciliation pass. Call repeatedly (level-triggered, like a
+    /// K8s controller); each pass converges one step toward the spec.
+    pub fn reconcile(&mut self, now: SimTime, state: &mut ClusterState) {
+        self.observe(state);
+        self.replace_failed(now, state);
+        self.rolling_upgrade(now, state);
+        self.scale(now, state);
+    }
+
+    /// Refresh cluster phases from pod states.
+    fn observe(&mut self, state: &ClusterState) {
+        for c in self.clusters.values_mut() {
+            if c.phase == ClusterPhase::Terminating {
+                continue;
+            }
+            let phases: Vec<Option<PodPhase>> =
+                c.pods().map(|p| state.pods.get(&p).map(|p| p.phase)).collect();
+            if phases.iter().any(|p| {
+                matches!(p, Some(PodPhase::Failed)) || p.is_none()
+            }) {
+                c.phase = ClusterPhase::Degraded;
+            } else if phases.iter().all(|p| matches!(p, Some(PodPhase::Running))) {
+                c.phase = ClusterPhase::Ready;
+            } else {
+                c.phase = ClusterPhase::Provisioning;
+            }
+        }
+    }
+
+    /// Degraded clusters are torn down and recreated (gang semantics: a
+    /// multi-node engine cannot run partial).
+    fn replace_failed(&mut self, now: SimTime, state: &mut ClusterState) {
+        let degraded: Vec<u64> = self
+            .clusters
+            .values()
+            .filter(|c| c.phase == ClusterPhase::Degraded)
+            .map(|c| c.id)
+            .collect();
+        for id in degraded {
+            self.teardown(now, id, state);
+        }
+    }
+
+    /// Replace old-generation clusters one batch at a time.
+    fn rolling_upgrade(&mut self, now: SimTime, state: &mut ClusterState) {
+        let gen = self.spec.generation;
+        let unavailable = self
+            .clusters
+            .values()
+            .filter(|c| c.phase != ClusterPhase::Ready)
+            .count();
+        let budget = self.spec.max_unavailable.saturating_sub(unavailable);
+        let old: Vec<u64> = self
+            .clusters
+            .values()
+            .filter(|c| c.generation != gen && c.phase == ClusterPhase::Ready)
+            .map(|c| c.id)
+            .take(budget)
+            .collect();
+        for id in old {
+            self.teardown(now, id, state);
+        }
+    }
+
+    /// Create/destroy clusters toward `replicas`.
+    fn scale(&mut self, now: SimTime, state: &mut ClusterState) {
+        let live = self.clusters.len();
+        let want = self.spec.replicas;
+        if live < want {
+            for _ in live..want {
+                if !self.provision(now, state) {
+                    break; // out of capacity; retry next pass
+                }
+            }
+        } else if live > want {
+            let excess: Vec<u64> = self
+                .clusters
+                .values()
+                // Tear down old generations and provisioning clusters first.
+                .map(|c| (c.generation == self.spec.generation, c.phase == ClusterPhase::Ready, c.id))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .take(live - want)
+                .map(|(_, _, id)| id)
+                .collect();
+            for id in excess {
+                self.teardown(now, id, state);
+            }
+        }
+    }
+
+    /// Gang-provision one cluster (head + workers, all or nothing).
+    fn provision(&mut self, now: SimTime, state: &mut ClusterState) -> bool {
+        let spec = &self.spec.cluster;
+        let n_pods = spec.workers + 1;
+        // Placement feasibility first (gang scheduling).
+        match spec.placement {
+            PlacementStrategy::Pack => {
+                let ok = state
+                    .nodes
+                    .values()
+                    .any(|n| n.gpu == spec.gpu && n.ready && n.gpus_free() as usize >= n_pods);
+                if !ok {
+                    return false;
+                }
+            }
+            PlacementStrategy::Spread => {
+                let free: usize = state
+                    .nodes
+                    .values()
+                    .filter(|n| n.gpu == spec.gpu && n.ready)
+                    .map(|n| n.gpus_free() as usize)
+                    .sum();
+                if free < n_pods {
+                    return false;
+                }
+            }
+        }
+        let deployment = format!("{}-rc{}", self.spec.name, self.next_cluster_id);
+        let mut pods = Vec::with_capacity(n_pods);
+        for _ in 0..n_pods {
+            match state.create_pod(now, &deployment, &spec.model, spec.gpu) {
+                Some(id) => pods.push(id),
+                None => {
+                    // Roll back the partial gang.
+                    for id in pods {
+                        state.delete_pod(now, id);
+                    }
+                    return false;
+                }
+            }
+        }
+        let id = self.next_cluster_id;
+        self.next_cluster_id += 1;
+        self.clusters.insert(
+            id,
+            RayCluster {
+                id,
+                generation: self.spec.generation,
+                head: pods[0],
+                workers: pods[1..].to_vec(),
+                phase: ClusterPhase::Provisioning,
+            },
+        );
+        true
+    }
+
+    fn teardown(&mut self, now: SimTime, id: u64, state: &mut ClusterState) {
+        if let Some(c) = self.clusters.remove(&id) {
+            for pod in c.pods() {
+                state.mark_terminating(now, pod);
+                state.delete_pod(now, pod);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(replicas: usize, workers: usize, placement: PlacementStrategy) -> FleetSpec {
+        FleetSpec {
+            name: "llama405b".into(),
+            replicas,
+            cluster: RayClusterSpec {
+                model: "llama-405b".into(),
+                gpu: GpuKind::A100,
+                workers,
+                placement,
+            },
+            generation: 1,
+            max_unavailable: 1,
+        }
+    }
+
+    fn cluster(nodes: u32, gpus_per_node: u32) -> ClusterState {
+        let mut c = ClusterState::new();
+        for _ in 0..nodes {
+            c.add_node(GpuKind::A100, gpus_per_node, 512);
+        }
+        c
+    }
+
+    fn make_all_ready(state: &mut ClusterState, now: SimTime) {
+        let pending: Vec<u64> = state
+            .pods
+            .values()
+            .filter(|p| p.phase == PodPhase::Pending)
+            .map(|p| p.id)
+            .collect();
+        for id in pending {
+            state.mark_ready(now, id);
+        }
+    }
+
+    #[test]
+    fn provisions_fleet_to_ready() {
+        let mut state = cluster(2, 8);
+        let mut fc = FleetController::new(spec(2, 3, PlacementStrategy::Pack));
+        fc.reconcile(0, &mut state);
+        assert_eq!(fc.clusters().count(), 2);
+        assert_eq!(state.pods.len(), 8, "2 clusters x (1 head + 3 workers)");
+        assert_eq!(fc.ready_clusters(), 0);
+        make_all_ready(&mut state, 10);
+        fc.reconcile(10, &mut state);
+        assert_eq!(fc.ready_clusters(), 2);
+    }
+
+    #[test]
+    fn pack_placement_needs_one_big_node() {
+        // 4-wide gang cannot pack on nodes with 2 GPUs each.
+        let mut state = cluster(4, 2);
+        let mut fc = FleetController::new(spec(1, 3, PlacementStrategy::Pack));
+        fc.reconcile(0, &mut state);
+        assert_eq!(fc.clusters().count(), 0, "pack infeasible");
+        // Spread is fine.
+        let mut fc2 = FleetController::new(spec(1, 3, PlacementStrategy::Spread));
+        fc2.reconcile(0, &mut state);
+        assert_eq!(fc2.clusters().count(), 1);
+    }
+
+    #[test]
+    fn gang_rollback_on_partial_failure() {
+        // Only 3 GPUs total; a 4-pod gang must not leave partial pods.
+        let mut state = cluster(1, 3);
+        let mut fc = FleetController::new(spec(1, 3, PlacementStrategy::Spread));
+        fc.reconcile(0, &mut state);
+        assert_eq!(fc.clusters().count(), 0);
+        assert_eq!(state.pods.len(), 0, "no orphaned gang members");
+    }
+
+    #[test]
+    fn worker_failure_recreates_whole_cluster() {
+        let mut state = cluster(2, 4);
+        let mut fc = FleetController::new(spec(1, 2, PlacementStrategy::Pack));
+        fc.reconcile(0, &mut state);
+        make_all_ready(&mut state, 5);
+        fc.reconcile(5, &mut state);
+        assert_eq!(fc.ready_clusters(), 1);
+        let victim = fc.clusters().next().unwrap().workers[0];
+        state.mark_failed(6, victim);
+        // Pass 1: observe degradation, tear down; scale creates replacement.
+        fc.reconcile(7, &mut state);
+        let c = fc.clusters().next().unwrap();
+        assert_eq!(c.phase, ClusterPhase::Provisioning);
+        assert!(!c.pods().any(|p| p == victim), "new gang");
+        // The failed pod object was deleted during teardown.
+        assert!(!state.pods.contains_key(&victim));
+    }
+
+    #[test]
+    fn rolling_upgrade_respects_max_unavailable() {
+        let mut state = cluster(4, 4);
+        let mut fc = FleetController::new(spec(3, 1, PlacementStrategy::Pack));
+        fc.reconcile(0, &mut state);
+        make_all_ready(&mut state, 5);
+        fc.reconcile(5, &mut state);
+        assert_eq!(fc.ready_clusters(), 3);
+        // Bump generation.
+        let mut s2 = spec(3, 1, PlacementStrategy::Pack);
+        s2.generation = 2;
+        fc.set_spec(s2);
+        fc.reconcile(10, &mut state);
+        // Exactly one old cluster replaced per pass (max_unavailable = 1).
+        let old_ready = fc
+            .clusters()
+            .filter(|c| c.generation == 1 && c.phase == ClusterPhase::Ready)
+            .count();
+        assert_eq!(old_ready, 2, "one at a time");
+        assert_eq!(fc.clusters().count(), 3);
+        // Converges over passes.
+        for t in 11..30 {
+            make_all_ready(&mut state, t);
+            fc.reconcile(t, &mut state);
+        }
+        assert!(fc.clusters().all(|c| c.generation == 2));
+        assert_eq!(fc.ready_clusters(), 3);
+    }
+
+    #[test]
+    fn scale_down_removes_clusters() {
+        let mut state = cluster(2, 8);
+        let mut fc = FleetController::new(spec(3, 1, PlacementStrategy::Pack));
+        fc.reconcile(0, &mut state);
+        assert_eq!(fc.clusters().count(), 3);
+        let mut s = spec(1, 1, PlacementStrategy::Pack);
+        fc.set_spec(s.clone());
+        fc.reconcile(5, &mut state);
+        assert_eq!(fc.clusters().count(), 1);
+        assert_eq!(state.pods.len(), 2);
+        s.replicas = 0;
+        fc.set_spec(s);
+        fc.reconcile(6, &mut state);
+        assert_eq!(state.pods.len(), 0);
+    }
+}

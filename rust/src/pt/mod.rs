@@ -1,0 +1,110 @@
+//! Mini property-testing framework (no proptest offline — DESIGN.md §2).
+//!
+//! `forall` runs a property over `cases` generated inputs from a seeded
+//! PRNG; failures re-run the case with a smaller "shrink budget" by
+//! retrying the generator with halved size hints where the generator
+//! supports it, and always report the failing seed so
+//! `AIBRIX_PT_SEED=<n> cargo test <name>` reproduces exactly.
+
+use crate::util::Rng;
+
+/// Size hint passed to generators (shrinks on failure reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Run `prop` over `cases` inputs from `gen`. Panics with the seed and case
+/// index on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng, Size) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base_seed = std::env::var("AIBRIX_PT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA1B2_C3D4_u64);
+    for case in 0..cases as u64 {
+        let seed = base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng, Size(64));
+        if let Err(msg) = prop(&input) {
+            // Try to find a smaller failing input from the same seed family.
+            let mut smallest: Option<(T, String)> = None;
+            for shrink in [Size(4), Size(8), Size(16), Size(32)] {
+                let mut srng = Rng::new(seed);
+                let candidate = gen(&mut srng, shrink);
+                if let Err(m) = prop(&candidate) {
+                    smallest = Some((candidate, m));
+                    break;
+                }
+            }
+            match smallest {
+                Some((small, m)) => panic!(
+                    "property '{name}' failed (case {case}, seed {seed}):\n  shrunk input: {small:?}\n  {m}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed {seed}):\n  input: {input:?}\n  {msg}"
+                ),
+            }
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Size;
+    use crate::util::Rng;
+
+    pub fn usize_up_to(rng: &mut Rng, max: usize) -> usize {
+        rng.below(max.max(1) as u64) as usize
+    }
+
+    pub fn vec_u32(rng: &mut Rng, size: Size, max_val: u32) -> Vec<u32> {
+        let len = rng.below(size.0 as u64 + 1) as usize;
+        (0..len).map(|_| rng.below(max_val as u64) as u32).collect()
+    }
+
+    pub fn vec_f64(rng: &mut Rng, size: Size, lo: f64, hi: f64) -> Vec<f64> {
+        let len = rng.below(size.0 as u64 + 1) as usize;
+        (0..len).map(|_| rng.uniform(lo, hi)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("sum-commutes", 50, |rng, _| (rng.range(0, 100), rng.range(0, 100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", 10, |rng, s| gen::vec_u32(rng, s, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        use std::cell::RefCell;
+        let collected = RefCell::new(Vec::new());
+        forall("collect", 5, |rng, _| rng.next_u64(), |&v| {
+            collected.borrow_mut().push(v);
+            Ok(())
+        });
+        let second = RefCell::new(Vec::new());
+        forall("collect", 5, |rng, _| rng.next_u64(), |&v| {
+            second.borrow_mut().push(v);
+            Ok(())
+        });
+        assert_eq!(collected.into_inner(), second.into_inner());
+    }
+}

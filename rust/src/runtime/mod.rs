@@ -1,0 +1,367 @@
+//! PJRT runtime: load and execute the AOT-compiled TinyLM artifacts.
+//!
+//! The AOT bridge's Rust half (DESIGN.md §4): `python/compile/aot.py` wrote
+//! HLO *text* plus `params.bin`/`manifest.json`; this module parses the
+//! manifest (with the in-repo JSON parser), compiles each HLO module on the
+//! PJRT CPU client, uploads the parameters **once** as device buffers, and
+//! exposes typed prefill/decode calls. No Python anywhere near this path.
+//!
+//! SAFETY NOTE: only the literal-arg `execute` path is used — the crate's
+//! `buffer_from_host_literal` starts an async H2D copy it never awaits,
+//! which intermittently SIGSEGVs / trips `pointer_size > 0` checks when the
+//! source literal is dropped or the compiler runs concurrently. With the
+//! awaited literal path the runtime is stable including across threads
+//! (stress-tested; see rust/tests/runtime_e2e.rs).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Host-side tensor handed back to the decode loop.
+///
+/// NOTE: the `xla` crate exposes a buffer-arg `execute_b` plus
+/// `buffer_from_host_literal`, which would keep KV on device between steps —
+/// but `buffer_from_host_literal` starts an asynchronous H2D copy and never
+/// awaits it, and in this xla_extension build even pinned-source uploads
+/// intermittently corrupt compiler state (SIGSEGV / `pointer_size > 0`
+/// check failures). The literal-arg `execute` path awaits every transfer in
+/// the C wrapper and is the only reliable one, so KV rides host literals.
+pub type DeviceTensor = Literal;
+
+use crate::json::{parse, Json};
+
+/// Model hyper-parameters from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub page_size: usize,
+}
+
+#[derive(Debug, Clone)]
+struct ParamEntry {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+    numel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub cfg: ModelCfg,
+    params: Vec<ParamEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let c = &j["config"];
+        let need = |v: &Json, k: &str| -> Result<usize> {
+            v[k].as_usize().ok_or_else(|| anyhow!("manifest config missing {k}"))
+        };
+        let cfg = ModelCfg {
+            vocab: need(c, "vocab")?,
+            d_model: need(c, "d_model")?,
+            n_layers: need(c, "n_layers")?,
+            n_heads: need(c, "n_heads")?,
+            head_dim: need(c, "head_dim")?,
+            max_seq: need(c, "max_seq")?,
+            page_size: need(c, "page_size")?,
+        };
+        let params = j["params"]
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p["name"].as_str().unwrap_or_default().to_string(),
+                    shape: p["shape"]
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p["offset"].as_usize().ok_or_else(|| anyhow!("offset"))?,
+                    numel: p["numel"].as_usize().ok_or_else(|| anyhow!("numel"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j["artifacts"]
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| ArtifactEntry {
+                name: a["name"].as_str().unwrap_or_default().to_string(),
+                kind: a["kind"].as_str().unwrap_or_default().to_string(),
+                batch: a["batch"].as_usize().unwrap_or(0),
+                seq: a["seq"].as_usize().unwrap_or(0),
+                file: a["file"].as_str().unwrap_or_default().to_string(),
+            })
+            .collect();
+        Ok(Manifest { cfg, params, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Read params.bin into per-parameter f32 literals (manifest order).
+    pub fn load_params(&self) -> Result<Vec<Literal>> {
+        let mut f = std::fs::File::open(self.dir.join("params.bin"))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        let total: usize = self.params.iter().map(|p| p.numel).sum();
+        if bytes.len() != total * 4 {
+            bail!("params.bin is {} bytes, manifest wants {}", bytes.len(), total * 4);
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        self.params
+            .iter()
+            .map(|p| {
+                let data = &floats[p.offset..p.offset + p.numel];
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping param {}", p.name))
+            })
+            .collect()
+    }
+}
+
+/// Output of one prefill call.
+pub struct PrefillOut {
+    /// Logits for every position: [B][S][V] flattened per row.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// KV caches stay on device for the decode loop.
+    pub k: DeviceTensor,
+    pub v: DeviceTensor,
+}
+
+impl PrefillOut {
+    /// Logits row for batch `b` at position `pos`.
+    pub fn logits_at(&self, b: usize, pos: usize) -> &[f32] {
+        let start = (b * self.seq + pos) * self.vocab;
+        &self.logits[start..start + self.vocab]
+    }
+
+    pub fn argmax_at(&self, b: usize, pos: usize) -> u32 {
+        argmax(self.logits_at(b, pos))
+    }
+}
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    /// [B][V] logits.
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+    pub k: DeviceTensor,
+    pub v: DeviceTensor,
+}
+
+impl DecodeOut {
+    pub fn logits_of(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+
+    pub fn argmax_of(&self, b: usize) -> u32 {
+        argmax(self.logits_of(b))
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// The compiled model: PJRT client + executables + resident parameters.
+pub struct TinyLmRuntime {
+    pub client: PjRtClient,
+    pub cfg: ModelCfg,
+    /// Parameters kept as host literals (re-transferred per call by the
+    /// awaited literal-arg execute path; see DeviceTensor note).
+    params: Vec<Literal>,
+    prefill: BTreeMap<usize, (usize, PjRtLoadedExecutable)>,
+    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+}
+
+impl TinyLmRuntime {
+    /// Load every artifact in `dir` and upload parameters to the device.
+    pub fn load(dir: &Path) -> Result<TinyLmRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+        let params = manifest.load_params()?;
+
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let path = dir.join(&a.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            match a.kind.as_str() {
+                "prefill" => {
+                    prefill.insert(a.batch, (a.seq, exe));
+                }
+                "decode" => {
+                    decode.insert(a.batch, exe);
+                }
+                k => bail!("unknown artifact kind {k}"),
+            }
+        }
+        if prefill.is_empty() || decode.is_empty() {
+            bail!("artifacts incomplete: {} prefill, {} decode", prefill.len(), decode.len());
+        }
+        Ok(TinyLmRuntime { client, cfg: manifest.cfg, params, prefill, decode })
+    }
+
+    /// Available prefill batch sizes.
+    pub fn prefill_batches(&self) -> Vec<usize> {
+        self.prefill.keys().copied().collect()
+    }
+
+    /// Available decode batch sizes.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Prefill sequence capacity for batch `b`.
+    pub fn prefill_seq(&self, batch: usize) -> Option<usize> {
+        self.prefill.get(&batch).map(|(s, _)| *s)
+    }
+
+    /// Run prefill over `tokens` (row-major [B, S], pre-padded to the
+    /// artifact's S; entries are token ids < vocab).
+    pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
+        let (seq, exe) = self
+            .prefill
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no prefill artifact for batch {batch}"))?;
+        if tokens.len() != batch * seq {
+            bail!("tokens len {} != {batch}x{seq}", tokens.len());
+        }
+        let tok = Literal::vec1(tokens).reshape(&[batch as i64, *seq as i64])?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok);
+        let result = exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (logits_l, k, v) = out.to_tuple3()?;
+        let logits = logits_l.to_vec::<f32>()?;
+        Ok(PrefillOut { logits, batch, seq: *seq, vocab: self.cfg.vocab, k, v })
+    }
+
+    /// One decode step: `token[b]` written at `pos[b]`, attending to
+    /// positions <= pos. KV buffers are consumed and replaced.
+    pub fn decode(
+        &self,
+        batch: usize,
+        token: &[i32],
+        pos: &[i32],
+        k: &DeviceTensor,
+        v: &DeviceTensor,
+    ) -> Result<DecodeOut> {
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode artifact for batch {batch}"))?;
+        if token.len() != batch || pos.len() != batch {
+            bail!("decode arg arity mismatch");
+        }
+        let tok_l = Literal::vec1(token);
+        let pos_l = Literal::vec1(pos);
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok_l);
+        args.push(&pos_l);
+        args.push(k);
+        args.push(v);
+        let result = exe.execute::<&Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (logits_l, k2, v2) = out.to_tuple3()?;
+        Ok(DecodeOut {
+            logits: logits_l.to_vec::<f32>()?,
+            vocab: self.cfg.vocab,
+            k: k2,
+            v: v2,
+        })
+    }
+
+    /// Greedy-generate `steps` tokens for a batch of prompts (lengths may
+    /// differ; prompts are padded to the prefill S). Returns per-row
+    /// generated token ids. The workhorse of `RealEngine` / serve_e2e.
+    pub fn generate(
+        &self,
+        prompts: &[Vec<u32>],
+        steps: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let batch = prompts.len();
+        let (seq, _) = self
+            .prefill
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no prefill artifact for batch {batch}"))?;
+        let seq = *seq;
+        let max_new = self.cfg.max_seq - seq;
+        if steps > max_new {
+            bail!("steps {steps} exceeds cache headroom {max_new}");
+        }
+        let mut tokens = vec![0i32; batch * seq];
+        for (b, p) in prompts.iter().enumerate() {
+            if p.len() > seq {
+                bail!("prompt {b} longer than prefill window {seq}");
+            }
+            for (s, &t) in p.iter().enumerate() {
+                tokens[b * seq + s] = t as i32;
+            }
+        }
+        let pre = self.prefill(batch, &tokens)?;
+        let mut cur: Vec<i32> = (0..batch)
+            .map(|b| pre.argmax_at(b, prompts[b].len().saturating_sub(1)) as i32)
+            .collect();
+        let mut k = pre.k;
+        let mut v = pre.v;
+        let mut out: Vec<Vec<u32>> = cur.iter().map(|&t| vec![t as u32]).collect();
+        // Decode continues each row at its true length.
+        let mut pos: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
+        for _ in 1..steps {
+            let d = self.decode(batch, &cur, &pos, &k, &v)?;
+            for b in 0..batch {
+                cur[b] = d.argmax_of(b) as i32;
+                out[b].push(cur[b] as u32);
+                pos[b] += 1;
+            }
+            k = d.k;
+            v = d.v;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,187 @@
+//! Threaded HTTP/1.1 server: the gateway's network face.
+//!
+//! std::net based (no tokio offline — DESIGN.md §2): an accept loop hands
+//! connections to a small thread pool; handlers parse a minimal but correct
+//! HTTP/1.1 subset and route OpenAI-style JSON bodies. Used by `aibrix
+//! serve` and exercised in-process by integration tests.
+
+mod http;
+
+pub use http::{HttpRequest, HttpResponse};
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A request handler: path + parsed request -> response.
+pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
+
+/// Minimal multi-threaded HTTP server.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (use port 0 for ephemeral) and serve with `workers`
+    /// handler threads.
+    pub fn start(addr: &str, workers: usize, handler: Handler) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let handler = Arc::clone(&handler);
+            std::thread::spawn(move || loop {
+                let stream = { rx.lock().unwrap().recv() };
+                match stream {
+                    Ok(s) => handle_connection(s, &handler),
+                    Err(_) => break,
+                }
+            });
+        }
+
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            listener.set_nonblocking(false).ok();
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Ok(s) = stream {
+                    let _ = tx.send(s);
+                }
+            }
+        });
+
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown (the accept loop exits on the next connection).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handler: &Handler) {
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .ok();
+    // Keep-alive loop: serve requests until the peer closes or errors.
+    loop {
+        let req = match http::read_request(&mut stream) {
+            Ok(Some(r)) => r,
+            Ok(None) | Err(_) => return,
+        };
+        let keep_alive = req.keep_alive();
+        let resp = handler(&req);
+        if stream.write_all(&resp.serialize(keep_alive)).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Blocking single-request client (tests, examples, CLI).
+pub fn http_request(
+    addr: &std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: aibrix\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    http::read_response(&mut stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{parse, Json};
+
+    fn echo_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: &HttpRequest| {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/healthz") => HttpResponse::text(200, "ok"),
+                ("POST", "/echo") => {
+                    let body = String::from_utf8_lossy(&req.body).to_string();
+                    HttpResponse::json(200, &body)
+                }
+                _ => HttpResponse::text(404, "not found"),
+            }
+        });
+        HttpServer::start("127.0.0.1:0", 2, handler).unwrap()
+    }
+
+    #[test]
+    fn serves_get() {
+        let s = echo_server();
+        let (code, body) = http_request(&s.addr(), "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok");
+    }
+
+    #[test]
+    fn serves_post_with_body() {
+        let s = echo_server();
+        let payload = r#"{"prompt":"SELECT 1","max_tokens":8}"#;
+        let (code, body) = http_request(&s.addr(), "POST", "/echo", payload).unwrap();
+        assert_eq!(code, 200);
+        let j = parse(&body).unwrap();
+        assert_eq!(j["prompt"].as_str().unwrap(), "SELECT 1");
+        assert_eq!(j["max_tokens"], Json::Num(8.0));
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let s = echo_server();
+        let (code, _) = http_request(&s.addr(), "GET", "/nope", "").unwrap();
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let s = echo_server();
+        let addr = s.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let body = format!(r#"{{"i":{i}}}"#);
+                    http_request(&addr, "POST", "/echo", &body).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (code, body) = h.join().unwrap();
+            assert_eq!(code, 200);
+            assert!(body.contains(&format!("{i}")), "{body}");
+        }
+    }
+}

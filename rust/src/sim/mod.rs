@@ -1,0 +1,182 @@
+//! Discrete-event simulation core.
+//!
+//! All paper-scale experiments (Table 1, routing, autoscaling, heterogeneous
+//! serving) run on this clock instead of a real K8s cluster (DESIGN.md §2).
+//! Time is `SimTime` microseconds; events are totally ordered by
+//! (time, sequence number), so identical-timestamp events fire in
+//! insertion order and every run is reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulation time in microseconds since t=0.
+pub type SimTime = u64;
+
+pub const MICROS: u64 = 1;
+pub const MILLIS: u64 = 1_000;
+pub const SECONDS: u64 = 1_000_000;
+
+/// Convert sim time to fractional seconds (for reports).
+pub fn as_secs(t: SimTime) -> f64 {
+    t as f64 / SECONDS as f64
+}
+
+/// Convert sim time to fractional milliseconds.
+pub fn as_millis(t: SimTime) -> f64 {
+    t as f64 / MILLIS as f64
+}
+
+struct Scheduled<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event-driven simulator over a user event type `E`.
+pub struct Simulator<E> {
+    now: SimTime,
+    seq: u64,
+    heap: BinaryHeap<Scheduled<E>>,
+}
+
+impl<E> Default for Simulator<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Simulator<E> {
+    pub fn new() -> Self {
+        Simulator { now: 0, seq: 0, heap: BinaryHeap::new() }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at` (clamped to now).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let time = at.max(self.now);
+        self.heap.push(Scheduled { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after `delay`.
+    pub fn schedule_in(&mut self, delay: u64, event: E) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the next event, advancing the clock. None when drained.
+    pub fn next_event(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now, "time went backwards");
+        self.now = s.time;
+        Some((s.time, s.event))
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drain events until `deadline` (exclusive), calling `f(now, event, sim)`.
+    /// The handler may schedule further events.
+    pub fn run_until(&mut self, deadline: SimTime, mut f: impl FnMut(SimTime, E, &mut Self)) {
+        while let Some(t) = self.peek_time() {
+            if t >= deadline {
+                break;
+            }
+            let (now, ev) = self.next_event().unwrap();
+            f(now, ev, self);
+        }
+        self.now = self.now.max(deadline);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Simulator::new();
+        sim.schedule_at(30, "c");
+        sim.schedule_at(10, "a");
+        sim.schedule_at(20, "b");
+        let mut seen = Vec::new();
+        while let Some((t, e)) = sim.next_event() {
+            seen.push((t, e));
+        }
+        assert_eq!(seen, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_fire_in_insertion_order() {
+        let mut sim = Simulator::new();
+        for i in 0..10 {
+            sim.schedule_at(5, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| sim.next_event().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut sim = Simulator::new();
+        sim.schedule_at(100, ());
+        sim.next_event();
+        assert_eq!(sim.now(), 100);
+        // Scheduling in the past clamps to now.
+        sim.schedule_at(50, ());
+        let (t, _) = sim.next_event().unwrap();
+        assert_eq!(t, 100);
+    }
+
+    #[test]
+    fn handler_can_reschedule() {
+        let mut sim = Simulator::new();
+        sim.schedule_at(0, 0u32);
+        let mut count = 0;
+        sim.run_until(10, |_, n, sim| {
+            count += 1;
+            if n < 100 {
+                sim.schedule_in(1, n + 1);
+            }
+        });
+        assert_eq!(count, 10); // events at t=0..9
+        assert_eq!(sim.now(), 10);
+    }
+
+    #[test]
+    fn run_until_sets_clock_even_when_idle() {
+        let mut sim: Simulator<()> = Simulator::new();
+        sim.run_until(1_000, |_, _, _| {});
+        assert_eq!(sim.now(), 1_000);
+    }
+}

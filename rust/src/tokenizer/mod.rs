@@ -1,0 +1,95 @@
+//! Deterministic byte-level tokenizer.
+//!
+//! The simulation plane deals in token ids directly; this tokenizer exists
+//! for the *real* serving path (E2E example, HTTP server) where text must be
+//! mapped into TinyLM's small vocabulary, and for prefix identity: equal
+//! text prefixes must produce equal token prefixes (required by the
+//! prefix-aware router and the KV pool), which byte-level encoding
+//! guarantees trivially.
+
+/// Byte-level tokenizer into a vocabulary of `vocab` ids.
+///
+/// Ids 0..256 are raw bytes (folded into the vocab if smaller); the top ids
+/// are reserved: `vocab-1` = BOS, `vocab-2` = EOS.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab >= 8, "vocab too small");
+        Tokenizer { vocab }
+    }
+
+    pub fn vocab(&self) -> u32 {
+        self.vocab
+    }
+
+    pub fn bos(&self) -> u32 {
+        self.vocab - 1
+    }
+
+    pub fn eos(&self) -> u32 {
+        self.vocab - 2
+    }
+
+    /// Encode text; prefix-stable (encode(a + b) starts with encode(a)).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let fold = self.vocab - 2; // keep specials out of the byte range
+        text.bytes().map(|b| b as u32 % fold).collect()
+    }
+
+    /// Decode is lossy for vocab < 258; used only for diagnostics.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .filter(|&&t| t != self.bos() && t != self.eos())
+            .map(|&t| {
+                let b = (t % 256) as u8;
+                if b.is_ascii_graphic() || b == b' ' {
+                    b as char
+                } else {
+                    '?'
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_stability() {
+        let t = Tokenizer::new(512);
+        let a = t.encode("SELECT * FROM users");
+        let ab = t.encode("SELECT * FROM users WHERE id = 1");
+        assert_eq!(&ab[..a.len()], &a[..]);
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let t = Tokenizer::new(512);
+        for tok in t.encode("Hello, world! \u{1F600}") {
+            assert!(tok < 512);
+        }
+    }
+
+    #[test]
+    fn specials_distinct() {
+        let t = Tokenizer::new(512);
+        assert_ne!(t.bos(), t.eos());
+        let toks = t.encode("abc");
+        assert!(!toks.contains(&t.bos()));
+        assert!(!toks.contains(&t.eos()));
+    }
+
+    #[test]
+    fn ascii_round_trip() {
+        let t = Tokenizer::new(512);
+        let s = "hello sql";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+}

@@ -1,0 +1,185 @@
+//! Statistical distributions used by the workload generators and the
+//! simulator (DESIGN.md §5 `workload/`).
+//!
+//! Each distribution is a small struct with a `sample(&mut Rng)` method so
+//! generators can hold them by value and remain `Send`.
+
+use super::prng::Rng;
+
+/// Exponential(rate) — inter-arrival times of Poisson processes.
+#[derive(Debug, Clone, Copy)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Exponential { rate }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        -rng.f64_open().ln() / self.rate
+    }
+}
+
+/// Poisson(lambda) — request counts per tick. Knuth's method for small
+/// lambda, normal approximation above 30 (adequate for load shaping).
+#[derive(Debug, Clone, Copy)]
+pub struct Poisson {
+    lambda: f64,
+}
+
+impl Poisson {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0, "lambda must be positive");
+        Poisson { lambda }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        if self.lambda < 30.0 {
+            let l = (-self.lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= rng.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.lambda + self.lambda.sqrt() * rng.normal();
+            x.max(0.0).round() as u64
+        }
+    }
+}
+
+/// LogNormal(mu, sigma) of the *underlying* normal — models LLM prompt and
+/// output token lengths (heavy right tail, matches ShareGPT shape).
+#[derive(Debug, Clone, Copy)]
+pub struct LogNormal {
+    mu: f64,
+    sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma >= 0.0);
+        LogNormal { mu, sigma }
+    }
+
+    /// Parameterize by the desired mean/median of the log-normal itself.
+    pub fn from_median_sigma(median: f64, sigma: f64) -> Self {
+        Self::new(median.ln(), sigma)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+}
+
+/// Zipf(n, s) over {0, .., n-1} — skewed popularity (LoRA adapters, shared
+/// prompt prefixes). Sampled by inverse-CDF over precomputed cumulative
+/// weights; n is small (≤ tens of thousands) in all our workloads.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cumulative: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cumulative = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 1..=n {
+            total += 1.0 / (k as f64).powf(s);
+            cumulative.push(total);
+        }
+        for c in &mut cumulative {
+            *c /= total;
+        }
+        Zipf { cumulative }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cumulative
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cumulative.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_mean() {
+        let d = Exponential::new(2.0);
+        let mut r = Rng::new(1);
+        let n = 100_000;
+        let m = (0..n).map(|_| d.sample(&mut r)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let d = Poisson::new(3.5);
+        let mut r = Rng::new(2);
+        let n = 100_000;
+        let m = (0..n).map(|_| d.sample(&mut r)).sum::<u64>() as f64 / n as f64;
+        assert!((m - 3.5).abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean() {
+        let d = Poisson::new(100.0);
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let m = (0..n).map(|_| d.sample(&mut r)).sum::<u64>() as f64 / n as f64;
+        assert!((m - 100.0).abs() < 0.5, "mean {m}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let d = LogNormal::from_median_sigma(200.0, 0.8);
+        let mut r = Rng::new(4);
+        let mut xs: Vec<f64> = (0..50_001).map(|_| d.sample(&mut r)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[25_000];
+        assert!((med / 200.0 - 1.0).abs() < 0.05, "median {med}");
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let d = Zipf::new(100, 1.1);
+        let mut r = Rng::new(5);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..100_000 {
+            counts[d.sample(&mut r)] += 1;
+        }
+        // Rank 0 must dominate rank 10 which dominates rank 90.
+        assert!(counts[0] > counts[10] * 5);
+        assert!(counts[10] > counts[90]);
+        // Everything was reachable.
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn zipf_uniform_when_s_zero() {
+        let d = Zipf::new(10, 0.0);
+        let mut r = Rng::new(6);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..100_000 {
+            counts[d.sample(&mut r)] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "bucket {c}");
+        }
+    }
+}

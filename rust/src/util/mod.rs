@@ -1,0 +1,15 @@
+//! Foundation utilities: deterministic PRNG, statistical distributions and
+//! summary statistics.
+//!
+//! The build environment vendors no `rand`/`rand_distr`, so these are
+//! implemented here (DESIGN.md §2 offline-dependency substitutions). All
+//! simulation randomness flows through [`Rng`] so every experiment is
+//! reproducible from a single seed.
+
+pub mod dist;
+pub mod prng;
+pub mod stats;
+
+pub use dist::{Exponential, LogNormal, Poisson, Zipf};
+pub use prng::Rng;
+pub use stats::{mean, percentile, std_dev, Summary};

@@ -1,0 +1,134 @@
+//! Arrival processes: when requests hit the gateway.
+
+use crate::sim::{SimTime, SECONDS};
+use crate::util::{Exponential, Rng};
+
+/// Arrival time generator.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson with constant rate (req/s).
+    Poisson { rate: f64 },
+    /// Everything at t=0 (offline / batch evaluation — Table 1 setup).
+    Batch,
+    /// Diurnal-style sinusoid between `low` and `high` req/s with the given
+    /// period; drives the autoscaling experiment's load swings.
+    Sinusoid { low: f64, high: f64, period_s: f64 },
+    /// Constant rate, then a `burst_mult`× burst during [start, end).
+    Burst {
+        base: f64,
+        burst_mult: f64,
+        start_s: f64,
+        end_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous rate at time t (req/s).
+    pub fn rate_at(&self, t: SimTime) -> f64 {
+        let ts = t as f64 / SECONDS as f64;
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Batch => f64::INFINITY,
+            ArrivalProcess::Sinusoid { low, high, period_s } => {
+                let phase = (ts / period_s) * std::f64::consts::TAU;
+                low + (high - low) * 0.5 * (1.0 - phase.cos())
+            }
+            ArrivalProcess::Burst { base, burst_mult, start_s, end_s } => {
+                if ts >= start_s && ts < end_s {
+                    base * burst_mult
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Sample the next arrival strictly after `now` (thinning for the
+    /// non-homogeneous processes).
+    pub fn next_after(&self, now: SimTime, rng: &mut Rng) -> SimTime {
+        match *self {
+            ArrivalProcess::Batch => now,
+            ArrivalProcess::Poisson { rate } => {
+                let dt = Exponential::new(rate).sample(rng);
+                now + (dt * SECONDS as f64) as u64 + 1
+            }
+            ArrivalProcess::Sinusoid { high, .. } => self.thin(now, high, rng),
+            ArrivalProcess::Burst { base, burst_mult, .. } => {
+                self.thin(now, base * burst_mult, rng)
+            }
+        }
+    }
+
+    fn thin(&self, now: SimTime, max_rate: f64, rng: &mut Rng) -> SimTime {
+        let exp = Exponential::new(max_rate);
+        let mut t = now;
+        loop {
+            t += (exp.sample(rng) * SECONDS as f64) as u64 + 1;
+            if rng.f64() < self.rate_at(t) / max_rate {
+                return t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let p = ArrivalProcess::Poisson { rate: 50.0 };
+        let mut rng = Rng::new(1);
+        let mut t = 0;
+        let mut n = 0;
+        while t < 20 * SECONDS {
+            t = p.next_after(t, &mut rng);
+            n += 1;
+        }
+        // ~1000 arrivals expected.
+        assert!((850..1150).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn batch_arrivals_immediate() {
+        let p = ArrivalProcess::Batch;
+        let mut rng = Rng::new(2);
+        assert_eq!(p.next_after(123, &mut rng), 123);
+    }
+
+    #[test]
+    fn sinusoid_rate_bounds() {
+        let p = ArrivalProcess::Sinusoid { low: 2.0, high: 10.0, period_s: 60.0 };
+        for s in 0..120 {
+            let r = p.rate_at(s * SECONDS);
+            assert!((2.0 - 1e-9..=10.0 + 1e-9).contains(&r));
+        }
+        // Peak at half period.
+        assert!((p.rate_at(30 * SECONDS) - 10.0).abs() < 1e-6);
+        assert!((p.rate_at(0) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn burst_window() {
+        let p = ArrivalProcess::Burst { base: 5.0, burst_mult: 4.0, start_s: 10.0, end_s: 20.0 };
+        assert_eq!(p.rate_at(5 * SECONDS), 5.0);
+        assert_eq!(p.rate_at(15 * SECONDS), 20.0);
+        assert_eq!(p.rate_at(25 * SECONDS), 5.0);
+    }
+
+    #[test]
+    fn thinning_respects_burst_rate() {
+        let p = ArrivalProcess::Burst { base: 5.0, burst_mult: 10.0, start_s: 1.0, end_s: 2.0 };
+        let mut rng = Rng::new(3);
+        let mut t = SECONDS; // inside burst
+        let mut n = 0;
+        while t < 2 * SECONDS {
+            t = p.next_after(t, &mut rng);
+            if t < 2 * SECONDS {
+                n += 1;
+            }
+        }
+        // 50/s over 1s burst.
+        assert!((30..75).contains(&n), "{n}");
+    }
+}

@@ -1,0 +1,197 @@
+//! Bird-SQL-like text-to-SQL workload (Table 1's benchmark).
+//!
+//! Bird-SQL prompts embed a full database schema followed by a natural-
+//! language question; many requests target the same database, so prompts
+//! share a large exact token prefix (~80% of the prompt) and outputs are
+//! short SQL. We synthesize that structure: `n_schemas` deterministic
+//! schema prefixes (Zipf popularity), distinct per-request question
+//! suffixes, short lognormal outputs. Token totals are tuned so the default
+//! Table-1 configuration matches the paper's totals (~1.08M prompt tokens,
+//! ~12.7k decode tokens over 640 requests).
+
+use super::{Request, Workload};
+use crate::sim::SimTime;
+use crate::util::{LogNormal, Rng, Zipf};
+
+#[derive(Debug, Clone)]
+pub struct BirdSqlConfig {
+    pub n_requests: usize,
+    pub n_schemas: usize,
+    /// Schema (shared prefix) length, tokens.
+    pub schema_tokens_mean: usize,
+    /// Question (distinct suffix) length, tokens.
+    pub question_tokens_mean: usize,
+    /// Target decode length median.
+    pub output_median: f64,
+    pub output_sigma: f64,
+    /// Zipf skew of schema popularity.
+    pub zipf_s: f64,
+    pub model: String,
+    pub seed: u64,
+}
+
+impl Default for BirdSqlConfig {
+    fn default() -> Self {
+        // 640 * (1400 + ~292) ≈ 1.083M prompt tokens; 640 * ~20 ≈ 12.8k decode.
+        BirdSqlConfig {
+            n_requests: 640,
+            n_schemas: 64,
+            schema_tokens_mean: 1400,
+            question_tokens_mean: 292,
+            output_median: 19.0,
+            output_sigma: 0.35,
+            zipf_s: 1.0,
+            model: "deepseek-coder-7b".to_string(),
+            seed: 2025,
+        }
+    }
+}
+
+/// Generator state.
+pub struct BirdSqlWorkload {
+    cfg: BirdSqlConfig,
+    rng: Rng,
+    zipf: Zipf,
+    out_dist: LogNormal,
+    /// Deterministic schema prefixes.
+    schemas: Vec<Vec<u32>>,
+    emitted: usize,
+}
+
+const VOCAB: u32 = 50_000; // token-id space of the simulated model
+
+impl BirdSqlWorkload {
+    pub fn new(cfg: BirdSqlConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut schemas = Vec::with_capacity(cfg.n_schemas);
+        for s in 0..cfg.n_schemas {
+            let mut srng = rng.fork(0x5C4E_u64 + s as u64);
+            // Schema lengths vary ±20% around the mean.
+            let len = (cfg.schema_tokens_mean as f64 * srng.uniform(0.8, 1.2)) as usize;
+            schemas.push((0..len).map(|_| srng.below(VOCAB as u64) as u32).collect());
+        }
+        let zipf = Zipf::new(cfg.n_schemas, cfg.zipf_s);
+        let out_dist = LogNormal::from_median_sigma(cfg.output_median, cfg.output_sigma);
+        BirdSqlWorkload { cfg, rng, zipf, out_dist, schemas, emitted: 0 }
+    }
+
+    pub fn config(&self) -> &BirdSqlConfig {
+        &self.cfg
+    }
+
+    /// Total prompt tokens this workload will emit (for reporting).
+    pub fn schema_of(&self, idx: usize) -> &[u32] {
+        &self.schemas[idx]
+    }
+}
+
+impl Workload for BirdSqlWorkload {
+    fn next(&mut self, now: SimTime) -> Option<Request> {
+        if self.emitted >= self.cfg.n_requests {
+            return None;
+        }
+        let schema_idx = self.zipf.sample(&mut self.rng);
+        let schema = &self.schemas[schema_idx];
+        let qlen = (self.cfg.question_tokens_mean as f64 * self.rng.uniform(0.6, 1.4)) as usize;
+        let mut tokens = Vec::with_capacity(schema.len() + qlen);
+        tokens.extend_from_slice(schema);
+        for _ in 0..qlen {
+            tokens.push(self.rng.below(VOCAB as u64) as u32);
+        }
+        let output_len = (self.out_dist.sample(&mut self.rng).round() as usize).clamp(4, 128);
+        let id = self.emitted as u64;
+        self.emitted += 1;
+        Some(Request {
+            id,
+            session: schema_idx as u64,
+            shared_prefix_len: schema.len(),
+            tokens,
+            output_len,
+            arrival: now,
+            model: self.cfg.model.clone(),
+            adapter: None,
+            user: (id % 16) as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_table1_scale() {
+        let mut w = BirdSqlWorkload::new(BirdSqlConfig::default());
+        let mut prompt = 0usize;
+        let mut decode = 0usize;
+        let mut n = 0;
+        while let Some(r) = w.next(0) {
+            prompt += r.prompt_len();
+            decode += r.output_len;
+            n += 1;
+        }
+        assert_eq!(n, 640);
+        // Paper: 1,082,837 prompt / ~12,750 decode. Within 15%.
+        assert!((900_000..1_250_000).contains(&prompt), "prompt {prompt}");
+        assert!((10_000..16_000).contains(&decode), "decode {decode}");
+    }
+
+    #[test]
+    fn prefix_sharing_is_structural() {
+        let mut w = BirdSqlWorkload::new(BirdSqlConfig {
+            n_schemas: 2,
+            n_requests: 50,
+            zipf_s: 0.0,
+            ..Default::default()
+        });
+        let reqs: Vec<Request> = std::iter::from_fn(|| w.next(0)).collect();
+        // Requests of the same session (schema) share the whole schema prefix.
+        let by_schema: Vec<&Request> = reqs.iter().filter(|r| r.session == 0).collect();
+        assert!(by_schema.len() >= 2);
+        let a = by_schema[0];
+        let b = by_schema[1];
+        assert_eq!(
+            &a.tokens[..a.shared_prefix_len],
+            &b.tokens[..b.shared_prefix_len]
+        );
+        // But differ after the prefix.
+        assert_ne!(a.tokens[a.shared_prefix_len..], b.tokens[b.shared_prefix_len..]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = BirdSqlConfig { n_requests: 10, ..Default::default() };
+        let mut a = BirdSqlWorkload::new(cfg.clone());
+        let mut b = BirdSqlWorkload::new(cfg);
+        for _ in 0..10 {
+            let ra = a.next(0).unwrap();
+            let rb = b.next(0).unwrap();
+            assert_eq!(ra.tokens, rb.tokens);
+            assert_eq!(ra.output_len, rb.output_len);
+        }
+    }
+
+    #[test]
+    fn exhausts_after_n() {
+        let mut w = BirdSqlWorkload::new(BirdSqlConfig { n_requests: 3, ..Default::default() });
+        assert!(w.next(0).is_some());
+        assert!(w.next(0).is_some());
+        assert!(w.next(0).is_some());
+        assert!(w.next(0).is_none());
+    }
+
+    #[test]
+    fn popular_schemas_dominate() {
+        let mut w = BirdSqlWorkload::new(BirdSqlConfig {
+            n_requests: 500,
+            zipf_s: 1.2,
+            ..Default::default()
+        });
+        let mut counts = vec![0usize; 64];
+        while let Some(r) = w.next(0) {
+            counts[r.session as usize] += 1;
+        }
+        let top: usize = counts[..8].iter().sum();
+        assert!(top > 250, "top-8 schemas got {top}/500");
+    }
+}

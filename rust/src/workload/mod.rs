@@ -1,0 +1,74 @@
+//! Workload generators (DESIGN.md §2 substitutions for Bird-SQL / ShareGPT).
+//!
+//! All generators emit [`Request`]s with concrete token-id prompts so prefix
+//! sharing is *structural* (equal token prefixes), exactly what the
+//! prefix-cache-aware router and the distributed KV pool key on.
+
+pub mod arrival;
+pub mod birdsql;
+pub mod sharegpt;
+
+pub use arrival::ArrivalProcess;
+pub use birdsql::{BirdSqlConfig, BirdSqlWorkload};
+pub use sharegpt::{ShareGptConfig, ShareGptWorkload};
+
+use crate::sim::SimTime;
+
+/// One inference request as seen by the gateway.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Multi-turn session (requests of one session share a growing prefix).
+    pub session: u64,
+    /// Prompt token ids.
+    pub tokens: Vec<u32>,
+    /// Target number of decode tokens (the engine stops there).
+    pub output_len: usize,
+    pub arrival: SimTime,
+    pub model: String,
+    /// LoRA adapter name, if the request targets a fine-tune (§3.2.1).
+    pub adapter: Option<String>,
+    /// Tenant for fairness/rate-limit accounting.
+    pub user: u32,
+    /// Generator-side knowledge of the shared-prefix length (analysis only —
+    /// the serving path never reads this).
+    pub shared_prefix_len: usize,
+}
+
+impl Request {
+    pub fn prompt_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len() + self.output_len
+    }
+}
+
+/// Anything that can produce a request stream.
+pub trait Workload {
+    /// Next request arriving at or after `now`; None when exhausted.
+    fn next(&mut self, now: SimTime) -> Option<Request>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_token_accounting() {
+        let r = Request {
+            id: 1,
+            session: 0,
+            tokens: vec![1, 2, 3],
+            output_len: 5,
+            arrival: 0,
+            model: "m".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 2,
+        };
+        assert_eq!(r.prompt_len(), 3);
+        assert_eq!(r.total_tokens(), 8);
+    }
+}

@@ -1,0 +1,230 @@
+//! ShareGPT-like conversational workload.
+//!
+//! Multi-turn chat sessions with lognormal prompt/output lengths matching
+//! the ShareGPT_Vicuna distribution shape (median prompt ~170 tokens with a
+//! heavy tail, outputs ~180 tokens). Each later turn's prompt contains the
+//! full conversation so far (prefix sharing *within* a session), unlike
+//! Bird-SQL's cross-request schema sharing. Drives EXP-RT and EXP-HET.
+
+use super::{Request, Workload};
+use crate::sim::SimTime;
+use crate::util::{LogNormal, Rng};
+
+#[derive(Debug, Clone)]
+pub struct ShareGptConfig {
+    pub n_requests: usize,
+    /// Mean turns per session.
+    pub turns_mean: f64,
+    pub prompt_median: f64,
+    pub prompt_sigma: f64,
+    pub output_median: f64,
+    pub output_sigma: f64,
+    pub n_users: u32,
+    pub model: String,
+    pub seed: u64,
+    /// Fraction of requests that carry a LoRA adapter (0 disables).
+    pub adapter_fraction: f64,
+    pub n_adapters: usize,
+}
+
+impl Default for ShareGptConfig {
+    fn default() -> Self {
+        ShareGptConfig {
+            n_requests: 1000,
+            turns_mean: 3.0,
+            prompt_median: 170.0,
+            prompt_sigma: 0.9,
+            output_median: 180.0,
+            output_sigma: 0.7,
+            n_users: 32,
+            model: "llama-8b".to_string(),
+            seed: 7,
+            adapter_fraction: 0.0,
+            n_adapters: 0,
+        }
+    }
+}
+
+struct Session {
+    id: u64,
+    history: Vec<u32>,
+    turns_left: usize,
+    user: u32,
+}
+
+pub struct ShareGptWorkload {
+    cfg: ShareGptConfig,
+    rng: Rng,
+    prompt_dist: LogNormal,
+    out_dist: LogNormal,
+    sessions: Vec<Session>,
+    next_session: u64,
+    emitted: usize,
+}
+
+const VOCAB: u32 = 50_000;
+
+impl ShareGptWorkload {
+    pub fn new(cfg: ShareGptConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        let prompt_dist = LogNormal::from_median_sigma(cfg.prompt_median, cfg.prompt_sigma);
+        let out_dist = LogNormal::from_median_sigma(cfg.output_median, cfg.output_sigma);
+        ShareGptWorkload {
+            cfg,
+            rng,
+            prompt_dist,
+            out_dist,
+            sessions: Vec::new(),
+            next_session: 0,
+            emitted: 0,
+        }
+    }
+
+    fn sample_len(&mut self, which: char) -> usize {
+        let d = if which == 'p' { self.prompt_dist } else { self.out_dist };
+        (d.sample(&mut self.rng).round() as usize).clamp(8, 2048)
+    }
+
+    fn new_session(&mut self) -> Session {
+        let id = self.next_session;
+        self.next_session += 1;
+        let turns = (self.cfg.turns_mean * self.rng.uniform(0.4, 1.8)).round() as usize;
+        Session {
+            id,
+            history: Vec::new(),
+            turns_left: turns.max(1),
+            user: self.rng.below(self.cfg.n_users as u64) as u32,
+        }
+    }
+}
+
+impl Workload for ShareGptWorkload {
+    fn next(&mut self, now: SimTime) -> Option<Request> {
+        if self.emitted >= self.cfg.n_requests {
+            return None;
+        }
+        // 40% continue an open session (if any), else start fresh.
+        let cont = !self.sessions.is_empty() && self.rng.chance(0.4);
+        let mut session = if cont {
+            let i = self.rng.below(self.sessions.len() as u64) as usize;
+            self.sessions.swap_remove(i)
+        } else {
+            self.new_session()
+        };
+
+        let shared = session.history.len();
+        let new_tokens = self.sample_len('p');
+        for _ in 0..new_tokens {
+            session.history.push(self.rng.below(VOCAB as u64) as u32);
+        }
+        let output_len = self.sample_len('o');
+        let id = self.emitted as u64;
+        self.emitted += 1;
+
+        let adapter = if self.cfg.adapter_fraction > 0.0
+            && self.rng.chance(self.cfg.adapter_fraction)
+        {
+            Some(format!(
+                "lora-{}",
+                self.rng.below(self.cfg.n_adapters.max(1) as u64)
+            ))
+        } else {
+            None
+        };
+
+        let req = Request {
+            id,
+            session: session.id,
+            tokens: session.history.clone(),
+            output_len,
+            arrival: now,
+            model: self.cfg.model.clone(),
+            adapter,
+            user: session.user,
+            shared_prefix_len: shared,
+        };
+
+        // Assistant reply becomes part of the session history.
+        for _ in 0..output_len {
+            session.history.push(self.rng.below(VOCAB as u64) as u32);
+        }
+        session.turns_left -= 1;
+        if session.turns_left > 0 && session.history.len() < 6_000 {
+            self.sessions.push(session);
+        }
+        Some(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(cfg: ShareGptConfig) -> Vec<Request> {
+        let mut w = ShareGptWorkload::new(cfg);
+        std::iter::from_fn(|| w.next(0)).collect()
+    }
+
+    #[test]
+    fn emits_exactly_n() {
+        let reqs = drain(ShareGptConfig { n_requests: 100, ..Default::default() });
+        assert_eq!(reqs.len(), 100);
+    }
+
+    #[test]
+    fn multi_turn_prefix_grows() {
+        let reqs = drain(ShareGptConfig { n_requests: 400, ..Default::default() });
+        // Find a session with >= 2 turns; later turn strictly extends earlier.
+        let mut by_session: std::collections::BTreeMap<u64, Vec<&Request>> = Default::default();
+        for r in &reqs {
+            by_session.entry(r.session).or_default().push(r);
+        }
+        let multi = by_session.values().find(|v| v.len() >= 2).expect("no multi-turn session");
+        let (a, b) = (multi[0], multi[1]);
+        assert!(b.tokens.len() > a.tokens.len());
+        assert_eq!(&b.tokens[..a.tokens.len() + a.output_len - a.output_len], &a.tokens[..]);
+        assert_eq!(b.shared_prefix_len, a.tokens.len() + a.output_len);
+    }
+
+    #[test]
+    fn length_distribution_shape() {
+        let reqs = drain(ShareGptConfig { n_requests: 2000, ..Default::default() });
+        let first_turn: Vec<f64> = reqs
+            .iter()
+            .filter(|r| r.shared_prefix_len == 0)
+            .map(|r| r.prompt_len() as f64)
+            .collect();
+        let mut s = first_turn.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = s[s.len() / 2];
+        assert!((100.0..260.0).contains(&med), "median {med}");
+        // Heavy tail: p99 >> median.
+        let p99 = s[(s.len() as f64 * 0.99) as usize];
+        assert!(p99 > 2.5 * med, "p99 {p99} med {med}");
+    }
+
+    #[test]
+    fn adapters_assigned_when_enabled() {
+        let reqs = drain(ShareGptConfig {
+            n_requests: 500,
+            adapter_fraction: 0.5,
+            n_adapters: 8,
+            ..Default::default()
+        });
+        let with = reqs.iter().filter(|r| r.adapter.is_some()).count();
+        assert!((150..350).contains(&with), "{with}");
+        for r in reqs.iter().filter(|r| r.adapter.is_some()) {
+            let name = r.adapter.as_ref().unwrap();
+            assert!(name.starts_with("lora-"));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = drain(ShareGptConfig { n_requests: 50, ..Default::default() });
+        let b = drain(ShareGptConfig { n_requests: 50, ..Default::default() });
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+}

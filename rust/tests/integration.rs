@@ -1,0 +1,258 @@
+//! Cross-module integration tests: the paper's features working *together*
+//! (failure injection + rerouting, optimizer -> autoscaler wiring, LoRA
+//! controller -> engine residency, orchestration + diagnostics recovery).
+
+use aibrix::cluster::{ClusterState, GpuKind, PodPhase};
+use aibrix::diagnostics::{diagnose, Action, FailureInjector, InjectedFault};
+use aibrix::engine::{EngineConfig, EngineSim, ModelSpec};
+use aibrix::gateway::{PodSnapshot, Policy, Router};
+use aibrix::lora::{AdapterSpec, LoraController, PodInfo};
+use aibrix::optimizer::loadmonitor::LoadMonitor;
+use aibrix::optimizer::profiles::{ProfileTable, Slo};
+use aibrix::optimizer::GpuOptimizer;
+use aibrix::orchestration::{FleetController, FleetSpec, PlacementStrategy, RayClusterSpec};
+use aibrix::sim::SimTime;
+use aibrix::workload::Request;
+
+fn req(id: u64, prompt: usize, out: usize) -> Request {
+    Request {
+        id,
+        session: 0,
+        tokens: vec![(id % 64) as u32; prompt],
+        output_len: out,
+        arrival: 0,
+        model: "m".into(),
+        adapter: None,
+        user: (id % 4) as u32,
+        shared_prefix_len: 0,
+    }
+}
+
+/// Engine failure mid-run: drained requests reroute to the survivor and
+/// every request still completes.
+#[test]
+fn engine_failure_reroutes_and_completes() {
+    let ec = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+    let mut engines = vec![EngineSim::new(0, 0, ec.clone()), EngineSim::new(1, 1, ec)];
+    let mut router = Router::new(Policy::LeastRequest, 7);
+
+    // Route 24 requests across both engines.
+    for i in 0..24u64 {
+        let r = req(i, 600, 8);
+        let snaps: Vec<PodSnapshot> = engines
+            .iter_mut()
+            .map(|e| PodSnapshot {
+                pod: e.id,
+                ready: !e.is_failed(),
+                stats: e.stats(0),
+                prefix_match_blocks: 0,
+                prompt_blocks: 1,
+                resident_adapters: vec![],
+            })
+            .collect();
+        let pick = router.select(&r, &snaps).unwrap();
+        engines[pick].enqueue(r);
+    }
+
+    // Run a few steps, then kill engine 0.
+    let mut now: SimTime = 0;
+    for _ in 0..4 {
+        for e in engines.iter_mut() {
+            if let Some(dt) = e.step(now, None) {
+                now += dt / 2;
+            }
+        }
+    }
+    let orphans = engines[0].fail_and_drain();
+    assert!(!orphans.is_empty(), "engine 0 should have had work");
+
+    // Gateway reroutes the drained requests (engine 0 not ready).
+    for r in orphans {
+        let snaps: Vec<PodSnapshot> = engines
+            .iter_mut()
+            .map(|e| PodSnapshot {
+                pod: e.id,
+                ready: !e.is_failed(),
+                stats: e.stats(now),
+                prefix_match_blocks: 0,
+                prompt_blocks: 1,
+                resident_adapters: vec![],
+            })
+            .collect();
+        let pick = router.select(&r, &snaps).unwrap();
+        assert_eq!(pick, 1, "must avoid the failed engine");
+        engines[pick].enqueue(r);
+    }
+
+    // Drain.
+    let mut guard = 0;
+    while engines[1].has_work() {
+        if let Some(dt) = engines[1].step(now, None) {
+            now += dt;
+        }
+        guard += 1;
+        assert!(guard < 100_000, "survivor stuck");
+    }
+    let total: usize = engines.iter().map(|e| e.completions.len()).sum();
+    assert_eq!(total, 24, "every request completes despite the failure");
+}
+
+/// Diagnostics verdict drives cluster cordon; the fleet controller
+/// re-provisions gangs away from the cordoned node.
+#[test]
+fn diagnose_cordon_reprovision_cycle() {
+    let mut state = ClusterState::new();
+    for _ in 0..3 {
+        state.add_node(GpuKind::A100, 2, 128);
+    }
+    let mut fleet = FleetController::new(FleetSpec {
+        name: "f".into(),
+        replicas: 2,
+        cluster: RayClusterSpec {
+            model: "m".into(),
+            gpu: GpuKind::A100,
+            workers: 1,
+            placement: PlacementStrategy::Pack,
+        },
+        generation: 1,
+        max_unavailable: 1,
+    });
+    fleet.reconcile(0, &mut state);
+    let ids: Vec<u64> = state.pods.keys().copied().collect();
+    for p in ids {
+        state.mark_ready(1, p);
+    }
+    fleet.reconcile(1, &mut state);
+    assert_eq!(fleet.ready_clusters(), 2);
+
+    // Fault on node 0 -> diagnosis demands cordon.
+    let mut inj = FailureInjector::new();
+    inj.inject(0, 0, InjectedFault::ClockSag);
+    let verdicts = diagnose(&inj.sample(0, 0, 2));
+    assert!(verdicts.iter().any(|d| d.action == Action::DrainAndCordon));
+    state.fail_node(2, 0);
+
+    // Controller heals onto nodes 1/2.
+    for t in 3..8 {
+        fleet.reconcile(t, &mut state);
+        let pending: Vec<u64> = state
+            .pods
+            .values()
+            .filter(|p| p.phase == PodPhase::Pending)
+            .map(|p| p.id)
+            .collect();
+        for p in pending {
+            state.mark_ready(t, p);
+        }
+    }
+    fleet.reconcile(10, &mut state);
+    assert_eq!(fleet.ready_clusters(), 2, "capacity restored");
+    for c in fleet.clusters() {
+        for pod in c.pods() {
+            assert_ne!(state.pods[&pod].node, Some(0), "cordoned node must stay empty");
+        }
+    }
+}
+
+/// GPU optimizer recommendations respond to demand shifts, and cost scales
+/// with demand (MetricSource behavior for the Pod Autoscaler).
+#[test]
+fn optimizer_tracks_demand_shift() {
+    let model = ModelSpec::deepseek_coder_7b();
+    let gpus = vec![GpuKind::A10, GpuKind::L20];
+    let profiles = ProfileTable::build(&model, &gpus, Slo::default());
+    let mut opt = GpuOptimizer::new(profiles, gpus);
+
+    // Light demand.
+    for _ in 0..20 {
+        opt.monitor.record(100, 50, 1.0);
+    }
+    let light = opt.recommend();
+    let light_cost = opt.cost_per_hour(&light);
+
+    // 10x heavier and longer.
+    let mut heavy_monitor = LoadMonitor::new();
+    for _ in 0..200 {
+        heavy_monitor.record(1500, 400, 1.0);
+    }
+    opt.monitor = heavy_monitor;
+    let heavy = opt.recommend();
+    let heavy_cost = opt.cost_per_hour(&heavy);
+
+    assert!(heavy_cost > light_cost, "heavy {heavy_cost} vs light {light_cost}");
+    assert!(
+        heavy.get(&GpuKind::L20).copied().unwrap_or(0) > 0,
+        "long-context demand must buy L20: {heavy:?}"
+    );
+}
+
+/// LoRA controller placements drive engine residency and affinity routing
+/// end to end.
+#[test]
+fn lora_controller_to_engine_affinity() {
+    let mut ctl = LoraController::new(8);
+    ctl.register(AdapterSpec::new("lora-x", "llama-8b"));
+    let pods: Vec<PodInfo> = (0..2)
+        .map(|id| PodInfo { id, base_model: "llama-8b".into(), ready: true })
+        .collect();
+    ctl.reconcile(&pods);
+    let endpoints = ctl.endpoints("lora-x");
+    assert_eq!(endpoints.len(), 1);
+    let warm_pod = endpoints[0] as usize;
+
+    // Engines: warm pod preloads the adapter (sidecar applying the action).
+    let mut ec = EngineConfig::new(GpuKind::A10, ModelSpec::llama_8b());
+    ec.max_loras = 8;
+    let mut engines = vec![EngineSim::new(0, 0, ec.clone()), EngineSim::new(1, 1, ec)];
+    let mut warm_req = req(0, 64, 2);
+    warm_req.adapter = Some("lora-x".into());
+    engines[warm_pod].enqueue(warm_req);
+    let mut now = 0;
+    while engines[warm_pod].has_work() {
+        now += engines[warm_pod].step(now, None).unwrap();
+    }
+    assert_eq!(engines[warm_pod].resident_adapters(), &["lora-x".to_string()]);
+
+    // Router follows residency.
+    let mut router = Router::new(Policy::LeastRequest, 1);
+    let mut r = req(1, 64, 2);
+    r.adapter = Some("lora-x".into());
+    let snaps: Vec<PodSnapshot> = engines
+        .iter_mut()
+        .map(|e| PodSnapshot {
+            pod: e.id,
+            ready: true,
+            stats: e.stats(now),
+            prefix_match_blocks: 0,
+            prompt_blocks: 1,
+            resident_adapters: e.resident_adapters().to_vec(),
+        })
+        .collect();
+    assert_eq!(router.select(&r, &snaps), Some(warm_pod));
+}
+
+/// AI runtime: unified config produces coherent flags for all vendors and
+/// cold-start decisions steer pods to warm nodes.
+#[test]
+fn airuntime_cold_start_and_adapters() {
+    use aibrix::airuntime::adapter::{adapter_for, EngineVendor, UnifiedConfig};
+    use aibrix::airuntime::{ColdStartManager, Tier};
+
+    let cfg = UnifiedConfig {
+        model: "llama-8b".into(),
+        enable_prefix_caching: true,
+        ..Default::default()
+    };
+    for &v in EngineVendor::all() {
+        assert!(!adapter_for(v).launch_args(&cfg).is_empty());
+    }
+
+    let mut csm = ColdStartManager::new(true);
+    csm.on_loaded("llama-8b", 2, 0);
+    let weights = ModelSpec::llama_8b().weights_bytes();
+    assert_eq!(csm.fastest_node("llama-8b", &[0, 1, 2], weights), Some(2));
+    assert_eq!(csm.store.best_tier("llama-8b", 2), Tier::Dram);
+    // Streaming loader beats the disk path for the cold nodes.
+    let legacy = ColdStartManager::new(false);
+    assert!(csm.load_time_us("llama-8b", 0, weights) < legacy.load_time_us("llama-8b", 0, weights));
+}

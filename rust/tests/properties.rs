@@ -1,0 +1,568 @@
+//! Property-based tests over the DESIGN.md §9 invariants, using the
+//! in-repo `pt` mini-framework (seeded, reproducible via AIBRIX_PT_SEED).
+
+use aibrix::cluster::GpuKind;
+use aibrix::engine::prefix::{prompt_block_keys, PrefixCache};
+use aibrix::engine::{BlockAllocator, EngineConfig, EngineSim, ModelSpec};
+use aibrix::gateway::{FairQueue, PodSnapshot, Policy, Router};
+use aibrix::json::{parse, Json};
+use aibrix::kvcache::{EvictionKind, EvictionPolicy};
+use aibrix::metrics::Histogram;
+use aibrix::pt::{forall, gen, Size};
+use aibrix::sim::Simulator;
+use aibrix::util::{percentile, Rng};
+use aibrix::workload::Request;
+
+// -------------------------------------------------------- block allocator
+
+/// Random legal op sequences never violate the allocator's three-state
+/// invariant, and counts always add up.
+#[test]
+fn prop_block_allocator_state_machine() {
+    forall(
+        "block-allocator-states",
+        200,
+        |rng, size| {
+            let ops: Vec<u32> = (0..size.0 * 4).map(|_| rng.next_u32()).collect();
+            ops
+        },
+        |ops| {
+            let mut a = BlockAllocator::new(32, 16);
+            let mut live: Vec<u32> = vec![];
+            let mut cached: Vec<u32> = vec![];
+            for &op in ops {
+                match op % 5 {
+                    0 => {
+                        if let Some(b) = a.alloc() {
+                            live.push(b);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let b = live.swap_remove((op / 8) as usize % live.len());
+                            a.release(b);
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let b = live[(op / 8) as usize % live.len()];
+                            a.retain(b);
+                            a.release(b); // paired: net zero
+                        }
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let b = live.swap_remove((op / 8) as usize % live.len());
+                            if a.release_cached(b) {
+                                cached.push(b);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !cached.is_empty() {
+                            let b = cached.swap_remove((op / 8) as usize % cached.len());
+                            if op % 2 == 0 {
+                                assert!(a.retain_from_zero(b));
+                                live.push(b);
+                            } else {
+                                a.free_cached(b);
+                            }
+                        }
+                    }
+                }
+                if !a.check_invariants() {
+                    return Err(format!("invariants broken after op {op}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ prefix keys
+
+/// insert-then-match covers the whole chain; a diverging suffix matches
+/// exactly the shared prefix blocks.
+#[test]
+fn prop_prefix_chain_consistency() {
+    forall(
+        "prefix-chain",
+        200,
+        |rng, size| {
+            let shared = gen::vec_u32(rng, Size(size.0 * 4), 1000);
+            let a_suffix = gen::vec_u32(rng, size, 1000);
+            let b_suffix = gen::vec_u32(rng, size, 1000);
+            (shared, a_suffix, b_suffix)
+        },
+        |(shared, a_suffix, b_suffix)| {
+            let bs = 16;
+            let mut pa = shared.clone();
+            pa.extend(a_suffix);
+            let mut pb = shared.clone();
+            pb.extend(b_suffix);
+            let ka = prompt_block_keys(&pa, bs);
+            let kb = prompt_block_keys(&pb, bs);
+            let mut cache = PrefixCache::new();
+            let mut alloc = BlockAllocator::new(4096, bs);
+            let blocks: Vec<u32> = ka.iter().map(|_| alloc.alloc().unwrap()).collect();
+            for (k, b) in ka.iter().zip(&blocks) {
+                cache.insert(*k, *b);
+            }
+            if cache.match_len(&ka) != ka.len() {
+                return Err("full self-match failed".into());
+            }
+            let matched = cache.match_len(&kb);
+            let shared_blocks = shared.len() / bs;
+            if matched < shared_blocks.min(kb.len()) {
+                return Err(format!(
+                    "matched {matched} < shared full blocks {shared_blocks}"
+                ));
+            }
+            // Matched region must never exceed the divergence point unless
+            // the suffixes happen to agree block-wise (compare real keys).
+            for i in 0..matched.min(ka.len()).min(kb.len()) {
+                if ka[i] != kb[i] {
+                    return Err(format!("match claims equality at diverging block {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- eviction
+
+/// All eviction policies: every insert is eventually evictable exactly
+/// once; len is consistent; no key is ever returned twice.
+#[test]
+fn prop_eviction_conservation() {
+    for kind in [EvictionKind::Lru, EvictionKind::Fifo, EvictionKind::S3Fifo] {
+        forall(
+            "eviction-conservation",
+            100,
+            |rng, size| {
+                let ops: Vec<(u8, u64)> = (0..size.0 * 2)
+                    .map(|_| (rng.below(3) as u8, rng.below(size.0 as u64 + 1)))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut p = kind.build();
+                let mut resident = std::collections::BTreeSet::new();
+                for &(op, key) in ops {
+                    match op {
+                        0 => {
+                            if resident.insert(key) {
+                                p.on_insert(key);
+                            }
+                        }
+                        1 => {
+                            p.on_access(key);
+                        }
+                        _ => {
+                            if let Some(v) = p.evict() {
+                                if !resident.remove(&v) {
+                                    return Err(format!("{kind:?} evicted non-resident {v}"));
+                                }
+                            } else if !resident.is_empty() {
+                                return Err(format!(
+                                    "{kind:?} refused to evict with {} resident",
+                                    resident.len()
+                                ));
+                            }
+                        }
+                    }
+                    if p.len() != resident.len() {
+                        return Err(format!(
+                            "{kind:?} len {} != model {}",
+                            p.len(),
+                            resident.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+// --------------------------------------------------------------- router
+
+/// The router always returns a ready pod when one exists, never an
+/// un-ready one, and is deterministic per seed.
+#[test]
+fn prop_router_totality() {
+    forall(
+        "router-totality",
+        300,
+        |rng, _| {
+            let n = 1 + gen::usize_up_to(rng, 12);
+            let pods: Vec<(bool, usize, f64, f64)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.chance(0.8),
+                        gen::usize_up_to(rng, 50),
+                        rng.uniform(0.0, 1.0),
+                        rng.uniform(0.0, 500_000.0),
+                    )
+                })
+                .collect();
+            let policy_idx = gen::usize_up_to(rng, 6);
+            (pods, policy_idx, rng.next_u64())
+        },
+        |(pods, policy_idx, seed)| {
+            let snaps: Vec<PodSnapshot> = pods
+                .iter()
+                .enumerate()
+                .map(|(i, &(ready, load, kv, lat))| PodSnapshot {
+                    pod: i,
+                    ready,
+                    stats: aibrix::engine::EngineStats {
+                        waiting: load,
+                        running: load / 2,
+                        kv_utilization: kv,
+                        tokens_per_s: lat / 100.0,
+                        avg_latency_us: lat,
+                        prefix_hit_rate: kv,
+                    },
+                    prefix_match_blocks: load % 11,
+                    prompt_blocks: 10,
+                    resident_adapters: vec![],
+                })
+                .collect();
+            let policy = Policy::all()[*policy_idx];
+            let req = Request {
+                id: 0,
+                session: 0,
+                tokens: vec![1; 160],
+                output_len: 4,
+                arrival: 0,
+                model: "m".into(),
+                adapter: None,
+                user: 0,
+                shared_prefix_len: 0,
+            };
+            let pick1 = Router::new(policy, *seed).select(&req, &snaps);
+            let pick2 = Router::new(policy, *seed).select(&req, &snaps);
+            if pick1 != pick2 {
+                return Err("non-deterministic".into());
+            }
+            let any_ready = snaps.iter().any(|p| p.ready);
+            match pick1 {
+                Some(i) => {
+                    let p = snaps.iter().find(|p| p.pod == i).unwrap();
+                    if !p.ready {
+                        return Err(format!("picked un-ready pod {i}"));
+                    }
+                    Ok(())
+                }
+                None if !any_ready => Ok(()),
+                None => Err("returned None with ready pods".into()),
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------ fair queue
+
+/// Conservation: every pushed request pops exactly once, regardless of
+/// interleaving; within a tenant, order is FIFO.
+#[test]
+fn prop_fair_queue_conservation() {
+    forall(
+        "fairqueue-conservation",
+        200,
+        |rng, size| {
+            let reqs: Vec<(u32, usize)> = (0..size.0 * 2)
+                .map(|_| (rng.below(5) as u32, 1 + gen::usize_up_to(rng, 2000)))
+                .collect();
+            (reqs, rng.uniform(1.0, 1000.0))
+        },
+        |(reqs, quantum)| {
+            let mut q = FairQueue::new(*quantum);
+            for (i, &(user, tokens)) in reqs.iter().enumerate() {
+                q.push(Request {
+                    id: i as u64,
+                    session: 0,
+                    tokens: vec![0; tokens],
+                    output_len: 0,
+                    arrival: 0,
+                    model: "m".into(),
+                    adapter: None,
+                    user,
+                    shared_prefix_len: 0,
+                });
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            let mut last_per_user: std::collections::BTreeMap<u32, u64> = Default::default();
+            while let Some(r) = q.pop() {
+                if !seen.insert(r.id) {
+                    return Err(format!("request {} popped twice", r.id));
+                }
+                if let Some(&last) = last_per_user.get(&r.user) {
+                    if r.id < last {
+                        return Err(format!("tenant {} order violated", r.user));
+                    }
+                }
+                last_per_user.insert(r.user, r.id);
+            }
+            if seen.len() != reqs.len() {
+                return Err(format!("{} popped of {}", seen.len(), reqs.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Histogram percentiles stay within the log-bucket relative-error bound of
+/// exact percentiles.
+#[test]
+fn prop_histogram_accuracy() {
+    forall(
+        "histogram-accuracy",
+        100,
+        |rng, size| {
+            let n = 100 + size.0 * 10;
+            (0..n)
+                .map(|_| (rng.f64_open() * 1e7) as u64 + 1)
+                .collect::<Vec<u64>>()
+        },
+        |samples| {
+            let mut h = Histogram::new();
+            for &s in samples {
+                h.record(s);
+            }
+            let as_f: Vec<f64> = samples.iter().map(|&s| s as f64).collect();
+            for p in [50.0, 90.0, 99.0] {
+                let exact = percentile(&as_f, p);
+                let approx = h.percentile(p) as f64;
+                // Log-bucket low-edge estimate: within ~7% below, never
+                // above by more than one bucket.
+                if approx > exact * 1.07 + 1.0 || approx < exact * 0.86 - 1.0 {
+                    return Err(format!("p{p}: approx {approx} vs exact {exact}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- engine
+
+/// Any workload the engine admits completes: no stuck sequences, no leaked
+/// blocks, allocator invariants hold throughout.
+#[test]
+fn prop_engine_liveness_and_no_leaks() {
+    forall(
+        "engine-liveness",
+        40,
+        |rng, size| {
+            let n = 1 + gen::usize_up_to(rng, size.0 / 2 + 1);
+            let reqs: Vec<(usize, usize)> = (0..n)
+                .map(|_| (1 + gen::usize_up_to(rng, 3000), 1 + gen::usize_up_to(rng, 40)))
+                .collect();
+            let chunked = rng.chance(0.5);
+            let prefix = rng.chance(0.5);
+            (reqs, chunked, prefix)
+        },
+        |(reqs, chunked, prefix)| {
+            let mut cfg = EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+            cfg.chunked_prefill = *chunked;
+            if *chunked {
+                cfg.max_batched_tokens = 512;
+            }
+            cfg.prefix_caching = *prefix;
+            let mut e = EngineSim::new(0, 0, cfg);
+            for (i, &(prompt, out)) in reqs.iter().enumerate() {
+                e.enqueue(Request {
+                    id: i as u64,
+                    session: 0,
+                    tokens: vec![(i % 100) as u32; prompt],
+                    output_len: out,
+                    arrival: 0,
+                    model: "m".into(),
+                    adapter: None,
+                    user: 0,
+                    shared_prefix_len: 0,
+                });
+            }
+            let mut now = 0;
+            let mut steps = 0;
+            while e.has_work() {
+                match e.step(now, None) {
+                    Some(dt) => now += dt,
+                    None => break,
+                }
+                if !e.check_invariants() {
+                    return Err("allocator invariants broken mid-run".into());
+                }
+                steps += 1;
+                if steps > 200_000 {
+                    return Err("engine did not drain (livelock?)".into());
+                }
+            }
+            if e.completions.len() != reqs.len() {
+                return Err(format!(
+                    "completed {} of {}",
+                    e.completions.len(),
+                    reqs.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------------- sim
+
+/// Event delivery is globally time-ordered and ties respect insertion
+/// order.
+#[test]
+fn prop_sim_total_order() {
+    forall(
+        "sim-order",
+        200,
+        |rng, size| {
+            (0..size.0 * 2)
+                .map(|_| rng.below(1000))
+                .collect::<Vec<u64>>()
+        },
+        |times| {
+            let mut sim = Simulator::new();
+            for (i, &t) in times.iter().enumerate() {
+                sim.schedule_at(t, i);
+            }
+            let mut last_t = 0;
+            let mut last_seq_at_t: Option<usize> = None;
+            while let Some((t, i)) = sim.next_event() {
+                if t < last_t {
+                    return Err("time went backwards".into());
+                }
+                if t == last_t {
+                    if let Some(prev) = last_seq_at_t {
+                        if times[prev] == times[i] && prev > i {
+                            return Err("tie broke insertion order".into());
+                        }
+                    }
+                }
+                last_t = t;
+                last_seq_at_t = Some(i);
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------------ json
+
+/// Serializer/parser round-trip is the identity on arbitrary JSON trees.
+#[test]
+fn prop_json_round_trip() {
+    fn arbitrary(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| arbitrary(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), arbitrary(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        "json-round-trip",
+        300,
+        |rng, _| arbitrary(rng, 3),
+        |v| {
+            let text = v.to_string();
+            let back = parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+            if &back != v {
+                return Err(format!("round trip changed value: {v} -> {back}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------- scalers
+
+/// Every scaler's desired replica count stays within [min, max] under
+/// arbitrary metric streams.
+#[test]
+fn prop_scalers_bounded() {
+    use aibrix::autoscaler::{Apa, Hpa, Kpa, Scaler};
+    forall(
+        "scalers-bounded",
+        100,
+        |rng, size| {
+            (0..size.0 * 2)
+                .map(|_| rng.uniform(0.0, 500.0))
+                .collect::<Vec<f64>>()
+        },
+        |loads| {
+            let (min, max) = (2usize, 9usize);
+            let mut scalers: Vec<Box<dyn Scaler>> = vec![
+                Box::new(Hpa::new(8.0, min, max)),
+                Box::new(Kpa::new(8.0, min, max)),
+                Box::new(Apa::new(8.0, min, max)),
+            ];
+            for s in scalers.iter_mut() {
+                let mut current = 4;
+                for (i, &l) in loads.iter().enumerate() {
+                    let now = i as u64 * 1_000_000;
+                    s.observe(now, l);
+                    let d = s.desired(now, current);
+                    if current >= min && current <= max && (d < min || d > max) {
+                        return Err(format!("{} returned {d} outside [{min},{max}]", s.name()));
+                    }
+                    current = d.clamp(min, max);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// -------------------------------------------------------------- tokenizer
+
+/// Prefix stability over arbitrary ASCII strings.
+#[test]
+fn prop_tokenizer_prefix_stable() {
+    use aibrix::tokenizer::Tokenizer;
+    forall(
+        "tokenizer-prefix",
+        200,
+        |rng, size| {
+            let a: String = (0..rng.below(size.0 as u64 + 1))
+                .map(|_| (rng.below(94) as u8 + 32) as char)
+                .collect();
+            let b: String = (0..rng.below(size.0 as u64 + 1))
+                .map(|_| (rng.below(94) as u8 + 32) as char)
+                .collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let t = Tokenizer::new(512);
+            let ta = t.encode(a);
+            let tab = t.encode(&format!("{a}{b}"));
+            if tab.len() < ta.len() || tab[..ta.len()] != ta[..] {
+                return Err("prefix stability violated".into());
+            }
+            Ok(())
+        },
+    );
+}
