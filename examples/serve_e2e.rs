@@ -19,7 +19,7 @@ use aibrix::server::{http_request, Handler, HttpRequest, HttpResponse, HttpServe
 use aibrix::tokenizer::Tokenizer;
 use aibrix::util::stats::Summary;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> aibrix::util::err::Result<()> {
     let artifacts = PathBuf::from(
         std::env::var("AIBRIX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         .min(2);
     let replicas: Vec<RealEngineHandle> = (0..n_replicas)
         .map(|_| RealEngineHandle::spawn(&artifacts))
-        .collect::<anyhow::Result<_>>()?;
+        .collect::<aibrix::util::err::Result<_>>()?;
     println!(
         "{} engine replica(s) ready in {:.1}s (vocab={}, prompt window={}, decode budget={})",
         replicas.len(),

@@ -22,7 +22,7 @@ use std::hint::black_box;
 use std::time::Instant;
 
 /// Median ns/op over `runs` timed batches of `iters` calls.
-fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
     // Warmup.
     for _ in 0..iters / 4 {
         f();
@@ -37,7 +37,12 @@ fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) {
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!("{name:<44} {:>10.0} ns/op", samples[2]);
+    samples[2]
 }
+
+/// The documented routing budget: the gateway decides per request, so one
+/// scoring-pipeline decision must stay far below engine-step timescales.
+const ROUTER_BUDGET_NS: f64 = 5_000.0;
 
 fn request(tokens: usize) -> Request {
     Request {
@@ -76,20 +81,33 @@ fn snapshots(n: usize) -> Vec<PodSnapshot> {
 fn main() {
     println!("== coordinator hot-path microbenchmarks ==\n");
 
-    // Router decision @ 8 pods, every policy.
+    // Router decision @ 8 pods: every preset plus a 3-scorer weighted mix,
+    // each asserted against the <5µs decision budget (the pipeline path is
+    // allocation-free; a miss here is a hot-path regression).
     let snaps = snapshots(8);
     let req = request(1600);
-    for policy in Policy::all() {
+    let mut policies = Policy::all();
+    policies.push(
+        Policy::parse("weighted:prefix=0.5,least-request=0.3,least-latency=0.2")
+            .expect("valid weighted policy"),
+    );
+    for policy in policies {
         let mut router = Router::new(policy, 1);
-        bench(&format!("router.select[{}] @8 pods", policy.name()), 200_000, || {
+        let ns = bench(&format!("router.select[{}] @8 pods", policy.name()), 200_000, || {
             black_box(router.select(&req, &snaps));
         });
+        assert!(
+            ns < ROUTER_BUDGET_NS,
+            "router.select[{}] blew the {ROUTER_BUDGET_NS}ns budget: {ns:.0}ns",
+            policy.name()
+        );
     }
     let snaps64 = snapshots(64);
     let mut router = Router::new(Policy::LeastRequest, 1);
-    bench("router.select[least-request] @64 pods", 100_000, || {
+    let ns = bench("router.select[least-request] @64 pods", 100_000, || {
         black_box(router.select(&req, &snaps64));
     });
+    assert!(ns < ROUTER_BUDGET_NS, "64-pod decision blew the budget: {ns:.0}ns");
 
     // Block allocator.
     let mut alloc = BlockAllocator::new(4096, 16);

@@ -2,7 +2,7 @@
 //! generate per batch size). Used by the §Perf pass in EXPERIMENTS.md.
 //! Run: `cargo run --release --bin perf_probe` (needs `make artifacts`).
 use std::time::Instant;
-fn main() -> anyhow::Result<()> {
+fn main() -> aibrix::util::err::Result<()> {
     let dir_buf = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     let dir = dir_buf.as_path();
     if !dir.join("manifest.json").exists() {

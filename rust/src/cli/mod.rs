@@ -13,13 +13,24 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("flag --{0} has invalid value {1:?}: {2}")]
     BadValue(String, String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => write!(f, "flag --{flag} expects a value"),
+            CliError::BadValue(flag, value, why) => {
+                write!(f, "flag --{flag} has invalid value {value:?}: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv[1..]`. The first non-flag token is the subcommand;
@@ -71,6 +82,20 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Typed f64 flag constrained to `[lo, hi]` — out-of-range or
+    /// unparsable values are errors, never silently clamped.
+    pub fn get_f64_in(&self, name: &str, default: f64, lo: f64, hi: f64) -> Result<f64, CliError> {
+        let v = self.get::<f64>(name, default)?;
+        if !v.is_finite() || v < lo || v > hi {
+            return Err(CliError::BadValue(
+                name.to_string(),
+                format!("{v}"),
+                format!("must be in [{lo}, {hi}]"),
+            ));
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +126,19 @@ mod tests {
     fn bad_value_is_error() {
         let a = Args::parse(&argv("x --n abc")).unwrap();
         assert!(a.get::<usize>("n", 1).is_err());
+    }
+
+    #[test]
+    fn f64_range_validated() {
+        let a = Args::parse(&argv("serve --prefix-threshold 0.4")).unwrap();
+        assert_eq!(a.get_f64_in("prefix-threshold", 0.3, 0.0, 1.0).unwrap(), 0.4);
+        let bad = Args::parse(&argv("serve --prefix-threshold 1.5")).unwrap();
+        assert!(bad.get_f64_in("prefix-threshold", 0.3, 0.0, 1.0).is_err());
+        let garbage = Args::parse(&argv("serve --prefix-threshold abc")).unwrap();
+        assert!(garbage.get_f64_in("prefix-threshold", 0.3, 0.0, 1.0).is_err());
+        // Absent flag falls back to the default.
+        let none = Args::parse(&argv("serve")).unwrap();
+        assert_eq!(none.get_f64_in("prefix-threshold", 0.3, 0.0, 1.0).unwrap(), 0.3);
     }
 
     #[test]

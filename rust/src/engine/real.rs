@@ -10,9 +10,8 @@ use std::collections::VecDeque;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
-
 use crate::runtime::TinyLmRuntime;
+use crate::util::err::{Error, Result};
 
 /// A queued real request.
 #[derive(Debug, Clone)]
@@ -240,7 +239,7 @@ impl RealEngineHandle {
         });
         let (max_prompt, max_new_tokens, vocab) = ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during load"))??;
+            .map_err(|_| Error::msg("engine thread died during load"))??;
         Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab })
     }
 
@@ -249,8 +248,8 @@ impl RealEngineHandle {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Cmd::Serve(req, tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine thread dropped request"))
+            .map_err(|_| Error::msg("engine thread gone"))?;
+        rx.recv().map_err(|_| Error::msg("engine thread dropped request"))
     }
 
     pub fn stop(&self) {

@@ -47,7 +47,7 @@ impl Workload for MixedWorkload {
 }
 
 pub struct PolicyRow {
-    pub policy: &'static str,
+    pub policy: String,
     pub mean_ms: f64,
     pub p99_ms: f64,
     pub ttft_mean_ms: f64,
@@ -86,7 +86,7 @@ pub fn run_policy(p: &RoutingParams, policy: Policy) -> PolicyRow {
     );
     let lat = r.latency_ms();
     PolicyRow {
-        policy: policy.name(),
+        policy: label_for(policy),
         mean_ms: crate::util::mean(&lat),
         p99_ms: percentile(&lat, 99.0),
         ttft_mean_ms: r.ttft_summary().mean,
@@ -94,9 +94,45 @@ pub fn run_policy(p: &RoutingParams, policy: Policy) -> PolicyRow {
     }
 }
 
-/// All six policies on the same workload/seed.
+/// Display label: presets use the paper name; weighted mixes show weights.
+fn label_for(policy: Policy) -> String {
+    match policy {
+        Policy::Weighted(cfg) => {
+            let mut parts = Vec::new();
+            for (w, name) in [
+                (cfg.prefix_affinity, "prefix"),
+                (cfg.least_request, "load"),
+                (cfg.least_kv_cache, "kv"),
+                (cfg.least_latency, "lat"),
+                (cfg.throughput, "tps"),
+                (cfg.lora_residency, "lora"),
+                (cfg.fairness, "fair"),
+            ] {
+                if w > 0.0 {
+                    parts.push(format!("{name}={w:.2}"));
+                }
+            }
+            format!("weighted[{}]", parts.join(","))
+        }
+        p => p.name().to_string(),
+    }
+}
+
+/// The §3.2.2 hybrid the closed enum could not express: prefix affinity
+/// blended with load spreading.
+pub fn hybrid_prefix_load() -> Policy {
+    let mut cfg = crate::gateway::PipelineConfig::single("prefix", 0.6);
+    cfg.least_request = 0.4;
+    Policy::Weighted(cfg)
+}
+
+/// All six paper policies plus the weighted hybrid, same workload/seed.
 pub fn run_routing(p: &RoutingParams) -> Vec<PolicyRow> {
-    Policy::all().into_iter().map(|pol| run_policy(p, pol)).collect()
+    Policy::all()
+        .into_iter()
+        .chain(std::iter::once(hybrid_prefix_load()))
+        .map(|pol| run_policy(p, pol))
+        .collect()
 }
 
 pub fn render(rows: &[PolicyRow]) -> String {

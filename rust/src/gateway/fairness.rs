@@ -1,10 +1,17 @@
-//! Per-tenant fair dispatch queue (workload isolation, §3.1).
+//! Per-tenant fairness (workload isolation, §3.1).
 //!
-//! When every pod is saturated the gateway queues requests; dispatch order
-//! uses deficit round-robin weighted by *tokens*, so one tenant flooding
-//! long prompts cannot starve others — the LLM analogue of fair queuing
-//! (cf. VTC in the serving-fairness literature).
+//! Two cooperating pieces:
+//!   * [`FairQueue`] — when every pod is saturated the gateway queues
+//!     requests; dispatch order uses deficit round-robin weighted by
+//!     *tokens*, so one tenant flooding long prompts cannot starve others —
+//!     the LLM analogue of fair queuing (cf. VTC in the serving-fairness
+//!     literature).
+//!   * [`TenantUsage`] — a decayed per-tenant token meter whose
+//!     [`TenantUsage::share`] feeds the routing pipeline's fairness scorer
+//!     ([`super::scoring::ScoreCtx`]): heavy tenants consolidate onto busy
+//!     pods, keeping idle capacity responsive for light tenants.
 
+use crate::sim::SimTime;
 use crate::workload::Request;
 use std::collections::{HashMap, VecDeque};
 
@@ -86,6 +93,69 @@ impl FairQueue {
     }
 }
 
+/// Exponentially-decayed per-tenant token usage: the fairness signal the
+/// gateway hands the routing pipeline. Everything decays with the same
+/// half-life, so `share` is a stable fraction of *recent* traffic.
+#[derive(Debug)]
+pub struct TenantUsage {
+    /// Half-life of the decay, µs of sim/wall time.
+    pub halflife_us: f64,
+    /// user -> (last update time, decayed token count).
+    tenants: HashMap<u32, (SimTime, f64)>,
+    /// (last update time, decayed total token count).
+    global: (SimTime, f64),
+}
+
+impl TenantUsage {
+    pub fn new(halflife_us: f64) -> TenantUsage {
+        TenantUsage { halflife_us, tenants: HashMap::new(), global: (0, 0.0) }
+    }
+
+    fn decayed(&self, value: f64, last: SimTime, now: SimTime) -> f64 {
+        if now <= last || value == 0.0 {
+            return value;
+        }
+        value * 0.5f64.powf((now - last) as f64 / self.halflife_us)
+    }
+
+    /// Charge `tokens` to `user` at time `now`.
+    pub fn record(&mut self, now: SimTime, user: u32, tokens: u64) {
+        let (last, value) = self.tenants.get(&user).copied().unwrap_or((now, 0.0));
+        let decayed = self.decayed(value, last, now);
+        self.tenants.insert(user, (now, decayed + tokens as f64));
+        let g = self.decayed(self.global.1, self.global.0, now);
+        self.global = (now, g + tokens as f64);
+        // Bound memory under high tenant cardinality: entries that have
+        // decayed to dust carry no share signal and can be dropped.
+        if self.tenants.len() > 1024 {
+            let halflife = self.halflife_us;
+            self.tenants.retain(|_, &mut (last, value)| {
+                let dt = now.saturating_sub(last) as f64;
+                value * 0.5f64.powf(dt / halflife) >= 0.5
+            });
+        }
+    }
+
+    /// `user`'s fraction of recent token usage, in `[0, 1]`; 0.0 when the
+    /// meter is empty (no traffic yet).
+    pub fn share(&self, now: SimTime, user: u32) -> f64 {
+        let total = self.decayed(self.global.1, self.global.0, now);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let (last, value) = self.tenants.get(&user).copied().unwrap_or((now, 0.0));
+        (self.decayed(value, last, now) / total).clamp(0.0, 1.0)
+    }
+}
+
+impl Default for TenantUsage {
+    /// 60s half-life: long enough to see sustained hogging, short enough
+    /// to forgive bursts.
+    fn default() -> TenantUsage {
+        TenantUsage::new(60_000_000.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +226,23 @@ mod tests {
         let mut q = FairQueue::new(1.0); // tiny quantum
         q.push(req(1, 0, 100_000));
         assert_eq!(q.pop().unwrap().id, 1, "must not livelock");
+    }
+
+    #[test]
+    fn tenant_usage_share_tracks_and_decays() {
+        let mut u = TenantUsage::new(1_000_000.0); // 1s half-life
+        assert_eq!(u.share(0, 7), 0.0, "empty meter");
+        u.record(0, 7, 3000);
+        u.record(0, 8, 1000);
+        assert!((u.share(0, 7) - 0.75).abs() < 1e-9);
+        assert!((u.share(0, 8) - 0.25).abs() < 1e-9);
+        // Uniform decay leaves shares unchanged...
+        assert!((u.share(2_000_000, 7) - 0.75).abs() < 1e-9);
+        // ...but fresh traffic from the other tenant shifts them.
+        u.record(2_000_000, 8, 3000);
+        assert!(u.share(2_000_000, 8) > u.share(2_000_000, 7));
+        // Unknown tenants are 0.
+        assert_eq!(u.share(2_000_000, 99), 0.0);
     }
 
     #[test]

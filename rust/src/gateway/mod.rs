@@ -1,19 +1,58 @@
 //! Advanced LLM gateway (§3.2.2, Figure 3).
 //!
 //! The paper extends Envoy Gateway with LLM-aware routing; here the gateway
-//! is native Rust (DESIGN.md §2): [`router`] implements the six routing
-//! policies the paper lists, [`ratelimit`] the TPM/RPM token buckets, and
-//! [`fairness`] the per-tenant dispatch queue. [`Gateway`] composes them
+//! is native Rust (DESIGN.md §2), built around a **composable scoring
+//! pipeline** rather than a closed policy enum:
+//!
+//!   * [`scoring`] — the routing core. Each pod snapshot is scored by a set
+//!     of scorers (prefix-affinity, least-request, least-kv-cache,
+//!     least-latency, throughput, LoRA-residency, fairness), each emitting
+//!     `[0, 1]`; a weighted sum with deterministic tie-breaking (lower
+//!     in-flight load, then slice order) picks the pod. An overload guard
+//!     strips prefix/latency credit from pods above `2x cluster-min + 4`
+//!     in-flight so affinity can never create hotspots.
+//!   * [`router`] — [`Policy`]: the six paper policies (`random`,
+//!     `throughput`, `least-request`, `least-kv-cache`, `least-latency`,
+//!     `prefix-cache-aware`) are canned presets over the pipeline: one
+//!     scorer at weight 1.0 reproduces the legacy closed-enum routing
+//!     whenever the primary signal distinguishes the pods
+//!     (property-tested against the ported legacy match in
+//!     `tests/gateway_pipeline.rs`); on *exactly equal* signals the
+//!     pipeline breaks the tie toward the lower in-flight load where the
+//!     legacy match took pure slice order — a deliberate improvement
+//!     (ties go to the idler pod), not an oversight. Meanwhile
+//!     [`Policy::Weighted`] / `weighted:prefix=0.6,least-request=0.4`
+//!     expresses hybrids the enum could not.
+//!   * [`ratelimit`] — the TPM/RPM token buckets.
+//!   * [`fairness`] — the per-tenant DRR dispatch queue plus
+//!     [`TenantUsage`], the decayed token meter behind the fairness scorer.
+//!
+//! Preset -> pipeline mapping: `throughput`/`least-request`/
+//! `least-kv-cache` are their single scorer at weight 1.0;
+//! `least-latency` adds the overload guard (outlier ejection);
+//! `prefix-cache-aware[=t]` is the prefix scorer (binary above threshold
+//! `t`, default 0.3) whose load tie-break yields the legacy
+//! "least-loaded warm pod, else least-request" behavior; `random` bypasses
+//! scoring via the seeded RNG.
+//!
+//! **Perf budget**: one routing decision must stay under **5µs** (the
+//! coordinator serves every request; engine steps are ms-scale). The
+//! pipeline is allocation-free per request — scratch lives in the router —
+//! and `benches/microbench.rs` asserts the budget in release mode.
+//!
+//! [`Gateway`] composes rate limiting -> fairness accounting -> routing
 //! into the request entry point used by the sim harness and the HTTP
 //! server.
 
 pub mod fairness;
 pub mod ratelimit;
 pub mod router;
+pub mod scoring;
 
-pub use fairness::FairQueue;
+pub use fairness::{FairQueue, TenantUsage};
 pub use ratelimit::{RateLimitConfig, RateLimiter};
-pub use router::{PodSnapshot, Policy, Router};
+pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD};
+pub use scoring::{PipelineConfig, ScoreCtx, ScoringPipeline};
 
 use crate::sim::SimTime;
 use crate::workload::Request;
@@ -29,15 +68,17 @@ pub enum Decision {
     NoCapacity,
 }
 
-/// The LLM gateway: rate limiting -> routing.
+/// The LLM gateway: rate limiting -> fairness accounting -> routing.
 pub struct Gateway {
     pub router: Router,
     pub limiter: Option<RateLimiter>,
+    /// Decayed per-tenant token meter feeding the fairness scorer.
+    pub usage: TenantUsage,
 }
 
 impl Gateway {
     pub fn new(policy: Policy, seed: u64) -> Gateway {
-        Gateway { router: Router::new(policy, seed), limiter: None }
+        Gateway { router: Router::new(policy, seed), limiter: None, usage: TenantUsage::default() }
     }
 
     pub fn with_rate_limits(mut self, cfg: RateLimitConfig) -> Gateway {
@@ -46,19 +87,20 @@ impl Gateway {
     }
 
     /// Admit and route one request against the current pod snapshots.
-    pub fn dispatch(
-        &mut self,
-        now: SimTime,
-        req: &Request,
-        pods: &[PodSnapshot],
-    ) -> Decision {
+    pub fn dispatch(&mut self, now: SimTime, req: &Request, pods: &[PodSnapshot]) -> Decision {
         if let Some(lim) = &mut self.limiter {
             if let Err(retry_after_ms) = lim.check(now, req.user, req.total_tokens() as u64) {
                 return Decision::RateLimited { retry_after_ms };
             }
         }
-        match self.router.select(req, pods) {
-            Some(pod) => Decision::Route(pod),
+        // Fairness context reflects usage *before* this request; admitted
+        // tokens are charged only on a successful route.
+        let ctx = ScoreCtx { tenant_share: self.usage.share(now, req.user) };
+        match self.router.select_with_ctx(req, pods, &ctx) {
+            Some(pod) => {
+                self.usage.record(now, req.user, req.total_tokens() as u64);
+                Decision::Route(pod)
+            }
             None => Decision::NoCapacity,
         }
     }
@@ -129,5 +171,33 @@ mod tests {
             gw.dispatch(61 * SECONDS, &req(7, 10), &pods),
             Decision::Route(_)
         ));
+    }
+
+    #[test]
+    fn fairness_share_steers_heavy_tenant_to_busy_pod() {
+        // A fairness-weighted gateway: tenant 1 has hogged tokens, tenant 2
+        // is new. The heavy tenant consolidates onto the busy pod; the
+        // light tenant gets the idle one.
+        let policy = Policy::parse("weighted:fairness=1").unwrap();
+        let mut gw = Gateway::new(policy, 1);
+        let mut pods = vec![pod(0), pod(1)];
+        pods[0].stats.waiting = 9;
+        for _ in 0..50 {
+            gw.usage.record(0, 1, 10_000);
+        }
+        gw.usage.record(0, 2, 10); // share(2) ~ 0
+        assert_eq!(gw.dispatch(1000, &req(1, 10), &pods), Decision::Route(0));
+        assert_eq!(gw.dispatch(1000, &req(2, 10), &pods), Decision::Route(1));
+    }
+
+    #[test]
+    fn dispatch_charges_usage_only_on_route() {
+        let mut gw = Gateway::new(Policy::LeastRequest, 1);
+        let mut down = pod(0);
+        down.ready = false;
+        assert_eq!(gw.dispatch(0, &req(3, 500), &[down]), Decision::NoCapacity);
+        assert_eq!(gw.usage.share(0, 3), 0.0, "rejected request not charged");
+        assert!(matches!(gw.dispatch(0, &req(3, 500), &[pod(0)]), Decision::Route(0)));
+        assert!(gw.usage.share(0, 3) > 0.99, "sole tenant owns the meter");
     }
 }

@@ -1,12 +1,16 @@
-//! Routing policies (§3.2.2).
+//! Routing policies (§3.2.2) over the composable scoring pipeline.
 //!
 //! "For each pending request, the current version of AIBrix determines the
 //! target instance based on one of the following routing policies: random,
 //! throughput, least-request, least-kv-cache, least-latency,
-//! prefix-cache-aware." Each policy scores [`PodSnapshot`]s — cheap
-//! point-in-time views the harness/server refreshes per request — and the
-//! decision path is allocation-free (§Perf target: <5µs per decision).
+//! prefix-cache-aware." Each of those is a *preset* of
+//! [`super::scoring::ScoringPipeline`] (a single scorer at weight 1.0);
+//! [`Policy::Weighted`] exposes arbitrary weight mixes. Decisions run over
+//! [`PodSnapshot`]s — cheap point-in-time views the harness/server
+//! refreshes per request — and the decision path is allocation-free
+//! (§Perf target: <5µs per decision, asserted by `benches/microbench.rs`).
 
+use super::scoring::{PipelineConfig, ScoreCtx, ScoringPipeline};
 use crate::engine::EngineStats;
 use crate::util::Rng;
 use crate::workload::Request;
@@ -28,16 +32,20 @@ pub struct PodSnapshot {
 }
 
 impl PodSnapshot {
+    /// Fraction of the prompt covered by this pod's prefix cache, clamped
+    /// to `[0, 1]`: a racing snapshot can report more matched blocks than
+    /// the prompt holds (cache refreshed between the two reads), and a
+    /// zero-block prompt has no prefix to hit.
     pub fn prefix_hit_fraction(&self) -> f64 {
         if self.prompt_blocks == 0 {
             0.0
         } else {
-            self.prefix_match_blocks as f64 / self.prompt_blocks as f64
+            (self.prefix_match_blocks as f64 / self.prompt_blocks as f64).min(1.0)
         }
     }
 }
 
-/// The paper's routing policies.
+/// The paper's routing policies, plus arbitrary weighted mixes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Policy {
     /// Randomly selects an available instance.
@@ -53,19 +61,68 @@ pub enum Policy {
     /// Prefer instances whose prefix cache covers at least `threshold` of
     /// the prompt; falls back to least-request below the threshold.
     PrefixCacheAware { threshold: f64 },
+    /// Custom weighted scoring mix (the open pipeline form).
+    Weighted(PipelineConfig),
 }
 
+/// Default prefix-coverage threshold for `prefix-cache-aware`.
+pub const DEFAULT_PREFIX_THRESHOLD: f64 = 0.3;
+
 impl Policy {
-    pub fn parse(s: &str) -> Option<Policy> {
+    /// Parse a policy string. Accepted forms:
+    ///   * the six paper names (`random`, `throughput`, `least-request`,
+    ///     `least-kv-cache`, `least-latency`, `prefix-cache-aware`),
+    ///   * `prefix-cache-aware=<f64 in [0,1]>` for an explicit threshold,
+    ///   * `weighted:key=w,key=w,...` with keys `prefix`, `least-request`,
+    ///     `least-kv-cache`, `least-latency`, `throughput`, `lora`,
+    ///     `fairness`, plus `threshold=<f64>`.
+    /// Garbage is an error, never silently defaulted.
+    pub fn parse(s: &str) -> Result<Policy, String> {
         match s {
-            "random" => Some(Policy::Random),
-            "throughput" => Some(Policy::Throughput),
-            "least-request" => Some(Policy::LeastRequest),
-            "least-kv-cache" => Some(Policy::LeastKvCache),
-            "least-latency" => Some(Policy::LeastLatency),
-            "prefix-cache-aware" => Some(Policy::PrefixCacheAware { threshold: 0.3 }),
-            _ => None,
+            "random" => return Ok(Policy::Random),
+            "throughput" => return Ok(Policy::Throughput),
+            "least-request" => return Ok(Policy::LeastRequest),
+            "least-kv-cache" => return Ok(Policy::LeastKvCache),
+            "least-latency" => return Ok(Policy::LeastLatency),
+            "prefix-cache-aware" => {
+                return Ok(Policy::PrefixCacheAware { threshold: DEFAULT_PREFIX_THRESHOLD })
+            }
+            _ => {}
         }
+        if let Some(v) = s.strip_prefix("prefix-cache-aware=") {
+            let threshold: f64 = v
+                .parse()
+                .map_err(|_| format!("prefix-cache-aware threshold {v:?} is not a number"))?;
+            if !threshold.is_finite() || !(0.0..=1.0).contains(&threshold) {
+                return Err(format!("prefix-cache-aware threshold {v} must be in [0, 1]"));
+            }
+            return Ok(Policy::PrefixCacheAware { threshold });
+        }
+        if let Some(spec) = s.strip_prefix("weighted:") {
+            let mut cfg = PipelineConfig::default();
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let (key, val) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("weighted term {part:?} must be key=value"))?;
+                let w: f64 = val
+                    .parse()
+                    .map_err(|_| format!("weighted term {key}={val:?} is not a number"))?;
+                match key {
+                    "prefix" => cfg.prefix_affinity = w,
+                    "least-request" => cfg.least_request = w,
+                    "least-kv-cache" => cfg.least_kv_cache = w,
+                    "least-latency" => cfg.least_latency = w,
+                    "throughput" => cfg.throughput = w,
+                    "lora" => cfg.lora_residency = w,
+                    "fairness" => cfg.fairness = w,
+                    "threshold" => cfg.prefix_threshold = w,
+                    _ => return Err(format!("unknown weighted scorer {key:?}")),
+                }
+            }
+            cfg.validate()?;
+            return Ok(Policy::Weighted(cfg));
+        }
+        Err(format!("unknown routing policy {s:?}"))
     }
 
     pub fn name(&self) -> &'static str {
@@ -76,9 +133,11 @@ impl Policy {
             Policy::LeastKvCache => "least-kv-cache",
             Policy::LeastLatency => "least-latency",
             Policy::PrefixCacheAware { .. } => "prefix-cache-aware",
+            Policy::Weighted(_) => "weighted",
         }
     }
 
+    /// The six paper policies (presets; `Weighted` is the open form).
     pub fn all() -> Vec<Policy> {
         vec![
             Policy::Random,
@@ -86,146 +145,118 @@ impl Policy {
             Policy::LeastRequest,
             Policy::LeastKvCache,
             Policy::LeastLatency,
-            Policy::PrefixCacheAware { threshold: 0.3 },
+            Policy::PrefixCacheAware { threshold: DEFAULT_PREFIX_THRESHOLD },
         ]
+    }
+
+    /// Scoring-pipeline preset for this policy; None for `Random` (which
+    /// bypasses scoring entirely).
+    pub fn pipeline_config(&self) -> Option<PipelineConfig> {
+        let cfg = match *self {
+            Policy::Random => return None,
+            Policy::Throughput => PipelineConfig::single("throughput", 1.0),
+            Policy::LeastRequest => PipelineConfig::single("least-request", 1.0),
+            Policy::LeastKvCache => PipelineConfig::single("least-kv-cache", 1.0),
+            Policy::LeastLatency => PipelineConfig::single("least-latency", 1.0),
+            Policy::PrefixCacheAware { threshold } => {
+                let mut c = PipelineConfig::single("prefix", 1.0);
+                c.prefix_threshold = threshold;
+                c
+            }
+            Policy::Weighted(cfg) => cfg,
+        };
+        Some(cfg)
     }
 }
 
-/// Stateless-per-request router (the RNG is the only state).
+/// Stateless-per-request router (the RNG and scratch are the only state).
 pub struct Router {
     policy: Policy,
     rng: Rng,
-    /// LoRA affinity: prefer pods with the adapter resident (2x admitted-
-    /// request tolerance before spilling to a cold pod).
+    /// None only for `Policy::Random`.
+    pipeline: Option<ScoringPipeline>,
+    /// LoRA affinity pre-filter: prefer pods with the adapter resident
+    /// (2x admitted-request tolerance before spilling to a cold pod).
+    /// On by default for the paper presets (their legacy behavior), off
+    /// for `Policy::Weighted` — a weighted mix states its own intent, and
+    /// the `lora_residency` scorer would be unreachable behind the
+    /// short-circuit.
     pub lora_affinity: bool,
 }
 
 impl Router {
     pub fn new(policy: Policy, seed: u64) -> Router {
-        Router { policy, rng: Rng::new(seed), lora_affinity: true }
+        Router {
+            policy,
+            rng: Rng::new(seed),
+            pipeline: policy.pipeline_config().map(ScoringPipeline::new),
+            lora_affinity: !matches!(policy, Policy::Weighted(_)),
+        }
+    }
+
+    /// Router over an explicit weighted pipeline.
+    pub fn with_pipeline(cfg: PipelineConfig, seed: u64) -> Router {
+        Router::new(Policy::Weighted(cfg), seed)
     }
 
     pub fn policy(&self) -> Policy {
         self.policy
     }
 
+    /// The active scoring pipeline (None for `random`).
+    pub fn pipeline(&self) -> Option<&ScoringPipeline> {
+        self.pipeline.as_ref()
+    }
+
     /// Pick a pod for `req`; None when no pod is ready.
     pub fn select(&mut self, req: &Request, pods: &[PodSnapshot]) -> Option<usize> {
+        self.select_with_ctx(req, pods, &ScoreCtx::default())
+    }
+
+    /// `select` with gateway-computed context (fairness share etc).
+    pub fn select_with_ctx(
+        &mut self,
+        req: &Request,
+        pods: &[PodSnapshot],
+        ctx: &ScoreCtx,
+    ) -> Option<usize> {
         // LoRA affinity pre-filter: if the request needs an adapter and some
         // ready pod has it resident, restrict to those unless they are
         // heavily overloaded relative to the cluster.
         if self.lora_affinity {
             if let Some(adapter) = &req.adapter {
-                let warm: Vec<&PodSnapshot> = pods
-                    .iter()
-                    .filter(|p| {
-                        p.ready && p.resident_adapters.iter().any(|a| a == adapter)
-                    })
-                    .collect();
-                if !warm.is_empty() {
-                    let min_load = pods
-                        .iter()
-                        .filter(|p| p.ready)
-                        .map(|p| p.stats.waiting + p.stats.running)
-                        .min()
-                        .unwrap_or(0);
-                    let best_warm = warm
-                        .iter()
-                        .min_by_key(|p| p.stats.waiting + p.stats.running)
-                        .unwrap();
-                    if best_warm.stats.waiting + best_warm.stats.running
-                        <= min_load * 2 + 4
-                    {
-                        return Some(best_warm.pod);
+                let mut min_load = usize::MAX;
+                let mut best_warm: Option<(usize, usize)> = None; // (load, pod)
+                for p in pods.iter().filter(|p| p.ready) {
+                    let load = p.stats.waiting + p.stats.running;
+                    min_load = min_load.min(load);
+                    if p.resident_adapters.iter().any(|a| a == adapter) {
+                        let keep = match best_warm {
+                            Some((bl, _)) => load < bl,
+                            None => true,
+                        };
+                        if keep {
+                            best_warm = Some((load, p.pod));
+                        }
+                    }
+                }
+                if let Some((load, pod)) = best_warm {
+                    if load <= min_load.saturating_mul(2).saturating_add(4) {
+                        return Some(pod);
                     }
                 }
             }
         }
-        self.select_by_policy(req, pods)
-    }
-
-    fn select_by_policy(&mut self, _req: &Request, pods: &[PodSnapshot]) -> Option<usize> {
-        let ready = || pods.iter().filter(|p| p.ready);
-        if ready().next().is_none() {
-            return None;
-        }
-        let pick_min = |key: &dyn Fn(&PodSnapshot) -> f64| -> usize {
-            let mut best = usize::MAX;
-            let mut best_score = f64::INFINITY;
-            for p in pods.iter().filter(|p| p.ready) {
-                let s = key(p);
-                if s < best_score {
-                    best_score = s;
-                    best = p.pod;
+        match &mut self.pipeline {
+            Some(pipeline) => pipeline.select(req, pods, ctx),
+            None => {
+                // Random over the ready pods.
+                let n = pods.iter().filter(|p| p.ready).count();
+                if n == 0 {
+                    return None;
                 }
-            }
-            best
-        };
-        match self.policy {
-            Policy::Random => {
-                let n = ready().count();
                 let k = self.rng.below(n as u64) as usize;
-                Some(ready().nth(k).unwrap().pod)
-            }
-            Policy::Throughput => Some(pick_min(&|p| p.stats.tokens_per_s)),
-            Policy::LeastRequest => {
-                Some(pick_min(&|p| (p.stats.waiting + p.stats.running) as f64))
-            }
-            Policy::LeastKvCache => Some(pick_min(&|p| p.stats.kv_utilization)),
-            Policy::LeastLatency => {
-                // Completion-latency is a lagging signal: a pod looks fast
-                // until its flood of queued requests completes. Outlier
-                // ejection (skip pods at >2x cluster-min in-flight) prevents
-                // the herd; ties fall back to queue depth.
-                let min_load = pods
-                    .iter()
-                    .filter(|p| p.ready)
-                    .map(|p| p.stats.waiting + p.stats.running)
-                    .min()
-                    .unwrap_or(0);
-                let eligible: Vec<&PodSnapshot> = pods
-                    .iter()
-                    .filter(|p| {
-                        p.ready && p.stats.waiting + p.stats.running <= min_load * 2 + 4
-                    })
-                    .collect();
-                eligible
-                    .iter()
-                    .min_by(|a, b| {
-                        a.stats
-                            .avg_latency_us
-                            .partial_cmp(&b.stats.avg_latency_us)
-                            .unwrap()
-                            .then_with(|| {
-                                (a.stats.waiting + a.stats.running)
-                                    .cmp(&(b.stats.waiting + b.stats.running))
-                            })
-                    })
-                    .map(|p| p.pod)
-            }
-            Policy::PrefixCacheAware { threshold } => {
-                // Among pods whose cache covers >= threshold of the prompt,
-                // take the least loaded (cache affinity without hotspots);
-                // an overloaded warm pod (>2x cluster-min in-flight) loses
-                // its affinity claim. Otherwise least-request.
-                let min_load = pods
-                    .iter()
-                    .filter(|p| p.ready)
-                    .map(|p| p.stats.waiting + p.stats.running)
-                    .min()
-                    .unwrap_or(0);
-                let warm = pods
-                    .iter()
-                    .filter(|p| {
-                        p.ready
-                            && p.prefix_hit_fraction() >= threshold
-                            && p.stats.waiting + p.stats.running <= min_load * 2 + 4
-                    })
-                    .min_by_key(|p| p.stats.waiting + p.stats.running);
-                match warm {
-                    Some(p) => Some(p.pod),
-                    None => Some(pick_min(&|p| (p.stats.waiting + p.stats.running) as f64)),
-                }
+                pods.iter().filter(|p| p.ready).nth(k).map(|p| p.pod)
             }
         }
     }
@@ -385,5 +416,103 @@ mod tests {
             (0..20).map(|_| r.select(&req(), &pods).unwrap()).collect()
         };
         assert_eq!(picks1, picks2);
+    }
+
+    #[test]
+    fn parse_paper_policies_and_threshold_forms() {
+        for name in [
+            "random",
+            "throughput",
+            "least-request",
+            "least-kv-cache",
+            "least-latency",
+            "prefix-cache-aware",
+        ] {
+            assert_eq!(Policy::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(
+            Policy::parse("prefix-cache-aware").unwrap(),
+            Policy::PrefixCacheAware { threshold: DEFAULT_PREFIX_THRESHOLD }
+        );
+        assert_eq!(
+            Policy::parse("prefix-cache-aware=0.75").unwrap(),
+            Policy::PrefixCacheAware { threshold: 0.75 }
+        );
+        // Garbage and out-of-range thresholds are errors, never defaults.
+        assert!(Policy::parse("prefix-cache-aware=lots").is_err());
+        assert!(Policy::parse("prefix-cache-aware=1.5").is_err());
+        assert!(Policy::parse("prefix-cache-aware=-0.1").is_err());
+        assert!(Policy::parse("totally-new-policy").is_err());
+    }
+
+    #[test]
+    fn parse_weighted_mix() {
+        let p = Policy::parse("weighted:prefix=0.6,least-request=0.4,threshold=0.5").unwrap();
+        let Policy::Weighted(cfg) = p else { panic!("expected weighted") };
+        assert_eq!(cfg.prefix_affinity, 0.6);
+        assert_eq!(cfg.least_request, 0.4);
+        assert_eq!(cfg.prefix_threshold, 0.5);
+        assert_eq!(p.name(), "weighted");
+        assert!(Policy::parse("weighted:bogus=1").is_err());
+        assert!(Policy::parse("weighted:prefix=abc").is_err());
+        assert!(Policy::parse("weighted:").is_err(), "no weights at all");
+        assert!(Policy::parse("weighted:threshold=0.5").is_err(), "zero weight vector");
+    }
+
+    #[test]
+    fn weighted_policy_reaches_lora_scorer() {
+        // The pre-filter must not shadow an explicit weighted mix: with
+        // lora weight dominating, adapter traffic follows the scorer (and
+        // composes with load), not the legacy short-circuit.
+        let Policy::Weighted(cfg) =
+            Policy::parse("weighted:lora=0.8,least-request=0.2").unwrap()
+        else {
+            unreachable!()
+        };
+        let mut r = Router::with_pipeline(cfg, 4);
+        assert!(!r.lora_affinity, "weighted presets disable the pre-filter");
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].resident_adapters = vec!["lora-x".into()];
+        let mut rq = req();
+        rq.adapter = Some("lora-x".into());
+        assert_eq!(r.select(&rq, &pods), Some(1));
+    }
+
+    #[test]
+    fn weighted_router_routes() {
+        let cfg = {
+            let Policy::Weighted(c) =
+                Policy::parse("weighted:prefix=0.5,least-request=0.5").unwrap()
+            else {
+                unreachable!()
+            };
+            c
+        };
+        let mut r = Router::with_pipeline(cfg, 9);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].prefix_match_blocks = 10;
+        assert_eq!(r.select(&req(), &pods), Some(1));
+        assert_eq!(r.policy().name(), "weighted");
+    }
+
+    #[test]
+    fn prefix_hit_fraction_edge_cases() {
+        let mut p = snap(0);
+        // Zero-prompt: no prefix to hit.
+        p.prompt_blocks = 0;
+        p.prefix_match_blocks = 5;
+        assert_eq!(p.prefix_hit_fraction(), 0.0);
+        // Racing snapshot reporting more matches than prompt blocks clamps.
+        p.prompt_blocks = 4;
+        p.prefix_match_blocks = 9;
+        assert_eq!(p.prefix_hit_fraction(), 1.0);
+        // Normal case unaffected.
+        p.prompt_blocks = 10;
+        p.prefix_match_blocks = 5;
+        assert_eq!(p.prefix_hit_fraction(), 0.5);
+        // Large values stay finite and clamped.
+        p.prompt_blocks = 1;
+        p.prefix_match_blocks = usize::MAX;
+        assert_eq!(p.prefix_hit_fraction(), 1.0);
     }
 }

@@ -1,0 +1,449 @@
+//! Composable scoring pipeline — the routing core (§3.2.2).
+//!
+//! Instead of a closed per-policy `match`, every pod is scored by a set of
+//! LLM-aware scorers, each mapping a [`PodSnapshot`] signal into `[0, 1]`
+//! (higher = better), and the pipeline picks the pod with the highest
+//! **weighted sum**. The paper's six policies are presets over this core
+//! (single weight 1.0 — see [`super::Policy`]); hybrids like
+//! `0.6*prefix + 0.4*least-request` are just other weight vectors.
+//!
+//! Scorers:
+//!   * `prefix_affinity` — 1.0 when the pod's local prefix cache covers at
+//!     least `prefix_threshold` of the prompt AND the pod is not overloaded
+//!     (see guard below), else 0.0. Binary by design: above the threshold
+//!     the *load tie-break* spreads warm requests, which is exactly the
+//!     legacy prefix-cache-aware behavior (affinity without hotspots).
+//!   * `least_request` / `least_kv_cache` / `least_latency` / `throughput`
+//!     — min-max normalized over the ready pods, inverted so the smallest
+//!     signal scores 1.0.
+//!   * `lora_residency` — 1.0 when the request's adapter is resident.
+//!   * `fairness` — consumes [`ScoreCtx::tenant_share`] (recent token share
+//!     of the requesting tenant, from [`super::fairness::TenantUsage`]):
+//!     light tenants steer to idle pods, heavy tenants consolidate onto
+//!     busy pods so they cannot spread queueing delay across the fleet.
+//!
+//! **Overload guard**: pods with more than `2 * cluster_min + 4` admitted
+//! requests lose prefix affinity and latency credit, so stale signals and
+//! cache affinity can never stampede one replica.
+//!
+//! **Determinism**: the decision is a pure function of (config, snapshots,
+//! ctx). Ties break to the lower in-flight load, then to slice order.
+//! (The legacy enum broke ties purely on slice order; preferring the
+//! idler pod on exactly-equal signals — e.g. a fresh cluster where every
+//! pod reports 0 tokens/s — is the one intentional behavior change.)
+//!
+//! **Perf**: `select` is allocation-free per request (scratch buffers live
+//! in the pipeline; three O(pods) passes, no sorting) — it stays far under
+//! the documented <5µs decision budget (`benches/microbench.rs` asserts
+//! this in release mode).
+
+use super::router::PodSnapshot;
+use crate::workload::Request;
+
+/// Weights + knobs for the scoring pipeline. All weights must be finite
+/// and >= 0, with at least one > 0; `prefix_threshold` lives in `[0, 1]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineConfig {
+    pub prefix_affinity: f64,
+    pub least_request: f64,
+    pub least_kv_cache: f64,
+    pub least_latency: f64,
+    pub throughput: f64,
+    pub lora_residency: f64,
+    pub fairness: f64,
+    /// Prompt-coverage fraction at which prefix affinity engages.
+    pub prefix_threshold: f64,
+    /// Eject overloaded pods from prefix/latency credit (legacy behavior).
+    pub overload_guard: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            prefix_affinity: 0.0,
+            least_request: 0.0,
+            least_kv_cache: 0.0,
+            least_latency: 0.0,
+            throughput: 0.0,
+            lora_residency: 0.0,
+            fairness: 0.0,
+            prefix_threshold: 0.3,
+            overload_guard: true,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Single-scorer preset helper. Panics on an unknown scorer name —
+    /// callers pass compile-time literals, and silently returning an
+    /// all-zero config would degrade routing to pure tie-breaking.
+    pub fn single(scorer: &str, weight: f64) -> PipelineConfig {
+        let mut cfg = PipelineConfig::default();
+        match scorer {
+            "prefix" => cfg.prefix_affinity = weight,
+            "least-request" => cfg.least_request = weight,
+            "least-kv-cache" => cfg.least_kv_cache = weight,
+            "least-latency" => cfg.least_latency = weight,
+            "throughput" => cfg.throughput = weight,
+            "lora" => cfg.lora_residency = weight,
+            "fairness" => cfg.fairness = weight,
+            other => panic!("unknown scorer {other:?} (see PipelineConfig fields)"),
+        }
+        cfg
+    }
+
+    fn weights(&self) -> [f64; 7] {
+        [
+            self.prefix_affinity,
+            self.least_request,
+            self.least_kv_cache,
+            self.least_latency,
+            self.throughput,
+            self.lora_residency,
+            self.fairness,
+        ]
+    }
+
+    /// Reject non-finite/negative weights, all-zero weight vectors, and
+    /// out-of-range thresholds.
+    pub fn validate(&self) -> Result<(), String> {
+        for (w, name) in self.weights().iter().zip([
+            "prefix", "least-request", "least-kv-cache", "least-latency", "throughput", "lora",
+            "fairness",
+        ]) {
+            if !w.is_finite() || *w < 0.0 {
+                return Err(format!("weight {name} must be finite and >= 0, got {w}"));
+            }
+        }
+        if self.weights().iter().all(|&w| w == 0.0) {
+            return Err("at least one scorer weight must be > 0".to_string());
+        }
+        if !self.prefix_threshold.is_finite()
+            || !(0.0..=1.0).contains(&self.prefix_threshold)
+        {
+            return Err(format!(
+                "prefix threshold must be in [0, 1], got {}",
+                self.prefix_threshold
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-request context the gateway computes outside the router (signals
+/// that are not per-pod).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScoreCtx {
+    /// Requesting tenant's share of recent token usage, in `[0, 1]`
+    /// (0 = unknown/light). Feeds the fairness scorer.
+    pub tenant_share: f64,
+}
+
+/// Min/max aggregates over the ready pods (one prepass per decision).
+#[derive(Debug, Clone, Copy)]
+struct ReadyStats {
+    min_load: usize,
+    max_load: usize,
+    min_kv: f64,
+    max_kv: f64,
+    min_lat: f64,
+    max_lat: f64,
+    min_tps: f64,
+    max_tps: f64,
+    any_ready: bool,
+}
+
+impl ReadyStats {
+    fn of(pods: &[PodSnapshot]) -> ReadyStats {
+        let mut s = ReadyStats {
+            min_load: usize::MAX,
+            max_load: 0,
+            min_kv: f64::INFINITY,
+            max_kv: f64::NEG_INFINITY,
+            min_lat: f64::INFINITY,
+            max_lat: f64::NEG_INFINITY,
+            min_tps: f64::INFINITY,
+            max_tps: f64::NEG_INFINITY,
+            any_ready: false,
+        };
+        for p in pods.iter().filter(|p| p.ready) {
+            s.any_ready = true;
+            let load = p.stats.waiting + p.stats.running;
+            s.min_load = s.min_load.min(load);
+            s.max_load = s.max_load.max(load);
+            s.min_kv = s.min_kv.min(p.stats.kv_utilization);
+            s.max_kv = s.max_kv.max(p.stats.kv_utilization);
+            s.min_lat = s.min_lat.min(p.stats.avg_latency_us);
+            s.max_lat = s.max_lat.max(p.stats.avg_latency_us);
+            s.min_tps = s.min_tps.min(p.stats.tokens_per_s);
+            s.max_tps = s.max_tps.max(p.stats.tokens_per_s);
+        }
+        s
+    }
+
+    /// Legacy outlier bound: > 2x cluster-min in-flight (+4 slack).
+    fn overloaded(&self, load: usize) -> bool {
+        load > self.min_load.saturating_mul(2).saturating_add(4)
+    }
+}
+
+/// Lower-is-better signal -> [0, 1] with the minimum at 1.0. Constant
+/// signals score 1.0 everywhere (pure tie, resolved downstream).
+fn norm_desc(v: f64, min: f64, max: f64) -> f64 {
+    if max > min {
+        (max - v) / (max - min)
+    } else {
+        1.0
+    }
+}
+
+/// Higher-is-worse load position in [0, 1] (0 at the cluster minimum).
+fn norm_asc(v: f64, min: f64, max: f64) -> f64 {
+    if max > min {
+        (v - min) / (max - min)
+    } else {
+        0.0
+    }
+}
+
+/// The weighted scoring core. Holds only config + scratch, so it is cheap
+/// to embed in [`super::Router`].
+pub struct ScoringPipeline {
+    cfg: PipelineConfig,
+    /// Scratch: per-pod weighted totals, reused across requests.
+    totals: Vec<f64>,
+}
+
+impl ScoringPipeline {
+    pub fn new(cfg: PipelineConfig) -> ScoringPipeline {
+        ScoringPipeline { cfg, totals: Vec::new() }
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Weighted total for one pod (NEG_INFINITY when not ready).
+    fn score_pod(
+        cfg: &PipelineConfig,
+        req: &Request,
+        p: &PodSnapshot,
+        rs: &ReadyStats,
+        ctx: &ScoreCtx,
+    ) -> f64 {
+        if !p.ready {
+            return f64::NEG_INFINITY;
+        }
+        let load = p.stats.waiting + p.stats.running;
+        let ejected = cfg.overload_guard && rs.overloaded(load);
+        let mut total = 0.0;
+        if cfg.prefix_affinity > 0.0 {
+            let warm = !ejected && p.prefix_hit_fraction() >= cfg.prefix_threshold;
+            total += cfg.prefix_affinity * if warm { 1.0 } else { 0.0 };
+        }
+        if cfg.least_request > 0.0 {
+            total += cfg.least_request
+                * norm_desc(load as f64, rs.min_load as f64, rs.max_load as f64);
+        }
+        if cfg.least_kv_cache > 0.0 {
+            total += cfg.least_kv_cache * norm_desc(p.stats.kv_utilization, rs.min_kv, rs.max_kv);
+        }
+        if cfg.least_latency > 0.0 {
+            let s = if ejected {
+                0.0
+            } else {
+                norm_desc(p.stats.avg_latency_us, rs.min_lat, rs.max_lat)
+            };
+            total += cfg.least_latency * s;
+        }
+        if cfg.throughput > 0.0 {
+            total += cfg.throughput * norm_desc(p.stats.tokens_per_s, rs.min_tps, rs.max_tps);
+        }
+        if cfg.lora_residency > 0.0 {
+            let resident = req
+                .adapter
+                .as_ref()
+                .map(|a| p.resident_adapters.iter().any(|r| r == a))
+                .unwrap_or(false);
+            total += cfg.lora_residency * if resident { 1.0 } else { 0.0 };
+        }
+        if cfg.fairness > 0.0 {
+            let share = ctx.tenant_share.clamp(0.0, 1.0);
+            let nl = norm_asc(load as f64, rs.min_load as f64, rs.max_load as f64);
+            total += cfg.fairness * (share * nl + (1.0 - share) * (1.0 - nl));
+        }
+        total
+    }
+
+    /// Fill `out[i]` with pod i's weighted total (`NEG_INFINITY` for
+    /// not-ready pods). Public for tests and observability endpoints.
+    pub fn score_into(
+        &self,
+        req: &Request,
+        pods: &[PodSnapshot],
+        ctx: &ScoreCtx,
+        out: &mut Vec<f64>,
+    ) {
+        let rs = ReadyStats::of(pods);
+        out.clear();
+        out.extend(pods.iter().map(|p| Self::score_pod(&self.cfg, req, p, &rs, ctx)));
+    }
+
+    /// Pick the best pod: highest weighted total, ties to the lower
+    /// in-flight load, then to slice order. None when no pod is ready.
+    pub fn select(&mut self, req: &Request, pods: &[PodSnapshot], ctx: &ScoreCtx) -> Option<usize> {
+        let rs = ReadyStats::of(pods);
+        if !rs.any_ready {
+            return None;
+        }
+        // Scratch reuse: after warmup this never allocates.
+        self.totals.clear();
+        self.totals.reserve(pods.len());
+        let mut best: Option<(usize, f64, usize)> = None; // (slice idx, total, load)
+        for (i, p) in pods.iter().enumerate() {
+            let total = Self::score_pod(&self.cfg, req, p, &rs, ctx);
+            self.totals.push(total);
+            if !p.ready {
+                continue;
+            }
+            let load = p.stats.waiting + p.stats.running;
+            let better = match best {
+                None => true,
+                Some((_, bt, bl)) => total > bt || (total == bt && load < bl),
+            };
+            if better {
+                best = Some((i, total, load));
+            }
+        }
+        best.map(|(i, _, _)| pods[i].pod)
+    }
+
+    /// Totals from the most recent `select` (observability/debug).
+    pub fn last_totals(&self) -> &[f64] {
+        &self.totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineStats;
+
+    fn snap(pod: usize) -> PodSnapshot {
+        PodSnapshot {
+            pod,
+            ready: true,
+            stats: EngineStats::default(),
+            prefix_match_blocks: 0,
+            prompt_blocks: 10,
+            resident_adapters: vec![],
+        }
+    }
+
+    fn req() -> Request {
+        Request {
+            id: 0,
+            session: 0,
+            tokens: vec![0; 160],
+            output_len: 1,
+            arrival: 0,
+            model: "m".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(PipelineConfig::default().validate().is_err(), "all-zero weights");
+        let mut c = PipelineConfig::single("least-request", 1.0);
+        assert!(c.validate().is_ok());
+        c.prefix_threshold = 1.5;
+        assert!(c.validate().is_err());
+        c.prefix_threshold = 0.5;
+        c.fairness = -1.0;
+        assert!(c.validate().is_err());
+        c.fairness = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn hybrid_prefix_plus_load_balances() {
+        // A warm-but-busy pod loses to an idle cold pod once the load weight
+        // dominates — the hybrid the closed enum could not express.
+        let mut cfg = PipelineConfig::single("prefix", 0.3);
+        cfg.least_request = 0.7;
+        cfg.overload_guard = false;
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].prefix_match_blocks = 10; // warm
+        pods[1].stats.waiting = 8; // but busy
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(0));
+        // Flip the weights: affinity wins.
+        let mut cfg2 = PipelineConfig::single("prefix", 0.7);
+        cfg2.least_request = 0.3;
+        cfg2.overload_guard = false;
+        let mut pl2 = ScoringPipeline::new(cfg2);
+        assert_eq!(pl2.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+    }
+
+    #[test]
+    fn fairness_term_splits_light_and_heavy_tenants() {
+        let cfg = PipelineConfig::single("fairness", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].stats.waiting = 9;
+        // Light tenant (share 0) -> idle pod.
+        assert_eq!(
+            pl.select(&req(), &pods, &ScoreCtx { tenant_share: 0.0 }),
+            Some(1)
+        );
+        // Heavy tenant (share 1) consolidates onto the busy pod.
+        assert_eq!(
+            pl.select(&req(), &pods, &ScoreCtx { tenant_share: 1.0 }),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn lora_residency_scorer() {
+        let cfg = PipelineConfig::single("lora", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].resident_adapters = vec!["a1".into()];
+        let mut rq = req();
+        rq.adapter = Some("a1".into());
+        assert_eq!(pl.select(&rq, &pods, &ScoreCtx::default()), Some(1));
+        // Without an adapter the term is inert -> load/order tie-break.
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(0));
+    }
+
+    #[test]
+    fn not_ready_pods_never_win() {
+        let cfg = PipelineConfig::single("least-request", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].ready = false;
+        pods[1].stats.waiting = 50;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        pods[1].ready = false;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), None);
+    }
+
+    #[test]
+    fn score_into_matches_select() {
+        let mut cfg = PipelineConfig::single("least-request", 0.5);
+        cfg.least_kv_cache = 0.5;
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1), snap(2)];
+        pods[0].stats.waiting = 3;
+        pods[1].stats.kv_utilization = 0.9;
+        let mut scores = Vec::new();
+        pl.score_into(&req(), &pods, &ScoreCtx::default(), &mut scores);
+        let best = (0..pods.len())
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(pods[best].pod));
+    }
+}

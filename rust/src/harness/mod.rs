@@ -152,7 +152,11 @@ pub fn run_with_router_config(
         .map(|(i, (ec, node))| EngineSim::new(i, *node, ec.clone()))
         .collect();
     let mut gateway = Gateway::new(cfg.policy, cfg.seed);
-    gateway.router.lora_affinity = lora_affinity;
+    // Router::new owns the per-policy default (presets: on; weighted
+    // mixes: off); the harness flag only ever opts *out* for ablations.
+    if !lora_affinity {
+        gateway.router.lora_affinity = false;
+    }
     let mut pool = cfg.kv_pool.clone().map(DistKvPool::new);
     let mut arrival_rng = crate::util::Rng::new(cfg.seed ^ 0xA221_44AA);
     let mut idle: Vec<bool> = vec![true; engines.len()];
@@ -325,6 +329,30 @@ mod tests {
         let a = run(mk(), &mut small_workload(40));
         let b = run(mk(), &mut small_workload(40));
         assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.ttft_ms(), b.ttft_ms());
+    }
+
+    #[test]
+    fn weighted_pipeline_policy_runs_end_to_end() {
+        // The open pipeline form flows through the harness exactly like the
+        // paper presets: a prefix+load hybrid must serve everything and
+        // stay deterministic.
+        let policy = Policy::parse("weighted:prefix=0.6,least-request=0.4,threshold=0.3")
+            .expect("valid weighted policy");
+        let mk = || HarnessConfig {
+            engines: engines(3, true),
+            policy,
+            arrival: ArrivalProcess::Poisson { rate: 12.0 },
+            kv_pool: None,
+            seed: 17,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let a = run(mk(), &mut small_workload(60));
+        let b = run(mk(), &mut small_workload(60));
+        assert_eq!(a.completions.len(), 60);
+        assert_eq!(a.rejected, 0);
+        assert_eq!(a.makespan, b.makespan, "weighted routing must be deterministic");
         assert_eq!(a.ttft_ms(), b.ttft_ms());
     }
 

@@ -5,12 +5,19 @@ use std::collections::BTreeMap;
 use super::value::Json;
 
 /// Parse failure with byte offset for diagnostics.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct ParseError {
     pub at: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -279,6 +279,45 @@ mod tests {
     }
 
     #[test]
+    fn metadata_delay_boundary_with_dedup_on() {
+        // A block inserted at T is invisible strictly before T + delay and
+        // visible from T + delay on; redundant re-inserts are deduped and
+        // must NOT reset the visibility clock.
+        let mut p = pool(1, 4);
+        let delay = p.config().metadata_delay_us; // 50_000
+        let t0 = 123;
+        p.insert(t0, 0, &[42], 16);
+        assert_eq!(p.lookup(t0, 0, &[42]).blocks_hit, 0, "not visible at insert time");
+        assert_eq!(p.lookup(t0 + delay - 1, 0, &[42]).blocks_hit, 0, "one µs early");
+        assert_eq!(p.lookup(t0 + delay, 0, &[42]).blocks_hit, 1, "exactly at T+delay");
+        // Re-insert later: dedup drops it, original visibility stands.
+        let mut q = pool(1, 4);
+        q.insert(0, 0, &[7], 16);
+        q.insert(40_000, 0, &[7], 16); // would push visibility to 90k if honored
+        assert_eq!(q.stats.inserts_deduped, 1);
+        assert_eq!(q.lookup(50_000, 0, &[7]).blocks_hit, 1, "dedup keeps the old clock");
+        assert!(q.check_invariants());
+    }
+
+    #[test]
+    fn metadata_delay_with_dedup_off() {
+        // Without dedup a re-insert replaces the entry and restarts the
+        // visibility delay — the redundant-transfer cost the paper's dedup
+        // avoids.
+        let mut cfg = KvPoolConfig::new(vec![(0, 4u64 << 30)], 524_288, 16);
+        cfg.dedup = false;
+        let mut p = DistKvPool::new(cfg);
+        p.insert(0, 0, &[7], 16);
+        assert_eq!(p.lookup(50_000, 0, &[7]).blocks_hit, 1, "visible after first delay");
+        p.insert(60_000, 0, &[7], 16); // replace: visible again at 110k
+        assert_eq!(p.stats.inserts_deduped, 0);
+        assert_eq!(p.resident_blocks(), 1, "replaced, not duplicated");
+        assert_eq!(p.lookup(100_000, 0, &[7]).blocks_hit, 0, "re-insert reset the clock");
+        assert_eq!(p.lookup(110_000, 0, &[7]).blocks_hit, 1);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
     fn colocated_cheaper_than_remote() {
         let mut p = pool(2, 4);
         let keys = [7u64, 8];

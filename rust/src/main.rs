@@ -1,7 +1,8 @@
 //! `aibrix` — the leader binary.
 //!
 //! Subcommands:
-//!   serve        real HTTP serving of the AOT-compiled TinyLM (PJRT)
+//!   serve        real HTTP serving of the AOT-compiled TinyLM (CPU runtime),
+//!                routed across --replicas by the scoring pipeline (--policy)
 //!   bench-table1 Table 1 (distributed KV cache)
 //!   bench-routing, bench-autoscaling, bench-fig7, bench-hetero
 //!   optimize     one-shot GPU-optimizer recommendation for a demand spec
@@ -10,20 +11,23 @@
 //! Every bench subcommand mirrors a `cargo bench` target (DESIGN.md §6).
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use aibrix::cli::Args;
 use aibrix::cluster::GpuKind;
 use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
 use aibrix::engine::real::{RealEngineHandle, RealRequest};
-use aibrix::engine::ModelSpec;
+use aibrix::engine::{EngineStats, ModelSpec};
 use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
+use aibrix::gateway::{PodSnapshot, Policy, Router, ScoreCtx, TenantUsage};
 use aibrix::json::{parse, Json};
 use aibrix::optimizer::loadmonitor::LoadMonitor;
 use aibrix::optimizer::profiles::{ProfileTable, Slo};
 use aibrix::optimizer::GpuOptimizer;
 use aibrix::server::{Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
+use aibrix::workload::Request;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -42,11 +46,7 @@ fn main() {
             println!("{}", table1::render(&table1::run_table1(&p)));
             0
         }
-        Some("bench-routing") => {
-            let p = routing::RoutingParams::default();
-            println!("{}", routing::render(&routing::run_routing(&p)));
-            0
-        }
+        Some("bench-routing") => cmd_bench_routing(&args),
         Some("bench-autoscaling") => {
             let cfg = aibrix::autoscaler::simulate::ScalingSimConfig::default_burst();
             println!("{}", scaling::render(&scaling::run_scaling(&cfg)));
@@ -68,7 +68,9 @@ fn main() {
         Some("diagnose") => cmd_diagnose(),
         _ => {
             eprintln!(
-                "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]"
+                "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]\n\
+                 routing flags: --policy <random|throughput|least-request|least-kv-cache|least-latency|prefix-cache-aware[=t]|weighted:k=w,...>\n\
+                 \x20              --prefix-threshold <0..1>   (serve also: --replicas N --port P --artifacts DIR)"
             );
             2
         }
@@ -76,36 +78,184 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Real serving: HTTP front over a dedicated PJRT engine thread, an
-/// OpenAI-ish /v1/completions surface plus /metrics and /healthz.
+/// Resolve the routing policy from `--policy` / `--prefix-threshold`.
+/// Invalid values are hard errors (never silent defaults).
+fn policy_from_flags(args: &Args, default: &str) -> Result<Policy, String> {
+    let mut policy = Policy::parse(args.str_flag("policy").unwrap_or(default))?;
+    if args.str_flag("prefix-threshold").is_some() {
+        let threshold = args
+            .get_f64_in("prefix-threshold", aibrix::gateway::DEFAULT_PREFIX_THRESHOLD, 0.0, 1.0)
+            .map_err(|e| e.to_string())?;
+        match &mut policy {
+            Policy::PrefixCacheAware { threshold: t } => *t = threshold,
+            Policy::Weighted(cfg) => cfg.prefix_threshold = threshold,
+            _ => {
+                return Err(format!(
+                    "--prefix-threshold only applies to prefix-cache-aware/weighted, got {}",
+                    policy.name()
+                ))
+            }
+        }
+    }
+    Ok(policy)
+}
+
+/// Tenant id from an OpenAI-style `user` field: numbers pass through,
+/// strings hash (so `"user": "alice"` gets its own fairness meter rather
+/// than collapsing every string tenant into id 0).
+fn tenant_id(user: &Json) -> u32 {
+    if let Some(n) = user.as_u64() {
+        return n as u32;
+    }
+    if let Some(s) = user.as_str() {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        s.hash(&mut h);
+        return h.finish() as u32;
+    }
+    0
+}
+
+/// JSON description of a policy (the /policy observability endpoint).
+fn policy_json(policy: &Policy) -> Json {
+    let mut fields = vec![("policy", Json::from(policy.name()))];
+    if let Some(cfg) = policy.pipeline_config() {
+        fields.push((
+            "weights",
+            Json::obj([
+                ("prefix", Json::from(cfg.prefix_affinity)),
+                ("least_request", Json::from(cfg.least_request)),
+                ("least_kv_cache", Json::from(cfg.least_kv_cache)),
+                ("least_latency", Json::from(cfg.least_latency)),
+                ("throughput", Json::from(cfg.throughput)),
+                ("lora_residency", Json::from(cfg.lora_residency)),
+                ("fairness", Json::from(cfg.fairness)),
+            ]),
+        ));
+        fields.push(("prefix_threshold", Json::from(cfg.prefix_threshold)));
+        fields.push(("overload_guard", Json::Bool(cfg.overload_guard)));
+    }
+    Json::obj(fields)
+}
+
+/// EXP-RT with CLI control: full sweep by default, or a single
+/// `--policy` (any parseable form, including `weighted:...`). Unparsable
+/// flag values are hard errors, never silent defaults.
+fn cmd_bench_routing(args: &Args) -> i32 {
+    match bench_routing_inner(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn bench_routing_inner(args: &Args) -> Result<(), String> {
+    let mut p = routing::RoutingParams::default();
+    p.n_requests = args.get("requests", p.n_requests).map_err(|e| e.to_string())?;
+    p.n_engines = args.get("engines", p.n_engines).map_err(|e| e.to_string())?;
+    p.arrival_rps = args.get("rps", p.arrival_rps).map_err(|e| e.to_string())?;
+    p.seed = args.get("seed", p.seed).map_err(|e| e.to_string())?;
+    if args.str_flag("policy").is_some() || args.str_flag("prefix-threshold").is_some() {
+        let policy = policy_from_flags(args, "least-request")?;
+        let row = routing::run_policy(&p, policy);
+        println!("{}", routing::render(&[row]));
+    } else {
+        println!("{}", routing::render(&routing::run_routing(&p)));
+    }
+    Ok(())
+}
+
+/// Real serving: HTTP front over dedicated engine threads behind the
+/// scoring-pipeline router, an OpenAI-ish /v1/completions surface plus
+/// /metrics, /policy and /healthz.
 fn cmd_serve(args: &Args) -> i32 {
     let artifacts = PathBuf::from(args.str_flag("artifacts").unwrap_or("artifacts"));
-    let port: u16 = args.get("port", 8100).unwrap_or(8100);
-    let engine = match RealEngineHandle::spawn(&artifacts) {
-        Ok(e) => e,
+    // Flag parse failures are hard errors: serving with a silently
+    // defaulted port/replica count is a misconfigured deployment.
+    let parsed = args
+        .get::<u16>("port", 8100)
+        .map_err(|e| e.to_string())
+        .and_then(|port| {
+            let replicas = args.get::<usize>("replicas", 1).map_err(|e| e.to_string())?;
+            if replicas == 0 {
+                return Err("--replicas must be >= 1".to_string());
+            }
+            let policy = policy_from_flags(args, "least-request")?;
+            Ok((port, replicas, policy))
+        });
+    let (port, n_replicas, policy) = match parsed {
+        Ok(t) => t,
         Err(e) => {
-            eprintln!(
-                "failed to load artifacts from {artifacts:?}: {e}\nrun `make artifacts` first"
-            );
-            return 1;
+            eprintln!("error: {e}");
+            return 2;
         }
     };
+
+    let mut replicas = Vec::new();
+    for _ in 0..n_replicas {
+        match RealEngineHandle::spawn(&artifacts) {
+            Ok(e) => replicas.push(e),
+            Err(e) => {
+                eprintln!(
+                    "failed to load artifacts from {artifacts:?}: {e}\nrun `make artifacts` first"
+                );
+                return 1;
+            }
+        }
+    }
+    let engine0 = &replicas[0];
     println!(
-        "loaded tinylm: vocab={} max_prompt={} max_new={}",
-        engine.vocab, engine.max_prompt, engine.max_new_tokens
+        "loaded tinylm x{n_replicas}: vocab={} max_prompt={} max_new={}  policy={}",
+        engine0.vocab,
+        engine0.max_prompt,
+        engine0.max_new_tokens,
+        policy.name()
     );
-    let max_prompt = engine.max_prompt;
-    let max_new = engine.max_new_tokens;
-    let tokenizer = Tokenizer::new(engine.vocab as u32);
+    let max_prompt = engine0.max_prompt;
+    let max_new = engine0.max_new_tokens;
+    let tokenizer = Tokenizer::new(engine0.vocab as u32);
     let served = Arc::new(Mutex::new(0u64));
     let next_id = Arc::new(Mutex::new(0u64));
+    // Per-replica in-flight counters: the load signal behind the router's
+    // pod snapshots (waiting+running in the sim; admitted-unfinished here).
+    let inflight: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..n_replicas).map(|_| AtomicUsize::new(0)).collect());
+    let router = Arc::new(Mutex::new(Router::new(policy, 0xA1B)));
+    // Decayed per-tenant token meter: feeds the fairness scorer exactly as
+    // the sim gateway does (wall-clock µs since server start).
+    let usage = Arc::new(Mutex::new(TenantUsage::default()));
+    let t_start = std::time::Instant::now();
+    let replicas = Arc::new(replicas);
 
     let handler: Handler = Arc::new(move |req: &HttpRequest| {
-        match (req.method.as_str(), req.path.as_str()) {
+        match (req.method.as_str(), req.route()) {
             ("GET", "/healthz") => HttpResponse::text(200, "ok"),
+            ("GET", "/policy") => {
+                // `?check=<policy-string>` dry-runs the parser so operators
+                // can validate weighted mixes before a rollout.
+                if let Some(spec) = req.query_param("check") {
+                    return match Policy::parse(spec) {
+                        Ok(p) => HttpResponse::json(200, &policy_json(&p).to_string()),
+                        Err(e) => HttpResponse::json(
+                            400,
+                            &Json::obj([("error", Json::from(e))]).to_string(),
+                        ),
+                    };
+                }
+                HttpResponse::json(200, &policy_json(&policy).to_string())
+            }
             ("GET", "/metrics") => {
                 let n = *served.lock().unwrap();
-                HttpResponse::text(200, &format!("aibrix_completions_total {n}\n"))
+                let mut body = format!("aibrix_completions_total {n}\n");
+                for (i, c) in inflight.iter().enumerate() {
+                    body.push_str(&format!(
+                        "aibrix_inflight_requests{{replica=\"{i}\"}} {}\n",
+                        c.load(Ordering::Relaxed)
+                    ));
+                }
+                HttpResponse::text(200, &body)
             }
             ("POST", "/v1/completions") => {
                 let Ok(body) = parse(&req.body_str()) else {
@@ -125,8 +275,57 @@ fn cmd_serve(args: &Args) -> i32 {
                     *n += 1;
                     *n
                 };
+                // Route across replicas on live in-flight counts. Scorers
+                // read only adapter/user + the snapshots, so the routing
+                // request carries no token copy (prompt length rides in
+                // the fairness meter instead).
+                let user = tenant_id(&body["user"]);
+                let prompt_tokens = tokens.len();
+                let route_req = Request {
+                    id,
+                    session: 0,
+                    tokens: Vec::new(),
+                    output_len: max_tokens,
+                    arrival: 0,
+                    model: "tinylm".into(),
+                    adapter: None,
+                    user,
+                    shared_prefix_len: 0,
+                };
+                let now_us = t_start.elapsed().as_micros() as u64;
+                let ctx = ScoreCtx { tenant_share: usage.lock().unwrap().share(now_us, user) };
+                // Select and claim under one lock: snapshotting loads,
+                // picking, and bumping the winner's in-flight count must be
+                // atomic or concurrent requests all see equal loads and
+                // herd onto one replica.
+                let pick = {
+                    let mut r = router.lock().unwrap();
+                    let snaps: Vec<PodSnapshot> = inflight
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| PodSnapshot {
+                            pod: i,
+                            ready: true,
+                            stats: EngineStats {
+                                waiting: c.load(Ordering::Relaxed),
+                                ..EngineStats::default()
+                            },
+                            prefix_match_blocks: 0,
+                            prompt_blocks: 1,
+                            resident_adapters: vec![],
+                        })
+                        .collect();
+                    let p = r.select_with_ctx(&route_req, &snaps, &ctx).unwrap_or(0);
+                    inflight[p].fetch_add(1, Ordering::Relaxed);
+                    p
+                };
+                usage
+                    .lock()
+                    .unwrap()
+                    .record(now_us, user, (prompt_tokens + max_tokens) as u64);
                 let completion =
-                    engine.serve(RealRequest { id, tokens, max_new_tokens: max_tokens });
+                    replicas[pick].serve(RealRequest { id, tokens, max_new_tokens: max_tokens });
+                inflight[pick].fetch_sub(1, Ordering::Relaxed);
                 match completion {
                     Ok(c) => {
                         *served.lock().unwrap() += 1;
@@ -135,6 +334,7 @@ fn cmd_serve(args: &Args) -> i32 {
                             ("id", Json::from(format!("cmpl-{id}"))),
                             ("object", Json::from("text_completion")),
                             ("model", Json::from("tinylm")),
+                            ("replica", Json::from(pick)),
                             ("text", Json::from(text)),
                             (
                                 "usage",

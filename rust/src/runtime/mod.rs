@@ -1,37 +1,52 @@
-//! PJRT runtime: load and execute the AOT-compiled TinyLM artifacts.
+//! TinyLM runtime: load and execute the AOT-compiled TinyLM artifacts.
 //!
 //! The AOT bridge's Rust half (DESIGN.md §4): `python/compile/aot.py` wrote
-//! HLO *text* plus `params.bin`/`manifest.json`; this module parses the
-//! manifest (with the in-repo JSON parser), compiles each HLO module on the
-//! PJRT CPU client, uploads the parameters **once** as device buffers, and
+//! HLO text plus `params.bin`/`manifest.json`; this module parses the
+//! manifest (with the in-repo JSON parser), loads the parameters, and
 //! exposes typed prefill/decode calls. No Python anywhere near this path.
 //!
-//! SAFETY NOTE: only the literal-arg `execute` path is used — the crate's
-//! `buffer_from_host_literal` starts an async H2D copy it never awaits,
-//! which intermittently SIGSEGVs / trips `pointer_size > 0` checks when the
-//! source literal is dropped or the compiler runs concurrently. With the
-//! awaited literal path the runtime is stable including across threads
-//! (stress-tested; see rust/tests/runtime_e2e.rs).
+//! Execution backend: a pure-Rust CPU interpreter of the TinyLM forward
+//! pass (the architecture `python/compile/model.py` lowers: 4-layer RoPE
+//! transformer, RMSNorm, GELU MLP, causal attention, paged-style KV cache
+//! [L, B, Smax, H, D]). The build environment vendors no `xla`/PJRT crate
+//! (DESIGN.md §2 offline-dependency substitutions), so the HLO files are
+//! carried as artifacts-of-record while compute runs here. The manifest's
+//! artifact entries still define which (batch, seq) shapes exist — calls
+//! for unlisted batch sizes fail exactly as the compiled path did, keeping
+//! `RealEngine`'s batch-padding logic honest.
+//!
+//! Numerical contract (rust/tests/runtime_e2e.rs): greedy decode is
+//! deterministic, batch rows are independent, and the KV-cache decode path
+//! is bit-exact with re-prefill — prefill and decode share the same
+//! accumulation-ordered helpers below, so the last property holds exactly.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Read;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
-
-/// Host-side tensor handed back to the decode loop.
-///
-/// NOTE: the `xla` crate exposes a buffer-arg `execute_b` plus
-/// `buffer_from_host_literal`, which would keep KV on device between steps —
-/// but `buffer_from_host_literal` starts an asynchronous H2D copy and never
-/// awaits it, and in this xla_extension build even pinned-source uploads
-/// intermittently corrupt compiler state (SIGSEGV / `pointer_size > 0`
-/// check failures). The literal-arg `execute` path awaits every transfer in
-/// the C wrapper and is the only reliable one, so KV rides host literals.
-pub type DeviceTensor = Literal;
-
 use crate::json::{parse, Json};
+use crate::util::err::{Error, Result};
+
+/// Dense row-major f32 tensor (parameters, KV caches).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Host-side KV tensor handed back to the decode loop ([L, B, Smax, H, D]).
+pub type DeviceTensor = Tensor;
 
 /// Model hyper-parameters from the manifest.
 #[derive(Debug, Clone)]
@@ -73,12 +88,13 @@ pub struct Manifest {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
-        let j = parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::msg(format!("reading manifest in {dir:?} (run `make artifacts`): {e}"))
+        })?;
+        let j = parse(&text).map_err(|e| Error::msg(format!("manifest.json: {e}")))?;
         let c = &j["config"];
         let need = |v: &Json, k: &str| -> Result<usize> {
-            v[k].as_usize().ok_or_else(|| anyhow!("manifest config missing {k}"))
+            v[k].as_usize().ok_or_else(|| Error::msg(format!("manifest config missing {k}")))
         };
         let cfg = ModelCfg {
             vocab: need(c, "vocab")?,
@@ -91,7 +107,7 @@ impl Manifest {
         };
         let params = j["params"]
             .as_arr()
-            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .ok_or_else(|| Error::msg("manifest missing params"))?
             .iter()
             .map(|p| {
                 Ok(ParamEntry {
@@ -102,14 +118,14 @@ impl Manifest {
                         .iter()
                         .map(|d| d.as_usize().unwrap_or(0))
                         .collect(),
-                    offset: p["offset"].as_usize().ok_or_else(|| anyhow!("offset"))?,
-                    numel: p["numel"].as_usize().ok_or_else(|| anyhow!("numel"))?,
+                    offset: p["offset"].as_usize().ok_or_else(|| Error::msg("offset"))?,
+                    numel: p["numel"].as_usize().ok_or_else(|| Error::msg("numel"))?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
         let artifacts = j["artifacts"]
             .as_arr()
-            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .ok_or_else(|| Error::msg("manifest missing artifacts"))?
             .iter()
             .map(|a| ArtifactEntry {
                 name: a["name"].as_str().unwrap_or_default().to_string(),
@@ -122,14 +138,18 @@ impl Manifest {
         Ok(Manifest { cfg, params, artifacts, dir: dir.to_path_buf() })
     }
 
-    /// Read params.bin into per-parameter f32 literals (manifest order).
-    pub fn load_params(&self) -> Result<Vec<Literal>> {
+    /// Read params.bin into per-parameter f32 tensors (manifest order).
+    pub fn load_params(&self) -> Result<Vec<Tensor>> {
         let mut f = std::fs::File::open(self.dir.join("params.bin"))?;
         let mut bytes = Vec::new();
         f.read_to_end(&mut bytes)?;
         let total: usize = self.params.iter().map(|p| p.numel).sum();
         if bytes.len() != total * 4 {
-            bail!("params.bin is {} bytes, manifest wants {}", bytes.len(), total * 4);
+            return Err(Error::msg(format!(
+                "params.bin is {} bytes, manifest wants {}",
+                bytes.len(),
+                total * 4
+            )));
         }
         let floats: Vec<f32> = bytes
             .chunks_exact(4)
@@ -138,13 +158,21 @@ impl Manifest {
         self.params
             .iter()
             .map(|p| {
-                let data = &floats[p.offset..p.offset + p.numel];
-                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                Literal::vec1(data)
-                    .reshape(&dims)
-                    .with_context(|| format!("reshaping param {}", p.name))
+                let shape_elems: usize = p.shape.iter().product();
+                if p.offset + p.numel > floats.len() || shape_elems != p.numel {
+                    return Err(Error::msg(format!("param {} malformed or out of bounds", p.name)));
+                }
+                Ok(Tensor {
+                    dims: p.shape.clone(),
+                    data: floats[p.offset..p.offset + p.numel].to_vec(),
+                })
             })
             .collect()
+    }
+
+    /// Name of the i-th parameter (manifest order).
+    fn param_name(&self, i: usize) -> &str {
+        &self.params[i].name
     }
 }
 
@@ -155,7 +183,7 @@ pub struct PrefillOut {
     pub batch: usize,
     pub seq: usize,
     pub vocab: usize,
-    /// KV caches stay on device for the decode loop.
+    /// KV caches carried between calls by the decode loop.
     pub k: DeviceTensor,
     pub v: DeviceTensor,
 }
@@ -203,47 +231,208 @@ pub fn argmax(xs: &[f32]) -> u32 {
     best as u32
 }
 
-/// The compiled model: PJRT client + executables + resident parameters.
+// --------------------------------------------------------- math helpers
+
+fn rms_norm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+/// out[n] = x[k] @ w[k, n] (w row-major [k, n]).
+fn matvec(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (i, &xi) in x.iter().enumerate().take(k) {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for j in 0..n {
+            out[j] += xi * row[j];
+        }
+    }
+}
+
+/// In-place rotary embedding of one head vector at absolute position `pos`.
+fn rope(v: &mut [f32], pos: usize, base: f32) {
+    let d = v.len();
+    let half = d / 2;
+    for j in 0..half {
+        let freq = base.powf(-(j as f32) / half as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let x1 = v[j];
+        let x2 = v[j + half];
+        v[j] = x1 * cos - x2 * sin;
+        v[j + half] = x1 * sin + x2 * cos;
+    }
+}
+
+/// tanh-approximated GELU (jax.nn.gelu's default form).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Attention for one (batch row, head, query position): softmax over cache
+/// positions `0..kv_len`, accumulating in ascending-j order so prefill and
+/// decode produce bit-identical sums.
+#[allow(clippy::too_many_arguments)]
+fn attend_one(
+    q: &[f32],
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    layer: usize,
+    b: usize,
+    head: usize,
+    kv_len: usize,
+    cfg: &ModelCfg,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = cfg.head_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let stride_b = cfg.max_seq * cfg.n_heads * hd;
+    let base = (layer * k_cache.dims[1] + b) * stride_b;
+    scores.clear();
+    let mut max_s = f32::NEG_INFINITY;
+    for j in 0..kv_len {
+        let off = base + j * cfg.n_heads * hd + head * hd;
+        let kj = &k_cache.data[off..off + hd];
+        let mut dot = 0.0f32;
+        for d in 0..hd {
+            dot += q[d] * kj[d];
+        }
+        let s = dot * scale;
+        scores.push(s);
+        if s > max_s {
+            max_s = s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        denom += *s;
+    }
+    for o in out.iter_mut().take(hd) {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let w = p / denom;
+        let off = base + j * cfg.n_heads * hd + head * hd;
+        let vj = &v_cache.data[off..off + hd];
+        for d in 0..hd {
+            out[d] += w * vj[d];
+        }
+    }
+}
+
+// ------------------------------------------------------------ parameters
+
+struct LayerParams {
+    ln1: Tensor,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ln2: Tensor,
+    w_in: Tensor,
+    w_out: Tensor,
+}
+
+struct TinyLmParams {
+    embed: Tensor, // [V, Dm]
+    layers: Vec<LayerParams>,
+    ln_f: Tensor, // [Dm]
+    d_ff: usize,
+}
+
+impl TinyLmParams {
+    fn from_manifest(manifest: &Manifest, tensors: Vec<Tensor>) -> Result<TinyLmParams> {
+        let mut by_name: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (i, t) in tensors.into_iter().enumerate() {
+            by_name.insert(manifest.param_name(i).to_string(), t);
+        }
+        let mut take = |name: &str| -> Result<Tensor> {
+            by_name.remove(name).ok_or_else(|| Error::msg(format!("manifest missing param {name}")))
+        };
+        let embed = take("embed")?;
+        let mut layers = Vec::new();
+        for i in 0..manifest.cfg.n_layers {
+            layers.push(LayerParams {
+                ln1: take(&format!("l{i}.ln1"))?,
+                wq: take(&format!("l{i}.wq"))?,
+                wk: take(&format!("l{i}.wk"))?,
+                wv: take(&format!("l{i}.wv"))?,
+                wo: take(&format!("l{i}.wo"))?,
+                ln2: take(&format!("l{i}.ln2"))?,
+                w_in: take(&format!("l{i}.w_in"))?,
+                w_out: take(&format!("l{i}.w_out"))?,
+            });
+        }
+        let ln_f = take("ln_f")?;
+        let d_ff = layers
+            .first()
+            .and_then(|l| l.w_in.dims.get(1).copied())
+            .ok_or_else(|| Error::msg("cannot infer d_ff from l0.w_in"))?;
+        Ok(TinyLmParams { embed, layers, ln_f, d_ff })
+    }
+}
+
+// --------------------------------------------------------------- runtime
+
+/// The loaded model: parameters + the artifact shape table.
 pub struct TinyLmRuntime {
-    pub client: PjRtClient,
     pub cfg: ModelCfg,
-    /// Parameters kept as host literals (re-transferred per call by the
-    /// awaited literal-arg execute path; see DeviceTensor note).
-    params: Vec<Literal>,
-    prefill: BTreeMap<usize, (usize, PjRtLoadedExecutable)>,
-    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+    params: TinyLmParams,
+    /// batch -> prefill sequence capacity, from the manifest's artifacts.
+    prefill: BTreeMap<usize, usize>,
+    /// Decode batch sizes with a compiled artifact.
+    decode: BTreeSet<usize>,
 }
 
 impl TinyLmRuntime {
-    /// Load every artifact in `dir` and upload parameters to the device.
+    /// Load the manifest + parameters in `dir`.
     pub fn load(dir: &Path) -> Result<TinyLmRuntime> {
         let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu()?;
-        let params = manifest.load_params()?;
+        let tensors = manifest.load_params()?;
+        let params = TinyLmParams::from_manifest(&manifest, tensors)?;
 
         let mut prefill = BTreeMap::new();
-        let mut decode = BTreeMap::new();
+        let mut decode = BTreeSet::new();
         for a in &manifest.artifacts {
-            let path = dir.join(&a.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
             match a.kind.as_str() {
                 "prefill" => {
-                    prefill.insert(a.batch, (a.seq, exe));
+                    if a.seq == 0 || a.seq > manifest.cfg.max_seq {
+                        return Err(Error::msg(format!(
+                            "prefill artifact {} has seq {} outside (0, max_seq {}]",
+                            a.name, a.seq, manifest.cfg.max_seq
+                        )));
+                    }
+                    prefill.insert(a.batch, a.seq);
                 }
                 "decode" => {
-                    decode.insert(a.batch, exe);
+                    decode.insert(a.batch);
                 }
-                k => bail!("unknown artifact kind {k}"),
+                k => return Err(Error::msg(format!("unknown artifact kind {k}"))),
             }
         }
         if prefill.is_empty() || decode.is_empty() {
-            bail!("artifacts incomplete: {} prefill, {} decode", prefill.len(), decode.len());
+            return Err(Error::msg(format!(
+                "artifacts incomplete: {} prefill, {} decode",
+                prefill.len(),
+                decode.len()
+            )));
         }
-        Ok(TinyLmRuntime { client, cfg: manifest.cfg, params, prefill, decode })
+        Ok(TinyLmRuntime { cfg: manifest.cfg, params, prefill, decode })
     }
 
     /// Available prefill batch sizes.
@@ -253,91 +442,229 @@ impl TinyLmRuntime {
 
     /// Available decode batch sizes.
     pub fn decode_batches(&self) -> Vec<usize> {
-        self.decode.keys().copied().collect()
+        self.decode.iter().copied().collect()
     }
 
     /// Prefill sequence capacity for batch `b`.
     pub fn prefill_seq(&self, batch: usize) -> Option<usize> {
-        self.prefill.get(&batch).map(|(s, _)| *s)
+        self.prefill.get(&batch).copied()
+    }
+
+    fn kv_index(&self, layer: usize, batch: usize, b: usize, pos: usize) -> usize {
+        ((layer * batch + b) * self.cfg.max_seq + pos) * self.cfg.n_heads * self.cfg.head_dim
+    }
+
+    /// One transformer block position: given the normalized input's q/k/v
+    /// rows already written into the cache at `pos`, finish attention + MLP
+    /// and update the residual `x` in place.
+    #[allow(clippy::too_many_arguments)]
+    fn block_tail(
+        &self,
+        lp: &LayerParams,
+        layer: usize,
+        b: usize,
+        pos: usize,
+        kv_len: usize,
+        q_row: &[f32],
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        x: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let cfg = &self.cfg;
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        for head in 0..h {
+            attend_one(
+                &q_row[head * hd..(head + 1) * hd],
+                k_cache,
+                v_cache,
+                layer,
+                b,
+                head,
+                kv_len.max(pos + 1).min(cfg.max_seq),
+                cfg,
+                &mut scratch.scores,
+                &mut scratch.attn[head * hd..(head + 1) * hd],
+            );
+        }
+        matvec(&scratch.attn, &lp.wo.data, dm, dm, &mut scratch.proj);
+        for d in 0..dm {
+            x[d] += scratch.proj[d];
+        }
+        rms_norm(x, &lp.ln2.data, &mut scratch.xn);
+        matvec(&scratch.xn, &lp.w_in.data, dm, self.params.d_ff, &mut scratch.ff);
+        for v in scratch.ff.iter_mut() {
+            *v = gelu(*v);
+        }
+        matvec(&scratch.ff, &lp.w_out.data, self.params.d_ff, dm, &mut scratch.proj);
+        for d in 0..dm {
+            x[d] += scratch.proj[d];
+        }
+    }
+
+    fn final_logits(&self, x: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        rms_norm(x, &self.params.ln_f.data, &mut scratch.xn);
+        // logits = xn @ embed.T : dot against each vocab row.
+        let dm = self.cfg.d_model;
+        for (t, o) in out.iter_mut().enumerate() {
+            let row = &self.params.embed.data[t * dm..(t + 1) * dm];
+            let mut dot = 0.0f32;
+            for d in 0..dm {
+                dot += scratch.xn[d] * row[d];
+            }
+            *o = dot;
+        }
     }
 
     /// Run prefill over `tokens` (row-major [B, S], pre-padded to the
     /// artifact's S; entries are token ids < vocab).
     pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
-        let (seq, exe) = self
+        let seq = *self
             .prefill
             .get(&batch)
-            .ok_or_else(|| anyhow!("no prefill artifact for batch {batch}"))?;
+            .ok_or_else(|| Error::msg(format!("no prefill artifact for batch {batch}")))?;
         if tokens.len() != batch * seq {
-            bail!("tokens len {} != {batch}x{seq}", tokens.len());
+            return Err(Error::msg(format!("tokens len {} != {batch}x{seq}", tokens.len())));
         }
-        let tok = Literal::vec1(tokens).reshape(&[batch as i64, *seq as i64])?;
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.push(&tok);
-        let result = exe.execute::<&Literal>(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        let (logits_l, k, v) = out.to_tuple3()?;
-        let logits = logits_l.to_vec::<f32>()?;
-        Ok(PrefillOut { logits, batch, seq: *seq, vocab: self.cfg.vocab, k, v })
+        let cfg = self.cfg.clone();
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        let mut k_cache =
+            Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
+        let mut v_cache = k_cache.clone();
+        let mut logits = vec![0.0f32; batch * seq * cfg.vocab];
+        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
+
+        for b in 0..batch {
+            // Residual stream for every position of this row.
+            // Out-of-vocab ids are caller bugs — fail loudly rather than
+            // embed a clamped stand-in and generate plausible garbage.
+            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(seq);
+            for s in 0..seq {
+                let raw = tokens[b * seq + s];
+                if raw < 0 || raw as usize >= cfg.vocab {
+                    return Err(Error::msg(format!(
+                        "token id {raw} at [{b},{s}] outside vocab {}",
+                        cfg.vocab
+                    )));
+                }
+                let tok = raw as usize;
+                xs.push(self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec());
+            }
+            for (layer, lp) in self.params.layers.iter().enumerate() {
+                // Project + rope + write the whole row's k/v first so
+                // attention at position i sees keys 0..=i.
+                let mut q_rows: Vec<Vec<f32>> = Vec::with_capacity(seq);
+                for (s, x) in xs.iter().enumerate() {
+                    rms_norm(x, &lp.ln1.data, &mut scratch.xn);
+                    let mut q = vec![0.0f32; dm];
+                    matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
+                    matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
+                    let koff = self.kv_index(layer, batch, b, s);
+                    k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                    matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
+                    v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                    for head in 0..h {
+                        rope(&mut q[head * hd..(head + 1) * hd], s, 10_000.0);
+                        rope(&mut k_cache.data[koff + head * hd..koff + (head + 1) * hd], s, 10_000.0);
+                    }
+                    q_rows.push(q);
+                }
+                for (s, x) in xs.iter_mut().enumerate() {
+                    self.block_tail(
+                        lp, layer, b, s, s + 1, &q_rows[s], &k_cache, &v_cache, x, &mut scratch,
+                    );
+                }
+            }
+            for (s, x) in xs.iter().enumerate() {
+                let out = &mut logits[(b * seq + s) * cfg.vocab..(b * seq + s + 1) * cfg.vocab];
+                self.final_logits(x, &mut scratch, out);
+            }
+        }
+        Ok(PrefillOut { logits, batch, seq, vocab: cfg.vocab, k: k_cache, v: v_cache })
     }
 
     /// One decode step: `token[b]` written at `pos[b]`, attending to
-    /// positions <= pos. KV buffers are consumed and replaced.
+    /// positions <= pos. KV buffers are consumed by value and handed back
+    /// in the output — the per-token hot path never copies the cache.
     pub fn decode(
         &self,
         batch: usize,
         token: &[i32],
         pos: &[i32],
-        k: &DeviceTensor,
-        v: &DeviceTensor,
+        k: DeviceTensor,
+        v: DeviceTensor,
     ) -> Result<DecodeOut> {
-        let exe = self
-            .decode
-            .get(&batch)
-            .ok_or_else(|| anyhow!("no decode artifact for batch {batch}"))?;
-        if token.len() != batch || pos.len() != batch {
-            bail!("decode arg arity mismatch");
+        if !self.decode.contains(&batch) {
+            return Err(Error::msg(format!("no decode artifact for batch {batch}")));
         }
-        let tok_l = Literal::vec1(token);
-        let pos_l = Literal::vec1(pos);
-        let mut args: Vec<&Literal> = self.params.iter().collect();
-        args.push(&tok_l);
-        args.push(&pos_l);
-        args.push(k);
-        args.push(v);
-        let result = exe.execute::<&Literal>(&args)?;
-        let out = result[0][0].to_literal_sync()?;
-        let (logits_l, k2, v2) = out.to_tuple3()?;
-        Ok(DecodeOut {
-            logits: logits_l.to_vec::<f32>()?,
-            vocab: self.cfg.vocab,
-            k: k2,
-            v: v2,
-        })
+        if token.len() != batch || pos.len() != batch {
+            return Err(Error::msg("decode arg arity mismatch"));
+        }
+        let cfg = self.cfg.clone();
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        if k.dims != [cfg.n_layers, batch, cfg.max_seq, h, hd] {
+            return Err(Error::msg(format!("k cache dims {:?} unexpected", k.dims)));
+        }
+        if v.dims != k.dims {
+            return Err(Error::msg(format!("v cache dims {:?} != k dims {:?}", v.dims, k.dims)));
+        }
+        let mut k_cache = k;
+        let mut v_cache = v;
+        let mut logits = vec![0.0f32; batch * cfg.vocab];
+        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
+
+        for b in 0..batch {
+            if pos[b] < 0 || pos[b] as usize >= cfg.max_seq {
+                return Err(Error::msg(format!("decode position {} beyond cache", pos[b])));
+            }
+            let p = pos[b] as usize;
+            if token[b] < 0 || token[b] as usize >= cfg.vocab {
+                return Err(Error::msg(format!(
+                    "decode token id {} outside vocab {}",
+                    token[b], cfg.vocab
+                )));
+            }
+            let tok = token[b] as usize;
+            let mut x: Vec<f32> = self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec();
+            for (layer, lp) in self.params.layers.iter().enumerate() {
+                rms_norm(&x, &lp.ln1.data, &mut scratch.xn);
+                let mut q = vec![0.0f32; dm];
+                matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
+                matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
+                let koff = self.kv_index(layer, batch, b, p);
+                k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
+                v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                for head in 0..h {
+                    rope(&mut q[head * hd..(head + 1) * hd], p, 10_000.0);
+                    rope(&mut k_cache.data[koff + head * hd..koff + (head + 1) * hd], p, 10_000.0);
+                }
+                self.block_tail(
+                    lp, layer, b, p, p + 1, &q, &k_cache, &v_cache, &mut x, &mut scratch,
+                );
+            }
+            self.final_logits(&x, &mut scratch, &mut logits[b * cfg.vocab..(b + 1) * cfg.vocab]);
+        }
+        Ok(DecodeOut { logits, vocab: cfg.vocab, k: k_cache, v: v_cache })
     }
 
     /// Greedy-generate `steps` tokens for a batch of prompts (lengths may
     /// differ; prompts are padded to the prefill S). Returns per-row
     /// generated token ids. The workhorse of `RealEngine` / serve_e2e.
-    pub fn generate(
-        &self,
-        prompts: &[Vec<u32>],
-        steps: usize,
-    ) -> Result<Vec<Vec<u32>>> {
+    pub fn generate(&self, prompts: &[Vec<u32>], steps: usize) -> Result<Vec<Vec<u32>>> {
         let batch = prompts.len();
-        let (seq, _) = self
+        let seq = *self
             .prefill
             .get(&batch)
-            .ok_or_else(|| anyhow!("no prefill artifact for batch {batch}"))?;
-        let seq = *seq;
+            .ok_or_else(|| Error::msg(format!("no prefill artifact for batch {batch}")))?;
         let max_new = self.cfg.max_seq - seq;
         if steps > max_new {
-            bail!("steps {steps} exceeds cache headroom {max_new}");
+            return Err(Error::msg(format!("steps {steps} exceeds cache headroom {max_new}")));
         }
         let mut tokens = vec![0i32; batch * seq];
         for (b, p) in prompts.iter().enumerate() {
             if p.len() > seq {
-                bail!("prompt {b} longer than prefill window {seq}");
+                return Err(Error::msg(format!("prompt {b} longer than prefill window {seq}")));
             }
             for (s, &t) in p.iter().enumerate() {
                 tokens[b * seq + s] = t as i32;
@@ -353,7 +680,7 @@ impl TinyLmRuntime {
         // Decode continues each row at its true length.
         let mut pos: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
         for _ in 1..steps {
-            let d = self.decode(batch, &cur, &pos, &k, &v)?;
+            let d = self.decode(batch, &cur, &pos, k, v)?;
             for b in 0..batch {
                 cur[b] = d.argmax_of(b) as i32;
                 out[b].push(cur[b] as u32);
@@ -363,5 +690,125 @@ impl TinyLmRuntime {
             v = d.v;
         }
         Ok(out)
+    }
+}
+
+/// Reused per-call work buffers.
+struct Scratch {
+    xn: Vec<f32>,
+    proj: Vec<f32>,
+    attn: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(dm: usize, d_ff: usize, attn_dim: usize) -> Scratch {
+        Scratch {
+            xn: vec![0.0; dm],
+            proj: vec![0.0; dm],
+            attn: vec![0.0; attn_dim],
+            ff: vec![0.0; d_ff],
+            scores: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny in-memory runtime (2 layers, vocab 16) for interpreter checks —
+    /// no artifacts needed.
+    fn toy_runtime() -> TinyLmRuntime {
+        let cfg = ModelCfg {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            max_seq: 12,
+            page_size: 4,
+        };
+        let mut rng = crate::util::Rng::new(7);
+        let mut mk = |dims: Vec<usize>, norm: bool| {
+            let n: usize = dims.iter().product();
+            let fan_in = dims[0] as f64;
+            let data: Vec<f32> = (0..n)
+                .map(|_| {
+                    if norm {
+                        1.0
+                    } else {
+                        (rng.normal() / fan_in.sqrt()) as f32
+                    }
+                })
+                .collect();
+            Tensor { dims, data }
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                ln1: mk(vec![8], true),
+                wq: mk(vec![8, 8], false),
+                wk: mk(vec![8, 8], false),
+                wv: mk(vec![8, 8], false),
+                wo: mk(vec![8, 8], false),
+                ln2: mk(vec![8], true),
+                w_in: mk(vec![8, 16], false),
+                w_out: mk(vec![16, 8], false),
+            })
+            .collect();
+        let params = TinyLmParams {
+            embed: mk(vec![16, 8], false),
+            layers,
+            ln_f: mk(vec![8], true),
+            d_ff: 16,
+        };
+        TinyLmRuntime {
+            cfg,
+            params,
+            prefill: [(1usize, 8usize), (2, 8)].into_iter().collect(),
+            decode: [1usize, 2].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_vocab() {
+        let rt = toy_runtime();
+        let prompts = vec![vec![1u32, 2, 3]];
+        let a = rt.generate(&prompts, 4).unwrap();
+        let b = rt.generate(&prompts, 4).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].len(), 4);
+        assert!(a[0].iter().all(|&t| t < 16));
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        let rt = toy_runtime();
+        let solo = rt.generate(&[vec![5u32, 6, 7]].to_vec(), 3).unwrap();
+        let batch = rt.generate(&vec![vec![5u32, 6, 7], vec![9u32, 1]], 3).unwrap();
+        assert_eq!(batch[0], solo[0]);
+    }
+
+    #[test]
+    fn decode_matches_re_prefill() {
+        // The KV-cache decode path must chain bit-exactly into prefill: the
+        // second generated token equals a fresh prefill of prompt+token1.
+        let rt = toy_runtime();
+        let prompt = vec![3u32, 8, 2];
+        let gen = rt.generate(&[prompt.clone()].to_vec(), 3).unwrap();
+        let mut longer = prompt.clone();
+        longer.push(gen[0][0]);
+        let gen2 = rt.generate(&[longer].to_vec(), 2).unwrap();
+        assert_eq!(gen2[0][0], gen[0][1]);
+    }
+
+    #[test]
+    fn error_paths() {
+        let rt = toy_runtime();
+        assert!(rt.prefill(1, &[0i32; 7]).is_err(), "bad token count");
+        assert!(rt.prefill(3, &[0i32; 24]).is_err(), "no batch-3 artifact");
+        assert!(rt.generate(&[vec![1u32; 20]].to_vec(), 2).is_err(), "prompt too long");
+        assert!(rt.generate(&[vec![1u32; 4]].to_vec(), 100).is_err(), "beyond headroom");
     }
 }

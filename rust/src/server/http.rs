@@ -14,6 +14,22 @@ pub struct HttpRequest {
 }
 
 impl HttpRequest {
+    /// Path with any `?query` stripped (route matching ignores queries).
+    pub fn route(&self) -> &str {
+        self.path.split('?').next().unwrap_or(&self.path)
+    }
+
+    /// Value of a `?key=value` query parameter, if present. The value is
+    /// returned raw — no percent-decoding (our policy strings need none).
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        let (_, query) = self.path.split_once('?')?;
+        query
+            .split('&')
+            .filter_map(|kv| kv.split_once('='))
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v)
+    }
+
     pub fn keep_alive(&self) -> bool {
         self.headers
             .get("connection")
@@ -70,6 +86,35 @@ impl HttpResponse {
         .into_bytes();
         out.extend_from_slice(&self.body);
         out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(path: &str) -> HttpRequest {
+        HttpRequest {
+            method: "GET".into(),
+            path: path.into(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn route_strips_query() {
+        assert_eq!(req("/v1/completions?policy=least-request").route(), "/v1/completions");
+        assert_eq!(req("/healthz").route(), "/healthz");
+    }
+
+    #[test]
+    fn query_param_lookup() {
+        let r = req("/metrics?policy=weighted:prefix%3D1&detail=full");
+        assert_eq!(r.query_param("detail"), Some("full"));
+        assert_eq!(r.query_param("policy"), Some("weighted:prefix%3D1"));
+        assert_eq!(r.query_param("nope"), None);
+        assert_eq!(req("/metrics").query_param("detail"), None);
     }
 }
 

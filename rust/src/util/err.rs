@@ -1,0 +1,70 @@
+//! Minimal error type for fallible runtime paths.
+//!
+//! The build vendors no `anyhow`/`thiserror` (DESIGN.md §2), so modules that
+//! need an open-ended error ("this artifact is malformed", "the engine
+//! thread died") use this string-backed type. `?` works on `std::io::Error`
+//! and on anything convertible to a string via the `From` impls below.
+
+use std::fmt;
+
+/// String-backed application error.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+
+    /// Wrap an error with a context prefix (the `anyhow::Context` idiom).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_and_contexts() {
+        let e = Error::msg("params.bin truncated").context("loading manifest");
+        assert_eq!(e.to_string(), "loading manifest: params.bin truncated");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(read().is_err());
+    }
+}

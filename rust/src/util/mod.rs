@@ -7,6 +7,7 @@
 //! reproducible from a single seed.
 
 pub mod dist;
+pub mod err;
 pub mod prng;
 pub mod stats;
 

@@ -1,0 +1,305 @@
+//! Property tests for the gateway scoring pipeline (ISSUE 1 invariants):
+//!
+//!   1. single-scorer presets at weight 1.0 route identically to the
+//!      legacy closed-enum policies (ported below as the reference),
+//!   2. the selected pod is always `ready` (and None iff none is),
+//!   3. the prefix-affinity score is monotone non-decreasing in
+//!      `prefix_match_blocks`,
+//!   4. decisions are deterministic and stable under scratch reuse.
+
+use aibrix::engine::EngineStats;
+use aibrix::gateway::{PipelineConfig, PodSnapshot, Policy, Router, ScoreCtx, ScoringPipeline};
+use aibrix::pt::{forall, gen};
+use aibrix::workload::Request;
+
+fn req() -> Request {
+    Request {
+        id: 0,
+        session: 0,
+        tokens: vec![1; 160],
+        output_len: 4,
+        arrival: 0,
+        model: "m".into(),
+        adapter: None,
+        user: 0,
+        shared_prefix_len: 0,
+    }
+}
+
+/// Raw pod signal tuple the generators produce:
+/// (ready, load, kv_util, latency_us, prefix_match_blocks).
+type PodSig = (bool, usize, f64, f64, usize);
+
+fn snapshots(sigs: &[PodSig]) -> Vec<PodSnapshot> {
+    sigs.iter()
+        .enumerate()
+        .map(|(i, &(ready, load, kv, lat, pmb))| PodSnapshot {
+            pod: i,
+            ready,
+            stats: EngineStats {
+                waiting: load,
+                running: load / 2,
+                kv_utilization: kv,
+                tokens_per_s: lat / 100.0,
+                avg_latency_us: lat,
+                prefix_hit_rate: kv,
+            },
+            prefix_match_blocks: pmb,
+            prompt_blocks: 10,
+            resident_adapters: vec![],
+        })
+        .collect()
+}
+
+fn gen_pods(rng: &mut aibrix::util::Rng, max_pods: usize) -> Vec<PodSig> {
+    let n = 1 + gen::usize_up_to(rng, max_pods);
+    (0..n)
+        .map(|_| {
+            (
+                rng.chance(0.8),
+                gen::usize_up_to(rng, 50),
+                rng.uniform(0.0, 1.0),
+                rng.uniform(1.0, 500_000.0),
+                gen::usize_up_to(rng, 14),
+            )
+        })
+        .collect()
+}
+
+/// The pre-pipeline router, ported verbatim from the seed's closed enum
+/// match (minus Random): the behavioral reference the presets must match.
+fn legacy_select(policy: Policy, pods: &[PodSnapshot]) -> Option<usize> {
+    if !pods.iter().any(|p| p.ready) {
+        return None;
+    }
+    let pick_min = |key: &dyn Fn(&PodSnapshot) -> f64| -> usize {
+        let mut best = usize::MAX;
+        let mut best_score = f64::INFINITY;
+        for p in pods.iter().filter(|p| p.ready) {
+            let s = key(p);
+            if s < best_score {
+                best_score = s;
+                best = p.pod;
+            }
+        }
+        best
+    };
+    match policy {
+        Policy::Throughput => Some(pick_min(&|p| p.stats.tokens_per_s)),
+        Policy::LeastRequest => Some(pick_min(&|p| (p.stats.waiting + p.stats.running) as f64)),
+        Policy::LeastKvCache => Some(pick_min(&|p| p.stats.kv_utilization)),
+        Policy::LeastLatency => {
+            let min_load = pods
+                .iter()
+                .filter(|p| p.ready)
+                .map(|p| p.stats.waiting + p.stats.running)
+                .min()
+                .unwrap_or(0);
+            let eligible: Vec<&PodSnapshot> = pods
+                .iter()
+                .filter(|p| p.ready && p.stats.waiting + p.stats.running <= min_load * 2 + 4)
+                .collect();
+            eligible
+                .iter()
+                .min_by(|a, b| {
+                    a.stats
+                        .avg_latency_us
+                        .partial_cmp(&b.stats.avg_latency_us)
+                        .unwrap()
+                        .then_with(|| {
+                            (a.stats.waiting + a.stats.running)
+                                .cmp(&(b.stats.waiting + b.stats.running))
+                        })
+                })
+                .map(|p| p.pod)
+        }
+        Policy::PrefixCacheAware { threshold } => {
+            let min_load = pods
+                .iter()
+                .filter(|p| p.ready)
+                .map(|p| p.stats.waiting + p.stats.running)
+                .min()
+                .unwrap_or(0);
+            let warm = pods
+                .iter()
+                .filter(|p| {
+                    p.ready
+                        && p.prefix_hit_fraction() >= threshold
+                        && p.stats.waiting + p.stats.running <= min_load * 2 + 4
+                })
+                .min_by_key(|p| p.stats.waiting + p.stats.running);
+            match warm {
+                Some(p) => Some(p.pod),
+                None => Some(pick_min(&|p| (p.stats.waiting + p.stats.running) as f64)),
+            }
+        }
+        _ => unreachable!("reference covers scoring presets only"),
+    }
+}
+
+/// Invariant 1: each single-scorer preset reduces to the legacy policy.
+#[test]
+fn prop_presets_match_legacy_policies() {
+    forall(
+        "pipeline-presets-equal-legacy",
+        400,
+        |rng, _| {
+            let pods = gen_pods(rng, 12);
+            let policy_idx = gen::usize_up_to(rng, 5);
+            let threshold = rng.uniform(0.0, 1.0);
+            (pods, policy_idx, threshold)
+        },
+        |(pods, policy_idx, threshold)| {
+            let snaps = snapshots(pods);
+            let policy = match policy_idx {
+                0 => Policy::Throughput,
+                1 => Policy::LeastRequest,
+                2 => Policy::LeastKvCache,
+                3 => Policy::LeastLatency,
+                _ => Policy::PrefixCacheAware { threshold: *threshold },
+            };
+            let expected = legacy_select(policy, &snaps);
+            let got = Router::new(policy, 1).select(&req(), &snaps);
+            if got != expected {
+                return Err(format!(
+                    "{}: pipeline {got:?} != legacy {expected:?}",
+                    policy.name()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_weighted(rng: &mut aibrix::util::Rng) -> PipelineConfig {
+    loop {
+        let mut cfg = PipelineConfig {
+            prefix_affinity: rng.uniform(0.0, 1.0),
+            least_request: rng.uniform(0.0, 1.0),
+            least_kv_cache: rng.uniform(0.0, 1.0),
+            least_latency: rng.uniform(0.0, 1.0),
+            throughput: rng.uniform(0.0, 1.0),
+            lora_residency: rng.uniform(0.0, 1.0),
+            fairness: rng.uniform(0.0, 1.0),
+            prefix_threshold: rng.uniform(0.0, 1.0),
+            overload_guard: rng.chance(0.5),
+        };
+        // Randomly zero some weights to cover sparse mixes.
+        if rng.chance(0.5) {
+            cfg.least_kv_cache = 0.0;
+            cfg.lora_residency = 0.0;
+        }
+        if rng.chance(0.3) {
+            cfg.least_request = 0.0;
+            cfg.fairness = 0.0;
+        }
+        if cfg.validate().is_ok() {
+            return cfg;
+        }
+    }
+}
+
+/// Invariants 2 + 4: any valid weighted mix always returns a ready pod
+/// (None iff none is ready), deterministically, including under scratch
+/// reuse across heterogeneous requests.
+#[test]
+fn prop_weighted_totality_and_determinism() {
+    forall(
+        "pipeline-weighted-totality",
+        400,
+        |rng, _| {
+            let cfg = gen_weighted(rng);
+            let pods = gen_pods(rng, 12);
+            let share = rng.uniform(0.0, 1.0);
+            (cfg, pods, share)
+        },
+        |(cfg, pods, share)| {
+            let snaps = snapshots(pods);
+            let ctx = ScoreCtx { tenant_share: *share };
+            let mut pl = ScoringPipeline::new(*cfg);
+            let pick1 = pl.select(&req(), &snaps, &ctx);
+            let pick2 = pl.select(&req(), &snaps, &ctx); // scratch reuse
+            let fresh = ScoringPipeline::new(*cfg).select(&req(), &snaps, &ctx);
+            if pick1 != pick2 || pick1 != fresh {
+                return Err(format!("non-deterministic: {pick1:?} {pick2:?} {fresh:?}"));
+            }
+            let any_ready = snaps.iter().any(|p| p.ready);
+            match pick1 {
+                Some(i) => {
+                    let p = snaps.iter().find(|p| p.pod == i).ok_or("unknown pod")?;
+                    if !p.ready {
+                        return Err(format!("picked un-ready pod {i}"));
+                    }
+                    Ok(())
+                }
+                None if !any_ready => Ok(()),
+                None => Err("returned None with ready pods".into()),
+            }
+        },
+    );
+}
+
+/// Invariant 3: a pod's weighted total is monotone non-decreasing in its
+/// own `prefix_match_blocks` (everything else fixed).
+#[test]
+fn prop_prefix_score_monotone_in_match_blocks() {
+    forall(
+        "pipeline-prefix-monotone",
+        400,
+        |rng, _| {
+            let cfg = gen_weighted(rng);
+            let pods = gen_pods(rng, 8);
+            let which = gen::usize_up_to(rng, pods.len());
+            let bump = 1 + gen::usize_up_to(rng, 10);
+            (cfg, pods, which, bump)
+        },
+        |(cfg, pods, which, bump)| {
+            let pl = ScoringPipeline::new(*cfg);
+            let ctx = ScoreCtx::default();
+            let snaps = snapshots(pods);
+            let mut before = Vec::new();
+            pl.score_into(&req(), &snaps, &ctx, &mut before);
+            let mut bumped = snaps.clone();
+            bumped[*which].prefix_match_blocks += *bump;
+            let mut after = Vec::new();
+            pl.score_into(&req(), &bumped, &ctx, &mut after);
+            if snaps[*which].ready && after[*which] < before[*which] {
+                return Err(format!(
+                    "score dropped {} -> {} when match blocks rose by {bump}",
+                    before[*which], after[*which]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Threshold parse fuzz: every float in [0,1] round-trips through
+/// `prefix-cache-aware=<t>`; everything outside is rejected.
+#[test]
+fn prop_threshold_parse_round_trip() {
+    forall(
+        "policy-threshold-parse",
+        300,
+        |rng, _| (rng.uniform(-1.0, 2.0), rng.uniform(0.0, 1.0)),
+        |&(wild, valid)| {
+            let p = Policy::parse(&format!("prefix-cache-aware={valid}"))
+                .map_err(|e| format!("valid threshold rejected: {e}"))?;
+            let Policy::PrefixCacheAware { threshold } = p else {
+                return Err("wrong policy variant".into());
+            };
+            if (threshold - valid).abs() > 1e-12 {
+                return Err(format!("threshold {valid} round-tripped to {threshold}"));
+            }
+            let wild_result = Policy::parse(&format!("prefix-cache-aware={wild}"));
+            if (0.0..=1.0).contains(&wild) {
+                if wild_result.is_err() {
+                    return Err(format!("in-range {wild} rejected"));
+                }
+            } else if wild_result.is_ok() {
+                return Err(format!("out-of-range {wild} accepted"));
+            }
+            Ok(())
+        },
+    );
+}
