@@ -145,7 +145,19 @@ fn main() -> aibrix::util::err::Result<()> {
         "latency ms    : mean {:.1}  p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
         s.mean, s.p50, s.p90, s.p99, s.max
     );
-    println!("\nall layers composed: rust gateway -> engine threads -> PJRT -> TinyLM (JAX+Pallas AOT)");
+    // Engine-side telemetry: the runtime's own prefill/decode counters,
+    // the base quantities BENCH_runtime.json tracks (BENCHMARKS.md).
+    for (i, r) in replicas.iter().enumerate() {
+        if let Ok(rs) = r.stats() {
+            println!(
+                "replica {i} runtime: prefill {:.0} tok/s, decode {:.0} tok/s ({} decode tokens)",
+                rs.prefill_tokens_per_s(),
+                rs.decode_tokens_per_s(),
+                rs.decode_tokens
+            );
+        }
+    }
+    println!("\nall layers composed: rust gateway -> engine threads -> TinyLM kernel runtime (AOT manifest)");
     for r in &replicas {
         r.stop();
     }

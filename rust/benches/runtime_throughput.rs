@@ -1,0 +1,216 @@
+//! Runtime throughput bench: prefill tokens/s and decode tokens/s for the
+//! kernel path vs the retained scalar reference, written as machine-
+//! readable `benchmarks/BENCH_runtime.json` (schema in BENCHMARKS.md) so
+//! the perf trajectory has data points — every speedup claim carries the
+//! baseline it was measured against in the same file.
+//!
+//! Run: `cargo bench --bench runtime_throughput`          (full)
+//!      `cargo bench --bench runtime_throughput -- --smoke` (CI quick pass)
+//!
+//! The model is synthetic (no artifacts needed): bench-sized so the kernel
+//! wins are visible — vocab >= 1024 engages vocab-tile parallelism, and
+//! batch 8 engages batch-row parallelism.
+
+use std::time::Instant;
+
+use aibrix::json::Json;
+use aibrix::runtime::{ModelCfg, SyntheticSpec, TinyLmRuntime};
+use aibrix::telemetry::BenchReport;
+
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const DECODE_POS: usize = SEQ; // constant per-step kv_len for stable timing
+
+fn bench_spec(smoke: bool) -> SyntheticSpec {
+    SyntheticSpec {
+        cfg: ModelCfg {
+            vocab: if smoke { 1024 } else { 2048 },
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            max_seq: 160,
+            page_size: 16,
+        },
+        d_ff: 512,
+        prefill: vec![(1, SEQ), (4, SEQ), (BATCH, SEQ)],
+        decode: vec![1, 4, BATCH],
+        seed: 42,
+    }
+}
+
+/// Mean seconds per call over `iters` calls (after one warmup call).
+fn measure<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Append one measurement to the report and to the console summary list.
+fn record(
+    report: &mut BenchReport,
+    summary: &mut Vec<(String, f64, f64)>,
+    name: &str,
+    tokens_per_call: usize,
+    per_call_s: f64,
+    iters: usize,
+) {
+    report.result([
+        ("name", Json::from(name)),
+        ("batch", Json::from(BATCH)),
+        ("iters", Json::from(iters)),
+        ("ms_per_call", Json::from(per_call_s * 1e3)),
+        ("tokens_per_s", Json::from(tokens_per_call as f64 / per_call_s)),
+    ]);
+    summary.push((name.to_string(), tokens_per_call as f64 / per_call_s, per_call_s * 1e3));
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let spec = bench_spec(smoke);
+    let rt = TinyLmRuntime::synthetic(&spec);
+    let mut rt1 = TinyLmRuntime::synthetic(&spec);
+    rt1.set_threads(1);
+    let (prefill_iters, decode_steps, gen_iters, gen_steps) =
+        if smoke { (2, 24, 1, 6) } else { (6, 96, 2, 12) };
+
+    println!("== runtime_throughput ({}) ==", if smoke { "smoke" } else { "full" });
+    println!(
+        "model: vocab={} d_model={} layers={} d_ff={}  batch={BATCH} seq={SEQ}  threads={}",
+        spec.cfg.vocab,
+        spec.cfg.d_model,
+        spec.cfg.n_layers,
+        spec.d_ff,
+        rt.threads()
+    );
+
+    let mut report = BenchReport::new("runtime");
+    report
+        .config("smoke", smoke)
+        .config("vocab", spec.cfg.vocab)
+        .config("d_model", spec.cfg.d_model)
+        .config("n_layers", spec.cfg.n_layers)
+        .config("d_ff", spec.d_ff)
+        .config("max_seq", spec.cfg.max_seq)
+        .config("batch", BATCH)
+        .config("seq", SEQ)
+        .config("threads", rt.threads())
+        .config("prefill_iters", prefill_iters)
+        .config("decode_steps", decode_steps);
+
+    // Shared inputs: BATCH prompts padded to SEQ.
+    let tokens: Vec<i32> =
+        (0..BATCH * SEQ).map(|i| ((i * 2_654_435_761) % spec.cfg.vocab) as i32).collect();
+    let last: Vec<usize> = vec![SEQ - 1; BATCH];
+    let prefill_tokens = BATCH * SEQ;
+
+    // ---- prefill: scalar reference baseline, kernel full, kernel masked.
+    let mut summary: Vec<(String, f64, f64)> = Vec::new(); // (name, tok/s, ms)
+
+    let prefill_ref_s = measure(prefill_iters, || {
+        let out = rt.prefill_reference(BATCH, &tokens).unwrap();
+        assert_eq!(out.batch, BATCH);
+    });
+    record(
+        &mut report,
+        &mut summary,
+        "prefill_reference",
+        prefill_tokens,
+        prefill_ref_s,
+        prefill_iters,
+    );
+
+    let prefill_kernel_s = measure(prefill_iters, || {
+        let out = rt.prefill(BATCH, &tokens).unwrap();
+        assert_eq!(out.batch, BATCH);
+    });
+    record(
+        &mut report,
+        &mut summary,
+        "prefill_kernel",
+        prefill_tokens,
+        prefill_kernel_s,
+        prefill_iters,
+    );
+
+    let s = measure(prefill_iters, || {
+        let out = rt.prefill_last(BATCH, &tokens, &last, None).unwrap();
+        assert_eq!(out.batch, BATCH);
+    });
+    record(&mut report, &mut summary, "prefill_last_kernel", prefill_tokens, s, prefill_iters);
+
+    // ---- decode: one step at fixed position (kv_len = SEQ + 1).
+    let cur: Vec<i32> = (0..BATCH as i32).collect();
+    let pos: Vec<i32> = vec![DECODE_POS as i32; BATCH];
+    let decode_of = |runtime: &TinyLmRuntime, reference: bool, steps: usize| -> f64 {
+        let pre = runtime.prefill_last(BATCH, &tokens, &last, None).unwrap();
+        let mut kv = Some((pre.k, pre.v));
+        measure(steps, || {
+            let (k, v) = kv.take().unwrap();
+            let d = if reference {
+                runtime.decode_reference(BATCH, &cur, &pos, k, v).unwrap()
+            } else {
+                runtime.decode(BATCH, &cur, &pos, k, v).unwrap()
+            };
+            kv = Some((d.k, d.v));
+        })
+    };
+
+    let decode_ref_s = decode_of(&rt, true, decode_steps);
+    record(&mut report, &mut summary, "decode_reference", BATCH, decode_ref_s, decode_steps);
+    let decode_t1_s = decode_of(&rt1, false, decode_steps);
+    record(&mut report, &mut summary, "decode_kernel_1thread", BATCH, decode_t1_s, decode_steps);
+    let decode_kernel_s = decode_of(&rt, false, decode_steps);
+    record(&mut report, &mut summary, "decode_kernel", BATCH, decode_kernel_s, decode_steps);
+
+    // ---- end-to-end generate (prefill + steps greedy decode).
+    let prompts: Vec<Vec<u32>> = (0..BATCH)
+        .map(|b| (0..SEQ - 4).map(|s| ((b * 31 + s * 7) % spec.cfg.vocab) as u32).collect())
+        .collect();
+    let gen_tokens = BATCH * gen_steps;
+    let s = measure(gen_iters, || {
+        rt.generate_reference(&prompts, gen_steps).unwrap();
+    });
+    record(&mut report, &mut summary, "generate_reference", gen_tokens, s, gen_iters);
+    let s = measure(gen_iters, || {
+        rt.generate(&prompts, gen_steps).unwrap();
+    });
+    record(&mut report, &mut summary, "generate_kernel", gen_tokens, s, gen_iters);
+
+    // ---- derived speedups (kernel vs the baseline in this same file).
+    let decode_speedup = decode_ref_s / decode_kernel_s;
+    let prefill_speedup = prefill_ref_s / prefill_kernel_s;
+    const TARGET: f64 = 5.0;
+    report
+        .derived("prefill_speedup", prefill_speedup)
+        .derived("decode_speedup", decode_speedup)
+        .derived("decode_speedup_1thread", decode_ref_s / decode_t1_s)
+        .derived("target_decode_speedup", TARGET)
+        .derived("decode_target_met", decode_speedup >= TARGET);
+
+    for (name, tps, ms) in &summary {
+        println!("{name:<24} {tps:>12.0} tok/s   {ms:>9.2} ms/call");
+    }
+    println!(
+        "decode speedup: {decode_speedup:.2}x vs scalar reference \
+         (1-thread {:.2}x, target {TARGET:.0}x: {})",
+        decode_ref_s / decode_t1_s,
+        if decode_speedup >= TARGET { "MET" } else { "missed" }
+    );
+    println!("prefill speedup: {prefill_speedup:.2}x");
+
+    let path = report.default_path(env!("CARGO_MANIFEST_DIR"));
+    report.write_to(&path).expect("write BENCH_runtime.json");
+    println!("wrote {}", path.display());
+
+    // Regression canary, deliberately loose (CI gates precisely against
+    // the checked-in baseline via scripts/check_bench.py): the kernel path
+    // must never be slower than the scalar reference it replaced.
+    assert!(
+        decode_speedup > 0.8,
+        "kernel decode slower than scalar reference ({decode_speedup:.2}x)"
+    );
+}

@@ -1,25 +1,73 @@
-//! perf_probe: micro-timings of the real PJRT path (prefill / decode /
+//! perf_probe: micro-timings of the real runtime path (prefill / decode /
 //! generate per batch size). Used by the §Perf pass in EXPERIMENTS.md.
-//! Run: `cargo run --release --bin perf_probe` (needs `make artifacts`).
+//!
+//! Runs against the AOT artifacts when present (`make artifacts`), else
+//! against a bench-sized synthetic model so kernel timings are always
+//! obtainable. Reports the runtime's own telemetry counters (prefill /
+//! decode tokens/s) next to the wall-clock generate timings.
+//!
+//! Run: `cargo run --release --bin perf_probe`
+
 use std::time::Instant;
+
+use aibrix::runtime::{ModelCfg, SyntheticSpec, TinyLmRuntime};
+
+fn synthetic_probe_runtime() -> TinyLmRuntime {
+    TinyLmRuntime::synthetic(&SyntheticSpec {
+        cfg: ModelCfg {
+            vocab: 2048,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            max_seq: 192,
+            page_size: 16,
+        },
+        d_ff: 512,
+        prefill: vec![(1, 128), (4, 128), (8, 128)],
+        decode: vec![1, 4, 8],
+        seed: 42,
+    })
+}
+
 fn main() -> aibrix::util::err::Result<()> {
     let dir_buf = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
     let dir = dir_buf.as_path();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("no artifacts; run `make artifacts`");
-        return Ok(());
-    }
-    let rt = aibrix::runtime::TinyLmRuntime::load(dir)?;
+    let rt = if dir.join("manifest.json").exists() {
+        println!("== perf_probe (AOT artifacts) ==");
+        TinyLmRuntime::load(dir)?
+    } else {
+        println!("== perf_probe (no artifacts; synthetic bench model) ==");
+        synthetic_probe_runtime()
+    };
+    println!(
+        "model: vocab={} d_model={} layers={} max_seq={}  threads={}",
+        rt.cfg.vocab, rt.cfg.d_model, rt.cfg.n_layers, rt.cfg.max_seq, rt.threads()
+    );
     for &b in &[1usize, 4, 8] {
-        if !rt.prefill_batches().contains(&b) && !rt.decode_batches().contains(&b) { continue; }
-        if !rt.prefill_batches().contains(&b) { continue; }
-        let prompts: Vec<Vec<u32>> = (0..b).map(|i| vec![(i as u32)+1; 60]).collect();
+        if !rt.prefill_batches().contains(&b) {
+            continue;
+        }
+        let prompts: Vec<Vec<u32>> = (0..b).map(|i| vec![(i as u32) + 1; 60]).collect();
         rt.generate(&prompts, 12)?; // warm
         let t0 = Instant::now();
         let n = 5;
-        for _ in 0..n { rt.generate(&prompts, 12)?; }
-        let ms = t0.elapsed().as_secs_f64()*1e3/n as f64;
+        for _ in 0..n {
+            rt.generate(&prompts, 12)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
         println!("generate b{b} 12 steps: {ms:.1} ms  ({:.1} ms/req)", ms / b as f64);
     }
+    let s = rt.stats();
+    println!(
+        "runtime telemetry: prefill {:.0} tok/s ({} tokens, {} calls)  \
+         decode {:.0} tok/s ({} tokens, {} calls)",
+        s.prefill_tokens_per_s(),
+        s.prefill_tokens,
+        s.prefill_calls,
+        s.decode_tokens_per_s(),
+        s.decode_tokens,
+        s.decode_calls
+    );
     Ok(())
 }

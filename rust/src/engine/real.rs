@@ -10,7 +10,7 @@ use std::collections::VecDeque;
 use std::path::Path;
 use std::time::Instant;
 
-use crate::runtime::TinyLmRuntime;
+use crate::runtime::{RtStats, TinyLmRuntime};
 use crate::util::err::{Error, Result};
 
 /// A queued real request.
@@ -66,6 +66,12 @@ impl RealEngine {
         &self.runtime
     }
 
+    /// Cumulative runtime telemetry (prefill/decode tokens and wall time)
+    /// — the decode-throughput numbers the BENCH pipeline reports.
+    pub fn runtime_stats(&self) -> RtStats {
+        self.runtime.stats()
+    }
+
     /// Longest admissible prompt.
     pub fn max_prompt(&self) -> usize {
         self.prefill_window
@@ -114,17 +120,22 @@ impl RealEngine {
                 t
             })
             .collect();
-        // Pad the batch with dummy rows if the compiled size is larger.
+        // Pad the batch with dummy rows if the compiled size is larger,
+        // masking them inactive so the runtime skips their compute: padding
+        // keeps the artifact shape honest without costing padded-row
+        // prefill/decode work.
+        let real_rows = prompts.len();
         while prompts.len() < batch_size {
             prompts.push(vec![0u32]);
         }
+        let active: Vec<bool> = (0..prompts.len()).map(|i| i < real_rows).collect();
         let steps = reqs
             .iter()
             .map(|(r, _)| r.max_new_tokens)
             .max()
             .unwrap_or(1)
             .clamp(1, self.decode_budget);
-        let generated = self.runtime.generate(&prompts, steps)?;
+        let generated = self.runtime.generate_masked(&prompts, steps, Some(&active))?;
         let serve_us = t_serve.elapsed().as_micros() as u64;
 
         let mut out = Vec::new();
@@ -161,15 +172,17 @@ use std::sync::mpsc;
 /// Commands into the engine thread.
 enum Cmd {
     Serve(RealRequest, mpsc::Sender<RealCompletion>),
+    Stats(mpsc::Sender<RtStats>),
     Stop,
 }
 
 /// A `Send + Clone` handle to a [`RealEngine`] running on its own thread.
 ///
-/// PJRT wrapper types are not `Send` (Rc + raw pointers), so the engine
-/// lives on one dedicated thread that drains the command channel into
-/// batches — which is also the correct serving shape: one batching loop per
-/// engine replica, HTTP workers only enqueue.
+/// One dedicated thread drains the command channel into batches — the
+/// correct serving shape: one batching loop per engine replica, HTTP
+/// workers only enqueue. (Historically also forced by PJRT wrapper types
+/// not being `Send`; the pure-Rust kernel runtime keeps the design and
+/// does its own `std::thread::scope` fan-out inside prefill/decode.)
 #[derive(Clone)]
 pub struct RealEngineHandle {
     tx: mpsc::Sender<Cmd>,
@@ -214,6 +227,9 @@ impl RealEngineHandle {
                             waiters.insert(req.id, reply);
                             engine.enqueue(req);
                         }
+                        Cmd::Stats(reply) => {
+                            let _ = reply.send(engine.runtime_stats());
+                        }
                         Cmd::Stop => stop = true,
                     }
                 }
@@ -250,6 +266,14 @@ impl RealEngineHandle {
             .send(Cmd::Serve(req, tx))
             .map_err(|_| Error::msg("engine thread gone"))?;
         rx.recv().map_err(|_| Error::msg("engine thread dropped request"))
+    }
+
+    /// Runtime telemetry snapshot from the engine thread (answered between
+    /// batches; blocks until the current batch drains).
+    pub fn stats(&self) -> Result<RtStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Stats(tx)).map_err(|_| Error::msg("engine thread gone"))?;
+        rx.recv().map_err(|_| Error::msg("engine thread dropped stats request"))
     }
 
     pub fn stop(&self) {

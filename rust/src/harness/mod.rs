@@ -11,6 +11,7 @@
 use crate::engine::{Completion, EngineConfig, EngineSim, ExternalKv};
 use crate::engine::prefix::prompt_block_keys;
 use crate::gateway::{Decision, Gateway, PodSnapshot, Policy};
+use crate::json::Json;
 use crate::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
 use crate::sim::{SimTime, Simulator};
 use crate::util::stats::Summary;
@@ -125,6 +126,27 @@ impl RunReport {
             return 0.0;
         }
         self.total_decode_tokens as f64 / (self.makespan as f64 / 1e6)
+    }
+
+    /// One machine-readable BENCH record for this run (the telemetry
+    /// pipeline's schema, BENCHMARKS.md): throughput — decode tokens/s
+    /// front and center — plus latency summaries, so harness experiments
+    /// land in the same trajectory files the runtime bench writes.
+    pub fn bench_json(&self, name: &str) -> Json {
+        let ttft = self.ttft_summary();
+        let itl = self.itl_summary();
+        Json::obj([
+            ("name", Json::from(name)),
+            ("completions", Json::from(self.completions.len())),
+            ("rejected", Json::from(self.rejected)),
+            ("makespan_s", Json::from(self.completion_time_s())),
+            ("total_tokens_per_s", Json::from(self.total_throughput())),
+            ("decode_tokens_per_s", Json::from(self.decode_throughput())),
+            ("ttft_ms_mean", Json::from(ttft.mean)),
+            ("ttft_ms_p99", Json::from(ttft.p99)),
+            ("itl_ms_mean", Json::from(itl.mean)),
+            ("itl_ms_p99", Json::from(itl.p99)),
+        ])
     }
 }
 
@@ -393,6 +415,25 @@ mod tests {
             with_pool.ttft_summary().mean,
             no_pool.ttft_summary().mean
         );
+    }
+
+    #[test]
+    fn bench_json_record_is_well_formed() {
+        let cfg = HarnessConfig {
+            engines: engines(2, false),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 20.0 },
+            kv_pool: None,
+            seed: 3,
+            deadline: 0,
+            closed_loop_clients: 0,
+        };
+        let r = run(cfg, &mut small_workload(30));
+        let j = r.bench_json("smoke");
+        assert_eq!(j["name"].as_str(), Some("smoke"));
+        assert_eq!(j["completions"].as_usize(), Some(30));
+        assert!(j["decode_tokens_per_s"].as_f64().unwrap() > 0.0);
+        assert!(crate::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub mod orchestration;
 pub mod runtime;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod tokenizer;
 pub mod util;
 pub mod workload;

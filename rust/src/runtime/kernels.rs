@@ -1,0 +1,392 @@
+//! Compute kernels for the TinyLM CPU runtime (the prefill/decode hot path).
+//!
+//! Numeric contract: every kernel accumulates each output element in
+//! ascending-k order with separate mul/add rounding (no FMA, no
+//! reassociation), so the cache-tiled [`gemm`], its m=1 matvec degenerate
+//! case, and the retained scalar path in [`super::reference`] are
+//! bit-identical — which is what keeps KV-cache decode bit-exact with
+//! re-prefill (`runtime_e2e.rs::decode_matches_re_prefill`) and lets the
+//! kernel-vs-reference proptests compare raw f32 bits.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Row-block size: this many output rows stay resident while a k-panel of
+/// `w` streams through. 32 rows x 256 f32 columns = 32 KiB, L1-resident.
+const GEMM_MC: usize = 32;
+/// Depth-block size: this many rows of `w` are reused across the whole
+/// row block before moving on (the cache win over per-position matvec).
+const GEMM_KC: usize = 128;
+
+/// out[m, n] = x[m, k] @ w[k, n], all row-major, out fully overwritten.
+///
+/// Tiled over (rows, depth) for cache reuse; per output element the adds
+/// still happen in ascending-k order, so any (m) split — including m=1
+/// decode calls against an m=S prefill — produces identical bits.
+pub fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(x.len() >= m * k, "gemm x too short");
+    debug_assert!(w.len() >= k * n, "gemm w too short");
+    debug_assert!(out.len() >= m * n, "gemm out too short");
+    for o in out[..m * n].iter_mut() {
+        *o = 0.0;
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + GEMM_MC).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + GEMM_KC).min(k);
+            for i in i0..i1 {
+                let xrow = &x[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let xi = xrow[kk];
+                    let wrow = &w[kk * n..(kk + 1) * n];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+}
+
+/// RMSNorm: out = x * rsqrt(mean(x^2) + 1e-5) * g.
+pub fn rms_norm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+/// tanh-approximated GELU (jax.nn.gelu's default form).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Precomputed rotary-embedding tables: sin/cos of `pos * base^(-j/half)`
+/// for every (position, frequency) pair, built once at model load instead
+/// of one `powf` + `sin_cos` per position per head per layer per call.
+/// Values are computed with the exact expression the scalar reference uses
+/// inline, so table lookups stay bit-identical to recomputation.
+pub struct RopeTables {
+    half: usize,
+    sin: Vec<f32>,
+    cos: Vec<f32>,
+}
+
+impl RopeTables {
+    pub fn new(max_seq: usize, head_dim: usize, base: f32) -> RopeTables {
+        let half = head_dim / 2;
+        let mut sin = vec![0.0f32; max_seq * half];
+        let mut cos = vec![0.0f32; max_seq * half];
+        for pos in 0..max_seq {
+            for j in 0..half {
+                let freq = base.powf(-(j as f32) / half as f32);
+                let (s, c) = (pos as f32 * freq).sin_cos();
+                sin[pos * half + j] = s;
+                cos[pos * half + j] = c;
+            }
+        }
+        RopeTables { half, sin, cos }
+    }
+
+    /// Rotate one head vector (len = 2*half) in place at absolute `pos`.
+    pub fn apply(&self, v: &mut [f32], pos: usize) {
+        let half = self.half;
+        let sin = &self.sin[pos * half..(pos + 1) * half];
+        let cos = &self.cos[pos * half..(pos + 1) * half];
+        for j in 0..half {
+            let x1 = v[j];
+            let x2 = v[j + half];
+            v[j] = x1 * cos[j] - x2 * sin[j];
+            v[j + half] = x1 * sin[j] + x2 * cos[j];
+        }
+    }
+}
+
+/// Attention for one (row, head, query position): softmax over cache
+/// positions `0..kv_len` of `k_row`/`v_row` — the contiguous
+/// [max_seq, n_heads*head_dim] slab of one (layer, batch-row) pair —
+/// accumulating in ascending-j order so prefill and decode produce
+/// bit-identical sums. `out` is this head's [head_dim] output slot.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_one(
+    q: &[f32],
+    k_row: &[f32],
+    v_row: &[f32],
+    kv_len: usize,
+    head: usize,
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    let stride = n_heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    scores.clear();
+    let mut max_s = f32::NEG_INFINITY;
+    for j in 0..kv_len {
+        let off = j * stride + head * hd;
+        let kj = &k_row[off..off + hd];
+        let mut dot = 0.0f32;
+        for d in 0..hd {
+            dot += q[d] * kj[d];
+        }
+        let s = dot * scale;
+        scores.push(s);
+        if s > max_s {
+            max_s = s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        denom += *s;
+    }
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let w = p / denom;
+        let off = j * stride + head * hd;
+        let vj = &v_row[off..off + hd];
+        for d in 0..hd {
+            out[d] += w * vj[d];
+        }
+    }
+}
+
+/// logits[t - t0] = xn . embed[t] for t in `t0..t1` (one vocab tile; each
+/// dot accumulates in ascending-d order, so vocab-chunked parallel runs
+/// match the serial pass bit-for-bit).
+pub fn logits_tile(xn: &[f32], embed: &[f32], t0: usize, t1: usize, out: &mut [f32]) {
+    let dm = xn.len();
+    for (o, t) in out.iter_mut().zip(t0..t1) {
+        let row = &embed[t * dm..(t + 1) * dm];
+        let mut dot = 0.0f32;
+        for d in 0..dm {
+            dot += xn[d] * row[d];
+        }
+        *o = dot;
+    }
+}
+
+/// Flat scratch arena for one worker: every per-position buffer the old
+/// interpreter allocated per call (`Scratch::new`, `q = vec![...]`,
+/// `Vec<Vec<f32>>` residuals) lives here instead, leased from the
+/// runtime's pool and reused across calls. Buffers only ever grow.
+#[derive(Default)]
+pub struct Workspace {
+    /// [seq, d_model] RMSNorm output (GEMM input).
+    pub xn: Vec<f32>,
+    /// [seq, d_model] roped query rows.
+    pub q: Vec<f32>,
+    /// [seq, d_model] concatenated attention-head outputs.
+    pub attn: Vec<f32>,
+    /// [seq, d_model] projection / MLP-out buffer.
+    pub proj: Vec<f32>,
+    /// [seq, d_ff] MLP hidden buffer.
+    pub ff: Vec<f32>,
+    /// [max_seq] attention score buffer.
+    pub scores: Vec<f32>,
+}
+
+fn grow(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+impl Workspace {
+    /// Grow buffers to cover a [seq, d_model]/[seq, d_ff] block.
+    pub fn ensure(&mut self, seq: usize, dm: usize, d_ff: usize) {
+        grow(&mut self.xn, seq * dm);
+        grow(&mut self.q, seq * dm);
+        grow(&mut self.attn, seq * dm);
+        grow(&mut self.proj, seq * dm);
+        grow(&mut self.ff, seq * d_ff);
+    }
+}
+
+/// Worker-thread count for batch-row / vocab-chunk parallelism:
+/// `AIBRIX_RT_THREADS` override (>= 1), else the host's available
+/// parallelism, capped at 16 (this is per-runtime; replicas multiply).
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("AIBRIX_RT_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(64);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Run `job(i)` for every `i < count` on up to `threads` scoped workers
+/// (zero-dep `std::thread::scope`, work-stealing via an atomic cursor).
+/// Jobs must be independent and schedule-oblivious — every call site here
+/// parallelizes per-batch-row or per-vocab-tile work whose output elements
+/// are each computed by exactly one job, so thread count never changes
+/// results (asserted by the runtime_e2e thread-invariance proptest).
+pub fn par_for<F: Fn(usize) + Sync>(count: usize, threads: usize, job: F) {
+    let t = threads.min(count);
+    if t <= 1 {
+        for i in 0..count {
+            job(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..t {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                job(i);
+            });
+        }
+    });
+}
+
+/// Shared-mutable raw view over one f32 buffer for scoped-thread workers
+/// that write disjoint regions. Needed because the KV cache layout
+/// [L, B, Smax, H, D] interleaves batch rows across layers, so a safe
+/// per-row `chunks_mut` split does not exist. Holds the source `&mut`
+/// borrow for its lifetime, so no safe access can alias it.
+pub struct RawSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _borrow: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: RawSlice is only a pointer + length; all slicing goes through
+// the unsafe range methods whose callers must guarantee cross-thread
+// disjointness (each worker touches only its own row's/tile's ranges).
+unsafe impl Send for RawSlice<'_> {}
+unsafe impl Sync for RawSlice<'_> {}
+
+impl<'a> RawSlice<'a> {
+    pub fn new(data: &'a mut [f32]) -> RawSlice<'a> {
+        RawSlice { ptr: data.as_mut_ptr(), len: data.len(), _borrow: PhantomData }
+    }
+
+    /// # Safety
+    /// No other live reference (from any thread) may overlap
+    /// `start..start+len` while the returned slice lives.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        assert!(start + len <= self.len, "RawSlice range {start}+{len} > {}", self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// # Safety
+    /// No live *mutable* reference (from any thread) may overlap
+    /// `start..start+len` while the returned slice lives.
+    pub unsafe fn range(&self, start: usize, len: usize) -> &[f32] {
+        assert!(start + len <= self.len, "RawSlice range {start}+{len} > {}", self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive ascending-k matvec (the reference kernels build on).
+    fn matvec_naive(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for (i, &xi) in x.iter().enumerate().take(k) {
+            let row = &w[i * n..(i + 1) * n];
+            for j in 0..n {
+                out[j] += xi * row[j];
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bit_matches_naive_matvec_rows() {
+        let mut rng = crate::util::Rng::new(3);
+        // Odd sizes straddling both tile boundaries.
+        let (m, k, n) = (37, 150, 41);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        gemm(&x, &w, m, k, n, &mut out);
+        let mut row = vec![0.0f32; n];
+        for i in 0..m {
+            matvec_naive(&x[i * k..(i + 1) * k], &w, k, n, &mut row);
+            for j in 0..n {
+                assert_eq!(out[i * n + j].to_bits(), row[j].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_m1_equals_full_row() {
+        let mut rng = crate::util::Rng::new(9);
+        let (m, k, n) = (5, 130, 17);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut full = vec![0.0f32; m * n];
+        gemm(&x, &w, m, k, n, &mut full);
+        let mut one = vec![0.0f32; n];
+        for i in 0..m {
+            gemm(&x[i * k..(i + 1) * k], &w, 1, k, n, &mut one);
+            assert!(one
+                .iter()
+                .zip(&full[i * n..(i + 1) * n])
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn rope_table_matches_inline_recompute() {
+        let tables = RopeTables::new(32, 8, 10_000.0);
+        let mut rng = crate::util::Rng::new(5);
+        for pos in [0usize, 1, 7, 31] {
+            let mut v: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            let mut r = v.clone();
+            tables.apply(&mut v, pos);
+            // Inline recompute with the reference expression.
+            let half = 4;
+            for j in 0..half {
+                let freq = 10_000.0f32.powf(-(j as f32) / half as f32);
+                let (sin, cos) = (pos as f32 * freq).sin_cos();
+                let (x1, x2) = (r[j], r[j + half]);
+                r[j] = x1 * cos - x2 * sin;
+                r[j + half] = x1 * sin + x2 * cos;
+            }
+            assert!(v.iter().zip(&r).all(|(a, b)| a.to_bits() == b.to_bits()), "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn par_for_covers_all_indices_once() {
+        use std::sync::atomic::AtomicU32;
+        let hits: Vec<AtomicU32> = (0..100).map(|_| AtomicU32::new(0)).collect();
+        par_for(100, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // Degenerate counts.
+        par_for(0, 4, |_| panic!("no jobs"));
+        let one = AtomicU32::new(0);
+        par_for(1, 8, |_| {
+            one.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(one.load(Ordering::Relaxed), 1);
+    }
+}

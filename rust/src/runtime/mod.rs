@@ -15,17 +15,40 @@
 //! for unlisted batch sizes fail exactly as the compiled path did, keeping
 //! `RealEngine`'s batch-padding logic honest.
 //!
+//! Compute is organized as a kernel layer ([`kernels`]): position-blocked
+//! cache-tiled GEMM over whole [S, Dm] activation blocks in prefill,
+//! RoPE sin/cos tables precomputed at load, flat [`kernels::Workspace`]
+//! arenas pooled across calls, and scoped-thread parallelism over
+//! independent batch rows / vocab tiles (`AIBRIX_RT_THREADS` override).
+//! The pre-kernel scalar path is retained in [`reference`] as the golden
+//! model and the perf baseline `benches/runtime_throughput.rs` records.
+//!
 //! Numerical contract (rust/tests/runtime_e2e.rs): greedy decode is
-//! deterministic, batch rows are independent, and the KV-cache decode path
-//! is bit-exact with re-prefill — prefill and decode share the same
-//! accumulation-ordered helpers below, so the last property holds exactly.
+//! deterministic, batch rows are independent, thread count never changes
+//! bits, and the KV-cache decode path is bit-exact with re-prefill —
+//! prefill and decode share [`TinyLmRuntime::forward_row`] and the
+//! ascending-k kernels, so the last property holds exactly.
+
+pub mod kernels;
+mod reference;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::Read;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::json::{parse, Json};
 use crate::util::err::{Error, Result};
+use kernels::{RawSlice, RopeTables, Workspace};
+
+/// Rotary-embedding frequency base (matches `python/compile/model.py`).
+const ROPE_BASE: f32 = 10_000.0;
+
+/// Below this vocab size, splitting a single logits row across threads
+/// costs more in spawns than the dots it saves.
+const VOCAB_PAR_MIN: usize = 1024;
 
 /// Dense row-major f32 tensor (parameters, KV caches).
 #[derive(Debug, Clone)]
@@ -176,7 +199,7 @@ impl Manifest {
     }
 }
 
-/// Output of one prefill call.
+/// Output of one full prefill call (logits for every position).
 pub struct PrefillOut {
     /// Logits for every position: [B][S][V] flattened per row.
     pub logits: Vec<f32>,
@@ -197,6 +220,29 @@ impl PrefillOut {
 
     pub fn argmax_at(&self, b: usize, pos: usize) -> u32 {
         argmax(self.logits_at(b, pos))
+    }
+}
+
+/// Output of [`TinyLmRuntime::prefill_last`]: logits for one selected
+/// position per row only ([B][V]) — the positions-mask fast path `generate`
+/// uses, skipping the full-vocab projection at every other prefill
+/// position.
+pub struct PrefillLastOut {
+    /// [B][V] logits at each row's selected position.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub vocab: usize,
+    pub k: DeviceTensor,
+    pub v: DeviceTensor,
+}
+
+impl PrefillLastOut {
+    pub fn logits_of(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+
+    pub fn argmax_of(&self, b: usize) -> u32 {
+        argmax(self.logits_of(b))
     }
 }
 
@@ -229,110 +275,6 @@ pub fn argmax(xs: &[f32]) -> u32 {
         }
     }
     best as u32
-}
-
-// --------------------------------------------------------- math helpers
-
-fn rms_norm(x: &[f32], g: &[f32], out: &mut [f32]) {
-    let d = x.len();
-    let mut ss = 0.0f32;
-    for &v in x {
-        ss += v * v;
-    }
-    let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
-    for i in 0..d {
-        out[i] = x[i] * inv * g[i];
-    }
-}
-
-/// out[n] = x[k] @ w[k, n] (w row-major [k, n]).
-fn matvec(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
-    for o in out.iter_mut() {
-        *o = 0.0;
-    }
-    for (i, &xi) in x.iter().enumerate().take(k) {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * n..(i + 1) * n];
-        for j in 0..n {
-            out[j] += xi * row[j];
-        }
-    }
-}
-
-/// In-place rotary embedding of one head vector at absolute position `pos`.
-fn rope(v: &mut [f32], pos: usize, base: f32) {
-    let d = v.len();
-    let half = d / 2;
-    for j in 0..half {
-        let freq = base.powf(-(j as f32) / half as f32);
-        let angle = pos as f32 * freq;
-        let (sin, cos) = angle.sin_cos();
-        let x1 = v[j];
-        let x2 = v[j + half];
-        v[j] = x1 * cos - x2 * sin;
-        v[j + half] = x1 * sin + x2 * cos;
-    }
-}
-
-/// tanh-approximated GELU (jax.nn.gelu's default form).
-fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
-}
-
-/// Attention for one (batch row, head, query position): softmax over cache
-/// positions `0..kv_len`, accumulating in ascending-j order so prefill and
-/// decode produce bit-identical sums.
-#[allow(clippy::too_many_arguments)]
-fn attend_one(
-    q: &[f32],
-    k_cache: &Tensor,
-    v_cache: &Tensor,
-    layer: usize,
-    b: usize,
-    head: usize,
-    kv_len: usize,
-    cfg: &ModelCfg,
-    scores: &mut Vec<f32>,
-    out: &mut [f32],
-) {
-    let hd = cfg.head_dim;
-    let scale = 1.0 / (hd as f32).sqrt();
-    let stride_b = cfg.max_seq * cfg.n_heads * hd;
-    let base = (layer * k_cache.dims[1] + b) * stride_b;
-    scores.clear();
-    let mut max_s = f32::NEG_INFINITY;
-    for j in 0..kv_len {
-        let off = base + j * cfg.n_heads * hd + head * hd;
-        let kj = &k_cache.data[off..off + hd];
-        let mut dot = 0.0f32;
-        for d in 0..hd {
-            dot += q[d] * kj[d];
-        }
-        let s = dot * scale;
-        scores.push(s);
-        if s > max_s {
-            max_s = s;
-        }
-    }
-    let mut denom = 0.0f32;
-    for s in scores.iter_mut() {
-        *s = (*s - max_s).exp();
-        denom += *s;
-    }
-    for o in out.iter_mut().take(hd) {
-        *o = 0.0;
-    }
-    for (j, &p) in scores.iter().enumerate() {
-        let w = p / denom;
-        let off = base + j * cfg.n_heads * hd + head * hd;
-        let vj = &v_cache.data[off..off + hd];
-        for d in 0..hd {
-            out[d] += w * vj[d];
-        }
-    }
 }
 
 // ------------------------------------------------------------ parameters
@@ -387,9 +329,54 @@ impl TinyLmParams {
     }
 }
 
+// ------------------------------------------------------------- telemetry
+
+/// Cumulative hot-path counters (atomics: prefill/decode take `&self` and
+/// may be read from other threads via [`TinyLmRuntime::stats`]).
+#[derive(Debug, Default)]
+struct RtCounters {
+    prefill_calls: AtomicU64,
+    prefill_tokens: AtomicU64,
+    prefill_us: AtomicU64,
+    decode_calls: AtomicU64,
+    decode_tokens: AtomicU64,
+    decode_us: AtomicU64,
+}
+
+/// Snapshot of runtime telemetry — the base quantities the BENCH pipeline
+/// (BENCHMARKS.md) and the serving layers report throughput from.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RtStats {
+    pub prefill_calls: u64,
+    /// Computed prefill positions (active rows x padded seq).
+    pub prefill_tokens: u64,
+    pub prefill_us: u64,
+    pub decode_calls: u64,
+    /// Decoded tokens (active rows x steps).
+    pub decode_tokens: u64,
+    pub decode_us: u64,
+}
+
+impl RtStats {
+    pub fn prefill_tokens_per_s(&self) -> f64 {
+        if self.prefill_us == 0 {
+            return 0.0;
+        }
+        self.prefill_tokens as f64 / (self.prefill_us as f64 / 1e6)
+    }
+
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_us == 0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / (self.decode_us as f64 / 1e6)
+    }
+}
+
 // --------------------------------------------------------------- runtime
 
-/// The loaded model: parameters + the artifact shape table.
+/// The loaded model: parameters + the artifact shape table + the kernel
+/// layer's shared state (RoPE tables, workspace pools, thread budget).
 pub struct TinyLmRuntime {
     pub cfg: ModelCfg,
     params: TinyLmParams,
@@ -397,6 +384,50 @@ pub struct TinyLmRuntime {
     prefill: BTreeMap<usize, usize>,
     /// Decode batch sizes with a compiled artifact.
     decode: BTreeSet<usize>,
+    /// Precomputed RoPE sin/cos tables [max_seq, head_dim/2].
+    rope: RopeTables,
+    /// Scoped-thread worker budget (AIBRIX_RT_THREADS override at load).
+    threads: usize,
+    /// Reusable per-worker scratch arenas (leased, never freed).
+    ws_pool: Mutex<Vec<Workspace>>,
+    /// Reusable flat residual buffers ([B, S, Dm] per prefill call).
+    buf_pool: Mutex<Vec<Vec<f32>>>,
+    counters: RtCounters,
+}
+
+/// Spec for an artifact-free, randomly-initialized runtime — benches,
+/// proptests and `perf_probe` use this to exercise the kernel layer
+/// without `make artifacts`.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub cfg: ModelCfg,
+    pub d_ff: usize,
+    /// (batch, seq) prefill shapes.
+    pub prefill: Vec<(usize, usize)>,
+    /// Decode batch sizes.
+    pub decode: Vec<usize>,
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// The 2-layer vocab-16 toy model the unit tests run on.
+    pub fn tiny() -> SyntheticSpec {
+        SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: 16,
+                d_model: 8,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 4,
+                max_seq: 12,
+                page_size: 4,
+            },
+            d_ff: 16,
+            prefill: vec![(1, 8), (2, 8)],
+            decode: vec![1, 2],
+            seed: 7,
+        }
+    }
 }
 
 impl TinyLmRuntime {
@@ -432,7 +463,71 @@ impl TinyLmRuntime {
                 decode.len()
             )));
         }
-        Ok(TinyLmRuntime { cfg: manifest.cfg, params, prefill, decode })
+        Ok(Self::assemble(manifest.cfg, params, prefill, decode))
+    }
+
+    /// Build a runtime with random parameters (no artifacts on disk).
+    pub fn synthetic(spec: &SyntheticSpec) -> TinyLmRuntime {
+        let cfg = spec.cfg.clone();
+        assert_eq!(cfg.d_model, cfg.n_heads * cfg.head_dim, "d_model != n_heads*head_dim");
+        assert!(
+            spec.prefill.iter().all(|&(_, s)| s > 0 && s <= cfg.max_seq),
+            "prefill seq outside (0, max_seq]"
+        );
+        let mut rng = crate::util::Rng::new(spec.seed);
+        let mut mk = |dims: Vec<usize>, norm: bool| {
+            let n: usize = dims.iter().product();
+            let fan_in = dims[0] as f64;
+            let data: Vec<f32> = (0..n)
+                .map(|_| if norm { 1.0 } else { (rng.normal() / fan_in.sqrt()) as f32 })
+                .collect();
+            Tensor { dims, data }
+        };
+        let (dm, dff) = (cfg.d_model, spec.d_ff);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerParams {
+                ln1: mk(vec![dm], true),
+                wq: mk(vec![dm, dm], false),
+                wk: mk(vec![dm, dm], false),
+                wv: mk(vec![dm, dm], false),
+                wo: mk(vec![dm, dm], false),
+                ln2: mk(vec![dm], true),
+                w_in: mk(vec![dm, dff], false),
+                w_out: mk(vec![dff, dm], false),
+            })
+            .collect();
+        let params = TinyLmParams {
+            embed: mk(vec![cfg.vocab, dm], false),
+            layers,
+            ln_f: mk(vec![dm], true),
+            d_ff: dff,
+        };
+        Self::assemble(
+            cfg,
+            params,
+            spec.prefill.iter().copied().collect(),
+            spec.decode.iter().copied().collect(),
+        )
+    }
+
+    fn assemble(
+        cfg: ModelCfg,
+        params: TinyLmParams,
+        prefill: BTreeMap<usize, usize>,
+        decode: BTreeSet<usize>,
+    ) -> TinyLmRuntime {
+        let rope = RopeTables::new(cfg.max_seq, cfg.head_dim, ROPE_BASE);
+        TinyLmRuntime {
+            cfg,
+            params,
+            prefill,
+            decode,
+            rope,
+            threads: kernels::default_threads(),
+            ws_pool: Mutex::new(Vec::new()),
+            buf_pool: Mutex::new(Vec::new()),
+            counters: RtCounters::default(),
+        }
     }
 
     /// Available prefill batch sizes.
@@ -450,75 +545,252 @@ impl TinyLmRuntime {
         self.prefill.get(&batch).copied()
     }
 
+    /// Current worker-thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the worker-thread budget (tests / benches; `load` and
+    /// `synthetic` default to `AIBRIX_RT_THREADS` or host parallelism).
+    pub fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
+    }
+
+    /// Telemetry snapshot (cumulative since load / last reset).
+    pub fn stats(&self) -> RtStats {
+        let c = &self.counters;
+        RtStats {
+            prefill_calls: c.prefill_calls.load(Ordering::Relaxed),
+            prefill_tokens: c.prefill_tokens.load(Ordering::Relaxed),
+            prefill_us: c.prefill_us.load(Ordering::Relaxed),
+            decode_calls: c.decode_calls.load(Ordering::Relaxed),
+            decode_tokens: c.decode_tokens.load(Ordering::Relaxed),
+            decode_us: c.decode_us.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset_stats(&self) {
+        let c = &self.counters;
+        for a in [
+            &c.prefill_calls,
+            &c.prefill_tokens,
+            &c.prefill_us,
+            &c.decode_calls,
+            &c.decode_tokens,
+            &c.decode_us,
+        ] {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+
+    // ------------------------------------------------------ arena pools
+
+    fn lease_ws(&self) -> Workspace {
+        self.ws_pool.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+    }
+
+    fn return_ws(&self, ws: Workspace) {
+        if let Ok(mut p) = self.ws_pool.lock() {
+            if p.len() < 64 {
+                p.push(ws);
+            }
+        }
+    }
+
+    /// Lease a flat buffer resized to exactly `n` (contents unspecified;
+    /// callers fully overwrite every region they later read).
+    fn lease_buf(&self, n: usize) -> Vec<f32> {
+        let mut b = self.buf_pool.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default();
+        b.resize(n, 0.0);
+        b
+    }
+
+    fn return_buf(&self, b: Vec<f32>) {
+        if let Ok(mut p) = self.buf_pool.lock() {
+            if p.len() < 16 {
+                p.push(b);
+            }
+        }
+    }
+
     fn kv_index(&self, layer: usize, batch: usize, b: usize, pos: usize) -> usize {
         ((layer * batch + b) * self.cfg.max_seq + pos) * self.cfg.n_heads * self.cfg.head_dim
     }
 
-    /// One transformer block position: given the normalized input's q/k/v
-    /// rows already written into the cache at `pos`, finish attention + MLP
-    /// and update the residual `x` in place.
+    // ------------------------------------------------------ forward core
+
+    /// Run every transformer layer for `s_len` consecutive positions of
+    /// cache row `b`, starting at absolute position `s0`. `x` holds the
+    /// [s_len, Dm] residual rows (token embeddings on entry, final
+    /// pre-norm hidden states on exit); K/V rows are written into the
+    /// caches at positions s0..s0+s_len and attention covers cache
+    /// positions 0..=pos for each query. Prefill calls this with
+    /// (s0=0, s_len=S); decode with (s0=p, s_len=1) — one shared,
+    /// bit-exact path.
     #[allow(clippy::too_many_arguments)]
-    fn block_tail(
+    fn forward_row(
         &self,
-        lp: &LayerParams,
-        layer: usize,
+        batch: usize,
         b: usize,
-        pos: usize,
-        kv_len: usize,
-        q_row: &[f32],
-        k_cache: &Tensor,
-        v_cache: &Tensor,
+        s0: usize,
+        s_len: usize,
         x: &mut [f32],
-        scratch: &mut Scratch,
+        k_raw: &RawSlice<'_>,
+        v_raw: &RawSlice<'_>,
+        ws: &mut Workspace,
     ) {
         let cfg = &self.cfg;
         let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
-        for head in 0..h {
-            attend_one(
-                &q_row[head * hd..(head + 1) * hd],
-                k_cache,
-                v_cache,
-                layer,
-                b,
-                head,
-                kv_len.max(pos + 1).min(cfg.max_seq),
-                cfg,
-                &mut scratch.scores,
-                &mut scratch.attn[head * hd..(head + 1) * hd],
-            );
-        }
-        matvec(&scratch.attn, &lp.wo.data, dm, dm, &mut scratch.proj);
-        for d in 0..dm {
-            x[d] += scratch.proj[d];
-        }
-        rms_norm(x, &lp.ln2.data, &mut scratch.xn);
-        matvec(&scratch.xn, &lp.w_in.data, dm, self.params.d_ff, &mut scratch.ff);
-        for v in scratch.ff.iter_mut() {
-            *v = gelu(*v);
-        }
-        matvec(&scratch.ff, &lp.w_out.data, self.params.d_ff, dm, &mut scratch.proj);
-        for d in 0..dm {
-            x[d] += scratch.proj[d];
-        }
-    }
-
-    fn final_logits(&self, x: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
-        rms_norm(x, &self.params.ln_f.data, &mut scratch.xn);
-        // logits = xn @ embed.T : dot against each vocab row.
-        let dm = self.cfg.d_model;
-        for (t, o) in out.iter_mut().enumerate() {
-            let row = &self.params.embed.data[t * dm..(t + 1) * dm];
-            let mut dot = 0.0f32;
-            for d in 0..dm {
-                dot += scratch.xn[d] * row[d];
+        let d_ff = self.params.d_ff;
+        ws.ensure(s_len, dm, d_ff);
+        for (layer, lp) in self.params.layers.iter().enumerate() {
+            let row_base = (layer * batch + b) * cfg.max_seq * dm;
+            for s in 0..s_len {
+                kernels::rms_norm(
+                    &x[s * dm..(s + 1) * dm],
+                    &lp.ln1.data,
+                    &mut ws.xn[s * dm..(s + 1) * dm],
+                );
             }
-            *o = dot;
+            let q_out = &mut ws.q[..s_len * dm];
+            kernels::gemm(&ws.xn[..s_len * dm], &lp.wq.data, s_len, dm, dm, q_out);
+            {
+                // K/V projections land straight in this row's cache slab —
+                // positions are contiguous for a fixed (layer, row).
+                // SAFETY: worker `b` is the only thread touching the
+                // (layer, b) slabs of either cache.
+                let k_dst = unsafe { k_raw.range_mut(row_base + s0 * dm, s_len * dm) };
+                kernels::gemm(&ws.xn[..s_len * dm], &lp.wk.data, s_len, dm, dm, k_dst);
+                let v_dst = unsafe { v_raw.range_mut(row_base + s0 * dm, s_len * dm) };
+                kernels::gemm(&ws.xn[..s_len * dm], &lp.wv.data, s_len, dm, dm, v_dst);
+                for s in 0..s_len {
+                    let pos = s0 + s;
+                    for head in 0..h {
+                        let o = s * dm + head * hd;
+                        self.rope.apply(&mut ws.q[o..o + hd], pos);
+                        self.rope.apply(&mut k_dst[o..o + hd], pos);
+                    }
+                }
+            }
+            {
+                // Attention reads the slabs written above (same thread; the
+                // mutable borrows ended with the previous block).
+                // SAFETY: shared read of row b's slab only.
+                let seen = (s0 + s_len) * dm;
+                let k_row = unsafe { k_raw.range(row_base, seen) };
+                let v_row = unsafe { v_raw.range(row_base, seen) };
+                for s in 0..s_len {
+                    let pos = s0 + s;
+                    for head in 0..h {
+                        let o = s * dm + head * hd;
+                        kernels::attend_one(
+                            &ws.q[o..o + hd],
+                            k_row,
+                            v_row,
+                            pos + 1,
+                            head,
+                            h,
+                            &mut ws.scores,
+                            &mut ws.attn[o..o + hd],
+                        );
+                    }
+                }
+            }
+            kernels::gemm(
+                &ws.attn[..s_len * dm],
+                &lp.wo.data,
+                s_len,
+                dm,
+                dm,
+                &mut ws.proj[..s_len * dm],
+            );
+            for (xv, pv) in x.iter_mut().zip(&ws.proj[..s_len * dm]) {
+                *xv += *pv;
+            }
+            for s in 0..s_len {
+                kernels::rms_norm(
+                    &x[s * dm..(s + 1) * dm],
+                    &lp.ln2.data,
+                    &mut ws.xn[s * dm..(s + 1) * dm],
+                );
+            }
+            kernels::gemm(
+                &ws.xn[..s_len * dm],
+                &lp.w_in.data,
+                s_len,
+                dm,
+                d_ff,
+                &mut ws.ff[..s_len * d_ff],
+            );
+            for v in ws.ff[..s_len * d_ff].iter_mut() {
+                *v = kernels::gelu(*v);
+            }
+            kernels::gemm(
+                &ws.ff[..s_len * d_ff],
+                &lp.w_out.data,
+                s_len,
+                d_ff,
+                dm,
+                &mut ws.proj[..s_len * dm],
+            );
+            for (xv, pv) in x.iter_mut().zip(&ws.proj[..s_len * dm]) {
+                *xv += *pv;
+            }
         }
     }
 
-    /// Run prefill over `tokens` (row-major [B, S], pre-padded to the
-    /// artifact's S; entries are token ids < vocab).
-    pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
+    /// Final-norm + vocab projection for a set of (residual offset in
+    /// `xs`, output offset in `logits`) jobs, parallelized across jobs —
+    /// or across vocab tiles when only one row needs logits.
+    fn logits_stage(&self, xs: &[f32], jobs: &[(usize, usize)], logits: &mut [f32]) {
+        let dm = self.cfg.d_model;
+        let vocab = self.cfg.vocab;
+        let embed = &self.params.embed.data;
+        let ln_f = &self.params.ln_f.data;
+        if jobs.len() == 1 && self.threads > 1 && vocab >= VOCAB_PAR_MIN {
+            let (xoff, ooff) = jobs[0];
+            let mut ws = self.lease_ws();
+            ws.ensure(1, dm, 1);
+            kernels::rms_norm(&xs[xoff..xoff + dm], ln_f, &mut ws.xn[..dm]);
+            let xn = &ws.xn[..dm];
+            let out = &mut logits[ooff..ooff + vocab];
+            let tile = vocab.div_ceil(self.threads);
+            let l_raw = RawSlice::new(out);
+            kernels::par_for(vocab.div_ceil(tile), self.threads, |c| {
+                let t0 = c * tile;
+                let t1 = (t0 + tile).min(vocab);
+                // SAFETY: vocab tiles are disjoint.
+                let tile_out = unsafe { l_raw.range_mut(t0, t1 - t0) };
+                kernels::logits_tile(xn, embed, t0, t1, tile_out);
+            });
+            self.return_ws(ws);
+            return;
+        }
+        let l_raw = RawSlice::new(logits);
+        kernels::par_for(jobs.len(), self.threads, |i| {
+            let (xoff, ooff) = jobs[i];
+            let mut ws = self.lease_ws();
+            ws.ensure(1, dm, 1);
+            kernels::rms_norm(&xs[xoff..xoff + dm], ln_f, &mut ws.xn[..dm]);
+            // SAFETY: each job owns its [vocab] output range.
+            let out = unsafe { l_raw.range_mut(ooff, vocab) };
+            kernels::logits_tile(&ws.xn[..dm], embed, 0, vocab, out);
+            self.return_ws(ws);
+        });
+    }
+
+    /// Shared prefill body. `last`: None = logits for all S positions
+    /// ([B, S, V]); Some = logits only at `last[b]` per row ([B, V]).
+    /// `active`: rows marked false (batch padding) are skipped entirely —
+    /// their logits stay 0 and their cache rows stay zeroed.
+    fn prefill_impl(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        last: Option<&[usize]>,
+        active: Option<&[bool]>,
+    ) -> Result<(Vec<f32>, Tensor, Tensor, usize)> {
+        let t_start = Instant::now();
         let seq = *self
             .prefill
             .get(&batch)
@@ -526,19 +798,32 @@ impl TinyLmRuntime {
         if tokens.len() != batch * seq {
             return Err(Error::msg(format!("tokens len {} != {batch}x{seq}", tokens.len())));
         }
-        let cfg = self.cfg.clone();
-        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
-        let mut k_cache =
-            Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
-        let mut v_cache = k_cache.clone();
-        let mut logits = vec![0.0f32; batch * seq * cfg.vocab];
-        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
-
+        if let Some(a) = active {
+            if a.len() != batch {
+                return Err(Error::msg("active mask arity mismatch"));
+            }
+        }
+        if let Some(l) = last {
+            if l.len() != batch {
+                return Err(Error::msg("last-position arity mismatch"));
+            }
+            if let Some(&bad) = l.iter().find(|&&p| p >= seq) {
+                return Err(Error::msg(format!("last position {bad} outside prefill window {seq}")));
+            }
+        }
+        let cfg = &self.cfg;
+        let is_active = |b: usize| match active {
+            Some(a) => a[b],
+            None => true,
+        };
+        // Validate the whole [B, S] batch up front: token errors must never
+        // leave a partially-written KV cache. Out-of-vocab ids are caller
+        // bugs — fail loudly rather than embed a clamped stand-in and
+        // generate plausible garbage.
         for b in 0..batch {
-            // Residual stream for every position of this row.
-            // Out-of-vocab ids are caller bugs — fail loudly rather than
-            // embed a clamped stand-in and generate plausible garbage.
-            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(seq);
+            if !is_active(b) {
+                continue;
+            }
             for s in 0..seq {
                 let raw = tokens[b * seq + s];
                 if raw < 0 || raw as usize >= cfg.vocab {
@@ -547,40 +832,82 @@ impl TinyLmRuntime {
                         cfg.vocab
                     )));
                 }
-                let tok = raw as usize;
-                xs.push(self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec());
-            }
-            for (layer, lp) in self.params.layers.iter().enumerate() {
-                // Project + rope + write the whole row's k/v first so
-                // attention at position i sees keys 0..=i.
-                let mut q_rows: Vec<Vec<f32>> = Vec::with_capacity(seq);
-                for (s, x) in xs.iter().enumerate() {
-                    rms_norm(x, &lp.ln1.data, &mut scratch.xn);
-                    let mut q = vec![0.0f32; dm];
-                    matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
-                    matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
-                    let koff = self.kv_index(layer, batch, b, s);
-                    k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
-                    matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
-                    v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
-                    for head in 0..h {
-                        rope(&mut q[head * hd..(head + 1) * hd], s, 10_000.0);
-                        rope(&mut k_cache.data[koff + head * hd..koff + (head + 1) * hd], s, 10_000.0);
-                    }
-                    q_rows.push(q);
-                }
-                for (s, x) in xs.iter_mut().enumerate() {
-                    self.block_tail(
-                        lp, layer, b, s, s + 1, &q_rows[s], &k_cache, &v_cache, x, &mut scratch,
-                    );
-                }
-            }
-            for (s, x) in xs.iter().enumerate() {
-                let out = &mut logits[(b * seq + s) * cfg.vocab..(b * seq + s + 1) * cfg.vocab];
-                self.final_logits(x, &mut scratch, out);
             }
         }
-        Ok(PrefillOut { logits, batch, seq, vocab: cfg.vocab, k: k_cache, v: v_cache })
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        let mut k_cache = Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
+        // A second zeros, not `k_cache.clone()` — cloning a zero tensor
+        // memcpys megabytes for nothing.
+        let mut v_cache = Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
+        let per_row = if last.is_some() { cfg.vocab } else { seq * cfg.vocab };
+        let mut logits = vec![0.0f32; batch * per_row];
+        let n_active = (0..batch).filter(|&b| is_active(b)).count();
+        let mut xs = self.lease_buf(batch * seq * dm);
+
+        {
+            let k_raw = RawSlice::new(&mut k_cache.data);
+            let v_raw = RawSlice::new(&mut v_cache.data);
+            let xs_raw = RawSlice::new(&mut xs);
+            let embed = &self.params.embed.data;
+            kernels::par_for(batch, self.threads.min(n_active.max(1)), |b| {
+                if !is_active(b) {
+                    return;
+                }
+                let mut ws = self.lease_ws();
+                // SAFETY: per-row residual regions are disjoint.
+                let x = unsafe { xs_raw.range_mut(b * seq * dm, seq * dm) };
+                for s in 0..seq {
+                    let tok = tokens[b * seq + s] as usize;
+                    x[s * dm..(s + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
+                }
+                self.forward_row(batch, b, 0, seq, x, &k_raw, &v_raw, &mut ws);
+                self.return_ws(ws);
+            });
+        }
+
+        let jobs: Vec<(usize, usize)> = match last {
+            Some(l) => (0..batch)
+                .filter(|&b| is_active(b))
+                .map(|b| ((b * seq + l[b]) * dm, b * cfg.vocab))
+                .collect(),
+            None => (0..batch)
+                .filter(|&b| is_active(b))
+                .flat_map(|b| (0..seq).map(move |s| (b, s)))
+                .map(|(b, s)| ((b * seq + s) * dm, (b * seq + s) * cfg.vocab))
+                .collect(),
+        };
+        self.logits_stage(&xs, &jobs, &mut logits);
+        self.return_buf(xs);
+
+        self.counters.prefill_calls.fetch_add(1, Ordering::Relaxed);
+        self.counters.prefill_tokens.fetch_add((n_active * seq) as u64, Ordering::Relaxed);
+        self.counters
+            .prefill_us
+            .fetch_add(t_start.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok((logits, k_cache, v_cache, seq))
+    }
+
+    /// Run prefill over `tokens` (row-major [B, S], pre-padded to the
+    /// artifact's S; entries are token ids < vocab), producing logits for
+    /// every position.
+    pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
+        let (logits, k, v, seq) = self.prefill_impl(batch, tokens, None, None)?;
+        Ok(PrefillOut { logits, batch, seq, vocab: self.cfg.vocab, k, v })
+    }
+
+    /// Prefill computing logits only at `last[b]` per row (the position
+    /// `generate` actually consumes) — skips `(S-1) * V` vocab dots per
+    /// row versus [`TinyLmRuntime::prefill`]. `active` marks padded batch
+    /// rows to skip outright (None = all rows live).
+    pub fn prefill_last(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        last: &[usize],
+        active: Option<&[bool]>,
+    ) -> Result<PrefillLastOut> {
+        let (logits, k, v, _seq) = self.prefill_impl(batch, tokens, Some(last), active)?;
+        Ok(PrefillLastOut { logits, batch, vocab: self.cfg.vocab, k, v })
     }
 
     /// One decode step: `token[b]` written at `pos[b]`, attending to
@@ -594,13 +921,33 @@ impl TinyLmRuntime {
         k: DeviceTensor,
         v: DeviceTensor,
     ) -> Result<DecodeOut> {
+        self.decode_active(batch, token, pos, k, v, None)
+    }
+
+    /// [`TinyLmRuntime::decode`] with an activity mask: rows marked false
+    /// (batch padding) are skipped — logits stay 0, cache rows untouched.
+    pub fn decode_active(
+        &self,
+        batch: usize,
+        token: &[i32],
+        pos: &[i32],
+        k: DeviceTensor,
+        v: DeviceTensor,
+        active: Option<&[bool]>,
+    ) -> Result<DecodeOut> {
+        let t_start = Instant::now();
         if !self.decode.contains(&batch) {
             return Err(Error::msg(format!("no decode artifact for batch {batch}")));
         }
         if token.len() != batch || pos.len() != batch {
             return Err(Error::msg("decode arg arity mismatch"));
         }
-        let cfg = self.cfg.clone();
+        if let Some(a) = active {
+            if a.len() != batch {
+                return Err(Error::msg("active mask arity mismatch"));
+            }
+        }
+        let cfg = &self.cfg;
         let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
         if k.dims != [cfg.n_layers, batch, cfg.max_seq, h, hd] {
             return Err(Error::msg(format!("k cache dims {:?} unexpected", k.dims)));
@@ -608,43 +955,62 @@ impl TinyLmRuntime {
         if v.dims != k.dims {
             return Err(Error::msg(format!("v cache dims {:?} != k dims {:?}", v.dims, k.dims)));
         }
-        let mut k_cache = k;
-        let mut v_cache = v;
-        let mut logits = vec![0.0f32; batch * cfg.vocab];
-        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
-
+        let is_active = |b: usize| match active {
+            Some(a) => a[b],
+            None => true,
+        };
+        // Validate every active row before touching any cache slab.
         for b in 0..batch {
+            if !is_active(b) {
+                continue;
+            }
             if pos[b] < 0 || pos[b] as usize >= cfg.max_seq {
                 return Err(Error::msg(format!("decode position {} beyond cache", pos[b])));
             }
-            let p = pos[b] as usize;
             if token[b] < 0 || token[b] as usize >= cfg.vocab {
                 return Err(Error::msg(format!(
                     "decode token id {} outside vocab {}",
                     token[b], cfg.vocab
                 )));
             }
-            let tok = token[b] as usize;
-            let mut x: Vec<f32> = self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec();
-            for (layer, lp) in self.params.layers.iter().enumerate() {
-                rms_norm(&x, &lp.ln1.data, &mut scratch.xn);
-                let mut q = vec![0.0f32; dm];
-                matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
-                matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
-                let koff = self.kv_index(layer, batch, b, p);
-                k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
-                matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
-                v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
-                for head in 0..h {
-                    rope(&mut q[head * hd..(head + 1) * hd], p, 10_000.0);
-                    rope(&mut k_cache.data[koff + head * hd..koff + (head + 1) * hd], p, 10_000.0);
-                }
-                self.block_tail(
-                    lp, layer, b, p, p + 1, &q, &k_cache, &v_cache, &mut x, &mut scratch,
-                );
-            }
-            self.final_logits(&x, &mut scratch, &mut logits[b * cfg.vocab..(b + 1) * cfg.vocab]);
         }
+        let mut k_cache = k;
+        let mut v_cache = v;
+        let mut logits = vec![0.0f32; batch * cfg.vocab];
+        let n_active = (0..batch).filter(|&b| is_active(b)).count();
+        let mut xs = self.lease_buf(batch * dm);
+
+        {
+            let k_raw = RawSlice::new(&mut k_cache.data);
+            let v_raw = RawSlice::new(&mut v_cache.data);
+            let xs_raw = RawSlice::new(&mut xs);
+            let embed = &self.params.embed.data;
+            kernels::par_for(batch, self.threads.min(n_active.max(1)), |b| {
+                if !is_active(b) {
+                    return;
+                }
+                let mut ws = self.lease_ws();
+                let tok = token[b] as usize;
+                // SAFETY: per-row residual regions are disjoint.
+                let x = unsafe { xs_raw.range_mut(b * dm, dm) };
+                x.copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
+                self.forward_row(batch, b, pos[b] as usize, 1, x, &k_raw, &v_raw, &mut ws);
+                self.return_ws(ws);
+            });
+        }
+
+        let jobs: Vec<(usize, usize)> = (0..batch)
+            .filter(|&b| is_active(b))
+            .map(|b| (b * dm, b * cfg.vocab))
+            .collect();
+        self.logits_stage(&xs, &jobs, &mut logits);
+        self.return_buf(xs);
+
+        self.counters.decode_calls.fetch_add(1, Ordering::Relaxed);
+        self.counters.decode_tokens.fetch_add(n_active as u64, Ordering::Relaxed);
+        self.counters
+            .decode_us
+            .fetch_add(t_start.elapsed().as_micros() as u64, Ordering::Relaxed);
         Ok(DecodeOut { logits, vocab: cfg.vocab, k: k_cache, v: v_cache })
     }
 
@@ -652,6 +1018,18 @@ impl TinyLmRuntime {
     /// differ; prompts are padded to the prefill S). Returns per-row
     /// generated token ids. The workhorse of `RealEngine` / serve_e2e.
     pub fn generate(&self, prompts: &[Vec<u32>], steps: usize) -> Result<Vec<Vec<u32>>> {
+        self.generate_masked(prompts, steps, None)
+    }
+
+    /// [`TinyLmRuntime::generate`] with an activity mask: rows marked
+    /// false (the engine's batch padding) are skipped at every step and
+    /// yield all-zero token rows.
+    pub fn generate_masked(
+        &self,
+        prompts: &[Vec<u32>],
+        steps: usize,
+        active: Option<&[bool]>,
+    ) -> Result<Vec<Vec<u32>>> {
         let batch = prompts.len();
         let seq = *self
             .prefill
@@ -670,17 +1048,16 @@ impl TinyLmRuntime {
                 tokens[b * seq + s] = t as i32;
             }
         }
-        let pre = self.prefill(batch, &tokens)?;
-        let mut cur: Vec<i32> = (0..batch)
-            .map(|b| pre.argmax_at(b, prompts[b].len().saturating_sub(1)) as i32)
-            .collect();
+        let last: Vec<usize> = prompts.iter().map(|p| p.len().saturating_sub(1)).collect();
+        let pre = self.prefill_last(batch, &tokens, &last, active)?;
+        let mut cur: Vec<i32> = (0..batch).map(|b| pre.argmax_of(b) as i32).collect();
         let mut k = pre.k;
         let mut v = pre.v;
         let mut out: Vec<Vec<u32>> = cur.iter().map(|&t| vec![t as u32]).collect();
         // Decode continues each row at its true length.
         let mut pos: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
         for _ in 1..steps {
-            let d = self.decode(batch, &cur, &pos, k, v)?;
+            let d = self.decode_active(batch, &cur, &pos, k, v, active)?;
             for b in 0..batch {
                 cur[b] = d.argmax_of(b) as i32;
                 out[b].push(cur[b] as u32);
@@ -693,27 +1070,6 @@ impl TinyLmRuntime {
     }
 }
 
-/// Reused per-call work buffers.
-struct Scratch {
-    xn: Vec<f32>,
-    proj: Vec<f32>,
-    attn: Vec<f32>,
-    ff: Vec<f32>,
-    scores: Vec<f32>,
-}
-
-impl Scratch {
-    fn new(dm: usize, d_ff: usize, attn_dim: usize) -> Scratch {
-        Scratch {
-            xn: vec![0.0; dm],
-            proj: vec![0.0; dm],
-            attn: vec![0.0; attn_dim],
-            ff: vec![0.0; d_ff],
-            scores: Vec::new(),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -721,54 +1077,7 @@ mod tests {
     /// Tiny in-memory runtime (2 layers, vocab 16) for interpreter checks —
     /// no artifacts needed.
     fn toy_runtime() -> TinyLmRuntime {
-        let cfg = ModelCfg {
-            vocab: 16,
-            d_model: 8,
-            n_layers: 2,
-            n_heads: 2,
-            head_dim: 4,
-            max_seq: 12,
-            page_size: 4,
-        };
-        let mut rng = crate::util::Rng::new(7);
-        let mut mk = |dims: Vec<usize>, norm: bool| {
-            let n: usize = dims.iter().product();
-            let fan_in = dims[0] as f64;
-            let data: Vec<f32> = (0..n)
-                .map(|_| {
-                    if norm {
-                        1.0
-                    } else {
-                        (rng.normal() / fan_in.sqrt()) as f32
-                    }
-                })
-                .collect();
-            Tensor { dims, data }
-        };
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerParams {
-                ln1: mk(vec![8], true),
-                wq: mk(vec![8, 8], false),
-                wk: mk(vec![8, 8], false),
-                wv: mk(vec![8, 8], false),
-                wo: mk(vec![8, 8], false),
-                ln2: mk(vec![8], true),
-                w_in: mk(vec![8, 16], false),
-                w_out: mk(vec![16, 8], false),
-            })
-            .collect();
-        let params = TinyLmParams {
-            embed: mk(vec![16, 8], false),
-            layers,
-            ln_f: mk(vec![8], true),
-            d_ff: 16,
-        };
-        TinyLmRuntime {
-            cfg,
-            params,
-            prefill: [(1usize, 8usize), (2, 8)].into_iter().collect(),
-            decode: [1usize, 2].into_iter().collect(),
-        }
+        TinyLmRuntime::synthetic(&SyntheticSpec::tiny())
     }
 
     #[test]
@@ -804,10 +1113,114 @@ mod tests {
     }
 
     #[test]
+    fn prefill_last_matches_full_prefill() {
+        // The positions-mask path must be a pure subset of the full one:
+        // identical bits at the selected positions, identical caches.
+        let rt = toy_runtime();
+        let tokens: Vec<i32> = vec![3, 8, 2, 1, 0, 0, 0, 0, 9, 4, 4, 7, 1, 0, 0, 0];
+        let full = rt.prefill(2, &tokens).unwrap();
+        let last = [3usize, 5];
+        let fast = rt.prefill_last(2, &tokens, &last, None).unwrap();
+        for b in 0..2 {
+            assert!(
+                fast.logits_of(b)
+                    .iter()
+                    .zip(full.logits_at(b, last[b]))
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "row {b} logits diverge"
+            );
+        }
+        assert!(fast.k.data.iter().zip(&full.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(fast.v.data.iter().zip(&full.v.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn masked_rows_do_not_disturb_active_rows() {
+        // A padded (inactive) neighbor row must leave the active row's
+        // output exactly as a solo run, and produce all-zero tokens itself.
+        let rt = toy_runtime();
+        let solo = rt.generate(&[vec![5u32, 6, 7]].to_vec(), 3).unwrap();
+        let masked = rt
+            .generate_masked(&[vec![5u32, 6, 7], vec![0u32]].to_vec(), 3, Some(&[true, false]))
+            .unwrap();
+        assert_eq!(masked[0], solo[0]);
+        assert!(masked[1].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let spec = SyntheticSpec::tiny();
+        let mut rt1 = TinyLmRuntime::synthetic(&spec);
+        rt1.set_threads(1);
+        let mut rt4 = TinyLmRuntime::synthetic(&spec);
+        rt4.set_threads(4);
+        let tokens: Vec<i32> = vec![3, 8, 2, 1, 5, 11, 0, 2, 9, 4, 4, 7, 1, 15, 2, 6];
+        let a = rt1.prefill(2, &tokens).unwrap();
+        let b = rt4.prefill(2, &tokens).unwrap();
+        assert!(a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.k.data.iter().zip(&b.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let g1 = rt1.generate(&[vec![1u32, 2, 3], vec![9, 8]].to_vec(), 4).unwrap();
+        let g4 = rt4.generate(&[vec![1u32, 2, 3], vec![9, 8]].to_vec(), 4).unwrap();
+        assert_eq!(g1, g4);
+    }
+
+    #[test]
+    fn vocab_tile_parallel_matches_serial() {
+        // A single-row logits job with vocab >= VOCAB_PAR_MIN takes the
+        // vocab-tile-parallel path; it must match the serial bits exactly.
+        let spec = SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: VOCAB_PAR_MIN,
+                d_model: 8,
+                n_layers: 1,
+                n_heads: 2,
+                head_dim: 4,
+                max_seq: 8,
+                page_size: 4,
+            },
+            d_ff: 16,
+            prefill: vec![(1, 4)],
+            decode: vec![1],
+            seed: 3,
+        };
+        let mut rt1 = TinyLmRuntime::synthetic(&spec);
+        rt1.set_threads(1);
+        let mut rt4 = TinyLmRuntime::synthetic(&spec);
+        rt4.set_threads(4);
+        let tokens = [5i32, 900, 17, 1023];
+        let a = rt1.prefill_last(1, &tokens, &[3], None).unwrap();
+        let b = rt4.prefill_last(1, &tokens, &[3], None).unwrap();
+        assert!(a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // And the decode-side single-row logits path.
+        let da = rt1.decode(1, &[7], &[4], a.k, a.v).unwrap();
+        let db = rt4.decode(1, &[7], &[4], b.k, b.v).unwrap();
+        assert!(da.logits.iter().zip(&db.logits).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let rt = toy_runtime();
+        assert_eq!(rt.stats(), RtStats::default());
+        rt.generate(&[vec![1u32, 2, 3]].to_vec(), 3).unwrap();
+        let s = rt.stats();
+        assert_eq!(s.prefill_calls, 1);
+        assert_eq!(s.prefill_tokens, 8); // 1 row x padded seq 8
+        assert_eq!(s.decode_calls, 2);
+        assert_eq!(s.decode_tokens, 2);
+        rt.reset_stats();
+        assert_eq!(rt.stats(), RtStats::default());
+    }
+
+    #[test]
     fn error_paths() {
         let rt = toy_runtime();
         assert!(rt.prefill(1, &[0i32; 7]).is_err(), "bad token count");
         assert!(rt.prefill(3, &[0i32; 24]).is_err(), "no batch-3 artifact");
+        assert!(rt.prefill(1, &[99i32; 8]).is_err(), "token outside vocab");
+        assert!(
+            rt.prefill_last(1, &[0i32; 8], &[8], None).is_err(),
+            "last position outside window"
+        );
         assert!(rt.generate(&[vec![1u32; 20]].to_vec(), 2).is_err(), "prompt too long");
         assert!(rt.generate(&[vec![1u32; 4]].to_vec(), 100).is_err(), "beyond headroom");
     }

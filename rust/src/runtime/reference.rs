@@ -1,0 +1,411 @@
+//! Retained scalar reference implementation of the TinyLM forward pass.
+//!
+//! This is the pre-kernel per-position interpreter, kept for two jobs:
+//!
+//! 1. **Golden model** — the kernel layer must match it bit-for-bit on
+//!    every logit and cache element (runtime_e2e.rs proptests). That works
+//!    because both sides accumulate each output element in ascending-k
+//!    order with separate mul/add rounding; see `kernels.rs`.
+//! 2. **Perf baseline** — `benches/runtime_throughput.rs` measures this
+//!    path and records it as the `*_reference` rows in BENCH_runtime.json,
+//!    so every speedup claim carries its own baseline.
+//!
+//! Deliberately naive, do not optimize: per-position axpy matvec,
+//! `powf` + `sin_cos` RoPE recomputed per position per head per layer,
+//! full-vocab logits at every prefill position, per-call allocations.
+
+use super::{DecodeOut, ModelCfg, PrefillOut, Tensor, TinyLmRuntime};
+use crate::util::err::{Error, Result};
+
+/// out[n] = x[k] @ w[k, n] (w row-major [k, n]), ascending-k axpy.
+fn matvec(x: &[f32], w: &[f32], k: usize, n: usize, out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (i, &xi) in x.iter().enumerate().take(k) {
+        let row = &w[i * n..(i + 1) * n];
+        for j in 0..n {
+            out[j] += xi * row[j];
+        }
+    }
+}
+
+fn rms_norm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / d as f32 + 1e-5).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * inv * g[i];
+    }
+}
+
+/// In-place rotary embedding of one head vector at absolute position
+/// `pos`, recomputing the angle from scratch (the kernel path reads the
+/// same values from tables built with this exact expression).
+fn rope(v: &mut [f32], pos: usize, base: f32) {
+    let d = v.len();
+    let half = d / 2;
+    for j in 0..half {
+        let freq = base.powf(-(j as f32) / half as f32);
+        let (sin, cos) = (pos as f32 * freq).sin_cos();
+        let x1 = v[j];
+        let x2 = v[j + half];
+        v[j] = x1 * cos - x2 * sin;
+        v[j + half] = x1 * sin + x2 * cos;
+    }
+}
+
+/// tanh-approximated GELU (jax.nn.gelu's default form).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Attention for one (batch row, head, query position): softmax over cache
+/// positions `0..kv_len`, ascending-j accumulation.
+#[allow(clippy::too_many_arguments)]
+fn attend_one(
+    q: &[f32],
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    layer: usize,
+    b: usize,
+    head: usize,
+    kv_len: usize,
+    cfg: &ModelCfg,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = cfg.head_dim;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let stride_b = cfg.max_seq * cfg.n_heads * hd;
+    let base = (layer * k_cache.dims[1] + b) * stride_b;
+    scores.clear();
+    let mut max_s = f32::NEG_INFINITY;
+    for j in 0..kv_len {
+        let off = base + j * cfg.n_heads * hd + head * hd;
+        let kj = &k_cache.data[off..off + hd];
+        let mut dot = 0.0f32;
+        for d in 0..hd {
+            dot += q[d] * kj[d];
+        }
+        let s = dot * scale;
+        scores.push(s);
+        if s > max_s {
+            max_s = s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        denom += *s;
+    }
+    for o in out.iter_mut().take(hd) {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let w = p / denom;
+        let off = base + j * cfg.n_heads * hd + head * hd;
+        let vj = &v_cache.data[off..off + hd];
+        for d in 0..hd {
+            out[d] += w * vj[d];
+        }
+    }
+}
+
+/// Per-call work buffers (allocated fresh each call — that cost is part of
+/// what the baseline measures).
+struct Scratch {
+    xn: Vec<f32>,
+    proj: Vec<f32>,
+    attn: Vec<f32>,
+    ff: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(dm: usize, d_ff: usize, attn_dim: usize) -> Scratch {
+        Scratch {
+            xn: vec![0.0; dm],
+            proj: vec![0.0; dm],
+            attn: vec![0.0; attn_dim],
+            ff: vec![0.0; d_ff],
+            scores: Vec::new(),
+        }
+    }
+}
+
+impl TinyLmRuntime {
+    /// One transformer block position of the reference path: given the
+    /// normalized input's q/k/v rows already written into the cache at
+    /// `pos`, finish attention + MLP and update the residual `x` in place.
+    #[allow(clippy::too_many_arguments)]
+    fn block_tail_ref(
+        &self,
+        layer: usize,
+        b: usize,
+        pos: usize,
+        kv_len: usize,
+        q_row: &[f32],
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        x: &mut [f32],
+        scratch: &mut Scratch,
+    ) {
+        let lp = &self.params.layers[layer];
+        let cfg = &self.cfg;
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        for head in 0..h {
+            attend_one(
+                &q_row[head * hd..(head + 1) * hd],
+                k_cache,
+                v_cache,
+                layer,
+                b,
+                head,
+                kv_len.max(pos + 1).min(cfg.max_seq),
+                cfg,
+                &mut scratch.scores,
+                &mut scratch.attn[head * hd..(head + 1) * hd],
+            );
+        }
+        matvec(&scratch.attn, &lp.wo.data, dm, dm, &mut scratch.proj);
+        for d in 0..dm {
+            x[d] += scratch.proj[d];
+        }
+        rms_norm(x, &lp.ln2.data, &mut scratch.xn);
+        matvec(&scratch.xn, &lp.w_in.data, dm, self.params.d_ff, &mut scratch.ff);
+        for v in scratch.ff.iter_mut() {
+            *v = gelu(*v);
+        }
+        matvec(&scratch.ff, &lp.w_out.data, self.params.d_ff, dm, &mut scratch.proj);
+        for d in 0..dm {
+            x[d] += scratch.proj[d];
+        }
+    }
+
+    fn final_logits_ref(&self, x: &[f32], scratch: &mut Scratch, out: &mut [f32]) {
+        rms_norm(x, &self.params.ln_f.data, &mut scratch.xn);
+        // logits = xn @ embed.T : dot against each vocab row.
+        let dm = self.cfg.d_model;
+        for (t, o) in out.iter_mut().enumerate() {
+            let row = &self.params.embed.data[t * dm..(t + 1) * dm];
+            let mut dot = 0.0f32;
+            for d in 0..dm {
+                dot += scratch.xn[d] * row[d];
+            }
+            *o = dot;
+        }
+    }
+
+    /// Scalar-reference prefill: same contract as
+    /// [`TinyLmRuntime::prefill`], per-position matvec compute.
+    pub fn prefill_reference(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
+        let seq = *self
+            .prefill
+            .get(&batch)
+            .ok_or_else(|| Error::msg(format!("no prefill artifact for batch {batch}")))?;
+        if tokens.len() != batch * seq {
+            return Err(Error::msg(format!("tokens len {} != {batch}x{seq}", tokens.len())));
+        }
+        let cfg = &self.cfg;
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        let mut k_cache = Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
+        let mut v_cache = Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
+        let mut logits = vec![0.0f32; batch * seq * cfg.vocab];
+        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
+
+        for b in 0..batch {
+            // Residual stream for every position of this row.
+            let mut xs: Vec<Vec<f32>> = Vec::with_capacity(seq);
+            for s in 0..seq {
+                let raw = tokens[b * seq + s];
+                if raw < 0 || raw as usize >= cfg.vocab {
+                    return Err(Error::msg(format!(
+                        "token id {raw} at [{b},{s}] outside vocab {}",
+                        cfg.vocab
+                    )));
+                }
+                let tok = raw as usize;
+                xs.push(self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec());
+            }
+            for layer in 0..cfg.n_layers {
+                let lp = &self.params.layers[layer];
+                // Project + rope + write the whole row's k/v first so
+                // attention at position i sees keys 0..=i.
+                let mut q_rows: Vec<Vec<f32>> = Vec::with_capacity(seq);
+                for (s, x) in xs.iter().enumerate() {
+                    rms_norm(x, &lp.ln1.data, &mut scratch.xn);
+                    let mut q = vec![0.0f32; dm];
+                    matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
+                    matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
+                    let koff = self.kv_index(layer, batch, b, s);
+                    k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                    matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
+                    v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                    for head in 0..h {
+                        rope(&mut q[head * hd..(head + 1) * hd], s, super::ROPE_BASE);
+                        rope(
+                            &mut k_cache.data[koff + head * hd..koff + (head + 1) * hd],
+                            s,
+                            super::ROPE_BASE,
+                        );
+                    }
+                    q_rows.push(q);
+                }
+                for (s, x) in xs.iter_mut().enumerate() {
+                    self.block_tail_ref(
+                        layer, b, s, s + 1, &q_rows[s], &k_cache, &v_cache, x, &mut scratch,
+                    );
+                }
+            }
+            for (s, x) in xs.iter().enumerate() {
+                let out = &mut logits[(b * seq + s) * cfg.vocab..(b * seq + s + 1) * cfg.vocab];
+                self.final_logits_ref(x, &mut scratch, out);
+            }
+        }
+        Ok(PrefillOut { logits, batch, seq, vocab: cfg.vocab, k: k_cache, v: v_cache })
+    }
+
+    /// Scalar-reference decode step: same contract as
+    /// [`TinyLmRuntime::decode`].
+    pub fn decode_reference(
+        &self,
+        batch: usize,
+        token: &[i32],
+        pos: &[i32],
+        k: Tensor,
+        v: Tensor,
+    ) -> Result<DecodeOut> {
+        if !self.decode.contains(&batch) {
+            return Err(Error::msg(format!("no decode artifact for batch {batch}")));
+        }
+        if token.len() != batch || pos.len() != batch {
+            return Err(Error::msg("decode arg arity mismatch"));
+        }
+        let cfg = &self.cfg;
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        if k.dims != [cfg.n_layers, batch, cfg.max_seq, h, hd] {
+            return Err(Error::msg(format!("k cache dims {:?} unexpected", k.dims)));
+        }
+        if v.dims != k.dims {
+            return Err(Error::msg(format!("v cache dims {:?} != k dims {:?}", v.dims, k.dims)));
+        }
+        let mut k_cache = k;
+        let mut v_cache = v;
+        let mut logits = vec![0.0f32; batch * cfg.vocab];
+        let mut scratch = Scratch::new(dm, self.params.d_ff, h * hd);
+
+        for b in 0..batch {
+            if pos[b] < 0 || pos[b] as usize >= cfg.max_seq {
+                return Err(Error::msg(format!("decode position {} beyond cache", pos[b])));
+            }
+            let p = pos[b] as usize;
+            if token[b] < 0 || token[b] as usize >= cfg.vocab {
+                return Err(Error::msg(format!(
+                    "decode token id {} outside vocab {}",
+                    token[b], cfg.vocab
+                )));
+            }
+            let tok = token[b] as usize;
+            let mut x: Vec<f32> = self.params.embed.data[tok * dm..(tok + 1) * dm].to_vec();
+            for layer in 0..cfg.n_layers {
+                let lp = &self.params.layers[layer];
+                rms_norm(&x, &lp.ln1.data, &mut scratch.xn);
+                let mut q = vec![0.0f32; dm];
+                matvec(&scratch.xn, &lp.wq.data, dm, dm, &mut q);
+                matvec(&scratch.xn, &lp.wk.data, dm, dm, &mut scratch.proj);
+                let koff = self.kv_index(layer, batch, b, p);
+                k_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                matvec(&scratch.xn, &lp.wv.data, dm, dm, &mut scratch.proj);
+                v_cache.data[koff..koff + dm].copy_from_slice(&scratch.proj);
+                for head in 0..h {
+                    rope(&mut q[head * hd..(head + 1) * hd], p, super::ROPE_BASE);
+                    rope(
+                        &mut k_cache.data[koff + head * hd..koff + (head + 1) * hd],
+                        p,
+                        super::ROPE_BASE,
+                    );
+                }
+                self.block_tail_ref(
+                    layer, b, p, p + 1, &q, &k_cache, &v_cache, &mut x, &mut scratch,
+                );
+            }
+            let out = &mut logits[b * cfg.vocab..(b + 1) * cfg.vocab];
+            self.final_logits_ref(&x, &mut scratch, out);
+        }
+        Ok(DecodeOut { logits, vocab: cfg.vocab, k: k_cache, v: v_cache })
+    }
+
+    /// Scalar-reference greedy generation: same contract as
+    /// [`TinyLmRuntime::generate`], driving the reference prefill/decode
+    /// (full logits at every prefill position, as the pre-kernel runtime
+    /// did — the baseline the throughput bench records).
+    pub fn generate_reference(&self, prompts: &[Vec<u32>], steps: usize) -> Result<Vec<Vec<u32>>> {
+        let batch = prompts.len();
+        let seq = *self
+            .prefill
+            .get(&batch)
+            .ok_or_else(|| Error::msg(format!("no prefill artifact for batch {batch}")))?;
+        let max_new = self.cfg.max_seq - seq;
+        if steps > max_new {
+            return Err(Error::msg(format!("steps {steps} exceeds cache headroom {max_new}")));
+        }
+        let mut tokens = vec![0i32; batch * seq];
+        for (b, p) in prompts.iter().enumerate() {
+            if p.len() > seq {
+                return Err(Error::msg(format!("prompt {b} longer than prefill window {seq}")));
+            }
+            for (s, &t) in p.iter().enumerate() {
+                tokens[b * seq + s] = t as i32;
+            }
+        }
+        let pre = self.prefill_reference(batch, &tokens)?;
+        let mut cur: Vec<i32> = (0..batch)
+            .map(|b| pre.argmax_at(b, prompts[b].len().saturating_sub(1)) as i32)
+            .collect();
+        let mut k = pre.k;
+        let mut v = pre.v;
+        let mut out: Vec<Vec<u32>> = cur.iter().map(|&t| vec![t as u32]).collect();
+        let mut pos: Vec<i32> = prompts.iter().map(|p| p.len() as i32).collect();
+        for _ in 1..steps {
+            let d = self.decode_reference(batch, &cur, &pos, k, v)?;
+            for b in 0..batch {
+                cur[b] = d.argmax_of(b) as i32;
+                out[b].push(cur[b] as u32);
+                pos[b] += 1;
+            }
+            k = d.k;
+            v = d.v;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SyntheticSpec, TinyLmRuntime};
+
+    #[test]
+    fn reference_generate_matches_kernel_generate() {
+        let rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        let prompts = vec![vec![3u32, 8, 2], vec![1u32, 15]];
+        let kernel = rt.generate(&prompts, 4).unwrap();
+        let scalar = rt.generate_reference(&prompts, 4).unwrap();
+        assert_eq!(kernel, scalar);
+    }
+
+    #[test]
+    fn reference_prefill_bits_match_kernel() {
+        let rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        let tokens: Vec<i32> = vec![3, 8, 2, 1, 0, 12, 7, 5];
+        let a = rt.prefill(1, &tokens).unwrap();
+        let b = rt.prefill_reference(1, &tokens).unwrap();
+        assert!(a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.k.data.iter().zip(&b.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(a.v.data.iter().zip(&b.v.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

@@ -1,0 +1,126 @@
+//! BENCH telemetry pipeline: machine-readable benchmark records.
+//!
+//! Benches that produce trajectory data write a `BENCH_<name>.json` file
+//! through [`BenchReport`] (schema v1, documented in BENCHMARKS.md at the
+//! repo root) so runs can be diffed across commits — by hand, by
+//! `scripts/check_bench.py`, or by the CI `bench-smoke` job that uploads
+//! the file as an artifact and gates on decode-throughput regressions.
+//!
+//! Shape of one report:
+//!
+//! ```json
+//! {
+//!   "bench": "runtime_throughput",
+//!   "schema": 1,
+//!   "config": {"d_model": 128, "threads": 4, ...},
+//!   "results": [{"name": "decode_kernel", "tokens_per_s": 51234.0, ...}],
+//!   "derived": {"decode_speedup": 6.1, ...}
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::json::Json;
+
+/// Bump when the report shape changes incompatibly.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Builder for one `BENCH_<name>.json` document.
+pub struct BenchReport {
+    name: String,
+    config: BTreeMap<String, Json>,
+    results: Vec<Json>,
+    derived: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            config: BTreeMap::new(),
+            results: Vec::new(),
+            derived: BTreeMap::new(),
+        }
+    }
+
+    /// Record a config key (model shape, thread count, iteration counts).
+    pub fn config(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.config.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Append one measurement row (`name` plus arbitrary numeric fields).
+    pub fn result<'a>(&mut self, fields: impl IntoIterator<Item = (&'a str, Json)>) -> &mut Self {
+        self.results.push(Json::obj(fields));
+        self
+    }
+
+    /// Record a derived quantity (speedups, targets, pass/fail flags).
+    pub fn derived(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.derived.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("bench", Json::Str(self.name.clone())),
+            ("schema", Json::from(SCHEMA_VERSION)),
+            ("config", Json::Obj(self.config.clone())),
+            ("results", Json::Arr(self.results.clone())),
+            ("derived", Json::Obj(self.derived.clone())),
+        ])
+    }
+
+    /// Canonical output path: `<dir>/BENCH_<name>.json`, where `dir` is
+    /// `AIBRIX_BENCH_DIR` if set, else `<manifest_dir>/../benchmarks`.
+    pub fn default_path(&self, manifest_dir: &str) -> PathBuf {
+        let dir = std::env::var("AIBRIX_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| Path::new(manifest_dir).join("../benchmarks"));
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Serialize to `path`, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().to_string().as_bytes())?;
+        f.write_all(b"\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn report_round_trips_through_parser() {
+        let mut r = BenchReport::new("unit");
+        r.config("threads", 4usize);
+        r.result([("name", Json::from("decode_kernel")), ("tokens_per_s", Json::from(123.5))]);
+        r.derived("decode_speedup", 6.25);
+        let j = parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j["bench"].as_str(), Some("unit"));
+        assert_eq!(j["schema"].as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(j["config"]["threads"].as_usize(), Some(4));
+        assert_eq!(j["results"][0]["name"].as_str(), Some("decode_kernel"));
+        assert_eq!(j["results"][0]["tokens_per_s"].as_f64(), Some(123.5));
+        assert_eq!(j["derived"]["decode_speedup"].as_f64(), Some(6.25));
+    }
+
+    #[test]
+    fn write_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("aibrix_bench_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/BENCH_unit.json");
+        BenchReport::new("unit").write_to(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

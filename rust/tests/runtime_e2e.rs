@@ -1,13 +1,19 @@
-//! PJRT runtime integration tests.
+//! Runtime integration tests.
 //!
-//! `harness = false`: xla_extension 0.5.1 must be driven from the process
-//! main thread (see rust/src/runtime/mod.rs THREADING note), so this binary
-//! runs its checks sequentially instead of under libtest's per-test
-//! threads. Skips cleanly when artifacts are missing (run `make artifacts`).
+//! `harness = false` (kept from the xla_extension era: the binary drives
+//! its checks sequentially from the process main thread). Two sections:
+//!
+//! 1. Kernel-layer properties on synthetic runtimes — always run, no
+//!    artifacts needed: the kernel path must be bit-identical to the
+//!    retained scalar reference (`runtime/reference.rs`) on random
+//!    (batch, seq, token) inputs, and thread count must never change bits.
+//! 2. Artifact-backed checks — skip cleanly when `make artifacts` hasn't
+//!    been run.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use aibrix::runtime::{Manifest, TinyLmRuntime};
+use aibrix::pt::forall;
+use aibrix::runtime::{Manifest, ModelCfg, SyntheticSpec, TinyLmRuntime};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
@@ -18,19 +24,143 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn main() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("runtime_e2e: SKIP (no artifacts; run `make artifacts`)");
-        return;
-    };
+// ------------------------------------------------- kernel-layer properties
 
-    // One client/runtime for the whole binary: xla_extension is unreliable
-    // across repeated client create/destroy cycles in one process.
-    let rt = TinyLmRuntime::load(&dir).unwrap();
+const PROP_VOCAB: usize = 32;
+const PROP_SEQ: usize = 10;
+
+fn prop_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        cfg: ModelCfg {
+            vocab: PROP_VOCAB,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 8,
+            max_seq: 24,
+            page_size: 4,
+        },
+        d_ff: 32,
+        prefill: vec![(1, PROP_SEQ), (2, PROP_SEQ), (3, PROP_SEQ)],
+        decode: vec![1, 2, 3],
+        seed: 11,
+    }
+}
+
+fn prop_runtime(threads: usize) -> TinyLmRuntime {
+    let mut rt = TinyLmRuntime::synthetic(&prop_spec());
+    rt.set_threads(threads);
+    rt
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Random (batch, tokens, next-token, positions) case for the proptests.
+#[derive(Debug)]
+struct Case {
+    batch: usize,
+    tokens: Vec<i32>,
+    next: Vec<i32>,
+    prompt_lens: Vec<usize>,
+}
+
+fn gen_case(rng: &mut aibrix::util::Rng, _size: aibrix::pt::Size) -> Case {
+    let batch = 1 + rng.below(3) as usize;
+    let tokens: Vec<i32> =
+        (0..batch * PROP_SEQ).map(|_| rng.below(PROP_VOCAB as u64) as i32).collect();
+    let next: Vec<i32> = (0..batch).map(|_| rng.below(PROP_VOCAB as u64) as i32).collect();
+    let prompt_lens: Vec<usize> =
+        (0..batch).map(|_| 1 + rng.below(PROP_SEQ as u64) as usize).collect();
+    Case { batch, tokens, next, prompt_lens }
+}
+
+fn kernel_properties() {
+    // Kernel prefill == scalar reference, bit for bit (logits and caches).
+    forall("kernel-prefill-matches-reference", 25, gen_case, |c| {
+        let rt = prop_runtime(4);
+        let a = rt.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        let b = rt.prefill_reference(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        if !bits_eq(&a.logits, &b.logits) {
+            return Err("prefill logits diverge from reference".into());
+        }
+        if !bits_eq(&a.k.data, &b.k.data) || !bits_eq(&a.v.data, &b.v.data) {
+            return Err("prefill KV cache diverges from reference".into());
+        }
+        Ok(())
+    });
+    println!("runtime_e2e::prop_kernel_prefill_matches_reference ... ok");
+
+    // Kernel decode == scalar reference after a shared prefill.
+    forall("kernel-decode-matches-reference", 25, gen_case, |c| {
+        let rt = prop_runtime(4);
+        let pre = rt.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        let pos: Vec<i32> = c.prompt_lens.iter().map(|&l| l as i32).collect();
+        let a = rt
+            .decode(c.batch, &c.next, &pos, pre.k.clone(), pre.v.clone())
+            .map_err(|e| e.to_string())?;
+        let b = rt
+            .decode_reference(c.batch, &c.next, &pos, pre.k.clone(), pre.v.clone())
+            .map_err(|e| e.to_string())?;
+        if !bits_eq(&a.logits, &b.logits) {
+            return Err("decode logits diverge from reference".into());
+        }
+        if !bits_eq(&a.k.data, &b.k.data) || !bits_eq(&a.v.data, &b.v.data) {
+            return Err("decode KV cache diverges from reference".into());
+        }
+        Ok(())
+    });
+    println!("runtime_e2e::prop_kernel_decode_matches_reference ... ok");
+
+    // Thread count never changes bits: multi-threaded == AIBRIX_RT_THREADS=1.
+    forall("threaded-matches-single-thread", 25, gen_case, |c| {
+        let rt1 = prop_runtime(1);
+        let rt8 = prop_runtime(8);
+        let a = rt1.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        let b = rt8.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        if !bits_eq(&a.logits, &b.logits) || !bits_eq(&a.k.data, &b.k.data) {
+            return Err("prefill bits depend on thread count".into());
+        }
+        let prompts: Vec<Vec<u32>> =
+            c.prompt_lens.iter().map(|&l| (0..l as u32).collect()).collect();
+        let g1 = rt1.generate(&prompts, 4).map_err(|e| e.to_string())?;
+        let g8 = rt8.generate(&prompts, 4).map_err(|e| e.to_string())?;
+        if g1 != g8 {
+            return Err(format!("generate depends on thread count: {g1:?} vs {g8:?}"));
+        }
+        Ok(())
+    });
+    println!("runtime_e2e::prop_threaded_matches_single_thread ... ok");
+
+    // The positions-mask fast path is a pure subset of full prefill.
+    forall("prefill-last-is-subset", 25, gen_case, |c| {
+        let rt = prop_runtime(4);
+        let full = rt.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        let lasts: Vec<usize> = c.prompt_lens.iter().map(|&l| l - 1).collect();
+        let fast =
+            rt.prefill_last(c.batch, &c.tokens, &lasts, None).map_err(|e| e.to_string())?;
+        for b in 0..c.batch {
+            if !bits_eq(fast.logits_of(b), full.logits_at(b, lasts[b])) {
+                return Err(format!("row {b}: prefill_last logits diverge"));
+            }
+        }
+        if !bits_eq(&fast.k.data, &full.k.data) || !bits_eq(&fast.v.data, &full.v.data) {
+            return Err("prefill_last KV cache diverges".into());
+        }
+        Ok(())
+    });
+    println!("runtime_e2e::prop_prefill_last_is_subset ... ok");
+}
+
+// --------------------------------------------------- artifact-backed checks
+
+fn artifact_checks(dir: &Path) {
+    let rt = TinyLmRuntime::load(dir).unwrap();
 
     let mut passed = 0;
-    let mut run = |name: &str, f: &dyn Fn(&PathBuf, &TinyLmRuntime)| {
-        f(&dir, &rt);
+    let mut run = |name: &str, f: &dyn Fn(&Path, &TinyLmRuntime)| {
+        f(dir, &rt);
         println!("runtime_e2e::{name} ... ok");
         passed += 1;
     };
@@ -85,6 +215,18 @@ fn main() {
         assert_eq!(gen2[0][0], gen[0][1], "KV-cache decode must match re-prefill");
     });
 
+    run("kernel_matches_reference_on_artifacts", &|_dir, rt| {
+        // The real model's weights, not just synthetic ones, must agree
+        // between kernel and scalar reference paths.
+        let tokens: Vec<i32> = (0..128).map(|i| (i * 37) % 512).collect();
+        let a = rt.prefill(1, &tokens).unwrap();
+        let b = rt.prefill_reference(1, &tokens).unwrap();
+        assert!(
+            a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "artifact-model kernel logits diverge from reference"
+        );
+    });
+
     run("error_paths", &|_dir, rt| {
         assert!(rt.prefill(1, &[0i32; 7]).is_err(), "bad token count");
         assert!(rt.prefill(3, &[0i32; 3 * 128]).is_err(), "no batch-3 artifact");
@@ -98,5 +240,14 @@ fn main() {
         );
     });
 
-    println!("runtime_e2e: {passed} checks passed");
+    println!("runtime_e2e: {passed} artifact checks passed");
+}
+
+fn main() {
+    kernel_properties();
+
+    match artifacts_dir() {
+        Some(dir) => artifact_checks(&dir),
+        None => eprintln!("runtime_e2e: artifact checks SKIPPED (run `make artifacts`)"),
+    }
 }

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Gate BENCH_*.json runs against a checked-in baseline (BENCHMARKS.md).
+
+Usage:
+    python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
+
+- CURRENT: the BENCH_runtime.json a bench run just wrote.
+- BASELINE: the blessed copy tracked in git (benchmarks/*.baseline.json).
+- --bless: copy CURRENT over BASELINE (run locally, commit the result).
+- --tolerance: allowed fractional regression (default 0.30, i.e. fail if
+  decode tokens/s drops more than 30% below the baseline).
+
+Exit codes: 0 = ok (or record mode: no baseline checked in yet),
+1 = regression, 2 = malformed input.
+
+Throughput metrics compared (higher is better): decode_kernel and
+prefill_kernel `tokens_per_s`. Only decode gates (prefill is reported);
+machine-to-machine noise is why the tolerance is wide — the within-run
+`decode_speedup` vs the scalar reference is the portable number.
+"""
+
+import json
+import shutil
+import sys
+
+
+def tokens_per_s(doc, name):
+    for row in doc.get("results", []):
+        if row.get("name") == name:
+            return row.get("tokens_per_s")
+    return None
+
+
+def main(argv):
+    bless = False
+    tol = 0.30
+    args = []
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--bless":
+            bless = True
+        elif a == "--tolerance":
+            i += 1
+            tol = float(argv[i])
+        elif a.startswith("--"):
+            print(f"check_bench: unknown flag {a}")
+            print(__doc__)
+            return 2
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    current_path, baseline_path = args
+
+    try:
+        with open(current_path) as f:
+            current = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read current run {current_path}: {e}")
+        return 2
+
+    cur_decode = tokens_per_s(current, "decode_kernel")
+    if cur_decode is None:
+        print(f"check_bench: {current_path} has no decode_kernel result")
+        return 2
+    speedup = current.get("derived", {}).get("decode_speedup")
+    print(f"check_bench: current decode_kernel {cur_decode:.0f} tok/s "
+          f"(speedup vs scalar reference: {speedup})")
+
+    if bless:
+        shutil.copyfile(current_path, baseline_path)
+        print(f"check_bench: blessed {current_path} -> {baseline_path}")
+        return 0
+
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except OSError:
+        print(f"check_bench: no baseline at {baseline_path} — record mode.")
+        print("  To start gating, bless this run on a quiet machine and commit it:")
+        print(f"    python3 scripts/check_bench.py {current_path} {baseline_path} --bless")
+        return 0
+
+    base_decode = tokens_per_s(baseline, "decode_kernel")
+    if not base_decode:
+        print(f"check_bench: baseline {baseline_path} has no decode_kernel result")
+        return 2
+
+    base_prefill = tokens_per_s(baseline, "prefill_kernel")
+    cur_prefill = tokens_per_s(current, "prefill_kernel")
+    if base_prefill and cur_prefill:
+        print(f"check_bench: prefill_kernel {cur_prefill:.0f} tok/s "
+              f"(baseline {base_prefill:.0f}, informational)")
+
+    floor = (1.0 - tol) * base_decode
+    if cur_decode < floor:
+        print(f"check_bench: FAIL — decode_kernel {cur_decode:.0f} tok/s is below "
+              f"{floor:.0f} (baseline {base_decode:.0f} - {tol:.0%} tolerance)")
+        return 1
+    print(f"check_bench: OK — decode_kernel {cur_decode:.0f} tok/s >= "
+          f"{floor:.0f} (baseline {base_decode:.0f} - {tol:.0%} tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
