@@ -13,8 +13,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use aibrix::engine::real::{RealEngineHandle, RealRequest};
+use aibrix::engine::real::{EnginePool, RealEngineHandle, RealRequest};
 use aibrix::json::{parse, Json};
+use aibrix::runtime::Manifest;
 use aibrix::server::{http_request, Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
 use aibrix::util::stats::Summary;
@@ -37,8 +38,13 @@ fn main() -> aibrix::util::err::Result<()> {
         .map(|p| p.get().min(4))
         .unwrap_or(1)
         .min(2);
+    // The replicas share a distributed KV pool (one shard each): templated
+    // SQL prompts share long token prefixes, so whichever replica prefills
+    // a prefix first spares every other replica that compute.
+    let manifest = Manifest::load(&artifacts)?;
+    let hook = EnginePool::for_model(&manifest.cfg, "tinylm", n_replicas, 64 << 20);
     let replicas: Vec<RealEngineHandle> = (0..n_replicas)
-        .map(|_| RealEngineHandle::spawn(&artifacts))
+        .map(|node| RealEngineHandle::spawn_with_pool(&artifacts, Some(hook.for_node(node as u64))))
         .collect::<aibrix::util::err::Result<_>>()?;
     println!(
         "{} engine replica(s) ready in {:.1}s (vocab={}, prompt window={}, decode budget={})",
@@ -150,13 +156,24 @@ fn main() -> aibrix::util::err::Result<()> {
     for (i, r) in replicas.iter().enumerate() {
         if let Ok(rs) = r.stats() {
             println!(
-                "replica {i} runtime: prefill {:.0} tok/s, decode {:.0} tok/s ({} decode tokens)",
+                "replica {i} runtime: prefill {:.0} tok/s, decode {:.0} tok/s ({} decode tokens, {} prefill tokens seeded from pool)",
                 rs.prefill_tokens_per_s(),
                 rs.decode_tokens_per_s(),
-                rs.decode_tokens
+                rs.decode_tokens,
+                rs.seeded_prefill_tokens
             );
         }
     }
+    // Cross-replica KV reuse: what the shared pool did for this run.
+    let ps = hook.stats();
+    println!(
+        "kv pool: {} lookups, hit rate {:.0}% ({} local / {} remote blocks), {} dedup-dropped write-backs",
+        ps.lookups,
+        ps.hit_rate() * 100.0,
+        ps.blocks_hit_local,
+        ps.blocks_hit_remote,
+        ps.inserts_deduped
+    );
     println!("\nall layers composed: rust gateway -> engine threads -> TinyLM kernel runtime (AOT manifest)");
     for r in &replicas {
         r.stop();

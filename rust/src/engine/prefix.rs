@@ -27,15 +27,40 @@ pub fn chain_hash(parent: BlockKey, tokens: &[u32]) -> BlockKey {
     h
 }
 
-/// Hash every full block of a prompt into its chain of keys.
-pub fn prompt_block_keys(tokens: &[u32], block_size: usize) -> Vec<BlockKey> {
+/// Root of a content-address chain for a given model: two models must never
+/// collide on the same token prefix (their KV tensors differ), so the chain
+/// is seeded by the model identity. The distributed pool's block store
+/// (`kvcache::blocks`) and the engine-local cache share this scheme.
+pub fn model_chain_seed(model_id: &str) -> BlockKey {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model_id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    // Never 0: the unseeded chain root stays distinct from every model's.
+    h | 1
+}
+
+/// Hash every full block of a prompt into its chain of keys, starting from
+/// `seed` (0 for the engine-local unseeded chain, [`model_chain_seed`] for
+/// cross-replica content addressing).
+pub fn prompt_block_keys_seeded(
+    seed: BlockKey,
+    tokens: &[u32],
+    block_size: usize,
+) -> Vec<BlockKey> {
     let mut keys = Vec::with_capacity(tokens.len() / block_size);
-    let mut parent = 0;
+    let mut parent = seed;
     for chunk in tokens.chunks_exact(block_size) {
         parent = chain_hash(parent, chunk);
         keys.push(parent);
     }
     keys
+}
+
+/// Hash every full block of a prompt into its chain of keys.
+pub fn prompt_block_keys(tokens: &[u32], block_size: usize) -> Vec<BlockKey> {
+    prompt_block_keys_seeded(0, tokens, block_size)
 }
 
 #[derive(Debug, Clone)]
@@ -194,6 +219,19 @@ mod tests {
         assert_ne!(a, b);
         // Same block after different parents differs.
         assert_ne!(chain_hash(a, &[9]), chain_hash(b, &[9]));
+    }
+
+    #[test]
+    fn model_seed_separates_chains() {
+        let toks = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let a = prompt_block_keys_seeded(model_chain_seed("tinylm-v1"), &toks, 4);
+        let b = prompt_block_keys_seeded(model_chain_seed("tinylm-v2"), &toks, 4);
+        let unseeded = prompt_block_keys(&toks, 4);
+        assert_ne!(a, b, "different models must not share block keys");
+        assert_ne!(a, unseeded, "seeded chain differs from the local chain");
+        // Same model: stable and prefix-consistent.
+        let a2 = prompt_block_keys_seeded(model_chain_seed("tinylm-v1"), &toks[..4], 4);
+        assert_eq!(a[..1], a2[..]);
     }
 
     #[test]

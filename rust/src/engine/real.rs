@@ -8,10 +8,89 @@
 
 use std::collections::VecDeque;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::runtime::{RtStats, TinyLmRuntime};
+use crate::kvcache::blocks::{
+    assemble_prefix, extract_block, model_chain_seed, prompt_block_keys_seeded,
+};
+use crate::kvcache::{DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolStats};
+use crate::runtime::{ModelCfg, RtStats, SeededPrefix, TinyLmRuntime};
 use crate::util::err::{Error, Result};
+
+/// Shared handle wiring a [`RealEngine`] replica into the distributed KV
+/// pool (§3.2.5 on the real serving path): admission fetches cached prefix
+/// blocks and seeds the prefill; completion writes freshly computed blocks
+/// back. Clone per replica with [`EnginePool::for_node`] — all clones share
+/// the pool, the visibility clock's epoch, and the model-seeded hash chain.
+#[derive(Clone)]
+pub struct EnginePool {
+    pool: Arc<Mutex<DistKvPool>>,
+    /// This replica's node id (colocation: blocks written here are local).
+    pub node: u64,
+    /// Chain-hash seed derived from the model id (cross-model isolation).
+    model_seed: u64,
+    /// Tokens per content-addressed block (from the pool config).
+    block_tokens: usize,
+    /// The pool's epoch (copied from [`DistKvPool::epoch`]): every hook
+    /// over one pool, however late it is created, ticks the same µs
+    /// visibility clock.
+    epoch: Instant,
+}
+
+/// Visibility delay for the real serving path: write-backs publish after a
+/// short async-index beat rather than the simulator's 50ms modeling
+/// default.
+const REAL_PATH_METADATA_DELAY_US: u64 = 1_000;
+
+impl EnginePool {
+    /// Wrap a pool for one model. The pool config's `block_tokens` drives
+    /// the hash chunking; the KV geometry is pinned by the first engine
+    /// that attaches.
+    pub fn new(pool: Arc<Mutex<DistKvPool>>, model_id: &str) -> EnginePool {
+        let (block_tokens, epoch) = {
+            let p = pool.lock().unwrap();
+            (p.config().block_tokens, p.epoch())
+        };
+        EnginePool { pool, node: 0, model_seed: model_chain_seed(model_id), block_tokens, epoch }
+    }
+
+    /// Build a fresh pool sized from a loaded model config — one
+    /// `shard_bytes` shard per replica, block = one runtime page,
+    /// bytes/token from the runtime's KV layout — and wrap it for
+    /// `model_id` (which seeds the hash chain: two models must never
+    /// collide on block keys even with identical geometry). The single
+    /// source of real-path pool geometry (`aibrix serve --kv-pool` and
+    /// `serve_e2e` both construct through here).
+    pub fn for_model(
+        cfg: &ModelCfg,
+        model_id: &str,
+        n_replicas: usize,
+        shard_bytes: u64,
+    ) -> EnginePool {
+        let mut pool_cfg = KvPoolConfig::new(
+            (0..n_replicas as u64).map(|i| (i, shard_bytes)).collect(),
+            cfg.kv_bytes_per_token(),
+            cfg.page_size,
+        );
+        pool_cfg.metadata_delay_us = REAL_PATH_METADATA_DELAY_US;
+        EnginePool::new(Arc::new(Mutex::new(DistKvPool::new(pool_cfg))), model_id)
+    }
+
+    /// This hook bound to a replica's node id.
+    pub fn for_node(&self, node: u64) -> EnginePool {
+        EnginePool { node, ..self.clone() }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Snapshot of the shared pool's counters.
+    pub fn stats(&self) -> PoolStats {
+        self.pool.lock().unwrap().stats.clone()
+    }
+}
 
 /// A queued real request.
 #[derive(Debug, Clone)]
@@ -36,7 +115,7 @@ impl RealCompletion {
     }
 }
 
-/// The real engine: runtime + queue + batch loop.
+/// The real engine: runtime + queue + batch loop (+ optional KV pool).
 pub struct RealEngine {
     runtime: TinyLmRuntime,
     queue: VecDeque<(RealRequest, Instant)>,
@@ -44,14 +123,42 @@ pub struct RealEngine {
     max_batch: usize,
     prefill_window: usize,
     decode_budget: usize,
+    pool: Option<EnginePool>,
+    /// Geometry of pool blocks for this runtime (present iff `pool` is).
+    kv_shape: Option<KvBlockShape>,
 }
 
 impl RealEngine {
     pub fn load(artifacts: &Path) -> Result<RealEngine> {
-        let runtime = TinyLmRuntime::load(artifacts)?;
+        Self::load_with_pool(artifacts, None)
+    }
+
+    /// Load the artifacts and, when `pool` is given, join the distributed
+    /// KV pool as that hook's node.
+    pub fn load_with_pool(artifacts: &Path, pool: Option<EnginePool>) -> Result<RealEngine> {
+        Self::from_runtime(TinyLmRuntime::load(artifacts)?, pool)
+    }
+
+    /// Build an engine around an already-constructed runtime (synthetic
+    /// runtimes in tests/benches, loaded ones in serving).
+    pub fn from_runtime(runtime: TinyLmRuntime, pool: Option<EnginePool>) -> Result<RealEngine> {
         let max_batch = runtime.prefill_batches().into_iter().max().unwrap_or(1);
         let prefill_window = runtime.prefill_seq(max_batch).unwrap_or(128);
         let decode_budget = runtime.cfg.max_seq - prefill_window;
+        let kv_shape = match &pool {
+            Some(hook) => {
+                let shape = KvBlockShape {
+                    n_layers: runtime.cfg.n_layers,
+                    block_tokens: hook.block_tokens,
+                    d_model: runtime.cfg.d_model,
+                };
+                // First engine pins the pool's geometry; mismatched models
+                // joining the same pool fail loudly here.
+                hook.pool.lock().unwrap().set_shape(shape);
+                Some(shape)
+            }
+            None => None,
+        };
         Ok(RealEngine {
             runtime,
             queue: VecDeque::new(),
@@ -59,6 +166,8 @@ impl RealEngine {
             max_batch,
             prefill_window,
             decode_budget,
+            pool,
+            kv_shape,
         })
     }
 
@@ -135,7 +244,99 @@ impl RealEngine {
             .max()
             .unwrap_or(1)
             .clamp(1, self.decode_budget);
-        let generated = self.runtime.generate_masked(&prompts, steps, Some(&active))?;
+
+        // Admission-side pool hook: fetch the longest cached block chain
+        // per row and seed the prefill with it — compute runs only over
+        // the uncached suffix. The pool lock covers just the index walk +
+        // Arc clones; slab assembly (the big memcpy) happens after release
+        // so other replicas aren't blocked behind it.
+        let mut row_keys: Vec<Vec<u64>> = Vec::new();
+        let mut fetched: Vec<Vec<Arc<KvBlockData>>> = Vec::new();
+        // Leading blocks already resident *with data* (visible or not) —
+        // the write-back below skips these. Probed under the same lock;
+        // covers blocks the visibility delay still hides from lookup, and
+        // the final full block of an exact-multiple prompt that the
+        // `usable` cap keeps out of the lookup.
+        let mut resident: Vec<usize> = Vec::new();
+        if let Some(hook) = &self.pool {
+            let shape = self.kv_shape.unwrap();
+            let bt = shape.block_tokens;
+            // Hash the prompt chains before taking the lock — the FNV walk
+            // over every prompt token needs no pool state.
+            for p in prompts.iter().take(real_rows) {
+                row_keys.push(prompt_block_keys_seeded(hook.model_seed, p, bt));
+            }
+            let now = hook.now_us();
+            let mut pool = hook.pool.lock().unwrap();
+            for (p, keys) in prompts.iter().take(real_rows).zip(&row_keys) {
+                // The last prompt position must be computed (its logits
+                // feed the first sampled token), so a fully cached prompt
+                // is capped one block short.
+                let usable = keys.len().min(p.len().saturating_sub(1) / bt);
+                let blocks = if usable > 0 {
+                    pool.lookup_blocks(now, hook.node, &keys[..usable]).1
+                } else {
+                    Vec::new()
+                };
+                resident.push(keys.iter().take_while(|&&k| pool.has_data(k)).count());
+                fetched.push(blocks);
+            }
+        }
+        let mut slabs: Vec<Option<(usize, Vec<f32>, Vec<f32>)>> = vec![None; prompts.len()];
+        if let Some(shape) = self.kv_shape {
+            for (i, blocks) in fetched.iter().enumerate() {
+                if !blocks.is_empty() {
+                    let (k, v) = assemble_prefix(blocks, &shape);
+                    slabs[i] = Some((blocks.len() * shape.block_tokens, k, v));
+                }
+            }
+        }
+        let seeds: Vec<SeededPrefix<'_>> = slabs
+            .iter()
+            .map(|s| match s {
+                Some((len, k, v)) => SeededPrefix { len: *len, k, v },
+                None => SeededPrefix::default(),
+            })
+            .collect();
+        let seeds_opt = self.pool.as_ref().map(|_| seeds.as_slice());
+
+        let (generated, k_cache, v_cache) =
+            self.runtime.generate_seeded(&prompts, steps, Some(&active), seeds_opt)?;
+
+        // Completion-side pool hook: write freshly computed prompt blocks
+        // back. Blocks whose data was already resident at admission
+        // (fetched or not-yet-visible) are skipped outright — re-inserting
+        // them would only burn an extract copy (and, with dedup off, churn
+        // their visibility clocks). Races with other replicas' concurrent
+        // write-backs are still the pool's dedup problem — the paper's
+        // "reduced redundant data transfers" counter.
+        if let Some(hook) = &self.pool {
+            let shape = self.kv_shape.unwrap();
+            let max_seq = self.runtime.cfg.max_seq;
+            let batch = prompts.len();
+            let now = hook.now_us();
+            let mut items = Vec::new();
+            for (i, keys) in row_keys.iter().enumerate() {
+                let skip = resident[i].max(fetched[i].len());
+                for (bi, key) in keys.iter().enumerate().skip(skip) {
+                    items.push((
+                        *key,
+                        Arc::new(extract_block(
+                            &k_cache.data,
+                            &v_cache.data,
+                            &shape,
+                            batch,
+                            max_seq,
+                            i,
+                            bi,
+                        )),
+                    ));
+                }
+            }
+            if !items.is_empty() {
+                hook.pool.lock().unwrap().insert_blocks(now, hook.node, &items);
+            }
+        }
         let serve_us = t_serve.elapsed().as_micros() as u64;
 
         let mut out = Vec::new();
@@ -189,16 +390,28 @@ pub struct RealEngineHandle {
     pub max_prompt: usize,
     pub max_new_tokens: usize,
     pub vocab: usize,
+    /// KV-pool hook shared with the engine thread (stats reads only).
+    pool: Option<EnginePool>,
 }
 
 impl RealEngineHandle {
     /// Spawn the engine thread; fails fast if artifacts cannot be loaded.
     pub fn spawn(artifacts: &Path) -> Result<RealEngineHandle> {
+        Self::spawn_with_pool(artifacts, None)
+    }
+
+    /// [`RealEngineHandle::spawn`] with this replica joined to a shared
+    /// distributed KV pool (the hook carries the replica's node id).
+    pub fn spawn_with_pool(
+        artifacts: &Path,
+        pool: Option<EnginePool>,
+    ) -> Result<RealEngineHandle> {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
         let dir = artifacts.to_path_buf();
+        let thread_pool = pool.clone();
         std::thread::spawn(move || {
-            let mut engine = match RealEngine::load(&dir) {
+            let mut engine = match RealEngine::load_with_pool(&dir, thread_pool) {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok((
                         e.max_prompt(),
@@ -256,7 +469,14 @@ impl RealEngineHandle {
         let (max_prompt, max_new_tokens, vocab) = ready_rx
             .recv()
             .map_err(|_| Error::msg("engine thread died during load"))??;
-        Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab })
+        Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab, pool })
+    }
+
+    /// Counters of the shared KV pool this replica participates in (None
+    /// when serving standalone). Reads the pool directly — no engine-thread
+    /// round trip.
+    pub fn pool_stats(&self) -> Option<PoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
     }
 
     /// Serve one request, blocking until its completion.
@@ -278,5 +498,115 @@ impl RealEngineHandle {
 
     pub fn stop(&self) {
         let _ = self.tx.send(Cmd::Stop);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvPoolConfig;
+    use crate::runtime::{ModelCfg, SyntheticSpec};
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 8,
+                max_seq: 48,
+                page_size: 8,
+            },
+            d_ff: 32,
+            prefill: vec![(1, 40)],
+            decode: vec![1],
+            seed: 5,
+        }
+    }
+
+    /// 2-node pool, 8-token blocks, instant metadata visibility (the real
+    /// path ticks in wall µs; tests shouldn't sleep).
+    fn shared_pool() -> Arc<Mutex<DistKvPool>> {
+        let mut cfg = KvPoolConfig::new(vec![(0, 1 << 30), (1, 1 << 30)], 1024, 8);
+        cfg.metadata_delay_us = 0;
+        Arc::new(Mutex::new(DistKvPool::new(cfg)))
+    }
+
+    fn engine(pool: Option<EnginePool>) -> RealEngine {
+        RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), pool).unwrap()
+    }
+
+    fn request(id: u64, prefix: &[u32], tail: u32) -> RealRequest {
+        let mut tokens = prefix.to_vec();
+        tokens.extend([tail, tail + 1, tail + 2]);
+        RealRequest { id, tokens, max_new_tokens: 4 }
+    }
+
+    #[test]
+    fn replicas_reuse_each_others_prefill() {
+        let pool = shared_pool();
+        let hook = EnginePool::new(Arc::clone(&pool), "tinylm-test");
+        let mut a = engine(Some(hook.for_node(0)));
+        let mut b = engine(Some(hook.for_node(1)));
+        let mut solo = engine(None);
+
+        let prefix: Vec<u32> = (0..24).map(|i| (i * 5 % 32) as u32).collect();
+        // Replica A computes the 24-token prefix cold and writes it back.
+        a.enqueue(request(1, &prefix, 1));
+        let _ = a.step().unwrap();
+        assert!(pool.lock().unwrap().data_blocks() >= 3, "A wrote its blocks back");
+        // Replica B shares the prefix: 3 blocks fetched remotely from A's
+        // write-back seed its prefill, and the output must be bit-identical
+        // to a standalone engine's.
+        b.enqueue(request(2, &prefix, 1));
+        let cb = b.step().unwrap();
+        solo.enqueue(request(3, &prefix, 1));
+        let cs = solo.step().unwrap();
+        assert_eq!(cb[0].generated, cs[0].generated, "seeded run must match cold run");
+
+        let ps = pool.lock().unwrap().stats.clone();
+        assert!(ps.blocks_hit_remote >= 3, "cross-replica reuse: {ps:?}");
+        let rs = b.runtime_stats();
+        assert_eq!(rs.seeded_prefill_rows, 1);
+        assert!(rs.seeded_prefill_tokens >= 24, "{rs:?}");
+        assert!(pool.lock().unwrap().check_invariants());
+    }
+
+    #[test]
+    fn same_replica_reuses_own_writeback_locally() {
+        let pool = shared_pool();
+        let hook = EnginePool::new(Arc::clone(&pool), "tinylm-test");
+        let mut a = engine(Some(hook.for_node(0)));
+        let prefix: Vec<u32> = (0..16).map(|i| (i * 3 % 32) as u32).collect();
+        a.enqueue(request(1, &prefix, 7));
+        let _ = a.step().unwrap();
+        a.enqueue(request(2, &prefix, 7));
+        let _ = a.step().unwrap();
+        let ps = pool.lock().unwrap().stats.clone();
+        assert!(ps.blocks_hit_local >= 2, "colocated reuse: {ps:?}");
+        // The second request's fetched blocks are skipped at write-back
+        // (already resident), so only the cold request inserted.
+        assert_eq!(ps.inserts, 2, "fetched blocks must not be re-inserted: {ps:?}");
+        assert_eq!(ps.inserts_deduped, 0, "{ps:?}");
+    }
+
+    #[test]
+    fn different_models_never_share_blocks() {
+        let pool = shared_pool();
+        let hook_a = EnginePool::new(Arc::clone(&pool), "model-a");
+        let mut a = engine(Some(hook_a.for_node(0)));
+        let prefix: Vec<u32> = (0..16).collect();
+        a.enqueue(request(1, &prefix, 9));
+        let _ = a.step().unwrap();
+        // Same token prefix, different model id: the seeded chain differs,
+        // so B's lookups miss everything A stored.
+        let hook_b = EnginePool::new(Arc::clone(&pool), "model-b");
+        // Same synthetic weights keep set_shape happy; only the id differs.
+        let mut b = engine(Some(hook_b.for_node(1)));
+        b.enqueue(request(2, &prefix, 9));
+        let _ = b.step().unwrap();
+        let rs = b.runtime_stats();
+        assert_eq!(rs.seeded_prefill_tokens, 0, "cross-model seeding must not happen");
     }
 }

@@ -87,22 +87,28 @@ impl Gateway {
     }
 
     /// Admit and route one request against the current pod snapshots.
+    /// Routing only reads the fairness meter; tokens are charged by
+    /// [`Gateway::complete`] when the request finishes — *served* usage,
+    /// not admission-time promises (`output_len` is a request cap, not
+    /// what the engine will actually deliver).
     pub fn dispatch(&mut self, now: SimTime, req: &Request, pods: &[PodSnapshot]) -> Decision {
         if let Some(lim) = &mut self.limiter {
             if let Err(retry_after_ms) = lim.check(now, req.user, req.total_tokens() as u64) {
                 return Decision::RateLimited { retry_after_ms };
             }
         }
-        // Fairness context reflects usage *before* this request; admitted
-        // tokens are charged only on a successful route.
         let ctx = ScoreCtx { tenant_share: self.usage.share(now, req.user) };
         match self.router.select_with_ctx(req, pods, &ctx) {
-            Some(pod) => {
-                self.usage.record(now, req.user, req.total_tokens() as u64);
-                Decision::Route(pod)
-            }
+            Some(pod) => Decision::Route(pod),
             None => Decision::NoCapacity,
         }
+    }
+
+    /// Account a finished request: charge the tokens actually served
+    /// (prompt + generated) to the tenant's fairness meter. Rejected or
+    /// still-running requests never weigh on routing.
+    pub fn complete(&mut self, now: SimTime, user: u32, served_tokens: u64) {
+        self.usage.record(now, user, served_tokens);
     }
 }
 
@@ -191,13 +197,16 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_charges_usage_only_on_route() {
+    fn usage_charged_at_completion_not_admission() {
         let mut gw = Gateway::new(Policy::LeastRequest, 1);
         let mut down = pod(0);
         down.ready = false;
         assert_eq!(gw.dispatch(0, &req(3, 500), &[down]), Decision::NoCapacity);
         assert_eq!(gw.usage.share(0, 3), 0.0, "rejected request not charged");
         assert!(matches!(gw.dispatch(0, &req(3, 500), &[pod(0)]), Decision::Route(0)));
-        assert!(gw.usage.share(0, 3) > 0.99, "sole tenant owns the meter");
+        assert_eq!(gw.usage.share(0, 3), 0.0, "admission alone charges nothing");
+        // Completion charges what was actually served.
+        gw.complete(10, 3, 520);
+        assert!(gw.usage.share(10, 3) > 0.99, "sole tenant owns the meter");
     }
 }

@@ -247,13 +247,18 @@ pub fn run_with_router_config(
                     Some(dt) => sim.schedule_in(dt, Ev::Step(i)),
                     None => idle[i] = true,
                 }
-                if cfg.closed_loop_clients > 0 {
-                    let done = engines[i].completions.len();
-                    for _ in completed_seen[i]..done {
+                // Sweep fresh completions: charge *served* tokens to the
+                // fairness meter (routing reads delivered service, not
+                // admission-time `output_len` promises), and in closed-loop
+                // mode re-arm one arrival per finish.
+                let done = engines[i].completions.len();
+                for c in &engines[i].completions[completed_seen[i]..done] {
+                    gateway.complete(now, c.user, (c.prompt_len + c.output_len) as u64);
+                    if cfg.closed_loop_clients > 0 {
                         sim.schedule_at(now, Ev::Arrive);
                     }
-                    completed_seen[i] = done;
                 }
+                completed_seen[i] = done;
             }
         }
     }

@@ -1,0 +1,158 @@
+//! Real KV tensor blocks for the distributed pool (§3.2.5 made concrete).
+//!
+//! `pool.rs` keeps the cluster *index* (placement, visibility, eviction);
+//! this module defines what a block actually *is* on the real serving path:
+//! the K and V rows of `block_tokens` consecutive prompt positions, for
+//! every layer, in the TinyLM runtime's cache layout. Blocks are
+//! content-addressed by the model-seeded chain hash
+//! (`engine::prefix::prompt_block_keys_seeded`), so two replicas that
+//! tokenized the same prefix produce byte-identical keys — and because the
+//! chain fixes the absolute positions a block covers, the cached K rows
+//! (RoPE is applied before caching) are reusable verbatim.
+//!
+//! Helpers here convert between the runtime's flat `[L, B, Smax, H*D]`
+//! cache tensors and per-block slabs:
+//!   * [`extract_block`] — cut block `i` of row `b` out of a finished
+//!     prefill's caches (write-back path);
+//!   * [`assemble_prefix`] — splice fetched blocks into the contiguous
+//!     `[L, len, Dm]` seed slabs `TinyLmRuntime::prefill_last_seeded`
+//!     installs (admission path).
+
+use std::sync::Arc;
+
+pub use crate::engine::prefix::{model_chain_seed, prompt_block_keys_seeded, BlockKey};
+
+/// Geometry of the KV tensors a pool stores — everything needed to check a
+/// block against the consuming runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvBlockShape {
+    pub n_layers: usize,
+    /// Tokens per block (must match the hash chunking).
+    pub block_tokens: usize,
+    /// Per-position row width, `n_heads * head_dim`.
+    pub d_model: usize,
+}
+
+impl KvBlockShape {
+    /// Floats per block in each of K and V.
+    pub fn floats_per_side(&self) -> usize {
+        self.n_layers * self.block_tokens * self.d_model
+    }
+}
+
+/// One content-addressed block of real KV data. Layout per side:
+/// `[n_layers, block_tokens, d_model]` flattened, layer-major — i.e. layer
+/// `l`'s rows for positions `p0..p0+block_tokens` are contiguous.
+#[derive(Debug, Clone)]
+pub struct KvBlockData {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl KvBlockData {
+    pub fn matches(&self, shape: &KvBlockShape) -> bool {
+        let n = shape.floats_per_side();
+        self.k.len() == n && self.v.len() == n
+    }
+}
+
+/// Cut block `block_idx` of batch row `b` out of flat `[L, B, Smax, Dm]`
+/// caches (the runtime's `PrefillOut`/`DecodeOut` tensors). The block
+/// covers absolute positions `block_idx*bt .. (block_idx+1)*bt`, which must
+/// lie inside `max_seq`.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_block(
+    k_cache: &[f32],
+    v_cache: &[f32],
+    shape: &KvBlockShape,
+    batch: usize,
+    max_seq: usize,
+    b: usize,
+    block_idx: usize,
+) -> KvBlockData {
+    let (bt, dm) = (shape.block_tokens, shape.d_model);
+    let p0 = block_idx * bt;
+    assert!(p0 + bt <= max_seq, "block {block_idx} beyond cache seq {max_seq}");
+    let n = shape.floats_per_side();
+    let mut k = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for layer in 0..shape.n_layers {
+        let row_base = ((layer * batch + b) * max_seq + p0) * dm;
+        k.extend_from_slice(&k_cache[row_base..row_base + bt * dm]);
+        v.extend_from_slice(&v_cache[row_base..row_base + bt * dm]);
+    }
+    KvBlockData { k, v }
+}
+
+/// Splice `blocks` (a contiguous chain starting at position 0) into the
+/// `[L, len, Dm]` seed slabs the runtime installs before a seeded prefill.
+/// Returns `(k_slab, v_slab)` with `len = blocks.len() * block_tokens`.
+pub fn assemble_prefix(blocks: &[Arc<KvBlockData>], shape: &KvBlockShape) -> (Vec<f32>, Vec<f32>) {
+    let (bt, dm) = (shape.block_tokens, shape.d_model);
+    let len = blocks.len() * bt;
+    let mut k = Vec::with_capacity(shape.n_layers * len * dm);
+    let mut v = Vec::with_capacity(shape.n_layers * len * dm);
+    for layer in 0..shape.n_layers {
+        let side = layer * bt * dm;
+        for block in blocks {
+            debug_assert!(block.matches(shape), "block shape mismatch");
+            k.extend_from_slice(&block.k[side..side + bt * dm]);
+            v.extend_from_slice(&block.v[side..side + bt * dm]);
+        }
+    }
+    (k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SHAPE: KvBlockShape = KvBlockShape { n_layers: 2, block_tokens: 2, d_model: 3 };
+
+    /// A fake [L=2, B=2, Smax=6, Dm=3] cache where every float encodes its
+    /// own (layer, row, position, dim) coordinates.
+    fn coord_cache(tag: f32) -> Vec<f32> {
+        let (layers, batch, max_seq, dm) = (2, 2, 6, 3);
+        let mut c = vec![0.0; layers * batch * max_seq * dm];
+        for l in 0..layers {
+            for b in 0..batch {
+                for p in 0..max_seq {
+                    for d in 0..dm {
+                        c[((l * batch + b) * max_seq + p) * dm + d] =
+                            tag + (l * 1000 + b * 100 + p * 10 + d) as f32;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn extract_then_assemble_round_trips() {
+        let k_cache = coord_cache(0.0);
+        let v_cache = coord_cache(0.5);
+        // Blocks 0 and 1 of row 1 cover positions 0..2 and 2..4.
+        let blocks: Vec<Arc<KvBlockData>> = (0..2)
+            .map(|i| Arc::new(extract_block(&k_cache, &v_cache, &SHAPE, 2, 6, 1, i)))
+            .collect();
+        assert!(blocks.iter().all(|b| b.matches(&SHAPE)));
+        let (k_slab, v_slab) = assemble_prefix(&blocks, &SHAPE);
+        // Slab layout [L, len=4, Dm]: layer l, position p, dim d.
+        for l in 0..2 {
+            for p in 0..4 {
+                for d in 0..3 {
+                    let got = k_slab[(l * 4 + p) * 3 + d];
+                    let want = (l * 1000 + 100 + p * 10 + d) as f32;
+                    assert_eq!(got, want, "k at l={l} p={p} d={d}");
+                    assert_eq!(v_slab[(l * 4 + p) * 3 + d], want + 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let short = KvBlockData { k: vec![0.0; 5], v: vec![0.0; 5] };
+        assert!(!short.matches(&SHAPE));
+    }
+}

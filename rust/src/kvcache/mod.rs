@@ -14,10 +14,17 @@
 //!   * [`pool`] — the multi-node DRAM pool with a global (async-updated)
 //!     metadata index, shared-memory vs cross-node transfer costing, and
 //!     redundant-transfer dedup. It implements `engine::ExternalKv` so the
-//!     engine simulator plugs it in at admission/completion.
+//!     engine simulator plugs it in at admission/completion, and exposes a
+//!     data tier (`lookup_blocks`/`insert_blocks`) holding real K/V tensors
+//!     for the real serving path;
+//!   * [`blocks`] — the content-addressed real-KV block format (model-
+//!     seeded chain hashing shared with `engine::prefix`) plus the
+//!     extract/assemble helpers between runtime cache tensors and blocks.
 
+pub mod blocks;
 pub mod eviction;
 pub mod pool;
 
+pub use blocks::{KvBlockData, KvBlockShape};
 pub use eviction::{EvictionKind, EvictionPolicy, Fifo, Lru, S3Fifo};
 pub use pool::{DistKvPool, KvPoolConfig, PoolStats};

@@ -15,7 +15,9 @@
 //! admission (lookup) and completion (write-back insert).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use super::blocks::{KvBlockData, KvBlockShape};
 use super::eviction::{EvictionKind, EvictionPolicy};
 use crate::engine::{ExternalKv, KvFetch};
 use crate::sim::SimTime;
@@ -102,6 +104,20 @@ pub struct DistKvPool {
     cfg: KvPoolConfig,
     index: HashMap<BlockKey, Entry>,
     shards: HashMap<u64, NodeShard>,
+    /// Data tier ([`super::blocks`]): the real K/V tensors, present for
+    /// blocks inserted through [`DistKvPool::insert_blocks`] (the real
+    /// serving path). Metadata-only inserts (the simulator's `ExternalKv`
+    /// hook) leave no entry here. Invariant: `store` keys ⊆ `index` keys —
+    /// eviction and replacement drop both together.
+    store: HashMap<BlockKey, Arc<KvBlockData>>,
+    /// Expected geometry of stored blocks; set once by the first real
+    /// consumer, then enforced on every data-bearing insert.
+    shape: Option<KvBlockShape>,
+    /// Construction instant: the shared zero of the real path's µs
+    /// visibility clock. Lives on the pool (not on consumer hooks) so
+    /// every hook ever created over this pool — however late — stamps
+    /// and reads `visible_at` against the same epoch. Sim users ignore it.
+    epoch: std::time::Instant,
     pub stats: PoolStats,
 }
 
@@ -114,11 +130,39 @@ impl DistKvPool {
                 (node, NodeShard { capacity, used: 0, policy: cfg.eviction.build() })
             })
             .collect();
-        DistKvPool { cfg, index: HashMap::new(), shards, stats: PoolStats::default() }
+        DistKvPool {
+            cfg,
+            index: HashMap::new(),
+            shards,
+            store: HashMap::new(),
+            shape: None,
+            epoch: std::time::Instant::now(),
+            stats: PoolStats::default(),
+        }
     }
 
     pub fn config(&self) -> &KvPoolConfig {
         &self.cfg
+    }
+
+    /// The shared zero of this pool's wall-clock (µs) timeline.
+    pub fn epoch(&self) -> std::time::Instant {
+        self.epoch
+    }
+
+    /// Declare the KV geometry this pool stores. First caller wins; later
+    /// callers must agree (two model shapes cannot share one pool).
+    pub fn set_shape(&mut self, shape: KvBlockShape) {
+        match self.shape {
+            None => self.shape = Some(shape),
+            Some(existing) => {
+                assert_eq!(existing, shape, "pool shape mismatch across consumers")
+            }
+        }
+    }
+
+    pub fn shape(&self) -> Option<KvBlockShape> {
+        self.shape
     }
 
     /// Total resident bytes.
@@ -134,8 +178,32 @@ impl DistKvPool {
         self.index.len()
     }
 
+    /// Blocks whose real KV data is resident (the data tier).
+    pub fn data_blocks(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Is `key` resident (visible or not)?
+    pub fn contains(&self, key: BlockKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Is `key` resident *with* real tensors (visible or not)? Writers use
+    /// this to skip redundant write-backs: a block whose data is already
+    /// in the pool gains nothing from re-insertion (and, with dedup off,
+    /// would have its visibility clock churned).
+    pub fn has_data(&self, key: BlockKey) -> bool {
+        self.store.contains_key(&key)
+    }
+
+    /// Bytes resident on one node's shard (placement observability).
+    pub fn node_used_bytes(&self, node: u64) -> u64 {
+        self.shards.get(&node).map(|s| s.used).unwrap_or(0)
+    }
+
     /// Pick the shard for a new block: the inserting node if it has a shard
-    /// (colocation), else the least-utilized shard.
+    /// (colocation), else the least-utilized shard (ties to the lowest node
+    /// id, keeping placement deterministic).
     fn placement(&self, writer: u64) -> Option<u64> {
         if self.shards.contains_key(&writer) {
             return Some(writer);
@@ -145,7 +213,7 @@ impl DistKvPool {
             .min_by(|a, b| {
                 let ua = a.1.used as f64 / a.1.capacity.max(1) as f64;
                 let ub = b.1.used as f64 / b.1.capacity.max(1) as f64;
-                ua.partial_cmp(&ub).unwrap()
+                ua.partial_cmp(&ub).unwrap().then(a.0.cmp(b.0))
             })
             .map(|(id, _)| *id)
     }
@@ -155,6 +223,7 @@ impl DistKvPool {
         if let Some(victim) = shard.policy.evict() {
             shard.used = shard.used.saturating_sub(self.cfg.block_bytes());
             self.index.remove(&victim);
+            self.store.remove(&victim);
             self.stats.evictions += 1;
             true
         } else {
@@ -162,8 +231,9 @@ impl DistKvPool {
         }
     }
 
-    /// Consistency: index size == sum of per-shard policy sizes, and used
-    /// bytes == blocks * block_bytes.
+    /// Consistency: index size == sum of per-shard policy sizes, used bytes
+    /// == blocks * block_bytes, no shard over capacity, and every
+    /// data-tier entry has a live index entry.
     pub fn check_invariants(&self) -> bool {
         let policy_total: usize = self.shards.values().map(|s| s.policy.len()).sum();
         if policy_total != self.index.len() {
@@ -172,21 +242,37 @@ impl DistKvPool {
         let used: u64 = self.used_bytes();
         used == self.index.len() as u64 * self.cfg.block_bytes()
             && self.shards.values().all(|s| s.used <= s.capacity)
+            && self.store.keys().all(|k| self.index.contains_key(k))
     }
-}
 
-impl ExternalKv for DistKvPool {
-    /// Longest visible prefix of `keys`; cost = bytes over shm (colocated)
-    /// or network (remote), whichever each block needs.
-    fn lookup(&mut self, now: SimTime, node: u64, keys: &[BlockKey]) -> KvFetch {
+    // ------------------------------------------------------ shared paths
+
+    /// Longest visible prefix walk shared by the metadata [`ExternalKv`]
+    /// lookup and the data-tier [`DistKvPool::lookup_blocks`]. With
+    /// `need_data`, an entry that is visible but holds no real tensors ends
+    /// the walk — a seeded prefill cannot skip past it.
+    fn lookup_inner(
+        &mut self,
+        now: SimTime,
+        node: u64,
+        keys: &[BlockKey],
+        need_data: bool,
+    ) -> (KvFetch, Vec<Arc<KvBlockData>>) {
         self.stats.lookups += 1;
         self.stats.blocks_requested += keys.len() as u64;
         let mut local = 0u64;
         let mut remote = 0u64;
         let mut hit = 0usize;
+        let mut data = Vec::new();
         for key in keys {
             match self.index.get(key) {
                 Some(e) if e.visible_at <= now => {
+                    if need_data {
+                        match self.store.get(key) {
+                            Some(d) => data.push(Arc::clone(d)),
+                            None => break,
+                        }
+                    }
                     if e.node == node {
                         local += 1;
                     } else {
@@ -209,47 +295,129 @@ impl ExternalKv for DistKvPool {
             + remote as f64 * bb / (self.cfg.net_gbps * 1e9))
             * 1e6;
         self.stats.bytes_transferred += (local + remote) * self.cfg.block_bytes();
-        KvFetch { blocks_hit: hit, fetch_us: fetch_us as u64 }
+        (KvFetch { blocks_hit: hit, fetch_us: fetch_us as u64 }, data)
     }
 
-    /// Write-back of freshly computed prefix blocks. Asynchronous from the
-    /// engine's perspective: no cost charged to the request; visibility is
-    /// delayed by `metadata_delay_us`.
-    fn insert(&mut self, now: SimTime, node: u64, keys: &[BlockKey], _block_tokens: usize) {
-        let Some(target_default) = self.placement(node) else { return };
-        for key in keys {
-            self.stats.inserts += 1;
-            if self.cfg.dedup && self.index.contains_key(key) {
-                self.stats.inserts_deduped += 1;
-                continue;
+    /// Insert one block (metadata, optionally with real tensors), going
+    /// through placement, capacity/eviction and the visibility clock.
+    fn insert_inner(
+        &mut self,
+        now: SimTime,
+        node: u64,
+        key: BlockKey,
+        data: Option<Arc<KvBlockData>>,
+    ) {
+        self.stats.inserts += 1;
+        if self.cfg.dedup && self.index.contains_key(&key) {
+            self.stats.inserts_deduped += 1;
+            // Backfill: a metadata-only resident entry learns its tensors
+            // from a redundant data-bearing insert. No accounting change,
+            // and the original visibility clock stands.
+            if let Some(d) = data {
+                self.store.entry(key).or_insert(d);
             }
-            let target = target_default;
-            // Make room.
-            let bb = self.cfg.block_bytes();
-            loop {
-                let shard = self.shards.get_mut(&target).unwrap();
-                if shard.used + bb <= shard.capacity {
-                    break;
-                }
-                if !self.evict_from(target) {
-                    return; // block bigger than shard; drop
-                }
-            }
-            // Without dedup, a re-insert replaces the old entry (and the old
-            // copy's bytes must be accounted out first).
-            if let Some(old) = self.index.remove(key) {
-                if let Some(old_shard) = self.shards.get_mut(&old.node) {
-                    old_shard.used = old_shard.used.saturating_sub(bb);
-                    old_shard.policy.remove(*key);
-                }
-            }
+            return;
+        }
+        let bb = self.cfg.block_bytes();
+        // Placement is recomputed per block (not once per insert call):
+        // utilization shifts as each block of a multi-block write-back
+        // lands, so a shard-less writer spreads across the pool instead of
+        // hot-spotting whichever node was least utilized at call time.
+        let Some(target) = self.placement(node) else { return };
+        // Without dedup a re-insert replaces the old entry. An old copy in
+        // the *target* shard is accounted out before the make-room loop
+        // (re-inserting into a full shard must reclaim its own bytes, not
+        // evict an innocent victim); having fit there once, the new copy
+        // then always fits. An old copy elsewhere is freed only after the
+        // make-room loop succeeds, so a failed insert (block bigger than
+        // the target shard) never destroys the resident copy.
+        let old_node = self.index.get(&key).map(|e| e.node);
+        if old_node == Some(target) {
+            self.remove_resident(key, target, bb);
+        }
+        loop {
             let shard = self.shards.get_mut(&target).unwrap();
-            shard.used += bb;
-            shard.policy.on_insert(*key);
-            self.index.insert(
-                *key,
-                Entry { node: target, visible_at: now + self.cfg.metadata_delay_us },
-            );
+            if shard.used + bb <= shard.capacity {
+                break;
+            }
+            if !self.evict_from(target) {
+                return; // block bigger than shard; drop (old copy intact)
+            }
+        }
+        if let Some(old) = old_node {
+            if old != target {
+                self.remove_resident(key, old, bb);
+            }
+        }
+        let shard = self.shards.get_mut(&target).unwrap();
+        shard.used += bb;
+        shard.policy.on_insert(key);
+        if let Some(d) = data {
+            self.store.insert(key, d);
+        }
+        self.index
+            .insert(key, Entry { node: target, visible_at: now + self.cfg.metadata_delay_us });
+    }
+
+    /// Drop `key`'s resident copy from `node`'s shard, the index and the
+    /// data tier (replacement bookkeeping — not an eviction).
+    fn remove_resident(&mut self, key: BlockKey, node: u64, bb: u64) {
+        self.index.remove(&key);
+        if let Some(shard) = self.shards.get_mut(&node) {
+            shard.used = shard.used.saturating_sub(bb);
+            shard.policy.remove(key);
+        }
+        self.store.remove(&key);
+    }
+
+    // ----------------------------------------------------- data-tier API
+
+    /// Longest visible *data-bearing* prefix of `keys`: the fetched K/V
+    /// blocks (cheap `Arc` clones) plus the same transfer costing and stats
+    /// accounting as the metadata lookup.
+    pub fn lookup_blocks(
+        &mut self,
+        now: SimTime,
+        node: u64,
+        keys: &[BlockKey],
+    ) -> (KvFetch, Vec<Arc<KvBlockData>>) {
+        self.lookup_inner(now, node, keys, true)
+    }
+
+    /// Write back freshly computed blocks *with their tensors*. Placement,
+    /// dedup, eviction and the metadata visibility delay all apply exactly
+    /// as in the metadata-only [`ExternalKv::insert`].
+    pub fn insert_blocks(
+        &mut self,
+        now: SimTime,
+        node: u64,
+        items: &[(BlockKey, Arc<KvBlockData>)],
+    ) {
+        if let Some(shape) = self.shape {
+            for (key, d) in items {
+                assert!(d.matches(&shape), "block {key:#x} has wrong KV shape");
+            }
+        }
+        for (key, d) in items {
+            self.insert_inner(now, node, *key, Some(Arc::clone(d)));
+        }
+    }
+}
+
+impl ExternalKv for DistKvPool {
+    /// Longest visible prefix of `keys`; cost = bytes over shm (colocated)
+    /// or network (remote), whichever each block needs.
+    fn lookup(&mut self, now: SimTime, node: u64, keys: &[BlockKey]) -> KvFetch {
+        self.lookup_inner(now, node, keys, false).0
+    }
+
+    /// Write-back of freshly computed prefix blocks (metadata only — the
+    /// simulator's path). Asynchronous from the engine's perspective: no
+    /// cost charged to the request; visibility is delayed by
+    /// `metadata_delay_us`.
+    fn insert(&mut self, now: SimTime, node: u64, keys: &[BlockKey], _block_tokens: usize) {
+        for key in keys {
+            self.insert_inner(now, node, *key, None);
         }
     }
 }
@@ -409,5 +577,147 @@ mod tests {
         p.insert(0, 0, &[1, 2], 16);
         p.lookup(100_000, 0, &[1, 2, 3, 4]); // 2/4
         assert!((p.stats.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dedup_off_reinsert_reclaims_own_bytes_first() {
+        // Regression: the shard holds exactly one block and key 7 is
+        // resident. Re-inserting key 7 with dedup off must replace it in
+        // place — the old copy's bytes are freed *before* the make-room
+        // loop, so nothing is evicted and nothing churns.
+        let mut cfg = KvPoolConfig::new(vec![(0, 8 << 20)], 524_288, 16); // cap = 1 block
+        cfg.dedup = false;
+        let mut p = DistKvPool::new(cfg);
+        p.insert(0, 0, &[7], 16);
+        assert_eq!(p.resident_blocks(), 1);
+        p.insert(10, 0, &[7], 16);
+        assert_eq!(p.stats.evictions, 0, "re-insert must reclaim its own bytes");
+        assert_eq!(p.resident_blocks(), 1);
+        assert_eq!(p.lookup(10 + 50_000, 0, &[7]).blocks_hit, 1, "clock restarted, key kept");
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn dedup_off_reinsert_spares_innocent_residents() {
+        // Same bug, two-key form: a full 2-block shard holds {7, 8};
+        // re-inserting 7 must not push 8 out.
+        let mut cfg = KvPoolConfig::new(vec![(0, 16 << 20)], 524_288, 16); // cap = 2 blocks
+        cfg.dedup = false;
+        let mut p = DistKvPool::new(cfg);
+        p.insert(0, 0, &[7, 8], 16);
+        p.insert(10, 0, &[7], 16);
+        assert_eq!(p.stats.evictions, 0);
+        assert_eq!(p.lookup(100_000, 0, &[8]).blocks_hit, 1, "8 must survive 7's re-insert");
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn dedup_off_failed_reinsert_keeps_resident_copy() {
+        // The re-insert target (writer 1's colocated shard) is smaller
+        // than one block, so the insert must drop — but the old copy on
+        // node 0 has to survive, not vanish with the failed replacement.
+        let mut cfg =
+            KvPoolConfig::new(vec![(0, 64 << 20), (1, 1 << 20)], 524_288, 16); // node 1 < 1 block
+        cfg.dedup = false;
+        let mut p = DistKvPool::new(cfg);
+        p.insert(0, 0, &[7], 16);
+        p.insert(10, 1, &[7], 16); // colocation targets node 1; can never fit
+        assert_eq!(p.resident_blocks(), 1, "old copy must survive the failed insert");
+        assert_eq!(p.lookup(100_000, 0, &[7]).blocks_hit, 1);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn shardless_writeback_balances_across_nodes() {
+        // Regression: a shard-less writer's multi-block insert must
+        // recompute placement per block — one 8-block write-back ends with
+        // both nodes holding 4 blocks, not one node holding all 8.
+        let mut p = pool(2, 4);
+        let keys: Vec<u64> = (1..=8).collect();
+        p.insert(0, 99, &keys, 16);
+        assert_eq!(p.resident_blocks(), 8);
+        let bb = p.config().block_bytes();
+        assert_eq!(p.node_used_bytes(0), 4 * bb, "node 0 takes half");
+        assert_eq!(p.node_used_bytes(1), 4 * bb, "node 1 takes half");
+        assert!(p.check_invariants());
+    }
+
+    // ------------------------------------------------------- data tier
+
+    use crate::kvcache::blocks::{KvBlockData, KvBlockShape};
+
+    const SHAPE: KvBlockShape = KvBlockShape { n_layers: 2, block_tokens: 4, d_model: 8 };
+
+    fn data_block(fill: f32) -> Arc<KvBlockData> {
+        let n = SHAPE.floats_per_side();
+        Arc::new(KvBlockData { k: vec![fill; n], v: vec![-fill; n] })
+    }
+
+    #[test]
+    fn data_blocks_round_trip_with_visibility() {
+        let mut p = pool(2, 4);
+        p.set_shape(SHAPE);
+        let items = vec![(1u64, data_block(1.0)), (2u64, data_block(2.0))];
+        p.insert_blocks(0, 0, &items);
+        // Not visible yet: no data comes back.
+        let (f, blocks) = p.lookup_blocks(10, 0, &[1, 2]);
+        assert_eq!(f.blocks_hit, 0);
+        assert!(blocks.is_empty());
+        // Visible after the delay; fetched tensors are the inserted bits.
+        let (f, blocks) = p.lookup_blocks(60_000, 1, &[1, 2]);
+        assert_eq!(f.blocks_hit, 2);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].k[0], 1.0);
+        assert_eq!(blocks[1].v[0], -2.0);
+        assert_eq!(p.stats.blocks_hit_remote, 2, "node 1 fetched node 0's blocks");
+        assert_eq!(p.data_blocks(), 2);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn data_lookup_stops_at_metadata_only_entry() {
+        // Block 2 is known to the index (sim-style metadata insert) but has
+        // no tensors; a data lookup must stop there even though a metadata
+        // lookup would keep walking.
+        let mut p = pool(1, 4);
+        p.set_shape(SHAPE);
+        p.insert_blocks(0, 0, &[(1u64, data_block(1.0))]);
+        p.insert(0, 0, &[2], 16); // metadata only
+        p.insert_blocks(0, 0, &[(3u64, data_block(3.0))]);
+        let (f, blocks) = p.lookup_blocks(100_000, 0, &[1, 2, 3]);
+        assert_eq!(f.blocks_hit, 1, "data walk ends at the tensor-less block");
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(p.lookup(200_000, 0, &[1, 2, 3]).blocks_hit, 3, "metadata walk spans all");
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn dedup_backfills_data_onto_metadata_entry() {
+        let mut p = pool(1, 4);
+        p.set_shape(SHAPE);
+        p.insert(0, 0, &[9], 16); // metadata only
+        p.insert_blocks(10, 0, &[(9u64, data_block(9.0))]); // deduped, data kept
+        assert_eq!(p.stats.inserts_deduped, 1);
+        assert_eq!(p.data_blocks(), 1);
+        // Visibility clock of the original insert stands.
+        let (f, blocks) = p.lookup_blocks(50_000, 0, &[9]);
+        assert_eq!(f.blocks_hit, 1);
+        assert_eq!(blocks[0].k[0], 9.0);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn eviction_drops_data_with_metadata() {
+        // 64 MiB shard = 8 blocks; 20 data inserts force 12+ evictions and
+        // the data tier must shrink in lockstep with the index.
+        let mut p = DistKvPool::new(KvPoolConfig::new(vec![(0, 64 << 20)], 524_288, 16));
+        p.set_shape(SHAPE);
+        let items: Vec<(u64, Arc<KvBlockData>)> =
+            (0..20).map(|i| (i as u64 + 1, data_block(i as f32))).collect();
+        p.insert_blocks(0, 0, &items);
+        assert!(p.resident_blocks() <= 8);
+        assert_eq!(p.data_blocks(), p.resident_blocks());
+        assert!(p.stats.evictions >= 12);
+        assert!(p.check_invariants());
     }
 }

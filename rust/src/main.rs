@@ -17,8 +17,9 @@ use std::sync::{Arc, Mutex};
 use aibrix::cli::Args;
 use aibrix::cluster::GpuKind;
 use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
-use aibrix::engine::real::{RealEngineHandle, RealRequest};
+use aibrix::engine::real::{EnginePool, RealEngineHandle, RealRequest};
 use aibrix::engine::{EngineStats, ModelSpec};
+use aibrix::runtime::Manifest;
 use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
 use aibrix::gateway::{PodSnapshot, Policy, Router, ScoreCtx, TenantUsage};
 use aibrix::json::{parse, Json};
@@ -70,7 +71,8 @@ fn main() {
             eprintln!(
                 "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]\n\
                  routing flags: --policy <random|throughput|least-request|least-kv-cache|least-latency|prefix-cache-aware[=t]|weighted:k=w,...>\n\
-                 \x20              --prefix-threshold <0..1>   (serve also: --replicas N --port P --artifacts DIR)"
+                 \x20              --prefix-threshold <0..1>\n\
+                 serve flags:   --replicas N --port P --artifacts DIR --kv-pool [--kv-pool-mb MB]"
             );
             2
         }
@@ -169,7 +171,10 @@ fn bench_routing_inner(args: &Args) -> Result<(), String> {
 
 /// Real serving: HTTP front over dedicated engine threads behind the
 /// scoring-pipeline router, an OpenAI-ish /v1/completions surface plus
-/// /metrics, /policy and /healthz.
+/// /metrics, /policy and /healthz. With `--kv-pool`, the replicas share a
+/// distributed KV pool (one shard per replica): admission seeds prefill
+/// from any replica's write-backs, so multi-turn or templated prompts pay
+/// prefill compute once cluster-wide (§3.2.5 on the real path).
 fn cmd_serve(args: &Args) -> i32 {
     let artifacts = PathBuf::from(args.str_flag("artifacts").unwrap_or("artifacts"));
     // Flag parse failures are hard errors: serving with a silently
@@ -183,9 +188,26 @@ fn cmd_serve(args: &Args) -> i32 {
                 return Err("--replicas must be >= 1".to_string());
             }
             let policy = policy_from_flags(args, "least-request")?;
-            Ok((port, replicas, policy))
+            // Per-replica shard size: `--kv-pool-mb N`, or `--kv-pool N`
+            // shorthand (a bare `--kv-pool` switch takes the default) —
+            // a supplied size must never be silently ignored.
+            let pool_mb = match args.str_flag("kv-pool-mb").or_else(|| args.str_flag("kv-pool")) {
+                Some(v) => {
+                    let mb = v
+                        .parse::<u64>()
+                        .map_err(|e| format!("kv-pool size {v:?} is not a number: {e}"))?;
+                    if mb == 0 {
+                        return Err("kv-pool size must be >= 1 MiB (a 0-byte shard can \
+                                    never hold a block)"
+                            .to_string());
+                    }
+                    mb
+                }
+                None => 256,
+            };
+            Ok((port, replicas, policy, pool_mb))
         });
-    let (port, n_replicas, policy) = match parsed {
+    let (port, n_replicas, policy, pool_mb) = match parsed {
         Ok(t) => t,
         Err(e) => {
             eprintln!("error: {e}");
@@ -193,9 +215,27 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
 
+    let want_pool = args.has("kv-pool")
+        || args.str_flag("kv-pool").is_some()
+        || args.str_flag("kv-pool-mb").is_some();
+    let pool_hook = if want_pool {
+        // Pool geometry comes from the manifest via EnginePool::for_model
+        // (block = one runtime page, bytes/token from the KV layout).
+        match Manifest::load(&artifacts) {
+            Ok(m) => Some(EnginePool::for_model(&m.cfg, "tinylm", n_replicas, pool_mb << 20)),
+            Err(e) => {
+                eprintln!("--kv-pool needs readable artifacts at {artifacts:?}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+
     let mut replicas = Vec::new();
-    for _ in 0..n_replicas {
-        match RealEngineHandle::spawn(&artifacts) {
+    for node in 0..n_replicas {
+        let hook = pool_hook.as_ref().map(|h| h.for_node(node as u64));
+        match RealEngineHandle::spawn_with_pool(&artifacts, hook) {
             Ok(e) => replicas.push(e),
             Err(e) => {
                 eprintln!(
@@ -207,11 +247,12 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let engine0 = &replicas[0];
     println!(
-        "loaded tinylm x{n_replicas}: vocab={} max_prompt={} max_new={}  policy={}",
+        "loaded tinylm x{n_replicas}: vocab={} max_prompt={} max_new={}  policy={}  kv-pool={}",
         engine0.vocab,
         engine0.max_prompt,
         engine0.max_new_tokens,
-        policy.name()
+        policy.name(),
+        if pool_hook.is_some() { format!("{pool_mb}MiB/replica") } else { "off".into() }
     );
     let max_prompt = engine0.max_prompt;
     let max_new = engine0.max_new_tokens;
@@ -224,8 +265,14 @@ fn cmd_serve(args: &Args) -> i32 {
         Arc::new((0..n_replicas).map(|_| AtomicUsize::new(0)).collect());
     let router = Arc::new(Mutex::new(Router::new(policy, 0xA1B)));
     // Decayed per-tenant token meter: feeds the fairness scorer exactly as
-    // the sim gateway does (wall-clock µs since server start).
+    // the sim gateway does (wall-clock µs since server start). Charged at
+    // *completion* with served tokens, not at admission with promises.
     let usage = Arc::new(Mutex::new(TenantUsage::default()));
+    // Per-tenant routed-request counts per replica (bounded): the routing
+    // skew signal /metrics surfaces.
+    let tenant_routed: Arc<Mutex<std::collections::BTreeMap<u32, Vec<u64>>>> =
+        Arc::new(Mutex::new(std::collections::BTreeMap::new()));
+    const MAX_TRACKED_TENANTS: usize = 256;
     let t_start = std::time::Instant::now();
     let replicas = Arc::new(replicas);
 
@@ -254,6 +301,49 @@ fn cmd_serve(args: &Args) -> i32 {
                         "aibrix_inflight_requests{{replica=\"{i}\"}} {}\n",
                         c.load(Ordering::Relaxed)
                     ));
+                }
+                // Shared KV pool counters (present with --kv-pool).
+                if let Some(ps) = replicas[0].pool_stats() {
+                    body.push_str(&format!("aibrix_kvpool_lookups_total {}\n", ps.lookups));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_blocks_hit_local_total {}\n",
+                        ps.blocks_hit_local
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_blocks_hit_remote_total {}\n",
+                        ps.blocks_hit_remote
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_inserts_deduped_total {}\n",
+                        ps.inserts_deduped
+                    ));
+                    body.push_str(&format!("aibrix_kvpool_evictions_total {}\n", ps.evictions));
+                    body.push_str(&format!("aibrix_kvpool_hit_rate {:.6}\n", ps.hit_rate()));
+                }
+                // Per-tenant fairness: decayed served-token share plus
+                // routing skew (largest replica fraction of the tenant's
+                // requests; 1/replicas = perfectly spread, 1.0 = pinned).
+                let now_us = t_start.elapsed().as_micros() as u64;
+                let meter = usage.lock().unwrap();
+                for (user, counts) in tenant_routed.lock().unwrap().iter() {
+                    let total: u64 = counts.iter().sum();
+                    if total == 0 {
+                        continue;
+                    }
+                    let peak = counts.iter().copied().max().unwrap_or(0);
+                    body.push_str(&format!(
+                        "aibrix_tenant_share{{tenant=\"{user}\"}} {:.6}\n",
+                        meter.share(now_us, *user)
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_tenant_routing_skew{{tenant=\"{user}\"}} {:.6}\n",
+                        peak as f64 / total as f64
+                    ));
+                    for (i, c) in counts.iter().enumerate() {
+                        body.push_str(&format!(
+                            "aibrix_tenant_routed_total{{tenant=\"{user}\",replica=\"{i}\"}} {c}\n"
+                        ));
+                    }
                 }
                 HttpResponse::text(200, &body)
             }
@@ -319,15 +409,24 @@ fn cmd_serve(args: &Args) -> i32 {
                     inflight[p].fetch_add(1, Ordering::Relaxed);
                     p
                 };
-                usage
-                    .lock()
-                    .unwrap()
-                    .record(now_us, user, (prompt_tokens + max_tokens) as u64);
+                {
+                    let mut routed = tenant_routed.lock().unwrap();
+                    if routed.len() < MAX_TRACKED_TENANTS || routed.contains_key(&user) {
+                        routed.entry(user).or_insert_with(|| vec![0u64; n_replicas])[pick] += 1;
+                    }
+                }
                 let completion =
                     replicas[pick].serve(RealRequest { id, tokens, max_new_tokens: max_tokens });
                 inflight[pick].fetch_sub(1, Ordering::Relaxed);
                 match completion {
                     Ok(c) => {
+                        // Fairness meter: charge the tokens actually served
+                        // (prompt + generated), at completion time.
+                        usage.lock().unwrap().record(
+                            t_start.elapsed().as_micros() as u64,
+                            user,
+                            (prompt_tokens + c.generated.len()) as u64,
+                        );
                         *served.lock().unwrap() += 1;
                         let text = tokenizer.decode(&c.generated);
                         let out = Json::obj([

@@ -299,6 +299,36 @@ impl<'a> RawSlice<'a> {
     }
 }
 
+/// Install a fetched KV prefix into one batch row's cache slabs: `slab` is
+/// the contiguous `[n_layers, len, dm]` seed (the layout
+/// `kvcache::blocks::assemble_prefix` produces) and lands at positions
+/// `0..len` of row `b` in the flat `[L, B, Smax, Dm]` cache behind `raw`.
+/// One contiguous copy per layer — the seeded-prefill fast path pays a
+/// memcpy where a cold prefill pays `forward_row` compute.
+///
+/// Caller must hold worker exclusivity over row `b`'s `(layer, b)` slabs,
+/// the same contract as `forward_row`'s cache writes.
+#[allow(clippy::too_many_arguments)]
+pub fn install_kv(
+    slab: &[f32],
+    raw: &RawSlice<'_>,
+    n_layers: usize,
+    batch: usize,
+    b: usize,
+    max_seq: usize,
+    dm: usize,
+    len: usize,
+) {
+    debug_assert_eq!(slab.len(), n_layers * len * dm, "seed slab shape mismatch");
+    for layer in 0..n_layers {
+        let row_base = (layer * batch + b) * max_seq * dm;
+        // SAFETY: worker `b` is the only thread touching the (layer, b)
+        // slabs (caller contract), and positions 0..len are in bounds.
+        let dst = unsafe { raw.range_mut(row_base, len * dm) };
+        dst.copy_from_slice(&slab[layer * len * dm..(layer + 1) * len * dm]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

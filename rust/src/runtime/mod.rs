@@ -83,6 +83,15 @@ pub struct ModelCfg {
     pub page_size: usize,
 }
 
+impl ModelCfg {
+    /// Bytes of KV cache per token under this runtime's layout: one K and
+    /// one V row of `d_model` f32s per layer. The single source of truth
+    /// for sizing KV-pool shards (serve, serve_e2e, kvpool bench).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (self.n_layers * self.d_model * 2 * std::mem::size_of::<f32>()) as u64
+    }
+}
+
 #[derive(Debug, Clone)]
 struct ParamEntry {
     name: String,
@@ -246,6 +255,19 @@ impl PrefillLastOut {
     }
 }
 
+/// A fetched KV prefix to install before a seeded prefill: `len` cached
+/// positions (0 = cold row, the default) and the `[n_layers, len, d_model]`
+/// K/V slabs in the layout `kvcache::blocks::assemble_prefix` produces.
+/// Because the slabs were computed by the same bit-exact kernels over the
+/// same token prefix at the same absolute positions, installing them and
+/// computing only the suffix reproduces a cold prefill bit for bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeededPrefix<'a> {
+    pub len: usize,
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+}
+
 /// Output of one decode step.
 pub struct DecodeOut {
     /// [B][V] logits.
@@ -341,6 +363,8 @@ struct RtCounters {
     decode_calls: AtomicU64,
     decode_tokens: AtomicU64,
     decode_us: AtomicU64,
+    seeded_prefill_rows: AtomicU64,
+    seeded_prefill_tokens: AtomicU64,
 }
 
 /// Snapshot of runtime telemetry — the base quantities the BENCH pipeline
@@ -355,6 +379,11 @@ pub struct RtStats {
     /// Decoded tokens (active rows x steps).
     pub decode_tokens: u64,
     pub decode_us: u64,
+    /// Rows whose prefill was seeded from the distributed KV pool.
+    pub seeded_prefill_rows: u64,
+    /// Prefill positions installed from fetched KV instead of computed —
+    /// the compute the pool saved this runtime.
+    pub seeded_prefill_tokens: u64,
 }
 
 impl RtStats {
@@ -566,6 +595,8 @@ impl TinyLmRuntime {
             decode_calls: c.decode_calls.load(Ordering::Relaxed),
             decode_tokens: c.decode_tokens.load(Ordering::Relaxed),
             decode_us: c.decode_us.load(Ordering::Relaxed),
+            seeded_prefill_rows: c.seeded_prefill_rows.load(Ordering::Relaxed),
+            seeded_prefill_tokens: c.seeded_prefill_tokens.load(Ordering::Relaxed),
         }
     }
 
@@ -578,6 +609,8 @@ impl TinyLmRuntime {
             &c.decode_calls,
             &c.decode_tokens,
             &c.decode_us,
+            &c.seeded_prefill_rows,
+            &c.seeded_prefill_tokens,
         ] {
             a.store(0, Ordering::Relaxed);
         }
@@ -783,12 +816,17 @@ impl TinyLmRuntime {
     /// ([B, S, V]); Some = logits only at `last[b]` per row ([B, V]).
     /// `active`: rows marked false (batch padding) are skipped entirely —
     /// their logits stay 0 and their cache rows stay zeroed.
+    /// `seeds`: per-row fetched KV prefixes — positions `0..seeds[b].len`
+    /// are installed into the caches instead of computed, and `forward_row`
+    /// covers only the suffix (requires `last` mode: cached positions have
+    /// no residuals to project logits from).
     fn prefill_impl(
         &self,
         batch: usize,
         tokens: &[i32],
         last: Option<&[usize]>,
         active: Option<&[bool]>,
+        seeds: Option<&[SeededPrefix<'_>]>,
     ) -> Result<(Vec<f32>, Tensor, Tensor, usize)> {
         let t_start = Instant::now();
         let seq = *self
@@ -834,6 +872,36 @@ impl TinyLmRuntime {
                 }
             }
         }
+        let seed_len = |b: usize| seeds.map(|s| s[b].len).unwrap_or(0);
+        if let Some(s) = seeds {
+            if s.len() != batch {
+                return Err(Error::msg("seed arity mismatch"));
+            }
+            let Some(l) = last else {
+                return Err(Error::msg("seeded prefill requires last-position mode"));
+            };
+            for b in 0..batch {
+                let sp = &s[b];
+                if sp.len == 0 || !is_active(b) {
+                    continue;
+                }
+                if sp.len > l[b] {
+                    return Err(Error::msg(format!(
+                        "seed covers {} positions but logits are needed at {} — the \
+                         last position must be computed, not installed",
+                        sp.len, l[b]
+                    )));
+                }
+                let want = cfg.n_layers * sp.len * cfg.d_model;
+                if sp.k.len() != want || sp.v.len() != want {
+                    return Err(Error::msg(format!(
+                        "seed slab for row {b} has {}/{} floats, want {want} per side",
+                        sp.k.len(),
+                        sp.v.len()
+                    )));
+                }
+            }
+        }
         let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
         let mut k_cache = Tensor::zeros(vec![cfg.n_layers, batch, cfg.max_seq, h, hd]);
         // A second zeros, not `k_cache.clone()` — cloning a zero tensor
@@ -854,21 +922,33 @@ impl TinyLmRuntime {
                     return;
                 }
                 let mut ws = self.lease_ws();
+                // Cached prefix first: fetched K/V rows land in the cache
+                // slabs by memcpy, then forward_row covers only the suffix
+                // — same s0/s_len contract decode already exercises.
+                let sl = seed_len(b);
+                if sl > 0 {
+                    let sp = &seeds.unwrap()[b];
+                    kernels::install_kv(sp.k, &k_raw, cfg.n_layers, batch, b, cfg.max_seq, dm, sl);
+                    kernels::install_kv(sp.v, &v_raw, cfg.n_layers, batch, b, cfg.max_seq, dm, sl);
+                }
+                let s_len = seq - sl;
                 // SAFETY: per-row residual regions are disjoint.
-                let x = unsafe { xs_raw.range_mut(b * seq * dm, seq * dm) };
-                for s in 0..seq {
-                    let tok = tokens[b * seq + s] as usize;
+                let x = unsafe { xs_raw.range_mut(b * seq * dm, s_len * dm) };
+                for s in 0..s_len {
+                    let tok = tokens[b * seq + sl + s] as usize;
                     x[s * dm..(s + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
                 }
-                self.forward_row(batch, b, 0, seq, x, &k_raw, &v_raw, &mut ws);
+                self.forward_row(batch, b, sl, s_len, x, &k_raw, &v_raw, &mut ws);
                 self.return_ws(ws);
             });
         }
 
         let jobs: Vec<(usize, usize)> = match last {
+            // Row b's residual for absolute position p lives at suffix
+            // offset p - seed_len(b) of its region in `xs`.
             Some(l) => (0..batch)
                 .filter(|&b| is_active(b))
-                .map(|b| ((b * seq + l[b]) * dm, b * cfg.vocab))
+                .map(|b| ((b * seq + (l[b] - seed_len(b))) * dm, b * cfg.vocab))
                 .collect(),
             None => (0..batch)
                 .filter(|&b| is_active(b))
@@ -879,8 +959,18 @@ impl TinyLmRuntime {
         self.logits_stage(&xs, &jobs, &mut logits);
         self.return_buf(xs);
 
+        let seeded_tokens: usize = (0..batch).filter(|&b| is_active(b)).map(seed_len).sum();
+        let seeded_rows = (0..batch).filter(|&b| is_active(b) && seed_len(b) > 0).count();
         self.counters.prefill_calls.fetch_add(1, Ordering::Relaxed);
-        self.counters.prefill_tokens.fetch_add((n_active * seq) as u64, Ordering::Relaxed);
+        // `prefill_tokens` counts *computed* positions: seeded rows cost
+        // only their suffix; the installed prefix is tracked separately.
+        self.counters
+            .prefill_tokens
+            .fetch_add((n_active * seq - seeded_tokens) as u64, Ordering::Relaxed);
+        if seeded_rows > 0 {
+            self.counters.seeded_prefill_rows.fetch_add(seeded_rows as u64, Ordering::Relaxed);
+            self.counters.seeded_prefill_tokens.fetch_add(seeded_tokens as u64, Ordering::Relaxed);
+        }
         self.counters
             .prefill_us
             .fetch_add(t_start.elapsed().as_micros() as u64, Ordering::Relaxed);
@@ -891,7 +981,7 @@ impl TinyLmRuntime {
     /// artifact's S; entries are token ids < vocab), producing logits for
     /// every position.
     pub fn prefill(&self, batch: usize, tokens: &[i32]) -> Result<PrefillOut> {
-        let (logits, k, v, seq) = self.prefill_impl(batch, tokens, None, None)?;
+        let (logits, k, v, seq) = self.prefill_impl(batch, tokens, None, None, None)?;
         Ok(PrefillOut { logits, batch, seq, vocab: self.cfg.vocab, k, v })
     }
 
@@ -906,7 +996,27 @@ impl TinyLmRuntime {
         last: &[usize],
         active: Option<&[bool]>,
     ) -> Result<PrefillLastOut> {
-        let (logits, k, v, _seq) = self.prefill_impl(batch, tokens, Some(last), active)?;
+        let (logits, k, v, _seq) = self.prefill_impl(batch, tokens, Some(last), active, None)?;
+        Ok(PrefillLastOut { logits, batch, vocab: self.cfg.vocab, k, v })
+    }
+
+    /// [`TinyLmRuntime::prefill_last`] seeded from externally fetched KV
+    /// (the distributed pool's real-path entry): rows with
+    /// `seeds[b].len > 0` get positions `0..len` installed by memcpy and
+    /// pay `forward_row` compute only for the suffix `len..S`. The seed
+    /// slabs come from a bit-exact earlier prefill of the same token prefix
+    /// at the same absolute positions, so logits and both caches are
+    /// bit-identical to a cold full prefill (runtime_e2e proptest).
+    pub fn prefill_last_seeded(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        last: &[usize],
+        active: Option<&[bool]>,
+        seeds: &[SeededPrefix<'_>],
+    ) -> Result<PrefillLastOut> {
+        let (logits, k, v, _seq) =
+            self.prefill_impl(batch, tokens, Some(last), active, Some(seeds))?;
         Ok(PrefillLastOut { logits, batch, vocab: self.cfg.vocab, k, v })
     }
 
@@ -1030,6 +1140,22 @@ impl TinyLmRuntime {
         steps: usize,
         active: Option<&[bool]>,
     ) -> Result<Vec<Vec<u32>>> {
+        Ok(self.generate_seeded(prompts, steps, active, None)?.0)
+    }
+
+    /// [`TinyLmRuntime::generate_masked`] with optional per-row KV seeds
+    /// (see [`TinyLmRuntime::prefill_last_seeded`]), returning the final
+    /// K/V caches alongside the tokens so the caller can extract the
+    /// prompt-prefix blocks for pool write-back — decode writes only at
+    /// positions `>= prompt_len`, so the prompt rows are exactly the
+    /// prefill's bits.
+    pub fn generate_seeded(
+        &self,
+        prompts: &[Vec<u32>],
+        steps: usize,
+        active: Option<&[bool]>,
+        seeds: Option<&[SeededPrefix<'_>]>,
+    ) -> Result<(Vec<Vec<u32>>, DeviceTensor, DeviceTensor)> {
         let batch = prompts.len();
         let seq = *self
             .prefill
@@ -1049,7 +1175,10 @@ impl TinyLmRuntime {
             }
         }
         let last: Vec<usize> = prompts.iter().map(|p| p.len().saturating_sub(1)).collect();
-        let pre = self.prefill_last(batch, &tokens, &last, active)?;
+        let pre = match seeds {
+            Some(s) => self.prefill_last_seeded(batch, &tokens, &last, active, s)?,
+            None => self.prefill_last(batch, &tokens, &last, active)?,
+        };
         let mut cur: Vec<i32> = (0..batch).map(|b| pre.argmax_of(b) as i32).collect();
         let mut k = pre.k;
         let mut v = pre.v;
@@ -1066,7 +1195,7 @@ impl TinyLmRuntime {
             k = d.k;
             v = d.v;
         }
-        Ok(out)
+        Ok((out, k, v))
     }
 }
 
@@ -1195,6 +1324,83 @@ mod tests {
         let da = rt1.decode(1, &[7], &[4], a.k, a.v).unwrap();
         let db = rt4.decode(1, &[7], &[4], b.k, b.v).unwrap();
         assert!(da.logits.iter().zip(&db.logits).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    /// Slice the `[L, len, Dm]` seed slab for row `b` out of a full cache
+    /// tensor (what `kvcache::blocks::assemble_prefix` produces on the
+    /// real path).
+    fn seed_slab(cache: &Tensor, cfg: &ModelCfg, batch: usize, b: usize, len: usize) -> Vec<f32> {
+        let dm = cfg.d_model;
+        let mut slab = Vec::with_capacity(cfg.n_layers * len * dm);
+        for layer in 0..cfg.n_layers {
+            let base = (layer * batch + b) * cfg.max_seq * dm;
+            slab.extend_from_slice(&cache.data[base..base + len * dm]);
+        }
+        slab
+    }
+
+    #[test]
+    fn seeded_prefill_matches_cold_prefill() {
+        // Install the first 4 positions from an earlier prefill's caches;
+        // logits and both caches must be bit-identical to the cold run.
+        let rt = toy_runtime();
+        let tokens: Vec<i32> = vec![3, 8, 2, 1, 7, 5, 0, 9, 9, 4, 4, 7, 1, 2, 6, 0];
+        let last = [7usize, 6];
+        let cold = rt.prefill_last(2, &tokens, &last, None).unwrap();
+        let full = rt.prefill(2, &tokens).unwrap();
+        let (k0, v0) = (seed_slab(&full.k, &rt.cfg, 2, 0, 4), seed_slab(&full.v, &rt.cfg, 2, 0, 4));
+        let seeds = [
+            SeededPrefix { len: 4, k: &k0, v: &v0 },
+            SeededPrefix::default(), // row 1 stays cold
+        ];
+        let warm = rt.prefill_last_seeded(2, &tokens, &last, None, &seeds).unwrap();
+        for b in 0..2 {
+            assert!(
+                warm.logits_of(b)
+                    .iter()
+                    .zip(cold.logits_of(b))
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "row {b} seeded logits diverge"
+            );
+        }
+        assert!(warm.k.data.iter().zip(&cold.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(warm.v.data.iter().zip(&cold.v.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn seeded_generate_matches_cold_generate() {
+        let rt = toy_runtime();
+        let prompts = vec![vec![5u32, 6, 7, 1, 2, 3]];
+        let (cold, k, v) = rt.generate_seeded(&prompts, 3, None, None).unwrap();
+        let (ks, vs) =
+            (seed_slab(&k, &rt.cfg, 1, 0, 4), seed_slab(&v, &rt.cfg, 1, 0, 4));
+        let seeds = [SeededPrefix { len: 4, k: &ks, v: &vs }];
+        let (warm, _, _) = rt.generate_seeded(&prompts, 3, None, Some(&seeds)).unwrap();
+        assert_eq!(warm, cold, "seeded decode chain must reproduce the cold tokens");
+        let s = rt.stats();
+        assert_eq!(s.seeded_prefill_rows, 1);
+        assert_eq!(s.seeded_prefill_tokens, 4);
+    }
+
+    #[test]
+    fn seeded_prefill_error_paths() {
+        let rt = toy_runtime();
+        let tokens = vec![1i32; 8];
+        let slab = vec![0.0f32; rt.cfg.n_layers * 4 * rt.cfg.d_model];
+        // Seed reaching the last position: nothing left to compute there.
+        let seeds = [SeededPrefix { len: 4, k: &slab, v: &slab }];
+        assert!(
+            rt.prefill_last_seeded(1, &tokens, &[3], None, &seeds).is_err(),
+            "seed must stay below the last position"
+        );
+        // Wrong slab size.
+        let short = vec![0.0f32; 3];
+        let bad = [SeededPrefix { len: 4, k: &short, v: &short }];
+        assert!(rt.prefill_last_seeded(1, &tokens, &[7], None, &bad).is_err());
+        // Arity mismatch.
+        assert!(rt
+            .prefill_last_seeded(1, &tokens, &[7], None, &[])
+            .is_err());
     }
 
     #[test]

@@ -566,3 +566,91 @@ fn prop_tokenizer_prefix_stable() {
         },
     );
 }
+
+// ---------------------------------------------------------- KV pool
+
+/// Random interleaved insert/lookup sequences over 1–4 shards, dedup
+/// on/off, shard-less writers, and a mix of metadata-only and data-bearing
+/// inserts: `check_invariants()` (index/policy/byte accounting agreement,
+/// per-shard capacity, data tier ⊆ index) holds after *every* operation.
+/// This property catches both historical pool accounting bugs — the
+/// dedup-off re-insert that ran the make-room loop before freeing its own
+/// old copy, and once-per-call placement hot-spotting a shard-less
+/// writer's multi-block write-back.
+#[test]
+fn prop_kv_pool_accounting_invariants() {
+    use aibrix::engine::ExternalKv;
+    use aibrix::kvcache::blocks::{KvBlockData, KvBlockShape};
+    use aibrix::kvcache::{DistKvPool, KvPoolConfig};
+    use std::sync::Arc;
+
+    const SHAPE: KvBlockShape = KvBlockShape { n_layers: 1, block_tokens: 16, d_model: 4 };
+
+    #[derive(Debug)]
+    struct Scenario {
+        shards: usize,
+        dedup: bool,
+        /// (op kind, writer/reader node, chain start key, chain length)
+        ops: Vec<(u8, u64, u64, usize)>,
+    }
+
+    forall(
+        "kv-pool-invariants",
+        150,
+        |rng, size| Scenario {
+            shards: 1 + rng.below(4) as usize,
+            dedup: rng.below(2) == 0,
+            ops: (0..size.0.max(8))
+                .map(|_| {
+                    (
+                        rng.below(3) as u8,
+                        rng.below(6),                // nodes 4.. have no shard
+                        1 + rng.below(24),           // small key space => collisions
+                        1 + rng.below(6) as usize,   // blocks per op
+                    )
+                })
+                .collect(),
+        },
+        |sc| {
+            // Tiny shards (3 blocks each) force constant eviction churn.
+            let nodes: Vec<(u64, u64)> = (0..sc.shards as u64).map(|i| (i, 3 * 1024)).collect();
+            let mut cfg = KvPoolConfig::new(nodes, 64, 16); // block = 1024 bytes
+            cfg.dedup = sc.dedup;
+            let mut pool = DistKvPool::new(cfg);
+            pool.set_shape(SHAPE);
+            let data = Arc::new(KvBlockData {
+                k: vec![1.0; SHAPE.floats_per_side()],
+                v: vec![2.0; SHAPE.floats_per_side()],
+            });
+            for (step, &(kind, node, start, len)) in sc.ops.iter().enumerate() {
+                // Advancing clock straddles the 50ms visibility delay.
+                let now = step as u64 * 9_000;
+                let keys: Vec<u64> = (start..start + len as u64).collect();
+                match kind {
+                    0 => pool.insert(now, node, &keys, 16),
+                    1 => {
+                        let items: Vec<(u64, Arc<KvBlockData>)> =
+                            keys.iter().map(|&k| (k, Arc::clone(&data))).collect();
+                        pool.insert_blocks(now, node, &items);
+                    }
+                    _ => {
+                        let (fetch, blocks) = pool.lookup_blocks(now, node, &keys);
+                        if blocks.len() > fetch.blocks_hit {
+                            return Err(format!(
+                                "op {step}: {} data blocks for {} hits",
+                                blocks.len(),
+                                fetch.blocks_hit
+                            ));
+                        }
+                    }
+                }
+                if !pool.check_invariants() {
+                    return Err(format!(
+                        "op {step} ({kind} node={node} keys={start}..+{len}) broke invariants"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -133,6 +133,68 @@ fn kernel_properties() {
     });
     println!("runtime_e2e::prop_threaded_matches_single_thread ... ok");
 
+    // Seeded prefill — KV for a block-aligned prefix installed from an
+    // earlier prefill via the pool's extract/assemble block format — is
+    // bit-identical to full re-prefill: same last-position logits, same
+    // K/V caches. This is the golden contract cross-replica reuse rides on.
+    forall("seeded-prefill-matches-full-reprefill", 25, gen_case, |c| {
+        use aibrix::kvcache::blocks::{assemble_prefix, extract_block, KvBlockData, KvBlockShape};
+        use aibrix::runtime::SeededPrefix;
+        use std::sync::Arc;
+
+        let rt = prop_runtime(4);
+        let spec = prop_spec();
+        let bt = 2usize;
+        let shape = KvBlockShape {
+            n_layers: spec.cfg.n_layers,
+            block_tokens: bt,
+            d_model: spec.cfg.d_model,
+        };
+        let full = rt.prefill(c.batch, &c.tokens).map_err(|e| e.to_string())?;
+        let lasts: Vec<usize> = c.prompt_lens.iter().map(|&l| l - 1).collect();
+        let cold =
+            rt.prefill_last(c.batch, &c.tokens, &lasts, None).map_err(|e| e.to_string())?;
+        // Per row: cache the longest block-aligned prefix below the last
+        // position, exactly as the engine's admission hook does.
+        let slabs: Vec<(usize, Vec<f32>, Vec<f32>)> = (0..c.batch)
+            .map(|b| {
+                let blocks = lasts[b] / bt;
+                let chain: Vec<Arc<KvBlockData>> = (0..blocks)
+                    .map(|i| {
+                        Arc::new(extract_block(
+                            &full.k.data,
+                            &full.v.data,
+                            &shape,
+                            c.batch,
+                            spec.cfg.max_seq,
+                            b,
+                            i,
+                        ))
+                    })
+                    .collect();
+                let (k, v) = assemble_prefix(&chain, &shape);
+                (blocks * bt, k, v)
+            })
+            .collect();
+        let seeds: Vec<SeededPrefix> = slabs
+            .iter()
+            .map(|(len, k, v)| SeededPrefix { len: *len, k, v })
+            .collect();
+        let warm = rt
+            .prefill_last_seeded(c.batch, &c.tokens, &lasts, None, &seeds)
+            .map_err(|e| e.to_string())?;
+        for b in 0..c.batch {
+            if !bits_eq(warm.logits_of(b), cold.logits_of(b)) {
+                return Err(format!("row {b}: seeded logits diverge from cold prefill"));
+            }
+        }
+        if !bits_eq(&warm.k.data, &full.k.data) || !bits_eq(&warm.v.data, &full.v.data) {
+            return Err("seeded KV caches diverge from full re-prefill".into());
+        }
+        Ok(())
+    });
+    println!("runtime_e2e::prop_seeded_prefill_matches_full_reprefill ... ok");
+
     // The positions-mask fast path is a pure subset of full prefill.
     forall("prefill-last-is-subset", 25, gen_case, |c| {
         let rt = prop_runtime(4);

@@ -3,12 +3,17 @@
 
 Usage:
     python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
+    python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
 - BASELINE: the blessed copy tracked in git (benchmarks/*.baseline.json).
 - --bless: copy CURRENT over BASELINE (run locally, commit the result).
 - --tolerance: allowed fractional regression (default 0.30, i.e. fail if
   decode tokens/s drops more than 30% below the baseline).
+- --kvpool: validate a kvpool_e2e report instead — within-run gates only
+  (pool-on beats pool-off, cross-replica hits happened, outputs
+  bit-identical); no baseline needed, so it is never in record mode for
+  these structural checks.
 
 Exit codes: 0 = ok (or record mode: no baseline checked in yet),
 1 = regression, 2 = malformed input.
@@ -16,7 +21,8 @@ Exit codes: 0 = ok (or record mode: no baseline checked in yet),
 Throughput metrics compared (higher is better): decode_kernel and
 prefill_kernel `tokens_per_s`. Only decode gates (prefill is reported);
 machine-to-machine noise is why the tolerance is wide — the within-run
-`decode_speedup` vs the scalar reference is the portable number.
+`decode_speedup` vs the scalar reference is the portable number. The
+kvpool gate likewise uses the within-run `pool_speedup`.
 """
 
 import json
@@ -31,18 +37,66 @@ def tokens_per_s(doc, name):
     return None
 
 
+def check_kvpool(path):
+    """Within-run validation of a kvpool_e2e report (ISSUE 3 acceptance:
+    remote hits > 0, pool-on beats pool-off, bit-identical outputs)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read kvpool report {path}: {e}")
+        return 2
+    on = tokens_per_s(doc, "pool_on_prefill")
+    off = tokens_per_s(doc, "pool_off_prefill")
+    derived = doc.get("derived", {})
+    speedup = derived.get("pool_speedup")
+    remote = derived.get("blocks_hit_remote")
+    identical = derived.get("outputs_bit_identical")
+    if None in (on, off, speedup, remote, identical):
+        print(f"check_bench: {path} is missing kvpool rows/derived values")
+        return 2
+    print(f"check_bench: kvpool pool-on {on:.0f} vs pool-off {off:.0f} served tok/s "
+          f"(speedup {speedup:.2f}x, {remote} remote block hits)")
+    if identical is not True:
+        print("check_bench: FAIL — seeded outputs were not bit-identical")
+        return 1
+    if remote <= 0:
+        print("check_bench: FAIL — no cross-replica block reuse recorded")
+        return 1
+    if speedup <= 1.0:
+        print("check_bench: FAIL — pool-on did not beat pool-off")
+        return 1
+    # Wall clock is noisy on shared runners: only a *material* end-to-end
+    # slowdown fails (the deterministic pool_speedup gate is above).
+    wall = derived.get("wall_speedup")
+    if wall is not None and wall <= 0.9:
+        print(f"check_bench: FAIL — pool overheads outweighed the saved "
+              f"prefill (wall speedup {wall:.2f}x)")
+        return 1
+    print("check_bench: OK — kvpool within-run gates hold")
+    return 0
+
+
 def main(argv):
     bless = False
     tol = 0.30
+    kvpool = None
     args = []
     i = 1
     while i < len(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a == "--tolerance":
+        elif a in ("--tolerance", "--kvpool"):
             i += 1
-            tol = float(argv[i])
+            if i >= len(argv):
+                print(f"check_bench: {a} expects a value")
+                print(__doc__)
+                return 2
+            if a == "--tolerance":
+                tol = float(argv[i])
+            else:
+                kvpool = argv[i]
         elif a.startswith("--"):
             print(f"check_bench: unknown flag {a}")
             print(__doc__)
@@ -50,6 +104,12 @@ def main(argv):
         else:
             args.append(a)
         i += 1
+    if kvpool is not None:
+        if args:
+            print("check_bench: --kvpool takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_kvpool(kvpool)
     if len(args) != 2:
         print(__doc__)
         return 2
