@@ -13,9 +13,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use aibrix::engine::real::{EnginePool, RealEngineHandle, RealRequest};
+use aibrix::engine::real::{EngineOpts, EnginePool, RealEngineHandle, RealRequest};
 use aibrix::json::{parse, Json};
-use aibrix::runtime::Manifest;
+use aibrix::runtime::{Manifest, Precision};
 use aibrix::server::{http_request, Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
 use aibrix::util::stats::Summary;
@@ -42,17 +42,31 @@ fn main() -> aibrix::util::err::Result<()> {
     // SQL prompts share long token prefixes, so whichever replica prefills
     // a prefix first spares every other replica that compute.
     let manifest = Manifest::load(&artifacts)?;
-    let hook = EnginePool::for_model(&manifest.cfg, "tinylm", n_replicas, 64 << 20);
+    // Precision tier from AIBRIX_RT_PRECISION (int8 = quantized weights);
+    // the pool's model id carries it so tiers never exchange KV bits.
+    let precision = Precision::from_env();
+    let model_id = format!("tinylm+{}", precision.name());
+    let hook = EnginePool::for_model(&manifest.cfg, &model_id, n_replicas, 64 << 20);
     let replicas: Vec<RealEngineHandle> = (0..n_replicas)
-        .map(|node| RealEngineHandle::spawn_with_pool(&artifacts, Some(hook.for_node(node as u64))))
+        .map(|node| {
+            RealEngineHandle::spawn_with_opts(
+                &artifacts,
+                EngineOpts {
+                    pool: Some(hook.for_node(node as u64)),
+                    precision: Some(precision),
+                },
+            )
+        })
         .collect::<aibrix::util::err::Result<_>>()?;
     println!(
-        "{} engine replica(s) ready in {:.1}s (vocab={}, prompt window={}, decode budget={})",
+        "{} engine replica(s) ready in {:.1}s (vocab={}, prompt window={}, decode budget={}, \
+         precision={})",
         replicas.len(),
         t_load.elapsed().as_secs_f64(),
         replicas[0].vocab,
         replicas[0].max_prompt,
-        replicas[0].max_new_tokens
+        replicas[0].max_new_tokens,
+        replicas[0].precision.name()
     );
 
     let tokenizer = Tokenizer::new(replicas[0].vocab as u32);
@@ -161,6 +175,12 @@ fn main() -> aibrix::util::err::Result<()> {
                 rs.decode_tokens_per_s(),
                 rs.decode_tokens,
                 rs.seeded_prefill_tokens
+            );
+            println!(
+                "replica {i} quant [{}]: {} quantized GEMM calls, {:.1} MiB weight bytes saved",
+                r.precision.name(),
+                rs.quant_gemm_calls,
+                rs.quant_bytes_saved as f64 / (1u64 << 20) as f64
             );
         }
     }

@@ -41,8 +41,13 @@ fn main() -> aibrix::util::err::Result<()> {
         synthetic_probe_runtime()
     };
     println!(
-        "model: vocab={} d_model={} layers={} max_seq={}  threads={}",
-        rt.cfg.vocab, rt.cfg.d_model, rt.cfg.n_layers, rt.cfg.max_seq, rt.threads()
+        "model: vocab={} d_model={} layers={} max_seq={}  threads={}  precision={}",
+        rt.cfg.vocab,
+        rt.cfg.d_model,
+        rt.cfg.n_layers,
+        rt.cfg.max_seq,
+        rt.threads(),
+        rt.precision().name()
     );
     for &b in &[1usize, 4, 8] {
         if !rt.prefill_batches().contains(&b) {
@@ -68,6 +73,14 @@ fn main() -> aibrix::util::err::Result<()> {
         s.decode_tokens_per_s(),
         s.decode_tokens,
         s.decode_calls
+    );
+    // Quant-tier telemetry so a BENCH paste is self-describing (zeros on
+    // the f32 path; set AIBRIX_RT_PRECISION=int8 to probe the quant tier).
+    println!(
+        "quant telemetry: precision={}  {} quantized GEMM calls, {:.1} MiB weight bytes saved",
+        rt.precision().name(),
+        s.quant_gemm_calls,
+        s.quant_bytes_saved as f64 / (1u64 << 20) as f64
     );
     Ok(())
 }

@@ -15,8 +15,20 @@ use crate::kvcache::blocks::{
     assemble_prefix, extract_block, model_chain_seed, prompt_block_keys_seeded,
 };
 use crate::kvcache::{DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolStats};
-use crate::runtime::{ModelCfg, RtStats, SeededPrefix, TinyLmRuntime};
+use crate::runtime::{ModelCfg, Precision, RtStats, SeededPrefix, TinyLmRuntime};
 use crate::util::err::{Error, Result};
+
+/// Construction options for a real engine replica.
+#[derive(Clone, Default)]
+pub struct EngineOpts {
+    /// Join this distributed KV pool (the hook carries the node id).
+    pub pool: Option<EnginePool>,
+    /// Numeric tier override; None defers to `AIBRIX_RT_PRECISION`/f32.
+    /// Replicas sharing a KV pool must agree on precision — give each
+    /// precision its own pool `model_id` (as `aibrix serve` does) so
+    /// mixed fleets can never exchange KV bits across tiers.
+    pub precision: Option<Precision>,
+}
 
 /// Shared handle wiring a [`RealEngine`] replica into the distributed KV
 /// pool (§3.2.5 on the real serving path): admission fetches cached prefix
@@ -136,7 +148,16 @@ impl RealEngine {
     /// Load the artifacts and, when `pool` is given, join the distributed
     /// KV pool as that hook's node.
     pub fn load_with_pool(artifacts: &Path, pool: Option<EnginePool>) -> Result<RealEngine> {
-        Self::from_runtime(TinyLmRuntime::load(artifacts)?, pool)
+        Self::load_with_opts(artifacts, EngineOpts { pool, precision: None })
+    }
+
+    /// Load with full construction options (pool hook + precision tier).
+    pub fn load_with_opts(artifacts: &Path, opts: EngineOpts) -> Result<RealEngine> {
+        let mut runtime = TinyLmRuntime::load(artifacts)?;
+        if let Some(p) = opts.precision {
+            runtime.set_precision(p);
+        }
+        Self::from_runtime(runtime, opts.pool)
     }
 
     /// Build an engine around an already-constructed runtime (synthetic
@@ -390,6 +411,8 @@ pub struct RealEngineHandle {
     pub max_prompt: usize,
     pub max_new_tokens: usize,
     pub vocab: usize,
+    /// Numeric tier the engine thread's runtime is executing.
+    pub precision: Precision,
     /// KV-pool hook shared with the engine thread (stats reads only).
     pool: Option<EnginePool>,
 }
@@ -406,17 +429,24 @@ impl RealEngineHandle {
         artifacts: &Path,
         pool: Option<EnginePool>,
     ) -> Result<RealEngineHandle> {
+        Self::spawn_with_opts(artifacts, EngineOpts { pool, precision: None })
+    }
+
+    /// [`RealEngineHandle::spawn`] with full construction options
+    /// (pool hook + precision tier).
+    pub fn spawn_with_opts(artifacts: &Path, opts: EngineOpts) -> Result<RealEngineHandle> {
         let (tx, rx) = mpsc::channel::<Cmd>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize, Precision)>>();
         let dir = artifacts.to_path_buf();
-        let thread_pool = pool.clone();
+        let pool = opts.pool.clone();
         std::thread::spawn(move || {
-            let mut engine = match RealEngine::load_with_pool(&dir, thread_pool) {
+            let mut engine = match RealEngine::load_with_opts(&dir, opts) {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok((
                         e.max_prompt(),
                         e.max_new_tokens(),
                         e.runtime().cfg.vocab,
+                        e.runtime().precision(),
                     )));
                     e
                 }
@@ -466,10 +496,10 @@ impl RealEngineHandle {
                 }
             }
         });
-        let (max_prompt, max_new_tokens, vocab) = ready_rx
+        let (max_prompt, max_new_tokens, vocab, precision) = ready_rx
             .recv()
             .map_err(|_| Error::msg("engine thread died during load"))??;
-        Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab, pool })
+        Ok(RealEngineHandle { tx, max_prompt, max_new_tokens, vocab, precision, pool })
     }
 
     /// Counters of the shared KV pool this replica participates in (None
@@ -589,6 +619,30 @@ mod tests {
         // (already resident), so only the cold request inserted.
         assert_eq!(ps.inserts, 2, "fetched blocks must not be re-inserted: {ps:?}");
         assert_eq!(ps.inserts_deduped, 0, "{ps:?}");
+    }
+
+    #[test]
+    fn int8_engine_serves_and_counts_quant_work() {
+        let mut rt = TinyLmRuntime::synthetic(&spec());
+        rt.set_precision(Precision::Int8);
+        let mut e = RealEngine::from_runtime(rt, None).unwrap();
+        e.enqueue(request(1, &[1, 2, 3, 4, 5, 6, 7, 8], 3));
+        let done = e.step().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].generated.len(), 4);
+        assert!(done[0].generated.iter().all(|&t| t < 32));
+        let rs = e.runtime_stats();
+        assert!(rs.quant_gemm_calls > 0, "int8 engine must route GEMMs through the quant tier");
+        assert!(rs.quant_bytes_saved > 0);
+        // Determinism across an identically-built f32-vs-int8 pair is NOT
+        // asserted (relaxed tier); within-tier repeatability is.
+        let mut e2 = {
+            let mut rt = TinyLmRuntime::synthetic(&spec());
+            rt.set_precision(Precision::Int8);
+            RealEngine::from_runtime(rt, None).unwrap()
+        };
+        e2.enqueue(request(1, &[1, 2, 3, 4, 5, 6, 7, 8], 3));
+        assert_eq!(e2.step().unwrap()[0].generated, done[0].generated);
     }
 
     #[test]

@@ -17,9 +17,9 @@ use std::sync::{Arc, Mutex};
 use aibrix::cli::Args;
 use aibrix::cluster::GpuKind;
 use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
-use aibrix::engine::real::{EnginePool, RealEngineHandle, RealRequest};
+use aibrix::engine::real::{EngineOpts, EnginePool, RealEngineHandle, RealRequest};
 use aibrix::engine::{EngineStats, ModelSpec};
-use aibrix::runtime::Manifest;
+use aibrix::runtime::{Manifest, Precision};
 use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
 use aibrix::gateway::{PodSnapshot, Policy, Router, ScoreCtx, TenantUsage};
 use aibrix::json::{parse, Json};
@@ -72,7 +72,8 @@ fn main() {
                 "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]\n\
                  routing flags: --policy <random|throughput|least-request|least-kv-cache|least-latency|prefix-cache-aware[=t]|weighted:k=w,...>\n\
                  \x20              --prefix-threshold <0..1>\n\
-                 serve flags:   --replicas N --port P --artifacts DIR --kv-pool [--kv-pool-mb MB]"
+                 serve flags:   --replicas N --port P --artifacts DIR --kv-pool [--kv-pool-mb MB]\n\
+                 \x20              --precision <f32|int8>  (or AIBRIX_RT_PRECISION; int8 = quantized-weight tier)"
             );
             2
         }
@@ -205,9 +206,15 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
                 None => 256,
             };
-            Ok((port, replicas, policy, pool_mb))
+            // Numeric tier: an explicit flag is a hard error when invalid;
+            // absent, the AIBRIX_RT_PRECISION env override applies.
+            let precision = match args.str_flag("precision") {
+                Some(s) => Precision::parse(s).map_err(|e| e.to_string())?,
+                None => Precision::from_env(),
+            };
+            Ok((port, replicas, policy, pool_mb, precision))
         });
-    let (port, n_replicas, policy, pool_mb) = match parsed {
+    let (port, n_replicas, policy, pool_mb, precision) = match parsed {
         Ok(t) => t,
         Err(e) => {
             eprintln!("error: {e}");
@@ -220,9 +227,14 @@ fn cmd_serve(args: &Args) -> i32 {
         || args.str_flag("kv-pool-mb").is_some();
     let pool_hook = if want_pool {
         // Pool geometry comes from the manifest via EnginePool::for_model
-        // (block = one runtime page, bytes/token from the KV layout).
+        // (block = one runtime page, bytes/token from the KV layout). The
+        // model id carries the precision tier: f32 and int8 replicas
+        // compute different KV bits, so they must never share blocks.
         match Manifest::load(&artifacts) {
-            Ok(m) => Some(EnginePool::for_model(&m.cfg, "tinylm", n_replicas, pool_mb << 20)),
+            Ok(m) => {
+                let model_id = format!("tinylm+{}", precision.name());
+                Some(EnginePool::for_model(&m.cfg, &model_id, n_replicas, pool_mb << 20))
+            }
             Err(e) => {
                 eprintln!("--kv-pool needs readable artifacts at {artifacts:?}: {e}");
                 return 1;
@@ -235,7 +247,8 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut replicas = Vec::new();
     for node in 0..n_replicas {
         let hook = pool_hook.as_ref().map(|h| h.for_node(node as u64));
-        match RealEngineHandle::spawn_with_pool(&artifacts, hook) {
+        let opts = EngineOpts { pool: hook, precision: Some(precision) };
+        match RealEngineHandle::spawn_with_opts(&artifacts, opts) {
             Ok(e) => replicas.push(e),
             Err(e) => {
                 eprintln!(
@@ -247,11 +260,13 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let engine0 = &replicas[0];
     println!(
-        "loaded tinylm x{n_replicas}: vocab={} max_prompt={} max_new={}  policy={}  kv-pool={}",
+        "loaded tinylm x{n_replicas}: vocab={} max_prompt={} max_new={}  policy={}  \
+         precision={}  kv-pool={}",
         engine0.vocab,
         engine0.max_prompt,
         engine0.max_new_tokens,
         policy.name(),
+        precision.name(),
         if pool_hook.is_some() { format!("{pool_mb}MiB/replica") } else { "off".into() }
     );
     let max_prompt = engine0.max_prompt;
@@ -296,11 +311,31 @@ fn cmd_serve(args: &Args) -> i32 {
             ("GET", "/metrics") => {
                 let n = *served.lock().unwrap();
                 let mut body = format!("aibrix_completions_total {n}\n");
+                body.push_str(&format!(
+                    "aibrix_rt_precision{{mode=\"{}\"}} 1\n",
+                    precision.name()
+                ));
                 for (i, c) in inflight.iter().enumerate() {
                     body.push_str(&format!(
                         "aibrix_inflight_requests{{replica=\"{i}\"}} {}\n",
                         c.load(Ordering::Relaxed)
                     ));
+                }
+                // Per-replica runtime quant telemetry (answered by the
+                // engine thread between batches, so a scrape may briefly
+                // wait on an in-flight batch — the BENCH counters are
+                // worth that; zeros under f32).
+                for (i, r) in replicas.iter().enumerate() {
+                    if let Ok(rs) = r.stats() {
+                        body.push_str(&format!(
+                            "aibrix_rt_quant_gemm_calls_total{{replica=\"{i}\"}} {}\n",
+                            rs.quant_gemm_calls
+                        ));
+                        body.push_str(&format!(
+                            "aibrix_rt_quant_bytes_saved_total{{replica=\"{i}\"}} {}\n",
+                            rs.quant_bytes_saved
+                        ));
+                    }
                 }
                 // Shared KV pool counters (present with --kv-pool).
                 if let Some(ps) = replicas[0].pool_stats() {

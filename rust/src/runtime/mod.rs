@@ -28,6 +28,18 @@
 //! bits, and the KV-cache decode path is bit-exact with re-prefill —
 //! prefill and decode share [`TinyLmRuntime::forward_row`] and the
 //! ascending-k kernels, so the last property holds exactly.
+//!
+//! Precision tiers: the default [`Precision::F32`] path keeps the
+//! bit-exact contract above against [`reference`]. [`Precision::Int8`]
+//! (`AIBRIX_RT_PRECISION=int8`, `aibrix serve --precision int8`, or
+//! [`TinyLmRuntime::set_precision`]) stores every weight-GEMM operand as
+//! per-output-channel symmetric int8 quantized once at load
+//! ([`kernels::QuantMat`]), cutting weight bytes moved per matmul 4x. It
+//! carries a relaxed-exactness contract instead — documented error bounds
+//! vs the f32 kernels plus a greedy top-1 agreement check — but every
+//! within-mode property (determinism, row independence, thread
+//! invariance, decode == re-prefill, seeded prefill) still holds
+//! bit-exactly, because the int8 kernels keep the same ascending-k order.
 
 pub mod kernels;
 mod reference;
@@ -41,7 +53,7 @@ use std::time::Instant;
 
 use crate::json::{parse, Json};
 use crate::util::err::{Error, Result};
-use kernels::{RawSlice, RopeTables, Workspace};
+use kernels::{QuantMat, RawSlice, RopeTables, Workspace};
 
 /// Rotary-embedding frequency base (matches `python/compile/model.py`).
 const ROPE_BASE: f32 = 10_000.0;
@@ -49,6 +61,61 @@ const ROPE_BASE: f32 = 10_000.0;
 /// Below this vocab size, splitting a single logits row across threads
 /// costs more in spawns than the dots it saves.
 const VOCAB_PAR_MIN: usize = 1024;
+
+/// Numeric execution tier for the runtime's weight GEMMs.
+///
+/// `F32` is the bit-exact contract path (kernel == scalar reference, bit
+/// for bit). `Int8` runs per-output-channel symmetric int8 weights
+/// (quantized once at load; f32 activations, f32 accumulation) — ~4x less
+/// weight traffic per matmul in exchange for a relaxed-exactness test
+/// contract (bounded error vs f32, greedy top-1 agreement; BENCHMARKS.md).
+/// Within either mode all determinism properties hold bit-exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(Precision::F32),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => {
+                Err(Error::msg(format!("unknown precision {other:?} (expected f32 or int8)")))
+            }
+        }
+    }
+
+    /// The `AIBRIX_RT_PRECISION` override (unset -> f32). An unparsable
+    /// value warns and falls back to f32 — a library load must not panic
+    /// on a stray env var; the CLI `--precision` flag is the loud path.
+    pub fn from_env() -> Precision {
+        match std::env::var("AIBRIX_RT_PRECISION") {
+            Ok(s) => Precision::parse(&s).unwrap_or_else(|e| {
+                eprintln!("AIBRIX_RT_PRECISION: {e}; using f32");
+                Precision::F32
+            }),
+            Err(_) => Precision::F32,
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Precision, String> {
+        Precision::parse(s).map_err(|e| e.to_string())
+    }
+}
 
 /// Dense row-major f32 tensor (parameters, KV caches).
 #[derive(Debug, Clone)]
@@ -287,6 +354,26 @@ impl DecodeOut {
     }
 }
 
+/// One weight GEMM of the forward pass, dispatched to the active tier:
+/// int8 when the quantized twin is present, else the bit-exact f32 kernel.
+/// `panel` is the workspace's dequantization scratch (unused on f32).
+#[allow(clippy::too_many_arguments)]
+fn matmul(
+    x: &[f32],
+    w: &Tensor,
+    q: Option<&QuantMat>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    panel: &mut Vec<f32>,
+) {
+    match q {
+        Some(qm) => kernels::gemm_i8(x, qm, m, k, n, out, panel),
+        None => kernels::gemm(x, &w.data, m, k, n, out),
+    }
+}
+
 pub fn argmax(xs: &[f32]) -> u32 {
     let mut best = 0;
     let mut bv = f32::NEG_INFINITY;
@@ -351,6 +438,49 @@ impl TinyLmParams {
     }
 }
 
+/// Int8 twins of one layer's GEMM operands (column-scaled, [k, n]).
+struct QuantLayer {
+    wq: QuantMat,
+    wk: QuantMat,
+    wv: QuantMat,
+    wo: QuantMat,
+    w_in: QuantMat,
+    w_out: QuantMat,
+}
+
+/// Per-output-channel symmetric int8 copies of every weight-GEMM operand,
+/// built once when the runtime enters [`Precision::Int8`]: layer matrices
+/// column-quantized (one scale per output column), the tied embedding
+/// row-quantized (one scale per vocab row — the logits projection's output
+/// channel). The f32 embedding stays resident for exact embedding lookups;
+/// RMSNorm gains and the attention path (pure activation math) are not
+/// quantized.
+struct TinyLmQuantParams {
+    embed: QuantMat,
+    layers: Vec<QuantLayer>,
+}
+
+impl TinyLmQuantParams {
+    fn from_params(p: &TinyLmParams, cfg: &ModelCfg) -> TinyLmQuantParams {
+        let (dm, dff) = (cfg.d_model, p.d_ff);
+        TinyLmQuantParams {
+            embed: kernels::quantize_rows(&p.embed.data, cfg.vocab, dm),
+            layers: p
+                .layers
+                .iter()
+                .map(|l| QuantLayer {
+                    wq: kernels::quantize_cols(&l.wq.data, dm, dm),
+                    wk: kernels::quantize_cols(&l.wk.data, dm, dm),
+                    wv: kernels::quantize_cols(&l.wv.data, dm, dm),
+                    wo: kernels::quantize_cols(&l.wo.data, dm, dm),
+                    w_in: kernels::quantize_cols(&l.w_in.data, dm, dff),
+                    w_out: kernels::quantize_cols(&l.w_out.data, dff, dm),
+                })
+                .collect(),
+        }
+    }
+}
+
 // ------------------------------------------------------------- telemetry
 
 /// Cumulative hot-path counters (atomics: prefill/decode take `&self` and
@@ -365,6 +495,8 @@ struct RtCounters {
     decode_us: AtomicU64,
     seeded_prefill_rows: AtomicU64,
     seeded_prefill_tokens: AtomicU64,
+    quant_gemm_calls: AtomicU64,
+    quant_bytes_saved: AtomicU64,
 }
 
 /// Snapshot of runtime telemetry — the base quantities the BENCH pipeline
@@ -384,6 +516,13 @@ pub struct RtStats {
     /// Prefill positions installed from fetched KV instead of computed —
     /// the compute the pool saved this runtime.
     pub seeded_prefill_tokens: u64,
+    /// Weight GEMMs + vocab projections served by the int8 tier (0 on the
+    /// f32 path).
+    pub quant_gemm_calls: u64,
+    /// Weight bytes those calls did not stream versus f32 storage (3 of
+    /// every 4 bytes per weight element) — the bandwidth the int8 tier
+    /// saved this runtime.
+    pub quant_bytes_saved: u64,
 }
 
 impl RtStats {
@@ -417,6 +556,11 @@ pub struct TinyLmRuntime {
     rope: RopeTables,
     /// Scoped-thread worker budget (AIBRIX_RT_THREADS override at load).
     threads: usize,
+    /// Active numeric tier ([`Precision::Int8`] requires `qparams`).
+    precision: Precision,
+    /// Int8 weights + per-channel scales, quantized at load when the
+    /// precision mode asks for them (or lazily by `set_precision`).
+    qparams: Option<TinyLmQuantParams>,
     /// Reusable per-worker scratch arenas (leased, never freed).
     ws_pool: Mutex<Vec<Workspace>>,
     /// Reusable flat residual buffers ([B, S, Dm] per prefill call).
@@ -546,17 +690,22 @@ impl TinyLmRuntime {
         decode: BTreeSet<usize>,
     ) -> TinyLmRuntime {
         let rope = RopeTables::new(cfg.max_seq, cfg.head_dim, ROPE_BASE);
-        TinyLmRuntime {
+        let mut rt = TinyLmRuntime {
             cfg,
             params,
             prefill,
             decode,
             rope,
             threads: kernels::default_threads(),
+            precision: Precision::F32,
+            qparams: None,
             ws_pool: Mutex::new(Vec::new()),
             buf_pool: Mutex::new(Vec::new()),
             counters: RtCounters::default(),
-        }
+        };
+        // Quantize at load when the environment asks for the int8 tier.
+        rt.set_precision(Precision::from_env());
+        rt
     }
 
     /// Available prefill batch sizes.
@@ -585,6 +734,31 @@ impl TinyLmRuntime {
         self.threads = n.max(1);
     }
 
+    /// Active numeric tier.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Switch precision tiers. Entering [`Precision::Int8`] quantizes the
+    /// weights on first use (per-output-channel symmetric; the f32
+    /// parameters stay resident, so switching back to `F32` restores the
+    /// bit-exact path unchanged). `load` and `synthetic` default to the
+    /// `AIBRIX_RT_PRECISION` env override, else f32.
+    pub fn set_precision(&mut self, p: Precision) {
+        if p == Precision::Int8 && self.qparams.is_none() {
+            self.qparams = Some(TinyLmQuantParams::from_params(&self.params, &self.cfg));
+        }
+        self.precision = p;
+    }
+
+    /// The int8 parameter set iff the int8 tier is active.
+    fn quant_params(&self) -> Option<&TinyLmQuantParams> {
+        match self.precision {
+            Precision::Int8 => self.qparams.as_ref(),
+            Precision::F32 => None,
+        }
+    }
+
     /// Telemetry snapshot (cumulative since load / last reset).
     pub fn stats(&self) -> RtStats {
         let c = &self.counters;
@@ -597,6 +771,8 @@ impl TinyLmRuntime {
             decode_us: c.decode_us.load(Ordering::Relaxed),
             seeded_prefill_rows: c.seeded_prefill_rows.load(Ordering::Relaxed),
             seeded_prefill_tokens: c.seeded_prefill_tokens.load(Ordering::Relaxed),
+            quant_gemm_calls: c.quant_gemm_calls.load(Ordering::Relaxed),
+            quant_bytes_saved: c.quant_bytes_saved.load(Ordering::Relaxed),
         }
     }
 
@@ -611,9 +787,31 @@ impl TinyLmRuntime {
             &c.decode_us,
             &c.seeded_prefill_rows,
             &c.seeded_prefill_tokens,
+            &c.quant_gemm_calls,
+            &c.quant_bytes_saved,
         ] {
             a.store(0, Ordering::Relaxed);
         }
+    }
+
+    /// Deterministic quant-telemetry bump for one prefill/decode call:
+    /// `rows` forward_row rows ran every layer's 6 weight GEMMs through
+    /// the int8 tier and `logits_jobs` vocab projections used the int8
+    /// embedding; bytes saved counts 3 of every 4 bytes per weight element
+    /// those calls would have streamed as f32. Computed centrally (not in
+    /// the workers) so the numbers are thread-count invariant.
+    fn bump_quant_counters(&self, rows: u64, logits_jobs: u64) {
+        if self.quant_params().is_none() || (rows == 0 && logits_jobs == 0) {
+            return;
+        }
+        let l = self.cfg.n_layers as u64;
+        let (dm, v) = (self.cfg.d_model as u64, self.cfg.vocab as u64);
+        let dff = self.params.d_ff as u64;
+        self.counters.quant_gemm_calls.fetch_add(rows * l * 6 + logits_jobs, Ordering::Relaxed);
+        let layer_w = 4 * dm * dm + 2 * dm * dff;
+        self.counters
+            .quant_bytes_saved
+            .fetch_add(rows * l * 3 * layer_w + logits_jobs * 3 * v * dm, Ordering::Relaxed);
     }
 
     // ------------------------------------------------------ arena pools
@@ -675,8 +873,12 @@ impl TinyLmRuntime {
         let cfg = &self.cfg;
         let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
         let d_ff = self.params.d_ff;
-        ws.ensure(s_len, dm, d_ff);
+        let quant = self.quant_params();
+        ws.ensure(s_len, dm, d_ff, quant.is_some());
         for (layer, lp) in self.params.layers.iter().enumerate() {
+            // Int8 twins of this layer's GEMM operands (None on the f32
+            // contract path).
+            let ql = quant.map(|q| &q.layers[layer]);
             let row_base = (layer * batch + b) * cfg.max_seq * dm;
             for s in 0..s_len {
                 kernels::rms_norm(
@@ -685,17 +887,18 @@ impl TinyLmRuntime {
                     &mut ws.xn[s * dm..(s + 1) * dm],
                 );
             }
+            let xn = &ws.xn[..s_len * dm];
             let q_out = &mut ws.q[..s_len * dm];
-            kernels::gemm(&ws.xn[..s_len * dm], &lp.wq.data, s_len, dm, dm, q_out);
+            matmul(xn, &lp.wq, ql.map(|q| &q.wq), s_len, dm, dm, q_out, &mut ws.wdq);
             {
                 // K/V projections land straight in this row's cache slab —
                 // positions are contiguous for a fixed (layer, row).
                 // SAFETY: worker `b` is the only thread touching the
                 // (layer, b) slabs of either cache.
                 let k_dst = unsafe { k_raw.range_mut(row_base + s0 * dm, s_len * dm) };
-                kernels::gemm(&ws.xn[..s_len * dm], &lp.wk.data, s_len, dm, dm, k_dst);
+                matmul(xn, &lp.wk, ql.map(|q| &q.wk), s_len, dm, dm, k_dst, &mut ws.wdq);
                 let v_dst = unsafe { v_raw.range_mut(row_base + s0 * dm, s_len * dm) };
-                kernels::gemm(&ws.xn[..s_len * dm], &lp.wv.data, s_len, dm, dm, v_dst);
+                matmul(xn, &lp.wv, ql.map(|q| &q.wv), s_len, dm, dm, v_dst, &mut ws.wdq);
                 for s in 0..s_len {
                     let pos = s0 + s;
                     for head in 0..h {
@@ -729,14 +932,11 @@ impl TinyLmRuntime {
                     }
                 }
             }
-            kernels::gemm(
-                &ws.attn[..s_len * dm],
-                &lp.wo.data,
-                s_len,
-                dm,
-                dm,
-                &mut ws.proj[..s_len * dm],
-            );
+            {
+                let attn = &ws.attn[..s_len * dm];
+                let proj = &mut ws.proj[..s_len * dm];
+                matmul(attn, &lp.wo, ql.map(|q| &q.wo), s_len, dm, dm, proj, &mut ws.wdq);
+            }
             for (xv, pv) in x.iter_mut().zip(&ws.proj[..s_len * dm]) {
                 *xv += *pv;
             }
@@ -747,25 +947,19 @@ impl TinyLmRuntime {
                     &mut ws.xn[s * dm..(s + 1) * dm],
                 );
             }
-            kernels::gemm(
-                &ws.xn[..s_len * dm],
-                &lp.w_in.data,
-                s_len,
-                dm,
-                d_ff,
-                &mut ws.ff[..s_len * d_ff],
-            );
+            {
+                let xn = &ws.xn[..s_len * dm];
+                let ff = &mut ws.ff[..s_len * d_ff];
+                matmul(xn, &lp.w_in, ql.map(|q| &q.w_in), s_len, dm, d_ff, ff, &mut ws.wdq);
+            }
             for v in ws.ff[..s_len * d_ff].iter_mut() {
                 *v = kernels::gelu(*v);
             }
-            kernels::gemm(
-                &ws.ff[..s_len * d_ff],
-                &lp.w_out.data,
-                s_len,
-                d_ff,
-                dm,
-                &mut ws.proj[..s_len * dm],
-            );
+            {
+                let ff = &ws.ff[..s_len * d_ff];
+                let proj = &mut ws.proj[..s_len * dm];
+                matmul(ff, &lp.w_out, ql.map(|q| &q.w_out), s_len, d_ff, dm, proj, &mut ws.wdq);
+            }
             for (xv, pv) in x.iter_mut().zip(&ws.proj[..s_len * dm]) {
                 *xv += *pv;
             }
@@ -779,11 +973,15 @@ impl TinyLmRuntime {
         let dm = self.cfg.d_model;
         let vocab = self.cfg.vocab;
         let embed = &self.params.embed.data;
+        // Int8 tier: the vocab projection reads the row-quantized embedding
+        // (4x fewer bytes over the largest matrix the decode step touches);
+        // the f32 embedding above still serves exact token lookups.
+        let qembed = self.quant_params().map(|q| &q.embed);
         let ln_f = &self.params.ln_f.data;
         if jobs.len() == 1 && self.threads > 1 && vocab >= VOCAB_PAR_MIN {
             let (xoff, ooff) = jobs[0];
             let mut ws = self.lease_ws();
-            ws.ensure(1, dm, 1);
+            ws.ensure(1, dm, 1, false);
             kernels::rms_norm(&xs[xoff..xoff + dm], ln_f, &mut ws.xn[..dm]);
             let xn = &ws.xn[..dm];
             let out = &mut logits[ooff..ooff + vocab];
@@ -794,7 +992,10 @@ impl TinyLmRuntime {
                 let t1 = (t0 + tile).min(vocab);
                 // SAFETY: vocab tiles are disjoint.
                 let tile_out = unsafe { l_raw.range_mut(t0, t1 - t0) };
-                kernels::logits_tile(xn, embed, t0, t1, tile_out);
+                match qembed {
+                    Some(q) => kernels::logits_tile_i8(xn, q, t0, t1, tile_out),
+                    None => kernels::logits_tile(xn, embed, t0, t1, tile_out),
+                }
             });
             self.return_ws(ws);
             return;
@@ -803,11 +1004,14 @@ impl TinyLmRuntime {
         kernels::par_for(jobs.len(), self.threads, |i| {
             let (xoff, ooff) = jobs[i];
             let mut ws = self.lease_ws();
-            ws.ensure(1, dm, 1);
+            ws.ensure(1, dm, 1, false);
             kernels::rms_norm(&xs[xoff..xoff + dm], ln_f, &mut ws.xn[..dm]);
             // SAFETY: each job owns its [vocab] output range.
             let out = unsafe { l_raw.range_mut(ooff, vocab) };
-            kernels::logits_tile(&ws.xn[..dm], embed, 0, vocab, out);
+            match qembed {
+                Some(q) => kernels::logits_tile_i8(&ws.xn[..dm], q, 0, vocab, out),
+                None => kernels::logits_tile(&ws.xn[..dm], embed, 0, vocab, out),
+            }
             self.return_ws(ws);
         });
     }
@@ -958,6 +1162,7 @@ impl TinyLmRuntime {
         };
         self.logits_stage(&xs, &jobs, &mut logits);
         self.return_buf(xs);
+        self.bump_quant_counters(n_active as u64, jobs.len() as u64);
 
         let seeded_tokens: usize = (0..batch).filter(|&b| is_active(b)).map(seed_len).sum();
         let seeded_rows = (0..batch).filter(|&b| is_active(b) && seed_len(b) > 0).count();
@@ -1115,6 +1320,7 @@ impl TinyLmRuntime {
             .collect();
         self.logits_stage(&xs, &jobs, &mut logits);
         self.return_buf(xs);
+        self.bump_quant_counters(n_active as u64, jobs.len() as u64);
 
         self.counters.decode_calls.fetch_add(1, Ordering::Relaxed);
         self.counters.decode_tokens.fetch_add(n_active as u64, Ordering::Relaxed);
@@ -1204,9 +1410,13 @@ mod tests {
     use super::*;
 
     /// Tiny in-memory runtime (2 layers, vocab 16) for interpreter checks —
-    /// no artifacts needed.
+    /// no artifacts needed. Pinned to the f32 contract tier so a stray
+    /// `AIBRIX_RT_PRECISION` in the environment cannot flip the bit-exact
+    /// tests onto the quant path.
     fn toy_runtime() -> TinyLmRuntime {
-        TinyLmRuntime::synthetic(&SyntheticSpec::tiny())
+        let mut rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        rt.set_precision(Precision::F32);
+        rt
     }
 
     #[test]
@@ -1401,6 +1611,77 @@ mod tests {
         assert!(rt
             .prefill_last_seeded(1, &tokens, &[7], None, &[])
             .is_err());
+    }
+
+    #[test]
+    fn precision_parses_and_rejects_garbage() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("FP32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse(" i8 ").unwrap(), Precision::Int8);
+        assert!(Precision::parse("bf16").is_err());
+        assert!("int8".parse::<Precision>().is_ok());
+        assert!("garbage".parse::<Precision>().is_err());
+    }
+
+    #[test]
+    fn int8_tier_is_deterministic_and_self_consistent() {
+        // The relaxed tier gives up bit-exactness vs f32, not determinism:
+        // within int8, greedy decode repeats exactly and the KV decode
+        // path still chains bit-exactly into re-prefill.
+        let mut rt = toy_runtime();
+        rt.set_precision(Precision::Int8);
+        assert_eq!(rt.precision(), Precision::Int8);
+        let prompt = vec![3u32, 8, 2];
+        let a = rt.generate(&[prompt.clone()].to_vec(), 4).unwrap();
+        let b = rt.generate(&[prompt.clone()].to_vec(), 4).unwrap();
+        assert_eq!(a, b, "int8 greedy decode must be deterministic");
+        assert!(a[0].iter().all(|&t| t < 16));
+        let mut longer = prompt.clone();
+        longer.push(a[0][0]);
+        let again = rt.generate(&[longer].to_vec(), 2).unwrap();
+        assert_eq!(again[0][0], a[0][1], "int8 KV decode must match re-prefill");
+    }
+
+    #[test]
+    fn precision_roundtrip_restores_f32_bits() {
+        // Entering and leaving int8 must leave the f32 path untouched —
+        // the f32 parameters are never modified, only mirrored.
+        let rt = toy_runtime();
+        let tokens: Vec<i32> = vec![3, 8, 2, 1, 0, 0, 0, 0, 9, 4, 4, 7, 1, 0, 0, 0];
+        let before = rt.prefill(2, &tokens).unwrap();
+        let mut rt2 = toy_runtime();
+        rt2.set_precision(Precision::Int8);
+        rt2.set_precision(Precision::F32);
+        let after = rt2.prefill(2, &tokens).unwrap();
+        assert!(before
+            .logits
+            .iter()
+            .zip(&after.logits)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn quant_counters_track_int8_work_only() {
+        let rt = toy_runtime();
+        rt.generate(&[vec![1u32, 2, 3]].to_vec(), 3).unwrap();
+        let s = rt.stats();
+        assert_eq!(s.quant_gemm_calls, 0, "f32 path must not count quant work");
+        assert_eq!(s.quant_bytes_saved, 0);
+
+        let mut rtq = toy_runtime();
+        rtq.set_precision(Precision::Int8);
+        rtq.generate(&[vec![1u32, 2, 3]].to_vec(), 3).unwrap();
+        let q = rtq.stats();
+        // Toy model: 2 layers x 6 GEMMs + 1 logits job per call, 3 calls
+        // (1 prefill + 2 decode steps), one active row each.
+        assert_eq!(q.quant_gemm_calls, 3 * (2 * 6 + 1));
+        // Bytes: per call, row GEMMs 2 layers * 3 * (4*8*8 + 2*8*16) and
+        // one logits job 3 * 16 * 8.
+        let per_call = 2 * 3 * (4 * 8 * 8 + 2 * 8 * 16) + 3 * 16 * 8;
+        assert_eq!(q.quant_bytes_saved, 3 * per_call as u64);
+        rtq.reset_stats();
+        assert_eq!(rtq.stats(), RtStats::default());
     }
 
     #[test]

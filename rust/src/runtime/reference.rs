@@ -387,11 +387,19 @@ impl TinyLmRuntime {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{SyntheticSpec, TinyLmRuntime};
+    use super::super::{Precision, SyntheticSpec, TinyLmRuntime};
+
+    /// The reference comparisons assert the f32 bit-exact contract — pin
+    /// the tier so a stray `AIBRIX_RT_PRECISION` cannot flip them to int8.
+    fn f32_runtime() -> TinyLmRuntime {
+        let mut rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        rt.set_precision(Precision::F32);
+        rt
+    }
 
     #[test]
     fn reference_generate_matches_kernel_generate() {
-        let rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        let rt = f32_runtime();
         let prompts = vec![vec![3u32, 8, 2], vec![1u32, 15]];
         let kernel = rt.generate(&prompts, 4).unwrap();
         let scalar = rt.generate_reference(&prompts, 4).unwrap();
@@ -400,7 +408,7 @@ mod tests {
 
     #[test]
     fn reference_prefill_bits_match_kernel() {
-        let rt = TinyLmRuntime::synthetic(&SyntheticSpec::tiny());
+        let rt = f32_runtime();
         let tokens: Vec<i32> = vec![3, 8, 2, 1, 0, 12, 7, 5];
         let a = rt.prefill(1, &tokens).unwrap();
         let b = rt.prefill_reference(1, &tokens).unwrap();

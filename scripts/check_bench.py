@@ -23,6 +23,14 @@ prefill_kernel `tokens_per_s`. Only decode gates (prefill is reported);
 machine-to-machine noise is why the tolerance is wide — the within-run
 `decode_speedup` vs the scalar reference is the portable number. The
 kvpool gate likewise uses the within-run `pool_speedup`.
+
+Portable within-run gates (machine-independent, checked on every run
+regardless of baseline): `decode_speedup` must stay >= 0.8 (the kernel
+path must not fall behind the scalar reference it replaced) and, when the
+report carries the quantized axis, `quant_top1_ok` must be true (int8
+greedy top-1 agreement >= 0.5). `quant_decode_speedup` vs its 1.5x target
+is reported informationally — absolute quant wins are machine-dependent
+(bandwidth-bound), so the hard floor lives in the bench itself.
 """
 
 import json
@@ -126,9 +134,26 @@ def main(argv):
     if cur_decode is None:
         print(f"check_bench: {current_path} has no decode_kernel result")
         return 2
-    speedup = current.get("derived", {}).get("decode_speedup")
+    derived = current.get("derived", {})
+    speedup = derived.get("decode_speedup")
     print(f"check_bench: current decode_kernel {cur_decode:.0f} tok/s "
           f"(speedup vs scalar reference: {speedup})")
+
+    # Portable within-run gates — these do not need a baseline.
+    if isinstance(speedup, (int, float)) and speedup < 0.8:
+        print(f"check_bench: FAIL — kernel decode fell behind the scalar "
+              f"reference (within-run speedup {speedup:.2f}x < 0.8x)")
+        return 1
+    qspeed = derived.get("quant_decode_speedup")
+    qtarget = derived.get("target_quant_decode_speedup")
+    qagree = derived.get("quant_top1_agreement")
+    if qspeed is not None:
+        print(f"check_bench: quant decode speedup {qspeed:.2f}x vs f32 kernel "
+              f"(target {qtarget}, top-1 agreement {qagree})")
+    if derived.get("quant_top1_ok") is False:
+        print("check_bench: FAIL — int8 greedy top-1 agreement fell below "
+              "the relaxed-exactness floor (quant_top1_ok=false)")
+        return 1
 
     if bless:
         shutil.copyfile(current_path, baseline_path)
