@@ -64,6 +64,7 @@ fn main() {
             seed: 9,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         aibrix::harness::run_with_router_config(cfg, &mut wl, affinity)
     };

@@ -46,6 +46,7 @@ fn scenario(with_pool: bool) -> RunReport {
             seed: 17,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         },
         &mut wl,
     )

@@ -35,6 +35,7 @@ fn main() {
                 seed: 1,
                 deadline: 0,
                 closed_loop_clients: 0,
+                view: Default::default(),
             },
             &mut workload,
         );

@@ -73,6 +73,10 @@ fn snapshots(n: usize) -> Vec<PodSnapshot> {
             },
             prefix_match_blocks: i % 10,
             prompt_blocks: 100,
+            pool_blocks_local: i % 7,
+            pool_blocks_total: i % 10,
+            session_match: i % 3 == 0,
+            slo_headroom: (i as f64 * 0.17) % 1.0,
             resident_adapters: vec![],
         })
         .collect()
@@ -81,15 +85,24 @@ fn snapshots(n: usize) -> Vec<PodSnapshot> {
 fn main() {
     println!("== coordinator hot-path microbenchmarks ==\n");
 
-    // Router decision @ 8 pods: every preset plus a 3-scorer weighted mix,
-    // each asserted against the <5µs decision budget (the pipeline path is
-    // allocation-free; a miss here is a hot-path regression).
+    // Router decision @ 8 pods: every preset — the six paper policies AND
+    // the ClusterView trio (pool-aware, slo-aware, session-sticky) — plus
+    // two weighted mixes, one engaging all three new scorers at once.
+    // Each is asserted against the <5µs decision budget (the pipeline
+    // path is allocation-free; a miss here is a hot-path regression).
     let snaps = snapshots(8);
     let req = request(1600);
-    let mut policies = Policy::all();
+    let mut policies = Policy::extended();
     policies.push(
         Policy::parse("weighted:prefix=0.5,least-request=0.3,least-latency=0.2")
             .expect("valid weighted policy"),
+    );
+    policies.push(
+        Policy::parse(
+            "weighted:prefix=0.2,least-request=0.2,pool-affinity=0.3,\
+             slo-headroom=0.15,session-affinity=0.15",
+        )
+        .expect("valid clusterview weighted policy"),
     );
     for policy in policies {
         let mut router = Router::new(policy, 1);

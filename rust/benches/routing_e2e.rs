@@ -1,0 +1,282 @@
+//! Pool-aware routing on the real serving path: ClusterView-routed
+//! multi-turn sessions over two real engine replicas sharing a
+//! distributed KV pool, pool-aware vs session-sticky vs pool-blind.
+//!
+//! Every conversation's turn-t prompt is the first `(t+1)*16` tokens of
+//! its history. The pool runs with a long metadata-visibility delay, so
+//! within the bench a block is only usable by the node that computed it
+//! (writer-local visibility) — exactly the regime where *placement* is
+//! everything: a router that follows pool residency (or session
+//! stickiness) sends each turn to the replica whose shard holds the
+//! conversation's blocks and prefills only the new suffix; a pool-blind
+//! router scatters turns and re-prefills whatever landed remote.
+//!
+//! Run: `cargo bench --bench routing_e2e`            (full)
+//!      `cargo bench --bench routing_e2e -- --smoke` (CI quick pass)
+//!
+//! Writes `benchmarks/BENCH_routing_e2e.json` (schema in BENCHMARKS.md)
+//! and asserts the ISSUE 5 acceptance gates: pool-aware routing achieves
+//! a strictly higher block hit ratio than pool-blind, at least pool-blind
+//! served-prefill throughput, with bit-identical completions.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use aibrix::engine::real::{EnginePool, RealEngine, RealRequest};
+use aibrix::gateway::{ClusterView, ClusterViewConfig, CounterPod, Policy, Router};
+use aibrix::json::Json;
+use aibrix::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
+use aibrix::runtime::{ModelCfg, RtStats, SyntheticSpec, TinyLmRuntime};
+use aibrix::telemetry::BenchReport;
+use aibrix::workload::Request;
+
+/// Tokens per content-addressed block (= the model's page size).
+const BT: usize = 16;
+const SEQ: usize = 64;
+const REPLICAS: usize = 2;
+const TURNS: usize = 4; // prompts of 16/32/48/64 tokens
+const MAX_NEW: usize = 4;
+/// Metadata visibility delay far beyond the bench's wall time: only
+/// writer-local visibility applies, so hits are a pure placement signal.
+const DELAY_US: u64 = 3_600_000_000;
+
+fn bench_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        cfg: ModelCfg {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            max_seq: SEQ + 16,
+            page_size: BT,
+        },
+        d_ff: 384,
+        // Batch-1 artifacts: each request serves alone, so completions are
+        // a pure function of the prompt — bit-identical across policies.
+        prefill: vec![(1, SEQ)],
+        decode: vec![1],
+        seed: 42,
+    }
+}
+
+/// Token `s` of conversation `c`'s history (deterministic,
+/// conversation-unique so distinct conversations never share blocks).
+fn conv_tok(c: usize, s: usize) -> u32 {
+    ((c * 131 + s * 17 + 7) % 512) as u32
+}
+
+struct RunOut {
+    outputs: Vec<(u64, Vec<u32>)>,
+    rt: RtStats,
+    served_prompt_tokens: u64,
+    wall_ms: f64,
+    pool: PoolStats,
+    decisions: u64,
+    pool_affinity_hits: u64,
+    session_hits: u64,
+}
+
+fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
+    let kv_bytes = spec.cfg.kv_bytes_per_token();
+    let mut pcfg = KvPoolConfig::new(
+        (0..REPLICAS as u64).map(|i| (i, 1u64 << 30)).collect(),
+        kv_bytes,
+        BT,
+    );
+    pcfg.metadata_delay_us = DELAY_US;
+    let pool = Arc::new(Mutex::new(DistKvPool::new(pcfg)));
+    let hook = EnginePool::new(Arc::clone(&pool), "tinylm-routing-bench");
+    let mut engines: Vec<RealEngine> = (0..REPLICAS)
+        .map(|node| {
+            RealEngine::from_runtime(
+                TinyLmRuntime::synthetic(spec),
+                Some(hook.for_node(node as u64)),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut router = Router::new(policy, 7);
+    let mut view = ClusterView::new(ClusterViewConfig {
+        block_size: BT,
+        chain_seed: hook.chain_seed(),
+        ..Default::default()
+    });
+
+    let mut served_prompt_tokens = 0u64;
+    let t0 = Instant::now();
+    for turn in 0..TURNS {
+        for c in 0..convs {
+            let prompt: Vec<u32> = (0..(turn + 1) * BT).map(|s| conv_tok(c, s)).collect();
+            served_prompt_tokens += prompt.len() as u64;
+            let id = (c * TURNS + turn) as u64;
+            let route_req = Request {
+                id,
+                session: c as u64 + 1,
+                tokens: prompt.clone(),
+                output_len: MAX_NEW,
+                arrival: 0,
+                model: "tinylm".into(),
+                adapter: None,
+                user: 0,
+                shared_prefix_len: 0,
+            };
+            let mut pods: Vec<CounterPod> = engines
+                .iter()
+                .enumerate()
+                .map(|(i, e)| CounterPod {
+                    pod: i,
+                    node: i as u64,
+                    ready: true,
+                    inflight: e.pending(),
+                })
+                .collect();
+            let now = hook.clock_us();
+            let snaps = {
+                let guard = pool.lock().unwrap();
+                let pool_ref: &DistKvPool = &guard;
+                view.snapshot(now, &route_req, &mut pods, Some(pool_ref))
+            };
+            let pick = router.select(&route_req, &snaps).expect("a replica is ready");
+            view.note_route(route_req.session, pick);
+            engines[pick].enqueue(RealRequest { id, tokens: prompt, max_new_tokens: MAX_NEW });
+        }
+        for e in engines.iter_mut() {
+            e.run_to_drain().unwrap();
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut outputs: Vec<(u64, Vec<u32>)> = engines
+        .iter()
+        .flat_map(|e| e.completions.iter().map(|c| (c.id, c.generated.clone())))
+        .collect();
+    outputs.sort();
+    let mut rt = RtStats::default();
+    for e in &engines {
+        let s = e.runtime_stats();
+        rt.prefill_tokens += s.prefill_tokens;
+        rt.prefill_us += s.prefill_us;
+        rt.seeded_prefill_rows += s.seeded_prefill_rows;
+        rt.seeded_prefill_tokens += s.seeded_prefill_tokens;
+    }
+    let tel = router.telemetry().cloned().unwrap_or_default();
+    RunOut {
+        outputs,
+        rt,
+        served_prompt_tokens,
+        wall_ms,
+        pool: pool.lock().unwrap().stats.clone(),
+        decisions: tel.decisions,
+        pool_affinity_hits: tel.pool_affinity_hits,
+        session_hits: tel.session_hits,
+    }
+}
+
+fn tps(run: &RunOut) -> f64 {
+    run.served_prompt_tokens as f64 / (run.rt.prefill_us.max(1) as f64 / 1e6)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let convs = if smoke { 6 } else { 12 };
+    let spec = bench_spec();
+
+    println!("== routing_e2e ({}) ==", if smoke { "smoke" } else { "full" });
+    println!(
+        "model: vocab={} d_model={} layers={}  {REPLICAS} replicas, {convs} conversations x {TURNS} turns, {BT}-token blocks",
+        spec.cfg.vocab, spec.cfg.d_model, spec.cfg.n_layers
+    );
+
+    let blind = run_policy(Policy::Random, convs, &spec);
+    let aware = run_policy(Policy::PoolAware, convs, &spec);
+    let sticky = run_policy(Policy::SessionSticky, convs, &spec);
+
+    let identical = blind.outputs == aware.outputs && blind.outputs == sticky.outputs;
+    let speedup = tps(&aware) / tps(&blind);
+
+    let mut report = BenchReport::new("routing_e2e");
+    report
+        .config("smoke", smoke)
+        .config("replicas", REPLICAS)
+        .config("conversations", convs)
+        .config("turns", TURNS)
+        .config("block_tokens", BT)
+        .config("metadata_delay_us", DELAY_US)
+        .config("vocab", spec.cfg.vocab)
+        .config("d_model", spec.cfg.d_model)
+        .config("n_layers", spec.cfg.n_layers);
+    for (name, run) in [
+        ("pool_blind_random", &blind),
+        ("pool_aware", &aware),
+        ("session_sticky", &sticky),
+    ] {
+        report.result([
+            ("name", Json::from(name)),
+            ("tokens_per_s", Json::from(tps(run))),
+            ("hit_ratio", Json::from(run.pool.hit_rate())),
+            ("blocks_hit_local", Json::from(run.pool.blocks_hit_local)),
+            ("blocks_hit_remote", Json::from(run.pool.blocks_hit_remote)),
+            ("served_prompt_tokens", Json::from(run.served_prompt_tokens)),
+            ("computed_prefill_tokens", Json::from(run.rt.prefill_tokens)),
+            ("seeded_prefill_tokens", Json::from(run.rt.seeded_prefill_tokens)),
+            ("prefill_ms", Json::from(run.rt.prefill_us as f64 / 1e3)),
+            ("wall_ms", Json::from(run.wall_ms)),
+            ("route_decisions", Json::from(run.decisions)),
+            ("route_pool_affinity_hits", Json::from(run.pool_affinity_hits)),
+            ("route_session_hits", Json::from(run.session_hits)),
+        ]);
+    }
+    report
+        .derived("aware_speedup", speedup)
+        .derived("aware_hit_ratio", aware.pool.hit_rate())
+        .derived("blind_hit_ratio", blind.pool.hit_rate())
+        .derived("sticky_hit_ratio", sticky.pool.hit_rate())
+        .derived("outputs_bit_identical", identical);
+
+    for (name, run) in [("blind ", &blind), ("aware ", &aware), ("sticky", &sticky)] {
+        println!(
+            "{name}: {:>9.0} served tok/s  hit ratio {:>5.1}%  ({} computed, {} seeded, {:.1} ms prefill)",
+            tps(run),
+            run.pool.hit_rate() * 100.0,
+            run.rt.prefill_tokens,
+            run.rt.seeded_prefill_tokens,
+            run.rt.prefill_us as f64 / 1e3,
+        );
+    }
+    println!(
+        "pool-aware vs blind: {speedup:.2}x served prefill tok/s, outputs identical: {identical}"
+    );
+
+    let path = report.default_path(env!("CARGO_MANIFEST_DIR"));
+    report.write_to(&path).expect("write BENCH_routing_e2e.json");
+    println!("wrote {}", path.display());
+
+    // Acceptance gates (ISSUE 5): routing on pool residency must lift the
+    // hit ratio and never cost served-prefill throughput, while reuse
+    // stays bit-exact. Session stickiness reaches the same locality
+    // through the session table alone.
+    assert!(identical, "routing policy changed completions");
+    assert!(
+        aware.pool.hit_rate() > blind.pool.hit_rate(),
+        "pool-aware hit ratio {:.3} must beat pool-blind {:.3}",
+        aware.pool.hit_rate(),
+        blind.pool.hit_rate()
+    );
+    assert!(
+        sticky.pool.hit_rate() > blind.pool.hit_rate(),
+        "session-sticky hit ratio {:.3} must beat pool-blind {:.3}",
+        sticky.pool.hit_rate(),
+        blind.pool.hit_rate()
+    );
+    assert!(
+        speedup >= 1.0,
+        "pool-aware served prefill must not fall behind pool-blind: {speedup:.2}x"
+    );
+    assert!(
+        aware.pool_affinity_hits > 0,
+        "pool-affinity scorer never engaged ({} decisions, {} hits)",
+        aware.decisions,
+        aware.pool_affinity_hits,
+    );
+}

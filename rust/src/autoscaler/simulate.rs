@@ -7,8 +7,9 @@
 
 use super::Scaler;
 use crate::cluster::GpuKind;
+use crate::engine::prefix::BlockKey;
 use crate::engine::{EngineConfig, EngineSim, ModelSpec};
-use crate::gateway::{PodSnapshot, Policy, Router};
+use crate::gateway::{ClusterView, ClusterViewConfig, PodSignalSource, PodSignals, Policy, Router};
 use crate::sim::{SimTime, Simulator, SECONDS};
 use crate::util::stats::Summary;
 use crate::util::{LogNormal, Rng};
@@ -83,6 +84,16 @@ struct PodSlot {
     draining: bool,
 }
 
+impl PodSignalSource for PodSlot {
+    fn signals(&mut self, now: SimTime, keys: &[BlockKey]) -> PodSignals {
+        let mut s = self.engine.signals(now, keys);
+        // Lifecycle readiness composes with engine health: a pod that is
+        // cold-starting or draining must not take traffic.
+        s.ready = self.ready && !self.draining && s.ready;
+        s
+    }
+}
+
 /// Run the scaling simulation with the given scaler.
 pub fn run(cfg: &ScalingSimConfig, scaler: &mut dyn Scaler) -> ScalingReport {
     let mut sim: Simulator<Ev> = Simulator::new();
@@ -90,6 +101,7 @@ pub fn run(cfg: &ScalingSimConfig, scaler: &mut dyn Scaler) -> ScalingReport {
     let prompt_dist = LogNormal::from_median_sigma(cfg.prompt_median, 0.7);
     let out_dist = LogNormal::from_median_sigma(cfg.output_median, 0.6);
     let mut router = Router::new(Policy::LeastRequest, cfg.seed);
+    let mut view = ClusterView::new(ClusterViewConfig::default());
 
     let mk_engine = |id: usize| {
         let mut ec = EngineConfig::new(cfg.gpu, cfg.model.clone());
@@ -137,19 +149,12 @@ pub fn run(cfg: &ScalingSimConfig, scaler: &mut dyn Scaler) -> ScalingReport {
                     shared_prefix_len: 0,
                 };
                 next_id += 1;
-                let snaps: Vec<PodSnapshot> = pods
-                    .iter_mut()
-                    .map(|p| PodSnapshot {
-                        pod: p.engine.id,
-                        ready: p.ready && !p.draining && !p.engine.is_failed(),
-                        stats: p.engine.stats(now),
-                        prefix_match_blocks: 0,
-                        prompt_blocks: 1,
-                        resident_adapters: vec![],
-                    })
-                    .collect();
+                let snaps = view.snapshot(now, &req, &mut pods, None);
                 match router.select(&req, &snaps) {
                     Some(pod) => {
+                        if req.session != 0 {
+                            view.note_route(req.session, pod);
+                        }
                         pods[pod].engine.enqueue(req);
                         if idle[pod] {
                             idle[pod] = false;

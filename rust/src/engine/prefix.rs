@@ -41,6 +41,25 @@ pub fn model_chain_seed(model_id: &str) -> BlockKey {
     h | 1
 }
 
+/// Hash every full block of a prompt into `out` (cleared first), starting
+/// from `seed`. The allocation-free form behind
+/// [`prompt_block_keys_seeded`]; hot paths with a scratch buffer (the
+/// router's `ClusterView`) call this so the chain walk has exactly one
+/// definition — residency probes and admission lookups can never drift.
+pub fn prompt_block_keys_seeded_into(
+    seed: BlockKey,
+    tokens: &[u32],
+    block_size: usize,
+    out: &mut Vec<BlockKey>,
+) {
+    out.clear();
+    let mut parent = seed;
+    for chunk in tokens.chunks_exact(block_size) {
+        parent = chain_hash(parent, chunk);
+        out.push(parent);
+    }
+}
+
 /// Hash every full block of a prompt into its chain of keys, starting from
 /// `seed` (0 for the engine-local unseeded chain, [`model_chain_seed`] for
 /// cross-replica content addressing).
@@ -50,11 +69,7 @@ pub fn prompt_block_keys_seeded(
     block_size: usize,
 ) -> Vec<BlockKey> {
     let mut keys = Vec::with_capacity(tokens.len() / block_size);
-    let mut parent = seed;
-    for chunk in tokens.chunks_exact(block_size) {
-        parent = chain_hash(parent, chunk);
-        keys.push(parent);
-    }
+    prompt_block_keys_seeded_into(seed, tokens, block_size, &mut keys);
     keys
 }
 

@@ -98,6 +98,31 @@ impl EnginePool {
         self.epoch.elapsed().as_micros() as u64
     }
 
+    /// µs since the pool epoch — the instant `visible_at` stamps and
+    /// residency probes are measured against.
+    pub fn clock_us(&self) -> u64 {
+        self.now_us()
+    }
+
+    /// Chain-hash seed of this pool's content addressing (the router's
+    /// `ClusterView` hashes prompts with the same seed so its residency
+    /// probes and the engine's admission lookups agree on block keys).
+    pub fn chain_seed(&self) -> u64 {
+        self.model_seed
+    }
+
+    /// Tokens per content-addressed block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Run `f` against the shared pool (router residency probes, metrics).
+    /// Keep `f` short — the same lock serializes every replica's admission
+    /// lookups and write-backs.
+    pub fn with_pool<R>(&self, f: impl FnOnce(&DistKvPool) -> R) -> R {
+        f(&self.pool.lock().unwrap())
+    }
+
     /// Snapshot of the shared pool's counters.
     pub fn stats(&self) -> PoolStats {
         self.pool.lock().unwrap().stats.clone()

@@ -144,7 +144,7 @@ impl Seq {
 }
 
 /// Per-engine observable state — the routing signals of §3.2.2.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EngineStats {
     pub waiting: usize,
     pub running: usize,

@@ -76,6 +76,10 @@ pub struct HeteroParams {
     pub slo: Slo,
     /// TTFT SLO for attainment accounting, ms.
     pub ttft_slo_ms: f64,
+    /// Routing policy for the serving runs. The ClusterView plane feeds
+    /// `slo` into every snapshot, so `Policy::SloAware` routes on the same
+    /// targets the optimizer planned the fleet for.
+    pub policy: Policy,
 }
 
 impl Default for HeteroParams {
@@ -86,6 +90,7 @@ impl Default for HeteroParams {
             seed: 7,
             slo: Slo::default(),
             ttft_slo_ms: 5_000.0,
+            policy: Policy::LeastRequest,
         }
     }
 }
@@ -132,15 +137,19 @@ fn serve(p: &HeteroParams, counts: &[(GpuKind, usize)], label: &str) -> FleetOut
         }
     }
     let mut mix = HeteroMix::new(p.n_requests, p.seed);
+    // The view carries the experiment's SLO so slo-headroom routing and
+    // the optimizer's planning targets agree.
+    let view = crate::gateway::ClusterViewConfig { slo: p.slo, ..Default::default() };
     let r: RunReport = run(
         HarnessConfig {
             engines,
-            policy: Policy::LeastRequest,
+            policy: p.policy,
             arrival: ArrivalProcess::Poisson { rate: p.arrival_rps },
             kv_pool: None,
             seed: p.seed,
             deadline: 0,
             closed_loop_clients: 0,
+            view,
         },
         &mut mix,
     );
@@ -266,6 +275,18 @@ mod tests {
             homo.mean_latency_ms
         );
         assert!(het.slo_attainment > 0.9, "{}", het.slo_attainment);
+    }
+
+    #[test]
+    fn slo_aware_routing_serves_the_planned_fleet() {
+        // ROADMAP follow-on: SLO-driven routing wired into EXP-HET. The
+        // slo-headroom scorer routes on the same targets the optimizer
+        // planned for; the fleet must still serve everything with solid
+        // attainment.
+        let p = HeteroParams { policy: Policy::SloAware, ..quick() };
+        let het = plan_and_serve(&p, &[GpuKind::A10, GpuKind::L20], "het-slo");
+        assert_eq!(het.completed, p.n_requests);
+        assert!(het.slo_attainment > 0.75, "{}", het.slo_attainment);
     }
 
     #[test]

@@ -81,6 +81,7 @@ pub fn run_policy(p: &RoutingParams, policy: Policy) -> PolicyRow {
             seed: p.seed,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         },
         &mut wl,
     );
@@ -126,9 +127,14 @@ pub fn hybrid_prefix_load() -> Policy {
     Policy::Weighted(cfg)
 }
 
-/// All six paper policies plus the weighted hybrid, same workload/seed.
+/// All six paper policies, the ClusterView presets (`slo-aware` trades
+/// affinity against deadline risk; `session-sticky` pins each schema
+/// "session" to a pod — the Bird-SQL generator keys sessions on schemas,
+/// so stickiness doubles as prefix locality; `pool-aware` degrades to its
+/// load terms without a pool), plus the weighted hybrid — same
+/// workload/seed for every row.
 pub fn run_routing(p: &RoutingParams) -> Vec<PolicyRow> {
-    Policy::all()
+    Policy::extended()
         .into_iter()
         .chain(std::iter::once(hybrid_prefix_load()))
         .map(|pol| run_policy(p, pol))
@@ -213,6 +219,8 @@ mod tests {
         let rows = run_routing(&quick());
         let text = render(&rows);
         assert!(text.contains("prefix-cache-aware"));
+        assert!(text.contains("session-sticky"));
+        assert!(text.contains("slo-aware"));
         assert!(text.contains("vs random"));
     }
 }

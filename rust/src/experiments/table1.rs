@@ -143,6 +143,7 @@ pub fn run_cell(p: &Table1Params, base: BaseConfig, dist_kv: bool) -> RunReport 
             seed: p.seed,
             deadline: 0,
             closed_loop_clients: p.clients,
+            view: Default::default(),
         },
         &mut wl,
     )

@@ -23,6 +23,13 @@
 //!     (ties go to the idler pod), not an oversight. Meanwhile
 //!     [`Policy::Weighted`] / `weighted:prefix=0.6,least-request=0.4`
 //!     expresses hybrids the enum could not.
+//!   * [`view`] — **ClusterView**, the unified signal plane: one snapshot
+//!     producer composing per-replica load/latency/KV stats, distributed
+//!     KV-pool residency (per-node, via [`crate::kvcache::DistKvPool::residency`]),
+//!     SLO targets and bounded session tables into the [`PodSnapshot`]s
+//!     every entry point routes from. Three scorers consume its signals:
+//!     `pool-affinity`, `slo-headroom`, `session-affinity` (presets
+//!     `pool-aware`, `slo-aware`, `session-sticky`).
 //!   * [`ratelimit`] — the TPM/RPM token buckets.
 //!   * [`fairness`] — the per-tenant DRR dispatch queue plus
 //!     [`TenantUsage`], the decayed token meter behind the fairness scorer.
@@ -48,11 +55,15 @@ pub mod fairness;
 pub mod ratelimit;
 pub mod router;
 pub mod scoring;
+pub mod view;
 
 pub use fairness::{FairQueue, TenantUsage};
 pub use ratelimit::{RateLimitConfig, RateLimiter};
-pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD};
-pub use scoring::{PipelineConfig, ScoreCtx, ScoringPipeline};
+pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD, REMOTE_POOL_CREDIT};
+pub use scoring::{
+    PipelineConfig, RouteTelemetry, ScoreCtx, ScoringPipeline, N_SCORERS, SCORER_NAMES,
+};
+pub use view::{ClusterView, ClusterViewConfig, CounterPod, PodSignalSource, PodSignals};
 
 use crate::sim::SimTime;
 use crate::workload::Request;
@@ -115,17 +126,9 @@ impl Gateway {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::EngineStats;
 
     fn pod(id: usize) -> PodSnapshot {
-        PodSnapshot {
-            pod: id,
-            ready: true,
-            stats: EngineStats::default(),
-            prefix_match_blocks: 0,
-            prompt_blocks: 1,
-            resident_adapters: vec![],
-        }
+        PodSnapshot { pod: id, prompt_blocks: 1, ..Default::default() }
     }
 
     fn req(user: u32, tokens: usize) -> Request {

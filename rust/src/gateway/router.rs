@@ -15,20 +15,62 @@ use crate::engine::EngineStats;
 use crate::util::Rng;
 use crate::workload::Request;
 
+/// Credit a pool block homed on *another* node earns relative to a
+/// colocated one in the pool-affinity score: a remote hit still skips
+/// prefill compute, but pays the network transfer, so it must never
+/// outrank the shard that already holds the bytes.
+pub const REMOTE_POOL_CREDIT: f64 = 0.25;
+
 /// Point-in-time view of one serving pod, as the gateway sees it.
-#[derive(Debug, Clone)]
+/// Produced by [`super::view::ClusterView`] — every entry point (harness,
+/// `aibrix serve`, autoscaler sim, benches) routes from the same snapshot
+/// shape instead of hand-rolling field subsets.
+#[derive(Debug, Clone, PartialEq)]
 pub struct PodSnapshot {
     /// Engine/pod index used by the harness.
     pub pod: usize,
     pub ready: bool,
     pub stats: EngineStats,
-    /// Full prompt blocks of *this request* matched by the pod's local
-    /// prefix cache (the prefix-aware signal).
+    /// Full prompt blocks of *this request* the pod can serve warm: its
+    /// engine-local prefix cache, or — when a distributed pool is wired in
+    /// — the blocks homed on the pod's own pool shard (max of the two).
     pub prefix_match_blocks: usize,
     /// Total full blocks of this request's prompt (for the hit fraction).
     pub prompt_blocks: usize,
+    /// Leading prompt blocks resident in the distributed KV pool on this
+    /// pod's own node (colocated — shared-memory fetch, no network).
+    pub pool_blocks_local: usize,
+    /// Longest pool prefix visible to this pod at all (local + remote);
+    /// remote blocks still skip prefill compute at transfer cost.
+    pub pool_blocks_total: usize,
+    /// True when the request's session last routed to this pod
+    /// (session-sticky signal; maintained by `ClusterView::note_route`).
+    pub session_match: bool,
+    /// Headroom vs the SLO latency budget in `[0, 1]`: 1 = far under
+    /// target, 0 = at/over. Computed by the view from the pod's recent
+    /// mean latency against the request's TTFT+ITL budget.
+    pub slo_headroom: f64,
     /// Adapters currently resident (LoRA-aware routing).
     pub resident_adapters: Vec<String>,
+}
+
+impl Default for PodSnapshot {
+    /// Neutral snapshot for tests/builders: ready, idle, no cache or pool
+    /// residency, full SLO headroom.
+    fn default() -> PodSnapshot {
+        PodSnapshot {
+            pod: 0,
+            ready: true,
+            stats: EngineStats::default(),
+            prefix_match_blocks: 0,
+            prompt_blocks: 0,
+            pool_blocks_local: 0,
+            pool_blocks_total: 0,
+            session_match: false,
+            slo_headroom: 1.0,
+            resident_adapters: Vec::new(),
+        }
+    }
 }
 
 impl PodSnapshot {
@@ -42,6 +84,21 @@ impl PodSnapshot {
         } else {
             (self.prefix_match_blocks as f64 / self.prompt_blocks as f64).min(1.0)
         }
+    }
+
+    /// Pool-affinity signal in `[0, 1]`: the fraction of the prompt this
+    /// pod can source from the distributed pool, with colocated blocks at
+    /// full credit and remote ones discounted by [`REMOTE_POOL_CREDIT`].
+    /// Clamped like [`PodSnapshot::prefix_hit_fraction`] — a racing
+    /// snapshot can report more blocks than the prompt holds.
+    pub fn pool_hit_fraction(&self) -> f64 {
+        if self.prompt_blocks == 0 {
+            return 0.0;
+        }
+        let local = self.pool_blocks_local.min(self.prompt_blocks) as f64;
+        let total = self.pool_blocks_total.min(self.prompt_blocks) as f64;
+        let remote = (total - local).max(0.0);
+        ((local + REMOTE_POOL_CREDIT * remote) / self.prompt_blocks as f64).min(1.0)
     }
 }
 
@@ -61,6 +118,15 @@ pub enum Policy {
     /// Prefer instances whose prefix cache covers at least `threshold` of
     /// the prompt; falls back to least-request below the threshold.
     PrefixCacheAware { threshold: f64 },
+    /// ClusterView preset: prefer the replica whose pool shard already
+    /// holds the prompt's blocks, blended with prefix affinity and load.
+    PoolAware,
+    /// ClusterView preset: prefer pods with headroom against the SLO
+    /// latency budget, blended with load and latency.
+    SloAware,
+    /// ClusterView preset: keep a session's turns on the pod that served
+    /// it last (KV locality survives prefix-cache churn), spilling by load.
+    SessionSticky,
     /// Custom weighted scoring mix (the open pipeline form).
     Weighted(PipelineConfig),
 }
@@ -72,10 +138,14 @@ impl Policy {
     /// Parse a policy string. Accepted forms:
     ///   * the six paper names (`random`, `throughput`, `least-request`,
     ///     `least-kv-cache`, `least-latency`, `prefix-cache-aware`),
+    ///   * the ClusterView presets (`pool-aware`, `slo-aware`,
+    ///     `session-sticky`),
     ///   * `prefix-cache-aware=<f64 in [0,1]>` for an explicit threshold,
     ///   * `weighted:key=w,key=w,...` with keys `prefix`, `least-request`,
     ///     `least-kv-cache`, `least-latency`, `throughput`, `lora`,
-    ///     `fairness`, plus `threshold=<f64>`.
+    ///     `fairness`, `pool-affinity`, `slo-headroom`, `session-affinity`,
+    ///     plus `threshold=<f64>`. Each key may appear at most once — a
+    ///     repeated key is a parse error, never a silent last-wins.
     /// Garbage is an error, never silently defaulted.
     pub fn parse(s: &str) -> Result<Policy, String> {
         match s {
@@ -87,6 +157,9 @@ impl Policy {
             "prefix-cache-aware" => {
                 return Ok(Policy::PrefixCacheAware { threshold: DEFAULT_PREFIX_THRESHOLD })
             }
+            "pool-aware" => return Ok(Policy::PoolAware),
+            "slo-aware" => return Ok(Policy::SloAware),
+            "session-sticky" => return Ok(Policy::SessionSticky),
             _ => {}
         }
         if let Some(v) = s.strip_prefix("prefix-cache-aware=") {
@@ -100,6 +173,9 @@ impl Policy {
         }
         if let Some(spec) = s.strip_prefix("weighted:") {
             let mut cfg = PipelineConfig::default();
+            // Duplicate keys are rejected: `weighted:prefix=0.2,prefix=0.8`
+            // silently taking the last weight would mask an operator typo.
+            let mut seen: Vec<String> = Vec::new();
             for part in spec.split(',').filter(|p| !p.is_empty()) {
                 let (key, val) = part
                     .split_once('=')
@@ -107,6 +183,12 @@ impl Policy {
                 let w: f64 = val
                     .parse()
                     .map_err(|_| format!("weighted term {key}={val:?} is not a number"))?;
+                if seen.iter().any(|k| k == key) {
+                    return Err(format!(
+                        "duplicate weighted key {key:?} (each scorer may appear once)"
+                    ));
+                }
+                seen.push(key.to_string());
                 match key {
                     "prefix" => cfg.prefix_affinity = w,
                     "least-request" => cfg.least_request = w,
@@ -115,6 +197,9 @@ impl Policy {
                     "throughput" => cfg.throughput = w,
                     "lora" => cfg.lora_residency = w,
                     "fairness" => cfg.fairness = w,
+                    "pool-affinity" => cfg.pool_affinity = w,
+                    "slo-headroom" => cfg.slo_headroom = w,
+                    "session-affinity" => cfg.session_affinity = w,
                     "threshold" => cfg.prefix_threshold = w,
                     _ => return Err(format!("unknown weighted scorer {key:?}")),
                 }
@@ -133,6 +218,9 @@ impl Policy {
             Policy::LeastKvCache => "least-kv-cache",
             Policy::LeastLatency => "least-latency",
             Policy::PrefixCacheAware { .. } => "prefix-cache-aware",
+            Policy::PoolAware => "pool-aware",
+            Policy::SloAware => "slo-aware",
+            Policy::SessionSticky => "session-sticky",
             Policy::Weighted(_) => "weighted",
         }
     }
@@ -149,6 +237,14 @@ impl Policy {
         ]
     }
 
+    /// Every named preset: the six paper policies plus the ClusterView-era
+    /// composites (`pool-aware`, `slo-aware`, `session-sticky`).
+    pub fn extended() -> Vec<Policy> {
+        let mut v = Policy::all();
+        v.extend([Policy::PoolAware, Policy::SloAware, Policy::SessionSticky]);
+        v
+    }
+
     /// Scoring-pipeline preset for this policy; None for `Random` (which
     /// bypasses scoring entirely).
     pub fn pipeline_config(&self) -> Option<PipelineConfig> {
@@ -161,6 +257,26 @@ impl Policy {
             Policy::PrefixCacheAware { threshold } => {
                 let mut c = PipelineConfig::single("prefix", 1.0);
                 c.prefix_threshold = threshold;
+                c
+            }
+            // Composite presets: the dominant ClusterView signal carries
+            // the decision; the load/latency terms keep hotspots at bay
+            // even before the overload guard engages.
+            Policy::PoolAware => {
+                let mut c = PipelineConfig::single("pool-affinity", 0.55);
+                c.prefix_affinity = 0.15;
+                c.least_request = 0.30;
+                c
+            }
+            Policy::SloAware => {
+                let mut c = PipelineConfig::single("slo-headroom", 0.5);
+                c.least_request = 0.3;
+                c.least_latency = 0.2;
+                c
+            }
+            Policy::SessionSticky => {
+                let mut c = PipelineConfig::single("session-affinity", 0.6);
+                c.least_request = 0.4;
                 c
             }
             Policy::Weighted(cfg) => cfg,
@@ -206,6 +322,12 @@ impl Router {
     /// The active scoring pipeline (None for `random`).
     pub fn pipeline(&self) -> Option<&ScoringPipeline> {
         self.pipeline.as_ref()
+    }
+
+    /// Per-scorer contribution counters (None for `random`, which never
+    /// scores).
+    pub fn telemetry(&self) -> Option<&super::scoring::RouteTelemetry> {
+        self.pipeline.as_ref().map(|p| p.telemetry())
     }
 
     /// Pick a pod for `req`; None when no pod is ready.
@@ -267,14 +389,7 @@ mod tests {
     use super::*;
 
     fn snap(pod: usize) -> PodSnapshot {
-        PodSnapshot {
-            pod,
-            ready: true,
-            stats: EngineStats::default(),
-            prefix_match_blocks: 0,
-            prompt_blocks: 10,
-            resident_adapters: vec![],
-        }
+        PodSnapshot { pod, prompt_blocks: 10, ..Default::default() }
     }
 
     fn req() -> Request {
@@ -493,6 +608,104 @@ mod tests {
         pods[1].prefix_match_blocks = 10;
         assert_eq!(r.select(&req(), &pods), Some(1));
         assert_eq!(r.policy().name(), "weighted");
+    }
+
+    #[test]
+    fn parse_clusterview_presets() {
+        for name in ["pool-aware", "slo-aware", "session-sticky"] {
+            let p = Policy::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+            let cfg = p.pipeline_config().expect("presets score");
+            assert!(cfg.validate().is_ok(), "{name}");
+        }
+        assert_eq!(Policy::parse("pool-aware").unwrap(), Policy::PoolAware);
+        assert_eq!(Policy::extended().len(), Policy::all().len() + 3);
+    }
+
+    #[test]
+    fn parse_weighted_rejects_duplicate_keys() {
+        // A repeated key must be a loud parse error, not a silent
+        // last-weight-wins.
+        for bad in [
+            "weighted:prefix=0.2,prefix=0.8",
+            "weighted:least-request=1,least-request=2",
+            "weighted:pool-affinity=0.5,least-request=0.2,pool-affinity=0.5",
+            "weighted:prefix=1,threshold=0.3,threshold=0.4",
+        ] {
+            let err = Policy::parse(bad).unwrap_err();
+            assert!(err.contains("duplicate"), "{bad}: {err}");
+        }
+        // Distinct keys still parse.
+        assert!(Policy::parse("weighted:prefix=0.5,pool-affinity=0.5").is_ok());
+    }
+
+    #[test]
+    fn parse_new_weighted_scorers() {
+        let p = Policy::parse(
+            "weighted:pool-affinity=0.4,slo-headroom=0.3,session-affinity=0.3",
+        )
+        .unwrap();
+        let Policy::Weighted(cfg) = p else { panic!("expected weighted") };
+        assert_eq!(cfg.pool_affinity, 0.4);
+        assert_eq!(cfg.slo_headroom, 0.3);
+        assert_eq!(cfg.session_affinity, 0.3);
+    }
+
+    #[test]
+    fn pool_aware_prefers_shard_owner() {
+        let mut r = Router::new(Policy::PoolAware, 1);
+        let mut pods = vec![snap(0), snap(1)];
+        // Pod 1's shard holds 8 of 10 blocks; pod 0 could only fetch them
+        // remotely.
+        pods[1].pool_blocks_local = 8;
+        pods[1].pool_blocks_total = 8;
+        pods[0].pool_blocks_total = 8;
+        assert_eq!(r.select(&req(), &pods), Some(1));
+        // Overloaded shard owners lose the claim (no pool hotspots).
+        pods[1].stats.waiting = 30;
+        assert_eq!(r.select(&req(), &pods), Some(0));
+    }
+
+    #[test]
+    fn session_sticky_follows_prior_route() {
+        let mut r = Router::new(Policy::SessionSticky, 1);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].session_match = true;
+        pods[1].stats.running = 2; // slightly busier, still sticky
+        assert_eq!(r.select(&req(), &pods), Some(1));
+        pods[1].stats.waiting = 40; // overloaded: stickiness breaks
+        assert_eq!(r.select(&req(), &pods), Some(0));
+    }
+
+    #[test]
+    fn slo_aware_prefers_headroom() {
+        let mut r = Router::new(Policy::SloAware, 1);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].slo_headroom = 0.1; // near its deadline budget
+        pods[1].slo_headroom = 0.9;
+        assert_eq!(r.select(&req(), &pods), Some(1));
+    }
+
+    #[test]
+    fn pool_hit_fraction_discounts_remote() {
+        let mut p = snap(0);
+        p.prompt_blocks = 10;
+        p.pool_blocks_local = 4;
+        p.pool_blocks_total = 8;
+        let expect = (4.0 + REMOTE_POOL_CREDIT * 4.0) / 10.0;
+        assert!((p.pool_hit_fraction() - expect).abs() < 1e-12);
+        // All-local beats the same count split with remote.
+        let mut q = snap(0);
+        q.prompt_blocks = 10;
+        q.pool_blocks_local = 8;
+        q.pool_blocks_total = 8;
+        assert!(q.pool_hit_fraction() > p.pool_hit_fraction());
+        // Racing snapshots clamp; zero-block prompts score 0.
+        q.pool_blocks_local = usize::MAX;
+        q.pool_blocks_total = usize::MAX;
+        assert_eq!(q.pool_hit_fraction(), 1.0);
+        q.prompt_blocks = 0;
+        assert_eq!(q.pool_hit_fraction(), 0.0);
     }
 
     #[test]

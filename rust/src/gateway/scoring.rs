@@ -21,6 +21,20 @@
 //!     of the requesting tenant, from [`super::fairness::TenantUsage`]):
 //!     light tenants steer to idle pods, heavy tenants consolidate onto
 //!     busy pods so they cannot spread queueing delay across the fleet.
+//!   * `pool_affinity` — [`PodSnapshot::pool_hit_fraction`]: the fraction
+//!     of the prompt resident in the distributed KV pool, colocated blocks
+//!     at full credit, remote ones discounted (they skip compute but pay
+//!     the network). Continuous — ranks shard owners above remote readers
+//!     above cold pods. Fed by `ClusterView` from the pool's residency
+//!     probe, so the distributed pool becomes a *placement* signal.
+//!   * `slo_headroom` — [`PodSnapshot::slo_headroom`]: room between the
+//!     pod's recent latency and the request's SLO budget (TTFT + ITL x
+//!     output cap, targets from `optimizer/profiles.rs`), 1 = far under
+//!     target. Lets a mix trade prefix/pool affinity against deadline risk.
+//!   * `session_affinity` — 1.0 when the request's session last routed to
+//!     this pod (sticky multi-turn KV locality). Binary like prefix
+//!     affinity; composes with the overload guard below, so a drowning
+//!     pod sheds its sessions instead of hoarding them.
 //!
 //! **Overload guard**: pods with more than `2 * cluster_min + 4` admitted
 //! requests lose prefix affinity and latency credit, so stale signals and
@@ -40,6 +54,25 @@
 use super::router::PodSnapshot;
 use crate::workload::Request;
 
+/// Number of scorers in the pipeline (and slots in a score-term vector).
+pub const N_SCORERS: usize = 10;
+
+/// Canonical scorer names, in [`PipelineConfig::weights`] order — the
+/// labels used by `weighted:` strings, validation errors and the
+/// `aibrix_route_scorer_contrib` metric.
+pub const SCORER_NAMES: [&str; N_SCORERS] = [
+    "prefix",
+    "least-request",
+    "least-kv-cache",
+    "least-latency",
+    "throughput",
+    "lora",
+    "fairness",
+    "pool-affinity",
+    "slo-headroom",
+    "session-affinity",
+];
+
 /// Weights + knobs for the scoring pipeline. All weights must be finite
 /// and >= 0, with at least one > 0; `prefix_threshold` lives in `[0, 1]`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -51,6 +84,12 @@ pub struct PipelineConfig {
     pub throughput: f64,
     pub lora_residency: f64,
     pub fairness: f64,
+    /// Distributed-pool residency affinity (ClusterView signal).
+    pub pool_affinity: f64,
+    /// SLO latency-budget headroom (ClusterView signal).
+    pub slo_headroom: f64,
+    /// Session stickiness (ClusterView signal).
+    pub session_affinity: f64,
     /// Prompt-coverage fraction at which prefix affinity engages.
     pub prefix_threshold: f64,
     /// Eject overloaded pods from prefix/latency credit (legacy behavior).
@@ -67,6 +106,9 @@ impl Default for PipelineConfig {
             throughput: 0.0,
             lora_residency: 0.0,
             fairness: 0.0,
+            pool_affinity: 0.0,
+            slo_headroom: 0.0,
+            session_affinity: 0.0,
             prefix_threshold: 0.3,
             overload_guard: true,
         }
@@ -87,12 +129,16 @@ impl PipelineConfig {
             "throughput" => cfg.throughput = weight,
             "lora" => cfg.lora_residency = weight,
             "fairness" => cfg.fairness = weight,
+            "pool-affinity" => cfg.pool_affinity = weight,
+            "slo-headroom" => cfg.slo_headroom = weight,
+            "session-affinity" => cfg.session_affinity = weight,
             other => panic!("unknown scorer {other:?} (see PipelineConfig fields)"),
         }
         cfg
     }
 
-    fn weights(&self) -> [f64; 7] {
+    /// Weight vector in [`SCORER_NAMES`] order.
+    pub fn weights(&self) -> [f64; N_SCORERS] {
         [
             self.prefix_affinity,
             self.least_request,
@@ -101,16 +147,16 @@ impl PipelineConfig {
             self.throughput,
             self.lora_residency,
             self.fairness,
+            self.pool_affinity,
+            self.slo_headroom,
+            self.session_affinity,
         ]
     }
 
     /// Reject non-finite/negative weights, all-zero weight vectors, and
     /// out-of-range thresholds.
     pub fn validate(&self) -> Result<(), String> {
-        for (w, name) in self.weights().iter().zip([
-            "prefix", "least-request", "least-kv-cache", "least-latency", "throughput", "lora",
-            "fairness",
-        ]) {
+        for (w, name) in self.weights().iter().zip(SCORER_NAMES) {
             if !w.is_finite() || *w < 0.0 {
                 return Err(format!("weight {name} must be finite and >= 0, got {w}"));
             }
@@ -206,21 +252,105 @@ fn norm_asc(v: f64, min: f64, max: f64) -> f64 {
     }
 }
 
+/// Cumulative routing observability: how much each scorer contributed to
+/// the winning pods, plus affinity hit counters. Sums of weighted terms —
+/// divide by `decisions` for the mean contribution per decision (what
+/// `/metrics` exports as `aibrix_route_scorer_contrib{scorer}`).
+#[derive(Debug, Clone, Default)]
+pub struct RouteTelemetry {
+    /// Scoring decisions made (Random-policy routers never count here).
+    pub decisions: u64,
+    /// Per-scorer weighted contribution to winners, [`SCORER_NAMES`] order.
+    pub contrib: [f64; N_SCORERS],
+    /// Decisions whose winner had a positive pool-affinity term.
+    pub pool_affinity_hits: u64,
+    /// Decisions whose winner held the request's session.
+    pub session_hits: u64,
+}
+
 /// The weighted scoring core. Holds only config + scratch, so it is cheap
 /// to embed in [`super::Router`].
 pub struct ScoringPipeline {
     cfg: PipelineConfig,
     /// Scratch: per-pod weighted totals, reused across requests.
     totals: Vec<f64>,
+    telemetry: RouteTelemetry,
 }
 
 impl ScoringPipeline {
     pub fn new(cfg: PipelineConfig) -> ScoringPipeline {
-        ScoringPipeline { cfg, totals: Vec::new() }
+        ScoringPipeline { cfg, totals: Vec::new(), telemetry: RouteTelemetry::default() }
     }
 
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
+    }
+
+    /// Cumulative per-scorer contribution counters (observability).
+    pub fn telemetry(&self) -> &RouteTelemetry {
+        &self.telemetry
+    }
+
+    /// Weighted per-scorer terms for one pod, [`SCORER_NAMES`] order.
+    /// Callers must gate on `p.ready` themselves (a not-ready pod has no
+    /// meaningful terms).
+    fn score_terms(
+        cfg: &PipelineConfig,
+        req: &Request,
+        p: &PodSnapshot,
+        rs: &ReadyStats,
+        ctx: &ScoreCtx,
+    ) -> [f64; N_SCORERS] {
+        let mut t = [0.0; N_SCORERS];
+        let load = p.stats.waiting + p.stats.running;
+        let ejected = cfg.overload_guard && rs.overloaded(load);
+        if cfg.prefix_affinity > 0.0 {
+            let warm = !ejected && p.prefix_hit_fraction() >= cfg.prefix_threshold;
+            t[0] = cfg.prefix_affinity * if warm { 1.0 } else { 0.0 };
+        }
+        if cfg.least_request > 0.0 {
+            t[1] = cfg.least_request
+                * norm_desc(load as f64, rs.min_load as f64, rs.max_load as f64);
+        }
+        if cfg.least_kv_cache > 0.0 {
+            t[2] = cfg.least_kv_cache * norm_desc(p.stats.kv_utilization, rs.min_kv, rs.max_kv);
+        }
+        if cfg.least_latency > 0.0 {
+            let s = if ejected {
+                0.0
+            } else {
+                norm_desc(p.stats.avg_latency_us, rs.min_lat, rs.max_lat)
+            };
+            t[3] = cfg.least_latency * s;
+        }
+        if cfg.throughput > 0.0 {
+            t[4] = cfg.throughput * norm_desc(p.stats.tokens_per_s, rs.min_tps, rs.max_tps);
+        }
+        if cfg.lora_residency > 0.0 {
+            let resident = req
+                .adapter
+                .as_ref()
+                .map(|a| p.resident_adapters.iter().any(|r| r == a))
+                .unwrap_or(false);
+            t[5] = cfg.lora_residency * if resident { 1.0 } else { 0.0 };
+        }
+        if cfg.fairness > 0.0 {
+            let share = ctx.tenant_share.clamp(0.0, 1.0);
+            let nl = norm_asc(load as f64, rs.min_load as f64, rs.max_load as f64);
+            t[6] = cfg.fairness * (share * nl + (1.0 - share) * (1.0 - nl));
+        }
+        // The ClusterView scorers all respect the overload guard: affinity
+        // of any kind must never pile work onto a drowning pod.
+        if cfg.pool_affinity > 0.0 && !ejected {
+            t[7] = cfg.pool_affinity * p.pool_hit_fraction();
+        }
+        if cfg.slo_headroom > 0.0 && !ejected {
+            t[8] = cfg.slo_headroom * p.slo_headroom.clamp(0.0, 1.0);
+        }
+        if cfg.session_affinity > 0.0 && !ejected && p.session_match {
+            t[9] = cfg.session_affinity;
+        }
+        t
     }
 
     /// Weighted total for one pod (NEG_INFINITY when not ready).
@@ -234,45 +364,7 @@ impl ScoringPipeline {
         if !p.ready {
             return f64::NEG_INFINITY;
         }
-        let load = p.stats.waiting + p.stats.running;
-        let ejected = cfg.overload_guard && rs.overloaded(load);
-        let mut total = 0.0;
-        if cfg.prefix_affinity > 0.0 {
-            let warm = !ejected && p.prefix_hit_fraction() >= cfg.prefix_threshold;
-            total += cfg.prefix_affinity * if warm { 1.0 } else { 0.0 };
-        }
-        if cfg.least_request > 0.0 {
-            total += cfg.least_request
-                * norm_desc(load as f64, rs.min_load as f64, rs.max_load as f64);
-        }
-        if cfg.least_kv_cache > 0.0 {
-            total += cfg.least_kv_cache * norm_desc(p.stats.kv_utilization, rs.min_kv, rs.max_kv);
-        }
-        if cfg.least_latency > 0.0 {
-            let s = if ejected {
-                0.0
-            } else {
-                norm_desc(p.stats.avg_latency_us, rs.min_lat, rs.max_lat)
-            };
-            total += cfg.least_latency * s;
-        }
-        if cfg.throughput > 0.0 {
-            total += cfg.throughput * norm_desc(p.stats.tokens_per_s, rs.min_tps, rs.max_tps);
-        }
-        if cfg.lora_residency > 0.0 {
-            let resident = req
-                .adapter
-                .as_ref()
-                .map(|a| p.resident_adapters.iter().any(|r| r == a))
-                .unwrap_or(false);
-            total += cfg.lora_residency * if resident { 1.0 } else { 0.0 };
-        }
-        if cfg.fairness > 0.0 {
-            let share = ctx.tenant_share.clamp(0.0, 1.0);
-            let nl = norm_asc(load as f64, rs.min_load as f64, rs.max_load as f64);
-            total += cfg.fairness * (share * nl + (1.0 - share) * (1.0 - nl));
-        }
-        total
+        Self::score_terms(cfg, req, p, rs, ctx).iter().sum()
     }
 
     /// Fill `out[i]` with pod i's weighted total (`NEG_INFINITY` for
@@ -315,6 +407,22 @@ impl ScoringPipeline {
                 best = Some((i, total, load));
             }
         }
+        // Observability: attribute the winner's score to its scorers (one
+        // extra O(scorers) pass over a single pod — negligible vs the
+        // decision itself, and it keeps the hot loop accumulation-free).
+        if let Some((i, _, _)) = best {
+            let terms = Self::score_terms(&self.cfg, req, &pods[i], &rs, ctx);
+            self.telemetry.decisions += 1;
+            for (acc, t) in self.telemetry.contrib.iter_mut().zip(terms) {
+                *acc += t;
+            }
+            if terms[7] > 0.0 {
+                self.telemetry.pool_affinity_hits += 1;
+            }
+            if pods[i].session_match {
+                self.telemetry.session_hits += 1;
+            }
+        }
         best.map(|(i, _, _)| pods[i].pod)
     }
 
@@ -327,17 +435,9 @@ impl ScoringPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::EngineStats;
 
     fn snap(pod: usize) -> PodSnapshot {
-        PodSnapshot {
-            pod,
-            ready: true,
-            stats: EngineStats::default(),
-            prefix_match_blocks: 0,
-            prompt_blocks: 10,
-            resident_adapters: vec![],
-        }
+        PodSnapshot { pod, prompt_blocks: 10, ..Default::default() }
     }
 
     fn req() -> Request {
@@ -429,6 +529,73 @@ mod tests {
         assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
         pods[1].ready = false;
         assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), None);
+    }
+
+    #[test]
+    fn pool_affinity_ranks_local_over_remote_over_cold() {
+        let cfg = PipelineConfig::single("pool-affinity", 1.0);
+        let pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1), snap(2)];
+        // Pod 0: 6 blocks on its own shard; pod 1: same 6 visible but all
+        // remote; pod 2: cold.
+        pods[0].pool_blocks_local = 6;
+        pods[0].pool_blocks_total = 6;
+        pods[1].pool_blocks_total = 6;
+        let mut scores = Vec::new();
+        pl.score_into(&req(), &pods, &ScoreCtx::default(), &mut scores);
+        assert!(scores[0] > scores[1], "{scores:?}");
+        assert!(scores[1] > scores[2], "{scores:?}");
+    }
+
+    #[test]
+    fn slo_headroom_scorer_prefers_slack() {
+        let cfg = PipelineConfig::single("slo-headroom", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].slo_headroom = 0.2;
+        pods[1].slo_headroom = 0.8;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        // Out-of-range view values are clamped, not amplified.
+        pods[0].slo_headroom = 7.0;
+        pods[1].slo_headroom = 1.0;
+        let mut scores = Vec::new();
+        pl.score_into(&req(), &pods, &ScoreCtx::default(), &mut scores);
+        assert_eq!(scores[0], scores[1]);
+    }
+
+    #[test]
+    fn session_affinity_respects_overload_guard() {
+        let cfg = PipelineConfig::single("session-affinity", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].session_match = true;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        // Sticky pod far above cluster-min load loses its claim.
+        pods[1].stats.waiting = 25;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(0));
+    }
+
+    #[test]
+    fn telemetry_attributes_winner_contributions() {
+        let mut cfg = PipelineConfig::single("pool-affinity", 0.6);
+        cfg.least_request = 0.4;
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].pool_blocks_local = 10;
+        pods[1].pool_blocks_total = 10;
+        pods[1].session_match = true;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        let t = pl.telemetry();
+        assert_eq!(t.decisions, 2);
+        assert_eq!(t.pool_affinity_hits, 2);
+        assert_eq!(t.session_hits, 2);
+        // pool term = 0.6 * 1.0 per decision; names align with the array.
+        let pool_idx = SCORER_NAMES.iter().position(|&n| n == "pool-affinity").unwrap();
+        assert!((t.contrib[pool_idx] - 1.2).abs() < 1e-12, "{:?}", t.contrib);
+        // Unweighted scorers contribute nothing.
+        let lora_idx = SCORER_NAMES.iter().position(|&n| n == "lora").unwrap();
+        assert_eq!(t.contrib[lora_idx], 0.0);
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! ClusterView — the unified routing signal plane.
+//!
+//! Before this layer, every entry point (sim harness, `aibrix serve`, the
+//! autoscaler simulation, experiments, benches) hand-rolled its own
+//! [`PodSnapshot`]s from whatever subset of signals it happened to have,
+//! and `prefix_match_blocks` only ever saw engine-local caches — the
+//! distributed KV pool (kvcache/pool.rs) was invisible to placement.
+//! `ClusterView` is the single snapshot producer: it composes, per
+//! request,
+//!
+//!   * **raw pod signals** — load/latency/KV stats, readiness, resident
+//!     adapters, engine-local prefix matches — via [`PodSignalSource`]
+//!     (implemented by the engine simulator, by counter-backed
+//!     [`CounterPod`]s for the HTTP server, and by plain [`PodSignals`]
+//!     values for tests);
+//!   * **pool residency** — [`DistKvPool::residency`] per node, hashed
+//!     with the same chain seed the serving path uses, so
+//!     `prefix_match_blocks` / `pool_blocks_*` reflect *pool* state per
+//!     node and the router can prefer the replica whose shard already
+//!     holds the prompt's blocks;
+//!   * **SLO targets** — from [`crate::optimizer::profiles::Slo`], turned
+//!     into a per-pod latency-budget headroom signal;
+//!   * **session stickiness** — a bounded session→pod table maintained by
+//!     [`ClusterView::note_route`], so multi-turn chats keep KV locality
+//!     even when prefix caches churn.
+//!
+//! The snapshot is a pure function of (config, pod signals, pool state,
+//! session table): same inputs ⇒ identical `PodSnapshot` vector, whatever
+//! entry point produced them (property-tested in `tests/cluster_view.rs`).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::router::PodSnapshot;
+use crate::engine::prefix::{prompt_block_keys_seeded_into, BlockKey};
+use crate::engine::{EngineSim, EngineStats};
+use crate::kvcache::DistKvPool;
+use crate::optimizer::profiles::Slo;
+use crate::sim::SimTime;
+use crate::workload::Request;
+
+/// Configuration of the signal plane.
+#[derive(Debug, Clone)]
+pub struct ClusterViewConfig {
+    /// Tokens per content-addressed block — must match the engines' block
+    /// size (and the pool's `block_tokens`) or residency probes miss.
+    pub block_size: usize,
+    /// Chain-hash seed: 0 for the simulator's unseeded chain,
+    /// [`crate::engine::prefix::model_chain_seed`]-derived for the real
+    /// serving path (ask the `EnginePool` hook via `chain_seed()`).
+    pub chain_seed: BlockKey,
+    /// SLO targets feeding the slo-headroom signal.
+    pub slo: Slo,
+    /// Bound on tracked sessions; oldest-by-first-appearance evicts first.
+    pub session_capacity: usize,
+}
+
+impl Default for ClusterViewConfig {
+    fn default() -> ClusterViewConfig {
+        ClusterViewConfig {
+            block_size: 16,
+            chain_seed: 0,
+            slo: Slo::default(),
+            session_capacity: 4096,
+        }
+    }
+}
+
+impl ClusterViewConfig {
+    /// Defaults with the operator env knobs applied:
+    /// `AIBRIX_SLO_TTFT_MS`, `AIBRIX_SLO_ITL_MS`, `AIBRIX_SESSION_CAP`.
+    /// Garbage values are hard errors, never silent defaults.
+    pub fn from_env() -> Result<ClusterViewConfig, String> {
+        let mut cfg = ClusterViewConfig::default();
+        if let Ok(v) = std::env::var("AIBRIX_SLO_TTFT_MS") {
+            cfg.slo.ttft_ms = v
+                .parse()
+                .map_err(|_| format!("AIBRIX_SLO_TTFT_MS={v:?} is not a number"))?;
+        }
+        if let Ok(v) = std::env::var("AIBRIX_SLO_ITL_MS") {
+            cfg.slo.itl_ms = v
+                .parse()
+                .map_err(|_| format!("AIBRIX_SLO_ITL_MS={v:?} is not a number"))?;
+        }
+        if let Ok(v) = std::env::var("AIBRIX_SESSION_CAP") {
+            cfg.session_capacity = v
+                .parse()
+                .map_err(|_| format!("AIBRIX_SESSION_CAP={v:?} is not a number"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// One pod's raw signals, before pool/session/SLO enrichment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodSignals {
+    pub pod: usize,
+    /// Hosting node (pool colocation identity).
+    pub node: u64,
+    pub ready: bool,
+    pub stats: EngineStats,
+    /// Leading prompt blocks held by the pod's engine-local prefix cache.
+    pub local_match_blocks: usize,
+    pub resident_adapters: Vec<String>,
+}
+
+/// Anything that can report one pod's raw routing signals for a request
+/// whose prompt hashes to `keys`.
+pub trait PodSignalSource {
+    fn signals(&mut self, now: SimTime, keys: &[BlockKey]) -> PodSignals;
+}
+
+impl PodSignalSource for EngineSim {
+    fn signals(&mut self, now: SimTime, keys: &[BlockKey]) -> PodSignals {
+        PodSignals {
+            pod: self.id,
+            node: self.node,
+            ready: !self.is_failed(),
+            stats: self.stats(now),
+            local_match_blocks: self.prefix_match_blocks(keys),
+            resident_adapters: self.resident_adapters().to_vec(),
+        }
+    }
+}
+
+/// Pre-assembled signals pass through unchanged (tests, replays).
+impl PodSignalSource for PodSignals {
+    fn signals(&mut self, _now: SimTime, _keys: &[BlockKey]) -> PodSignals {
+        self.clone()
+    }
+}
+
+/// Counter-backed pod for entry points without an engine simulator —
+/// `aibrix serve` tracks only a live in-flight count per replica; every
+/// other raw signal is neutral and the view supplies pool/session/SLO.
+#[derive(Debug, Clone)]
+pub struct CounterPod {
+    pub pod: usize,
+    pub node: u64,
+    pub ready: bool,
+    /// Admitted-but-unfinished requests (the load signal).
+    pub inflight: usize,
+}
+
+impl PodSignalSource for CounterPod {
+    fn signals(&mut self, _now: SimTime, _keys: &[BlockKey]) -> PodSignals {
+        PodSignals {
+            pod: self.pod,
+            node: self.node,
+            ready: self.ready,
+            stats: EngineStats { waiting: self.inflight, ..EngineStats::default() },
+            local_match_blocks: 0,
+            resident_adapters: Vec::new(),
+        }
+    }
+}
+
+/// Headroom vs the SLO latency budget in `[0, 1]`: the pod's recent mean
+/// end-to-end latency against this request's budget (TTFT target + ITL
+/// target × requested output tokens). 1 = far under target, 0 = at/over.
+/// A pod with no latency history (fresh cluster) reports full headroom.
+pub fn slo_headroom(stats: &EngineStats, req: &Request, slo: &Slo) -> f64 {
+    let budget_us = (slo.ttft_ms + slo.itl_ms * req.output_len as f64) * 1e3;
+    if !budget_us.is_finite() || budget_us <= 0.0 {
+        return 0.0; // degenerate budget: no headroom credit
+    }
+    let h = (1.0 - stats.avg_latency_us / budget_us).clamp(0.0, 1.0);
+    if h.is_finite() {
+        h
+    } else {
+        0.0
+    }
+}
+
+/// Bounded session → pod table. Eviction is FIFO by *first appearance*:
+/// re-routing an existing session updates its pod without re-queueing it,
+/// so the table stays O(capacity) and fully deterministic.
+#[derive(Debug)]
+struct SessionTable {
+    map: HashMap<u64, usize>,
+    order: VecDeque<u64>,
+    capacity: usize,
+}
+
+impl SessionTable {
+    fn new(capacity: usize) -> SessionTable {
+        SessionTable { map: HashMap::new(), order: VecDeque::new(), capacity }
+    }
+
+    fn note(&mut self, session: u64, pod: usize) {
+        if self.capacity == 0 {
+            return;
+        }
+        use std::collections::hash_map::Entry;
+        match self.map.entry(session) {
+            Entry::Occupied(mut e) => {
+                e.insert(pod);
+            }
+            Entry::Vacant(v) => {
+                v.insert(pod);
+                self.order.push_back(session);
+            }
+        }
+        while self.order.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+    }
+
+    fn pod_of(&self, session: u64) -> Option<usize> {
+        self.map.get(&session).copied()
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// The unified snapshot producer. One instance per routing loop (harness
+/// run, server process, bench): it owns the session table and a key
+/// scratch buffer, and turns raw pod signals + pool state into the
+/// [`PodSnapshot`] vector the scoring pipeline consumes.
+pub struct ClusterView {
+    cfg: ClusterViewConfig,
+    sessions: SessionTable,
+    /// Scratch: the request's block-key chain, reused across requests.
+    keys: Vec<BlockKey>,
+}
+
+impl ClusterView {
+    pub fn new(cfg: ClusterViewConfig) -> ClusterView {
+        let sessions = SessionTable::new(cfg.session_capacity);
+        ClusterView { cfg, sessions, keys: Vec::new() }
+    }
+
+    pub fn config(&self) -> &ClusterViewConfig {
+        &self.cfg
+    }
+
+    /// Record a routing decision for session stickiness. Call on every
+    /// `Decision::Route`. Session 0 means *stateless* repo-wide (the
+    /// server's sessionless requests, generators start real ids at 1) and
+    /// is never tracked — so stray session-less traffic can never herd
+    /// onto one pod through a phantom shared session.
+    pub fn note_route(&mut self, session: u64, pod: usize) {
+        if session != 0 {
+            self.sessions.note(session, pod);
+        }
+    }
+
+    /// Pod the session last routed to, if still tracked (None for the
+    /// stateless session 0).
+    pub fn session_pod(&self, session: u64) -> Option<usize> {
+        if session == 0 {
+            return None;
+        }
+        self.sessions.pod_of(session)
+    }
+
+    /// Sessions currently tracked (observability).
+    pub fn tracked_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Build the per-request snapshot vector: one [`PodSnapshot`] per
+    /// signal source, in order. `pool` is the distributed KV pool when one
+    /// is wired in — its residency probe feeds `pool_blocks_*` and lifts
+    /// `prefix_match_blocks` to the max of engine-local and pool-local
+    /// state, making the pool a placement signal.
+    pub fn snapshot<S: PodSignalSource>(
+        &mut self,
+        now: SimTime,
+        req: &Request,
+        pods: &mut [S],
+        pool: Option<&DistKvPool>,
+    ) -> Vec<PodSnapshot> {
+        // Hash the prompt chain once per request into the scratch buffer —
+        // the same walk the engines' admission lookups use, by definition.
+        let bs = self.cfg.block_size.max(1);
+        prompt_block_keys_seeded_into(self.cfg.chain_seed, &req.tokens, bs, &mut self.keys);
+        let prompt_blocks = self.keys.len().max(1);
+        let sticky = self.session_pod(req.session);
+
+        let mut out = Vec::with_capacity(pods.len());
+        for p in pods.iter_mut() {
+            let s = p.signals(now, &self.keys);
+            let res = match pool {
+                Some(pool) => pool.residency(now, s.node, &self.keys),
+                None => Default::default(),
+            };
+            out.push(PodSnapshot {
+                pod: s.pod,
+                ready: s.ready,
+                prefix_match_blocks: s.local_match_blocks.max(res.local_blocks),
+                prompt_blocks,
+                pool_blocks_local: res.local_blocks,
+                pool_blocks_total: res.visible_blocks,
+                session_match: sticky == Some(s.pod),
+                slo_headroom: slo_headroom(&s.stats, req, &self.cfg.slo),
+                resident_adapters: s.resident_adapters,
+                stats: s.stats,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvPoolConfig;
+
+    fn req(tokens: usize, session: u64) -> Request {
+        Request {
+            id: 0,
+            session,
+            tokens: (0..tokens as u32).collect(),
+            output_len: 8,
+            arrival: 0,
+            model: "m".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+        }
+    }
+
+    fn counter_pods(n: usize) -> Vec<CounterPod> {
+        (0..n)
+            .map(|i| CounterPod { pod: i, node: i as u64, ready: true, inflight: i })
+            .collect()
+    }
+
+    #[test]
+    fn snapshot_is_total_and_ordered() {
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mut pods = counter_pods(3);
+        let snaps = view.snapshot(0, &req(64, 0), &mut pods, None);
+        assert_eq!(snaps.len(), 3);
+        for (i, s) in snaps.iter().enumerate() {
+            assert_eq!(s.pod, i);
+            assert_eq!(s.stats.waiting, i);
+            assert_eq!(s.prompt_blocks, 4);
+            assert_eq!(s.pool_blocks_total, 0);
+            assert!(!s.session_match);
+        }
+    }
+
+    #[test]
+    fn session_table_sticks_and_bounds() {
+        let cfg = ClusterViewConfig { session_capacity: 2, ..Default::default() };
+        let mut view = ClusterView::new(cfg);
+        view.note_route(1, 0);
+        view.note_route(2, 1);
+        let mut pods = counter_pods(2);
+        let snaps = view.snapshot(0, &req(16, 2), &mut pods, None);
+        assert!(!snaps[0].session_match);
+        assert!(snaps[1].session_match);
+        // Re-noting an existing session updates in place (no eviction).
+        view.note_route(1, 1);
+        assert_eq!(view.session_pod(1), Some(1));
+        assert_eq!(view.tracked_sessions(), 2);
+        // A third session evicts the oldest (session 1: first appearance).
+        view.note_route(3, 0);
+        assert_eq!(view.tracked_sessions(), 2);
+        assert_eq!(view.session_pod(1), None, "oldest session evicted");
+        assert_eq!(view.session_pod(2), Some(1));
+        assert_eq!(view.session_pod(3), Some(0));
+    }
+
+    #[test]
+    fn pool_residency_feeds_prefix_and_pool_signals() {
+        use crate::engine::ExternalKv;
+        let mut pool = DistKvPool::new(KvPoolConfig::new(
+            vec![(0, 1 << 30), (1, 1 << 30)],
+            1024,
+            16,
+        ));
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let r = req(64, 0); // 4 full blocks
+        // Insert the prompt's first 3 block keys as node 0 (the view and
+        // the pool must agree on the chain).
+        let keys = crate::engine::prefix::prompt_block_keys(&r.tokens, 16);
+        pool.insert(0, 0, &keys[..3], 16);
+        let mut pods = counter_pods(2);
+        // Past the visibility delay: both pods see 3 blocks, only pod 0
+        // owns them.
+        let snaps = view.snapshot(100_000, &r, &mut pods, Some(&pool));
+        assert_eq!(snaps[0].pool_blocks_local, 3);
+        assert_eq!(snaps[0].pool_blocks_total, 3);
+        assert_eq!(snaps[0].prefix_match_blocks, 3, "pool feeds the prefix signal");
+        assert_eq!(snaps[1].pool_blocks_local, 0);
+        assert_eq!(snaps[1].pool_blocks_total, 3);
+        assert_eq!(snaps[1].prefix_match_blocks, 0);
+        assert!(snaps[0].pool_hit_fraction() > snaps[1].pool_hit_fraction());
+    }
+
+    #[test]
+    fn slo_headroom_scales_with_latency_and_budget() {
+        let slo = Slo { ttft_ms: 1_000.0, itl_ms: 100.0 };
+        let r = req(16, 0); // output_len 8 -> budget 1.8s
+        let mut stats = EngineStats::default();
+        assert_eq!(slo_headroom(&stats, &r, &slo), 1.0, "no history = full headroom");
+        stats.avg_latency_us = 900_000.0; // half the budget
+        assert!((slo_headroom(&stats, &r, &slo) - 0.5).abs() < 1e-9);
+        stats.avg_latency_us = 5_000_000.0; // far over
+        assert_eq!(slo_headroom(&stats, &r, &slo), 0.0);
+    }
+
+    #[test]
+    fn from_env_rejects_garbage() {
+        // Only exercises the parse paths that need no process-global env
+        // mutation: defaults are valid.
+        let cfg = ClusterViewConfig::from_env().expect("defaults parse");
+        assert!(cfg.session_capacity > 0);
+    }
+}

@@ -9,8 +9,7 @@
 //! `now + step_duration`.
 
 use crate::engine::{Completion, EngineConfig, EngineSim, ExternalKv};
-use crate::engine::prefix::prompt_block_keys;
-use crate::gateway::{Decision, Gateway, PodSnapshot, Policy};
+use crate::gateway::{ClusterView, ClusterViewConfig, Decision, Gateway, Policy};
 use crate::json::Json;
 use crate::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
 use crate::sim::{SimTime, Simulator};
@@ -33,6 +32,10 @@ pub struct HarnessConfig {
     /// style behind Table 1's "peak throughput"). 0 = open loop driven by
     /// `arrival`.
     pub closed_loop_clients: usize,
+    /// Signal-plane config (SLO targets, session-table bound). The block
+    /// size is overridden from the engines' config so the view's block
+    /// keys always match the serving path's.
+    pub view: ClusterViewConfig,
 }
 
 /// Aggregated outcome of a run.
@@ -180,6 +183,13 @@ pub fn run_with_router_config(
         gateway.router.lora_affinity = false;
     }
     let mut pool = cfg.kv_pool.clone().map(DistKvPool::new);
+    // The unified signal plane: one snapshot producer for every arrival,
+    // keyed on the engines' block size (the sim's unseeded hash chain).
+    let mut view_cfg = cfg.view.clone();
+    if let Some((ec, _)) = cfg.engines.first() {
+        view_cfg.block_size = ec.block_size;
+    }
+    let mut view = ClusterView::new(view_cfg);
     let mut arrival_rng = crate::util::Rng::new(cfg.seed ^ 0xA221_44AA);
     let mut idle: Vec<bool> = vec![true; engines.len()];
     let mut rejected = 0u64;
@@ -208,23 +218,19 @@ pub fn run_with_router_config(
                     exhausted = true;
                     continue;
                 };
-                // Build routing snapshots (prefix matching per engine).
-                let bs = engines[0].config().block_size;
-                let keys = prompt_block_keys(&req.tokens, bs);
-                let prompt_blocks = keys.len().max(1);
-                let snaps: Vec<PodSnapshot> = engines
-                    .iter_mut()
-                    .map(|e| PodSnapshot {
-                        pod: e.id,
-                        ready: !e.is_failed(),
-                        stats: e.stats(now),
-                        prefix_match_blocks: e.prefix_match_blocks(&keys),
-                        prompt_blocks,
-                        resident_adapters: e.resident_adapters().to_vec(),
-                    })
-                    .collect();
+                // Routing snapshots come from the ClusterView signal
+                // plane: engine stats + local prefix matches + pool
+                // residency + session stickiness + SLO headroom, one
+                // producer for every entry point.
+                let snaps = view.snapshot(now, &req, &mut engines, pool.as_ref());
                 match gateway.dispatch(now, &req, &snaps) {
                     Decision::Route(pod) => {
+                        // Session 0 = stateless (generators allocate real
+                        // session ids from 1) — never tracked, matching
+                        // the serve path's opt-in semantics.
+                        if req.session != 0 {
+                            view.note_route(req.session, pod);
+                        }
                         engines[pod].enqueue(req);
                         if idle[pod] {
                             idle[pod] = false;
@@ -332,6 +338,7 @@ mod tests {
             seed: 1,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let mut w = small_workload(50);
         let r = run(cfg, &mut w);
@@ -352,6 +359,7 @@ mod tests {
             seed: 99,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let a = run(mk(), &mut small_workload(40));
         let b = run(mk(), &mut small_workload(40));
@@ -374,6 +382,7 @@ mod tests {
             seed: 17,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let a = run(mk(), &mut small_workload(60));
         let b = run(mk(), &mut small_workload(60));
@@ -381,6 +390,45 @@ mod tests {
         assert_eq!(a.rejected, 0);
         assert_eq!(a.makespan, b.makespan, "weighted routing must be deterministic");
         assert_eq!(a.ttft_ms(), b.ttft_ms());
+    }
+
+    #[test]
+    fn clusterview_policies_run_end_to_end() {
+        // The three ClusterView presets flow through the harness exactly
+        // like the paper presets: multi-turn traffic over a shared pool
+        // completes fully and deterministically under each of them.
+        use crate::workload::{ShareGptConfig, ShareGptWorkload};
+        let kv_bytes = ModelSpec::deepseek_coder_7b().kv_bytes_per_token();
+        for policy in [Policy::PoolAware, Policy::SloAware, Policy::SessionSticky] {
+            let mk = || HarnessConfig {
+                engines: engines(3, true),
+                policy,
+                arrival: ArrivalProcess::Poisson { rate: 10.0 },
+                kv_pool: Some(KvPoolConfig::new(
+                    (0..3u64).map(|i| (i, 8u64 << 30)).collect(),
+                    kv_bytes,
+                    16,
+                )),
+                seed: 11,
+                deadline: 0,
+                closed_loop_clients: 0,
+                view: Default::default(),
+            };
+            let mut wl = || {
+                ShareGptWorkload::new(ShareGptConfig {
+                    n_requests: 80,
+                    model: "deepseek-coder-7b".into(),
+                    seed: 4,
+                    ..Default::default()
+                })
+            };
+            let a = run(mk(), &mut wl());
+            let b = run(mk(), &mut wl());
+            assert_eq!(a.completions.len(), 80, "{}", policy.name());
+            assert_eq!(a.rejected, 0, "{}", policy.name());
+            assert_eq!(a.makespan, b.makespan, "{} must be deterministic", policy.name());
+            assert_eq!(a.ttft_ms(), b.ttft_ms(), "{}", policy.name());
+        }
     }
 
     #[test]
@@ -393,6 +441,7 @@ mod tests {
             seed: 5,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let no_pool = run(base, &mut small_workload(120));
 
@@ -409,6 +458,7 @@ mod tests {
             seed: 5,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let with_pool = run(with_pool_cfg, &mut small_workload(120));
         assert_eq!(with_pool.completions.len(), 120);
@@ -432,6 +482,7 @@ mod tests {
             seed: 3,
             deadline: 0,
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let r = run(cfg, &mut small_workload(30));
         let j = r.bench_json("smoke");
@@ -451,6 +502,7 @@ mod tests {
             seed: 2,
             deadline: 2_000_000, // 2s
             closed_loop_clients: 0,
+            view: Default::default(),
         };
         let r = run(cfg, &mut small_workload(10_000));
         assert!(r.completions.len() < 10_000);

@@ -27,4 +27,4 @@ pub mod pool;
 
 pub use blocks::{KvBlockData, KvBlockShape};
 pub use eviction::{EvictionKind, EvictionPolicy, Fifo, Lru, S3Fifo};
-pub use pool::{DistKvPool, KvPoolConfig, PoolStats};
+pub use pool::{DistKvPool, KvPoolConfig, PoolResidency, PoolStats};

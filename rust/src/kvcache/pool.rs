@@ -6,7 +6,10 @@
 //!   * **async metadata**: the global index is updated asynchronously —
 //!     an inserted block becomes *visible* to lookups only after
 //!     `metadata_delay_us`, modeling the paper's out-of-band index updates
-//!     (lookups never block on writers);
+//!     (lookups never block on writers). The *owning node* is exempt: a
+//!     block homed on a node's own shard is visible to that node
+//!     immediately — the bytes are already local, no index round trip is
+//!     needed — so a replica can always reuse its own write-backs;
 //!   * **dedup**: re-inserting a key that is already resident (or in
 //!     flight) is dropped, the paper's "reduced redundant data transfers";
 //!   * **scan-resistant eviction**: per-node policy, S3-FIFO by default.
@@ -73,6 +76,17 @@ struct NodeShard {
     capacity: u64,
     used: u64,
     policy: Box<dyn EvictionPolicy + Send>,
+}
+
+/// Router-side residency view of one prompt's block chain for one node
+/// (the ClusterView pool signal): how far the chain is visible to that
+/// node, and how much of it is homed on the node's own shard.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolResidency {
+    /// Longest visible-to-this-node prefix, blocks (local + remote).
+    pub visible_blocks: usize,
+    /// Blocks within that prefix homed on the node's own shard.
+    pub local_blocks: usize,
 }
 
 /// Pool statistics (Table 1 analysis + ablations).
@@ -201,6 +215,40 @@ impl DistKvPool {
         self.shards.get(&node).map(|s| s.used).unwrap_or(0)
     }
 
+    /// Is `key` visible to a consumer on `node` at `now`? Published blocks
+    /// are visible to everyone; unpublished ones only to their owner.
+    fn visible_to(e: &Entry, now: SimTime, node: u64) -> bool {
+        e.visible_at <= now || e.node == node
+    }
+
+    /// Read-only residency probe for the router: the longest prefix of
+    /// `keys` visible to `node`, split into local (own-shard) vs total
+    /// blocks. Unlike [`DistKvPool::lookup_blocks`] this mutates nothing —
+    /// no stats, no eviction-policy access bumps — because a routing
+    /// decision is not a data access (the chosen pod's admission lookup
+    /// does the real, accounted fetch).
+    pub fn residency(&self, now: SimTime, node: u64, keys: &[BlockKey]) -> PoolResidency {
+        let mut r = PoolResidency::default();
+        for key in keys {
+            match self.index.get(key) {
+                Some(e) if Self::visible_to(e, now, node) => {
+                    r.visible_blocks += 1;
+                    if e.node == node {
+                        r.local_blocks += 1;
+                    }
+                }
+                _ => break, // prefixes are contiguous
+            }
+        }
+        r
+    }
+
+    /// Owner node and visibility instant of a resident block
+    /// (observability and residency tests).
+    pub fn block_owner(&self, key: BlockKey) -> Option<(u64, SimTime)> {
+        self.index.get(&key).map(|e| (e.node, e.visible_at))
+    }
+
     /// Pick the shard for a new block: the inserting node if it has a shard
     /// (colocation), else the least-utilized shard (ties to the lowest node
     /// id, keeping placement deterministic).
@@ -248,7 +296,9 @@ impl DistKvPool {
     // ------------------------------------------------------ shared paths
 
     /// Longest visible prefix walk shared by the metadata [`ExternalKv`]
-    /// lookup and the data-tier [`DistKvPool::lookup_blocks`]. With
+    /// lookup and the data-tier [`DistKvPool::lookup_blocks`]. Visibility
+    /// is per-consumer: published blocks for everyone, unpublished ones
+    /// for their owning node only (see [`DistKvPool::residency`]). With
     /// `need_data`, an entry that is visible but holds no real tensors ends
     /// the walk — a seeded prefill cannot skip past it.
     fn lookup_inner(
@@ -266,7 +316,7 @@ impl DistKvPool {
         let mut data = Vec::new();
         for key in keys {
             match self.index.get(key) {
-                Some(e) if e.visible_at <= now => {
+                Some(e) if Self::visible_to(e, now, node) => {
                     if need_data {
                         match self.store.get(key) {
                             Some(d) => data.push(Arc::clone(d)),
@@ -437,33 +487,37 @@ mod tests {
         let mut p = pool(2, 4);
         let keys = [1u64, 2, 3];
         p.insert(0, 0, &keys, 16);
-        // Not yet visible.
+        // Not yet visible to *other* nodes...
+        let f = p.lookup(10, 1, &keys);
+        assert_eq!(f.blocks_hit, 0, "async metadata not yet visible remotely");
+        // ...but the writer's own shard needs no index round trip.
         let f = p.lookup(10, 0, &keys);
-        assert_eq!(f.blocks_hit, 0, "async metadata not yet visible");
-        // Visible after the delay.
-        let f = p.lookup(60_000, 0, &keys);
+        assert_eq!(f.blocks_hit, 3, "owner sees its own blocks immediately");
+        // Visible everywhere after the delay.
+        let f = p.lookup(60_000, 1, &keys);
         assert_eq!(f.blocks_hit, 3);
         assert!(p.check_invariants());
     }
 
     #[test]
     fn metadata_delay_boundary_with_dedup_on() {
-        // A block inserted at T is invisible strictly before T + delay and
-        // visible from T + delay on; redundant re-inserts are deduped and
-        // must NOT reset the visibility clock.
-        let mut p = pool(1, 4);
+        // A block inserted at T is invisible to remote nodes strictly
+        // before T + delay and visible from T + delay on; redundant
+        // re-inserts are deduped and must NOT reset the visibility clock.
+        let mut p = pool(2, 4);
         let delay = p.config().metadata_delay_us; // 50_000
         let t0 = 123;
         p.insert(t0, 0, &[42], 16);
-        assert_eq!(p.lookup(t0, 0, &[42]).blocks_hit, 0, "not visible at insert time");
-        assert_eq!(p.lookup(t0 + delay - 1, 0, &[42]).blocks_hit, 0, "one µs early");
-        assert_eq!(p.lookup(t0 + delay, 0, &[42]).blocks_hit, 1, "exactly at T+delay");
+        assert_eq!(p.lookup(t0, 1, &[42]).blocks_hit, 0, "not visible at insert time");
+        assert_eq!(p.lookup(t0 + delay - 1, 1, &[42]).blocks_hit, 0, "one µs early");
+        assert_eq!(p.lookup(t0 + delay, 1, &[42]).blocks_hit, 1, "exactly at T+delay");
         // Re-insert later: dedup drops it, original visibility stands.
-        let mut q = pool(1, 4);
+        let mut q = pool(2, 4);
         q.insert(0, 0, &[7], 16);
         q.insert(40_000, 0, &[7], 16); // would push visibility to 90k if honored
         assert_eq!(q.stats.inserts_deduped, 1);
-        assert_eq!(q.lookup(50_000, 0, &[7]).blocks_hit, 1, "dedup keeps the old clock");
+        assert_eq!(q.lookup(49_999, 1, &[7]).blocks_hit, 0, "still on the old clock");
+        assert_eq!(q.lookup(50_000, 1, &[7]).blocks_hit, 1, "dedup keeps the old clock");
         assert!(q.check_invariants());
     }
 
@@ -471,17 +525,18 @@ mod tests {
     fn metadata_delay_with_dedup_off() {
         // Without dedup a re-insert replaces the entry and restarts the
         // visibility delay — the redundant-transfer cost the paper's dedup
-        // avoids.
-        let mut cfg = KvPoolConfig::new(vec![(0, 4u64 << 30)], 524_288, 16);
+        // avoids. (Observed from a remote node; the writer itself always
+        // sees its own shard.)
+        let mut cfg = KvPoolConfig::new(vec![(0, 4u64 << 30), (1, 4u64 << 30)], 524_288, 16);
         cfg.dedup = false;
         let mut p = DistKvPool::new(cfg);
         p.insert(0, 0, &[7], 16);
-        assert_eq!(p.lookup(50_000, 0, &[7]).blocks_hit, 1, "visible after first delay");
+        assert_eq!(p.lookup(50_000, 1, &[7]).blocks_hit, 1, "visible after first delay");
         p.insert(60_000, 0, &[7], 16); // replace: visible again at 110k
         assert_eq!(p.stats.inserts_deduped, 0);
         assert_eq!(p.resident_blocks(), 1, "replaced, not duplicated");
-        assert_eq!(p.lookup(100_000, 0, &[7]).blocks_hit, 0, "re-insert reset the clock");
-        assert_eq!(p.lookup(110_000, 0, &[7]).blocks_hit, 1);
+        assert_eq!(p.lookup(100_000, 1, &[7]).blocks_hit, 0, "re-insert reset the clock");
+        assert_eq!(p.lookup(110_000, 1, &[7]).blocks_hit, 1);
         assert!(p.check_invariants());
     }
 
@@ -659,10 +714,14 @@ mod tests {
         p.set_shape(SHAPE);
         let items = vec![(1u64, data_block(1.0)), (2u64, data_block(2.0))];
         p.insert_blocks(0, 0, &items);
-        // Not visible yet: no data comes back.
-        let (f, blocks) = p.lookup_blocks(10, 0, &[1, 2]);
+        // Not visible to the remote node yet: no data comes back.
+        let (f, blocks) = p.lookup_blocks(10, 1, &[1, 2]);
         assert_eq!(f.blocks_hit, 0);
         assert!(blocks.is_empty());
+        // The writer itself can reuse its own blocks immediately.
+        let (f, blocks) = p.lookup_blocks(10, 0, &[1, 2]);
+        assert_eq!(f.blocks_hit, 2, "writer-local data visible at once");
+        assert_eq!(blocks.len(), 2);
         // Visible after the delay; fetched tensors are the inserted bits.
         let (f, blocks) = p.lookup_blocks(60_000, 1, &[1, 2]);
         assert_eq!(f.blocks_hit, 2);
@@ -704,6 +763,47 @@ mod tests {
         assert_eq!(f.blocks_hit, 1);
         assert_eq!(blocks[0].k[0], 9.0);
         assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn residency_probe_tracks_owner_and_visibility() {
+        let mut p = pool(2, 4);
+        // Chain 1..=4: blocks 1-2 homed on node 0, 3-4 on node 1.
+        p.insert(0, 0, &[1, 2], 16);
+        p.insert(0, 1, &[3, 4], 16);
+        let keys = [1u64, 2, 3, 4];
+        // Before the delay each node sees only its own leading run: node 0
+        // owns the head of the chain, node 1's blocks sit behind node 0's
+        // still-unpublished ones.
+        let r0 = p.residency(10, 0, &keys);
+        assert_eq!(r0, PoolResidency { visible_blocks: 2, local_blocks: 2 });
+        let r1 = p.residency(10, 1, &keys);
+        assert_eq!(r1, PoolResidency { visible_blocks: 0, local_blocks: 0 });
+        // After the delay the whole chain is visible; locality still
+        // differs per node.
+        let r0 = p.residency(60_000, 0, &keys);
+        assert_eq!(r0, PoolResidency { visible_blocks: 4, local_blocks: 2 });
+        let r1 = p.residency(60_000, 1, &keys);
+        assert_eq!(r1, PoolResidency { visible_blocks: 4, local_blocks: 2 });
+        // A shard-less router node sees visibility but owns nothing.
+        let r9 = p.residency(60_000, 9, &keys);
+        assert_eq!(r9, PoolResidency { visible_blocks: 4, local_blocks: 0 });
+        // Contiguity: a hole ends the walk.
+        let r = p.residency(60_000, 0, &[1, 2, 99, 3]);
+        assert_eq!(r.visible_blocks, 2);
+    }
+
+    #[test]
+    fn residency_probe_mutates_nothing() {
+        let mut p = pool(2, 4);
+        p.insert(0, 0, &[1, 2, 3], 16);
+        let stats_before = format!("{:?}", p.stats);
+        let _ = p.residency(60_000, 1, &[1, 2, 3]);
+        let _ = p.residency(60_000, 0, &[1, 2, 3]);
+        assert_eq!(format!("{:?}", p.stats), stats_before, "probe must not count");
+        assert!(p.check_invariants());
+        assert_eq!(p.block_owner(1).map(|(n, _)| n), Some(0));
+        assert_eq!(p.block_owner(42), None);
     }
 
     #[test]

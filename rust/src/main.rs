@@ -18,10 +18,13 @@ use aibrix::cli::Args;
 use aibrix::cluster::GpuKind;
 use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
 use aibrix::engine::real::{EngineOpts, EnginePool, RealEngineHandle, RealRequest};
-use aibrix::engine::{EngineStats, ModelSpec};
+use aibrix::engine::ModelSpec;
 use aibrix::runtime::{Manifest, Precision};
 use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
-use aibrix::gateway::{PodSnapshot, Policy, Router, ScoreCtx, TenantUsage};
+use aibrix::gateway::{
+    ClusterView, ClusterViewConfig, CounterPod, Policy, Router, ScoreCtx, TenantUsage,
+    SCORER_NAMES,
+};
 use aibrix::json::{parse, Json};
 use aibrix::optimizer::loadmonitor::LoadMonitor;
 use aibrix::optimizer::profiles::{ProfileTable, Slo};
@@ -70,7 +73,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: aibrix <serve|bench-table1|bench-routing|bench-autoscaling|bench-fig7|bench-hetero|optimize|diagnose> [--flags]\n\
-                 routing flags: --policy <random|throughput|least-request|least-kv-cache|least-latency|prefix-cache-aware[=t]|weighted:k=w,...>\n\
+                 routing flags: --policy <random|throughput|least-request|least-kv-cache|least-latency|prefix-cache-aware[=t]|pool-aware|slo-aware|session-sticky|weighted:k=w,...>\n\
                  \x20              --prefix-threshold <0..1>\n\
                  serve flags:   --replicas N --port P --artifacts DIR --kv-pool [--kv-pool-mb MB]\n\
                  \x20              --precision <f32|int8>  (or AIBRIX_RT_PRECISION; int8 = quantized-weight tier)"
@@ -133,6 +136,9 @@ fn policy_json(policy: &Policy) -> Json {
                 ("throughput", Json::from(cfg.throughput)),
                 ("lora_residency", Json::from(cfg.lora_residency)),
                 ("fairness", Json::from(cfg.fairness)),
+                ("pool_affinity", Json::from(cfg.pool_affinity)),
+                ("slo_headroom", Json::from(cfg.slo_headroom)),
+                ("session_affinity", Json::from(cfg.session_affinity)),
             ]),
         ));
         fields.push(("prefix_threshold", Json::from(cfg.prefix_threshold)));
@@ -279,6 +285,25 @@ fn cmd_serve(args: &Args) -> i32 {
     let inflight: Arc<Vec<AtomicUsize>> =
         Arc::new((0..n_replicas).map(|_| AtomicUsize::new(0)).collect());
     let router = Arc::new(Mutex::new(Router::new(policy, 0xA1B)));
+    // The unified signal plane: pool residency (when --kv-pool), bounded
+    // session stickiness, SLO headroom. Env knobs: AIBRIX_SLO_TTFT_MS,
+    // AIBRIX_SLO_ITL_MS, AIBRIX_SESSION_CAP.
+    let view = {
+        let mut cfg = match ClusterViewConfig::from_env() {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        };
+        if let Some(h) = &pool_hook {
+            cfg.block_size = h.block_tokens();
+            cfg.chain_seed = h.chain_seed();
+        }
+        Arc::new(Mutex::new(ClusterView::new(cfg)))
+    };
+    let view_handler = Arc::clone(&view);
+    let pool_hook_handler = pool_hook.clone();
     // Decayed per-tenant token meter: feeds the fairness scorer exactly as
     // the sim gateway does (wall-clock µs since server start). Charged at
     // *completion* with served tokens, not at admission with promises.
@@ -337,6 +362,35 @@ fn cmd_serve(args: &Args) -> i32 {
                         ));
                     }
                 }
+                // Routing observability: mean weighted contribution of
+                // each scorer to winning pods, plus affinity hit counters
+                // and the session-table size — makes `weighted:` mixes
+                // auditable in production.
+                if let Some(tel) = router.lock().unwrap().telemetry().cloned() {
+                    body.push_str(&format!(
+                        "aibrix_route_decisions_total {}\n",
+                        tel.decisions
+                    ));
+                    let denom = tel.decisions.max(1) as f64;
+                    for (name, contrib) in SCORER_NAMES.iter().zip(tel.contrib) {
+                        body.push_str(&format!(
+                            "aibrix_route_scorer_contrib{{scorer=\"{name}\"}} {:.6}\n",
+                            contrib / denom
+                        ));
+                    }
+                    body.push_str(&format!(
+                        "aibrix_route_pool_affinity_hits_total {}\n",
+                        tel.pool_affinity_hits
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_route_session_hits_total {}\n",
+                        tel.session_hits
+                    ));
+                }
+                body.push_str(&format!(
+                    "aibrix_view_tracked_sessions {}\n",
+                    view_handler.lock().unwrap().tracked_sessions()
+                ));
                 // Shared KV pool counters (present with --kv-pool).
                 if let Some(ps) = replicas[0].pool_stats() {
                     body.push_str(&format!("aibrix_kvpool_lookups_total {}\n", ps.lookups));
@@ -400,16 +454,26 @@ fn cmd_serve(args: &Args) -> i32 {
                     *n += 1;
                     *n
                 };
-                // Route across replicas on live in-flight counts. Scorers
-                // read only adapter/user + the snapshots, so the routing
-                // request carries no token copy (prompt length rides in
-                // the fairness meter instead).
+                // Route across replicas through the ClusterView signal
+                // plane. With --kv-pool the routing request carries the
+                // prompt tokens: residency probes hash them into block
+                // keys, so pool-/prefix-aware mixes can prefer the replica
+                // whose shard already holds the prompt. Without a pool no
+                // scorer can consume the keys, so the token copy (and the
+                // per-request chain hash under the router lock) is
+                // skipped. An optional `session` field (nonzero integer)
+                // enables sticky routing either way.
                 let user = tenant_id(&body["user"]);
+                let session = body["session"].as_u64().unwrap_or(0);
                 let prompt_tokens = tokens.len();
                 let route_req = Request {
                     id,
-                    session: 0,
-                    tokens: Vec::new(),
+                    session,
+                    tokens: if pool_hook_handler.is_some() {
+                        tokens.clone()
+                    } else {
+                        Vec::new()
+                    },
                     output_len: max_tokens,
                     arrival: 0,
                     model: "tinylm".into(),
@@ -425,22 +489,30 @@ fn cmd_serve(args: &Args) -> i32 {
                 // herd onto one replica.
                 let pick = {
                     let mut r = router.lock().unwrap();
-                    let snaps: Vec<PodSnapshot> = inflight
+                    let mut v = view_handler.lock().unwrap();
+                    let mut pods: Vec<CounterPod> = inflight
                         .iter()
                         .enumerate()
-                        .map(|(i, c)| PodSnapshot {
+                        .map(|(i, c)| CounterPod {
                             pod: i,
+                            node: i as u64,
                             ready: true,
-                            stats: EngineStats {
-                                waiting: c.load(Ordering::Relaxed),
-                                ..EngineStats::default()
-                            },
-                            prefix_match_blocks: 0,
-                            prompt_blocks: 1,
-                            resident_adapters: vec![],
+                            inflight: c.load(Ordering::Relaxed),
                         })
                         .collect();
+                    // Pool residency reads the pool's own µs clock (the
+                    // epoch visible_at stamps tick against).
+                    let snaps = match &pool_hook_handler {
+                        Some(h) => {
+                            let now = h.clock_us();
+                            h.with_pool(|pool| v.snapshot(now, &route_req, &mut pods, Some(pool)))
+                        }
+                        None => v.snapshot(now_us, &route_req, &mut pods, None),
+                    };
                     let p = r.select_with_ctx(&route_req, &snaps, &ctx).unwrap_or(0);
+                    if session != 0 {
+                        v.note_route(session, p);
+                    }
                     inflight[p].fetch_add(1, Ordering::Relaxed);
                     p
                 };

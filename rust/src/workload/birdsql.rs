@@ -103,7 +103,9 @@ impl Workload for BirdSqlWorkload {
         self.emitted += 1;
         Some(Request {
             id,
-            session: schema_idx as u64,
+            // Session ids are 1-based: 0 is reserved for "stateless"
+            // (session affinity opt-out) across the gateway.
+            session: schema_idx as u64 + 1,
             shared_prefix_len: schema.len(),
             tokens,
             output_len,
@@ -145,8 +147,9 @@ mod tests {
             ..Default::default()
         });
         let reqs: Vec<Request> = std::iter::from_fn(|| w.next(0)).collect();
-        // Requests of the same session (schema) share the whole schema prefix.
-        let by_schema: Vec<&Request> = reqs.iter().filter(|r| r.session == 0).collect();
+        // Requests of the same session (schema) share the whole schema
+        // prefix. (Sessions are 1-based; 1 = schema 0.)
+        let by_schema: Vec<&Request> = reqs.iter().filter(|r| r.session == 1).collect();
         assert!(by_schema.len() >= 2);
         let a = by_schema[0];
         let b = by_schema[1];
@@ -189,7 +192,7 @@ mod tests {
         });
         let mut counts = vec![0usize; 64];
         while let Some(r) = w.next(0) {
-            counts[r.session as usize] += 1;
+            counts[r.session as usize - 1] += 1;
         }
         let top: usize = counts[..8].iter().sum();
         assert!(top > 250, "top-8 schemas got {top}/500");

@@ -19,6 +19,8 @@ use crate::sim::SimTime;
 pub struct Request {
     pub id: u64,
     /// Multi-turn session (requests of one session share a growing prefix).
+    /// 0 = stateless — exempt from session-affinity routing; generators
+    /// allocate real session ids from 1.
     pub session: u64,
     /// Prompt token ids.
     pub tokens: Vec<u32>,

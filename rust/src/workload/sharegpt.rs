@@ -86,8 +86,10 @@ impl ShareGptWorkload {
     }
 
     fn new_session(&mut self) -> Session {
-        let id = self.next_session;
+        // Session ids are 1-based: 0 is reserved for "stateless" (session
+        // affinity opt-out) across the gateway.
         self.next_session += 1;
+        let id = self.next_session;
         let turns = (self.cfg.turns_mean * self.rng.uniform(0.4, 1.8)).round() as usize;
         Session {
             id,

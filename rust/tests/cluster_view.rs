@@ -1,0 +1,262 @@
+//! Property tests for the ClusterView signal plane (ISSUE 5 invariants):
+//!
+//!   1. a snapshot is a *pure function* of (config, pod signals, pool
+//!      state, session table): deterministic under scratch reuse, total
+//!      (one `PodSnapshot` per source, in order), and identical whichever
+//!      entry-point shape produced the signals — the engine-sim trait
+//!      impl (harness) or pre-assembled [`PodSignals`] (serve-style);
+//!   2. pool-fed residency signals (`pool_blocks_*`, and the pool-lifted
+//!      `prefix_match_blocks`) equal a reference walk over the pool's own
+//!      metadata (`block_owner`) for the prompt's block keys.
+
+use aibrix::cluster::GpuKind;
+use aibrix::engine::prefix::prompt_block_keys;
+use aibrix::engine::{EngineConfig, EngineSim, EngineStats, ExternalKv, ModelSpec};
+use aibrix::gateway::{ClusterView, ClusterViewConfig, CounterPod, PodSignalSource, PodSignals};
+use aibrix::kvcache::{DistKvPool, KvPoolConfig};
+use aibrix::pt::{forall, gen};
+use aibrix::workload::Request;
+
+fn req(tokens: Vec<u32>, session: u64) -> Request {
+    Request {
+        id: 0,
+        session,
+        tokens,
+        output_len: 8,
+        arrival: 0,
+        model: "m".into(),
+        adapter: None,
+        user: 0,
+        shared_prefix_len: 0,
+    }
+}
+
+/// Invariant 1a: deterministic + total over arbitrary raw signals, with
+/// identical session-table history.
+#[test]
+fn prop_snapshot_deterministic_and_total() {
+    forall(
+        "clusterview-deterministic-total",
+        300,
+        |rng, _| {
+            let n = 1 + gen::usize_up_to(rng, 8);
+            let sigs: Vec<(bool, usize, f64, f64, usize)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.chance(0.8),
+                        gen::usize_up_to(rng, 50),
+                        rng.uniform(0.0, 1.0),
+                        rng.uniform(0.0, 500_000.0),
+                        gen::usize_up_to(rng, 12),
+                    )
+                })
+                .collect();
+            let tokens: Vec<u32> = (0..gen::usize_up_to(rng, 200))
+                .map(|_| rng.below(1000) as u32)
+                .collect();
+            let session = rng.below(5);
+            let routes: Vec<(u64, usize)> = (0..gen::usize_up_to(rng, 6))
+                .map(|_| (rng.below(5), gen::usize_up_to(rng, n)))
+                .collect();
+            (sigs, tokens, session, routes)
+        },
+        |(sigs, tokens, session, routes)| {
+            let mk_signals = || -> Vec<PodSignals> {
+                sigs.iter()
+                    .enumerate()
+                    .map(|(i, &(ready, load, kv, lat, pmb))| PodSignals {
+                        pod: i,
+                        node: i as u64,
+                        ready,
+                        stats: EngineStats {
+                            waiting: load,
+                            running: load / 2,
+                            kv_utilization: kv,
+                            avg_latency_us: lat,
+                            ..EngineStats::default()
+                        },
+                        local_match_blocks: pmb,
+                        resident_adapters: vec![],
+                    })
+                    .collect()
+            };
+            let mk_view = || {
+                let mut v = ClusterView::new(ClusterViewConfig::default());
+                for &(s, p) in routes {
+                    v.note_route(s, p);
+                }
+                v
+            };
+            let r = req(tokens.clone(), *session);
+            let mut v1 = mk_view();
+            let a = v1.snapshot(1_000, &r, &mut mk_signals(), None);
+            let b = v1.snapshot(1_000, &r, &mut mk_signals(), None); // scratch reuse
+            let c = mk_view().snapshot(1_000, &r, &mut mk_signals(), None);
+            if a != b || a != c {
+                return Err("snapshot not deterministic".into());
+            }
+            if a.len() != sigs.len() {
+                return Err(format!("{} snapshots for {} pods", a.len(), sigs.len()));
+            }
+            for (i, s) in a.iter().enumerate() {
+                if s.pod != i {
+                    return Err(format!("pod order broken at {i}: {}", s.pod));
+                }
+                if s.prompt_blocks != (tokens.len() / 16).max(1) {
+                    return Err(format!("prompt_blocks {} wrong", s.prompt_blocks));
+                }
+                let sticky = mk_view().session_pod(*session);
+                if s.session_match != (sticky == Some(i)) {
+                    return Err(format!("session_match wrong on pod {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 1b: the harness entry point (EngineSim as the signal source)
+/// and a serve-style entry point (signals extracted by hand from the same
+/// engines) produce bit-identical snapshot vectors.
+#[test]
+fn prop_entry_points_agree() {
+    forall(
+        "clusterview-entrypoint-equivalence",
+        60,
+        |rng, size| {
+            let n_engines = 1 + gen::usize_up_to(rng, 3);
+            let reqs: Vec<(usize, usize, usize)> = (0..gen::usize_up_to(rng, size.0 / 8 + 2))
+                .map(|_| {
+                    (
+                        gen::usize_up_to(rng, n_engines),
+                        1 + gen::usize_up_to(rng, 1200),
+                        1 + gen::usize_up_to(rng, 12),
+                    )
+                })
+                .collect();
+            let steps = gen::usize_up_to(rng, 6);
+            let probe: Vec<u32> =
+                (0..gen::usize_up_to(rng, 120)).map(|_| rng.below(64) as u32).collect();
+            (n_engines, reqs, steps, probe)
+        },
+        |(n_engines, reqs, steps, probe)| {
+            let mk_engines = || -> Vec<EngineSim> {
+                let mut engines: Vec<EngineSim> = (0..*n_engines)
+                    .map(|i| {
+                        let mut ec =
+                            EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+                        ec.prefix_caching = true;
+                        EngineSim::new(i, i as u64, ec)
+                    })
+                    .collect();
+                for (i, &(e, prompt, out)) in reqs.iter().enumerate() {
+                    engines[e].enqueue(req(vec![(i % 50) as u32; prompt], 0));
+                    let _ = out;
+                }
+                let mut now = 0;
+                for _ in 0..*steps {
+                    for e in engines.iter_mut() {
+                        if let Some(dt) = e.step(now, None) {
+                            now += dt / 2;
+                        }
+                    }
+                }
+                engines
+            };
+            let now = 10_000_000;
+            let r = req(probe.clone(), 1);
+            // Harness shape: EngineSim implements PodSignalSource.
+            let mut engines_a = mk_engines();
+            let mut view_a = ClusterView::new(ClusterViewConfig::default());
+            view_a.note_route(1, 0);
+            let snaps_a = view_a.snapshot(now, &r, &mut engines_a, None);
+            // Serve shape: the same cluster state, signals pre-extracted.
+            let mut engines_b = mk_engines();
+            let keys = prompt_block_keys(&r.tokens, 16);
+            let mut signals: Vec<PodSignals> =
+                engines_b.iter_mut().map(|e| e.signals(now, &keys)).collect();
+            let mut view_b = ClusterView::new(ClusterViewConfig::default());
+            view_b.note_route(1, 0);
+            let snaps_b = view_b.snapshot(now, &r, &mut signals, None);
+            if snaps_a != snaps_b {
+                return Err(format!(
+                    "entry points disagree:\n harness: {snaps_a:?}\n serve:   {snaps_b:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 2: pool-fed signals equal the pool's metadata. For every
+/// node, `pool_blocks_total`/`pool_blocks_local` must match a reference
+/// walk over `block_owner` with the same per-consumer visibility rule
+/// (published, or homed on the consulting node), and `prefix_match_blocks`
+/// is lifted to the pool-local count when no engine-local cache matches.
+#[test]
+fn prop_pool_residency_matches_metadata() {
+    forall(
+        "clusterview-pool-residency",
+        200,
+        |rng, _| {
+            let blocks = gen::usize_up_to(rng, 10);
+            let tokens: Vec<u32> = (0..blocks * 16).map(|_| rng.below(500) as u32).collect();
+            // Per-block: (inserted?, writer node 0..4 — node 3 shard-less,
+            // insert time).
+            let inserts: Vec<(bool, u64, u64)> = (0..blocks)
+                .map(|_| (rng.chance(0.7), rng.below(4), rng.below(200_000)))
+                .collect();
+            let now = rng.below(300_000);
+            (tokens, inserts, now)
+        },
+        |(tokens, inserts, now)| {
+            let mut pool = DistKvPool::new(KvPoolConfig::new(
+                vec![(0, 1 << 30), (1, 1 << 30), (2, 1 << 30)],
+                1024,
+                16,
+            ));
+            let keys = prompt_block_keys(tokens, 16);
+            for (key, &(present, node, t)) in keys.iter().zip(inserts) {
+                if present {
+                    pool.insert(t, node, &[*key], 16);
+                }
+            }
+            let mut view = ClusterView::new(ClusterViewConfig::default());
+            let r = req(tokens.clone(), 0);
+            let mut pods: Vec<CounterPod> = (0..3)
+                .map(|i| CounterPod { pod: i, node: i as u64, ready: true, inflight: 0 })
+                .collect();
+            let snaps = view.snapshot(*now, &r, &mut pods, Some(&pool));
+            for (i, snap) in snaps.iter().enumerate() {
+                // Reference walk straight off the pool's metadata.
+                let node = i as u64;
+                let mut visible = 0usize;
+                let mut local = 0usize;
+                for key in &keys {
+                    match pool.block_owner(*key) {
+                        Some((owner, vis_at)) if vis_at <= *now || owner == node => {
+                            visible += 1;
+                            if owner == node {
+                                local += 1;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+                if snap.pool_blocks_total != visible || snap.pool_blocks_local != local {
+                    return Err(format!(
+                        "pod {i}: snapshot ({}, {}) vs metadata ({visible}, {local})",
+                        snap.pool_blocks_total, snap.pool_blocks_local
+                    ));
+                }
+                if snap.prefix_match_blocks != local {
+                    return Err(format!(
+                        "pod {i}: prefix_match_blocks {} != pool-local {local}",
+                        snap.prefix_match_blocks
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -46,6 +46,13 @@ fn snapshots(sigs: &[PodSig]) -> Vec<PodSnapshot> {
             },
             prefix_match_blocks: pmb,
             prompt_blocks: 10,
+            // ClusterView signals, derived from the same raw tuple so the
+            // weighted props exercise every scorer without widening the
+            // generator.
+            pool_blocks_local: pmb / 2,
+            pool_blocks_total: pmb,
+            session_match: load % 3 == 0,
+            slo_headroom: kv,
             resident_adapters: vec![],
         })
         .collect()
@@ -181,6 +188,9 @@ fn gen_weighted(rng: &mut aibrix::util::Rng) -> PipelineConfig {
             throughput: rng.uniform(0.0, 1.0),
             lora_residency: rng.uniform(0.0, 1.0),
             fairness: rng.uniform(0.0, 1.0),
+            pool_affinity: rng.uniform(0.0, 1.0),
+            slo_headroom: rng.uniform(0.0, 1.0),
+            session_affinity: rng.uniform(0.0, 1.0),
             prefix_threshold: rng.uniform(0.0, 1.0),
             overload_guard: rng.chance(0.5),
         };
@@ -192,6 +202,11 @@ fn gen_weighted(rng: &mut aibrix::util::Rng) -> PipelineConfig {
         if rng.chance(0.3) {
             cfg.least_request = 0.0;
             cfg.fairness = 0.0;
+        }
+        if rng.chance(0.4) {
+            cfg.pool_affinity = 0.0;
+            cfg.slo_headroom = 0.0;
+            cfg.session_affinity = 0.0;
         }
         if cfg.validate().is_ok() {
             return cfg;

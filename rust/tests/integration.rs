@@ -45,9 +45,8 @@ fn engine_failure_reroutes_and_completes() {
                 pod: e.id,
                 ready: !e.is_failed(),
                 stats: e.stats(0),
-                prefix_match_blocks: 0,
                 prompt_blocks: 1,
-                resident_adapters: vec![],
+                ..Default::default()
             })
             .collect();
         let pick = router.select(&r, &snaps).unwrap();
@@ -74,9 +73,8 @@ fn engine_failure_reroutes_and_completes() {
                 pod: e.id,
                 ready: !e.is_failed(),
                 stats: e.stats(now),
-                prefix_match_blocks: 0,
                 prompt_blocks: 1,
-                resident_adapters: vec![],
+                ..Default::default()
             })
             .collect();
         let pick = router.select(&r, &snaps).unwrap();
@@ -221,11 +219,10 @@ fn lora_controller_to_engine_affinity() {
         .iter_mut()
         .map(|e| PodSnapshot {
             pod: e.id,
-            ready: true,
             stats: e.stats(now),
-            prefix_match_blocks: 0,
             prompt_blocks: 1,
             resident_adapters: e.resident_adapters().to_vec(),
+            ..Default::default()
         })
         .collect();
     assert_eq!(router.select(&r, &snaps), Some(warm_pod));

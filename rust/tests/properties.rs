@@ -207,7 +207,8 @@ fn prop_router_totality() {
                     )
                 })
                 .collect();
-            let policy_idx = gen::usize_up_to(rng, 6);
+            // Sweep every named preset, including the ClusterView trio.
+            let policy_idx = gen::usize_up_to(rng, Policy::extended().len());
             (pods, policy_idx, rng.next_u64())
         },
         |(pods, policy_idx, seed)| {
@@ -227,10 +228,14 @@ fn prop_router_totality() {
                     },
                     prefix_match_blocks: load % 11,
                     prompt_blocks: 10,
+                    pool_blocks_local: load % 5,
+                    pool_blocks_total: load % 11,
+                    session_match: load % 4 == 0,
+                    slo_headroom: kv,
                     resident_adapters: vec![],
                 })
                 .collect();
-            let policy = Policy::all()[*policy_idx];
+            let policy = Policy::extended()[*policy_idx];
             let req = Request {
                 id: 0,
                 session: 0,

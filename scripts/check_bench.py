@@ -4,6 +4,7 @@
 Usage:
     python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
     python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
+    python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
 - BASELINE: the blessed copy tracked in git (benchmarks/*.baseline.json).
@@ -14,6 +15,10 @@ Usage:
   (pool-on beats pool-off, cross-replica hits happened, outputs
   bit-identical); no baseline needed, so it is never in record mode for
   these structural checks.
+- --routing: validate a routing_e2e report — within-run gates only
+  (pool-aware hit ratio strictly above pool-blind, served-prefill
+  throughput at least pool-blind's, session-sticky above blind, outputs
+  bit-identical across policies).
 
 Exit codes: 0 = ok (or record mode: no baseline checked in yet),
 1 = regression, 2 = malformed input.
@@ -85,17 +90,58 @@ def check_kvpool(path):
     return 0
 
 
+def check_routing(path):
+    """Within-run validation of a routing_e2e report (ISSUE 5 acceptance:
+    pool-aware routing strictly lifts the hit ratio, never costs served
+    prefill throughput, and completions stay bit-identical)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read routing report {path}: {e}")
+        return 2
+    aware = tokens_per_s(doc, "pool_aware")
+    blind = tokens_per_s(doc, "pool_blind_random")
+    derived = doc.get("derived", {})
+    aware_hits = derived.get("aware_hit_ratio")
+    blind_hits = derived.get("blind_hit_ratio")
+    sticky_hits = derived.get("sticky_hit_ratio")
+    speedup = derived.get("aware_speedup")
+    identical = derived.get("outputs_bit_identical")
+    if None in (aware, blind, aware_hits, blind_hits, sticky_hits, speedup, identical):
+        print(f"check_bench: {path} is missing routing rows/derived values")
+        return 2
+    print(f"check_bench: routing pool-aware {aware:.0f} vs pool-blind {blind:.0f} "
+          f"served tok/s (speedup {speedup:.2f}x, hit ratio {aware_hits:.2f} vs "
+          f"{blind_hits:.2f}, sticky {sticky_hits:.2f})")
+    if identical is not True:
+        print("check_bench: FAIL — routing policy changed completions")
+        return 1
+    if aware_hits <= blind_hits:
+        print("check_bench: FAIL — pool-aware hit ratio did not beat pool-blind")
+        return 1
+    if sticky_hits <= blind_hits:
+        print("check_bench: FAIL — session-sticky hit ratio did not beat pool-blind")
+        return 1
+    if speedup < 1.0:
+        print("check_bench: FAIL — pool-aware served prefill fell behind pool-blind")
+        return 1
+    print("check_bench: OK — routing within-run gates hold")
+    return 0
+
+
 def main(argv):
     bless = False
     tol = 0.30
     kvpool = None
+    routing = None
     args = []
     i = 1
     while i < len(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool"):
+        elif a in ("--tolerance", "--kvpool", "--routing"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -103,8 +149,10 @@ def main(argv):
                 return 2
             if a == "--tolerance":
                 tol = float(argv[i])
-            else:
+            elif a == "--kvpool":
                 kvpool = argv[i]
+            else:
+                routing = argv[i]
         elif a.startswith("--"):
             print(f"check_bench: unknown flag {a}")
             print(__doc__)
@@ -112,12 +160,22 @@ def main(argv):
         else:
             args.append(a)
         i += 1
+    if kvpool is not None and routing is not None:
+        print("check_bench: pass --kvpool or --routing, not both (run twice)")
+        print(__doc__)
+        return 2
     if kvpool is not None:
         if args:
             print("check_bench: --kvpool takes no positional arguments")
             print(__doc__)
             return 2
         return check_kvpool(kvpool)
+    if routing is not None:
+        if args:
+            print("check_bench: --routing takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_routing(routing)
     if len(args) != 2:
         print(__doc__)
         return 2
