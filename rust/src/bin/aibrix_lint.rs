@@ -1,0 +1,76 @@
+//! `aibrix_lint` — static analysis gate for the serving-path invariants.
+//!
+//! Walks `rust/src`, `rust/benches`, and `examples/` and enforces the
+//! four rule families in `aibrix::lint` (panic-free serving path,
+//! SAFETY-commented unsafe, alloc-free hot loops, canonical lock order).
+//!
+//! Usage:
+//!   cargo run --release --bin aibrix_lint            # human diagnostics
+//!   cargo run --release --bin aibrix_lint -- --json  # machine report
+//!   cargo run --release --bin aibrix_lint -- --root <repo>
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = bad invocation / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use aibrix::lint;
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("aibrix_lint: --root expects a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!(
+                    "usage: aibrix_lint [--json] [--root <repo>]\n\
+                     lints rust/src, rust/benches, examples/ under the repo root\n\
+                     (default root: the first of ., .., ../.. containing rust/src)"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("aibrix_lint: unknown argument {other:?} (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // `cargo run` may execute from the workspace root or from rust/;
+        // ascend until the tree we lint is visible.
+        for up in [".", "..", "../.."] {
+            let cand = PathBuf::from(up);
+            if cand.join("rust/src").is_dir() {
+                return cand;
+            }
+        }
+        PathBuf::from(".")
+    });
+    match lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("aibrix_lint: cannot walk {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+        Ok(report) => {
+            if json {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.render_human());
+            }
+            if report.ok() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+    }
+}

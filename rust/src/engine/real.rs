@@ -17,6 +17,7 @@ use crate::kvcache::blocks::{
 use crate::kvcache::{DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolStats};
 use crate::runtime::{ModelCfg, Precision, RtStats, SeededPrefix, TinyLmRuntime};
 use crate::util::err::{Error, Result};
+use crate::util::lock::lock_or_recover;
 
 /// Construction options for a real engine replica.
 #[derive(Clone, Default)]
@@ -61,7 +62,7 @@ impl EnginePool {
     /// that attaches.
     pub fn new(pool: Arc<Mutex<DistKvPool>>, model_id: &str) -> EnginePool {
         let (block_tokens, epoch) = {
-            let p = pool.lock().unwrap();
+            let p = lock_or_recover(&pool);
             (p.config().block_tokens, p.epoch())
         };
         EnginePool { pool, node: 0, model_seed: model_chain_seed(model_id), block_tokens, epoch }
@@ -120,12 +121,12 @@ impl EnginePool {
     /// Keep `f` short — the same lock serializes every replica's admission
     /// lookups and write-backs.
     pub fn with_pool<R>(&self, f: impl FnOnce(&DistKvPool) -> R) -> R {
-        f(&self.pool.lock().unwrap())
+        f(&lock_or_recover(&self.pool))
     }
 
     /// Snapshot of the shared pool's counters.
     pub fn stats(&self) -> PoolStats {
-        self.pool.lock().unwrap().stats.clone()
+        lock_or_recover(&self.pool).stats.clone()
     }
 }
 
@@ -198,9 +199,12 @@ impl RealEngine {
                     block_tokens: hook.block_tokens,
                     d_model: runtime.cfg.d_model,
                 };
-                // First engine pins the pool's geometry; mismatched models
-                // joining the same pool fail loudly here.
-                hook.pool.lock().unwrap().set_shape(shape);
+                // First engine pins the pool's geometry; a mismatched model
+                // joining the same pool fails loudly here — as a
+                // constructor error, not a panic inside the pool.
+                lock_or_recover(&hook.pool)
+                    .set_shape(shape)
+                    .map_err(|e| e.context("joining shared kv pool"))?;
                 Some(shape)
             }
             None => None,
@@ -252,7 +256,9 @@ impl RealEngine {
             return Ok(vec![]);
         }
         let take = self.queue.len().min(self.max_batch);
-        // Pick the largest compiled batch <= take, padding up if none fits.
+        // Pick the largest compiled batch <= take, padding up if none
+        // fits; a runtime with no compiled prefill entries at all degrades
+        // to single-row batches rather than panicking the engine thread.
         let sizes = self.runtime.prefill_batches();
         let batch_size = sizes
             .iter()
@@ -260,10 +266,18 @@ impl RealEngine {
             .filter(|&b| b <= take)
             .max()
             .or_else(|| sizes.iter().copied().min())
-            .unwrap();
+            .unwrap_or(1);
         let mut reqs = Vec::new();
         for _ in 0..take.min(batch_size) {
-            reqs.push(self.queue.pop_front().unwrap());
+            // `take <= queue.len()`, so the queue cannot run dry here; if
+            // it ever does, serve the shorter batch instead of panicking.
+            match self.queue.pop_front() {
+                Some(r) => reqs.push(r),
+                None => break,
+            }
+        }
+        if reqs.is_empty() {
+            return Ok(vec![]);
         }
         let t_serve = Instant::now();
 
@@ -304,8 +318,10 @@ impl RealEngine {
         // the final full block of an exact-multiple prompt that the
         // `usable` cap keeps out of the lookup.
         let mut resident: Vec<usize> = Vec::new();
-        if let Some(hook) = &self.pool {
-            let shape = self.kv_shape.unwrap();
+        // `kv_shape` is pinned whenever a pool hook exists (from_runtime
+        // sets both together); destructure the pair so a half-initialized
+        // engine skips the pool path instead of panicking mid-admission.
+        if let (Some(hook), Some(shape)) = (&self.pool, self.kv_shape) {
             let bt = shape.block_tokens;
             // Hash the prompt chains before taking the lock — the FNV walk
             // over every prompt token needs no pool state.
@@ -313,7 +329,7 @@ impl RealEngine {
                 row_keys.push(prompt_block_keys_seeded(hook.model_seed, p, bt));
             }
             let now = hook.now_us();
-            let mut pool = hook.pool.lock().unwrap();
+            let mut pool = lock_or_recover(&hook.pool);
             for (p, keys) in prompts.iter().take(real_rows).zip(&row_keys) {
                 // The last prompt position must be computed (its logits
                 // feed the first sampled token), so a fully cached prompt
@@ -356,8 +372,7 @@ impl RealEngine {
         // their visibility clocks). Races with other replicas' concurrent
         // write-backs are still the pool's dedup problem — the paper's
         // "reduced redundant data transfers" counter.
-        if let Some(hook) = &self.pool {
-            let shape = self.kv_shape.unwrap();
+        if let (Some(hook), Some(shape)) = (&self.pool, self.kv_shape) {
             let max_seq = self.runtime.cfg.max_seq;
             let batch = prompts.len();
             let now = hook.now_us();
@@ -380,7 +395,12 @@ impl RealEngine {
                 }
             }
             if !items.is_empty() {
-                hook.pool.lock().unwrap().insert_blocks(now, hook.node, &items);
+                if let Err(e) = lock_or_recover(&hook.pool).insert_blocks(now, hook.node, &items)
+                {
+                    // Degrade: the completions are already computed; a
+                    // rejected write-back only costs future cache hits.
+                    eprintln!("kv pool write-back skipped: {e}");
+                }
             }
         }
         let serve_us = t_serve.elapsed().as_micros() as u64;

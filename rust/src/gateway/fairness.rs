@@ -62,7 +62,14 @@ impl FairQueue {
         let max_visits = 4 * self.active.len() + 4;
         loop {
             let user = *self.active.front()?;
-            let q = self.queues.get_mut(&user).unwrap();
+            // A rotation entry without a backing queue is an invariant
+            // slip; shed the stale tenant and keep dispatching rather than
+            // panicking the gateway's queue drain.
+            let Some(q) = self.queues.get_mut(&user) else {
+                self.active.pop_front();
+                self.deficits.remove(&user);
+                continue;
+            };
             let Some(head) = q.front() else {
                 self.active.pop_front();
                 self.deficits.remove(&user);
@@ -72,13 +79,23 @@ impl FairQueue {
             let deficit = self.deficits.entry(user).or_insert(0.0);
             if *deficit >= cost || visits > max_visits {
                 *deficit = (*deficit - cost).max(0.0);
-                let req = q.pop_front().unwrap();
-                self.len -= 1;
-                if q.is_empty() {
-                    self.active.pop_front();
-                    self.deficits.remove(&user);
+                match q.pop_front() {
+                    Some(req) => {
+                        self.len -= 1;
+                        if q.is_empty() {
+                            self.active.pop_front();
+                            self.deficits.remove(&user);
+                        }
+                        return Some(req);
+                    }
+                    // front() succeeded just above, so this arm never runs;
+                    // treat it as an emptied tenant instead of panicking.
+                    None => {
+                        self.active.pop_front();
+                        self.deficits.remove(&user);
+                        continue;
+                    }
                 }
-                return Some(req);
             }
             // Earn one quantum for this visit and yield the turn.
             *deficit += self.quantum;

@@ -116,9 +116,11 @@ impl Default for PipelineConfig {
 }
 
 impl PipelineConfig {
-    /// Single-scorer preset helper. Panics on an unknown scorer name —
-    /// callers pass compile-time literals, and silently returning an
-    /// all-zero config would degrade routing to pure tie-breaking.
+    /// Single-scorer preset helper. Callers pass compile-time literals;
+    /// a typo'd scorer name leaves the weight vector all-zero, which
+    /// `validate()` rejects and the debug assertion catches in every test
+    /// run — release serving must not carry a panic path here (the
+    /// gateway keeps routing on pure tie-breaking rather than dying).
     pub fn single(scorer: &str, weight: f64) -> PipelineConfig {
         let mut cfg = PipelineConfig::default();
         match scorer {
@@ -132,7 +134,9 @@ impl PipelineConfig {
             "pool-affinity" => cfg.pool_affinity = weight,
             "slo-headroom" => cfg.slo_headroom = weight,
             "session-affinity" => cfg.session_affinity = weight,
-            other => panic!("unknown scorer {other:?} (see PipelineConfig fields)"),
+            other => {
+                debug_assert!(false, "unknown scorer {other:?} (see PipelineConfig fields)");
+            }
         }
         cfg
     }

@@ -24,6 +24,7 @@ use super::blocks::{KvBlockData, KvBlockShape};
 use super::eviction::{EvictionKind, EvictionPolicy};
 use crate::engine::{ExternalKv, KvFetch};
 use crate::sim::SimTime;
+use crate::util::err::{Error, Result};
 
 pub type BlockKey = u64;
 
@@ -165,13 +166,20 @@ impl DistKvPool {
     }
 
     /// Declare the KV geometry this pool stores. First caller wins; later
-    /// callers must agree (two model shapes cannot share one pool).
-    pub fn set_shape(&mut self, shape: KvBlockShape) {
+    /// callers must agree — a mismatched consumer (two model shapes cannot
+    /// share one pool) gets an error to surface at replica construction,
+    /// not a panic inside the pool.
+    pub fn set_shape(&mut self, shape: KvBlockShape) -> Result<()> {
         match self.shape {
-            None => self.shape = Some(shape),
-            Some(existing) => {
-                assert_eq!(existing, shape, "pool shape mismatch across consumers")
+            None => {
+                self.shape = Some(shape);
+                Ok(())
             }
+            Some(existing) if existing == shape => Ok(()),
+            Some(existing) => Err(Error::msg(format!(
+                "pool shape mismatch across consumers: pool stores {existing:?}, \
+                 joiner wants {shape:?}"
+            ))),
         }
     }
 
@@ -261,13 +269,17 @@ impl DistKvPool {
             .min_by(|a, b| {
                 let ua = a.1.used as f64 / a.1.capacity.max(1) as f64;
                 let ub = b.1.used as f64 / b.1.capacity.max(1) as f64;
-                ua.partial_cmp(&ub).unwrap().then(a.0.cmp(b.0))
+                // total_cmp: utilizations are ratios of finite u64s, but a
+                // total order costs nothing and removes the NaN panic path.
+                ua.total_cmp(&ub).then(a.0.cmp(b.0))
             })
             .map(|(id, _)| *id)
     }
 
     fn evict_from(&mut self, node: u64) -> bool {
-        let shard = self.shards.get_mut(&node).unwrap();
+        let Some(shard) = self.shards.get_mut(&node) else {
+            return false; // unknown shard: nothing to evict from
+        };
         if let Some(victim) = shard.policy.evict() {
             shard.used = shard.used.saturating_sub(self.cfg.block_bytes());
             self.index.remove(&victim);
@@ -386,7 +398,10 @@ impl DistKvPool {
             self.remove_resident(key, target, bb);
         }
         loop {
-            let shard = self.shards.get_mut(&target).unwrap();
+            // placement() only returns live shard ids, so the lookups
+            // below cannot miss; degrade to dropping the insert (never
+            // panic the write-back path) if that invariant ever slips.
+            let Some(shard) = self.shards.get_mut(&target) else { return };
             if shard.used + bb <= shard.capacity {
                 break;
             }
@@ -399,7 +414,7 @@ impl DistKvPool {
                 self.remove_resident(key, old, bb);
             }
         }
-        let shard = self.shards.get_mut(&target).unwrap();
+        let Some(shard) = self.shards.get_mut(&target) else { return };
         shard.used += bb;
         shard.policy.on_insert(key);
         if let Some(d) = data {
@@ -436,21 +451,29 @@ impl DistKvPool {
 
     /// Write back freshly computed blocks *with their tensors*. Placement,
     /// dedup, eviction and the metadata visibility delay all apply exactly
-    /// as in the metadata-only [`ExternalKv::insert`].
+    /// as in the metadata-only [`ExternalKv::insert`]. A block that does
+    /// not match the pool's declared geometry rejects the whole batch
+    /// before anything lands — the caller degrades (skips the write-back)
+    /// instead of the pool corrupting its data tier or panicking.
     pub fn insert_blocks(
         &mut self,
         now: SimTime,
         node: u64,
         items: &[(BlockKey, Arc<KvBlockData>)],
-    ) {
+    ) -> Result<()> {
         if let Some(shape) = self.shape {
             for (key, d) in items {
-                assert!(d.matches(&shape), "block {key:#x} has wrong KV shape");
+                if !d.matches(&shape) {
+                    return Err(Error::msg(format!(
+                        "block {key:#x} has wrong KV shape for this pool (expect {shape:?})"
+                    )));
+                }
             }
         }
         for (key, d) in items {
             self.insert_inner(now, node, *key, Some(Arc::clone(d)));
         }
+        Ok(())
     }
 }
 
@@ -711,9 +734,9 @@ mod tests {
     #[test]
     fn data_blocks_round_trip_with_visibility() {
         let mut p = pool(2, 4);
-        p.set_shape(SHAPE);
+        p.set_shape(SHAPE).unwrap();
         let items = vec![(1u64, data_block(1.0)), (2u64, data_block(2.0))];
-        p.insert_blocks(0, 0, &items);
+        p.insert_blocks(0, 0, &items).unwrap();
         // Not visible to the remote node yet: no data comes back.
         let (f, blocks) = p.lookup_blocks(10, 1, &[1, 2]);
         assert_eq!(f.blocks_hit, 0);
@@ -739,10 +762,10 @@ mod tests {
         // no tensors; a data lookup must stop there even though a metadata
         // lookup would keep walking.
         let mut p = pool(1, 4);
-        p.set_shape(SHAPE);
-        p.insert_blocks(0, 0, &[(1u64, data_block(1.0))]);
+        p.set_shape(SHAPE).unwrap();
+        p.insert_blocks(0, 0, &[(1u64, data_block(1.0))]).unwrap();
         p.insert(0, 0, &[2], 16); // metadata only
-        p.insert_blocks(0, 0, &[(3u64, data_block(3.0))]);
+        p.insert_blocks(0, 0, &[(3u64, data_block(3.0))]).unwrap();
         let (f, blocks) = p.lookup_blocks(100_000, 0, &[1, 2, 3]);
         assert_eq!(f.blocks_hit, 1, "data walk ends at the tensor-less block");
         assert_eq!(blocks.len(), 1);
@@ -753,15 +776,31 @@ mod tests {
     #[test]
     fn dedup_backfills_data_onto_metadata_entry() {
         let mut p = pool(1, 4);
-        p.set_shape(SHAPE);
+        p.set_shape(SHAPE).unwrap();
         p.insert(0, 0, &[9], 16); // metadata only
-        p.insert_blocks(10, 0, &[(9u64, data_block(9.0))]); // deduped, data kept
+        p.insert_blocks(10, 0, &[(9u64, data_block(9.0))]).unwrap(); // deduped, data kept
         assert_eq!(p.stats.inserts_deduped, 1);
         assert_eq!(p.data_blocks(), 1);
         // Visibility clock of the original insert stands.
         let (f, blocks) = p.lookup_blocks(50_000, 0, &[9]);
         assert_eq!(f.blocks_hit, 1);
         assert_eq!(blocks[0].k[0], 9.0);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let mut p = pool(1, 4);
+        p.set_shape(SHAPE).unwrap();
+        // Re-declaring the same shape is fine; a different one errors.
+        p.set_shape(SHAPE).unwrap();
+        let other = KvBlockShape { n_layers: SHAPE.n_layers + 1, ..SHAPE };
+        assert!(p.set_shape(other).is_err());
+        // A wrong-shaped block rejects the whole batch before anything
+        // lands — the pool neither corrupts its data tier nor panics.
+        let bad = Arc::new(KvBlockData { k: vec![0.0; 4], v: vec![0.0; 4] });
+        assert!(p.insert_blocks(0, 0, &[(1u64, bad)]).is_err());
+        assert_eq!(p.data_blocks(), 0);
         assert!(p.check_invariants());
     }
 
@@ -811,10 +850,10 @@ mod tests {
         // 64 MiB shard = 8 blocks; 20 data inserts force 12+ evictions and
         // the data tier must shrink in lockstep with the index.
         let mut p = DistKvPool::new(KvPoolConfig::new(vec![(0, 64 << 20)], 524_288, 16));
-        p.set_shape(SHAPE);
+        p.set_shape(SHAPE).unwrap();
         let items: Vec<(u64, Arc<KvBlockData>)> =
             (0..20).map(|i| (i as u64 + 1, data_block(i as f32))).collect();
-        p.insert_blocks(0, 0, &items);
+        p.insert_blocks(0, 0, &items).unwrap();
         assert!(p.resident_blocks() <= 8);
         assert_eq!(p.data_blocks(), p.resident_blocks());
         assert!(p.stats.evictions >= 12);

@@ -23,6 +23,7 @@ pub mod gateway;
 pub mod harness;
 pub mod json;
 pub mod kvcache;
+pub mod lint;
 pub mod lora;
 pub mod metrics;
 pub mod optimizer;

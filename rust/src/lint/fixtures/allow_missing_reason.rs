@@ -1,0 +1,7 @@
+// Fixture: a suppression without a reason silences the target rule but
+// is itself a finding (suppression-missing-reason).
+
+pub fn undocumented(target: Option<u32>) -> u32 {
+    // lint:allow(no-panic-on-serving-path)
+    target.unwrap()
+}

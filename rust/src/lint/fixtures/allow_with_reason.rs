@@ -1,0 +1,7 @@
+// Fixture: a reasoned suppression silences the finding and is surfaced
+// in the report's suppressions list.
+
+pub fn checked_elsewhere(target: Option<u32>) -> u32 {
+    // lint:allow(no-panic-on-serving-path): guarded by is_some() at the sole call site
+    target.unwrap()
+}

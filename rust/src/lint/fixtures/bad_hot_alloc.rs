@@ -1,0 +1,23 @@
+// Known-bad fixture: allocations inside a hot-path-tagged function.
+
+// lint:hot_path
+pub fn decode_step(xs: &[u32], staging: &mut Vec<u32>) -> Vec<u32> {
+    let mut out = Vec::new();
+    for x in xs {
+        out.push(x + 1);
+    }
+    let doubled = vec![0u32; xs.len()];
+    let copy = xs.to_vec();
+    let mapped: Vec<u32> = xs.iter().map(|x| x * 2).collect();
+    let dup = staging.clone();
+    out.extend(doubled);
+    out.extend(copy);
+    out.extend(mapped);
+    out.extend(dup);
+    out
+}
+
+// Untagged sibling: the same allocations are fine here.
+pub fn cold_setup(xs: &[u32]) -> Vec<u32> {
+    xs.to_vec()
+}

@@ -1,0 +1,21 @@
+// Known-bad fixture: three functions whose pairwise lock nesting forms
+// a gateway → ClusterView → DistKvPool → gateway cycle. Each edge alone
+// looks locally plausible; only the graph view exposes the deadlock.
+
+pub fn route_with_snapshot(&self) {
+    let router = lock_or_recover(&self.router);
+    let view = lock_or_recover(&self.view);
+    router.note(view.len());
+}
+
+pub fn snapshot_then_admit(&self) {
+    let view = lock_or_recover(&self.view);
+    let pool = self.shared_pool.lock();
+    view.observe(pool.stats());
+}
+
+pub fn writeback_then_reroute(&self) {
+    let pool = self.shared_pool.lock();
+    let router = lock_or_recover(&self.router);
+    router.requeue(pool.evicted());
+}

@@ -1,0 +1,34 @@
+// Known-bad fixture: panic-family tokens on the serving path. Linted
+// under the virtual path rust/src/gateway/bad.rs by lint_selfcheck.
+
+pub fn route(target: Option<u32>) -> u32 {
+    // Finding: unwrap on the serving path.
+    target.unwrap()
+}
+
+pub fn admit(budget: Result<u32, String>) -> u32 {
+    // Finding: expect on the serving path.
+    budget.expect("admission budget missing")
+}
+
+pub fn complete(outputs: &[u32]) -> u32 {
+    if outputs.is_empty() {
+        // Finding: panic! on the serving path.
+        panic!("no outputs to complete");
+    }
+    outputs[0]
+}
+
+pub fn peek(blocks: &[u32], idx: usize) -> u32 {
+    // Finding: unchecked indexing on the serving path.
+    unsafe { *blocks.get_unchecked(idx) }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exempt: unwrap in test code never fires.
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(7).unwrap(), 7);
+    }
+}

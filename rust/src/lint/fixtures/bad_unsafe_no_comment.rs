@@ -1,0 +1,14 @@
+// Known-bad fixture: unsafe without a SAFETY comment.
+
+pub fn read_raw(p: *const u8) -> u8 {
+    // A comment that is not a safety argument does not count.
+    unsafe { *p }
+}
+
+pub unsafe fn no_doc_section(p: *mut u8) {
+    *p = 0;
+}
+
+pub struct Wrapper(*mut u8);
+
+unsafe impl Send for Wrapper {}

@@ -1,0 +1,44 @@
+// Known-good fixture: everything the rules allow, all in one file.
+// Linted under a serving-path virtual name and must produce zero
+// findings and zero suppressions.
+
+pub fn route(target: Option<u32>) -> Result<u32, String> {
+    // Typed error instead of unwrap; unwrap_or is not a panic token.
+    let fallback = target.unwrap_or(0);
+    target.map(|t| t + fallback).ok_or_else(|| "no target".to_string())
+}
+
+pub fn read_raw(p: *const u8) -> u8 {
+    // SAFETY: caller contract guarantees `p` points at a live byte.
+    unsafe { *p }
+}
+
+/// Reads through a raw pointer.
+///
+/// # Safety
+/// `p` must be valid for reads and properly aligned.
+pub unsafe fn read_doc(p: *const u8) -> u8 {
+    *p
+}
+
+// lint:hot_path
+pub fn decode_step(xs: &[u32], out: &mut [u32]) {
+    // In-place work only: no allocation in the tagged function.
+    for (o, x) in out.iter_mut().zip(xs) {
+        *o = x + 1;
+    }
+}
+
+pub fn forward_order(&self) {
+    // Canonical order: gateway before ClusterView before DistKvPool.
+    let router = lock_or_recover(&self.router);
+    let view = lock_or_recover(&self.view);
+    let pool = self.shared_pool.lock();
+    router.note(view.len() + pool.len());
+}
+
+pub fn strings_do_not_count() -> &'static str {
+    // Tokens inside literals and comments are never findings:
+    // .unwrap() and panic!(now) in prose are fine.
+    "call .unwrap() or panic!(now) — only prose here"
+}

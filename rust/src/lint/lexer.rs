@@ -1,0 +1,275 @@
+//! Comment/string-aware line lexer.
+//!
+//! Rules must never fire on tokens inside string literals or comments —
+//! a `panic!` spelled in a log message or an `.unwrap()` quoted in a doc
+//! comment is not a finding. The lexer splits every source line into a
+//! `code` view (literal contents and comments blanked with spaces, so
+//! token positions survive) and a `comment` view (the line's comment
+//! text, where `SAFETY:` notes and `lint:` pragmas live). It understands
+//! line comments, nested block comments, string/char literals, raw
+//! strings, and the char-literal-vs-lifetime ambiguity, and it carries
+//! multi-line state (block comments, multi-line strings) across lines.
+
+/// One source line, split into its code and comment parts.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with string/char literal contents and comments replaced by
+    /// spaces. Quote characters themselves survive, so scans stay
+    /// positionally faithful to the original line.
+    pub code: String,
+    /// Comment text on the line, including the `//` / `/*` markers.
+    pub comment: String,
+}
+
+impl Line {
+    /// True when the line carries no code at all (blank, or only
+    /// comment text).
+    pub fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+
+    /// True when the line is only an attribute (`#[...]` / `#![...]`),
+    /// which rule scans treat like a comment when walking upward.
+    pub fn is_attr_only(&self) -> bool {
+        let t = self.code.trim();
+        (t.starts_with("#[") || t.starts_with("#![")) && t.ends_with(']')
+    }
+}
+
+/// Lexer state carried across lines.
+enum St {
+    Code,
+    /// Inside a (possibly nested) block comment; holds the nesting depth.
+    Block(u32),
+    /// Inside a normal `"..."` string literal.
+    Str,
+    /// Inside a raw string; holds the `#` count of the closing delimiter.
+    RawStr(usize),
+}
+
+/// Split a source file into per-line code/comment views. `out[k]` is
+/// source line `k + 1`.
+pub fn split_lines(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        cur.comment.push(chars[i]);
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    cur.comment.push_str("/*");
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push('"');
+                    i += 1;
+                } else if let Some(open) = raw_string_open(&chars, i) {
+                    st = St::RawStr(open.hashes);
+                    for _ in 0..open.len {
+                        cur.code.push(' ');
+                    }
+                    i += open.len;
+                } else if c == '\'' {
+                    i = lex_tick(&chars, i, &mut cur);
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::Block(depth + 1);
+                    cur.comment.push_str("/*");
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth > 1 { St::Block(depth - 1) } else { St::Code };
+                    cur.comment.push_str("*/");
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && chars.get(i + 1) == Some(&'\n') {
+                    // Line-continuation escape: leave the newline for the
+                    // line splitter above.
+                    cur.code.push(' ');
+                    i += 1;
+                } else if c == '\\' {
+                    cur.code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    cur.code.push('"');
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    st = St::Code;
+                    for _ in 0..=hashes {
+                        cur.code.push(' ');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+struct RawOpen {
+    hashes: usize,
+    len: usize,
+}
+
+/// Detect a raw-string opener (`r"`, `r#"`, `br##"` …) at `i`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<RawOpen> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    // A raw string's `r` must not be the tail of an identifier
+    // (`writer"x"` is not valid Rust, but a raw identifier `r#fn` is —
+    // the quote check below rejects it).
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(RawOpen { hashes, len: j + 1 - i })
+    } else {
+        None
+    }
+}
+
+/// True when the `"` at `i` is followed by `hashes` `#` characters.
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Lex a `'` in code position: an escaped char literal (`'\n'`), a plain
+/// char literal (`'x'`), or a lifetime tick (`'a`, `'_`). Returns the
+/// index after the consumed characters.
+fn lex_tick(chars: &[char], i: usize, cur: &mut Line) -> usize {
+    let next = chars.get(i + 1).copied();
+    if next == Some('\\') {
+        // Escaped char literal: blank through the closing quote.
+        cur.code.push('\'');
+        cur.code.push_str("  ");
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            cur.code.push(' ');
+            j += 1;
+        }
+        if chars.get(j) == Some(&'\'') {
+            cur.code.push('\'');
+            j += 1;
+        }
+        j
+    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+        // Plain one-char literal, possibly a quote-sensitive one ('"').
+        cur.code.push('\'');
+        cur.code.push(' ');
+        cur.code.push('\'');
+        i + 3
+    } else {
+        // Lifetime tick: keep it, consume only the quote.
+        cur.code.push('\'');
+        i + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments_and_keeps_text() {
+        let lines = split_lines("let x = 1; // trailing note\n");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert!(lines[0].comment.contains("trailing note"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let lines = split_lines("let s = \"panic!(boom).unwrap()\";\n");
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(!lines[0].code.contains(".unwrap()"));
+        assert!(lines[0].code.contains('"'));
+    }
+
+    #[test]
+    fn handles_raw_strings_and_escapes() {
+        let src = "let r = r#\"has \"quotes\" and .unwrap()\"#;\nlet t = \"esc \\\" quote\";\nlet u = 1;\n";
+        let lines = split_lines(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(!lines[1].code.contains("quote"));
+        assert_eq!(lines[2].code.trim(), "let u = 1;");
+    }
+
+    #[test]
+    fn nested_block_comments_and_multiline_state() {
+        let src = "/* outer /* inner */ still comment */ let a = 2;\n\"multi\nline .unwrap() string\";\nlet b = 3;\n";
+        let lines = split_lines(src);
+        assert_eq!(lines[0].code.trim(), "let a = 2;");
+        assert!(lines[0].comment.contains("inner"));
+        assert!(!lines[2].code.contains("unwrap"));
+        assert_eq!(lines[3].code.trim(), "let b = 3;");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lines = split_lines("fn f<'a>(c: char) -> bool { c == '\"' || c == '\\'' }\n");
+        // The quote char literal must not open a string: code still has
+        // the closing brace and no dangling string state.
+        assert!(lines[0].code.contains('}'));
+        assert!(lines[0].code.contains("'a"));
+    }
+
+    #[test]
+    fn comment_only_and_attr_only() {
+        let lines = split_lines("// SAFETY: fine\n#[inline]\nlet x = 1;\n");
+        assert!(lines[0].is_comment_only());
+        assert!(lines[1].is_attr_only());
+        assert!(!lines[2].is_comment_only() && !lines[2].is_attr_only());
+    }
+}

@@ -1,0 +1,213 @@
+//! Inter-module lock graph and canonical-order checker.
+//!
+//! The serving path crosses four lock domains; the canonical acquisition
+//! order is
+//!
+//! > gateway → ClusterView → DistKvPool → engine → runtime
+//!
+//! (a request is routed, the cluster snapshot consulted, the shared KV
+//! pool touched, the engine stepped, and only the runtime's arena pools
+//! sit below that). The rule engine reports every site where a lock of
+//! one class is acquired while a lock of another class is held; this
+//! module folds those into a small directed graph over the classes and
+//! fails two ways: a **back-edge** (acquiring a class that sorts before
+//! one already held) and a **cycle** (any loop in the graph, which is
+//! what actually deadlocks — reported with the full path so the fix is
+//! obvious). With a total order every cycle contains a back-edge, but the
+//! cycle message names the whole loop rather than one offending line.
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, RULE_LOCK};
+
+/// Lock classes in canonical acquisition order; the index is the rank.
+pub const CLASSES: [&str; 5] = ["gateway", "ClusterView", "DistKvPool", "engine", "runtime"];
+
+/// Render the canonical order for diagnostics.
+pub fn canonical_order() -> String {
+    CLASSES.join(" → ")
+}
+
+/// Where an edge was observed: the acquisition site of the *second* lock.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub file: String,
+    pub line: usize,
+    pub func: String,
+}
+
+/// Directed graph over lock classes; one witness site per edge.
+#[derive(Debug, Default)]
+pub struct LockGraph {
+    edges: BTreeMap<(usize, usize), Site>,
+}
+
+impl LockGraph {
+    pub fn new() -> LockGraph {
+        LockGraph::default()
+    }
+
+    /// Record that a lock of class `to` was acquired while a lock of
+    /// class `from` was held, at `site`. The first witness per (from, to)
+    /// pair is kept.
+    pub fn add_edge(&mut self, from: usize, to: usize, site: Site) {
+        if from != to {
+            self.edges.entry((from, to)).or_insert(site);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Check the graph: emit one finding per back-edge and one per cycle.
+    pub fn check(&self, findings: &mut Vec<Finding>) {
+        for (&(from, to), site) in &self.edges {
+            if to < from {
+                findings.push(Finding {
+                    file: site.file.clone(),
+                    line: site.line,
+                    rule: RULE_LOCK,
+                    message: format!(
+                        "in `{}`: {} lock acquired while a {} lock is held — \
+                         back-edge against the canonical order ({})",
+                        site.func,
+                        CLASSES[to],
+                        CLASSES[from],
+                        canonical_order()
+                    ),
+                });
+            }
+        }
+        for cycle in self.cycles() {
+            // Witness: the site of the edge that closes the loop.
+            let close = (cycle[cycle.len() - 1], cycle[0]);
+            let site = &self.edges[&close];
+            let path: Vec<&str> = cycle
+                .iter()
+                .chain(std::iter::once(&cycle[0]))
+                .map(|&c| CLASSES[c])
+                .collect();
+            findings.push(Finding {
+                file: site.file.clone(),
+                line: site.line,
+                rule: RULE_LOCK,
+                message: format!(
+                    "lock-order cycle: {} (closed in `{}`) — this is a deadlock \
+                     when the involved paths run concurrently",
+                    path.join(" → "),
+                    site.func
+                ),
+            });
+        }
+    }
+
+    /// Enumerate elementary cycles, each reported once, rotated so the
+    /// smallest rank leads (stable output across edge insertion order).
+    fn cycles(&self) -> Vec<Vec<usize>> {
+        let mut adj: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(from, to) in self.edges.keys() {
+            adj.entry(from).or_default().push(to);
+        }
+        let mut found: Vec<Vec<usize>> = Vec::new();
+        let mut path: Vec<usize> = Vec::new();
+        for &start in adj.keys() {
+            self.dfs_cycles(start, start, &adj, &mut path, &mut found);
+        }
+        found.sort();
+        found.dedup();
+        found
+    }
+
+    fn dfs_cycles(
+        &self,
+        start: usize,
+        node: usize,
+        adj: &BTreeMap<usize, Vec<usize>>,
+        path: &mut Vec<usize>,
+        found: &mut Vec<Vec<usize>>,
+    ) {
+        path.push(node);
+        if let Some(nexts) = adj.get(&node) {
+            for &next in nexts {
+                if next == start {
+                    // Rotate so the smallest class leads: dedups the same
+                    // loop discovered from different start nodes.
+                    let mut cycle = path.clone();
+                    let min_at = cycle
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, &c)| c)
+                        .map(|(k, _)| k)
+                        .unwrap_or(0);
+                    cycle.rotate_left(min_at);
+                    found.push(cycle);
+                } else if !path.contains(&next) && next > start {
+                    // Only expand into nodes above `start`: each cycle is
+                    // then discovered exactly from its smallest member.
+                    self.dfs_cycles(start, next, adj, path, found);
+                }
+            }
+        }
+        path.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn site(f: &str) -> Site {
+        Site { file: "x.rs".into(), line: 1, func: f.into() }
+    }
+
+    #[test]
+    fn forward_edges_pass() {
+        let mut g = LockGraph::new();
+        g.add_edge(0, 1, site("route"));
+        g.add_edge(1, 2, site("snapshot"));
+        g.add_edge(2, 3, site("admit"));
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn back_edge_fails() {
+        let mut g = LockGraph::new();
+        g.add_edge(3, 0, site("bad"));
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("back-edge"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn three_lock_cycle_is_flagged() {
+        // Synthetic deadlock: gateway → ClusterView → DistKvPool →
+        // gateway, each edge from a different function.
+        let mut g = LockGraph::new();
+        g.add_edge(0, 1, site("f1"));
+        g.add_edge(1, 2, site("f2"));
+        g.add_edge(2, 0, site("f3"));
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        let cycles: Vec<_> =
+            findings.iter().filter(|f| f.message.contains("lock-order cycle")).collect();
+        assert_eq!(cycles.len(), 1, "{findings:?}");
+        assert!(
+            cycles[0].message.contains("gateway → ClusterView → DistKvPool → gateway"),
+            "{}",
+            cycles[0].message
+        );
+        // The back-edge (DistKvPool → gateway) is also reported on its own.
+        assert!(findings.iter().any(|f| f.message.contains("back-edge")));
+    }
+
+    #[test]
+    fn self_edges_ignored() {
+        let mut g = LockGraph::new();
+        g.add_edge(2, 2, site("same-class"));
+        assert!(g.is_empty());
+    }
+}

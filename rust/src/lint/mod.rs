@@ -1,0 +1,227 @@
+//! `aibrix-lint`: in-repo static analysis enforcing the serving-path
+//! invariants this codebase is built on.
+//!
+//! Zero-dependency by design (DESIGN.md §2), like everything else here:
+//! a comment/string-aware line lexer ([`lexer`]), a scope-tracking rule
+//! engine ([`rules`]), and an inter-module lock graph ([`lockorder`]).
+//! The linter walks `rust/src`, `rust/benches`, and `examples/` and
+//! enforces four rule families (see [`rules`] for the list and README
+//! "Static analysis & invariants" for the operator view). Violations
+//! can be silenced inline with a `lint:allow(rule): reason` comment —
+//! the reason is mandatory, and every suppression is surfaced in the
+//! report so CI can audit them.
+//!
+//! Run it as `cargo run --release --bin aibrix_lint` (human output) or
+//! with `--json` for the machine-readable report that
+//! `scripts/check_bench.py --lint` validates in CI.
+
+pub mod lexer;
+pub mod lockorder;
+pub mod rules;
+
+pub use lockorder::{canonical_order, LockGraph, CLASSES};
+pub use rules::{
+    Finding, Suppression, ALL_RULES, RULE_HOT, RULE_LOCK, RULE_PANIC, RULE_SUPPRESSION,
+    RULE_UNSAFE,
+};
+
+use std::path::{Path, PathBuf};
+
+use crate::json::Json;
+
+/// The directories (relative to the repo root) the linter covers.
+pub const LINT_ROOTS: [&str; 3] = ["rust/src", "rust/benches", "examples"];
+
+/// Schema version of the JSON report.
+pub const REPORT_VERSION: u64 = 1;
+
+/// Result of a lint run: what was scanned, what fired, what was
+/// deliberately silenced (with reasons).
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl Report {
+    /// True when the tree is clean (suppressions are allowed; findings
+    /// are not).
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (validated by `check_bench.py --lint`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("version", Json::Num(REPORT_VERSION as f64)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| {
+                    Json::obj([
+                        ("file", Json::Str(f.file.clone())),
+                        ("line", Json::Num(f.line as f64)),
+                        ("rule", Json::Str(f.rule.to_string())),
+                        ("message", Json::Str(f.message.clone())),
+                    ])
+                })),
+            ),
+            (
+                "suppressions",
+                Json::arr(self.suppressions.iter().map(|s| {
+                    Json::obj([
+                        ("file", Json::Str(s.file.clone())),
+                        ("line", Json::Num(s.line as f64)),
+                        ("rule", Json::Str(s.rule.clone())),
+                        ("reason", Json::Str(s.reason.clone())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Human diagnostics: one `file:line: [rule] message` per finding,
+    /// then a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        if !self.suppressions.is_empty() {
+            out.push_str(&format!(
+                "{} suppression(s) in effect (each carries a reason):\n",
+                self.suppressions.len()
+            ));
+            for s in &self.suppressions {
+                out.push_str(&format!(
+                    "  {}:{}: allow({}) — {}\n",
+                    s.file, s.line, s.rule, s.reason
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "aibrix_lint: {} file(s) scanned, {} finding(s), {} suppression(s)\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.suppressions.len()
+        ));
+        out
+    }
+}
+
+/// Incremental linter: feed sources, then [`Linter::finish`] to fold in
+/// the cross-file lock-graph checks and sort the output.
+#[derive(Debug, Default)]
+pub struct Linter {
+    graph: LockGraph,
+    report: Report,
+}
+
+impl Linter {
+    pub fn new() -> Linter {
+        Linter::default()
+    }
+
+    /// Lint one source file; `path` is the repo-relative display path
+    /// (also used for rule scoping, e.g. the serving-path file set).
+    pub fn lint_source(&mut self, path: &str, src: &str) {
+        self.report.files_scanned += 1;
+        rules::lint_source(
+            path,
+            src,
+            &mut self.graph,
+            &mut self.report.findings,
+            &mut self.report.suppressions,
+        );
+    }
+
+    /// Run the lock-graph checks and return the sorted report.
+    pub fn finish(mut self) -> Report {
+        self.graph.check(&mut self.report.findings);
+        self.report.findings.sort();
+        self.report.suppressions.sort();
+        self.report
+    }
+}
+
+/// Collect the `.rs` files under `dir`, recursively, sorted for
+/// deterministic reports. Linter fixtures are deliberately skipped:
+/// they are known-bad inputs exercised by `tests/lint_selfcheck.rs`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repo tree rooted at `root`: walks [`LINT_ROOTS`], skipping
+/// `lint/fixtures/`.
+pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
+    let mut linter = Linter::new();
+    let mut files = Vec::new();
+    for sub in LINT_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    for path in files {
+        let display = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        if display.contains("lint/fixtures") {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path)?;
+        linter.lint_source(&display, &src);
+    }
+    Ok(linter.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let mut linter = Linter::new();
+        linter.lint_source(
+            "rust/src/gateway/x.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        let report = linter.finish();
+        assert!(!report.ok());
+        let j = report.to_json();
+        assert_eq!(j.get("version").as_u64(), Some(1));
+        assert_eq!(j.get("files_scanned").as_u64(), Some(1));
+        let findings = j.get("findings").as_arr().expect("findings array");
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].get("rule").as_str(), Some(RULE_PANIC));
+        assert!(findings[0].get("line").as_u64().is_some());
+        assert!(j.get("suppressions").as_arr().is_some());
+    }
+
+    #[test]
+    fn human_rendering_mentions_rule_and_site() {
+        let mut linter = Linter::new();
+        linter.lint_source(
+            "rust/src/kvcache/x.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        let report = linter.finish();
+        let text = report.render_human();
+        assert!(text.contains("rust/src/kvcache/x.rs:1:"), "{text}");
+        assert!(text.contains(RULE_PANIC), "{text}");
+        assert!(text.contains("1 finding(s)"), "{text}");
+    }
+}

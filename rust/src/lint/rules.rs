@@ -1,0 +1,563 @@
+//! Rule engine: a scope-aware walk over lexed lines.
+//!
+//! One left-to-right pass per line tracks brace depth, `#[cfg(test)]`
+//! scopes, function names, hot-path tags, and currently-held lock
+//! guards, so every token check fires with the correct scope context.
+//! Four rule families:
+//!
+//! 1. **no-panic-on-serving-path** — no `.unwrap()` / `.expect(` /
+//!    `panic!` / unchecked indexing in `gateway/`, `engine/real.rs`,
+//!    `kvcache/`, `server/` outside test code. A replica must degrade,
+//!    not die, on malformed input (AIBrix §2: the gateway sits on every
+//!    request).
+//! 2. **unsafe-needs-safety-comment** — every `unsafe` block/fn/impl
+//!    carries a `SAFETY:` comment (or `# Safety` doc section) in its
+//!    contiguous comment/attribute block.
+//! 3. **hot-loop-alloc-free** — no allocating calls inside functions
+//!    tagged with the hot-path pragma (the decode inner loops).
+//! 4. **lock-order** — `.lock()` sites are classified by receiver into
+//!    lock classes and folded into the inter-module graph checked by
+//!    [`super::lockorder`].
+//!
+//! Suppressions: a `lint:allow(rule): reason` comment pragma on the
+//! offending line (or in the comment block directly above) suppresses
+//! that rule there; an allow without a reason is itself a finding
+//! (**suppression-missing-reason**).
+
+use std::collections::BTreeMap;
+
+use super::lexer::{split_lines, Line};
+use super::lockorder::{LockGraph, Site};
+
+pub const RULE_PANIC: &str = "no-panic-on-serving-path";
+pub const RULE_UNSAFE: &str = "unsafe-needs-safety-comment";
+pub const RULE_HOT: &str = "hot-loop-alloc-free";
+pub const RULE_LOCK: &str = "lock-order";
+pub const RULE_SUPPRESSION: &str = "suppression-missing-reason";
+
+/// Every rule the linter can emit.
+pub const ALL_RULES: [&str; 5] = [RULE_PANIC, RULE_UNSAFE, RULE_HOT, RULE_LOCK, RULE_SUPPRESSION];
+
+/// Panic-family tokens banned on the serving path (matched against the
+/// comment/string-stripped code view).
+const PANIC_TOKENS: [&str; 7] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+    ".get_unchecked",
+];
+
+/// Allocation-family tokens banned inside hot-path-tagged functions.
+const HOT_TOKENS: [&str; 5] = ["Vec::new(", "vec![", ".to_vec(", ".collect(", ".clone("];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A finding that was silenced by an allow pragma (reported so CI can
+/// audit that every suppression carries a reason).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Is this file on the panic-free serving path (rule 1 scope)?
+fn serving_scope(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p.contains("src/gateway/")
+        || p.contains("src/kvcache/")
+        || p.contains("src/server/")
+        || p.ends_with("src/engine/real.rs")
+}
+
+/// A comment pragma understood by the linter.
+enum Pragma {
+    HotPath,
+    Allow { rule: String, reason: String },
+}
+
+/// Parse the pragma starting a comment, if any. Pragmas must lead the
+/// comment text (after the `//` / `/*` markers), so prose *mentioning*
+/// a pragma never activates it.
+fn parse_pragma(comment: &str) -> Option<Pragma> {
+    let text = comment.trim_start().trim_start_matches(['/', '*', '!']).trim_start();
+    if let Some(rest) = text.strip_prefix("lint:hot_path") {
+        if rest.is_empty() || !rest.starts_with(|c: char| c.is_alphanumeric() || c == '_') {
+            return Some(Pragma::HotPath);
+        }
+        return None;
+    }
+    let rest = text.strip_prefix("lint:allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let mut reason = rest[close + 1..].trim();
+    reason = reason.strip_prefix(':').unwrap_or("").trim();
+    let reason = reason.strip_suffix("*/").unwrap_or(reason).trim();
+    Some(Pragma::Allow { rule, reason: reason.to_string() })
+}
+
+/// Nesting scope opened by a `{`.
+#[derive(Clone)]
+struct Scope {
+    test: bool,
+    hot: bool,
+    func: Option<String>,
+}
+
+/// A lock guard currently held while walking a function body.
+struct Held {
+    rank: usize,
+    depth: usize,
+    line_idx: usize,
+    let_bound: bool,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `tok` start at `pos`?
+fn at(code: &[char], pos: usize, tok: &str) -> bool {
+    tok.chars().enumerate().all(|(k, t)| code.get(pos + k) == Some(&t))
+}
+
+/// Does the word `w` start at `pos` with identifier boundaries?
+fn word_at(code: &[char], pos: usize, w: &str) -> bool {
+    at(code, pos, w)
+        && (pos == 0 || !is_ident(code[pos - 1]))
+        && code.get(pos + w.chars().count()).is_none_or(|c| !is_ident(*c))
+}
+
+/// Classify a lock receiver into a canonical lock class rank. Receiver
+/// names are load-bearing in this codebase: the workspace/buffer arenas
+/// are the runtime class (checked before the generic pool match), the
+/// router is the gateway's lock, cluster snapshots are `view`, the
+/// shared KV pool is `pool`, and engines wrap in `engine`. Unrecognized
+/// receivers (test scaffolding, channel receivers) are ignored.
+fn classify_receiver(recv: &str) -> Option<usize> {
+    let last = recv.rsplit('.').next().unwrap_or(recv);
+    if last.contains("ws_pool") || last.contains("buf_pool") {
+        return Some(4); // runtime
+    }
+    if last.contains("router") {
+        return Some(0); // gateway
+    }
+    if last.contains("view") {
+        return Some(1); // ClusterView
+    }
+    if last.contains("pool") {
+        return Some(2); // DistKvPool
+    }
+    if last.contains("engine") {
+        return Some(3); // engine
+    }
+    None
+}
+
+/// Extract the identifier chain ending just before `pos` (receiver of a
+/// `.lock()` call): walks back over idents and dots.
+fn receiver_before(code: &[char], pos: usize) -> String {
+    let mut start = pos;
+    while start > 0 && (is_ident(code[start - 1]) || code[start - 1] == '.') {
+        start -= 1;
+    }
+    code[start..pos].iter().collect()
+}
+
+/// Extract the receiver inside `lock_or_recover(&self.pool)`-style calls:
+/// reads forward from `pos` (just after the open paren), skipping `&` and
+/// `mut `.
+fn receiver_after(code: &[char], mut pos: usize) -> String {
+    while code.get(pos).is_some_and(|c| *c == '&' || c.is_whitespace()) {
+        pos += 1;
+    }
+    if at(code, pos, "mut ") {
+        pos += 4;
+    }
+    let mut out = String::new();
+    while code.get(pos).is_some_and(|c| is_ident(*c) || *c == '.') {
+        out.push(code[pos]);
+        pos += 1;
+    }
+    out
+}
+
+/// Does a `SAFETY:` comment (or `# Safety` doc section) cover line `idx`?
+/// Checks the line's own trailing comment, then walks the contiguous
+/// comment/attribute block directly above.
+fn has_safety(lines: &[Line], idx: usize) -> bool {
+    let safety = |l: &Line| l.comment.contains("SAFETY:") || l.comment.contains("# Safety");
+    if safety(&lines[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && (lines[j - 1].is_comment_only() || lines[j - 1].is_attr_only()) {
+        if safety(&lines[j - 1]) {
+            return true;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// Route a candidate finding through the suppression table: a matching
+/// allow on the finding's line (or in the comment block directly above)
+/// records a [`Suppression`] instead of a finding.
+fn emit(
+    finding: Finding,
+    allows: &BTreeMap<usize, Vec<(String, String)>>,
+    lines: &[Line],
+    findings: &mut Vec<Finding>,
+    suppressions: &mut Vec<Suppression>,
+) {
+    let idx = finding.line - 1;
+    let mut candidates = vec![idx];
+    let mut j = idx;
+    while j > 0 && (lines[j - 1].is_comment_only() || lines[j - 1].is_attr_only()) {
+        candidates.push(j - 1);
+        j -= 1;
+    }
+    for c in candidates {
+        if let Some(list) = allows.get(&c) {
+            for (rule, reason) in list {
+                if rule == finding.rule {
+                    suppressions.push(Suppression {
+                        file: finding.file,
+                        line: finding.line,
+                        rule: rule.clone(),
+                        reason: reason.clone(),
+                    });
+                    return;
+                }
+            }
+        }
+    }
+    findings.push(finding);
+}
+
+/// Lint one source file. Findings and suppressions are appended;
+/// cross-function lock edges accumulate in `graph` (checked once per
+/// tree by the caller).
+pub fn lint_source(
+    path: &str,
+    src: &str,
+    graph: &mut LockGraph,
+    findings: &mut Vec<Finding>,
+    suppressions: &mut Vec<Suppression>,
+) {
+    let lines = split_lines(src);
+    let serving = serving_scope(path);
+
+    // Pragma pass: collect allow-suppressions by 0-based line index and
+    // flag reason-less allows up front.
+    let mut allows: BTreeMap<usize, Vec<(String, String)>> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if let Some(Pragma::Allow { rule, reason }) = parse_pragma(&line.comment) {
+            if reason.is_empty() {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: idx + 1,
+                    rule: RULE_SUPPRESSION,
+                    message: format!(
+                        "suppression of `{rule}` has no reason — write \
+                         `lint:allow({rule}): <why the invariant holds here>`"
+                    ),
+                });
+            }
+            allows.entry(idx).or_default().push((rule, reason));
+        }
+    }
+
+    let mut scopes: Vec<Scope> = vec![Scope { test: false, hot: false, func: None }];
+    let mut pending_test = false;
+    let mut pending_hot = false;
+    let mut pending_fn: Option<String> = None;
+    let mut held: Vec<Held> = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        if matches!(parse_pragma(&line.comment), Some(Pragma::HotPath)) {
+            pending_hot = true;
+        }
+        let code: Vec<char> = line.code.chars().collect();
+        let let_stmt = line.code.trim_start().starts_with("let ");
+        let mut unsafe_here = false;
+        let mut pos = 0;
+        while pos < code.len() {
+            match code[pos] {
+                '{' => {
+                    let parent = scopes.last().cloned().unwrap_or(Scope {
+                        test: false,
+                        hot: false,
+                        func: None,
+                    });
+                    scopes.push(Scope {
+                        test: parent.test || pending_test,
+                        hot: parent.hot || pending_hot,
+                        func: pending_fn.take().or(parent.func),
+                    });
+                    pending_test = false;
+                    pending_hot = false;
+                    pos += 1;
+                }
+                '}' => {
+                    if scopes.len() > 1 {
+                        scopes.pop();
+                    }
+                    let depth = scopes.len();
+                    held.retain(|h| h.depth <= depth);
+                    pos += 1;
+                }
+                _ => {
+                    let in_test = scopes.iter().any(|s| s.test);
+                    let in_hot = scopes.last().is_some_and(|s| s.hot);
+                    if at(&code, pos, "#[cfg(test)") {
+                        pending_test = true;
+                    } else if word_at(&code, pos, "fn") {
+                        let mut j = pos + 2;
+                        while code.get(j).is_some_and(|c| c.is_whitespace()) {
+                            j += 1;
+                        }
+                        let mut name = String::new();
+                        while code.get(j).is_some_and(|c| is_ident(*c)) {
+                            name.push(code[j]);
+                            j += 1;
+                        }
+                        if !name.is_empty() {
+                            pending_fn = Some(name);
+                        }
+                    } else if word_at(&code, pos, "unsafe") {
+                        unsafe_here = true;
+                    }
+                    if serving && !in_test {
+                        for tok in PANIC_TOKENS {
+                            if at(&code, pos, tok) {
+                                emit(
+                                    Finding {
+                                        file: path.to_string(),
+                                        line: idx + 1,
+                                        rule: RULE_PANIC,
+                                        message: format!(
+                                            "`{tok}` on the serving path — return a typed \
+                                             error (util::err) or degrade instead of \
+                                             killing the replica"
+                                        ),
+                                    },
+                                    &allows,
+                                    &lines,
+                                    findings,
+                                    suppressions,
+                                );
+                            }
+                        }
+                    }
+                    if in_hot {
+                        for tok in HOT_TOKENS {
+                            if at(&code, pos, tok) {
+                                let func = scopes
+                                    .iter()
+                                    .rev()
+                                    .find_map(|s| s.func.clone())
+                                    .unwrap_or_else(|| "?".to_string());
+                                emit(
+                                    Finding {
+                                        file: path.to_string(),
+                                        line: idx + 1,
+                                        rule: RULE_HOT,
+                                        message: format!(
+                                            "`{tok}` inside hot-path function `{func}` — \
+                                             allocate in the caller's workspace, not per \
+                                             token"
+                                        ),
+                                    },
+                                    &allows,
+                                    &lines,
+                                    findings,
+                                    suppressions,
+                                );
+                            }
+                        }
+                    }
+                    let acquired = if at(&code, pos, "lock_or_recover(")
+                        && (pos == 0 || !is_ident(code[pos - 1]))
+                    {
+                        classify_receiver(&receiver_after(&code, pos + 16))
+                    } else if at(&code, pos, ".lock()") {
+                        classify_receiver(&receiver_before(&code, pos))
+                    } else if at(&code, pos, ".with_pool(") {
+                        Some(2) // DistKvPool acquired inside the helper
+                    } else {
+                        None
+                    };
+                    if let Some(rank) = acquired {
+                        if !in_test {
+                            let func = scopes
+                                .iter()
+                                .rev()
+                                .find_map(|s| s.func.clone())
+                                .unwrap_or_else(|| "?".to_string());
+                            for h in &held {
+                                if h.rank != rank {
+                                    graph.add_edge(
+                                        h.rank,
+                                        rank,
+                                        Site {
+                                            file: path.to_string(),
+                                            line: idx + 1,
+                                            func: func.clone(),
+                                        },
+                                    );
+                                }
+                            }
+                            held.push(Held {
+                                rank,
+                                depth: scopes.len(),
+                                line_idx: idx,
+                                let_bound: let_stmt,
+                            });
+                        }
+                    }
+                    pos += 1;
+                }
+            }
+        }
+        // Guards not bound by a `let` statement die with their statement;
+        // one line is the resolution this linter works at.
+        held.retain(|h| h.let_bound || h.line_idx != idx);
+        if unsafe_here && !has_safety(&lines, idx) {
+            emit(
+                Finding {
+                    file: path.to_string(),
+                    line: idx + 1,
+                    rule: RULE_UNSAFE,
+                    message: "`unsafe` without a `SAFETY:` comment (or `# Safety` doc \
+                              section) stating the aliasing/bounds argument"
+                        .to_string(),
+                },
+                &allows,
+                &lines,
+                findings,
+                suppressions,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> (Vec<Finding>, Vec<Suppression>, LockGraph) {
+        let mut graph = LockGraph::new();
+        let mut findings = Vec::new();
+        let mut suppressions = Vec::new();
+        lint_source(path, src, &mut graph, &mut findings, &mut suppressions);
+        (findings, suppressions, graph)
+    }
+
+    #[test]
+    fn panic_tokens_fire_only_on_serving_paths() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (f, _, _) = run("rust/src/gateway/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_PANIC);
+        let (f, _, _) = run("rust/src/sim/x.rs", src);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        let (f, _, _) = run("rust/src/kvcache/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn string_and_comment_tokens_ignored() {
+        let src = "fn f() -> &'static str { \"call .unwrap() and panic!(now)\" }\n// .unwrap() in prose\n";
+        let (f, _, _) = run("rust/src/server/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn suppression_with_reason_is_recorded() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint:allow(no-panic-on-serving-path): seeded test harness only\n    x.unwrap()\n}\n";
+        let (f, s, _) = run("rust/src/gateway/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].reason, "seeded test harness only");
+    }
+
+    #[test]
+    fn suppression_without_reason_is_a_finding() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint:allow(no-panic-on-serving-path)\n    x.unwrap()\n}\n";
+        let (f, s, _) = run("rust/src/gateway/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_SUPPRESSION);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let (f, _, _) = run("rust/src/runtime/x.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_UNSAFE);
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller passes a valid pointer.\n    unsafe { *p }\n}\n";
+        let (f, _, _) = run("rust/src/runtime/x.rs", good);
+        assert!(f.is_empty(), "{f:?}");
+        let doc = "/// Reads a byte.\n///\n/// # Safety\n/// `p` must be valid.\nunsafe fn f(p: *const u8) -> u8 { *p }\n";
+        let (f, _, _) = run("rust/src/runtime/x.rs", doc);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn hot_path_tag_bans_allocation() {
+        let src = "// lint:hot_path\nfn step(xs: &[u32]) -> Vec<u32> {\n    xs.iter().map(|x| x + 1).collect()\n}\nfn cold(xs: &[u32]) -> Vec<u32> { xs.to_vec() }\n";
+        let (f, _, _) = run("rust/src/runtime/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_HOT);
+        assert!(f[0].message.contains("step"));
+    }
+
+    #[test]
+    fn lock_edges_classified_and_held_across_let() {
+        let src = "fn route() {\n    let mut router = lock_or_recover(&router);\n    let view = lock_or_recover(&self.view);\n    let pool = shared_pool.lock();\n}\n";
+        let (f, _, g) = run("rust/src/gateway/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        // gateway→view, gateway→pool, view→pool: all forward.
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn back_edge_through_source_is_found() {
+        let src = "fn bad() {\n    let pool = lock_or_recover(&self.pool);\n    let r = router.lock();\n}\n";
+        let (_, _, g) = run("rust/src/gateway/x.rs", src);
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("back-edge"));
+        assert!(findings[0].message.contains("bad"));
+    }
+
+    #[test]
+    fn temporaries_do_not_hold_across_statements() {
+        let src = "fn ok() {\n    f(&lock_or_recover(&self.pool));\n    let r = router.lock();\n}\n";
+        let (_, _, g) = run("rust/src/gateway/x.rs", src);
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -31,6 +31,7 @@ use aibrix::optimizer::profiles::{ProfileTable, Slo};
 use aibrix::optimizer::GpuOptimizer;
 use aibrix::server::{Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
+use aibrix::util::lock::{lock_or_recover, lock_poison_total};
 use aibrix::workload::Request;
 
 fn main() {
@@ -334,11 +335,18 @@ fn cmd_serve(args: &Args) -> i32 {
                 HttpResponse::json(200, &policy_json(&policy).to_string())
             }
             ("GET", "/metrics") => {
-                let n = *served.lock().unwrap();
+                let n = *lock_or_recover(&served);
                 let mut body = format!("aibrix_completions_total {n}\n");
                 body.push_str(&format!(
                     "aibrix_rt_precision{{mode=\"{}\"}} 1\n",
                     precision.name()
+                ));
+                // Mutexes recovered from a panicking holder instead of
+                // cascading the poison (util::lock_or_recover); nonzero
+                // means a thread died mid-critical-section somewhere.
+                body.push_str(&format!(
+                    "aibrix_lock_poison_total {}\n",
+                    lock_poison_total()
                 ));
                 for (i, c) in inflight.iter().enumerate() {
                     body.push_str(&format!(
@@ -366,7 +374,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 // each scorer to winning pods, plus affinity hit counters
                 // and the session-table size — makes `weighted:` mixes
                 // auditable in production.
-                if let Some(tel) = router.lock().unwrap().telemetry().cloned() {
+                if let Some(tel) = lock_or_recover(&router).telemetry().cloned() {
                     body.push_str(&format!(
                         "aibrix_route_decisions_total {}\n",
                         tel.decisions
@@ -389,7 +397,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
                 body.push_str(&format!(
                     "aibrix_view_tracked_sessions {}\n",
-                    view_handler.lock().unwrap().tracked_sessions()
+                    lock_or_recover(&view_handler).tracked_sessions()
                 ));
                 // Shared KV pool counters (present with --kv-pool).
                 if let Some(ps) = replicas[0].pool_stats() {
@@ -413,8 +421,8 @@ fn cmd_serve(args: &Args) -> i32 {
                 // routing skew (largest replica fraction of the tenant's
                 // requests; 1/replicas = perfectly spread, 1.0 = pinned).
                 let now_us = t_start.elapsed().as_micros() as u64;
-                let meter = usage.lock().unwrap();
-                for (user, counts) in tenant_routed.lock().unwrap().iter() {
+                let meter = lock_or_recover(&usage);
+                for (user, counts) in lock_or_recover(&tenant_routed).iter() {
                     let total: u64 = counts.iter().sum();
                     if total == 0 {
                         continue;
@@ -450,7 +458,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     tokens.push(tokenizer.bos());
                 }
                 let id = {
-                    let mut n = next_id.lock().unwrap();
+                    let mut n = lock_or_recover(&next_id);
                     *n += 1;
                     *n
                 };
@@ -482,14 +490,15 @@ fn cmd_serve(args: &Args) -> i32 {
                     shared_prefix_len: 0,
                 };
                 let now_us = t_start.elapsed().as_micros() as u64;
-                let ctx = ScoreCtx { tenant_share: usage.lock().unwrap().share(now_us, user) };
+                let ctx =
+                    ScoreCtx { tenant_share: lock_or_recover(&usage).share(now_us, user) };
                 // Select and claim under one lock: snapshotting loads,
                 // picking, and bumping the winner's in-flight count must be
                 // atomic or concurrent requests all see equal loads and
                 // herd onto one replica.
                 let pick = {
-                    let mut r = router.lock().unwrap();
-                    let mut v = view_handler.lock().unwrap();
+                    let mut r = lock_or_recover(&router);
+                    let mut v = lock_or_recover(&view_handler);
                     let mut pods: Vec<CounterPod> = inflight
                         .iter()
                         .enumerate()
@@ -517,7 +526,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     p
                 };
                 {
-                    let mut routed = tenant_routed.lock().unwrap();
+                    let mut routed = lock_or_recover(&tenant_routed);
                     if routed.len() < MAX_TRACKED_TENANTS || routed.contains_key(&user) {
                         routed.entry(user).or_insert_with(|| vec![0u64; n_replicas])[pick] += 1;
                     }
@@ -529,12 +538,12 @@ fn cmd_serve(args: &Args) -> i32 {
                     Ok(c) => {
                         // Fairness meter: charge the tokens actually served
                         // (prompt + generated), at completion time.
-                        usage.lock().unwrap().record(
+                        lock_or_recover(&usage).record(
                             t_start.elapsed().as_micros() as u64,
                             user,
                             (prompt_tokens + c.generated.len()) as u64,
                         );
-                        *served.lock().unwrap() += 1;
+                        *lock_or_recover(&served) += 1;
                         let text = tokenizer.decode(&c.generated);
                         let out = Json::obj([
                             ("id", Json::from(format!("cmpl-{id}"))),

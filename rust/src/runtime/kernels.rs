@@ -44,6 +44,7 @@ const GEMM_KC: usize = 128;
 /// lane-vectorized version that is bit-identical to [`gemm_scalar`] (the
 /// vector lanes cover independent output columns; each column still sees
 /// the exact scalar mul/add sequence).
+// lint:hot_path
 pub fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if simd::avx2() {
@@ -160,6 +161,7 @@ pub fn quantize_rows(w: &[f32], rows: usize, cols: usize) -> QuantMat {
 /// multi-row blocks each `[KC, n]` weight panel is converted once and
 /// reused across the whole row block; m=1 decode converts inline (same
 /// bits — i8→f32 conversion is exact — without the staging traffic).
+// lint:hot_path
 pub fn gemm_i8(
     x: &[f32],
     w: &QuantMat,
@@ -337,6 +339,7 @@ impl RopeTables {
 /// accumulating in ascending-j order so prefill and decode produce
 /// bit-identical sums. `out` is this head's [head_dim] output slot.
 #[allow(clippy::too_many_arguments)]
+// lint:hot_path
 pub fn attend_one(
     q: &[f32],
     k_row: &[f32],
@@ -390,6 +393,7 @@ pub fn attend_one(
 /// With the `simd` feature the AVX2 version computes 8 vocab rows per
 /// iteration (one gather per depth step), each lane still an ascending-d
 /// scalar-order chain — bit-identical to [`logits_tile_scalar`].
+// lint:hot_path
 pub fn logits_tile(xn: &[f32], embed: &[f32], t0: usize, t1: usize, out: &mut [f32]) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     if simd::avx2() && t1 - t0 >= 8 {
@@ -539,6 +543,9 @@ pub struct RawSlice<'a> {
 // the unsafe range methods whose callers must guarantee cross-thread
 // disjointness (each worker touches only its own row's/tile's ranges).
 unsafe impl Send for RawSlice<'_> {}
+// SAFETY: same argument as Send — a shared RawSlice exposes data only via
+// the unsafe range methods, whose callers guarantee disjoint access, so
+// concurrent `&RawSlice` use from many threads adds no new aliasing.
 unsafe impl Sync for RawSlice<'_> {}
 
 impl<'a> RawSlice<'a> {
@@ -574,6 +581,7 @@ impl<'a> RawSlice<'a> {
 /// Caller must hold worker exclusivity over row `b`'s `(layer, b)` slabs,
 /// the same contract as `forward_row`'s cache writes.
 #[allow(clippy::too_many_arguments)]
+// lint:hot_path
 pub fn install_kv(
     slab: &[f32],
     raw: &RawSlice<'_>,
@@ -622,6 +630,11 @@ mod simd {
 
     /// Bit-identical AVX2 [`super::gemm`]: same (MC, KC) tiling, vector
     /// lanes across output columns, ascending-k adds per element.
+    ///
+    /// # Safety
+    /// Caller must confirm AVX2 support first (gate on [`avx2`]); slice
+    /// bounds are asserted on entry, so every lane load/store below stays
+    /// inside `x`/`w`/`out`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_avx2(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
         assert!(x.len() >= m * k && w.len() >= k * n && out.len() >= m * n, "gemm_avx2 bounds");
@@ -667,6 +680,11 @@ mod simd {
     /// Bit-identical AVX2 [`super::gemm_i8_scalar`]: int8 weights widen
     /// through exact i8→i32→f32 conversion in-register (no staging panel
     /// needed), per-column scales applied once after all k panels.
+    ///
+    /// # Safety
+    /// Caller must confirm AVX2 support first (gate on [`avx2`]); the
+    /// entry asserts pin `x`/`wq`/`scales`/`out` lengths, and the 8-wide
+    /// i8 loads at `kk * n + j` stay within `wq` because `j + 8 <= n`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn gemm_i8_avx2(
         x: &[f32],
@@ -737,6 +755,11 @@ mod simd {
 
     /// Bit-identical AVX2 elementwise pass of [`super::rms_norm`]:
     /// out[i] = (x[i] * inv) * g[i], the scalar association.
+    ///
+    /// # Safety
+    /// Caller must confirm AVX2 support first (gate on [`avx2`]); the
+    /// entry assert pins `g`/`out` to at least `x.len()`, bounding every
+    /// 8-lane load/store.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_gain_avx2(x: &[f32], g: &[f32], inv: f32, out: &mut [f32]) {
         let d = x.len();
@@ -758,6 +781,11 @@ mod simd {
     /// Bit-identical AVX2 [`super::logits_tile_scalar`]: 8 vocab rows per
     /// iteration via one dm-strided gather per depth step; each lane is a
     /// separate ascending-d chain from 0.0, exactly the scalar dot.
+    ///
+    /// # Safety
+    /// Caller must confirm AVX2 support first (gate on [`avx2`]); entry
+    /// asserts pin `embed`/`out` bounds and that `8 * dm` fits in i32, so
+    /// the strided gather offsets cannot overflow or escape `embed`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn logits_tile_avx2(
         xn: &[f32],

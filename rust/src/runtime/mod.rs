@@ -859,6 +859,7 @@ impl TinyLmRuntime {
     /// (s0=0, s_len=S); decode with (s0=p, s_len=1) — one shared,
     /// bit-exact path.
     #[allow(clippy::too_many_arguments)]
+    // lint:hot_path
     fn forward_row(
         &self,
         batch: usize,
@@ -897,6 +898,8 @@ impl TinyLmRuntime {
                 // (layer, b) slabs of either cache.
                 let k_dst = unsafe { k_raw.range_mut(row_base + s0 * dm, s_len * dm) };
                 matmul(xn, &lp.wk, ql.map(|q| &q.wk), s_len, dm, dm, k_dst, &mut ws.wdq);
+                // SAFETY: same exclusivity as k_dst above — worker `b` owns
+                // the (layer, b) V slab, and this range doesn't overlap it.
                 let v_dst = unsafe { v_raw.range_mut(row_base + s0 * dm, s_len * dm) };
                 matmul(xn, &lp.wv, ql.map(|q| &q.wv), s_len, dm, dm, v_dst, &mut ws.wdq);
                 for s in 0..s_len {
@@ -911,9 +914,11 @@ impl TinyLmRuntime {
             {
                 // Attention reads the slabs written above (same thread; the
                 // mutable borrows ended with the previous block).
-                // SAFETY: shared read of row b's slab only.
                 let seen = (s0 + s_len) * dm;
+                // SAFETY: shared read of row b's slab only.
                 let k_row = unsafe { k_raw.range(row_base, seen) };
+                // SAFETY: shared read of row b's V slab, written above on
+                // this same thread (the mutable borrow has ended).
                 let v_row = unsafe { v_raw.range(row_base, seen) };
                 for s in 0..s_len {
                     let pos = s0 + s;

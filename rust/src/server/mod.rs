@@ -15,6 +15,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::lock::lock_or_recover;
+
 /// A request handler: path + parsed request -> response.
 pub type Handler = Arc<dyn Fn(&HttpRequest) -> HttpResponse + Send + Sync>;
 
@@ -39,7 +41,9 @@ impl HttpServer {
             let rx = Arc::clone(&rx);
             let handler = Arc::clone(&handler);
             std::thread::spawn(move || loop {
-                let stream = { rx.lock().unwrap().recv() };
+                // A worker that panicked mid-request must not take the
+                // whole accept pool down with a poisoned receiver lock.
+                let stream = { lock_or_recover(&rx).recv() };
                 match stream {
                     Ok(s) => handle_connection(s, &handler),
                     Err(_) => break,

@@ -1,0 +1,70 @@
+//! Poison-recovering mutex acquisition for the serving path.
+//!
+//! A panicking holder poisons a `std::sync::Mutex`; every later
+//! `.lock().unwrap()` then cascades that one panic across the whole
+//! process (HTTP workers, the router, the engine thread). On the serving
+//! path we want the opposite failure mode: the replica keeps serving with
+//! the data the lock protects (counters, caches, routing scratch — all
+//! self-healing state), and the incident is *counted* so operators see it
+//! on `/metrics` as `aibrix_lock_poison_total` instead of in a core dump.
+//!
+//! `lint:` the `aibrix_lint` no-panic rule bans `.lock().unwrap()` in
+//! gateway/engine/kvcache/server code; this helper is the sanctioned
+//! replacement everywhere.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Process-wide count of poison recoveries (exported on `/metrics`).
+static LOCK_POISON_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Acquire `m`, recovering from poison instead of propagating the panic.
+///
+/// On poison: clears the flag (so later lockers take the fast path),
+/// bumps [`lock_poison_total`], and returns the guard — the protected
+/// value is whatever state the panicking holder left, which every caller
+/// in this codebase treats as refreshable (stats, caches, queues).
+pub fn lock_or_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            LOCK_POISON_TOTAL.fetch_add(1, Ordering::Relaxed);
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Cumulative poison recoveries since process start — the value behind
+/// the `aibrix_lock_poison_total` metric.
+pub fn lock_poison_total() -> u64 {
+    LOCK_POISON_TOTAL.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_from_poison_and_counts() {
+        let m = Arc::new(Mutex::new(41u32));
+        let before = lock_poison_total();
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "panic while held must poison");
+        {
+            let mut g = lock_or_recover(&m);
+            *g += 1;
+        }
+        assert_eq!(lock_poison_total(), before + 1);
+        assert!(!m.is_poisoned(), "recovery clears the poison flag");
+        // Subsequent lockers see the (self-healed) value on the fast path.
+        assert_eq!(*lock_or_recover(&m), 42);
+        assert_eq!(lock_poison_total(), before + 1, "clean lock does not count");
+    }
+}

@@ -8,9 +8,11 @@
 
 pub mod dist;
 pub mod err;
+pub mod lock;
 pub mod prng;
 pub mod stats;
 
 pub use dist::{Exponential, LogNormal, Poisson, Zipf};
+pub use lock::{lock_or_recover, lock_poison_total};
 pub use prng::Rng;
 pub use stats::{mean, percentile, std_dev, Summary};

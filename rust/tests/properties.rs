@@ -622,7 +622,7 @@ fn prop_kv_pool_accounting_invariants() {
             let mut cfg = KvPoolConfig::new(nodes, 64, 16); // block = 1024 bytes
             cfg.dedup = sc.dedup;
             let mut pool = DistKvPool::new(cfg);
-            pool.set_shape(SHAPE);
+            pool.set_shape(SHAPE).map_err(|e| e.to_string())?;
             let data = Arc::new(KvBlockData {
                 k: vec![1.0; SHAPE.floats_per_side()],
                 v: vec![2.0; SHAPE.floats_per_side()],
@@ -636,7 +636,7 @@ fn prop_kv_pool_accounting_invariants() {
                     1 => {
                         let items: Vec<(u64, Arc<KvBlockData>)> =
                             keys.iter().map(|&k| (k, Arc::clone(&data))).collect();
-                        pool.insert_blocks(now, node, &items);
+                        pool.insert_blocks(now, node, &items).map_err(|e| e.to_string())?;
                     }
                     _ => {
                         let (fetch, blocks) = pool.lookup_blocks(now, node, &keys);

@@ -5,6 +5,7 @@ Usage:
     python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
     python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
     python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
+    python3 scripts/check_bench.py --lint lint_report.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
 - BASELINE: the blessed copy tracked in git (benchmarks/*.baseline.json).
@@ -19,6 +20,10 @@ Usage:
   (pool-aware hit ratio strictly above pool-blind, served-prefill
   throughput at least pool-blind's, session-sticky above blind, outputs
   bit-identical across policies).
+- --lint: validate an `aibrix_lint --json` report — schema (version 1,
+  files_scanned, findings, suppressions), zero findings, and every
+  suppression carrying a non-empty reason. This is the CI hard gate for
+  the static-analysis pass (README "Static analysis & invariants").
 
 Exit codes: 0 = ok (or record mode: no baseline checked in yet),
 1 = regression, 2 = malformed input.
@@ -130,18 +135,63 @@ def check_routing(path):
     return 0
 
 
+def check_lint(path):
+    """Validate an aibrix_lint --json report (ISSUE 6 acceptance: schema
+    well-formed, zero findings, every suppression has a reason)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read lint report {path}: {e}")
+        return 2
+    if doc.get("version") != 1:
+        print(f"check_bench: {path} has unknown lint schema version "
+              f"{doc.get('version')!r} (expected 1)")
+        return 2
+    scanned = doc.get("files_scanned")
+    findings = doc.get("findings")
+    suppressions = doc.get("suppressions")
+    if not isinstance(scanned, (int, float)) or scanned <= 0 \
+            or not isinstance(findings, list) or not isinstance(suppressions, list):
+        print(f"check_bench: {path} is missing files_scanned/findings/suppressions")
+        return 2
+    for row in findings + suppressions:
+        if not isinstance(row, dict) or not isinstance(row.get("file"), str) \
+                or not isinstance(row.get("line"), (int, float)):
+            print(f"check_bench: {path} has a malformed finding/suppression row: {row!r}")
+            return 2
+    print(f"check_bench: lint scanned {int(scanned)} files, "
+          f"{len(findings)} finding(s), {len(suppressions)} suppression(s)")
+    if findings:
+        for f in findings:
+            print(f"  {f.get('file')}:{int(f.get('line', 0))}: "
+                  f"[{f.get('rule')}] {f.get('message')}")
+        print("check_bench: FAIL — lint findings present")
+        return 1
+    bare = [s for s in suppressions if not str(s.get("reason", "")).strip()]
+    if bare:
+        for s in bare:
+            print(f"  {s.get('file')}:{int(s.get('line', 0))}: "
+                  f"allow({s.get('rule')}) has no reason")
+        print("check_bench: FAIL — suppression(s) without a reason")
+        return 1
+    print("check_bench: OK — lint gate holds (zero findings, reasoned suppressions)")
+    return 0
+
+
 def main(argv):
     bless = False
     tol = 0.30
     kvpool = None
     routing = None
+    lint = None
     args = []
     i = 1
     while i < len(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool", "--routing"):
+        elif a in ("--tolerance", "--kvpool", "--routing", "--lint"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -151,6 +201,8 @@ def main(argv):
                 tol = float(argv[i])
             elif a == "--kvpool":
                 kvpool = argv[i]
+            elif a == "--lint":
+                lint = argv[i]
             else:
                 routing = argv[i]
         elif a.startswith("--"):
@@ -160,10 +212,16 @@ def main(argv):
         else:
             args.append(a)
         i += 1
-    if kvpool is not None and routing is not None:
-        print("check_bench: pass --kvpool or --routing, not both (run twice)")
+    if sum(x is not None for x in (kvpool, routing, lint)) > 1:
+        print("check_bench: pass one of --kvpool/--routing/--lint (run twice)")
         print(__doc__)
         return 2
+    if lint is not None:
+        if args:
+            print("check_bench: --lint takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_lint(lint)
     if kvpool is not None:
         if args:
             print("check_bench: --kvpool takes no positional arguments")
