@@ -65,6 +65,8 @@ fn main() {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         aibrix::harness::run_with_router_config(cfg, &mut wl, affinity)
     };

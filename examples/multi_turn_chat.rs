@@ -47,6 +47,8 @@ fn scenario(with_pool: bool) -> RunReport {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         },
         &mut wl,
     )

@@ -36,6 +36,8 @@ fn main() {
                 deadline: 0,
                 closed_loop_clients: 0,
                 view: Default::default(),
+                chaos: None,
+                recovery: Default::default(),
             },
             &mut workload,
         );

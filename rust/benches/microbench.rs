@@ -78,6 +78,7 @@ fn snapshots(n: usize) -> Vec<PodSnapshot> {
             session_match: i % 3 == 0,
             slo_headroom: (i as f64 * 0.17) % 1.0,
             resident_adapters: vec![],
+            health: Default::default(),
         })
         .collect()
 }

@@ -1,0 +1,268 @@
+//! Deterministic serving-plane fault injection (§3.2.8 failure mockup).
+//!
+//! The diagnostics module can already *describe* accelerator faults
+//! ([`crate::diagnostics::FailureInjector`] + `diagnose`); this module
+//! closes the loop by driving the *serving-level* consequences of those
+//! faults — a dead replica strands its in-flight requests, a straggler
+//! stretches every step, a lost KV-pool shard takes its cached prefixes
+//! with it — from one seeded, replayable schedule. The harness applies
+//! each [`ChaosEvent`] to real state (`EngineSim`/`RealEngine` failure,
+//! [`crate::kvcache::DistKvPool::drop_shard`]) *and* mirrors it into the
+//! `FailureInjector` so the telemetry rule engine observes the same
+//! incident and the health state machine in `gateway/view.rs` can react.
+//!
+//! Recovery policy lives here too: capped exponential backoff with a
+//! per-request deadline ([`RecoveryPolicy`]), and the typed rejection
+//! taxonomy ([`RejectReason`]) that makes request conservation checkable —
+//! every admitted request either completes or carries one of these
+//! reasons; nothing is silently lost.
+
+use crate::diagnostics::InjectedFault;
+use crate::sim::SimTime;
+use crate::util::Rng;
+
+/// One serving-level fault the chaos layer can inject.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosFault {
+    /// Kill replica `pod` mid-decode: the engine fails, its in-flight
+    /// requests are drained and must be re-dispatched elsewhere.
+    ReplicaDeath { pod: usize },
+    /// Replica `pod` straggles: every subsequent step takes `factor`× its
+    /// nominal latency (a sagging-clock / noisy-neighbor node).
+    Straggler { pod: usize, factor: f64 },
+    /// Node `node` loses its KV-pool shard: metadata and data tiers drop
+    /// atomically, so residency never advertises the dead blocks and
+    /// consumers degrade gracefully to recompute.
+    ShardLoss { node: u64 },
+}
+
+impl ChaosFault {
+    /// The accelerator-telemetry fault mirrored into the
+    /// [`crate::diagnostics::FailureInjector`] alongside the state change,
+    /// so `diagnose` sees the same incident the serving plane suffers:
+    /// replica death shows up as a fatal XID, a straggler as a sagging SM
+    /// clock (silent degradation), shard loss as interconnect errors (the
+    /// node itself keeps serving — only its cache tier died).
+    pub fn telemetry_fault(&self) -> InjectedFault {
+        match self {
+            ChaosFault::ReplicaDeath { .. } => InjectedFault::XidFatal,
+            ChaosFault::Straggler { .. } => InjectedFault::ClockSag,
+            ChaosFault::ShardLoss { .. } => InjectedFault::NvlinkErrors,
+        }
+    }
+
+    /// The pod a fault targets, if it targets one (shard loss targets a
+    /// node, not a replica).
+    pub fn pod(&self) -> Option<usize> {
+        match self {
+            ChaosFault::ReplicaDeath { pod } | ChaosFault::Straggler { pod, .. } => Some(*pod),
+            ChaosFault::ShardLoss { .. } => None,
+        }
+    }
+}
+
+/// A fault and the sim instant it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosEvent {
+    pub at: SimTime,
+    pub fault: ChaosFault,
+}
+
+/// A deterministic, time-ordered fault schedule. Replaying the same
+/// schedule over the same workload reproduces the same incident
+/// bit-for-bit — the property the recovery proptests and `chaos_e2e`
+/// bench lean on.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSchedule {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    /// Build from explicit events (sorted by fire time, stable for ties).
+    pub fn new(mut events: Vec<ChaosEvent>) -> ChaosSchedule {
+        events.sort_by_key(|e| e.at);
+        ChaosSchedule { events }
+    }
+
+    /// Derive a random-but-replayable schedule from `seed`: 1–4 faults
+    /// spread over the middle of `[horizon_us/8, horizon_us)`, targeting
+    /// `pods` replicas and the given pool `nodes`. With no pods and no
+    /// nodes the schedule is empty.
+    pub fn from_seed(seed: u64, pods: usize, nodes: &[u64], horizon_us: SimTime) -> ChaosSchedule {
+        let mut rng = Rng::with_stream(seed, 0xC4A05);
+        let mut events = Vec::new();
+        if pods == 0 && nodes.is_empty() {
+            return ChaosSchedule { events };
+        }
+        let n = 1 + rng.below(4);
+        let lo = horizon_us / 8;
+        let span = horizon_us.saturating_sub(lo).max(1);
+        for _ in 0..n {
+            let at = lo + rng.below(span);
+            let kind = rng.below(3);
+            let fault = if kind == 2 && !nodes.is_empty() {
+                let node = nodes.get(rng.below(nodes.len() as u64) as usize).copied();
+                match node {
+                    Some(node) => ChaosFault::ShardLoss { node },
+                    None => continue,
+                }
+            } else if pods > 0 {
+                let pod = rng.below(pods as u64) as usize;
+                if kind == 1 {
+                    ChaosFault::Straggler { pod, factor: rng.uniform(2.0, 6.0) }
+                } else {
+                    ChaosFault::ReplicaDeath { pod }
+                }
+            } else {
+                continue;
+            };
+            events.push(ChaosEvent { at, fault });
+        }
+        ChaosSchedule::new(events)
+    }
+
+    pub fn events(&self) -> &[ChaosEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Why an admitted request was rejected instead of completed. Typed so
+/// the request-conservation invariant is checkable: every admitted
+/// request ends as exactly one completion *or* one `(id, RejectReason)` —
+/// a silent loss fails the accounting, not just a vibe check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Token-bucket admission control said no (retryable).
+    RateLimited,
+    /// No pod could accept the request when it arrived or was retried.
+    NoCapacity,
+    /// The request's recovery deadline elapsed before a healthy replica
+    /// could take it.
+    DeadlineExceeded,
+    /// The capped retry budget ran out.
+    RetriesExhausted,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::RateLimited => "rate_limited",
+            RejectReason::NoCapacity => "no_capacity",
+            RejectReason::DeadlineExceeded => "deadline_exceeded",
+            RejectReason::RetriesExhausted => "retries_exhausted",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How stranded requests come back: capped exponential backoff between
+/// re-dispatch attempts, a hard per-request deadline, and the diagnostics
+/// sweep cadence that bounds detection latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// First-retry delay, µs.
+    pub base_backoff_us: u64,
+    /// Backoff ceiling, µs (the "capped" in capped exponential).
+    pub max_backoff_us: u64,
+    /// Re-dispatch attempts before [`RejectReason::RetriesExhausted`].
+    pub max_attempts: u32,
+    /// Per-request wall budget from its *original* arrival, µs; past it
+    /// the request is rejected [`RejectReason::DeadlineExceeded`].
+    pub deadline_us: u64,
+    /// Diagnostics heartbeat: how often telemetry is sampled, diagnosed
+    /// and fed to the health state machine, µs. Detection-to-cordon
+    /// latency is bounded by a small multiple of this.
+    pub sweep_interval_us: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            base_backoff_us: 1_000,
+            max_backoff_us: 64_000,
+            max_attempts: 8,
+            deadline_us: 30_000_000,
+            sweep_interval_us: 2_000,
+        }
+    }
+}
+
+impl RecoveryPolicy {
+    /// Delay before retry number `attempt` (0-based): `base << attempt`,
+    /// saturating, capped at `max_backoff_us`.
+    pub fn backoff_us(&self, attempt: u32) -> u64 {
+        self.base_backoff_us
+            .checked_shl(attempt.min(32))
+            .unwrap_or(u64::MAX)
+            .min(self.max_backoff_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_sorted() {
+        let a = ChaosSchedule::from_seed(7, 3, &[0, 1, 2], 1_000_000);
+        let b = ChaosSchedule::from_seed(7, 3, &[0, 1, 2], 1_000_000);
+        assert_eq!(a.events(), b.events(), "same seed, same schedule");
+        assert!(!a.is_empty() && a.len() <= 4);
+        assert!(a.events().windows(2).all(|w| w[0].at <= w[1].at), "time-ordered");
+        for e in a.events() {
+            assert!(e.at >= 1_000_000 / 8 && e.at < 1_000_000);
+            if let Some(pod) = e.fault.pod() {
+                assert!(pod < 3);
+            }
+        }
+        let c = ChaosSchedule::from_seed(8, 3, &[0, 1, 2], 1_000_000);
+        assert_ne!(a.events(), c.events(), "different seed, different schedule");
+    }
+
+    #[test]
+    fn empty_targets_empty_schedule() {
+        assert!(ChaosSchedule::from_seed(1, 0, &[], 1_000_000).is_empty());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let p = RecoveryPolicy::default();
+        assert_eq!(p.backoff_us(0), 1_000);
+        assert_eq!(p.backoff_us(1), 2_000);
+        assert_eq!(p.backoff_us(2), 4_000);
+        assert_eq!(p.backoff_us(6), 64_000);
+        assert_eq!(p.backoff_us(7), 64_000, "capped at max");
+        assert_eq!(p.backoff_us(63), 64_000, "no overflow at large attempts");
+    }
+
+    #[test]
+    fn telemetry_mapping_covers_every_fault() {
+        assert_eq!(
+            ChaosFault::ReplicaDeath { pod: 0 }.telemetry_fault(),
+            InjectedFault::XidFatal
+        );
+        assert_eq!(
+            ChaosFault::Straggler { pod: 0, factor: 3.0 }.telemetry_fault(),
+            InjectedFault::ClockSag
+        );
+        assert_eq!(
+            ChaosFault::ShardLoss { node: 0 }.telemetry_fault(),
+            InjectedFault::NvlinkErrors
+        );
+        assert_eq!(ChaosFault::ShardLoss { node: 0 }.pod(), None);
+        assert_eq!(ChaosFault::Straggler { pod: 2, factor: 2.0 }.pod(), Some(2));
+    }
+}

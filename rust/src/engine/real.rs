@@ -164,6 +164,8 @@ pub struct RealEngine {
     pool: Option<EnginePool>,
     /// Geometry of pool blocks for this runtime (present iff `pool` is).
     kv_shape: Option<KvBlockShape>,
+    /// Chaos flag: a dead replica serves nothing until [`RealEngine::recover`].
+    failed: bool,
 }
 
 impl RealEngine {
@@ -218,6 +220,7 @@ impl RealEngine {
             decode_budget,
             pool,
             kv_shape,
+            failed: false,
         })
     }
 
@@ -249,10 +252,33 @@ impl RealEngine {
         self.queue.len()
     }
 
+    /// Kill this replica (chaos: replica death mid-decode). Every queued
+    /// request is handed back for re-dispatch — nothing is silently lost —
+    /// and the engine refuses work until [`RealEngine::recover`]. The
+    /// runtime's weights are untouched; only in-flight serving state dies,
+    /// so a recovered replica re-prefills from the shared KV pool exactly
+    /// like a cold one.
+    pub fn fail_and_drain(&mut self) -> Vec<RealRequest> {
+        self.failed = true;
+        self.queue.drain(..).map(|(r, _)| r).collect()
+    }
+
+    /// True after [`RealEngine::fail_and_drain`] until recovery.
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// Bring a failed replica back into service.
+    pub fn recover(&mut self) {
+        self.failed = false;
+    }
+
     /// Serve one batch from the queue; returns completions produced.
     /// Batches are padded up to a compiled batch size (1, 4, 8, ...).
+    /// A failed replica serves nothing (and cannot accumulate work: chaos
+    /// drains its queue when it dies).
     pub fn step(&mut self) -> Result<Vec<RealCompletion>> {
-        if self.queue.is_empty() {
+        if self.failed || self.queue.is_empty() {
             return Ok(vec![]);
         }
         let take = self.queue.len().min(self.max_batch);
@@ -422,10 +448,11 @@ impl RealEngine {
         Ok(out)
     }
 
-    /// Drain the queue completely.
+    /// Drain the queue completely. A failed replica serves nothing (its
+    /// queue belongs to `fail_and_drain`), so stop rather than spin.
     pub fn run_to_drain(&mut self) -> Result<usize> {
         let mut served = 0;
-        while !self.queue.is_empty() {
+        while !self.failed && !self.queue.is_empty() {
             served += self.step()?.len();
         }
         Ok(served)
@@ -688,6 +715,46 @@ mod tests {
         };
         e2.enqueue(request(1, &[1, 2, 3, 4, 5, 6, 7, 8], 3));
         assert_eq!(e2.step().unwrap()[0].generated, done[0].generated);
+    }
+
+    #[test]
+    fn fail_and_drain_returns_queue_and_recovery_is_bit_identical() {
+        let pool = shared_pool();
+        let hook = EnginePool::new(Arc::clone(&pool), "tinylm-test");
+        let mut e = engine(Some(hook.for_node(0)));
+        let prefix: Vec<u32> = (0..24).map(|i| (i * 5 % 32) as u32).collect();
+        // Warm the pool so post-failure re-dispatch can seed from it.
+        e.enqueue(request(1, &prefix, 1));
+        let baseline = e.step().unwrap();
+        // Kill the replica with work queued: every request comes back.
+        e.enqueue(request(2, &prefix, 1));
+        e.enqueue(request(3, &prefix, 2));
+        let drained = e.fail_and_drain();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].id, 2);
+        assert!(e.is_failed());
+        assert_eq!(e.pending(), 0, "dead replica holds no work");
+        // A failed replica serves nothing even if work sneaks in.
+        e.enqueue(request(4, &prefix, 1));
+        assert!(e.step().unwrap().is_empty());
+        let _ = e.fail_and_drain(); // re-drain the sneaked request
+        // Re-dispatch to a healthy peer on the same pool: bit-identical.
+        let mut peer = engine(Some(hook.for_node(1)));
+        for r in drained {
+            peer.enqueue(r);
+        }
+        let served = peer.run_to_drain().unwrap();
+        assert_eq!(served, 2);
+        assert_eq!(
+            peer.completions[0].generated, baseline[0].generated,
+            "recovered request must match the fault-free output"
+        );
+        // Recovery restores service on the original replica.
+        e.recover();
+        assert!(!e.is_failed());
+        e.enqueue(request(5, &prefix, 1));
+        let after = e.step().unwrap();
+        assert_eq!(after[0].generated, baseline[0].generated);
     }
 
     #[test]

@@ -150,6 +150,8 @@ fn serve(p: &HeteroParams, counts: &[(GpuKind, usize)], label: &str) -> FleetOut
             deadline: 0,
             closed_loop_clients: 0,
             view,
+            chaos: None,
+            recovery: Default::default(),
         },
         &mut mix,
     );

@@ -82,6 +82,8 @@ pub fn run_policy(p: &RoutingParams, policy: Policy) -> PolicyRow {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         },
         &mut wl,
     );

@@ -144,6 +144,8 @@ pub fn run_cell(p: &Table1Params, base: BaseConfig, dist_kv: bool) -> RunReport 
             deadline: 0,
             closed_loop_clients: p.clients,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         },
         &mut wl,
     )

@@ -27,9 +27,14 @@
 //!     producer composing per-replica load/latency/KV stats, distributed
 //!     KV-pool residency (per-node, via [`crate::kvcache::DistKvPool::residency`]),
 //!     SLO targets and bounded session tables into the [`PodSnapshot`]s
-//!     every entry point routes from. Three scorers consume its signals:
+//!     every entry point routes from. Four scorers consume its signals:
 //!     `pool-affinity`, `slo-headroom`, `session-affinity` (presets
-//!     `pool-aware`, `slo-aware`, `session-sticky`).
+//!     `pool-aware`, `slo-aware`, `session-sticky`) and `health`. The view
+//!     also hosts the **health state machine** (`Healthy → Degraded →
+//!     Draining → Cordoned`, fed by `diagnostics::diagnose` verdicts plus
+//!     missed-heartbeat/straggler detection): Draining pods stop receiving
+//!     new work, Cordoned pods are excluded outright, and sticky sessions
+//!     pinned to either are invalidated on the spot.
 //!   * [`ratelimit`] — the TPM/RPM token buckets.
 //!   * [`fairness`] — the per-tenant DRR dispatch queue plus
 //!     [`TenantUsage`], the decayed token meter behind the fairness scorer.
@@ -63,7 +68,10 @@ pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD, REMOTE_P
 pub use scoring::{
     PipelineConfig, RouteTelemetry, ScoreCtx, ScoringPipeline, N_SCORERS, SCORER_NAMES,
 };
-pub use view::{ClusterView, ClusterViewConfig, CounterPod, PodSignalSource, PodSignals};
+pub use view::{
+    ClusterView, ClusterViewConfig, CounterPod, HealthPolicy, HealthState, HealthTracker,
+    PodSignalSource, PodSignals,
+};
 
 use crate::sim::SimTime;
 use crate::workload::Request;

@@ -11,6 +11,7 @@
 //! (§Perf target: <5µs per decision, asserted by `benches/microbench.rs`).
 
 use super::scoring::{PipelineConfig, ScoreCtx, ScoringPipeline};
+use super::view::HealthState;
 use crate::engine::EngineStats;
 use crate::util::Rng;
 use crate::workload::Request;
@@ -30,6 +31,10 @@ pub struct PodSnapshot {
     /// Engine/pod index used by the harness.
     pub pod: usize,
     pub ready: bool,
+    /// Health-machine verdict ([`super::view::HealthState`]): Draining
+    /// pods take no *new* work, Cordoned pods are excluded outright (the
+    /// view also forces `ready = false` for them).
+    pub health: HealthState,
     pub stats: EngineStats,
     /// Full prompt blocks of *this request* the pod can serve warm: its
     /// engine-local prefix cache, or — when a distributed pool is wired in
@@ -61,6 +66,7 @@ impl Default for PodSnapshot {
         PodSnapshot {
             pod: 0,
             ready: true,
+            health: HealthState::Healthy,
             stats: EngineStats::default(),
             prefix_match_blocks: 0,
             prompt_blocks: 0,
@@ -74,6 +80,14 @@ impl Default for PodSnapshot {
 }
 
 impl PodSnapshot {
+    /// Is this pod eligible for *new* work? Ready, and not
+    /// Draining/Cordoned — every selection path (scored or random) gates
+    /// on this, so a draining pod finishes its in-flight requests without
+    /// ever being handed another.
+    pub fn accepts_new_work(&self) -> bool {
+        self.ready && self.health.accepts_new_work()
+    }
+
     /// Fraction of the prompt covered by this pod's prefix cache, clamped
     /// to `[0, 1]`: a racing snapshot can report more matched blocks than
     /// the prompt holds (cache refreshed between the two reads), and a
@@ -144,8 +158,9 @@ impl Policy {
     ///   * `weighted:key=w,key=w,...` with keys `prefix`, `least-request`,
     ///     `least-kv-cache`, `least-latency`, `throughput`, `lora`,
     ///     `fairness`, `pool-affinity`, `slo-headroom`, `session-affinity`,
-    ///     plus `threshold=<f64>`. Each key may appear at most once — a
-    ///     repeated key is a parse error, never a silent last-wins.
+    ///     `health`, plus `threshold=<f64>`. Each key may appear at most
+    ///     once — a repeated key is a parse error, never a silent
+    ///     last-wins.
     /// Garbage is an error, never silently defaulted.
     pub fn parse(s: &str) -> Result<Policy, String> {
         match s {
@@ -200,6 +215,7 @@ impl Policy {
                     "pool-affinity" => cfg.pool_affinity = w,
                     "slo-headroom" => cfg.slo_headroom = w,
                     "session-affinity" => cfg.session_affinity = w,
+                    "health" => cfg.health = w,
                     "threshold" => cfg.prefix_threshold = w,
                     _ => return Err(format!("unknown weighted scorer {key:?}")),
                 }
@@ -349,7 +365,7 @@ impl Router {
             if let Some(adapter) = &req.adapter {
                 let mut min_load = usize::MAX;
                 let mut best_warm: Option<(usize, usize)> = None; // (load, pod)
-                for p in pods.iter().filter(|p| p.ready) {
+                for p in pods.iter().filter(|p| p.accepts_new_work()) {
                     let load = p.stats.waiting + p.stats.running;
                     min_load = min_load.min(load);
                     if p.resident_adapters.iter().any(|a| a == adapter) {
@@ -372,13 +388,13 @@ impl Router {
         match &mut self.pipeline {
             Some(pipeline) => pipeline.select(req, pods, ctx),
             None => {
-                // Random over the ready pods.
-                let n = pods.iter().filter(|p| p.ready).count();
+                // Random over the pods still accepting new work.
+                let n = pods.iter().filter(|p| p.accepts_new_work()).count();
                 if n == 0 {
                     return None;
                 }
                 let k = self.rng.below(n as u64) as usize;
-                pods.iter().filter(|p| p.ready).nth(k).map(|p| p.pod)
+                pods.iter().filter(|p| p.accepts_new_work()).nth(k).map(|p| p.pod)
             }
         }
     }
@@ -425,6 +441,42 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(r.select(&req(), &pods), Some(1));
         }
+    }
+
+    #[test]
+    fn draining_and_cordoned_get_no_new_work() {
+        // Draining: still ready (finishing its queue), never selected.
+        // Cordoned: fully excluded. Applies to scored *and* random paths.
+        for policy in [Policy::Random, Policy::LeastRequest, Policy::PoolAware] {
+            let mut r = Router::new(policy, 7);
+            let mut pods = vec![snap(0), snap(1), snap(2)];
+            pods[0].health = HealthState::Draining;
+            pods[2].health = HealthState::Cordoned;
+            for _ in 0..50 {
+                assert_eq!(r.select(&req(), &pods), Some(1), "{}", policy.name());
+            }
+            // With every pod out of rotation the router returns None, so
+            // the gateway surfaces NoCapacity instead of feeding a corpse.
+            pods[1].health = HealthState::Draining;
+            assert_eq!(r.select(&req(), &pods), None, "{}", policy.name());
+        }
+        // Degraded pods remain eligible (the health scorer just
+        // deprioritizes them in weighted mixes).
+        let mut r = Router::new(Policy::LeastRequest, 7);
+        let mut pods = vec![snap(0)];
+        pods[0].health = HealthState::Degraded;
+        assert_eq!(r.select(&req(), &pods), Some(0));
+    }
+
+    #[test]
+    fn lora_prefilter_respects_health() {
+        let mut r = Router::new(Policy::LeastRequest, 1);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[1].resident_adapters = vec!["lora-x".into()];
+        pods[1].health = HealthState::Draining;
+        let mut rq = req();
+        rq.adapter = Some("lora-x".into());
+        assert_eq!(r.select(&rq, &pods), Some(0), "warm-but-draining pod skipped");
     }
 
     #[test]

@@ -35,6 +35,12 @@
 //!     this pod (sticky multi-turn KV locality). Binary like prefix
 //!     affinity; composes with the overload guard below, so a drowning
 //!     pod sheds its sessions instead of hoarding them.
+//!   * `health` — [`super::view::HealthState`] credit: 1.0 Healthy, 0.5
+//!     Degraded. Draining/Cordoned pods never reach a score at all —
+//!     every selection path hard-excludes pods that stopped accepting new
+//!     work ([`PodSnapshot::accepts_new_work`]), whatever the weights; the
+//!     scorer's job is steering work *away from suspects* before the
+//!     machine escalates.
 //!
 //! **Overload guard**: pods with more than `2 * cluster_min + 4` admitted
 //! requests lose prefix affinity and latency credit, so stale signals and
@@ -52,10 +58,11 @@
 //! this in release mode).
 
 use super::router::PodSnapshot;
+use super::view::HealthState;
 use crate::workload::Request;
 
 /// Number of scorers in the pipeline (and slots in a score-term vector).
-pub const N_SCORERS: usize = 10;
+pub const N_SCORERS: usize = 11;
 
 /// Canonical scorer names, in [`PipelineConfig::weights`] order — the
 /// labels used by `weighted:` strings, validation errors and the
@@ -71,6 +78,7 @@ pub const SCORER_NAMES: [&str; N_SCORERS] = [
     "pool-affinity",
     "slo-headroom",
     "session-affinity",
+    "health",
 ];
 
 /// Weights + knobs for the scoring pipeline. All weights must be finite
@@ -90,6 +98,8 @@ pub struct PipelineConfig {
     pub slo_headroom: f64,
     /// Session stickiness (ClusterView signal).
     pub session_affinity: f64,
+    /// Health-machine credit (full for Healthy, half for Degraded).
+    pub health: f64,
     /// Prompt-coverage fraction at which prefix affinity engages.
     pub prefix_threshold: f64,
     /// Eject overloaded pods from prefix/latency credit (legacy behavior).
@@ -109,6 +119,7 @@ impl Default for PipelineConfig {
             pool_affinity: 0.0,
             slo_headroom: 0.0,
             session_affinity: 0.0,
+            health: 0.0,
             prefix_threshold: 0.3,
             overload_guard: true,
         }
@@ -134,6 +145,7 @@ impl PipelineConfig {
             "pool-affinity" => cfg.pool_affinity = weight,
             "slo-headroom" => cfg.slo_headroom = weight,
             "session-affinity" => cfg.session_affinity = weight,
+            "health" => cfg.health = weight,
             other => {
                 debug_assert!(false, "unknown scorer {other:?} (see PipelineConfig fields)");
             }
@@ -154,6 +166,7 @@ impl PipelineConfig {
             self.pool_affinity,
             self.slo_headroom,
             self.session_affinity,
+            self.health,
         ]
     }
 
@@ -216,7 +229,10 @@ impl ReadyStats {
             max_tps: f64::NEG_INFINITY,
             any_ready: false,
         };
-        for p in pods.iter().filter(|p| p.ready) {
+        // Aggregates span the pods still accepting new work: a draining
+        // pod's (often pathological) stats must not skew normalization for
+        // the pods that can actually win.
+        for p in pods.iter().filter(|p| p.accepts_new_work()) {
             s.any_ready = true;
             let load = p.stats.waiting + p.stats.running;
             s.min_load = s.min_load.min(load);
@@ -354,10 +370,21 @@ impl ScoringPipeline {
         if cfg.session_affinity > 0.0 && !ejected && p.session_match {
             t[9] = cfg.session_affinity;
         }
+        if cfg.health > 0.0 {
+            let credit = match p.health {
+                HealthState::Healthy => 1.0,
+                HealthState::Degraded => 0.5,
+                // Unreachable through select (hard-excluded), but
+                // score_into reports honest zeros for observability.
+                HealthState::Draining | HealthState::Cordoned => 0.0,
+            };
+            t[10] = cfg.health * credit;
+        }
         t
     }
 
-    /// Weighted total for one pod (NEG_INFINITY when not ready).
+    /// Weighted total for one pod (NEG_INFINITY when not ready or no
+    /// longer accepting new work — Draining/Cordoned).
     fn score_pod(
         cfg: &PipelineConfig,
         req: &Request,
@@ -365,7 +392,7 @@ impl ScoringPipeline {
         rs: &ReadyStats,
         ctx: &ScoreCtx,
     ) -> f64 {
-        if !p.ready {
+        if !p.accepts_new_work() {
             return f64::NEG_INFINITY;
         }
         Self::score_terms(cfg, req, p, rs, ctx).iter().sum()
@@ -399,7 +426,7 @@ impl ScoringPipeline {
         for (i, p) in pods.iter().enumerate() {
             let total = Self::score_pod(&self.cfg, req, p, &rs, ctx);
             self.totals.push(total);
-            if !p.ready {
+            if !p.accepts_new_work() {
                 continue;
             }
             let load = p.stats.waiting + p.stats.running;
@@ -600,6 +627,37 @@ mod tests {
         // Unweighted scorers contribute nothing.
         let lora_idx = SCORER_NAMES.iter().position(|&n| n == "lora").unwrap();
         assert_eq!(t.contrib[lora_idx], 0.0);
+    }
+
+    #[test]
+    fn health_scorer_steers_away_from_degraded() {
+        let mut cfg = PipelineConfig::single("health", 0.8);
+        cfg.least_request = 0.2;
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].health = HealthState::Degraded;
+        pods[0].stats.waiting = 1;
+        pods[1].stats.waiting = 2; // slightly busier but healthy
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        // With the suspect recovered the load term decides again.
+        pods[0].health = HealthState::Healthy;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(0));
+    }
+
+    #[test]
+    fn draining_excluded_whatever_the_weights() {
+        // Zero health weight: exclusion is structural, not score-driven.
+        let cfg = PipelineConfig::single("least-request", 1.0);
+        let mut pl = ScoringPipeline::new(cfg);
+        let mut pods = vec![snap(0), snap(1)];
+        pods[0].health = HealthState::Draining; // idle but draining
+        pods[1].stats.waiting = 40;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), Some(1));
+        let mut scores = Vec::new();
+        pl.score_into(&req(), &pods, &ScoreCtx::default(), &mut scores);
+        assert_eq!(scores[0], f64::NEG_INFINITY);
+        pods[1].health = HealthState::Cordoned;
+        assert_eq!(pl.select(&req(), &pods, &ScoreCtx::default()), None);
     }
 
     #[test]

@@ -31,12 +31,202 @@
 use std::collections::{HashMap, VecDeque};
 
 use super::router::PodSnapshot;
+use crate::diagnostics::Action;
 use crate::engine::prefix::{prompt_block_keys_seeded_into, BlockKey};
 use crate::engine::{EngineSim, EngineStats};
 use crate::kvcache::DistKvPool;
 use crate::optimizer::profiles::Slo;
 use crate::sim::SimTime;
 use crate::workload::Request;
+
+/// Replica health, the state machine driving drain/cordon decisions.
+/// Ordered by badness: the machine only escalates (except an explicit
+/// [`ClusterView::recover_pod`]), so `max` composes verdicts from
+/// independent detectors without flapping.
+///
+/// * `Healthy` — full service.
+/// * `Degraded` — suspect (straggling, throttle verdicts): serves, but the
+///   health scorer steers new work away when better pods exist.
+/// * `Draining` — confirmed bad (DrainAndCordon verdict): finishes its
+///   in-flight work but receives **no** new requests; sticky sessions are
+///   re-homed.
+/// * `Cordoned` — out of rotation entirely (drained, or dead via missed
+///   heartbeats): excluded from routing like a not-ready pod.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum HealthState {
+    #[default]
+    Healthy,
+    Degraded,
+    Draining,
+    Cordoned,
+}
+
+impl HealthState {
+    /// May this pod be handed *new* work? (Draining pods only finish what
+    /// they already hold; Cordoned pods are out of rotation.)
+    pub fn accepts_new_work(&self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Degraded)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+            HealthState::Cordoned => "cordoned",
+        }
+    }
+}
+
+/// Detection thresholds for the health state machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthPolicy {
+    /// Consecutive not-ready observations (missed heartbeats) before a
+    /// pod is declared dead and Cordoned.
+    pub missed_to_cordon: u32,
+    /// A ready pod whose mean latency exceeds the best ready pod's by this
+    /// factor is a straggler (Degraded).
+    pub straggler_factor: f64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy { missed_to_cordon: 3, straggler_factor: 4.0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct PodHealth {
+    state: HealthState,
+    /// Consecutive not-ready observations.
+    missed: u32,
+    cordoned_at: Option<SimTime>,
+}
+
+/// Per-pod health records plus the transition log. Owned by
+/// [`ClusterView`]; fed by heartbeat/straggler detection on every
+/// snapshot and by external `diagnostics::diagnose` verdicts via
+/// [`ClusterView::apply_diagnosis`].
+#[derive(Debug, Default)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    pods: Vec<PodHealth>,
+    /// (time, pod, entered state) — every state change, in order.
+    transitions: Vec<(SimTime, usize, HealthState)>,
+}
+
+impl HealthTracker {
+    pub fn new(policy: HealthPolicy) -> HealthTracker {
+        HealthTracker { policy, ..Default::default() }
+    }
+
+    fn ensure(&mut self, pod: usize) {
+        if pod >= self.pods.len() {
+            self.pods.resize(pod + 1, PodHealth::default());
+        }
+    }
+
+    pub fn state(&self, pod: usize) -> HealthState {
+        self.pods.get(pod).map(|p| p.state).unwrap_or_default()
+    }
+
+    /// When the pod entered Cordoned (detection-latency observability).
+    pub fn cordoned_at(&self, pod: usize) -> Option<SimTime> {
+        self.pods.get(pod).and_then(|p| p.cordoned_at)
+    }
+
+    /// Full transition history: (time, pod, entered state).
+    pub fn transitions(&self) -> &[(SimTime, usize, HealthState)] {
+        &self.transitions
+    }
+
+    /// Escalate `pod` to at least `to`; true if the state changed.
+    fn escalate(&mut self, now: SimTime, pod: usize, to: HealthState) -> bool {
+        self.ensure(pod);
+        let Some(p) = self.pods.get_mut(pod) else { return false };
+        if to <= p.state {
+            return false;
+        }
+        p.state = to;
+        if to == HealthState::Cordoned {
+            p.cordoned_at = Some(now);
+        }
+        self.transitions.push((now, pod, to));
+        true
+    }
+
+    /// Feed one `diagnostics::diagnose` verdict. Monitor-grade findings
+    /// leave routing alone; throttle verdicts mark the pod Degraded;
+    /// drain/replace verdicts start the drain. Returns true if the pod
+    /// newly stopped accepting work (caller re-homes its sessions).
+    fn apply_diagnosis(&mut self, now: SimTime, pod: usize, action: Action) -> bool {
+        match action {
+            Action::Monitor => false,
+            Action::ThrottleWorkload => {
+                self.escalate(now, pod, HealthState::Degraded);
+                false
+            }
+            Action::DrainAndCordon | Action::ReplaceDevice => {
+                self.escalate(now, pod, HealthState::Draining)
+            }
+        }
+    }
+
+    /// One heartbeat/straggler sweep over the fleet's raw signals.
+    /// Returns the pods that newly stopped accepting work this sweep.
+    fn observe(&mut self, now: SimTime, sigs: &[PodSignals]) -> Vec<usize> {
+        // Best (lowest) positive mean latency among ready pods: the
+        // straggler baseline. One slow pod alone is its own baseline and
+        // never flags; detection needs a healthy peer to compare against.
+        let mut best = f64::INFINITY;
+        for s in sigs {
+            let l = s.stats.avg_latency_us;
+            if s.ready && l > 0.0 && l < best {
+                best = l;
+            }
+        }
+        let mut newly_out = Vec::new();
+        for s in sigs {
+            self.ensure(s.pod);
+            let straggler = s.ready
+                && best.is_finite()
+                && s.stats.avg_latency_us > self.policy.straggler_factor * best;
+            let drained_idle = s.stats.waiting + s.stats.running == 0;
+            let Some(p) = self.pods.get_mut(s.pod) else { continue };
+            if s.ready {
+                p.missed = 0;
+            } else {
+                p.missed = p.missed.saturating_add(1);
+            }
+            let dead = p.missed >= self.policy.missed_to_cordon;
+            let was_accepting = p.state.accepts_new_work();
+            if dead {
+                self.escalate(now, s.pod, HealthState::Cordoned);
+            } else if p.state == HealthState::Draining && drained_idle {
+                // Drain complete: nothing in flight, take it out.
+                self.escalate(now, s.pod, HealthState::Cordoned);
+            } else if straggler {
+                self.escalate(now, s.pod, HealthState::Degraded);
+            }
+            if was_accepting && !self.state(s.pod).accepts_new_work() {
+                newly_out.push(s.pod);
+            }
+        }
+        newly_out
+    }
+
+    /// Put a repaired/replaced pod back in rotation.
+    fn recover(&mut self, now: SimTime, pod: usize) {
+        self.ensure(pod);
+        let Some(p) = self.pods.get_mut(pod) else { return };
+        if p.state != HealthState::Healthy {
+            p.state = HealthState::Healthy;
+            p.missed = 0;
+            p.cordoned_at = None;
+            self.transitions.push((now, pod, HealthState::Healthy));
+        }
+    }
+}
 
 /// Configuration of the signal plane.
 #[derive(Debug, Clone)]
@@ -52,6 +242,8 @@ pub struct ClusterViewConfig {
     pub slo: Slo,
     /// Bound on tracked sessions; oldest-by-first-appearance evicts first.
     pub session_capacity: usize,
+    /// Heartbeat/straggler thresholds for the health state machine.
+    pub health: HealthPolicy,
 }
 
 impl Default for ClusterViewConfig {
@@ -61,6 +253,7 @@ impl Default for ClusterViewConfig {
             chain_seed: 0,
             slo: Slo::default(),
             session_capacity: 4096,
+            health: HealthPolicy::default(),
         }
     }
 }
@@ -214,6 +407,15 @@ impl SessionTable {
     fn len(&self) -> usize {
         self.map.len()
     }
+
+    /// Forget every session pinned to `pod` (it stopped accepting work):
+    /// a sticky session must never pin to a corpse — its next request
+    /// re-routes freely and re-sticks wherever it lands.
+    fn purge_pod(&mut self, pod: usize) {
+        self.map.retain(|_, p| *p != pod);
+        let map = &self.map;
+        self.order.retain(|s| map.contains_key(s));
+    }
 }
 
 /// The unified snapshot producer. One instance per routing loop (harness
@@ -223,18 +425,41 @@ impl SessionTable {
 pub struct ClusterView {
     cfg: ClusterViewConfig,
     sessions: SessionTable,
+    health: HealthTracker,
     /// Scratch: the request's block-key chain, reused across requests.
     keys: Vec<BlockKey>,
+    /// Scratch: raw signals gathered before the health sweep.
+    sigs: Vec<PodSignals>,
 }
 
 impl ClusterView {
     pub fn new(cfg: ClusterViewConfig) -> ClusterView {
         let sessions = SessionTable::new(cfg.session_capacity);
-        ClusterView { cfg, sessions, keys: Vec::new() }
+        let health = HealthTracker::new(cfg.health);
+        ClusterView { cfg, sessions, health, keys: Vec::new(), sigs: Vec::new() }
     }
 
     pub fn config(&self) -> &ClusterViewConfig {
         &self.cfg
+    }
+
+    /// The health state machine's records (read-only observability).
+    pub fn health(&self) -> &HealthTracker {
+        &self.health
+    }
+
+    /// Feed one `diagnostics::diagnose` verdict for `pod` into the health
+    /// machine. If the verdict takes the pod out of new-work rotation, its
+    /// sticky sessions are invalidated on the spot.
+    pub fn apply_diagnosis(&mut self, now: SimTime, pod: usize, action: Action) {
+        if self.health.apply_diagnosis(now, pod, action) {
+            self.sessions.purge_pod(pod);
+        }
+    }
+
+    /// Put a repaired/replaced pod back into rotation.
+    pub fn recover_pod(&mut self, now: SimTime, pod: usize) {
+        self.health.recover(now, pod);
     }
 
     /// Record a routing decision for session stickiness. Call on every
@@ -262,6 +487,22 @@ impl ClusterView {
         self.sessions.len()
     }
 
+    /// Run one heartbeat/straggler sweep over the fleet without building
+    /// snapshots — the harness's periodic diagnostics tick, so detection
+    /// (and the Draining→Cordoned hand-off once in-flight work drains)
+    /// does not depend on arrival traffic. Sessions pinned to pods that
+    /// stop accepting work are purged, exactly as in [`ClusterView::snapshot`].
+    pub fn sweep<S: PodSignalSource>(&mut self, now: SimTime, pods: &mut [S]) {
+        self.sigs.clear();
+        for p in pods.iter_mut() {
+            let s = p.signals(now, &[]);
+            self.sigs.push(s);
+        }
+        for pod in self.health.observe(now, &self.sigs) {
+            self.sessions.purge_pod(pod);
+        }
+    }
+
     /// Build the per-request snapshot vector: one [`PodSnapshot`] per
     /// signal source, in order. `pool` is the distributed KV pool when one
     /// is wired in — its residency probe feeds `pool_blocks_*` and lifts
@@ -279,18 +520,35 @@ impl ClusterView {
         let bs = self.cfg.block_size.max(1);
         prompt_block_keys_seeded_into(self.cfg.chain_seed, &req.tokens, bs, &mut self.keys);
         let prompt_blocks = self.keys.len().max(1);
+
+        // Gather raw signals, then run the heartbeat/straggler sweep over
+        // the whole fleet (straggler detection is relative to peers, so it
+        // needs every pod's stats at once). Pods that just stopped
+        // accepting work lose their sticky sessions before stickiness is
+        // consulted — a session must never pin to a corpse.
+        self.sigs.clear();
+        for p in pods.iter_mut() {
+            let s = p.signals(now, &self.keys);
+            self.sigs.push(s);
+        }
+        for pod in self.health.observe(now, &self.sigs) {
+            self.sessions.purge_pod(pod);
+        }
         let sticky = self.session_pod(req.session);
 
         let mut out = Vec::with_capacity(pods.len());
-        for p in pods.iter_mut() {
-            let s = p.signals(now, &self.keys);
+        for s in self.sigs.drain(..) {
+            let health = self.health.state(s.pod);
             let res = match pool {
                 Some(pool) => pool.residency(now, s.node, &self.keys),
                 None => Default::default(),
             };
             out.push(PodSnapshot {
                 pod: s.pod,
-                ready: s.ready,
+                // A Cordoned pod is out of rotation outright, exactly like
+                // a pod that never heartbeated.
+                ready: s.ready && health != HealthState::Cordoned,
+                health,
                 prefix_match_blocks: s.local_match_blocks.max(res.local_blocks),
                 prompt_blocks,
                 pool_blocks_local: res.local_blocks,
@@ -404,6 +662,119 @@ mod tests {
         assert!((slo_headroom(&stats, &r, &slo) - 0.5).abs() < 1e-9);
         stats.avg_latency_us = 5_000_000.0; // far over
         assert_eq!(slo_headroom(&stats, &r, &slo), 0.0);
+    }
+
+    #[test]
+    fn diagnosis_drives_healthy_degraded_draining_cordoned() {
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mut pods = counter_pods(2);
+        pods[1].inflight = 3;
+        assert_eq!(view.health().state(1), HealthState::Healthy);
+        // Throttle verdict: Degraded, still routable.
+        view.apply_diagnosis(10, 1, Action::ThrottleWorkload);
+        assert_eq!(view.health().state(1), HealthState::Degraded);
+        let snaps = view.snapshot(20, &req(16, 0), &mut pods, None);
+        assert!(snaps[1].ready, "degraded pods still serve");
+        assert!(snaps[1].health.accepts_new_work());
+        // Drain verdict: Draining — stays ready (finishes work) but stops
+        // accepting new requests.
+        view.apply_diagnosis(30, 1, Action::DrainAndCordon);
+        assert_eq!(view.health().state(1), HealthState::Draining);
+        let snaps = view.snapshot(40, &req(16, 0), &mut pods, None);
+        assert!(snaps[1].ready);
+        assert!(!snaps[1].health.accepts_new_work());
+        // In-flight work drains to zero: the sweep cordons it.
+        pods[1].inflight = 0;
+        let snaps = view.snapshot(50, &req(16, 0), &mut pods, None);
+        assert_eq!(view.health().state(1), HealthState::Cordoned);
+        assert!(!snaps[1].ready, "cordoned pods are excluded outright");
+        assert_eq!(view.health().cordoned_at(1), Some(50));
+        // Verdicts never de-escalate; explicit recovery does.
+        view.apply_diagnosis(60, 1, Action::Monitor);
+        assert_eq!(view.health().state(1), HealthState::Cordoned);
+        view.recover_pod(70, 1);
+        assert_eq!(view.health().state(1), HealthState::Healthy);
+        let last = view.health().transitions().last().copied();
+        assert_eq!(last, Some((70, 1, HealthState::Healthy)));
+    }
+
+    #[test]
+    fn missed_heartbeats_cordon_a_dead_pod() {
+        let cfg = ClusterViewConfig {
+            health: HealthPolicy { missed_to_cordon: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let mut view = ClusterView::new(cfg);
+        let mut pods = counter_pods(2);
+        pods[0].ready = false; // died
+        for t in 1..=2u64 {
+            view.snapshot(t, &req(16, 0), &mut pods, None);
+            assert_ne!(view.health().state(0), HealthState::Cordoned, "sweep {t}: not yet");
+        }
+        view.snapshot(3, &req(16, 0), &mut pods, None);
+        assert_eq!(view.health().state(0), HealthState::Cordoned, "third miss cordons");
+        assert_eq!(view.health().cordoned_at(0), Some(3));
+        // A flapping pod that comes back before the threshold never trips.
+        let mut v2 = ClusterView::new(ClusterViewConfig::default());
+        let mut p2 = counter_pods(1);
+        for t in 0..10u64 {
+            p2[0].ready = t % 2 == 0;
+            v2.snapshot(t, &req(16, 0), &mut p2, None);
+        }
+        assert_eq!(v2.health().state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn straggler_peer_detection_degrades() {
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mk = |pod: usize, lat: f64| PodSignals {
+            pod,
+            node: pod as u64,
+            ready: true,
+            stats: EngineStats { avg_latency_us: lat, waiting: 1, ..Default::default() },
+            local_match_blocks: 0,
+            resident_adapters: Vec::new(),
+        };
+        // Pod 1 is 10x slower than its best peer: straggler.
+        let mut pods = vec![mk(0, 10_000.0), mk(1, 100_000.0)];
+        view.snapshot(5, &req(16, 0), &mut pods, None);
+        assert_eq!(view.health().state(0), HealthState::Healthy);
+        assert_eq!(view.health().state(1), HealthState::Degraded);
+        // A lone slow pod is its own baseline — never flagged.
+        let mut view2 = ClusterView::new(ClusterViewConfig::default());
+        let mut lone = vec![mk(0, 500_000.0)];
+        view2.snapshot(5, &req(16, 0), &mut lone, None);
+        assert_eq!(view2.health().state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn sticky_sessions_never_pin_to_a_drained_pod() {
+        // Regression (satellite): SessionTable entries pointing at a pod
+        // that stops accepting work must be invalidated — before this, a
+        // sticky session kept routing at a corpse forever.
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mut pods = counter_pods(3);
+        pods.iter_mut().for_each(|p| p.inflight = 1);
+        view.note_route(7, 1);
+        view.note_route(8, 2);
+        assert_eq!(view.session_pod(7), Some(1));
+        // Drain verdict for pod 1: its sessions purge immediately.
+        view.apply_diagnosis(10, 1, Action::DrainAndCordon);
+        assert_eq!(view.session_pod(7), None, "session re-homed off the draining pod");
+        assert_eq!(view.session_pod(8), Some(2), "innocent sessions untouched");
+        let snaps = view.snapshot(20, &req(16, 7), &mut pods, None);
+        assert!(snaps.iter().all(|s| !s.session_match), "no stale stickiness");
+        // Dead-pod path: missed heartbeats cordon pod 2 and purge its
+        // sessions through the sweep as well.
+        pods[2].ready = false;
+        for t in 21..=23u64 {
+            view.snapshot(t, &req(16, 0), &mut pods, None);
+        }
+        assert_eq!(view.health().state(2), HealthState::Cordoned);
+        assert_eq!(view.session_pod(8), None, "dead pod's session purged");
+        // The freed session re-sticks wherever it routes next.
+        view.note_route(8, 0);
+        assert_eq!(view.session_pod(8), Some(0));
     }
 
     #[test]

@@ -7,14 +7,28 @@
 //! the gateway, the router picks an engine from fresh pod snapshots, idle
 //! engines get a step scheduled, and each step schedules the next at
 //! `now + step_duration`.
+//!
+//! With a [`ChaosSchedule`] wired in, the loop also runs the fault/recovery
+//! plane (§3.2.8): chaos events kill replicas mid-decode (their in-flight
+//! requests requeue with capped exponential backoff and a per-request
+//! deadline), stretch straggler steps, and drop KV-pool shards — each
+//! mirrored into the [`FailureInjector`] so the periodic diagnostics sweep
+//! feeds `diagnose` verdicts into the ClusterView health state machine,
+//! which drains and cordons the afflicted pods. Every admitted request
+//! either completes or lands in `RunReport::rejections` with a typed
+//! [`RejectReason`] — request conservation is checkable, not assumed.
 
+use crate::chaos::{ChaosFault, ChaosSchedule, RecoveryPolicy, RejectReason};
+use crate::diagnostics::{diagnose, FailureInjector};
 use crate::engine::{Completion, EngineConfig, EngineSim, ExternalKv};
-use crate::gateway::{ClusterView, ClusterViewConfig, Decision, Gateway, Policy};
+use crate::gateway::{
+    ClusterView, ClusterViewConfig, Decision, Gateway, HealthState, Policy, ScoreCtx,
+};
 use crate::json::Json;
 use crate::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
 use crate::sim::{SimTime, Simulator};
 use crate::util::stats::Summary;
-use crate::workload::{ArrivalProcess, Workload};
+use crate::workload::{ArrivalProcess, Request, Workload};
 
 /// One serving experiment.
 pub struct HarnessConfig {
@@ -36,6 +50,10 @@ pub struct HarnessConfig {
     /// size is overridden from the engines' config so the view's block
     /// keys always match the serving path's.
     pub view: ClusterViewConfig,
+    /// Seeded fault schedule; None = fault-free run (the default).
+    pub chaos: Option<ChaosSchedule>,
+    /// Backoff/deadline/sweep knobs for in-flight recovery.
+    pub recovery: RecoveryPolicy,
 }
 
 /// Aggregated outcome of a run.
@@ -52,6 +70,20 @@ pub struct RunReport {
     pub pool_stats: Option<PoolStats>,
     /// Local prefix-cache hit rates per engine.
     pub prefix_hit_rates: Vec<f64>,
+    /// Every rejection, typed: `(request id, reason)`. Together with
+    /// `completions` this accounts for every request the workload emitted —
+    /// the request-conservation invariant the chaos proptests assert.
+    pub rejections: Vec<(u64, RejectReason)>,
+    /// Requests stranded by a replica death that were successfully
+    /// re-dispatched to a healthy pod.
+    pub recovered: u64,
+    /// Re-dispatch attempts processed (including ones that backed off).
+    pub retries: u64,
+    /// Fault-fire → pod-Cordoned latency (µs), minimum over pod-targeting
+    /// chaos events whose pod was cordoned; None when nothing cordoned.
+    pub detect_to_cordon_us: Option<u64>,
+    /// The health state machine's full transition log.
+    pub health_transitions: Vec<(SimTime, usize, HealthState)>,
 }
 
 impl RunReport {
@@ -156,6 +188,13 @@ impl RunReport {
 enum Ev {
     Arrive,
     Step(usize),
+    /// Fire chaos event `i` of the schedule.
+    Chaos(usize),
+    /// Periodic diagnostics heartbeat: sample telemetry, diagnose, feed
+    /// the health machine (only scheduled when chaos is wired in).
+    Sweep,
+    /// Re-dispatch a stranded request (attempt number, 0-based).
+    Retry(Request, u32),
 }
 
 /// Run one experiment to completion (or deadline).
@@ -194,6 +233,27 @@ pub fn run_with_router_config(
     let mut idle: Vec<bool> = vec![true; engines.len()];
     let mut rejected = 0u64;
     let mut exhausted = false;
+
+    // Fault/recovery plane. The injector mirrors every chaos event into
+    // accelerator telemetry; the periodic sweep diagnoses it and drives
+    // the health state machine. All of it is inert when `chaos` is None —
+    // fault-free runs schedule none of the new event kinds, so their event
+    // sequence (and thus determinism) is untouched.
+    let recovery = cfg.recovery;
+    let mut injector = FailureInjector::new();
+    let mut slow: Vec<f64> = vec![1.0; engines.len()];
+    let mut rejections: Vec<(u64, RejectReason)> = Vec::new();
+    let mut recovered = 0u64;
+    let mut retries = 0u64;
+    let mut pending_retries = 0usize;
+    if let Some(chaos) = &cfg.chaos {
+        for (i, ev) in chaos.events().iter().enumerate() {
+            sim.schedule_at(ev.at, Ev::Chaos(i));
+        }
+        if !chaos.is_empty() {
+            sim.schedule_at(recovery.sweep_interval_us.max(1), Ev::Sweep);
+        }
+    }
 
     if cfg.closed_loop_clients > 0 {
         for _ in 0..cfg.closed_loop_clients {
@@ -237,7 +297,14 @@ pub fn run_with_router_config(
                             sim.schedule_at(now, Ev::Step(pod));
                         }
                     }
-                    _ => rejected += 1,
+                    Decision::RateLimited { .. } => {
+                        rejected += 1;
+                        rejections.push((req.id, RejectReason::RateLimited));
+                    }
+                    Decision::NoCapacity => {
+                        rejected += 1;
+                        rejections.push((req.id, RejectReason::NoCapacity));
+                    }
                 }
                 // Next arrival (open loop only; closed loop re-arms on
                 // completion).
@@ -250,7 +317,18 @@ pub fn run_with_router_config(
                 let ext: Option<&mut dyn ExternalKv> =
                     pool.as_mut().map(|p| p as &mut dyn ExternalKv);
                 match engines[i].step(now, ext) {
-                    Some(dt) => sim.schedule_in(dt, Ev::Step(i)),
+                    // A straggling replica stretches every step by its
+                    // chaos factor — work still completes, just slower,
+                    // which is exactly what the straggler detector and the
+                    // health scorer are there to notice.
+                    Some(dt) => {
+                        let dt = if slow[i] > 1.0 {
+                            ((dt as f64) * slow[i]).round() as SimTime
+                        } else {
+                            dt
+                        };
+                        sim.schedule_in(dt.max(1), Ev::Step(i))
+                    }
                     None => idle[i] = true,
                 }
                 // Sweep fresh completions: charge *served* tokens to the
@@ -265,6 +343,108 @@ pub fn run_with_router_config(
                     }
                 }
                 completed_seen[i] = done;
+            }
+            Ev::Chaos(i) => {
+                let Some(ev) = cfg.chaos.as_ref().and_then(|c| c.events().get(i)).copied()
+                else {
+                    continue;
+                };
+                match ev.fault {
+                    ChaosFault::ReplicaDeath { pod } => {
+                        if let Some(e) = engines.get_mut(pod) {
+                            injector.inject(e.node, 0, ev.fault.telemetry_fault());
+                            // Lossless recovery: everything the dead
+                            // replica held — waiting *and* mid-decode —
+                            // requeues with backoff. The KV it computed is
+                            // gone; re-dispatch re-prefills (from the
+                            // shared pool where one is wired in).
+                            for r in e.fail_and_drain() {
+                                pending_retries += 1;
+                                sim.schedule_in(recovery.backoff_us(0), Ev::Retry(r, 0));
+                            }
+                        }
+                    }
+                    ChaosFault::Straggler { pod, factor } => {
+                        if let Some(e) = engines.get(pod) {
+                            injector.inject(e.node, 0, ev.fault.telemetry_fault());
+                            if let Some(s) = slow.get_mut(pod) {
+                                *s = s.max(factor);
+                            }
+                        }
+                    }
+                    ChaosFault::ShardLoss { node } => {
+                        injector.inject(node, 0, ev.fault.telemetry_fault());
+                        if let Some(p) = pool.as_mut() {
+                            p.drop_shard(node);
+                        }
+                    }
+                }
+            }
+            Ev::Sweep => {
+                // Telemetry → diagnose → health machine, one verdict pass
+                // per pod, then the heartbeat/straggler sweep (which also
+                // hands Draining pods to Cordoned once their in-flight
+                // work hits zero). Re-arms itself while anything is still
+                // moving so detection never depends on arrival traffic.
+                for (pod, e) in engines.iter().enumerate() {
+                    let tel = injector.sample(e.node, 0, now);
+                    for d in diagnose(&tel) {
+                        view.apply_diagnosis(now, pod, d.action);
+                    }
+                }
+                view.sweep(now, &mut engines);
+                // Re-arm while anything can still happen. (In closed-loop
+                // mode arrivals are completion-driven, so "engines busy or
+                // retries pending" is the liveness signal — `exhausted`
+                // may stay false forever if clients die.)
+                let more_arrivals = cfg.closed_loop_clients == 0 && !exhausted;
+                let busy = more_arrivals || pending_retries > 0 || idle.iter().any(|b| !*b);
+                if busy {
+                    sim.schedule_in(recovery.sweep_interval_us.max(1), Ev::Sweep);
+                }
+            }
+            Ev::Retry(req, attempt) => {
+                pending_retries = pending_retries.saturating_sub(1);
+                retries += 1;
+                if now.saturating_sub(req.arrival) > recovery.deadline_us {
+                    rejected += 1;
+                    rejections.push((req.id, RejectReason::DeadlineExceeded));
+                    // A closed-loop client whose request terminally failed
+                    // submits its next one (its slot isn't lost).
+                    if cfg.closed_loop_clients > 0 {
+                        sim.schedule_at(now, Ev::Arrive);
+                    }
+                    continue;
+                }
+                if attempt >= recovery.max_attempts {
+                    rejected += 1;
+                    rejections.push((req.id, RejectReason::RetriesExhausted));
+                    if cfg.closed_loop_clients > 0 {
+                        sim.schedule_at(now, Ev::Arrive);
+                    }
+                    continue;
+                }
+                // Re-dispatch bypasses admission — the request was already
+                // admitted once; a retry must not be double-charged by the
+                // rate limiter — and goes straight to routing over fresh
+                // snapshots (which exclude the dead/draining pods).
+                let snaps = view.snapshot(now, &req, &mut engines, pool.as_ref());
+                let ctx = ScoreCtx { tenant_share: gateway.usage.share(now, req.user) };
+                match gateway.router.select_with_ctx(&req, &snaps, &ctx) {
+                    Some(pod) => {
+                        view.note_route(req.session, pod);
+                        recovered += 1;
+                        engines[pod].enqueue(req);
+                        if idle[pod] {
+                            idle[pod] = false;
+                            sim.schedule_at(now, Ev::Step(pod));
+                        }
+                    }
+                    None => {
+                        pending_retries += 1;
+                        sim.schedule_in(recovery.backoff_us(attempt), Ev::Retry(req, attempt + 1));
+                    }
+                }
             }
         }
     }
@@ -288,6 +468,21 @@ pub fn run_with_router_config(
     for c in &completions {
         makespan = makespan.max(c.finished_at);
     }
+    // Detection latency: fault fire → that pod entering Cordoned, best
+    // (smallest) over the pod-targeting chaos events that ended cordoned.
+    let detect_to_cordon_us = cfg.chaos.as_ref().and_then(|c| {
+        let mut best: Option<u64> = None;
+        for ev in c.events() {
+            let Some(pod) = ev.fault.pod() else { continue };
+            if let Some(t) = view.health().cordoned_at(pod) {
+                if t >= ev.at {
+                    let d = t - ev.at;
+                    best = Some(best.map_or(d, |b| b.min(d)));
+                }
+            }
+        }
+        best
+    });
     RunReport {
         completions,
         itl_us: itl,
@@ -298,6 +493,11 @@ pub fn run_with_router_config(
         preemptions,
         pool_stats: pool.map(|p| p.stats.clone()),
         prefix_hit_rates: hit_rates,
+        rejections,
+        recovered,
+        retries,
+        detect_to_cordon_us,
+        health_transitions: view.health().transitions().to_vec(),
     }
 }
 
@@ -339,6 +539,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let mut w = small_workload(50);
         let r = run(cfg, &mut w);
@@ -360,6 +562,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let a = run(mk(), &mut small_workload(40));
         let b = run(mk(), &mut small_workload(40));
@@ -383,6 +587,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let a = run(mk(), &mut small_workload(60));
         let b = run(mk(), &mut small_workload(60));
@@ -413,6 +619,8 @@ mod tests {
                 deadline: 0,
                 closed_loop_clients: 0,
                 view: Default::default(),
+                chaos: None,
+                recovery: Default::default(),
             };
             let mut wl = || {
                 ShareGptWorkload::new(ShareGptConfig {
@@ -442,6 +650,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let no_pool = run(base, &mut small_workload(120));
 
@@ -459,6 +669,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let with_pool = run(with_pool_cfg, &mut small_workload(120));
         assert_eq!(with_pool.completions.len(), 120);
@@ -483,6 +695,8 @@ mod tests {
             deadline: 0,
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let r = run(cfg, &mut small_workload(30));
         let j = r.bench_json("smoke");
@@ -490,6 +704,160 @@ mod tests {
         assert_eq!(j["completions"].as_usize(), Some(30));
         assert!(j["decode_tokens_per_s"].as_f64().unwrap() > 0.0);
         assert!(crate::json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn replica_death_recovers_every_request() {
+        use crate::chaos::{ChaosEvent, ChaosFault};
+        // Heavy open-loop traffic onto 2 engines; kill pod 0 at 250ms with
+        // deep queues. Conservation: every emitted request completes or is
+        // typed-rejected; the drained requests re-dispatch to pod 1.
+        let cfg = HarnessConfig {
+            engines: engines(2, true),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 100.0 },
+            kv_pool: None,
+            seed: 9,
+            deadline: 0,
+            closed_loop_clients: 0,
+            view: Default::default(),
+            // Off the 2ms sweep grid: a fault landing exactly on a sweep
+            // tick is detected at the same instant (latency 0), which is
+            // legal but makes the `d > 0` assert below vacuous to check.
+            chaos: Some(ChaosSchedule::new(vec![ChaosEvent {
+                at: 250_500,
+                fault: ChaosFault::ReplicaDeath { pod: 0 },
+            }])),
+            recovery: Default::default(),
+        };
+        let r = run(cfg, &mut small_workload(60));
+        assert_eq!(
+            r.completions.len() + r.rejections.len(),
+            60,
+            "request conservation: {} completed + {} rejected",
+            r.completions.len(),
+            r.rejections.len()
+        );
+        assert_eq!(r.rejections.len() as u64, r.rejected);
+        assert!(r.recovered >= 1, "dead pod's queue re-dispatched ({} recovered)", r.recovered);
+        assert!(r.retries >= r.recovered);
+        // The XidFatal verdict drains pod 0 and the sweep cordons it.
+        assert!(
+            r.health_transitions
+                .iter()
+                .any(|&(_, pod, st)| pod == 0 && st == HealthState::Cordoned),
+            "dead pod must end Cordoned: {:?}",
+            r.health_transitions
+        );
+        let d = r.detect_to_cordon_us.expect("detection latency measured");
+        assert!(d > 0 && d < 1_000_000, "cordon within 1s of the fault, got {d}µs");
+        // No completion was served by the dead pod after the fault.
+        assert!(r.completions.iter().all(|c| c.engine != 0 || c.finished_at <= 250_500));
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic() {
+        let mk = || HarnessConfig {
+            engines: engines(3, true),
+            policy: Policy::PoolAware,
+            arrival: ArrivalProcess::Poisson { rate: 40.0 },
+            kv_pool: Some(KvPoolConfig::new(
+                (0..3u64)
+                    .map(|i| (i, 8u64 << 30))
+                    .collect(),
+                ModelSpec::deepseek_coder_7b().kv_bytes_per_token(),
+                16,
+            )),
+            seed: 21,
+            deadline: 0,
+            closed_loop_clients: 0,
+            view: Default::default(),
+            chaos: Some(ChaosSchedule::from_seed(21, 3, &[0, 1, 2], 2_000_000)),
+            recovery: Default::default(),
+        };
+        let a = run(mk(), &mut small_workload(80));
+        let b = run(mk(), &mut small_workload(80));
+        assert_eq!(a.makespan, b.makespan, "same seed + schedule = same incident");
+        assert_eq!(a.ttft_ms(), b.ttft_ms());
+        assert_eq!(a.rejections, b.rejections);
+        assert_eq!(a.recovered, b.recovered);
+        assert_eq!(a.health_transitions, b.health_transitions);
+        assert_eq!(a.completions.len() + a.rejections.len(), 80, "conserved under any schedule");
+    }
+
+    #[test]
+    fn shard_loss_degrades_to_recompute_not_loss() {
+        use crate::chaos::{ChaosEvent, ChaosFault};
+        // Dropping node 0's shard mid-run costs cache hits, never requests:
+        // residency stops advertising the dead blocks and prefill
+        // recomputes.
+        let kv_bytes = ModelSpec::deepseek_coder_7b().kv_bytes_per_token();
+        let cfg = HarnessConfig {
+            engines: engines(3, true),
+            policy: Policy::PoolAware,
+            arrival: ArrivalProcess::Poisson { rate: 30.0 },
+            kv_pool: Some(KvPoolConfig::new(
+                (0..3u64).map(|i| (i, 8u64 << 30)).collect(),
+                kv_bytes,
+                16,
+            )),
+            seed: 13,
+            deadline: 0,
+            closed_loop_clients: 0,
+            view: Default::default(),
+            chaos: Some(ChaosSchedule::new(vec![ChaosEvent {
+                at: 400_000,
+                fault: ChaosFault::ShardLoss { node: 0 },
+            }])),
+            recovery: Default::default(),
+        };
+        let r = run(cfg, &mut small_workload(70));
+        assert_eq!(r.completions.len(), 70, "shard loss must not lose requests");
+        assert_eq!(r.rejected, 0);
+        let ps = r.pool_stats.expect("pool wired in");
+        assert_eq!(ps.shards_dropped, 1);
+        // Shard loss is Monitor-grade: the replica itself keeps serving.
+        assert!(
+            !r.health_transitions.iter().any(|&(_, _, st)| st == HealthState::Cordoned),
+            "no pod cordoned for a cache-tier loss: {:?}",
+            r.health_transitions
+        );
+        assert_eq!(r.detect_to_cordon_us, None);
+    }
+
+    #[test]
+    fn straggler_is_drained_and_cordoned() {
+        use crate::chaos::{ChaosEvent, ChaosFault};
+        // A sagging clock (silent degradation) stretches pod 1's steps 6x;
+        // the telemetry sweep diagnoses it and drains the pod, and every
+        // request still completes.
+        let cfg = HarnessConfig {
+            engines: engines(2, true),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 50.0 },
+            kv_pool: None,
+            seed: 33,
+            deadline: 0,
+            closed_loop_clients: 0,
+            view: Default::default(),
+            chaos: Some(ChaosSchedule::new(vec![ChaosEvent {
+                at: 200_000,
+                fault: ChaosFault::Straggler { pod: 1, factor: 6.0 },
+            }])),
+            recovery: Default::default(),
+        };
+        let r = run(cfg, &mut small_workload(50));
+        assert_eq!(r.completions.len() + r.rejections.len(), 50);
+        assert!(
+            r.health_transitions
+                .iter()
+                .any(|&(_, pod, st)| pod == 1 && st >= HealthState::Draining),
+            "straggler must at least drain: {:?}",
+            r.health_transitions
+        );
+        // Draining finishes in-flight work: nothing the straggler held was
+        // dropped (no replica death happened, so nothing needed recovery).
+        assert_eq!(r.recovered, 0);
     }
 
     #[test]
@@ -503,6 +871,8 @@ mod tests {
             deadline: 2_000_000, // 2s
             closed_loop_clients: 0,
             view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
         };
         let r = run(cfg, &mut small_workload(10_000));
         assert!(r.completions.len() < 10_000);

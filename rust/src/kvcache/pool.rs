@@ -102,6 +102,10 @@ pub struct PoolStats {
     pub inserts_deduped: u64,
     pub evictions: u64,
     pub bytes_transferred: u64,
+    /// Whole shards lost to failures ([`DistKvPool::drop_shard`]).
+    pub shards_dropped: u64,
+    /// Blocks lost with those shards (metadata + data tiers).
+    pub blocks_dropped: u64,
 }
 
 impl PoolStats {
@@ -289,6 +293,41 @@ impl DistKvPool {
         } else {
             false
         }
+    }
+
+    /// Fail `node`'s shard: atomically drop its metadata (index entries,
+    /// eviction-policy state, byte accounting) *and* its data tier in one
+    /// step, returning how many blocks were lost. After this call
+    /// [`DistKvPool::residency`] and both lookup paths can never advertise
+    /// a block that was homed on the dead node — its index entries are
+    /// gone — so consumers degrade gracefully to recompute, and
+    /// [`DistKvPool::placement`] stops targeting the node (a writer that
+    /// lived there falls back to the least-utilized surviving shard).
+    /// Unknown nodes are a no-op. [`DistKvPool::check_invariants`] holds
+    /// across the drop.
+    pub fn drop_shard(&mut self, node: u64) -> usize {
+        let Some(mut shard) = self.shards.remove(&node) else {
+            return 0;
+        };
+        let mut dropped = 0usize;
+        // The eviction policy enumerates exactly the keys homed on this
+        // shard (policy totals == index size is a standing invariant), so
+        // draining it removes each lost block from both tiers without a
+        // full index scan.
+        while let Some(victim) = shard.policy.evict() {
+            self.index.remove(&victim);
+            self.store.remove(&victim);
+            dropped += 1;
+        }
+        self.stats.shards_dropped += 1;
+        self.stats.blocks_dropped += dropped as u64;
+        dropped
+    }
+
+    /// Does `node` still have a live shard? (False after
+    /// [`DistKvPool::drop_shard`].)
+    pub fn has_shard(&self, node: u64) -> bool {
+        self.shards.contains_key(&node)
     }
 
     /// Consistency: index size == sum of per-shard policy sizes, used bytes
@@ -720,6 +759,51 @@ mod tests {
         assert!(p.check_invariants());
     }
 
+    #[test]
+    fn drop_shard_removes_both_tiers_atomically() {
+        let mut p = pool(2, 4);
+        // Chain 1..=4: 1-2 homed on node 0, 3-4 on node 1.
+        p.insert(0, 0, &[1, 2], 16);
+        p.insert(0, 1, &[3, 4], 16);
+        assert_eq!(p.resident_blocks(), 4);
+        let dropped = p.drop_shard(0);
+        assert_eq!(dropped, 2, "exactly node 0's blocks are lost");
+        assert_eq!(p.resident_blocks(), 2);
+        assert!(!p.has_shard(0));
+        assert!(p.has_shard(1));
+        assert_eq!(p.stats.shards_dropped, 1);
+        assert_eq!(p.stats.blocks_dropped, 2);
+        assert!(p.check_invariants(), "invariants hold across the drop");
+        // The dead shard's blocks are never advertised again: the chain
+        // now misses its head, so residency and lookups walk zero blocks.
+        let r = p.residency(100_000, 1, &[1, 2, 3, 4]);
+        assert_eq!(r.visible_blocks, 0, "lost head ends the contiguous walk");
+        assert_eq!(p.lookup(100_000, 1, &[3, 4]).blocks_hit, 2, "survivors still served");
+        // Dropping an unknown or already-dropped shard is a no-op.
+        assert_eq!(p.drop_shard(0), 0);
+        assert_eq!(p.drop_shard(99), 0);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn drop_shard_redirects_placement_to_survivors() {
+        let mut p = pool(2, 4);
+        p.drop_shard(0);
+        // A writer whose shard died still lands its write-backs — on the
+        // least-utilized surviving shard.
+        p.insert(0, 0, &[10, 11], 16);
+        assert_eq!(p.resident_blocks(), 2);
+        let bb = p.config().block_bytes();
+        assert_eq!(p.node_used_bytes(1), 2 * bb);
+        assert_eq!(p.node_used_bytes(0), 0);
+        assert!(p.check_invariants());
+        // With every shard gone, inserts degrade to drops (never panic).
+        p.drop_shard(1);
+        p.insert(0, 0, &[12], 16);
+        assert_eq!(p.resident_blocks(), 0);
+        assert!(p.check_invariants());
+    }
+
     // ------------------------------------------------------- data tier
 
     use crate::kvcache::blocks::{KvBlockData, KvBlockShape};
@@ -843,6 +927,21 @@ mod tests {
         assert!(p.check_invariants());
         assert_eq!(p.block_owner(1).map(|(n, _)| n), Some(0));
         assert_eq!(p.block_owner(42), None);
+    }
+
+    #[test]
+    fn drop_shard_purges_data_tier() {
+        let mut p = pool(2, 4);
+        p.set_shape(SHAPE).unwrap();
+        p.insert_blocks(0, 0, &[(1u64, data_block(1.0))]).unwrap();
+        p.insert_blocks(0, 1, &[(2u64, data_block(2.0))]).unwrap();
+        assert_eq!(p.data_blocks(), 2);
+        assert_eq!(p.drop_shard(0), 1);
+        assert_eq!(p.data_blocks(), 1, "node 0's tensors are gone with its metadata");
+        let (f, blocks) = p.lookup_blocks(100_000, 1, &[2]);
+        assert_eq!(f.blocks_hit, 1);
+        assert_eq!(blocks[0].k[0], 2.0);
+        assert!(p.check_invariants());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 pub mod autoscaler;
 pub mod airuntime;
+pub mod chaos;
 pub mod cli;
 pub mod cluster;
 pub mod diagnostics;

@@ -78,6 +78,7 @@ fn serving_scope(path: &str) -> bool {
     p.contains("src/gateway/")
         || p.contains("src/kvcache/")
         || p.contains("src/server/")
+        || p.contains("src/chaos/")
         || p.ends_with("src/engine/real.rs")
 }
 

@@ -54,6 +54,7 @@ fn snapshots(sigs: &[PodSig]) -> Vec<PodSnapshot> {
             session_match: load % 3 == 0,
             slo_headroom: kv,
             resident_adapters: vec![],
+            health: Default::default(),
         })
         .collect()
 }

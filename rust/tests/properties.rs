@@ -233,6 +233,7 @@ fn prop_router_totality() {
                     session_match: load % 4 == 0,
                     slo_headroom: kv,
                     resident_adapters: vec![],
+                    health: Default::default(),
                 })
                 .collect();
             let policy = Policy::extended()[*policy_idx];
@@ -608,7 +609,10 @@ fn prop_kv_pool_accounting_invariants() {
             ops: (0..size.0.max(8))
                 .map(|_| {
                     (
-                        rng.below(3) as u8,
+                        // Rare shard drops (kind 3) interleave with the
+                        // insert/lookup churn: losing a node mid-stream
+                        // must keep both tiers consistent.
+                        if rng.chance(0.08) { 3 } else { rng.below(3) as u8 },
                         rng.below(6),                // nodes 4.. have no shard
                         1 + rng.below(24),           // small key space => collisions
                         1 + rng.below(6) as usize,   // blocks per op
@@ -638,7 +642,7 @@ fn prop_kv_pool_accounting_invariants() {
                             keys.iter().map(|&k| (k, Arc::clone(&data))).collect();
                         pool.insert_blocks(now, node, &items).map_err(|e| e.to_string())?;
                     }
-                    _ => {
+                    2 => {
                         let (fetch, blocks) = pool.lookup_blocks(now, node, &keys);
                         if blocks.len() > fetch.blocks_hit {
                             return Err(format!(
@@ -648,12 +652,184 @@ fn prop_kv_pool_accounting_invariants() {
                             ));
                         }
                     }
+                    _ => {
+                        // Chaos: drop the node's shard (no-op for nodes
+                        // that never had one, or already-dropped ones).
+                        let had = pool.has_shard(node);
+                        let dropped = pool.drop_shard(node);
+                        if !had && dropped > 0 {
+                            return Err(format!(
+                                "op {step}: dropped {dropped} blocks from absent shard {node}"
+                            ));
+                        }
+                    }
                 }
                 if !pool.check_invariants() {
                     return Err(format!(
                         "op {step} ({kind} node={node} keys={start}..+{len}) broke invariants"
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ chaos plane
+
+/// Request conservation under *any* seeded fault schedule: whatever mix of
+/// replica deaths, stragglers and shard losses fires, every request the
+/// workload emits ends as exactly one completion or one typed rejection —
+/// ids partition perfectly, nothing is silently lost, and the run is
+/// reproducible from its seed.
+#[test]
+fn prop_chaos_request_conservation() {
+    use aibrix::chaos::ChaosSchedule;
+    use aibrix::engine::ModelSpec;
+    use aibrix::harness::{run, HarnessConfig};
+    use aibrix::kvcache::KvPoolConfig;
+    use aibrix::workload::{ArrivalProcess, BirdSqlConfig, BirdSqlWorkload};
+    use std::collections::HashSet;
+
+    forall(
+        "chaos-request-conservation",
+        12, // each case is a full harness run — keep the count tight
+        |rng, _| {
+            (
+                rng.next_u64(),                // chaos + harness seed
+                2 + rng.below(3) as usize,     // pods
+                20 + rng.below(40) as usize,   // requests
+                rng.below(2) == 0,             // distributed pool on/off
+            )
+        },
+        |&(seed, pods, n, pool_on)| {
+            let kv_bytes = ModelSpec::deepseek_coder_7b().kv_bytes_per_token();
+            let nodes: Vec<u64> = (0..pods as u64).collect();
+            let cfg = HarnessConfig {
+                engines: (0..pods)
+                    .map(|i| {
+                        let mut ec =
+                            EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+                        ec.prefix_caching = true;
+                        (ec, i as u64)
+                    })
+                    .collect(),
+                policy: Policy::LeastRequest,
+                arrival: ArrivalProcess::Poisson { rate: 60.0 },
+                kv_pool: if pool_on {
+                    Some(KvPoolConfig::new(
+                        nodes.iter().map(|&i| (i, 8u64 << 30)).collect(),
+                        kv_bytes,
+                        16,
+                    ))
+                } else {
+                    None
+                },
+                seed,
+                deadline: 0,
+                closed_loop_clients: 0,
+                view: Default::default(),
+                chaos: Some(ChaosSchedule::from_seed(seed, pods, &nodes, 2_000_000)),
+                recovery: Default::default(),
+            };
+            let mut w = BirdSqlWorkload::new(BirdSqlConfig {
+                n_requests: n,
+                n_schemas: 4,
+                schema_tokens_mean: 300,
+                question_tokens_mean: 80,
+                ..Default::default()
+            });
+            let r = run(cfg, &mut w);
+            if r.completions.len() + r.rejections.len() != n {
+                return Err(format!(
+                    "lost requests: {} completed + {} rejected != {n}",
+                    r.completions.len(),
+                    r.rejections.len()
+                ));
+            }
+            // Each id gets exactly one terminal outcome — a request that
+            // both completed and was rejected (or did either twice) is as
+            // broken as a lost one.
+            let mut seen = HashSet::new();
+            for id in r
+                .completions
+                .iter()
+                .map(|c| c.req_id)
+                .chain(r.rejections.iter().map(|&(id, _)| id))
+            {
+                if !seen.insert(id) {
+                    return Err(format!("request {id} has two terminal outcomes"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Detection latency: a replica death is diagnosed (fatal XID), drained and
+/// cordoned within a small multiple of the diagnostics sweep interval,
+/// wherever in the run it strikes — and still loses nothing.
+#[test]
+fn prop_faults_detected_and_cordoned() {
+    use aibrix::chaos::{ChaosEvent, ChaosFault, ChaosSchedule, RecoveryPolicy};
+    use aibrix::engine::ModelSpec;
+    use aibrix::harness::{run, HarnessConfig};
+    use aibrix::workload::{ArrivalProcess, BirdSqlConfig, BirdSqlWorkload};
+
+    forall(
+        "chaos-detect-to-cordon",
+        10,
+        |rng, _| {
+            (
+                rng.next_u64(),
+                200_000 + rng.below(1_300_000), // fault time, well inside the run
+                rng.below(3) as usize,          // victim pod
+            )
+        },
+        |&(seed, at, victim)| {
+            let cfg = HarnessConfig {
+                engines: (0..3)
+                    .map(|i| {
+                        let mut ec =
+                            EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+                        ec.prefix_caching = true;
+                        (ec, i as u64)
+                    })
+                    .collect(),
+                policy: Policy::LeastRequest,
+                arrival: ArrivalProcess::Poisson { rate: 60.0 },
+                kv_pool: None,
+                seed,
+                deadline: 0,
+                closed_loop_clients: 0,
+                view: Default::default(),
+                chaos: Some(ChaosSchedule::new(vec![ChaosEvent {
+                    at,
+                    fault: ChaosFault::ReplicaDeath { pod: victim },
+                }])),
+                recovery: Default::default(),
+            };
+            let mut w = BirdSqlWorkload::new(BirdSqlConfig {
+                n_requests: 120,
+                n_schemas: 4,
+                schema_tokens_mean: 300,
+                question_tokens_mean: 80,
+                ..Default::default()
+            });
+            let r = run(cfg, &mut w);
+            if r.completions.len() + r.rejections.len() != 120 {
+                return Err(format!(
+                    "lost requests: {} + {} != 120",
+                    r.completions.len(),
+                    r.rejections.len()
+                ));
+            }
+            let d = r
+                .detect_to_cordon_us
+                .ok_or_else(|| format!("death at {at}µs never cordoned pod {victim}"))?;
+            let bound = 3 * RecoveryPolicy::default().sweep_interval_us;
+            if d > bound {
+                return Err(format!("detect-to-cordon {d}µs exceeds {bound}µs"));
             }
             Ok(())
         },

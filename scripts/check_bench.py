@@ -5,6 +5,7 @@ Usage:
     python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
     python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
     python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
+    python3 scripts/check_bench.py --chaos BENCH_chaos_e2e.json
     python3 scripts/check_bench.py --lint lint_report.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
@@ -20,6 +21,10 @@ Usage:
   (pool-aware hit ratio strictly above pool-blind, served-prefill
   throughput at least pool-blind's, session-sticky above blind, outputs
   bit-identical across policies).
+- --chaos: validate a chaos_e2e report — within-run gates only (zero lost
+  requests, outputs bit-identical to the fault-free run, a positive
+  detect-to-cordon latency, stranded requests recovered, and P99 latency
+  degradation within the report's own target).
 - --lint: validate an `aibrix_lint --json` report — schema (version 1,
   files_scanned, findings, suppressions), zero findings, and every
   suppression carrying a non-empty reason. This is the CI hard gate for
@@ -135,6 +140,53 @@ def check_routing(path):
     return 0
 
 
+def check_chaos(path):
+    """Within-run validation of a chaos_e2e report (ISSUE 7 acceptance:
+    kill a replica mid-trace + drop a pool shard — zero lost requests,
+    bit-identical outputs, the incident detected and cordoned, bounded
+    P99 degradation)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read chaos report {path}: {e}")
+        return 2
+    derived = doc.get("derived", {})
+    total = derived.get("total_requests")
+    lost = derived.get("lost_requests")
+    identical = derived.get("outputs_bit_identical")
+    recovered = derived.get("recovered_requests")
+    detect = derived.get("detect_to_cordon_us")
+    degradation = derived.get("p99_ttft_degradation")
+    target = derived.get("p99_ttft_degradation_target", 8.0)
+    if None in (total, lost, identical, recovered, detect, degradation):
+        print(f"check_bench: {path} is missing chaos derived values")
+        return 2
+    print(f"check_bench: chaos {total} requests, {lost} lost, {recovered} "
+          f"recovered, detect-to-cordon {detect}µs, p99 degradation "
+          f"{degradation:.2f}x (target <= {target}x)")
+    if lost != 0:
+        print(f"check_bench: FAIL — chaos run lost {lost} request(s)")
+        return 1
+    if identical is not True:
+        print("check_bench: FAIL — recovery changed completions")
+        return 1
+    if recovered <= 0:
+        print("check_bench: FAIL — the incident stranded no requests "
+              "(fault fired with an empty queue; the drill proves nothing)")
+        return 1
+    if not detect > 0 or detect >= 1_000_000:
+        print(f"check_bench: FAIL — detect-to-cordon latency {detect}µs "
+              f"out of range (0, 1s)")
+        return 1
+    if degradation > target:
+        print(f"check_bench: FAIL — p99 degradation {degradation:.2f}x "
+              f"exceeds the {target}x budget")
+        return 1
+    print("check_bench: OK — chaos within-run gates hold")
+    return 0
+
+
 def check_lint(path):
     """Validate an aibrix_lint --json report (ISSUE 6 acceptance: schema
     well-formed, zero findings, every suppression has a reason)."""
@@ -184,6 +236,7 @@ def main(argv):
     tol = 0.30
     kvpool = None
     routing = None
+    chaos = None
     lint = None
     args = []
     i = 1
@@ -191,7 +244,7 @@ def main(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool", "--routing", "--lint"):
+        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--lint"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -201,6 +254,8 @@ def main(argv):
                 tol = float(argv[i])
             elif a == "--kvpool":
                 kvpool = argv[i]
+            elif a == "--chaos":
+                chaos = argv[i]
             elif a == "--lint":
                 lint = argv[i]
             else:
@@ -212,10 +267,16 @@ def main(argv):
         else:
             args.append(a)
         i += 1
-    if sum(x is not None for x in (kvpool, routing, lint)) > 1:
-        print("check_bench: pass one of --kvpool/--routing/--lint (run twice)")
+    if sum(x is not None for x in (kvpool, routing, chaos, lint)) > 1:
+        print("check_bench: pass one of --kvpool/--routing/--chaos/--lint (run twice)")
         print(__doc__)
         return 2
+    if chaos is not None:
+        if args:
+            print("check_bench: --chaos takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_chaos(chaos)
     if lint is not None:
         if args:
             print("check_bench: --lint takes no positional arguments")
