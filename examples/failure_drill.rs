@@ -148,6 +148,7 @@ fn main() {
             adapter: None,
             user: 0,
             shared_prefix_len: 0,
+            end_session: false,
         });
     }
     let mut now = 1_000_000u64;

@@ -18,7 +18,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use aibrix::diagnostics::{diagnose, FailureInjector};
-use aibrix::engine::real::{EnginePool, RealEngine, RealRequest};
+use aibrix::engine::real::{EnginePool, RealRequest};
+use aibrix::engine::SchedEngine;
 use aibrix::gateway::{ClusterView, ClusterViewConfig, CounterPod, HealthState, Policy, Router};
 use aibrix::json::Json;
 use aibrix::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
@@ -86,18 +87,24 @@ fn route_req(id: u64, session: u64, tokens: Vec<u32>) -> Request {
         adapter: None,
         user: 0,
         shared_prefix_len: 0,
+        end_session: false,
     }
 }
 
-fn pods_of(engines: &[RealEngine]) -> Vec<CounterPod> {
+fn pods_of(engines: &[SchedEngine]) -> Vec<CounterPod> {
     engines
         .iter()
         .enumerate()
-        .map(|(i, e)| CounterPod {
-            pod: i,
-            node: i as u64,
-            ready: !e.is_failed(),
-            inflight: e.pending(),
+        .map(|(i, e)| {
+            let s = e.stats();
+            CounterPod {
+                pod: i,
+                node: i as u64,
+                ready: !e.is_failed(),
+                waiting: s.waiting,
+                running: s.running,
+                kv_pressure: s.kv_utilization,
+            }
         })
         .collect()
 }
@@ -114,9 +121,9 @@ fn run_trace(convs: usize, spec: &SyntheticSpec, chaos: bool) -> RunOut {
     pcfg.metadata_delay_us = 0;
     let pool = Arc::new(Mutex::new(DistKvPool::new(pcfg)));
     let hook = EnginePool::new(Arc::clone(&pool), "tinylm-chaos-bench");
-    let mut engines: Vec<RealEngine> = (0..REPLICAS)
+    let mut engines: Vec<SchedEngine> = (0..REPLICAS)
         .map(|node| {
-            RealEngine::from_runtime(
+            SchedEngine::from_runtime(
                 TinyLmRuntime::synthetic(spec),
                 Some(hook.for_node(node as u64)),
             )

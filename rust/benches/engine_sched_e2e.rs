@@ -1,0 +1,243 @@
+//! Continuous-batching scheduler vs the lockstep engine on a bursty
+//! arrival trace (ISSUE 8 acceptance gate).
+//!
+//! The same trace — bursts of heterogeneous requests (prompt lengths
+//! 16..64, decode budgets 2..24) — is served twice: by the lockstep
+//! [`RealEngine`] (whole-window prefill, batch-of-completions, every row
+//! decoded to the batch max) and by the event-driven [`SchedEngine`]
+//! (chunked prefill interleaved with decode, continuous admission,
+//! per-request completion events). Gates:
+//!
+//!   * served tok/s: scheduler strictly beats lockstep (it computes only
+//!     real prompt positions and only each request's own decode budget);
+//!   * P99 TTFT: scheduler strictly beats lockstep (first tokens surface
+//!     at the iteration that sampled them, not at batch drain);
+//!   * outputs bit-identical per request (greedy decode is a pure
+//!     function of the prompt; chunking must not change a single bit);
+//!   * a tight-KV-budget leg must preempt at least once and STILL match
+//!     lockstep bit for bit — preemption-by-recompute is lossless.
+//!
+//! Run: `cargo bench --bench engine_sched_e2e`            (full)
+//!      `cargo bench --bench engine_sched_e2e -- --smoke` (CI quick pass)
+//!
+//! Writes `benchmarks/BENCH_engine_sched_e2e.json` (schema in
+//! BENCHMARKS.md); `scripts/check_bench.py --sched` re-validates in CI.
+
+use std::time::Instant;
+
+use aibrix::engine::real::{RealEngine, RealRequest};
+use aibrix::engine::{SchedConfig, SchedEngine};
+use aibrix::json::Json;
+use aibrix::runtime::{ModelCfg, SyntheticSpec, TinyLmRuntime};
+use aibrix::telemetry::BenchReport;
+use aibrix::util::percentile;
+
+const SEQ: usize = 96;
+/// Lockstep prefill window (its max prompt); the scheduler has no window.
+const WINDOW: usize = 64;
+const SLOTS: usize = 4;
+
+fn bench_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        cfg: ModelCfg {
+            vocab: 512,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            head_dim: 16,
+            max_seq: SEQ,
+            page_size: 16,
+        },
+        d_ff: 128,
+        prefill: vec![(1, WINDOW), (SLOTS, WINDOW)],
+        decode: vec![1, SLOTS],
+        seed: 42,
+    }
+}
+
+/// Deterministic heterogeneous trace: request `i` has a 16..=64-token
+/// prompt and a 2..=24-token decode budget (both under the lockstep
+/// engine's window/steps caps, so per-request outputs are comparable).
+fn trace_req(i: usize) -> RealRequest {
+    let prompt_len = 16 + (i * 13) % 49;
+    let max_new = 2 + (i * 7) % 23;
+    let tokens: Vec<u32> = (0..prompt_len).map(|s| ((i * 131 + s * 17 + 7) % 512) as u32).collect();
+    RealRequest { id: i as u64, tokens, max_new_tokens: max_new }
+}
+
+struct RunOut {
+    outputs: Vec<(u64, Vec<u32>)>,
+    ttfts_us: Vec<f64>,
+    served_tokens: u64,
+    wall_ms: f64,
+    preemptions: u64,
+}
+
+/// One engine interface for the trace loop: enqueue a burst, drain, next
+/// burst — the arrival pattern both engines see is identical.
+trait TraceEngine {
+    fn enqueue(&mut self, r: RealRequest);
+    fn drain(&mut self);
+    fn take_out(&mut self) -> (Vec<(u64, Vec<u32>)>, Vec<f64>, u64);
+    fn preemptions(&self) -> u64 {
+        0
+    }
+}
+
+impl TraceEngine for RealEngine {
+    fn enqueue(&mut self, r: RealRequest) {
+        RealEngine::enqueue(self, r);
+    }
+    fn drain(&mut self) {
+        self.run_to_drain().expect("lockstep drain");
+    }
+    fn take_out(&mut self) -> (Vec<(u64, Vec<u32>)>, Vec<f64>, u64) {
+        collect(&self.completions)
+    }
+}
+
+impl TraceEngine for SchedEngine {
+    fn enqueue(&mut self, r: RealRequest) {
+        SchedEngine::enqueue(self, r);
+    }
+    fn drain(&mut self) {
+        self.run_to_drain().expect("scheduler drain");
+    }
+    fn take_out(&mut self) -> (Vec<(u64, Vec<u32>)>, Vec<f64>, u64) {
+        collect(&self.completions)
+    }
+    fn preemptions(&self) -> u64 {
+        SchedEngine::preemptions(self)
+    }
+}
+
+fn collect(cs: &[aibrix::engine::real::RealCompletion]) -> (Vec<(u64, Vec<u32>)>, Vec<f64>, u64) {
+    let mut outputs: Vec<(u64, Vec<u32>)> =
+        cs.iter().map(|c| (c.id, c.generated.clone())).collect();
+    outputs.sort();
+    let ttfts = cs.iter().map(|c| c.ttft_us as f64).collect();
+    let served = cs.iter().map(|c| c.generated.len() as u64).sum();
+    (outputs, ttfts, served)
+}
+
+fn run_trace<E: TraceEngine>(engine: &mut E, bursts: usize, burst_size: usize) -> RunOut {
+    let t0 = Instant::now();
+    for b in 0..bursts {
+        for j in 0..burst_size {
+            engine.enqueue(trace_req(b * burst_size + j));
+        }
+        engine.drain();
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let (outputs, ttfts_us, served_tokens) = engine.take_out();
+    RunOut { outputs, ttfts_us, served_tokens, wall_ms, preemptions: engine.preemptions() }
+}
+
+fn tps(run: &RunOut) -> f64 {
+    run.served_tokens as f64 / (run.wall_ms.max(1e-6) / 1e3)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (bursts, burst_size) = if smoke { (3, 8) } else { (6, 12) };
+    let total = bursts * burst_size;
+    let spec = bench_spec();
+
+    println!("== engine_sched_e2e ({}) ==", if smoke { "smoke" } else { "full" });
+    println!(
+        "model: vocab={} d_model={} layers={}  {SLOTS} rows, {bursts} bursts x {burst_size} requests (prompts 16..=64, budgets 2..=24)",
+        spec.cfg.vocab, spec.cfg.d_model, spec.cfg.n_layers
+    );
+
+    let mut lockstep =
+        RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec), None).expect("lockstep engine");
+    let lock = run_trace(&mut lockstep, bursts, burst_size);
+
+    let mut sched = SchedEngine::from_runtime(TinyLmRuntime::synthetic(&spec), None)
+        .expect("scheduler engine");
+    let cont = run_trace(&mut sched, bursts, burst_size);
+
+    // Tight leg: a KV budget of two rows' worth forces the 4-slot
+    // scheduler to preempt under decode growth; recompute-from-context
+    // must keep every output bit-identical anyway.
+    let rt = TinyLmRuntime::synthetic(&spec);
+    let tight_cfg =
+        SchedConfig { kv_token_budget: 2 * SEQ, ..SchedConfig::for_runtime(&rt) };
+    let mut tight_engine =
+        SchedEngine::with_config(rt, None, tight_cfg).expect("tight scheduler");
+    let tight = run_trace(&mut tight_engine, bursts, burst_size);
+
+    let identical = lock.outputs == cont.outputs;
+    let tight_identical = lock.outputs == tight.outputs;
+    let speedup = tps(&cont) / tps(&lock).max(1e-9);
+    let lock_p99_ttft = percentile(&lock.ttfts_us, 99.0).max(1.0);
+    let cont_p99_ttft = percentile(&cont.ttfts_us, 99.0).max(1.0);
+    let ttft_improvement = lock_p99_ttft / cont_p99_ttft;
+
+    let mut report = BenchReport::new("engine_sched_e2e");
+    report
+        .config("smoke", smoke)
+        .config("bursts", bursts)
+        .config("burst_size", burst_size)
+        .config("total_requests", total)
+        .config("slots", SLOTS)
+        .config("max_seq", SEQ)
+        .config("lockstep_window", WINDOW)
+        .config("vocab", spec.cfg.vocab)
+        .config("d_model", spec.cfg.d_model)
+        .config("n_layers", spec.cfg.n_layers);
+    for (name, run) in [("lockstep", &lock), ("sched", &cont), ("sched_tight_kv", &tight)] {
+        report.result([
+            ("name", Json::from(name)),
+            ("completions", Json::from(run.outputs.len())),
+            ("served_tokens", Json::from(run.served_tokens)),
+            ("tokens_per_s", Json::from(tps(run))),
+            ("p50_ttft_us", Json::from(percentile(&run.ttfts_us, 50.0))),
+            ("p99_ttft_us", Json::from(percentile(&run.ttfts_us, 99.0))),
+            ("preemptions", Json::from(run.preemptions)),
+            ("wall_ms", Json::from(run.wall_ms)),
+        ]);
+    }
+    report
+        .derived("sched_speedup", speedup)
+        .derived("ttft_improvement", ttft_improvement)
+        .derived("outputs_bit_identical", identical)
+        .derived("tight_outputs_bit_identical", tight_identical)
+        .derived("tight_preemptions", tight.preemptions);
+
+    for (name, run) in [("lockstep", &lock), ("sched   ", &cont), ("tight-kv", &tight)] {
+        println!(
+            "{name}: {:>9.0} served tok/s  p99 TTFT {:>8.1}ms  ({} completions, {} preemptions, {:.1} ms wall)",
+            tps(run),
+            percentile(&run.ttfts_us, 99.0) / 1e3,
+            run.outputs.len(),
+            run.preemptions,
+            run.wall_ms,
+        );
+    }
+    println!(
+        "scheduler vs lockstep: {speedup:.2}x served tok/s, {ttft_improvement:.2}x p99 TTFT, outputs identical: {identical} (tight leg: {tight_identical})"
+    );
+
+    let path = report.default_path(env!("CARGO_MANIFEST_DIR"));
+    report.write_to(&path).expect("write BENCH_engine_sched_e2e.json");
+    println!("wrote {}", path.display());
+
+    // Acceptance gates (ISSUE 8).
+    assert_eq!(lock.outputs.len(), total, "lockstep lost requests");
+    assert_eq!(cont.outputs.len(), total, "scheduler lost requests");
+    assert!(identical, "scheduler changed completions vs lockstep");
+    assert!(
+        speedup > 1.0,
+        "scheduler must strictly beat lockstep on served tok/s: {speedup:.3}x"
+    );
+    assert!(
+        ttft_improvement > 1.0,
+        "scheduler must strictly beat lockstep on p99 TTFT: {ttft_improvement:.3}x"
+    );
+    assert!(
+        tight.preemptions > 0,
+        "tight-KV leg never preempted — the gate is vacuous"
+    );
+    assert!(tight_identical, "preemption changed completions");
+}

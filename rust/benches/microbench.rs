@@ -55,6 +55,7 @@ fn request(tokens: usize) -> Request {
         adapter: None,
         user: 0,
         shared_prefix_len: 0,
+        end_session: false,
     }
 }
 

@@ -22,7 +22,8 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use aibrix::engine::real::{EnginePool, RealEngine, RealRequest};
+use aibrix::engine::real::{EnginePool, RealRequest};
+use aibrix::engine::SchedEngine;
 use aibrix::gateway::{ClusterView, ClusterViewConfig, CounterPod, Policy, Router};
 use aibrix::json::Json;
 use aibrix::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
@@ -87,9 +88,9 @@ fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
     pcfg.metadata_delay_us = DELAY_US;
     let pool = Arc::new(Mutex::new(DistKvPool::new(pcfg)));
     let hook = EnginePool::new(Arc::clone(&pool), "tinylm-routing-bench");
-    let mut engines: Vec<RealEngine> = (0..REPLICAS)
+    let mut engines: Vec<SchedEngine> = (0..REPLICAS)
         .map(|node| {
-            RealEngine::from_runtime(
+            SchedEngine::from_runtime(
                 TinyLmRuntime::synthetic(spec),
                 Some(hook.for_node(node as u64)),
             )
@@ -120,15 +121,21 @@ fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
                 adapter: None,
                 user: 0,
                 shared_prefix_len: 0,
+                end_session: false,
             };
             let mut pods: Vec<CounterPod> = engines
                 .iter()
                 .enumerate()
-                .map(|(i, e)| CounterPod {
-                    pod: i,
-                    node: i as u64,
-                    ready: true,
-                    inflight: e.pending(),
+                .map(|(i, e)| {
+                    let s = e.stats();
+                    CounterPod {
+                        pod: i,
+                        node: i as u64,
+                        ready: true,
+                        waiting: s.waiting,
+                        running: s.running,
+                        kv_pressure: s.kv_utilization,
+                    }
                 })
                 .collect();
             let now = hook.clock_us();

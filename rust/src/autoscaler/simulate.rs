@@ -147,6 +147,7 @@ pub fn run(cfg: &ScalingSimConfig, scaler: &mut dyn Scaler) -> ScalingReport {
                     adapter: None,
                     user: (next_id % 8) as u32,
                     shared_prefix_len: 0,
+                    end_session: false,
                 };
                 next_id += 1;
                 let snaps = view.snapshot(now, &req, &mut pods, None);

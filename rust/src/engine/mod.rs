@@ -10,11 +10,13 @@ pub mod blocks;
 pub mod costmodel;
 pub mod prefix;
 pub mod real;
+pub mod sched;
 pub mod sim_engine;
 pub mod spec;
 
 pub use blocks::BlockAllocator;
 pub use costmodel::CostModel;
 pub use prefix::PrefixCache;
+pub use sched::{SchedConfig, SchedEngine};
 pub use sim_engine::{Completion, EngineConfig, EngineSim, EngineStats, ExternalKv, KvFetch};
 pub use spec::ModelSpec;

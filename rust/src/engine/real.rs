@@ -124,6 +124,14 @@ impl EnginePool {
         f(&lock_or_recover(&self.pool))
     }
 
+    /// Run `f` with the pool locked mutably — the engine-side entry for
+    /// admission lookups and completion write-backs (the scheduler's
+    /// staging thread funnels through here). Same brevity rule as
+    /// [`EnginePool::with_pool`].
+    pub(crate) fn with_pool_mut<R>(&self, f: impl FnOnce(&mut DistKvPool) -> R) -> R {
+        f(&mut lock_or_recover(&self.pool))
+    }
+
     /// Snapshot of the shared pool's counters.
     pub fn stats(&self) -> PoolStats {
         lock_or_recover(&self.pool).stats.clone()
@@ -145,6 +153,11 @@ pub struct RealCompletion {
     pub generated: Vec<u32>,
     pub queue_us: u64,
     pub serve_us: u64,
+    /// Time-to-first-token since enqueue. The lockstep engine only
+    /// surfaces tokens when the whole batch drains, so there it equals
+    /// `queue_us + serve_us`; the continuous-batching scheduler stamps it
+    /// at the iteration that actually sampled the first token.
+    pub ttft_us: u64,
 }
 
 impl RealCompletion {
@@ -193,7 +206,12 @@ impl RealEngine {
     pub fn from_runtime(runtime: TinyLmRuntime, pool: Option<EnginePool>) -> Result<RealEngine> {
         let max_batch = runtime.prefill_batches().into_iter().max().unwrap_or(1);
         let prefill_window = runtime.prefill_seq(max_batch).unwrap_or(128);
-        let decode_budget = runtime.cfg.max_seq - prefill_window;
+        // A prefill window filling the whole cache (or, with mismatched
+        // artifacts, exceeding it) leaves zero decode headroom, and
+        // `steps.clamp(1, decode_budget)` panics on an inverted range.
+        // Guard the budget to >=1 here: step() then degrades to a loud
+        // generate error ("exceeds cache headroom") instead of a panic.
+        let decode_budget = runtime.cfg.max_seq.saturating_sub(prefill_window).max(1);
         let kv_shape = match &pool {
             Some(hook) => {
                 let shape = KvBlockShape {
@@ -441,6 +459,8 @@ impl RealEngine {
                 generated: toks,
                 queue_us: total_wait.saturating_sub(serve_us),
                 serve_us,
+                // Lockstep surfaces nothing until the batch drains.
+                ttft_us: total_wait,
             };
             self.completions.push(completion.clone());
             out.push(completion);
@@ -470,13 +490,15 @@ enum Cmd {
     Stop,
 }
 
-/// A `Send + Clone` handle to a [`RealEngine`] running on its own thread.
+/// A `Send + Clone` handle to a continuous-batching engine
+/// ([`super::SchedEngine`]) running on its own thread.
 ///
-/// One dedicated thread drains the command channel into batches — the
-/// correct serving shape: one batching loop per engine replica, HTTP
-/// workers only enqueue. (Historically also forced by PJRT wrapper types
-/// not being `Send`; the pure-Rust kernel runtime keeps the design and
-/// does its own `std::thread::scope` fan-out inside prefill/decode.)
+/// One dedicated thread drains the command channel into the scheduler's
+/// waiting queue and ticks iterations — the correct serving shape: one
+/// scheduling loop per engine replica, HTTP workers only enqueue. Each
+/// iteration surfaces per-request completion events, so requests finish
+/// (and their waiters unblock) as soon as their own decode is done, not
+/// when a whole lockstep batch drains.
 #[derive(Clone)]
 pub struct RealEngineHandle {
     tx: mpsc::Sender<Cmd>,
@@ -512,7 +534,7 @@ impl RealEngineHandle {
         let dir = artifacts.to_path_buf();
         let pool = opts.pool.clone();
         std::thread::spawn(move || {
-            let mut engine = match RealEngine::load_with_opts(&dir, opts) {
+            let mut engine = match super::SchedEngine::load_with_opts(&dir, opts) {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok((
                         e.max_prompt(),
@@ -530,7 +552,9 @@ impl RealEngineHandle {
             let mut waiters: std::collections::HashMap<u64, mpsc::Sender<RealCompletion>> =
                 Default::default();
             loop {
-                // Block for one command, then drain greedily to batch.
+                // Block for one command, then drain greedily: everything
+                // queued joins the scheduler's waiting queue before the
+                // next iteration picks its chunks.
                 let first = match rx.recv() {
                     Ok(c) => c,
                     Err(_) => return,
@@ -549,8 +573,26 @@ impl RealEngineHandle {
                     }
                 }
                 while engine.pending() > 0 {
-                    match engine.step() {
+                    // Admit anything that arrived while the last iteration
+                    // computed — continuous batching, not batch boundaries.
+                    for cmd in rx.try_iter() {
+                        match cmd {
+                            Cmd::Serve(req, reply) => {
+                                waiters.insert(req.id, reply);
+                                engine.enqueue(req);
+                            }
+                            Cmd::Stats(reply) => {
+                                let _ = reply.send(engine.runtime_stats());
+                            }
+                            Cmd::Stop => stop = true,
+                        }
+                    }
+                    match engine.tick() {
                         Ok(done) => {
+                            if done.is_empty() {
+                                // All rows waiting on staged pool I/O.
+                                std::thread::yield_now();
+                            }
                             for c in done {
                                 if let Some(reply) = waiters.remove(&c.id) {
                                     let _ = reply.send(c);
@@ -558,11 +600,12 @@ impl RealEngineHandle {
                             }
                         }
                         Err(e) => {
-                            eprintln!("engine step failed: {e}");
+                            eprintln!("engine iteration failed: {e}");
                             break;
                         }
                     }
                 }
+                engine.flush();
                 if stop {
                     return;
                 }
@@ -755,6 +798,41 @@ mod tests {
         e.enqueue(request(5, &prefix, 1));
         let after = e.step().unwrap();
         assert_eq!(after[0].generated, baseline[0].generated);
+    }
+
+    #[test]
+    fn max_seq_prefill_window_cannot_panic() {
+        // Regression: with a prefill window the size of the whole cache,
+        // decode_budget used to be 0 and `steps.clamp(1, 0)` panicked on
+        // an inverted range. Construction now guards the budget to >=1 and
+        // step() surfaces a loud headroom error instead of panicking.
+        let spec = SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 8,
+                max_seq: 40,
+                page_size: 8,
+            },
+            d_ff: 32,
+            prefill: vec![(1, 40)], // window == max_seq
+            decode: vec![1],
+            seed: 5,
+        };
+        let mut e = RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec), None).unwrap();
+        assert_eq!(e.max_new_tokens(), 1, "budget is clamped, not zero");
+        e.enqueue(request(1, &[1, 2, 3], 3));
+        assert!(e.step().is_err(), "no decode headroom must error, not panic");
+    }
+
+    #[test]
+    fn lockstep_ttft_equals_total_latency() {
+        let mut e = engine(None);
+        e.enqueue(request(1, &[1, 2, 3, 4], 5));
+        let done = e.step().unwrap();
+        assert_eq!(done[0].ttft_us, done[0].latency_us());
     }
 
     #[test]

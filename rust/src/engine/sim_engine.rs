@@ -690,6 +690,7 @@ mod tests {
             adapter: None,
             user: 0,
             shared_prefix_len: 0,
+            end_session: false,
         }
     }
 

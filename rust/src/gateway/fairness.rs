@@ -188,6 +188,7 @@ mod tests {
             adapter: None,
             user,
             shared_prefix_len: 0,
+            end_session: false,
         }
     }
 

@@ -69,8 +69,8 @@ pub use scoring::{
     PipelineConfig, RouteTelemetry, ScoreCtx, ScoringPipeline, N_SCORERS, SCORER_NAMES,
 };
 pub use view::{
-    ClusterView, ClusterViewConfig, CounterPod, HealthPolicy, HealthState, HealthTracker,
-    PodSignalSource, PodSignals,
+    fleet_kv_pressure, ClusterView, ClusterViewConfig, CounterPod, HealthPolicy, HealthState,
+    HealthTracker, PodSignalSource, PodSignals,
 };
 
 use crate::sim::SimTime;
@@ -150,6 +150,7 @@ mod tests {
             adapter: None,
             user,
             shared_prefix_len: 0,
+            end_session: false,
         }
     }
 

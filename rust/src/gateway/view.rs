@@ -242,6 +242,11 @@ pub struct ClusterViewConfig {
     pub slo: Slo,
     /// Bound on tracked sessions; oldest-by-first-appearance evicts first.
     pub session_capacity: usize,
+    /// Idle TTL for sticky sessions, µs of sim/pool time. A session not
+    /// re-routed for this long stops pinning the affinity scorer (its
+    /// engine-side KV is long since evicted anyway). `None` = never
+    /// expire (the pre-TTL behavior; capacity eviction still applies).
+    pub session_ttl: Option<SimTime>,
     /// Heartbeat/straggler thresholds for the health state machine.
     pub health: HealthPolicy,
 }
@@ -253,14 +258,15 @@ impl Default for ClusterViewConfig {
             chain_seed: 0,
             slo: Slo::default(),
             session_capacity: 4096,
+            session_ttl: None,
             health: HealthPolicy::default(),
         }
     }
 }
 
 impl ClusterViewConfig {
-    /// Defaults with the operator env knobs applied:
-    /// `AIBRIX_SLO_TTFT_MS`, `AIBRIX_SLO_ITL_MS`, `AIBRIX_SESSION_CAP`.
+    /// Defaults with the operator env knobs applied: `AIBRIX_SLO_TTFT_MS`,
+    /// `AIBRIX_SLO_ITL_MS`, `AIBRIX_SESSION_CAP`, `AIBRIX_SESSION_TTL_MS`.
     /// Garbage values are hard errors, never silent defaults.
     pub fn from_env() -> Result<ClusterViewConfig, String> {
         let mut cfg = ClusterViewConfig::default();
@@ -278,6 +284,12 @@ impl ClusterViewConfig {
             cfg.session_capacity = v
                 .parse()
                 .map_err(|_| format!("AIBRIX_SESSION_CAP={v:?} is not a number"))?;
+        }
+        if let Ok(v) = std::env::var("AIBRIX_SESSION_TTL_MS") {
+            let ms: u64 = v
+                .parse()
+                .map_err(|_| format!("AIBRIX_SESSION_TTL_MS={v:?} is not a number"))?;
+            cfg.session_ttl = Some(ms.saturating_mul(1000));
         }
         Ok(cfg)
     }
@@ -323,15 +335,29 @@ impl PodSignalSource for PodSignals {
 }
 
 /// Counter-backed pod for entry points without an engine simulator —
-/// `aibrix serve` tracks only a live in-flight count per replica; every
-/// other raw signal is neutral and the view supplies pool/session/SLO.
+/// `aibrix serve` mirrors its scheduler's queue split (waiting vs
+/// running) and KV pressure per replica; every other raw signal is
+/// neutral and the view supplies pool/session/SLO.
 #[derive(Debug, Clone)]
 pub struct CounterPod {
     pub pod: usize,
     pub node: u64,
     pub ready: bool,
-    /// Admitted-but-unfinished requests (the load signal).
-    pub inflight: usize,
+    /// Enqueued-not-yet-scheduled requests (admission backlog — the
+    /// signal that predicts queueing delay).
+    pub waiting: usize,
+    /// Requests holding cache rows right now (prefilling or decoding).
+    pub running: usize,
+    /// KV cache utilization in `[0, 1]` — the memory-pressure signal the
+    /// scorers and autoscaler read (preemption risk when near 1).
+    pub kv_pressure: f64,
+}
+
+impl CounterPod {
+    /// Total unfinished requests (back-compat load measure).
+    pub fn inflight(&self) -> usize {
+        self.waiting + self.running
+    }
 }
 
 impl PodSignalSource for CounterPod {
@@ -340,10 +366,34 @@ impl PodSignalSource for CounterPod {
             pod: self.pod,
             node: self.node,
             ready: self.ready,
-            stats: EngineStats { waiting: self.inflight, ..EngineStats::default() },
+            stats: EngineStats {
+                waiting: self.waiting,
+                running: self.running,
+                kv_utilization: self.kv_pressure,
+                ..EngineStats::default()
+            },
             local_match_blocks: 0,
             resident_adapters: Vec::new(),
         }
+    }
+}
+
+/// Fleet-wide KV memory pressure: mean `kv_utilization` over pods that
+/// accept new work (the autoscaler's §4 capacity signal — scale out as
+/// the fleet nears preemption territory, whatever the queue depths say).
+pub fn fleet_kv_pressure(snaps: &[PodSnapshot]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for s in snaps {
+        if s.ready && s.health.accepts_new_work() {
+            sum += s.stats.kv_utilization;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
     }
 }
 
@@ -365,11 +415,14 @@ pub fn slo_headroom(stats: &EngineStats, req: &Request, slo: &Slo) -> f64 {
 }
 
 /// Bounded session → pod table. Eviction is FIFO by *first appearance*:
-/// re-routing an existing session updates its pod without re-queueing it,
-/// so the table stays O(capacity) and fully deterministic.
+/// re-routing an existing session updates its pod (and idle timestamp)
+/// without re-queueing it, so the table stays O(capacity) and fully
+/// deterministic. Entries also expire after an idle TTL (lazily, on the
+/// snapshot/sweep that first observes them stale).
 #[derive(Debug)]
 struct SessionTable {
-    map: HashMap<u64, usize>,
+    /// session → (pod, last touch time).
+    map: HashMap<u64, (usize, SimTime)>,
     order: VecDeque<u64>,
     capacity: usize,
 }
@@ -379,17 +432,17 @@ impl SessionTable {
         SessionTable { map: HashMap::new(), order: VecDeque::new(), capacity }
     }
 
-    fn note(&mut self, session: u64, pod: usize) {
+    fn note(&mut self, session: u64, pod: usize, now: SimTime) {
         if self.capacity == 0 {
             return;
         }
         use std::collections::hash_map::Entry;
         match self.map.entry(session) {
             Entry::Occupied(mut e) => {
-                e.insert(pod);
+                e.insert((pod, now));
             }
             Entry::Vacant(v) => {
-                v.insert(pod);
+                v.insert((pod, now));
                 self.order.push_back(session);
             }
         }
@@ -401,18 +454,37 @@ impl SessionTable {
     }
 
     fn pod_of(&self, session: u64) -> Option<usize> {
-        self.map.get(&session).copied()
+        self.map.get(&session).map(|&(pod, _)| pod)
     }
 
     fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Eagerly forget one finished session (the request-level
+    /// `end_session` signal): the slot frees immediately instead of
+    /// waiting for TTL or capacity pressure.
+    fn end(&mut self, session: u64) {
+        if self.map.remove(&session).is_some() {
+            self.order.retain(|s| *s != session);
+        }
+    }
+
+    /// Drop every session idle for `ttl` or longer (last touch at or
+    /// before `now - ttl`). Lazy: called from snapshot/sweep, so an
+    /// expired session stops pinning the affinity scorer on the next
+    /// routing decision after its TTL elapses.
+    fn purge_expired(&mut self, now: SimTime, ttl: SimTime) {
+        self.map.retain(|_, &mut (_, touch)| now.saturating_sub(touch) < ttl);
+        let map = &self.map;
+        self.order.retain(|s| map.contains_key(s));
+    }
+
     /// Forget every session pinned to `pod` (it stopped accepting work):
     /// a sticky session must never pin to a corpse — its next request
     /// re-routes freely and re-sticks wherever it lands.
     fn purge_pod(&mut self, pod: usize) {
-        self.map.retain(|_, p| *p != pod);
+        self.map.retain(|_, (p, _)| *p != pod);
         let map = &self.map;
         self.order.retain(|s| map.contains_key(s));
     }
@@ -430,13 +502,16 @@ pub struct ClusterView {
     keys: Vec<BlockKey>,
     /// Scratch: raw signals gathered before the health sweep.
     sigs: Vec<PodSignals>,
+    /// Latest `now` seen by snapshot/sweep — stamps session touches so
+    /// `note_route`'s signature stays clock-free.
+    now_hint: SimTime,
 }
 
 impl ClusterView {
     pub fn new(cfg: ClusterViewConfig) -> ClusterView {
         let sessions = SessionTable::new(cfg.session_capacity);
         let health = HealthTracker::new(cfg.health);
-        ClusterView { cfg, sessions, health, keys: Vec::new(), sigs: Vec::new() }
+        ClusterView { cfg, sessions, health, keys: Vec::new(), sigs: Vec::new(), now_hint: 0 }
     }
 
     pub fn config(&self) -> &ClusterViewConfig {
@@ -469,7 +544,16 @@ impl ClusterView {
     /// onto one pod through a phantom shared session.
     pub fn note_route(&mut self, session: u64, pod: usize) {
         if session != 0 {
-            self.sessions.note(session, pod);
+            self.sessions.note(session, pod, self.now_hint);
+        }
+    }
+
+    /// Eagerly drop a finished session's stickiness (the request carried
+    /// `end_session`): the slot frees now, instead of waiting for the
+    /// idle TTL or capacity eviction. No-op for the stateless session 0.
+    pub fn end_session(&mut self, session: u64) {
+        if session != 0 {
+            self.sessions.end(session);
         }
     }
 
@@ -493,6 +577,10 @@ impl ClusterView {
     /// does not depend on arrival traffic. Sessions pinned to pods that
     /// stop accepting work are purged, exactly as in [`ClusterView::snapshot`].
     pub fn sweep<S: PodSignalSource>(&mut self, now: SimTime, pods: &mut [S]) {
+        self.now_hint = now;
+        if let Some(ttl) = self.cfg.session_ttl {
+            self.sessions.purge_expired(now, ttl);
+        }
         self.sigs.clear();
         for p in pods.iter_mut() {
             let s = p.signals(now, &[]);
@@ -515,6 +603,12 @@ impl ClusterView {
         pods: &mut [S],
         pool: Option<&DistKvPool>,
     ) -> Vec<PodSnapshot> {
+        // Expire idle sessions first: a stale pin must not influence this
+        // request's stickiness.
+        self.now_hint = now;
+        if let Some(ttl) = self.cfg.session_ttl {
+            self.sessions.purge_expired(now, ttl);
+        }
         // Hash the prompt chain once per request into the scratch buffer —
         // the same walk the engines' admission lookups use, by definition.
         let bs = self.cfg.block_size.max(1);
@@ -579,12 +673,20 @@ mod tests {
             adapter: None,
             user: 0,
             shared_prefix_len: 0,
+            end_session: false,
         }
     }
 
     fn counter_pods(n: usize) -> Vec<CounterPod> {
         (0..n)
-            .map(|i| CounterPod { pod: i, node: i as u64, ready: true, inflight: i })
+            .map(|i| CounterPod {
+                pod: i,
+                node: i as u64,
+                ready: true,
+                waiting: i,
+                running: 0,
+                kv_pressure: 0.0,
+            })
             .collect()
     }
 
@@ -668,7 +770,8 @@ mod tests {
     fn diagnosis_drives_healthy_degraded_draining_cordoned() {
         let mut view = ClusterView::new(ClusterViewConfig::default());
         let mut pods = counter_pods(2);
-        pods[1].inflight = 3;
+        pods[1].waiting = 1;
+        pods[1].running = 2;
         assert_eq!(view.health().state(1), HealthState::Healthy);
         // Throttle verdict: Degraded, still routable.
         view.apply_diagnosis(10, 1, Action::ThrottleWorkload);
@@ -684,7 +787,8 @@ mod tests {
         assert!(snaps[1].ready);
         assert!(!snaps[1].health.accepts_new_work());
         // In-flight work drains to zero: the sweep cordons it.
-        pods[1].inflight = 0;
+        pods[1].waiting = 0;
+        pods[1].running = 0;
         let snaps = view.snapshot(50, &req(16, 0), &mut pods, None);
         assert_eq!(view.health().state(1), HealthState::Cordoned);
         assert!(!snaps[1].ready, "cordoned pods are excluded outright");
@@ -754,7 +858,7 @@ mod tests {
         // sticky session kept routing at a corpse forever.
         let mut view = ClusterView::new(ClusterViewConfig::default());
         let mut pods = counter_pods(3);
-        pods.iter_mut().for_each(|p| p.inflight = 1);
+        pods.iter_mut().for_each(|p| p.waiting = 1);
         view.note_route(7, 1);
         view.note_route(8, 2);
         assert_eq!(view.session_pod(7), Some(1));
@@ -775,6 +879,87 @@ mod tests {
         // The freed session re-sticks wherever it routes next.
         view.note_route(8, 0);
         assert_eq!(view.session_pod(8), Some(0));
+    }
+
+    #[test]
+    fn session_ttl_expires_idle_sessions() {
+        let cfg = ClusterViewConfig { session_ttl: Some(1_000), ..Default::default() };
+        let mut view = ClusterView::new(cfg);
+        let mut pods = counter_pods(2);
+        // Establish "now" so the touch timestamp is meaningful.
+        view.snapshot(100, &req(16, 0), &mut pods, None);
+        view.note_route(7, 1);
+        // Still inside the TTL: sticks.
+        let snaps = view.snapshot(1_000, &req(16, 7), &mut pods, None);
+        assert!(snaps[1].session_match, "fresh session sticks");
+        // Touch via re-route keeps it alive past the original deadline.
+        view.note_route(7, 1);
+        let snaps = view.snapshot(1_900, &req(16, 7), &mut pods, None);
+        assert!(snaps[1].session_match, "re-route refreshed the TTL");
+        // Idle past the TTL: the next snapshot purges before stickiness.
+        let snaps = view.snapshot(3_000, &req(16, 7), &mut pods, None);
+        assert!(snaps.iter().all(|s| !s.session_match), "expired session unpins");
+        assert_eq!(view.session_pod(7), None);
+        assert_eq!(view.tracked_sessions(), 0);
+        // Sweeps expire too (no request traffic needed). Touch is the
+        // last snapshot's now (3_000).
+        view.note_route(8, 0);
+        view.sweep(3_500, &mut pods);
+        assert_eq!(view.session_pod(8), Some(0), "inside TTL: survives the sweep");
+        view.sweep(10_000, &mut pods);
+        assert_eq!(view.session_pod(8), None, "idle session expired by sweep");
+        // No TTL configured: sessions never expire by idling.
+        let mut forever = ClusterView::new(ClusterViewConfig::default());
+        forever.note_route(9, 1);
+        forever.sweep(u64::MAX, &mut pods);
+        assert_eq!(forever.session_pod(9), Some(1));
+    }
+
+    #[test]
+    fn end_session_frees_slot_eagerly() {
+        let cfg = ClusterViewConfig { session_capacity: 2, ..Default::default() };
+        let mut view = ClusterView::new(cfg);
+        view.note_route(1, 0);
+        view.note_route(2, 1);
+        assert_eq!(view.tracked_sessions(), 2);
+        // Explicit end: the slot frees immediately.
+        view.end_session(1);
+        assert_eq!(view.session_pod(1), None, "ended session unpins");
+        assert_eq!(view.tracked_sessions(), 1);
+        // FIFO-cap interaction: the freed slot means a new session no
+        // longer evicts the survivor (pre-fix, session 2 — now oldest —
+        // would have been pushed out).
+        view.note_route(3, 0);
+        assert_eq!(view.tracked_sessions(), 2);
+        assert_eq!(view.session_pod(2), Some(1), "survivor kept its slot");
+        assert_eq!(view.session_pod(3), Some(0));
+        // Ending an unknown / stateless session is a no-op.
+        view.end_session(42);
+        view.end_session(0);
+        assert_eq!(view.tracked_sessions(), 2);
+        // A re-noted session after end re-sticks fresh.
+        view.note_route(1, 1);
+        assert_eq!(view.session_pod(1), Some(1));
+    }
+
+    #[test]
+    fn counter_pod_splits_queues_and_kv_pressure() {
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mut pods = counter_pods(3);
+        pods[0].waiting = 4;
+        pods[0].running = 2;
+        pods[0].kv_pressure = 0.75;
+        pods[1].kv_pressure = 0.25;
+        pods[2].ready = false; // excluded from the fleet aggregate
+        pods[2].kv_pressure = 1.0;
+        assert_eq!(pods[0].inflight(), 6);
+        let snaps = view.snapshot(0, &req(16, 0), &mut pods, None);
+        assert_eq!(snaps[0].stats.waiting, 4);
+        assert_eq!(snaps[0].stats.running, 2);
+        assert!((snaps[0].stats.kv_utilization - 0.75).abs() < 1e-12);
+        // Fleet pressure averages only pods accepting new work.
+        assert!((fleet_kv_pressure(&snaps) - 0.5).abs() < 1e-12);
+        assert_eq!(fleet_kv_pressure(&[]), 0.0);
     }
 
     #[test]

@@ -287,9 +287,15 @@ pub fn run_with_router_config(
                     Decision::Route(pod) => {
                         // Session 0 = stateless (generators allocate real
                         // session ids from 1) — never tracked, matching
-                        // the serve path's opt-in semantics.
+                        // the serve path's opt-in semantics. A final turn
+                        // (end_session) routes with stickiness one last
+                        // time, then frees the slot eagerly.
                         if req.session != 0 {
-                            view.note_route(req.session, pod);
+                            if req.end_session {
+                                view.end_session(req.session);
+                            } else {
+                                view.note_route(req.session, pod);
+                            }
                         }
                         engines[pod].enqueue(req);
                         if idle[pod] {
@@ -432,7 +438,11 @@ pub fn run_with_router_config(
                 let ctx = ScoreCtx { tenant_share: gateway.usage.share(now, req.user) };
                 match gateway.router.select_with_ctx(&req, &snaps, &ctx) {
                     Some(pod) => {
-                        view.note_route(req.session, pod);
+                        if req.end_session {
+                            view.end_session(req.session);
+                        } else {
+                            view.note_route(req.session, pod);
+                        }
                         recovered += 1;
                         engines[pod].enqueue(req);
                         if idle[pod] {

@@ -80,6 +80,7 @@ fn serving_scope(path: &str) -> bool {
         || p.contains("src/server/")
         || p.contains("src/chaos/")
         || p.ends_with("src/engine/real.rs")
+        || p.ends_with("src/engine/sched.rs")
 }
 
 /// A comment pragma understood by the linter.
@@ -160,8 +161,8 @@ fn classify_receiver(recv: &str) -> Option<usize> {
     if last.contains("pool") {
         return Some(2); // DistKvPool
     }
-    if last.contains("engine") {
-        return Some(3); // engine
+    if last.contains("engine") || last.contains("sched") {
+        return Some(3); // engine (lockstep or continuous-batching core)
     }
     None
 }
@@ -395,7 +396,7 @@ pub fn lint_source(
                         classify_receiver(&receiver_after(&code, pos + 16))
                     } else if at(&code, pos, ".lock()") {
                         classify_receiver(&receiver_before(&code, pos))
-                    } else if at(&code, pos, ".with_pool(") {
+                    } else if at(&code, pos, ".with_pool(") || at(&code, pos, ".with_pool_mut(") {
                         Some(2) // DistKvPool acquired inside the helper
                     } else {
                         None
@@ -474,6 +475,37 @@ mod tests {
         assert_eq!(f[0].rule, RULE_PANIC);
         let (f, _, _) = run("rust/src/sim/x.rs", src);
         assert!(f.is_empty());
+    }
+
+    #[test]
+    fn scheduler_core_is_on_the_serving_path() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let (f, _, _) = run("rust/src/engine/sched.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_PANIC);
+    }
+
+    #[test]
+    fn with_pool_mut_and_sched_receivers_classified() {
+        // with_pool_mut acquires the pool class: taking it while the
+        // ClusterView lock is held is the canonical forward direction.
+        let src = "fn tick() {\n    let v = self.view.lock();\n    hook.with_pool_mut(|p| p.len());\n}\n";
+        let (f, _, g) = run("rust/src/engine/sched.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert!(!g.is_empty(), "with_pool_mut not classified as a lock site");
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+        // A `sched` receiver ranks as the engine class: acquiring the
+        // pool while it is held is a back-edge (DistKvPool sorts before
+        // engine in the canonical order) — the scheduler must do its
+        // pool I/O with no engine-class lock held.
+        let src = "fn bad() {\n    let eng = sched.lock();\n    hook.with_pool_mut(|p| p.len());\n}\n";
+        let (_, _, g) = run("rust/src/engine/sched.rs", src);
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("back-edge"));
     }
 
     #[test]

@@ -473,6 +473,9 @@ fn cmd_serve(args: &Args) -> i32 {
                 // enables sticky routing either way.
                 let user = tenant_id(&body["user"]);
                 let session = body["session"].as_u64().unwrap_or(0);
+                // Final turn of a session: the client tells us the slot
+                // can be freed eagerly instead of idling to TTL/eviction.
+                let end_session = body["end_session"].as_bool().unwrap_or(false);
                 let prompt_tokens = tokens.len();
                 let route_req = Request {
                     id,
@@ -488,6 +491,7 @@ fn cmd_serve(args: &Args) -> i32 {
                     adapter: None,
                     user,
                     shared_prefix_len: 0,
+                    end_session,
                 };
                 let now_us = t_start.elapsed().as_micros() as u64;
                 let ctx =
@@ -506,7 +510,11 @@ fn cmd_serve(args: &Args) -> i32 {
                             pod: i,
                             node: i as u64,
                             ready: true,
-                            inflight: c.load(Ordering::Relaxed),
+                            // The handle only exposes an in-flight count;
+                            // admitted work is queued until its iteration.
+                            waiting: c.load(Ordering::Relaxed),
+                            running: 0,
+                            kv_pressure: 0.0,
                         })
                         .collect();
                     // Pool residency reads the pool's own µs clock (the
@@ -520,7 +528,13 @@ fn cmd_serve(args: &Args) -> i32 {
                     };
                     let p = r.select_with_ctx(&route_req, &snaps, &ctx).unwrap_or(0);
                     if session != 0 {
-                        v.note_route(session, p);
+                        if end_session {
+                            // Last turn: route it (stickiness applied via
+                            // the snapshot above), then free the slot.
+                            v.end_session(session);
+                        } else {
+                            v.note_route(session, p);
+                        }
                     }
                     inflight[p].fetch_add(1, Ordering::Relaxed);
                     p

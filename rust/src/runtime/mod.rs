@@ -354,6 +354,54 @@ impl DecodeOut {
     }
 }
 
+/// One row's slice of an iteration-level scheduler step
+/// ([`TinyLmRuntime::prefill_chunk`]): compute positions
+/// `s0..s0+tokens.len()` of cache row `row`. A decode step is the
+/// degenerate chunk (`s0 = pos`, one token); a chunked prefill is a
+/// sequence of these over the prompt. Both ride the same
+/// [`TinyLmRuntime::forward_row`] body, so any chunking of a prompt is
+/// bit-identical to the one-shot prefill (the decode == re-prefill
+/// contract, generalized to arbitrary split points).
+#[derive(Debug, Clone, Copy)]
+pub struct RowChunk<'a> {
+    /// Cache row this chunk occupies (rows are independent).
+    pub row: usize,
+    /// Absolute position of `tokens[0]` in the row's sequence.
+    pub s0: usize,
+    /// Token ids occupying positions `s0..s0+len` (embedded + forwarded).
+    pub tokens: &'a [i32],
+    /// Fetched KV prefix to install first (requires `s0 == seed.len`):
+    /// the pool-seeded fast path for the chunk that resumes a row.
+    pub seed: Option<SeededPrefix<'a>>,
+    /// Project logits at this chunk's last position (the scheduler
+    /// samples from them). Mid-prompt prefill chunks skip the vocab
+    /// projection entirely.
+    pub emit_logits: bool,
+    /// Telemetry attribution: true for single-token decode steps, false
+    /// for prefill chunks (drives the prefill/decode counter split).
+    pub decode: bool,
+}
+
+/// Output of one [`TinyLmRuntime::prefill_chunk`] iteration.
+pub struct ChunkOut {
+    /// [B][V] logits; only rows whose chunk set `emit_logits` are
+    /// written (others stay zero).
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+    pub k: DeviceTensor,
+    pub v: DeviceTensor,
+}
+
+impl ChunkOut {
+    pub fn logits_of(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+
+    pub fn argmax_of(&self, b: usize) -> u32 {
+        argmax(self.logits_of(b))
+    }
+}
+
 /// One weight GEMM of the forward pass, dispatched to the active tier:
 /// int8 when the quantized twin is present, else the bit-exact f32 kernel.
 /// `panel` is the workspace's dequantization scratch (unused on f32).
@@ -1335,6 +1383,200 @@ impl TinyLmRuntime {
         Ok(DecodeOut { logits, vocab: cfg.vocab, k: k_cache, v: v_cache })
     }
 
+    /// One iteration of an event-driven scheduler: a heterogeneous set of
+    /// [`RowChunk`]s — some rows advancing a chunked prefill, some taking a
+    /// single decode step — computed in one parallel sweep over a shared
+    /// persistent cache pair. This is the continuous-batching entry point:
+    /// unlike [`TinyLmRuntime::prefill`], the caches are caller-owned and
+    /// span the scheduler's whole slot array, rows join/leave between
+    /// iterations, and only the positions named by the chunks are touched.
+    ///
+    /// Exactness: each chunk runs the same [`TinyLmRuntime::forward_row`]
+    /// body prefill and decode use, and every K/V entry is a deterministic
+    /// function of the tokens at positions `<=` its own — so any chunking
+    /// of a prompt (including resuming after preemption) is bit-identical
+    /// to the one-shot prefill, and rows never observe each other.
+    ///
+    /// Requires the decode artifact for `batch` (iteration steps ride the
+    /// persistent decode-shaped caches, `[L, batch, max_seq, H, Dh]`).
+    /// Rows may appear at most once per call; a chunk's `seed` installs a
+    /// fetched KV prefix and requires `s0 == seed.len`.
+    pub fn prefill_chunk(
+        &self,
+        batch: usize,
+        chunks: &[RowChunk<'_>],
+        k: DeviceTensor,
+        v: DeviceTensor,
+    ) -> Result<ChunkOut> {
+        let t_start = Instant::now();
+        if !self.decode.contains(&batch) {
+            return Err(Error::msg(format!("no decode artifact for batch {batch}")));
+        }
+        if chunks.is_empty() {
+            return Err(Error::msg("prefill_chunk called with no chunks"));
+        }
+        let cfg = &self.cfg;
+        let (h, hd, dm) = (cfg.n_heads, cfg.head_dim, cfg.d_model);
+        if k.dims != [cfg.n_layers, batch, cfg.max_seq, h, hd] {
+            return Err(Error::msg(format!("k cache dims {:?} unexpected", k.dims)));
+        }
+        if v.dims != k.dims {
+            return Err(Error::msg(format!("v cache dims {:?} != k dims {:?}", v.dims, k.dims)));
+        }
+        // Validate every chunk before touching any cache slab: a token
+        // error must never leave a partially-written row.
+        let mut seen = vec![false; batch];
+        for c in chunks {
+            if c.row >= batch {
+                return Err(Error::msg(format!("chunk row {} outside batch {batch}", c.row)));
+            }
+            if seen[c.row] {
+                return Err(Error::msg(format!("row {} appears in two chunks", c.row)));
+            }
+            seen[c.row] = true;
+            if c.tokens.is_empty() {
+                return Err(Error::msg(format!("empty chunk for row {}", c.row)));
+            }
+            if c.s0 + c.tokens.len() > cfg.max_seq {
+                return Err(Error::msg(format!(
+                    "chunk [{}..{}) of row {} beyond cache {}",
+                    c.s0,
+                    c.s0 + c.tokens.len(),
+                    c.row,
+                    cfg.max_seq
+                )));
+            }
+            if let Some(&bad) = c.tokens.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+                return Err(Error::msg(format!(
+                    "token id {bad} in row {} chunk outside vocab {}",
+                    c.row, cfg.vocab
+                )));
+            }
+            if let Some(sp) = &c.seed {
+                if sp.len > 0 {
+                    if c.s0 != sp.len {
+                        return Err(Error::msg(format!(
+                            "seed covers {} positions but chunk starts at {} — a seeded \
+                             chunk must resume exactly where the installed prefix ends",
+                            sp.len, c.s0
+                        )));
+                    }
+                    let want = cfg.n_layers * sp.len * dm;
+                    if sp.k.len() != want || sp.v.len() != want {
+                        return Err(Error::msg(format!(
+                            "seed slab for row {} has {}/{} floats, want {want} per side",
+                            c.row,
+                            sp.k.len(),
+                            sp.v.len()
+                        )));
+                    }
+                }
+            }
+        }
+        let mut k_cache = k;
+        let mut v_cache = v;
+        let mut logits = vec![0.0f32; batch * cfg.vocab];
+        // Prefix-sum residual offsets: chunk i owns xs[offs[i] .. offs[i] +
+        // len_i*dm].
+        let mut offs = Vec::with_capacity(chunks.len());
+        let mut total = 0usize;
+        for c in chunks {
+            offs.push(total * dm);
+            total += c.tokens.len();
+        }
+        let mut xs = self.lease_buf(total * dm);
+
+        self.chunk_forward(batch, chunks, &offs, &mut xs, &mut k_cache.data, &mut v_cache.data);
+
+        // Logits only where the scheduler samples: each emitting chunk's
+        // last position, written to its row's [V] slot.
+        let jobs: Vec<(usize, usize)> = chunks
+            .iter()
+            .zip(&offs)
+            .filter(|(c, _)| c.emit_logits)
+            .map(|(c, &off)| (off + (c.tokens.len() - 1) * dm, c.row * cfg.vocab))
+            .collect();
+        self.logits_stage(&xs, &jobs, &mut logits);
+        self.return_buf(xs);
+        self.bump_quant_counters(chunks.len() as u64, jobs.len() as u64);
+
+        // Telemetry: attribute decode chunks and prefill chunks to their
+        // own counter families so tok/s and hit-rate math stay meaningful
+        // under interleaving.
+        let dec_toks: u64 = chunks.iter().filter(|c| c.decode).map(|c| c.tokens.len() as u64).sum();
+        let pre_toks: u64 = chunks.iter().filter(|c| !c.decode).map(|c| c.tokens.len() as u64).sum();
+        let seeded_rows =
+            chunks.iter().filter(|c| c.seed.map(|s| s.len > 0).unwrap_or(false)).count() as u64;
+        let seeded_toks: u64 = chunks.iter().filter_map(|c| c.seed).map(|s| s.len as u64).sum();
+        let elapsed = t_start.elapsed().as_micros() as u64;
+        if pre_toks > 0 {
+            self.counters.prefill_calls.fetch_add(1, Ordering::Relaxed);
+            self.counters.prefill_tokens.fetch_add(pre_toks, Ordering::Relaxed);
+            // Mixed iterations bill wall time to prefill (it dominates).
+            self.counters.prefill_us.fetch_add(elapsed, Ordering::Relaxed);
+        }
+        if dec_toks > 0 {
+            self.counters.decode_calls.fetch_add(1, Ordering::Relaxed);
+            self.counters.decode_tokens.fetch_add(dec_toks, Ordering::Relaxed);
+            if pre_toks == 0 {
+                self.counters.decode_us.fetch_add(elapsed, Ordering::Relaxed);
+            }
+        }
+        if seeded_rows > 0 {
+            self.counters.seeded_prefill_rows.fetch_add(seeded_rows, Ordering::Relaxed);
+            self.counters.seeded_prefill_tokens.fetch_add(seeded_toks, Ordering::Relaxed);
+        }
+        Ok(ChunkOut { logits, vocab: cfg.vocab, k: k_cache, v: v_cache })
+    }
+
+    /// Compute stage of [`TinyLmRuntime::prefill_chunk`]: install seeds,
+    /// embed, and forward every chunk in parallel. Split out from the
+    /// validation/allocation prologue so the per-iteration loop stays
+    /// allocation-free.
+    // lint:hot_path
+    fn chunk_forward(
+        &self,
+        batch: usize,
+        chunks: &[RowChunk<'_>],
+        offs: &[usize],
+        xs: &mut [f32],
+        k_cache: &mut [f32],
+        v_cache: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let dm = cfg.d_model;
+        let k_raw = RawSlice::new(k_cache);
+        let v_raw = RawSlice::new(v_cache);
+        let xs_raw = RawSlice::new(xs);
+        let embed = &self.params.embed.data;
+        kernels::par_for(chunks.len(), self.threads.min(chunks.len()), |i| {
+            let c = &chunks[i];
+            let mut ws = self.lease_ws();
+            if let Some(sp) = c.seed {
+                if sp.len > 0 {
+                    // Fetched prefix first, by memcpy — same s0/s_len
+                    // resume contract the seeded prefill path exercises.
+                    kernels::install_kv(
+                        sp.k, &k_raw, cfg.n_layers, batch, c.row, cfg.max_seq, dm, sp.len,
+                    );
+                    kernels::install_kv(
+                        sp.v, &v_raw, cfg.n_layers, batch, c.row, cfg.max_seq, dm, sp.len,
+                    );
+                }
+            }
+            let s_len = c.tokens.len();
+            // SAFETY: per-chunk residual regions are disjoint (prefix-sum
+            // offsets), and each row appears in at most one chunk.
+            let x = unsafe { xs_raw.range_mut(offs[i], s_len * dm) };
+            for (s, &t) in c.tokens.iter().enumerate() {
+                let tok = t as usize;
+                x[s * dm..(s + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
+            }
+            self.forward_row(batch, c.row, c.s0, s_len, x, &k_raw, &v_raw, &mut ws);
+            self.return_ws(ws);
+        });
+    }
+
     /// Greedy-generate `steps` tokens for a batch of prompts (lengths may
     /// differ; prompts are padded to the prefill S). Returns per-row
     /// generated token ids. The workhorse of `RealEngine` / serve_e2e.
@@ -1616,6 +1858,236 @@ mod tests {
         assert!(rt
             .prefill_last_seeded(1, &tokens, &[7], None, &[])
             .is_err());
+    }
+
+    /// Fresh decode-shaped cache pair for chunked-iteration tests.
+    fn sched_caches(rt: &TinyLmRuntime, batch: usize) -> (Tensor, Tensor) {
+        let c = &rt.cfg;
+        let dims = vec![c.n_layers, batch, c.max_seq, c.n_heads, c.head_dim];
+        (Tensor::zeros(dims.clone()), Tensor::zeros(dims))
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        // Any split of a prompt into chunks must reproduce the one-shot
+        // prefill bit for bit: logits at the last position AND every
+        // computed cache entry.
+        let rt = toy_runtime();
+        let prompt = [3i32, 8, 2, 1, 7, 5, 9];
+        let mut padded = prompt.to_vec();
+        padded.resize(8, 0);
+        let one_shot = rt.prefill_last(1, &padded, &[6], None).unwrap();
+        for split in [1usize, 3, 6] {
+            let (k, v) = sched_caches(&rt, 1);
+            let first = [RowChunk {
+                row: 0,
+                s0: 0,
+                tokens: &prompt[..split],
+                seed: None,
+                emit_logits: false,
+                decode: false,
+            }];
+            let mid = rt.prefill_chunk(1, &first, k, v).unwrap();
+            let second = [RowChunk {
+                row: 0,
+                s0: split,
+                tokens: &prompt[split..],
+                seed: None,
+                emit_logits: true,
+                decode: false,
+            }];
+            let out = rt.prefill_chunk(1, &second, mid.k, mid.v).unwrap();
+            assert!(
+                out.logits_of(0)
+                    .iter()
+                    .zip(one_shot.logits_of(0))
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "split {split}: chunked logits diverge from one-shot"
+            );
+            // Cache prefix (the one-shot run also computed padding
+            // positions past the prompt; compare only what both wrote).
+            let dm = rt.cfg.d_model;
+            for layer in 0..rt.cfg.n_layers {
+                let base = layer * rt.cfg.max_seq * dm;
+                let n = prompt.len() * dm;
+                assert!(
+                    out.k.data[base..base + n]
+                        .iter()
+                        .zip(&one_shot.k.data[base..base + n])
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "split {split}: layer {layer} K cache diverges"
+                );
+                assert!(
+                    out.v.data[base..base + n]
+                        .iter()
+                        .zip(&one_shot.v.data[base..base + n])
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "split {split}: layer {layer} V cache diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_decode_chain_matches_generate() {
+        // Chunked prefill followed by single-token decode chunks must
+        // reproduce the lockstep generate() tokens exactly.
+        let rt = toy_runtime();
+        let prompt = vec![5u32, 6, 7, 1, 2];
+        let reference = rt.generate(&[prompt.clone()].to_vec(), 3).unwrap();
+        let toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        let (k, v) = sched_caches(&rt, 1);
+        let c1 = [RowChunk {
+            row: 0,
+            s0: 0,
+            tokens: &toks[..2],
+            seed: None,
+            emit_logits: false,
+            decode: false,
+        }];
+        let o1 = rt.prefill_chunk(1, &c1, k, v).unwrap();
+        let c2 = [RowChunk {
+            row: 0,
+            s0: 2,
+            tokens: &toks[2..],
+            seed: None,
+            emit_logits: true,
+            decode: false,
+        }];
+        let o2 = rt.prefill_chunk(1, &c2, o1.k, o1.v).unwrap();
+        let mut got = vec![o2.argmax_of(0)];
+        let (mut k, mut v) = (o2.k, o2.v);
+        for step in 0..2usize {
+            let cur = [got[got.len() - 1] as i32];
+            let c = [RowChunk {
+                row: 0,
+                s0: prompt.len() + step,
+                tokens: &cur,
+                seed: None,
+                emit_logits: true,
+                decode: true,
+            }];
+            let o = rt.prefill_chunk(1, &c, k, v).unwrap();
+            got.push(o.argmax_of(0));
+            k = o.k;
+            v = o.v;
+        }
+        assert_eq!(got, reference[0], "chunk+decode chain diverges from generate");
+        let s = rt.stats();
+        assert!(s.decode_tokens >= 2, "decode chunks must bill the decode counters");
+    }
+
+    #[test]
+    fn mixed_prefill_decode_rows_are_independent() {
+        // One iteration mixing a decode row and a prefill row must leave
+        // both rows bit-identical to their solo runs — the continuous
+        // batching contract.
+        let rt = toy_runtime();
+        let a = vec![5u32, 6, 7];
+        let b = [9i32, 1, 4, 4, 7, 2];
+        let solo_a = rt.generate(&[a.clone()].to_vec(), 3).unwrap();
+        let mut padded_b = b.to_vec();
+        padded_b.resize(8, 0);
+        let solo_b = rt.prefill_last(1, &padded_b, &[b.len() - 1], None).unwrap();
+
+        let toks_a: Vec<i32> = a.iter().map(|&t| t as i32).collect();
+        let (k, v) = sched_caches(&rt, 2);
+        // Iteration 1: row 0 finishes its prompt; row 1 starts a chunk.
+        let it1 = [
+            RowChunk { row: 0, s0: 0, tokens: &toks_a, seed: None, emit_logits: true, decode: false },
+            RowChunk { row: 1, s0: 0, tokens: &b[..3], seed: None, emit_logits: false, decode: false },
+        ];
+        let o1 = rt.prefill_chunk(2, &it1, k, v).unwrap();
+        let g0 = o1.argmax_of(0);
+        // Iteration 2: row 0 decodes while row 1 finishes prefilling.
+        let cur = [g0 as i32];
+        let it2 = [
+            RowChunk { row: 0, s0: 3, tokens: &cur, seed: None, emit_logits: true, decode: true },
+            RowChunk { row: 1, s0: 3, tokens: &b[3..], seed: None, emit_logits: true, decode: false },
+        ];
+        let o2 = rt.prefill_chunk(2, &it2, o1.k, o1.v).unwrap();
+        assert_eq!(g0, solo_a[0][0]);
+        assert_eq!(o2.argmax_of(0), solo_a[0][1], "decode row disturbed by prefill neighbor");
+        assert!(
+            o2.logits_of(1)
+                .iter()
+                .zip(solo_b.logits_of(0))
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "prefill row disturbed by decode neighbor"
+        );
+    }
+
+    #[test]
+    fn seeded_chunk_matches_cold_chunk() {
+        // Resuming a row from a pool-fetched KV prefix (the preemption /
+        // staging path) must be bit-identical to computing it cold.
+        let rt = toy_runtime();
+        let prompt = [3i32, 8, 2, 1, 7, 5, 9];
+        let (k, v) = sched_caches(&rt, 1);
+        let cold_chunks = [RowChunk {
+            row: 0,
+            s0: 0,
+            tokens: &prompt,
+            seed: None,
+            emit_logits: true,
+            decode: false,
+        }];
+        let cold = rt.prefill_chunk(1, &cold_chunks, k, v).unwrap();
+        let (ks, vs) = (seed_slab(&cold.k, &rt.cfg, 1, 0, 4), seed_slab(&cold.v, &rt.cfg, 1, 0, 4));
+        let (k2, v2) = sched_caches(&rt, 1);
+        let warm_chunks = [RowChunk {
+            row: 0,
+            s0: 4,
+            tokens: &prompt[4..],
+            seed: Some(SeededPrefix { len: 4, k: &ks, v: &vs }),
+            emit_logits: true,
+            decode: false,
+        }];
+        let warm = rt.prefill_chunk(1, &warm_chunks, k2, v2).unwrap();
+        assert!(
+            warm.logits_of(0).iter().zip(cold.logits_of(0)).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "seeded chunk diverges from cold chunk"
+        );
+        assert!(warm.k.data.iter().zip(&cold.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let s = rt.stats();
+        assert_eq!(s.seeded_prefill_rows, 1);
+        assert_eq!(s.seeded_prefill_tokens, 4);
+    }
+
+    #[test]
+    fn chunk_error_paths() {
+        let rt = toy_runtime();
+        const TOKS: [i32; 2] = [1, 2];
+        fn mk(row: usize, s0: usize, seed: Option<SeededPrefix<'_>>) -> RowChunk<'_> {
+            RowChunk { row, s0, tokens: &TOKS, seed, emit_logits: true, decode: false }
+        }
+        let run = |chunks: &[RowChunk<'_>]| {
+            let (k, v) = sched_caches(&rt, 2);
+            rt.prefill_chunk(2, chunks, k, v)
+        };
+        // No decode artifact for batch 3.
+        let (k3, v3) = sched_caches(&rt, 3);
+        assert!(rt.prefill_chunk(3, &[mk(0, 0, None)], k3, v3).is_err());
+        // Empty chunk list, row out of range, duplicate row, chunk past
+        // the cache end, out-of-vocab token, seed/s0 mismatch.
+        assert!(run(&[]).is_err());
+        assert!(run(&[mk(2, 0, None)]).is_err());
+        assert!(run(&[mk(0, 0, None), mk(0, 2, None)]).is_err());
+        assert!(run(&[mk(0, 11, None)]).is_err());
+        let bad_tok = [99i32];
+        assert!(run(&[RowChunk {
+            row: 0,
+            s0: 0,
+            tokens: &bad_tok,
+            seed: None,
+            emit_logits: true,
+            decode: false,
+        }])
+        .is_err());
+        let slab = vec![0.0f32; rt.cfg.n_layers * 4 * rt.cfg.d_model];
+        assert!(run(&[mk(0, 2, Some(SeededPrefix { len: 4, k: &slab, v: &slab }))]).is_err());
+        // And the happy path still works on the same runtime.
+        assert!(run(&[mk(0, 0, None)]).is_ok());
     }
 
     #[test]

@@ -113,6 +113,9 @@ impl Workload for BirdSqlWorkload {
             model: self.cfg.model.clone(),
             adapter: None,
             user: (id % 16) as u32,
+            // Schema "sessions" are long-lived across the whole trace, so
+            // affinity slots are only ever reclaimed by the TTL sweep.
+            end_session: false,
         })
     }
 }

@@ -35,6 +35,10 @@ pub struct Request {
     /// Generator-side knowledge of the shared-prefix length (analysis only —
     /// the serving path never reads this).
     pub shared_prefix_len: usize,
+    /// Final turn of `session`: after routing, the gateway frees the
+    /// session's sticky slot eagerly instead of letting it idle to the
+    /// TTL or capacity eviction. Meaningless when `session == 0`.
+    pub end_session: bool,
 }
 
 impl Request {
@@ -69,6 +73,7 @@ mod tests {
             adapter: None,
             user: 0,
             shared_prefix_len: 2,
+            end_session: false,
         };
         assert_eq!(r.prompt_len(), 3);
         assert_eq!(r.total_tokens(), 8);

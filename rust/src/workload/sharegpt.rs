@@ -134,7 +134,7 @@ impl Workload for ShareGptWorkload {
             None
         };
 
-        let req = Request {
+        let mut req = Request {
             id,
             session: session.id,
             tokens: session.history.clone(),
@@ -144,6 +144,7 @@ impl Workload for ShareGptWorkload {
             adapter,
             user: session.user,
             shared_prefix_len: shared,
+            end_session: false,
         };
 
         // Assistant reply becomes part of the session history.
@@ -153,6 +154,11 @@ impl Workload for ShareGptWorkload {
         session.turns_left -= 1;
         if session.turns_left > 0 && session.history.len() < 6_000 {
             self.sessions.push(session);
+        } else {
+            // Final turn of the conversation: flag it so the gateway can
+            // free the sticky-session slot eagerly instead of waiting for
+            // the TTL sweep.
+            req.end_session = true;
         }
         Some(req)
     }
@@ -186,6 +192,21 @@ mod tests {
         assert!(b.tokens.len() > a.tokens.len());
         assert_eq!(&b.tokens[..a.tokens.len() + a.output_len - a.output_len], &a.tokens[..]);
         assert_eq!(b.shared_prefix_len, a.tokens.len() + a.output_len);
+    }
+
+    #[test]
+    fn end_session_marks_final_turn_only() {
+        let reqs = drain(ShareGptConfig { n_requests: 400, ..Default::default() });
+        assert!(reqs.iter().any(|r| r.end_session), "no session ever ended");
+        for (i, r) in reqs.iter().enumerate() {
+            if r.end_session {
+                assert!(
+                    reqs[i + 1..].iter().all(|later| later.session != r.session),
+                    "session {} emitted another turn after end_session",
+                    r.session
+                );
+            }
+        }
     }
 
     #[test]

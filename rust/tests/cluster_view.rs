@@ -28,6 +28,7 @@ fn req(tokens: Vec<u32>, session: u64) -> Request {
         adapter: None,
         user: 0,
         shared_prefix_len: 0,
+        end_session: false,
     }
 }
 
@@ -224,7 +225,14 @@ fn prop_pool_residency_matches_metadata() {
             let mut view = ClusterView::new(ClusterViewConfig::default());
             let r = req(tokens.clone(), 0);
             let mut pods: Vec<CounterPod> = (0..3)
-                .map(|i| CounterPod { pod: i, node: i as u64, ready: true, inflight: 0 })
+                .map(|i| CounterPod {
+                    pod: i,
+                    node: i as u64,
+                    ready: true,
+                    waiting: 0,
+                    running: 0,
+                    kv_pressure: 0.0,
+                })
                 .collect();
             let snaps = view.snapshot(*now, &r, &mut pods, Some(&pool));
             for (i, snap) in snaps.iter().enumerate() {

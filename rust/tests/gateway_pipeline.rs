@@ -23,6 +23,7 @@ fn req() -> Request {
         adapter: None,
         user: 0,
         shared_prefix_len: 0,
+        end_session: false,
     }
 }
 

@@ -25,6 +25,7 @@ fn req(id: u64, prompt: usize, out: usize) -> Request {
         adapter: None,
         user: (id % 4) as u32,
         shared_prefix_len: 0,
+        end_session: false,
     }
 }
 

@@ -247,6 +247,7 @@ fn prop_router_totality() {
                 adapter: None,
                 user: 0,
                 shared_prefix_len: 0,
+                end_session: false,
             };
             let pick1 = Router::new(policy, *seed).select(&req, &snaps);
             let pick2 = Router::new(policy, *seed).select(&req, &snaps);
@@ -297,6 +298,7 @@ fn prop_fair_queue_conservation() {
                     adapter: None,
                     user,
                     shared_prefix_len: 0,
+                    end_session: false,
                 });
             }
             let mut seen = std::collections::BTreeSet::new();
@@ -392,6 +394,7 @@ fn prop_engine_liveness_and_no_leaks() {
                     adapter: None,
                     user: 0,
                     shared_prefix_len: 0,
+                    end_session: false,
                 });
             }
             let mut now = 0;
@@ -688,8 +691,27 @@ fn prop_chaos_request_conservation() {
     use aibrix::engine::ModelSpec;
     use aibrix::harness::{run, HarnessConfig};
     use aibrix::kvcache::KvPoolConfig;
-    use aibrix::workload::{ArrivalProcess, BirdSqlConfig, BirdSqlWorkload};
+    use aibrix::sim::SimTime;
+    use aibrix::workload::{ArrivalProcess, BirdSqlConfig, BirdSqlWorkload, Workload};
     use std::collections::HashSet;
+
+    /// Randomly flags requests as a session's final turn: `end_session`
+    /// frees the sticky-affinity slot on both the dispatch and the
+    /// post-fault re-dispatch paths, and conservation must not care.
+    struct EndSessionChaos {
+        inner: BirdSqlWorkload,
+        rng: Rng,
+    }
+
+    impl Workload for EndSessionChaos {
+        fn next(&mut self, now: SimTime) -> Option<Request> {
+            let mut r = self.inner.next(now)?;
+            if r.session != 0 && self.rng.chance(0.3) {
+                r.end_session = true;
+            }
+            Some(r)
+        }
+    }
 
     forall(
         "chaos-request-conservation",
@@ -732,13 +754,16 @@ fn prop_chaos_request_conservation() {
                 chaos: Some(ChaosSchedule::from_seed(seed, pods, &nodes, 2_000_000)),
                 recovery: Default::default(),
             };
-            let mut w = BirdSqlWorkload::new(BirdSqlConfig {
-                n_requests: n,
-                n_schemas: 4,
-                schema_tokens_mean: 300,
-                question_tokens_mean: 80,
-                ..Default::default()
-            });
+            let mut w = EndSessionChaos {
+                inner: BirdSqlWorkload::new(BirdSqlConfig {
+                    n_requests: n,
+                    n_schemas: 4,
+                    schema_tokens_mean: 300,
+                    question_tokens_mean: 80,
+                    ..Default::default()
+                }),
+                rng: Rng::new(seed ^ 0xE5D),
+            };
             let r = run(cfg, &mut w);
             if r.completions.len() + r.rejections.len() != n {
                 return Err(format!(
@@ -760,6 +785,206 @@ fn prop_chaos_request_conservation() {
                 if !seen.insert(id) {
                     return Err(format!("request {id} has two terminal outcomes"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------- continuous batching
+
+/// Scheduling is invisible in the outputs: whatever chunk budget, KV
+/// budget (tight enough to preempt) and arrival interleaving the
+/// continuous-batching scheduler runs under, every request's generated
+/// tokens are bit-identical to the lockstep engine serving the same
+/// trace (DESIGN.md bit-exactness contract, ISSUE 8).
+#[test]
+fn prop_sched_engine_matches_lockstep() {
+    use aibrix::engine::real::{RealEngine, RealRequest};
+    use aibrix::engine::{SchedConfig, SchedEngine};
+    use aibrix::runtime::{ModelCfg, SyntheticSpec, TinyLmRuntime};
+
+    // Tiny model: lockstep window 40, decode budget 48-40 = 8. Prompts
+    // and decode targets stay under those caps so the lockstep engine
+    // never truncates and per-request outputs are comparable.
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 8,
+                max_seq: 48,
+                page_size: 8,
+            },
+            d_ff: 32,
+            prefill: vec![(1, 40), (2, 40)],
+            decode: vec![1, 2],
+            seed: 5,
+        }
+    }
+
+    forall(
+        "sched-vs-lockstep",
+        20, // each case runs two real engines — keep the count tight
+        |rng, _| {
+            let n = 1 + gen::usize_up_to(rng, 5);
+            let reqs: Vec<(usize, usize)> = (0..n)
+                .map(|_| (1 + gen::usize_up_to(rng, 39), 1 + gen::usize_up_to(rng, 7)))
+                .collect();
+            let chunk = 1 + gen::usize_up_to(rng, 47);
+            // Down to the clamp floor (one row's worth): tight cases
+            // exercise preemption + lossless re-prefill.
+            let budget = 48 + gen::usize_up_to(rng, 96);
+            (reqs, chunk, budget)
+        },
+        |(reqs, chunk, budget)| {
+            let mk = |i: usize, &(prompt, max_new): &(usize, usize)| RealRequest {
+                id: i as u64,
+                tokens: (0..prompt).map(|s| ((i * 31 + s * 7 + 3) % 32) as u32).collect(),
+                max_new_tokens: max_new,
+            };
+            let mut lock = RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), None)
+                .map_err(|e| e.to_string())?;
+            for (i, r) in reqs.iter().enumerate() {
+                lock.enqueue(mk(i, r));
+            }
+            lock.run_to_drain().map_err(|e| e.to_string())?;
+
+            let rt = TinyLmRuntime::synthetic(&spec());
+            let cfg = SchedConfig { chunk_tokens: *chunk, kv_token_budget: *budget };
+            let mut sched =
+                SchedEngine::with_config(rt, None, cfg).map_err(|e| e.to_string())?;
+            for (i, r) in reqs.iter().enumerate() {
+                sched.enqueue(mk(i, r));
+            }
+            sched.run_to_drain().map_err(|e| e.to_string())?;
+
+            if sched.completions.len() != reqs.len() {
+                return Err(format!(
+                    "scheduler completed {} of {}",
+                    sched.completions.len(),
+                    reqs.len()
+                ));
+            }
+            let by_id = |cs: &[aibrix::engine::real::RealCompletion]| {
+                let mut v: Vec<(u64, Vec<u32>)> =
+                    cs.iter().map(|c| (c.id, c.generated.clone())).collect();
+                v.sort();
+                v
+            };
+            if by_id(&lock.completions) != by_id(&sched.completions) {
+                return Err(format!(
+                    "outputs diverged (chunk={chunk}, budget={budget})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Conservation through an engine fault, scheduler edition: fail the
+/// engine at an arbitrary iteration and every enqueued request is either
+/// already completed or comes back out of `fail_and_drain` (waiting queue
+/// AND in-flight slots) exactly once — and a healthy peer re-serving the
+/// drained requests reproduces the fault-free outputs bit for bit.
+#[test]
+fn prop_sched_chaos_conservation() {
+    use aibrix::engine::real::{RealEngine, RealRequest};
+    use aibrix::engine::SchedEngine;
+    use aibrix::runtime::{ModelCfg, SyntheticSpec, TinyLmRuntime};
+    use std::collections::BTreeMap;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            cfg: ModelCfg {
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 8,
+                max_seq: 48,
+                page_size: 8,
+            },
+            d_ff: 32,
+            prefill: vec![(1, 40), (2, 40)],
+            decode: vec![1, 2],
+            seed: 5,
+        }
+    }
+
+    forall(
+        "sched-chaos-conservation",
+        15,
+        |rng, _| {
+            let n = 2 + gen::usize_up_to(rng, 5);
+            let reqs: Vec<(usize, usize)> = (0..n)
+                .map(|_| (1 + gen::usize_up_to(rng, 39), 1 + gen::usize_up_to(rng, 7)))
+                .collect();
+            let fault_tick = gen::usize_up_to(rng, 20);
+            (reqs, fault_tick)
+        },
+        |(reqs, fault_tick)| {
+            let mk = |i: usize, &(prompt, max_new): &(usize, usize)| RealRequest {
+                id: i as u64,
+                tokens: (0..prompt).map(|s| ((i * 31 + s * 7 + 3) % 32) as u32).collect(),
+                max_new_tokens: max_new,
+            };
+            // Fault-free reference (lockstep keeps the two engine cores
+            // honest against each other here too).
+            let mut reference =
+                RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), None)
+                    .map_err(|e| e.to_string())?;
+            for (i, r) in reqs.iter().enumerate() {
+                reference.enqueue(mk(i, r));
+            }
+            reference.run_to_drain().map_err(|e| e.to_string())?;
+            let want: BTreeMap<u64, Vec<u32>> = reference
+                .completions
+                .iter()
+                .map(|c| (c.id, c.generated.clone()))
+                .collect();
+
+            let mut victim =
+                SchedEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), None)
+                    .map_err(|e| e.to_string())?;
+            for (i, r) in reqs.iter().enumerate() {
+                victim.enqueue(mk(i, r));
+            }
+            for _ in 0..*fault_tick {
+                if victim.pending() == 0 {
+                    break;
+                }
+                victim.tick().map_err(|e| e.to_string())?;
+            }
+            let drained = victim.fail_and_drain();
+            if victim.completions.len() + drained.len() != reqs.len() {
+                return Err(format!(
+                    "leak at tick {fault_tick}: {} done + {} drained != {}",
+                    victim.completions.len(),
+                    drained.len(),
+                    reqs.len()
+                ));
+            }
+
+            let mut peer =
+                SchedEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), None)
+                    .map_err(|e| e.to_string())?;
+            for r in drained {
+                peer.enqueue(r);
+            }
+            peer.run_to_drain().map_err(|e| e.to_string())?;
+            let mut got: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+            for c in victim.completions.iter().chain(peer.completions.iter()) {
+                if got.insert(c.id, c.generated.clone()).is_some() {
+                    return Err(format!("request {} completed twice", c.id));
+                }
+            }
+            if got != want {
+                return Err(format!(
+                    "recovered outputs diverge from fault-free run at tick {fault_tick}"
+                ));
             }
             Ok(())
         },

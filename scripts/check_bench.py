@@ -6,6 +6,7 @@ Usage:
     python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
     python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
     python3 scripts/check_bench.py --chaos BENCH_chaos_e2e.json
+    python3 scripts/check_bench.py --sched BENCH_engine_sched_e2e.json
     python3 scripts/check_bench.py --lint lint_report.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
@@ -25,6 +26,10 @@ Usage:
   requests, outputs bit-identical to the fault-free run, a positive
   detect-to-cordon latency, stranded requests recovered, and P99 latency
   degradation within the report's own target).
+- --sched: validate an engine_sched_e2e report — within-run gates only
+  (the continuous-batching scheduler strictly beats the lockstep engine
+  on served tok/s and P99 TTFT, outputs bit-identical, and the tight-KV
+  leg actually preempted while staying bit-identical).
 - --lint: validate an `aibrix_lint --json` report — schema (version 1,
   files_scanned, findings, suppressions), zero findings, and every
   suppression carrying a non-empty reason. This is the CI hard gate for
@@ -187,6 +192,51 @@ def check_chaos(path):
     return 0
 
 
+def check_sched(path):
+    """Within-run validation of an engine_sched_e2e report (ISSUE 8
+    acceptance: the continuous-batching scheduler strictly beats the
+    lockstep engine on served tok/s AND P99 TTFT on the same bursty
+    trace, per-request outputs bit-identical, and the tight-KV-budget
+    leg preempts at least once without changing a bit)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read sched report {path}: {e}")
+        return 2
+    lock = tokens_per_s(doc, "lockstep")
+    sched = tokens_per_s(doc, "sched")
+    derived = doc.get("derived", {})
+    speedup = derived.get("sched_speedup")
+    ttft = derived.get("ttft_improvement")
+    identical = derived.get("outputs_bit_identical")
+    tight_identical = derived.get("tight_outputs_bit_identical")
+    preemptions = derived.get("tight_preemptions")
+    if None in (lock, sched, speedup, ttft, identical, tight_identical, preemptions):
+        print(f"check_bench: {path} is missing sched rows/derived values")
+        return 2
+    print(f"check_bench: sched {sched:.0f} vs lockstep {lock:.0f} served tok/s "
+          f"(speedup {speedup:.2f}x, p99 TTFT improvement {ttft:.2f}x, "
+          f"{int(preemptions)} tight-leg preemptions)")
+    if identical is not True:
+        print("check_bench: FAIL — scheduler changed completions vs lockstep")
+        return 1
+    if tight_identical is not True:
+        print("check_bench: FAIL — preemption changed completions")
+        return 1
+    if speedup <= 1.0:
+        print("check_bench: FAIL — scheduler did not beat lockstep on served tok/s")
+        return 1
+    if ttft <= 1.0:
+        print("check_bench: FAIL — scheduler did not beat lockstep on p99 TTFT")
+        return 1
+    if preemptions <= 0:
+        print("check_bench: FAIL — tight-KV leg never preempted (gate is vacuous)")
+        return 1
+    print("check_bench: OK — sched within-run gates hold")
+    return 0
+
+
 def check_lint(path):
     """Validate an aibrix_lint --json report (ISSUE 6 acceptance: schema
     well-formed, zero findings, every suppression has a reason)."""
@@ -237,6 +287,7 @@ def main(argv):
     kvpool = None
     routing = None
     chaos = None
+    sched = None
     lint = None
     args = []
     i = 1
@@ -244,7 +295,7 @@ def main(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--lint"):
+        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--sched", "--lint"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -256,6 +307,8 @@ def main(argv):
                 kvpool = argv[i]
             elif a == "--chaos":
                 chaos = argv[i]
+            elif a == "--sched":
+                sched = argv[i]
             elif a == "--lint":
                 lint = argv[i]
             else:
@@ -267,8 +320,9 @@ def main(argv):
         else:
             args.append(a)
         i += 1
-    if sum(x is not None for x in (kvpool, routing, chaos, lint)) > 1:
-        print("check_bench: pass one of --kvpool/--routing/--chaos/--lint (run twice)")
+    if sum(x is not None for x in (kvpool, routing, chaos, sched, lint)) > 1:
+        print("check_bench: pass one of --kvpool/--routing/--chaos/--sched/--lint "
+              "(run twice)")
         print(__doc__)
         return 2
     if chaos is not None:
@@ -277,6 +331,12 @@ def main(argv):
             print(__doc__)
             return 2
         return check_chaos(chaos)
+    if sched is not None:
+        if args:
+            print("check_bench: --sched takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_sched(sched)
     if lint is not None:
         if args:
             print("check_bench: --lint takes no positional arguments")
