@@ -149,6 +149,8 @@ fn main() {
             user: 0,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: Default::default(),
         });
     }
     let mut now = 1_000_000u64;

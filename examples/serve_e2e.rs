@@ -97,7 +97,12 @@ fn main() -> aibrix::util::err::Result<()> {
             }
             let id = ids.fetch_add(1, Ordering::Relaxed) as u64;
             let replica = &replicas[rr.fetch_add(1, Ordering::Relaxed) % replicas.len()];
-            match replica.serve(RealRequest { id, tokens, max_new_tokens: max_tokens }) {
+            match replica.serve(RealRequest {
+                id,
+                tokens,
+                max_new_tokens: max_tokens,
+                ..Default::default()
+            }) {
                 Ok(c) => {
                     let out = Json::obj([
                         ("text", Json::from(tokenizer.decode(&c.generated))),

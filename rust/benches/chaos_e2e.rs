@@ -88,22 +88,28 @@ fn route_req(id: u64, session: u64, tokens: Vec<u32>) -> Request {
         user: 0,
         shared_prefix_len: 0,
         end_session: false,
+        deadline: None,
+        tier: aibrix::workload::Tier::Standard,
     }
 }
 
-fn pods_of(engines: &[SchedEngine]) -> Vec<CounterPod> {
+fn pods_of(engines: &mut [SchedEngine]) -> Vec<CounterPod> {
     engines
-        .iter()
+        .iter_mut()
         .enumerate()
         .map(|(i, e)| {
+            let failed = e.is_failed();
             let s = e.stats();
             CounterPod {
                 pod: i,
                 node: i as u64,
-                ready: !e.is_failed(),
+                ready: !failed,
                 waiting: s.waiting,
                 running: s.running,
                 kv_pressure: s.kv_utilization,
+                pressure: s.pressure,
+                slo_attainment: s.slo_attainment,
+                slo_samples: s.slo_samples,
             }
         })
         .collect()
@@ -147,7 +153,7 @@ fn run_trace(convs: usize, spec: &SyntheticSpec, chaos: bool) -> RunOut {
             let prompt: Vec<u32> = (0..(turn + 1) * BT).map(|s| conv_tok(c, s)).collect();
             let id = (c * TURNS + turn) as u64;
             let rr = route_req(id, c as u64 + 1, prompt.clone());
-            let mut pods = pods_of(&engines);
+            let mut pods = pods_of(&mut engines);
             let now = hook.clock_us();
             let snaps = {
                 let guard = pool.lock().unwrap();
@@ -156,7 +162,12 @@ fn run_trace(convs: usize, spec: &SyntheticSpec, chaos: bool) -> RunOut {
             };
             let pick = router.select(&rr, &snaps).expect("a healthy replica exists");
             view.note_route(rr.session, pick);
-            engines[pick].enqueue(RealRequest { id, tokens: prompt, max_new_tokens: MAX_NEW });
+            engines[pick].enqueue(RealRequest {
+                id,
+                tokens: prompt,
+                max_new_tokens: MAX_NEW,
+                ..Default::default()
+            });
         }
 
         if chaos && turn == FAULT_TURN {
@@ -176,7 +187,7 @@ fn run_trace(convs: usize, spec: &SyntheticSpec, chaos: bool) -> RunOut {
             // run the heartbeat sweep — the XidFatal verdict drains pod 0
             // and, with nothing in flight, the sweep cordons it.
             std::thread::sleep(Duration::from_millis(2));
-            let mut pods = pods_of(&engines);
+            let mut pods = pods_of(&mut engines);
             let now = hook.clock_us();
             for pod in 0..REPLICAS {
                 let tel = injector.sample(pod as u64, 0, now);
@@ -195,7 +206,7 @@ fn run_trace(convs: usize, spec: &SyntheticSpec, chaos: bool) -> RunOut {
             for r in stranded {
                 let c = r.id as usize / TURNS;
                 let rr = route_req(r.id, c as u64 + 1, r.tokens.clone());
-                let mut pods = pods_of(&engines);
+                let mut pods = pods_of(&mut engines);
                 let now = hook.clock_us();
                 let snaps = {
                     let guard = pool.lock().unwrap();

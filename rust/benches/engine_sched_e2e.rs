@@ -62,7 +62,7 @@ fn trace_req(i: usize) -> RealRequest {
     let prompt_len = 16 + (i * 13) % 49;
     let max_new = 2 + (i * 7) % 23;
     let tokens: Vec<u32> = (0..prompt_len).map(|s| ((i * 131 + s * 17 + 7) % 512) as u32).collect();
-    RealRequest { id: i as u64, tokens, max_new_tokens: max_new }
+    RealRequest { id: i as u64, tokens, max_new_tokens: max_new, ..Default::default() }
 }
 
 struct RunOut {

@@ -99,6 +99,7 @@ fn run_workload(with_pool: bool, convs: usize, spec: &SyntheticSpec) -> RunOut {
                 id: (c * TURNS + turn) as u64,
                 tokens: prompt,
                 max_new_tokens: MAX_NEW,
+                ..Default::default()
             });
         }
         for e in engines.iter_mut() {

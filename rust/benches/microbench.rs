@@ -56,6 +56,8 @@ fn request(tokens: usize) -> Request {
         user: 0,
         shared_prefix_len: 0,
         end_session: false,
+        deadline: None,
+        tier: Default::default(),
     }
 }
 
@@ -71,6 +73,7 @@ fn snapshots(n: usize) -> Vec<PodSnapshot> {
                 tokens_per_s: 1000.0 + i as f64,
                 avg_latency_us: 50_000.0 + (i as f64 * 1234.0) % 90_000.0,
                 prefix_hit_rate: 0.4,
+                ..Default::default()
             },
             prefix_match_blocks: i % 10,
             prompt_blocks: 100,

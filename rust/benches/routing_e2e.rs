@@ -122,9 +122,11 @@ fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
                 user: 0,
                 shared_prefix_len: 0,
                 end_session: false,
+                deadline: None,
+                tier: aibrix::workload::Tier::Standard,
             };
             let mut pods: Vec<CounterPod> = engines
-                .iter()
+                .iter_mut()
                 .enumerate()
                 .map(|(i, e)| {
                     let s = e.stats();
@@ -135,6 +137,9 @@ fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
                         waiting: s.waiting,
                         running: s.running,
                         kv_pressure: s.kv_utilization,
+                        pressure: s.pressure,
+                        slo_attainment: s.slo_attainment,
+                        slo_samples: s.slo_samples,
                     }
                 })
                 .collect();
@@ -146,7 +151,12 @@ fn run_policy(policy: Policy, convs: usize, spec: &SyntheticSpec) -> RunOut {
             };
             let pick = router.select(&route_req, &snaps).expect("a replica is ready");
             view.note_route(route_req.session, pick);
-            engines[pick].enqueue(RealRequest { id, tokens: prompt, max_new_tokens: MAX_NEW });
+            engines[pick].enqueue(RealRequest {
+                id,
+                tokens: prompt,
+                max_new_tokens: MAX_NEW,
+                ..Default::default()
+            });
         }
         for e in engines.iter_mut() {
             e.run_to_drain().unwrap();

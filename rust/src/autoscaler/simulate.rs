@@ -148,6 +148,8 @@ pub fn run(cfg: &ScalingSimConfig, scaler: &mut dyn Scaler) -> ScalingReport {
                     user: (next_id % 8) as u32,
                     shared_prefix_len: 0,
                     end_session: false,
+                    deadline: None,
+                    tier: Default::default(),
                 };
                 next_id += 1;
                 let snaps = view.snapshot(now, &req, &mut pods, None);

@@ -149,6 +149,11 @@ pub enum RejectReason {
     DeadlineExceeded,
     /// The capped retry budget ran out.
     RetriesExhausted,
+    /// Predictive admission control shed the request up front: the
+    /// estimated queue-ahead service time could not meet its deadline at
+    /// the current pressure level (retryable — with Retry-After hinting
+    /// when pressure should have cleared).
+    AdmissionShed,
 }
 
 impl RejectReason {
@@ -158,6 +163,7 @@ impl RejectReason {
             RejectReason::NoCapacity => "no_capacity",
             RejectReason::DeadlineExceeded => "deadline_exceeded",
             RejectReason::RetriesExhausted => "retries_exhausted",
+            RejectReason::AdmissionShed => "admission_shed",
         }
     }
 }

@@ -18,6 +18,7 @@ use crate::kvcache::{DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolSt
 use crate::runtime::{ModelCfg, Precision, RtStats, SeededPrefix, TinyLmRuntime};
 use crate::util::err::{Error, Result};
 use crate::util::lock::lock_or_recover;
+use crate::workload::Tier;
 
 /// Construction options for a real engine replica.
 #[derive(Clone, Default)]
@@ -144,6 +145,29 @@ pub struct RealRequest {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub max_new_tokens: usize,
+    /// Relative TTFT budget (µs, measured from enqueue). A waiting request
+    /// whose budget elapses before its first prefill chunk is admitted is
+    /// dropped with a typed rejection instead of burning schedule budget
+    /// on a guaranteed SLO miss. The budget survives `fail_and_drain`
+    /// re-dispatch: a retried request keeps racing its original clock on
+    /// the receiving replica. None = best-effort.
+    pub deadline_us: Option<u64>,
+    /// Priority tier: brownout caps Batch-tier decode budget first.
+    pub tier: Tier,
+}
+
+impl Default for RealRequest {
+    /// Best-effort baseline (`..Default::default()` in literal sites):
+    /// no deadline, Standard tier, minimal decode.
+    fn default() -> RealRequest {
+        RealRequest {
+            id: 0,
+            tokens: Vec::new(),
+            max_new_tokens: 1,
+            deadline_us: None,
+            tier: Tier::Standard,
+        }
+    }
 }
 
 /// A served completion with wall-clock timings.
@@ -164,6 +188,16 @@ impl RealCompletion {
     pub fn latency_us(&self) -> u64 {
         self.queue_us + self.serve_us
     }
+}
+
+/// Outcome of one served request: completed, or shed by the scheduler
+/// with a typed reason (e.g. its TTFT deadline passed while it waited).
+/// The HTTP surface maps `Rejected` to 429 + Retry-After — a shed must
+/// never read as an engine failure.
+#[derive(Debug, Clone)]
+pub enum ServeOutcome {
+    Done(RealCompletion),
+    Rejected(crate::chaos::RejectReason),
 }
 
 /// The real engine: runtime + queue + batch loop (+ optional KV pool).
@@ -485,7 +519,7 @@ use std::sync::mpsc;
 
 /// Commands into the engine thread.
 enum Cmd {
-    Serve(RealRequest, mpsc::Sender<RealCompletion>),
+    Serve(RealRequest, mpsc::Sender<ServeOutcome>),
     Stats(mpsc::Sender<RtStats>),
     Stop,
 }
@@ -549,7 +583,7 @@ impl RealEngineHandle {
                     return;
                 }
             };
-            let mut waiters: std::collections::HashMap<u64, mpsc::Sender<RealCompletion>> =
+            let mut waiters: std::collections::HashMap<u64, mpsc::Sender<ServeOutcome>> =
                 Default::default();
             loop {
                 // Block for one command, then drain greedily: everything
@@ -595,7 +629,15 @@ impl RealEngineHandle {
                             }
                             for c in done {
                                 if let Some(reply) = waiters.remove(&c.id) {
-                                    let _ = reply.send(c);
+                                    let _ = reply.send(ServeOutcome::Done(c));
+                                }
+                            }
+                            // Scheduler sheds (deadline passed while
+                            // waiting) unblock their waiters with a typed
+                            // reason — never a hang, never a fake error.
+                            for (id, reason) in engine.rejections.drain(..) {
+                                if let Some(reply) = waiters.remove(&id) {
+                                    let _ = reply.send(ServeOutcome::Rejected(reason));
                                 }
                             }
                         }
@@ -624,8 +666,9 @@ impl RealEngineHandle {
         self.pool.as_ref().map(|p| p.stats())
     }
 
-    /// Serve one request, blocking until its completion.
-    pub fn serve(&self, req: RealRequest) -> Result<RealCompletion> {
+    /// Serve one request, blocking until it completes or is shed by the
+    /// scheduler (typed — see [`ServeOutcome`]).
+    pub fn serve(&self, req: RealRequest) -> Result<ServeOutcome> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Cmd::Serve(req, tx))
@@ -685,7 +728,7 @@ mod tests {
     fn request(id: u64, prefix: &[u32], tail: u32) -> RealRequest {
         let mut tokens = prefix.to_vec();
         tokens.extend([tail, tail + 1, tail + 2]);
-        RealRequest { id, tokens, max_new_tokens: 4 }
+        RealRequest { id, tokens, max_new_tokens: 4, ..Default::default() }
     }
 
     #[test]

@@ -33,15 +33,35 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::chaos::RejectReason;
+use crate::engine::sim_engine::{DEFAULT_SLO_ITL_US, DEFAULT_SLO_TTFT_US};
 use crate::engine::EngineStats;
 use crate::kvcache::blocks::{assemble_prefix, extract_block, prompt_block_keys_seeded};
 use crate::kvcache::{KvBlockData, KvBlockShape};
+use crate::metrics::SlidingWindow;
 use crate::runtime::{
     DeviceTensor, Precision, RowChunk, RtStats, SeededPrefix, Tensor, TinyLmRuntime,
 };
 use crate::util::err::{Error, Result};
+use crate::workload::Tier;
 
 use super::real::{EngineOpts, EnginePool, RealCompletion, RealRequest};
+
+/// Brownout hysteresis: enter at/above `ENTER` pressure, exit at/below
+/// `EXIT`. The dead band keeps the engine from flapping between modes on
+/// every queue-length wiggle.
+const BROWNOUT_ENTER: f64 = 0.75;
+const BROWNOUT_EXIT: f64 = 0.40;
+/// Effective `max_new` cap for Batch-tier requests admitted during
+/// brownout. Greedy decode makes the capped output a strict prefix of the
+/// uncontended one, so the bit-exactness contract degrades gracefully.
+const BROWNOUT_BATCH_MAX_NEW: usize = 4;
+/// Waiting-queue depth (as a multiple of the slot count) at which the
+/// queue component of [`SchedEngine::stats`] pressure saturates to 1.0.
+const PRESSURE_QUEUE_FACTOR: usize = 4;
+/// Rolling window (µs of wall clock) for the measured SLO-attainment
+/// fraction surfaced through [`EngineStats::slo_attainment`].
+const ATTAIN_WINDOW_US: u64 = 30_000_000;
 
 /// Scheduler knobs. Defaults come from the runtime geometry
 /// ([`SchedConfig::for_runtime`]); env overrides `AIBRIX_SCHED_CHUNK_TOKENS`
@@ -273,11 +293,23 @@ pub struct SchedEngine {
     /// buffer swap (the double-buffer back half).
     wb_pending: Vec<(u64, Arc<KvBlockData>)>,
     pub completions: Vec<RealCompletion>,
+    /// Waiting requests dropped because their TTFT deadline passed before
+    /// first admission — typed, so conservation stays checkable.
+    pub rejections: Vec<(u64, RejectReason)>,
     failed: bool,
     admit_seq: u64,
     fetch_seq: u64,
     preemptions: u64,
     served_tokens: u64,
+    /// Brownout mode: shrunken chunked-prefill budget + capped Batch-tier
+    /// decode. Entered/exited hysteretically on the pressure signal.
+    brownout: bool,
+    /// Brownout entries so far (telemetry).
+    brownouts: u64,
+    /// 1.0/0.0 per completion: met its TTFT/ITL budget or not.
+    attain_window: SlidingWindow,
+    slo_ttft_us: u64,
+    slo_itl_us: u64,
     t0: Instant,
 }
 
@@ -356,11 +388,17 @@ impl SchedEngine {
             stager,
             wb_pending: Vec::new(),
             completions: Vec::new(),
+            rejections: Vec::new(),
             failed: false,
             admit_seq: 0,
             fetch_seq: 0,
             preemptions: 0,
             served_tokens: 0,
+            brownout: false,
+            brownouts: 0,
+            attain_window: SlidingWindow::new(ATTAIN_WINDOW_US),
+            slo_ttft_us: DEFAULT_SLO_TTFT_US,
+            slo_itl_us: DEFAULT_SLO_ITL_US,
             t0: Instant::now(),
         })
     }
@@ -390,6 +428,36 @@ impl SchedEngine {
     /// Preemption events so far (victims requeued losslessly).
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// True while the engine is browned out (shrunken prefill budget,
+    /// capped Batch-tier decode).
+    pub fn in_brownout(&self) -> bool {
+        self.brownout
+    }
+
+    /// Brownout entries so far (telemetry: each is one enter edge).
+    pub fn brownouts(&self) -> u64 {
+        self.brownouts
+    }
+
+    /// Override the SLO budgets the attainment window judges against
+    /// (defaults: 5s TTFT, 120ms ITL — the optimizer's default SLO).
+    pub fn set_slo(&mut self, ttft_us: u64, itl_us: u64) {
+        self.slo_ttft_us = ttft_us.max(1);
+        self.slo_itl_us = itl_us.max(1);
+    }
+
+    /// Overload pressure in [0,1]: max of KV utilization and the waiting/
+    /// capacity ratio (a queue `PRESSURE_QUEUE_FACTOR`x the slot count
+    /// saturates the signal). Published via [`SchedEngine::stats`] so the
+    /// gateway can tighten admission before this replica drowns.
+    pub fn pressure(&self) -> f64 {
+        let live: usize = self.slots.iter().flatten().map(|s| s.pos).sum();
+        let kv = live as f64 / self.cfg.kv_token_budget.max(1) as f64;
+        let q = self.waiting.len() as f64
+            / (self.max_batch.max(1) * PRESSURE_QUEUE_FACTOR) as f64;
+        kv.max(q).clamp(0.0, 1.0)
     }
 
     pub fn enqueue(&mut self, req: RealRequest) {
@@ -457,8 +525,10 @@ impl SchedEngine {
     }
 
     /// Observable state for ClusterView's `PodSignals` (waiting/running
-    /// split + KV pressure — the §3.2.2 signals the scorers read).
-    pub fn stats(&self) -> EngineStats {
+    /// split, KV + overload pressure, measured SLO attainment — the
+    /// §3.2.2 signals the scorers and the admission controller read).
+    /// `&mut` only for the attainment window's lazy eviction.
+    pub fn stats(&mut self) -> EngineStats {
         let live: usize = self.slots.iter().flatten().map(|s| s.pos).sum();
         let rs = self.runtime.stats();
         let computed = rs.prefill_tokens + rs.decode_tokens;
@@ -470,6 +540,7 @@ impl SchedEngine {
         } else {
             0.0
         };
+        let now_us = self.t0.elapsed().as_micros() as u64;
         EngineStats {
             waiting: self.waiting.len(),
             running: self.occupied(),
@@ -481,6 +552,9 @@ impl SchedEngine {
             } else {
                 0.0
             },
+            pressure: self.pressure(),
+            slo_attainment: self.attain_window.mean(now_us).unwrap_or(1.0),
+            slo_samples: self.attain_window.len(now_us) as u64,
         }
     }
 
@@ -540,18 +614,42 @@ impl SchedEngine {
         loop {
             let Some(free) = self.slots.iter().position(|s| s.is_none()) else { return };
             let Some(front) = self.waiting.front() else { return };
+            // Deadline shedding: a request whose TTFT budget expired while
+            // it queued can no longer meet its SLO — reject it with a typed
+            // reason instead of burning prefill compute on a dead deadline.
+            // Requeued rows (first token already out) are never shed: their
+            // TTFT is history and dropping them would lose accepted work.
+            let dead = front.ttft_us.is_none()
+                && front.req.deadline_us.is_some_and(|d| {
+                    now.saturating_duration_since(front.enq).as_micros() as u64 > d
+                });
+            if dead {
+                if let Some(w) = self.waiting.pop_front() {
+                    self.rejections.push((w.req.id, RejectReason::DeadlineExceeded));
+                }
+                continue;
+            }
             let need = front.ctx.len() + 1;
             if self.occupied() > 0 && self.committed() + need > self.cfg.kv_token_budget {
                 return;
             }
             let Some(w) = self.waiting.pop_front() else { return };
             self.admit_seq += 1;
+            // Brownout: Batch-tier work admitted during overload gets its
+            // decode budget capped — greedy decode makes the capped output
+            // a strict prefix of the uncontended one. The cap binds only at
+            // *first* admission so a preempted row keeps its target and the
+            // completion stays internally consistent.
+            let mut target = w.target;
+            if self.brownout && w.req.tier == Tier::Batch && w.first_admit.is_none() {
+                target = target.min(BROWNOUT_BATCH_MAX_NEW).max(1);
+            }
             let mut slot = Slot {
                 req: w.req,
                 ctx: w.ctx,
                 prompt_len: w.prompt_len,
                 done: w.done,
-                target: w.target,
+                target,
                 gen: Vec::new(),
                 pos: 0,
                 cur: 0,
@@ -672,7 +770,13 @@ impl SchedEngine {
                 });
             }
         }
-        let mut budget = self.cfg.chunk_tokens;
+        // Brownout halves the prefill budget: decodes keep their
+        // decode-first guarantee while new prompts absorb the slowdown.
+        let mut budget = if self.brownout {
+            (self.cfg.chunk_tokens / 2).max(1)
+        } else {
+            self.cfg.chunk_tokens
+        };
         for (i, s) in self.slots.iter().enumerate() {
             if budget == 0 {
                 break;
@@ -739,6 +843,17 @@ impl SchedEngine {
             serve_us: total_us.saturating_sub(queue_us),
             ttft_us: slot.ttft_us.unwrap_or(total_us),
         };
+        // Measured SLO attainment: judge TTFT against the request's own
+        // deadline (when it carried one) or the engine-wide budget, and the
+        // mean inter-token latency against the ITL budget. The rolling
+        // fraction feeds the gateway's slo-headroom scorer and admission
+        // estimator via [`SchedEngine::stats`].
+        let ttft_budget = slot.req.deadline_us.unwrap_or(self.slo_ttft_us);
+        let itl_us = total_us.saturating_sub(c.ttft_us)
+            / c.generated.len().saturating_sub(1).max(1) as u64;
+        let met = c.ttft_us <= ttft_budget && itl_us <= self.slo_itl_us;
+        let now_us = self.t0.elapsed().as_micros() as u64;
+        self.attain_window.record(now_us, if met { 1.0 } else { 0.0 });
         self.served_tokens += c.generated.len() as u64;
         self.completions.push(c.clone());
         events.push(c);
@@ -753,6 +868,15 @@ impl SchedEngine {
         }
         self.ship_writebacks();
         self.drain_staged();
+        // Brownout hysteresis: enter high, exit low — the dead band keeps
+        // the engine from flapping on every queue-length wiggle.
+        let p = self.pressure();
+        if !self.brownout && p >= BROWNOUT_ENTER {
+            self.brownout = true;
+            self.brownouts += 1;
+        } else if self.brownout && p <= BROWNOUT_EXIT {
+            self.brownout = false;
+        }
         self.admit();
         let mut plans = self.plan_chunks();
         self.preempt_for_budget(&mut plans);
@@ -931,7 +1055,7 @@ mod tests {
 
     fn req(id: u64, len: usize, max_new: usize) -> RealRequest {
         let tokens: Vec<u32> = (0..len).map(|i| ((id as usize * 7 + i * 5) % 32) as u32).collect();
-        RealRequest { id, tokens, max_new_tokens: max_new }
+        RealRequest { id, tokens, max_new_tokens: max_new, ..Default::default() }
     }
 
     fn by_id(cs: &[RealCompletion]) -> std::collections::HashMap<u64, Vec<u32>> {
@@ -1028,7 +1152,7 @@ mod tests {
         let mut solo = sched(None, None);
         let prefix_req = |id| {
             let tokens: Vec<u32> = (0..24).map(|i| (i * 5 % 32) as u32).collect();
-            RealRequest { id, tokens, max_new_tokens: 4 }
+            RealRequest { id, tokens, max_new_tokens: 4, ..Default::default() }
         };
         a.enqueue(prefix_req(1));
         a.run_to_drain().unwrap();
@@ -1109,6 +1233,85 @@ mod tests {
         assert_eq!((s2.waiting, s2.running), (0, 0));
         assert!(s2.tokens_per_s > 0.0);
         assert!(s2.avg_latency_us > 0.0);
+        // Overload-plane signals: queued work registers as pressure, and
+        // the drained engine reports measured (not proxied) attainment.
+        assert!(s0.pressure > 0.0, "queued work must register as pressure");
+        assert_eq!(s2.pressure, 0.0);
+        assert_eq!(s2.slo_samples, 5, "one attainment sample per completion");
+        assert_eq!(s2.slo_attainment, 1.0, "local compute meets the default SLO");
+    }
+
+    #[test]
+    fn expired_deadline_sheds_with_typed_rejection() {
+        // A request whose TTFT budget is already gone at admission time is
+        // dropped with a typed rejection; everything else completes, and
+        // completions + rejections == enqueued (conservation).
+        let mut e = sched(None, None);
+        e.enqueue(RealRequest { deadline_us: Some(0), ..req(1, 10, 4) });
+        e.enqueue(req(2, 10, 4));
+        // Let the clock move past the (zero) budget before the first tick.
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        e.run_to_drain().unwrap();
+        assert_eq!(e.rejections, vec![(1, RejectReason::DeadlineExceeded)]);
+        assert_eq!(e.completions.len(), 1);
+        assert_eq!(e.completions[0].id, 2);
+        // A generous budget is never shed.
+        let mut e = sched(None, None);
+        e.enqueue(RealRequest { deadline_us: Some(60_000_000), ..req(3, 10, 4) });
+        e.run_to_drain().unwrap();
+        assert!(e.rejections.is_empty());
+        assert_eq!(e.completions.len(), 1);
+    }
+
+    #[test]
+    fn brownout_caps_batch_tier_and_recovers() {
+        // Flood the queue: pressure crosses BROWNOUT_ENTER on the first
+        // tick, so early Batch-tier admissions get their decode budget
+        // capped; greedy decode makes each capped output a strict prefix
+        // of the uncontended one; once the queue drains below the exit
+        // threshold the engine leaves brownout on its own (hysteresis).
+        let n = 8u64;
+        let mut uncontended: std::collections::HashMap<u64, Vec<u32>> = Default::default();
+        for id in 0..n {
+            let mut solo = sched(None, None);
+            solo.enqueue(RealRequest { tier: Tier::Batch, ..req(id, 10, 12) });
+            solo.run_to_drain().unwrap();
+            uncontended.insert(id, solo.completions[0].generated.clone());
+        }
+        let mut e = sched(None, None);
+        for id in 0..n {
+            e.enqueue(RealRequest { tier: Tier::Batch, ..req(id, 10, 12) });
+        }
+        e.tick().unwrap();
+        assert!(e.in_brownout(), "a saturated queue must trip brownout");
+        e.run_to_drain().unwrap();
+        assert_eq!(e.brownouts(), 1, "one enter edge, no flapping");
+        assert!(!e.in_brownout(), "brownout must clear once pressure drains");
+        assert_eq!(e.completions.len(), n as usize);
+        let mut capped = 0usize;
+        for c in &e.completions {
+            let full = &uncontended[&c.id];
+            assert!(
+                full.starts_with(&c.generated),
+                "brownout output must be a prefix of the uncontended run"
+            );
+            if c.generated.len() < full.len() {
+                assert_eq!(c.generated.len(), BROWNOUT_BATCH_MAX_NEW);
+                capped += 1;
+            }
+        }
+        assert!(capped > 0, "brownout never capped a Batch request — gate is vacuous");
+        // Standard-tier work is never capped, even under brownout.
+        let mut e = sched(None, None);
+        for id in 0..n {
+            e.enqueue(req(100 + id, 10, 12));
+        }
+        e.tick().unwrap();
+        assert!(e.in_brownout());
+        e.run_to_drain().unwrap();
+        for c in &e.completions {
+            assert_eq!(c.generated.len(), 12, "brownout must not cap non-Batch tiers");
+        }
     }
 
     #[test]

@@ -21,10 +21,16 @@ use super::blocks::BlockAllocator;
 use super::costmodel::CostModel;
 use super::prefix::{prompt_block_keys, BlockKey, PrefixCache};
 use super::spec::ModelSpec;
+use crate::chaos::RejectReason;
 use crate::cluster::GpuKind;
 use crate::metrics::SlidingWindow;
 use crate::sim::{SimTime, SECONDS};
 use crate::workload::Request;
+
+/// Default SLO budgets for the measured attainment window, matching
+/// [`crate::optimizer::profiles::Slo::default`] (5s TTFT, 120ms ITL).
+pub const DEFAULT_SLO_TTFT_US: u64 = 5_000_000;
+pub const DEFAULT_SLO_ITL_US: u64 = 120_000;
 
 /// Engine configuration (mirrors the vLLM flags the paper toggles).
 #[derive(Debug, Clone)]
@@ -93,6 +99,10 @@ pub struct Completion {
     pub arrival: SimTime,
     pub first_token_at: SimTime,
     pub finished_at: SimTime,
+    /// Priority tier the request carried (overload accounting).
+    pub tier: crate::workload::Tier,
+    /// Absolute TTFT deadline the request carried, if any.
+    pub deadline: Option<SimTime>,
 }
 
 impl Completion {
@@ -102,6 +112,12 @@ impl Completion {
 
     pub fn latency_us(&self) -> u64 {
         self.finished_at - self.arrival
+    }
+
+    /// First token landed within the request's TTFT deadline (vacuously
+    /// true for deadline-free requests) — the goodput numerator.
+    pub fn met_deadline(&self) -> bool {
+        self.deadline.map_or(true, |d| self.first_token_at <= d)
     }
 }
 
@@ -156,6 +172,18 @@ pub struct EngineStats {
     pub avg_latency_us: f64,
     /// Local prefix-cache hit rate since start.
     pub prefix_hit_rate: f64,
+    /// Overload pressure in [0,1]: max of KV utilization and queue-depth
+    /// ratio. The gateway tightens admission as this rises; the engine
+    /// enters brownout past its own hysteretic threshold.
+    pub pressure: f64,
+    /// Rolling fraction of recent completions that met their TTFT/ITL SLO
+    /// (the *measured* attainment window `slo_headroom` reads). Only
+    /// meaningful when `slo_samples > 0`; 1.0 otherwise.
+    pub slo_attainment: f64,
+    /// Completions inside the attainment window (0 = no history yet —
+    /// scorers treat that as full headroom, not as perfect attainment
+    /// evidence).
+    pub slo_samples: u64,
 }
 
 /// The simulated engine.
@@ -171,10 +199,19 @@ pub struct EngineSim {
     running: Vec<Seq>,
     loras: Vec<String>, // LRU order, most recent last
     pub completions: Vec<Completion>,
+    /// Waiting requests dropped at admission because their deadline had
+    /// already passed (typed, for request conservation — the harness
+    /// drains these into its rejection ledger).
+    pub rejections: Vec<(u64, RejectReason)>,
     /// (emission time, inter-token latency) per decode token.
     pub itl_us: Vec<(SimTime, u64)>,
     token_window: SlidingWindow,
     latency_window: SlidingWindow,
+    /// 1.0/0.0 per completion: met its TTFT/ITL budget or not.
+    attain_window: SlidingWindow,
+    /// TTFT budget for attainment judging (per-request deadlines override).
+    slo_ttft_us: u64,
+    slo_itl_us: u64,
     pub prompt_tokens_done: u64,
     pub decode_tokens_done: u64,
     pub busy_us: u64,
@@ -196,9 +233,13 @@ impl EngineSim {
             running: Vec::new(),
             loras: Vec::new(),
             completions: Vec::new(),
+            rejections: Vec::new(),
             itl_us: Vec::new(),
             token_window: SlidingWindow::new(10 * SECONDS),
             latency_window: SlidingWindow::new(30 * SECONDS),
+            attain_window: SlidingWindow::new(30 * SECONDS),
+            slo_ttft_us: DEFAULT_SLO_TTFT_US,
+            slo_itl_us: DEFAULT_SLO_ITL_US,
             prompt_tokens_done: 0,
             decode_tokens_done: 0,
             busy_us: 0,
@@ -211,6 +252,13 @@ impl EngineSim {
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Override the SLO budgets the attainment window judges against
+    /// (defaults: 5s TTFT, 120ms ITL — the optimizer's default SLO).
+    pub fn set_slo(&mut self, ttft_us: u64, itl_us: u64) {
+        self.slo_ttft_us = ttft_us.max(1);
+        self.slo_itl_us = itl_us.max(1);
     }
 
     pub fn cost_model(&self) -> &CostModel {
@@ -236,13 +284,20 @@ impl EngineSim {
 
     /// Observable signals for the router.
     pub fn stats(&mut self, now: SimTime) -> EngineStats {
+        let kv = self.alloc.utilization();
+        // Queue-depth component: a waiting queue 2x the running capacity
+        // saturates the signal.
+        let q = self.waiting.len() as f64 / (self.cfg.max_num_seqs.max(1) * 2) as f64;
         EngineStats {
             waiting: self.waiting.len(),
             running: self.running.len(),
-            kv_utilization: self.alloc.utilization(),
+            kv_utilization: kv,
             tokens_per_s: self.token_window.rate_per_unit(now) * SECONDS as f64,
             avg_latency_us: self.latency_window.mean(now).unwrap_or(0.0),
             prefix_hit_rate: self.prefix.hit_rate(),
+            pressure: kv.max(q).clamp(0.0, 1.0),
+            slo_attainment: self.attain_window.mean(now).unwrap_or(1.0),
+            slo_samples: self.attain_window.len(now) as u64,
         }
     }
 
@@ -288,6 +343,19 @@ impl EngineSim {
 
     fn try_admit(&mut self, now: SimTime, external: &mut Option<&mut dyn ExternalKv>) {
         while self.running.len() < self.cfg.max_num_seqs {
+            // Drop already-dead waiting requests first: a request whose
+            // TTFT deadline has passed can only burn prefill budget on a
+            // guaranteed SLO miss. Typed, so conservation stays checkable.
+            while let Some(front) = self.waiting.front() {
+                match front.deadline {
+                    Some(d) if now > d => {
+                        if let Some(r) = self.waiting.pop_front() {
+                            self.rejections.push((r.id, RejectReason::DeadlineExceeded));
+                        }
+                    }
+                    _ => break,
+                }
+            }
             let Some(front) = self.waiting.front() else { break };
             let prompt_len = front.tokens.len();
             let keys = prompt_block_keys(&front.tokens, self.cfg.block_size);
@@ -659,8 +727,23 @@ impl EngineSim {
                     arrival: seq.req.arrival,
                     first_token_at: seq.first_token_at.unwrap_or(end),
                     finished_at: end,
+                    tier: seq.req.tier,
+                    deadline: seq.req.deadline,
                 };
                 self.latency_window.record(end, completion.latency_us() as f64);
+                // Measured SLO attainment: TTFT against the request's own
+                // deadline when it carries one (absolute), else the
+                // configured budget; ITL against the configured budget.
+                let ttft_budget = match seq.req.deadline {
+                    Some(d) => d.saturating_sub(completion.arrival),
+                    None => self.slo_ttft_us,
+                };
+                let itl_mean = completion
+                    .finished_at
+                    .saturating_sub(completion.first_token_at)
+                    / completion.output_len.saturating_sub(1).max(1) as u64;
+                let met = completion.ttft_us() <= ttft_budget && itl_mean <= self.slo_itl_us;
+                self.attain_window.record(end, if met { 1.0 } else { 0.0 });
                 self.completions.push(completion);
             } else {
                 i += 1;
@@ -691,6 +774,8 @@ mod tests {
             user: 0,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: crate::workload::Tier::Standard,
         }
     }
 
@@ -884,6 +969,44 @@ mod tests {
         let s = e.stats(0);
         assert!(s.running > 0);
         assert!(s.kv_utilization > 0.0);
+        assert!(s.pressure >= s.kv_utilization, "pressure covers kv load");
+    }
+
+    #[test]
+    fn dead_requests_shed_at_admission_with_typed_rejection() {
+        let mut e = engine(false, false);
+        let mut r = req(1, vec![7; 100], 4);
+        r.deadline = Some(10); // long past by the first step at t=100
+        e.enqueue(r);
+        e.enqueue(req(2, vec![7; 100], 4));
+        let mut now = 100;
+        drive(&mut e, &mut now, 100);
+        assert_eq!(e.completions.len(), 1, "live request still served");
+        assert_eq!(e.completions[0].req_id, 2);
+        assert_eq!(e.rejections, vec![(1, RejectReason::DeadlineExceeded)]);
+    }
+
+    #[test]
+    fn attainment_window_measures_slo_misses() {
+        // Generous default budgets: everything meets its SLO.
+        let mut e = engine(false, false);
+        e.enqueue(req(1, vec![7; 100], 8));
+        let end = run_to_completion(&mut e, 100);
+        let s = e.stats(end);
+        assert!(s.slo_samples >= 1);
+        assert_eq!(s.slo_attainment, 1.0);
+        // Impossible budgets: the same trace misses everything.
+        let mut e2 = engine(false, false);
+        e2.set_slo(1, 1);
+        e2.enqueue(req(1, vec![7; 100], 8));
+        let end2 = run_to_completion(&mut e2, 100);
+        let s2 = e2.stats(end2);
+        assert!(s2.slo_samples >= 1);
+        assert_eq!(s2.slo_attainment, 0.0);
+        // No history yet: attainment defaults to full.
+        let mut fresh = engine(false, false);
+        assert_eq!(fresh.stats(0).slo_attainment, 1.0);
+        assert_eq!(fresh.stats(0).slo_samples, 0);
     }
 
     #[test]

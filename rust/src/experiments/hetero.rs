@@ -152,6 +152,7 @@ fn serve(p: &HeteroParams, counts: &[(GpuKind, usize)], label: &str) -> FleetOut
             view,
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         },
         &mut mix,
     );

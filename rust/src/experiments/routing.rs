@@ -84,6 +84,7 @@ pub fn run_policy(p: &RoutingParams, policy: Policy) -> PolicyRow {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         },
         &mut wl,
     );

@@ -146,6 +146,7 @@ pub fn run_cell(p: &Table1Params, base: BaseConfig, dist_kv: bool) -> RunReport 
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         },
         &mut wl,
     )

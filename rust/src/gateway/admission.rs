@@ -1,0 +1,349 @@
+//! Predictive admission control — the overload-protection front door.
+//!
+//! Under sustained overload, admitting everything maximizes *throughput
+//! of failure*: every queue grows, every deadline blows, and goodput
+//! (SLO-met completions per second) collapses even though the engines
+//! never idle. The admission controller sheds work **before** it
+//! enqueues, using only ClusterView signals the gateway already has:
+//!
+//!   * **backpressure** — engines publish an overload pressure level in
+//!     `[0, 1]` ([`crate::engine::EngineStats::pressure`], max of KV
+//!     utilization and queue-depth); the fleet-worst value gates
+//!     admission with **per-tier thresholds**, so Batch traffic sheds
+//!     first, Standard next, and Interactive only at the brink;
+//!   * **deadline feasibility** — a request carrying a TTFT deadline is
+//!     rejected up front when the best-case queue-ahead service time
+//!     (waiting depth x estimated tokens per request / measured pod
+//!     tok/s, inflated by KV pressure) already exceeds its remaining
+//!     budget. The request was going to miss; rejecting it now costs
+//!     zero prefill compute and returns a typed, retryable answer.
+//!
+//! The feasibility check for a tier only activates once every *lower*
+//! tier is pressure-shed (its activation floor is the next tier down's
+//! shed threshold). This keeps priority ordering invertible-free: an
+//! Interactive request is never predictively shed at an instant where a
+//! Batch request of equal-or-later deadline would be admitted — the
+//! property `prop_overload_conservation` pins. Below the floor, a
+//! doomed request is still caught by the engine's own dead-at-admission
+//! drop, so conservation never depends on the gateway guessing right.
+//!
+//! The controller composes with — never replaces — the token-bucket
+//! rate limiter: [`super::Gateway::dispatch`] runs the limiter first
+//! (per-tenant quota), then admission (cluster overload), then routing.
+//!
+//! Everything here is a pure function of (config, now, request,
+//! snapshots): same inputs, same verdict — the overload bench and the
+//! proptests replay traces deterministically.
+
+use super::router::PodSnapshot;
+use super::view::fleet_pressure;
+use crate::chaos::RejectReason;
+use crate::sim::SimTime;
+use crate::workload::{Request, Tier};
+
+/// Admission thresholds and estimator knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Fleet pressure at/above which Batch-tier work is shed.
+    pub batch_shed_pressure: f64,
+    /// Fleet pressure at/above which Standard-tier work is shed.
+    pub standard_shed_pressure: f64,
+    /// Fleet pressure at/above which even Interactive work is shed (the
+    /// brink: past this, admitting anything just lengthens the collapse).
+    pub interactive_shed_pressure: f64,
+    /// Assumed service demand per queued request (tokens) when estimating
+    /// queue-ahead time — prompt prefill plus decode budget of a typical
+    /// request; deliberately coarse, the signal is the *ordering*.
+    pub est_tokens_per_request: f64,
+    /// Serving rate assumed for pods that have not measured a throughput
+    /// yet (fresh cluster), tokens/s.
+    pub fallback_tokens_per_s: f64,
+    /// Base Retry-After hint for pressure sheds, milliseconds; scales up
+    /// with the pressure level so clients back off harder as the fleet
+    /// saturates.
+    pub base_retry_after_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            batch_shed_pressure: 0.60,
+            standard_shed_pressure: 0.85,
+            interactive_shed_pressure: 0.97,
+            est_tokens_per_request: 64.0,
+            fallback_tokens_per_s: 5_000.0,
+            base_retry_after_ms: 250,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Pressure at/above which `tier` is shed. Monotone in priority:
+    /// lower tiers always shed at-or-before higher ones.
+    pub fn shed_pressure(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Interactive => self.interactive_shed_pressure,
+            Tier::Standard => self.standard_shed_pressure,
+            Tier::Batch => self.batch_shed_pressure,
+        }
+    }
+
+    /// Pressure at/above which the deadline-feasibility estimate applies
+    /// to `tier`: the shed threshold of the tier below it, so predictive
+    /// deadline sheds can never invert priority (every lower tier is
+    /// already pressure-shed when this fires).
+    fn feasibility_floor(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Interactive => self.standard_shed_pressure,
+            Tier::Standard => self.batch_shed_pressure,
+            Tier::Batch => 0.0,
+        }
+    }
+}
+
+/// A refused admission: the typed reason plus a Retry-After hint for the
+/// HTTP surface (429 with backoff for sheds, immediate for dead-on-
+/// arrival deadlines — retrying those without a new deadline is futile).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shed {
+    pub reason: RejectReason,
+    pub retry_after_ms: u64,
+}
+
+/// Admission outcomes by tier (index = [`tier_index`]), feeding the
+/// `aibrix_admission_{admitted,shed}_total{tier,reason}` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    pub admitted: [u64; 3],
+    /// Pressure sheds (`reason="admission_shed"`).
+    pub shed_pressure: [u64; 3],
+    /// Predictive + dead-on-arrival deadline sheds
+    /// (`reason="deadline_exceeded"`).
+    pub shed_deadline: [u64; 3],
+}
+
+impl AdmissionCounters {
+    pub fn total_shed(&self) -> u64 {
+        self.shed_pressure.iter().sum::<u64>() + self.shed_deadline.iter().sum::<u64>()
+    }
+}
+
+/// Stable metrics index for a tier (Interactive first — it is the tier
+/// operators alert on).
+pub fn tier_index(tier: Tier) -> usize {
+    match tier {
+        Tier::Interactive => 0,
+        Tier::Standard => 1,
+        Tier::Batch => 2,
+    }
+}
+
+/// The predictive admission controller. One per gateway; `evaluate` is
+/// called after the rate limiter and before routing.
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    counters: AdmissionCounters,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController { cfg, counters: AdmissionCounters::default() }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Admission outcomes so far (metrics surface).
+    pub fn counters(&self) -> &AdmissionCounters {
+        &self.counters
+    }
+
+    /// Admit or shed one request against the current fleet snapshots.
+    /// Deterministic: a pure function of (config, now, request, snaps)
+    /// plus counter bookkeeping.
+    pub fn evaluate(
+        &mut self,
+        now: SimTime,
+        req: &Request,
+        snaps: &[PodSnapshot],
+    ) -> Result<(), Shed> {
+        let ti = tier_index(req.tier);
+        let pressure = fleet_pressure(snaps);
+        if pressure >= self.cfg.shed_pressure(req.tier) {
+            self.counters.shed_pressure[ti] += 1;
+            return Err(Shed {
+                reason: RejectReason::AdmissionShed,
+                retry_after_ms: self.retry_after_ms(pressure),
+            });
+        }
+        if let Some(deadline) = req.deadline {
+            if deadline <= now {
+                // Dead on arrival: no amount of scheduling meets it.
+                self.counters.shed_deadline[ti] += 1;
+                return Err(Shed { reason: RejectReason::DeadlineExceeded, retry_after_ms: 0 });
+            }
+            if pressure >= self.cfg.feasibility_floor(req.tier)
+                && deadline.saturating_sub(now) < self.estimated_wait_us(snaps)
+            {
+                self.counters.shed_deadline[ti] += 1;
+                return Err(Shed {
+                    reason: RejectReason::DeadlineExceeded,
+                    retry_after_ms: self.retry_after_ms(pressure),
+                });
+            }
+        }
+        self.counters.admitted[ti] += 1;
+        Ok(())
+    }
+
+    /// Best-case queue-ahead service time across pods accepting new work,
+    /// in µs: queued work (waiting + running, in estimated tokens) over
+    /// the pod's measured serving rate, inflated by KV pressure (a
+    /// near-full cache preempts and recomputes, so effective throughput
+    /// sags). Unroutable fleet estimates infinite wait.
+    fn estimated_wait_us(&self, snaps: &[PodSnapshot]) -> u64 {
+        let mut best = u64::MAX;
+        for s in snaps {
+            if !s.accepts_new_work() {
+                continue;
+            }
+            let queued = (s.stats.waiting + s.stats.running) as f64
+                * self.cfg.est_tokens_per_request.max(1.0);
+            let rate = if s.stats.tokens_per_s > 0.0 {
+                s.stats.tokens_per_s
+            } else {
+                self.cfg.fallback_tokens_per_s.max(1.0)
+            };
+            let slowdown = 1.0 - s.stats.kv_utilization.clamp(0.0, 0.9);
+            let wait = queued / rate / slowdown * 1e6;
+            if wait.is_finite() {
+                best = best.min(wait as u64);
+            }
+        }
+        best
+    }
+
+    /// Retry-After grows with pressure: 1x the base just above a shed
+    /// threshold, up to 5x at full saturation. Deterministic — no jitter
+    /// (callers add their own).
+    fn retry_after_ms(&self, pressure: f64) -> u64 {
+        let scale = 1 + (pressure.clamp(0.0, 1.0) * 4.0) as u64;
+        self.cfg.base_retry_after_ms.max(1).saturating_mul(scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineStats;
+
+    fn req(tier: Tier, deadline: Option<SimTime>) -> Request {
+        Request {
+            id: 1,
+            session: 0,
+            tokens: vec![1; 16],
+            output_len: 8,
+            arrival: 0,
+            model: "m".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+            end_session: false,
+            deadline,
+            tier,
+        }
+    }
+
+    fn pod(pressure: f64, waiting: usize, tokens_per_s: f64) -> PodSnapshot {
+        PodSnapshot {
+            stats: EngineStats { pressure, waiting, tokens_per_s, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tiers_shed_in_priority_order_as_pressure_rises() {
+        let mut ac = AdmissionController::default();
+        for (pressure, batch_ok, std_ok, int_ok) in [
+            (0.30, true, true, true),
+            (0.70, false, true, true),
+            (0.90, false, false, true),
+            (0.99, false, false, false),
+        ] {
+            let snaps = [pod(pressure, 0, 0.0)];
+            assert_eq!(ac.evaluate(0, &req(Tier::Batch, None), &snaps).is_ok(), batch_ok);
+            assert_eq!(ac.evaluate(0, &req(Tier::Standard, None), &snaps).is_ok(), std_ok);
+            assert_eq!(
+                ac.evaluate(0, &req(Tier::Interactive, None), &snaps).is_ok(),
+                int_ok,
+                "pressure {pressure}"
+            );
+        }
+        let c = ac.counters();
+        assert_eq!(c.admitted, [3, 2, 1]);
+        assert_eq!(c.shed_pressure, [1, 2, 3]);
+        assert_eq!(c.total_shed(), 6);
+        // Pressure sheds carry a growing Retry-After hint.
+        let shed = ac.evaluate(0, &req(Tier::Batch, None), &[pod(0.99, 0, 0.0)]).unwrap_err();
+        assert_eq!(shed.reason, RejectReason::AdmissionShed);
+        assert!(shed.retry_after_ms >= 250);
+    }
+
+    #[test]
+    fn infeasible_deadline_sheds_predictively() {
+        let mut ac = AdmissionController::default();
+        // 10 queued requests x 64 tokens at 1000 tok/s = 640ms queue-ahead.
+        let busy = [pod(0.0, 10, 1_000.0)];
+        // Batch feasibility applies at any pressure: 100ms budget can't make it.
+        let shed =
+            ac.evaluate(0, &req(Tier::Batch, Some(100_000)), &busy).unwrap_err();
+        assert_eq!(shed.reason, RejectReason::DeadlineExceeded);
+        // A 2s budget clears the estimate.
+        assert!(ac.evaluate(0, &req(Tier::Batch, Some(2_000_000)), &busy).is_ok());
+        // Interactive feasibility is gated: below the Standard shed
+        // threshold the same doomed budget is still admitted (the engine's
+        // dead-at-admission drop is the backstop) — priority can never
+        // invert against a lower tier.
+        assert!(ac.evaluate(0, &req(Tier::Interactive, Some(100_000)), &busy).is_ok());
+        let hot = [pod(0.90, 10, 1_000.0)];
+        let shed =
+            ac.evaluate(0, &req(Tier::Interactive, Some(100_000)), &hot).unwrap_err();
+        assert_eq!(shed.reason, RejectReason::DeadlineExceeded);
+        // Dead on arrival is always shed, any tier, any pressure.
+        let idle = [pod(0.0, 0, 0.0)];
+        let shed = ac.evaluate(500, &req(Tier::Interactive, Some(400)), &idle).unwrap_err();
+        assert_eq!(shed.reason, RejectReason::DeadlineExceeded);
+        assert_eq!(shed.retry_after_ms, 0, "expired deadline: backoff is futile");
+        assert_eq!(ac.counters().shed_deadline, [2, 0, 1]);
+    }
+
+    #[test]
+    fn kv_pressure_and_fallback_rate_shape_the_estimate() {
+        let ac = AdmissionController::default();
+        // No measured throughput: the fallback rate applies. 5 requests x
+        // 64 tokens at 5000 tok/s = 64ms.
+        let w = ac.estimated_wait_us(&[pod(0.0, 5, 0.0)]);
+        assert_eq!(w, 64_000);
+        // 80% KV utilization inflates the same queue 5x.
+        let mut p = pod(0.0, 5, 0.0);
+        p.stats.kv_utilization = 0.8;
+        let w_hot = ac.estimated_wait_us(&[p]);
+        assert_eq!(w_hot, 320_000);
+        // Best pod wins: an idle replica makes the fleet estimate 0.
+        let w_best = ac.estimated_wait_us(&[pod(0.9, 5, 0.0), pod(0.0, 0, 0.0)]);
+        assert_eq!(w_best, 0);
+        // No routable pod: infinite wait (every deadline infeasible).
+        assert_eq!(ac.estimated_wait_us(&[]), u64::MAX);
+    }
+
+    #[test]
+    fn unroutable_fleet_sheds_everything() {
+        let mut ac = AdmissionController::default();
+        // fleet_pressure of an empty/unready fleet is 1.0: even
+        // Interactive sheds rather than queueing into the void.
+        let shed = ac.evaluate(0, &req(Tier::Interactive, None), &[]).unwrap_err();
+        assert_eq!(shed.reason, RejectReason::AdmissionShed);
+    }
+}

@@ -189,6 +189,8 @@ mod tests {
             user,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: Default::default(),
         }
     }
 

@@ -36,6 +36,10 @@
 //!     new work, Cordoned pods are excluded outright, and sticky sessions
 //!     pinned to either are invalidated on the spot.
 //!   * [`ratelimit`] — the TPM/RPM token buckets.
+//!   * [`admission`] — predictive overload admission: tier-aware pressure
+//!     shedding (Batch first, Interactive last) plus deadline-feasibility
+//!     rejection from ClusterView's queue-depth/throughput/KV signals,
+//!     composing with (never replacing) the token buckets.
 //!   * [`fairness`] — the per-tenant DRR dispatch queue plus
 //!     [`TenantUsage`], the decayed token meter behind the fairness scorer.
 //!
@@ -56,12 +60,14 @@
 //! into the request entry point used by the sim harness and the HTTP
 //! server.
 
+pub mod admission;
 pub mod fairness;
 pub mod ratelimit;
 pub mod router;
 pub mod scoring;
 pub mod view;
 
+pub use admission::{tier_index, AdmissionConfig, AdmissionController, AdmissionCounters, Shed};
 pub use fairness::{FairQueue, TenantUsage};
 pub use ratelimit::{RateLimitConfig, RateLimiter};
 pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD, REMOTE_POOL_CREDIT};
@@ -69,10 +75,11 @@ pub use scoring::{
     PipelineConfig, RouteTelemetry, ScoreCtx, ScoringPipeline, N_SCORERS, SCORER_NAMES,
 };
 pub use view::{
-    fleet_kv_pressure, ClusterView, ClusterViewConfig, CounterPod, HealthPolicy, HealthState,
-    HealthTracker, PodSignalSource, PodSignals,
+    fleet_kv_pressure, fleet_pressure, ClusterView, ClusterViewConfig, CounterPod, HealthPolicy,
+    HealthState, HealthTracker, PodSignalSource, PodSignals,
 };
 
+use crate::chaos::RejectReason;
 use crate::sim::SimTime;
 use crate::workload::Request;
 
@@ -83,21 +90,35 @@ pub enum Decision {
     Route(usize),
     /// 429: per-tenant rate limit exceeded.
     RateLimited { retry_after_ms: u64 },
+    /// 429/503: predictive admission control refused the request —
+    /// overload shedding ([`RejectReason::AdmissionShed`]) or an
+    /// unmeetable deadline ([`RejectReason::DeadlineExceeded`]) — with a
+    /// Retry-After hint (0 = retrying as-is is futile).
+    Shed { reason: RejectReason, retry_after_ms: u64 },
     /// 503: no ready pod.
     NoCapacity,
 }
 
-/// The LLM gateway: rate limiting -> fairness accounting -> routing.
+/// The LLM gateway: rate limiting -> admission control -> fairness
+/// accounting -> routing.
 pub struct Gateway {
     pub router: Router,
     pub limiter: Option<RateLimiter>,
+    /// Predictive overload admission (tier-aware shedding, deadline
+    /// feasibility). `None` = admit everything the limiter allows.
+    pub admission: Option<AdmissionController>,
     /// Decayed per-tenant token meter feeding the fairness scorer.
     pub usage: TenantUsage,
 }
 
 impl Gateway {
     pub fn new(policy: Policy, seed: u64) -> Gateway {
-        Gateway { router: Router::new(policy, seed), limiter: None, usage: TenantUsage::default() }
+        Gateway {
+            router: Router::new(policy, seed),
+            limiter: None,
+            admission: None,
+            usage: TenantUsage::default(),
+        }
     }
 
     pub fn with_rate_limits(mut self, cfg: RateLimitConfig) -> Gateway {
@@ -105,7 +126,14 @@ impl Gateway {
         self
     }
 
-    /// Admit and route one request against the current pod snapshots.
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> Gateway {
+        self.admission = Some(AdmissionController::new(cfg));
+        self
+    }
+
+    /// Admit and route one request against the current pod snapshots:
+    /// per-tenant token buckets first (quota), then predictive admission
+    /// (cluster overload + deadline feasibility), then scoring/routing.
     /// Routing only reads the fairness meter; tokens are charged by
     /// [`Gateway::complete`] when the request finishes — *served* usage,
     /// not admission-time promises (`output_len` is a request cap, not
@@ -114,6 +142,14 @@ impl Gateway {
         if let Some(lim) = &mut self.limiter {
             if let Err(retry_after_ms) = lim.check(now, req.user, req.total_tokens() as u64) {
                 return Decision::RateLimited { retry_after_ms };
+            }
+        }
+        if let Some(adm) = &mut self.admission {
+            if let Err(shed) = adm.evaluate(now, req, pods) {
+                return Decision::Shed {
+                    reason: shed.reason,
+                    retry_after_ms: shed.retry_after_ms,
+                };
             }
         }
         let ctx = ScoreCtx { tenant_share: self.usage.share(now, req.user) };
@@ -151,6 +187,8 @@ mod tests {
             user,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: crate::workload::Tier::Standard,
         }
     }
 
@@ -189,6 +227,39 @@ mod tests {
             gw.dispatch(61 * SECONDS, &req(7, 10), &pods),
             Decision::Route(_)
         ));
+    }
+
+    #[test]
+    fn admission_composes_after_the_rate_limiter() {
+        use crate::workload::Tier;
+        let cfg = RateLimitConfig { rpm: 1, tpm: 1_000_000 };
+        let mut gw = Gateway::new(Policy::Random, 1)
+            .with_rate_limits(cfg)
+            .with_admission(AdmissionConfig::default());
+        let mut hot = pod(0);
+        hot.stats.pressure = 0.99;
+        // Within quota, the saturated fleet sheds; once the quota is
+        // spent, the limiter answers first (admission never sees it).
+        assert!(matches!(gw.dispatch(0, &req(7, 10), &[hot.clone()]), Decision::Shed { .. }));
+        assert!(matches!(
+            gw.dispatch(0, &req(7, 10), &[hot.clone()]),
+            Decision::RateLimited { .. }
+        ));
+        // A within-quota tenant is shed by pressure with a typed reason.
+        let mut r = req(8, 10);
+        r.tier = Tier::Batch;
+        match gw.dispatch(0, &r, &[hot]) {
+            Decision::Shed { reason, retry_after_ms } => {
+                assert_eq!(reason, RejectReason::AdmissionShed);
+                assert!(retry_after_ms > 0);
+            }
+            other => panic!("expected a shed, got {other:?}"),
+        }
+        // Calm fleet: the same request routes.
+        assert!(matches!(gw.dispatch(0, &req(9, 10), &[pod(0)]), Decision::Route(_)));
+        let c = gw.admission.as_ref().unwrap().counters();
+        assert_eq!(c.admitted[tier_index(Tier::Standard)], 1);
+        assert!(c.total_shed() >= 2);
     }
 
     #[test]

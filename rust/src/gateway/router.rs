@@ -420,6 +420,8 @@ mod tests {
             user: 0,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: Default::default(),
         }
     }
 

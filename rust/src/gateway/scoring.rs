@@ -483,6 +483,8 @@ mod tests {
             user: 0,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: Default::default(),
         }
     }
 

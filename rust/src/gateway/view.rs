@@ -351,6 +351,14 @@ pub struct CounterPod {
     /// KV cache utilization in `[0, 1]` — the memory-pressure signal the
     /// scorers and autoscaler read (preemption risk when near 1).
     pub kv_pressure: f64,
+    /// Engine-published overload pressure in `[0, 1]` (max of KV and
+    /// queue-depth components) — the backpressure signal admission reads.
+    pub pressure: f64,
+    /// Measured rolling SLO attainment: fraction of the engine's recent
+    /// completions that met their TTFT/ITL budgets.
+    pub slo_attainment: f64,
+    /// Completions inside the attainment window (0 = no history yet).
+    pub slo_samples: u64,
 }
 
 impl CounterPod {
@@ -370,6 +378,9 @@ impl PodSignalSource for CounterPod {
                 waiting: self.waiting,
                 running: self.running,
                 kv_utilization: self.kv_pressure,
+                pressure: self.pressure,
+                slo_attainment: self.slo_attainment,
+                slo_samples: self.slo_samples,
                 ..EngineStats::default()
             },
             local_match_blocks: 0,
@@ -397,21 +408,42 @@ pub fn fleet_kv_pressure(snaps: &[PodSnapshot]) -> f64 {
     }
 }
 
-/// Headroom vs the SLO latency budget in `[0, 1]`: the pod's recent mean
-/// end-to-end latency against this request's budget (TTFT target + ITL
-/// target × requested output tokens). 1 = far under target, 0 = at/over.
-/// A pod with no latency history (fresh cluster) reports full headroom.
-pub fn slo_headroom(stats: &EngineStats, req: &Request, slo: &Slo) -> f64 {
-    let budget_us = (slo.ttft_ms + slo.itl_ms * req.output_len as f64) * 1e3;
-    if !budget_us.is_finite() || budget_us <= 0.0 {
-        return 0.0; // degenerate budget: no headroom credit
+/// Headroom vs the SLO in `[0, 1]`: the pod's *measured* rolling SLO
+/// attainment — the fraction of its recent completions that met their
+/// TTFT/ITL budgets, straight from the engine's attainment window. 1 =
+/// everything on target, 0 = everything blown. A pod with no recent
+/// completions (fresh cluster, idle pod) reports full headroom.
+///
+/// Replaces the old latency-*proxy* (mean end-to-end latency vs this
+/// request's budget), which confused long-decode traffic with SLO risk
+/// and never saw TTFT at all. Feeds both the slo-headroom scorer and the
+/// gateway admission estimator.
+pub fn slo_headroom(stats: &EngineStats) -> f64 {
+    if stats.slo_samples == 0 {
+        return 1.0;
     }
-    let h = (1.0 - stats.avg_latency_us / budget_us).clamp(0.0, 1.0);
+    let h = stats.slo_attainment.clamp(0.0, 1.0);
     if h.is_finite() {
         h
     } else {
         0.0
     }
+}
+
+/// Fleet-wide overload pressure: the *maximum* engine-published pressure
+/// over pods accepting new work. Max, not mean — one saturated replica is
+/// where the next misrouted request dies, and admission must tighten on
+/// the worst case. Empty/unroutable fleet reports pressure 1.0 (nothing
+/// can serve: shed).
+pub fn fleet_pressure(snaps: &[PodSnapshot]) -> f64 {
+    let mut worst: Option<f64> = None;
+    for s in snaps {
+        if s.ready && s.health.accepts_new_work() {
+            let p = s.stats.pressure.clamp(0.0, 1.0);
+            worst = Some(worst.map_or(p, |w: f64| w.max(p)));
+        }
+    }
+    worst.unwrap_or(1.0)
 }
 
 /// Bounded session → pod table. Eviction is FIFO by *first appearance*:
@@ -648,7 +680,7 @@ impl ClusterView {
                 pool_blocks_local: res.local_blocks,
                 pool_blocks_total: res.visible_blocks,
                 session_match: sticky == Some(s.pod),
-                slo_headroom: slo_headroom(&s.stats, req, &self.cfg.slo),
+                slo_headroom: slo_headroom(&s.stats),
                 resident_adapters: s.resident_adapters,
                 stats: s.stats,
             });
@@ -674,6 +706,8 @@ mod tests {
             user: 0,
             shared_prefix_len: 0,
             end_session: false,
+            deadline: None,
+            tier: Default::default(),
         }
     }
 
@@ -686,6 +720,9 @@ mod tests {
                 waiting: i,
                 running: 0,
                 kv_pressure: 0.0,
+                pressure: 0.0,
+                slo_attainment: 1.0,
+                slo_samples: 0,
             })
             .collect()
     }
@@ -755,15 +792,33 @@ mod tests {
     }
 
     #[test]
-    fn slo_headroom_scales_with_latency_and_budget() {
-        let slo = Slo { ttft_ms: 1_000.0, itl_ms: 100.0 };
-        let r = req(16, 0); // output_len 8 -> budget 1.8s
+    fn slo_headroom_reports_measured_attainment() {
         let mut stats = EngineStats::default();
-        assert_eq!(slo_headroom(&stats, &r, &slo), 1.0, "no history = full headroom");
-        stats.avg_latency_us = 900_000.0; // half the budget
-        assert!((slo_headroom(&stats, &r, &slo) - 0.5).abs() < 1e-9);
-        stats.avg_latency_us = 5_000_000.0; // far over
-        assert_eq!(slo_headroom(&stats, &r, &slo), 0.0);
+        assert_eq!(slo_headroom(&stats), 1.0, "no history = full headroom");
+        // High mean latency alone no longer dents headroom — only *missed*
+        // SLOs do (the old proxy punished long-decode traffic).
+        stats.avg_latency_us = 30_000_000.0;
+        assert_eq!(slo_headroom(&stats), 1.0);
+        stats.slo_samples = 10;
+        stats.slo_attainment = 0.7;
+        assert!((slo_headroom(&stats) - 0.7).abs() < 1e-12);
+        stats.slo_attainment = 2.0; // malformed publisher: clamp
+        assert_eq!(slo_headroom(&stats), 1.0);
+        stats.slo_attainment = 0.0;
+        assert_eq!(slo_headroom(&stats), 0.0);
+    }
+
+    #[test]
+    fn fleet_pressure_takes_the_worst_routable_pod() {
+        let mut view = ClusterView::new(ClusterViewConfig::default());
+        let mut pods = counter_pods(3);
+        pods[0].pressure = 0.2;
+        pods[1].pressure = 0.9;
+        pods[2].pressure = 1.0;
+        pods[2].ready = false; // out of rotation: its pressure is moot
+        let snaps = view.snapshot(0, &req(16, 0), &mut pods, None);
+        assert!((fleet_pressure(&snaps) - 0.9).abs() < 1e-12);
+        assert_eq!(fleet_pressure(&[]), 1.0, "no routable pod = fully shed");
     }
 
     #[test]

@@ -17,12 +17,21 @@
 //! which drains and cordons the afflicted pods. Every admitted request
 //! either completes or lands in `RunReport::rejections` with a typed
 //! [`RejectReason`] — request conservation is checkable, not assumed.
+//!
+//! With an [`AdmissionConfig`] wired in, the gateway's overload plane
+//! runs in front of routing: tier-aware pressure shedding plus deadline
+//! feasibility (§ overload protection). Recovery retries re-run
+//! admission too — stranded work counts against the same pressure
+//! signal as fresh arrivals — and engine-side dead-at-admission drops
+//! are drained into the same rejection ledger, so conservation holds
+//! with every protection layer active at once.
 
 use crate::chaos::{ChaosFault, ChaosSchedule, RecoveryPolicy, RejectReason};
 use crate::diagnostics::{diagnose, FailureInjector};
 use crate::engine::{Completion, EngineConfig, EngineSim, ExternalKv};
 use crate::gateway::{
-    ClusterView, ClusterViewConfig, Decision, Gateway, HealthState, Policy, ScoreCtx,
+    AdmissionConfig, AdmissionCounters, ClusterView, ClusterViewConfig, Decision, Gateway,
+    HealthState, Policy, ScoreCtx,
 };
 use crate::json::Json;
 use crate::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
@@ -54,6 +63,10 @@ pub struct HarnessConfig {
     pub chaos: Option<ChaosSchedule>,
     /// Backoff/deadline/sweep knobs for in-flight recovery.
     pub recovery: RecoveryPolicy,
+    /// Predictive overload admission at the gateway (tier-aware pressure
+    /// shedding + deadline feasibility); None = admit everything the rate
+    /// limiter allows (the pre-overload-plane behavior).
+    pub admission: Option<AdmissionConfig>,
 }
 
 /// Aggregated outcome of a run.
@@ -84,6 +97,8 @@ pub struct RunReport {
     pub detect_to_cordon_us: Option<u64>,
     /// The health state machine's full transition log.
     pub health_transitions: Vec<(SimTime, usize, HealthState)>,
+    /// Gateway admission outcomes by tier (all-zero when admission is off).
+    pub admission: AdmissionCounters,
 }
 
 impl RunReport {
@@ -155,6 +170,17 @@ impl RunReport {
             / (self.makespan as f64 / 1e6)
     }
 
+    /// Goodput: completions that met their TTFT deadline, per second —
+    /// the overload-protection figure of merit. Deadline-free requests
+    /// count unconditionally, so fault-free runs report plain throughput.
+    pub fn goodput(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.completions.iter().filter(|c| c.met_deadline()).count() as f64
+            / (self.makespan as f64 / 1e6)
+    }
+
     /// Decode-only throughput (the paper's second throughput column).
     pub fn decode_throughput(&self) -> f64 {
         if self.makespan == 0 {
@@ -221,6 +247,9 @@ pub fn run_with_router_config(
     if !lora_affinity {
         gateway.router.lora_affinity = false;
     }
+    if let Some(ac) = cfg.admission.clone() {
+        gateway = gateway.with_admission(ac);
+    }
     let mut pool = cfg.kv_pool.clone().map(DistKvPool::new);
     // The unified signal plane: one snapshot producer for every arrival,
     // keyed on the engines' block size (the sim's unseeded hash chain).
@@ -264,6 +293,7 @@ pub fn run_with_router_config(
     }
     let deadline = if cfg.deadline == 0 { SimTime::MAX } else { cfg.deadline };
     let mut completed_seen: Vec<usize> = vec![0; engines.len()];
+    let mut shed_seen: Vec<usize> = vec![0; engines.len()];
 
     while let Some((now, ev)) = sim.next_event() {
         if now >= deadline {
@@ -307,6 +337,10 @@ pub fn run_with_router_config(
                         rejected += 1;
                         rejections.push((req.id, RejectReason::RateLimited));
                     }
+                    Decision::Shed { reason, .. } => {
+                        rejected += 1;
+                        rejections.push((req.id, reason));
+                    }
                     Decision::NoCapacity => {
                         rejected += 1;
                         rejections.push((req.id, RejectReason::NoCapacity));
@@ -349,6 +383,19 @@ pub fn run_with_router_config(
                     }
                 }
                 completed_seen[i] = done;
+                // Requests the engine itself shed (dead-at-admission
+                // deadline drops) join the typed rejection ledger so
+                // conservation holds at the report level; a closed-loop
+                // client whose request died there keeps its slot.
+                let shed = engines[i].rejections.len();
+                for &(id, reason) in &engines[i].rejections[shed_seen[i]..shed] {
+                    rejected += 1;
+                    rejections.push((id, reason));
+                    if cfg.closed_loop_clients > 0 {
+                        sim.schedule_at(now, Ev::Arrive);
+                    }
+                }
+                shed_seen[i] = shed;
             }
             Ev::Chaos(i) => {
                 let Some(ev) = cfg.chaos.as_ref().and_then(|c| c.events().get(i)).copied()
@@ -412,7 +459,13 @@ pub fn run_with_router_config(
             Ev::Retry(req, attempt) => {
                 pending_retries = pending_retries.saturating_sub(1);
                 retries += 1;
-                if now.saturating_sub(req.arrival) > recovery.deadline_us {
+                // A retry is still bound by deadlines: the recovery
+                // policy's wall-clock budget *and* the request's own TTFT
+                // deadline. Re-dispatching work that can only miss burns
+                // prefill the overloaded fleet doesn't have.
+                let expired = now.saturating_sub(req.arrival) > recovery.deadline_us
+                    || req.deadline.is_some_and(|d| now >= d);
+                if expired {
                     rejected += 1;
                     rejections.push((req.id, RejectReason::DeadlineExceeded));
                     // A closed-loop client whose request terminally failed
@@ -430,11 +483,36 @@ pub fn run_with_router_config(
                     }
                     continue;
                 }
-                // Re-dispatch bypasses admission — the request was already
-                // admitted once; a retry must not be double-charged by the
-                // rate limiter — and goes straight to routing over fresh
-                // snapshots (which exclude the dead/draining pods).
+                // Re-dispatch bypasses the rate limiter — the request was
+                // already admitted once; a retry must not be double-charged
+                // against its tenant's quota — but NOT the overload plane:
+                // it re-runs admission over fresh snapshots, so stranded
+                // work counts against the same pressure signal as new
+                // arrivals and sheds by tier like everything else.
                 let snaps = view.snapshot(now, &req, &mut engines, pool.as_ref());
+                if let Some(adm) = gateway.admission.as_mut() {
+                    if let Err(shed) = adm.evaluate(now, &req, &snaps) {
+                        if shed.reason == RejectReason::DeadlineExceeded {
+                            // Predictively infeasible: terminal, typed.
+                            rejected += 1;
+                            rejections.push((req.id, RejectReason::DeadlineExceeded));
+                            if cfg.closed_loop_clients > 0 {
+                                sim.schedule_at(now, Ev::Arrive);
+                            }
+                        } else {
+                            // Pressure shed: back off and try again once
+                            // the brownout clears (spends an attempt, so
+                            // sustained overload ends in RetriesExhausted,
+                            // never a silent drop).
+                            pending_retries += 1;
+                            sim.schedule_in(
+                                recovery.backoff_us(attempt),
+                                Ev::Retry(req, attempt + 1),
+                            );
+                        }
+                        continue;
+                    }
+                }
                 let ctx = ScoreCtx { tenant_share: gateway.usage.share(now, req.user) };
                 match gateway.router.select_with_ctx(&req, &snaps, &ctx) {
                     Some(pod) => {
@@ -473,7 +551,11 @@ pub fn run_with_router_config(
         decode_tokens += e.decode_tokens_done;
         preemptions += e.preemptions;
         hit_rates.push(e.stats(deadline.min(1 << 60)).prefix_hit_rate);
-        let _ = i;
+        // Engine-side deadline sheds the step sweep hadn't drained yet.
+        for &(id, reason) in &e.rejections[shed_seen[i]..] {
+            rejected += 1;
+            rejections.push((id, reason));
+        }
     }
     for c in &completions {
         makespan = makespan.max(c.finished_at);
@@ -508,6 +590,7 @@ pub fn run_with_router_config(
         retries,
         detect_to_cordon_us,
         health_transitions: view.health().transitions().to_vec(),
+        admission: gateway.admission.as_ref().map(|a| *a.counters()).unwrap_or_default(),
     }
 }
 
@@ -551,6 +634,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let mut w = small_workload(50);
         let r = run(cfg, &mut w);
@@ -574,6 +658,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let a = run(mk(), &mut small_workload(40));
         let b = run(mk(), &mut small_workload(40));
@@ -599,6 +684,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let a = run(mk(), &mut small_workload(60));
         let b = run(mk(), &mut small_workload(60));
@@ -631,6 +717,7 @@ mod tests {
                 view: Default::default(),
                 chaos: None,
                 recovery: Default::default(),
+                admission: None,
             };
             let mut wl = || {
                 ShareGptWorkload::new(ShareGptConfig {
@@ -662,6 +749,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let no_pool = run(base, &mut small_workload(120));
 
@@ -681,6 +769,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let with_pool = run(with_pool_cfg, &mut small_workload(120));
         assert_eq!(with_pool.completions.len(), 120);
@@ -707,6 +796,7 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let r = run(cfg, &mut small_workload(30));
         let j = r.bench_json("smoke");
@@ -739,6 +829,7 @@ mod tests {
                 fault: ChaosFault::ReplicaDeath { pod: 0 },
             }])),
             recovery: Default::default(),
+            admission: None,
         };
         let r = run(cfg, &mut small_workload(60));
         assert_eq!(
@@ -784,6 +875,7 @@ mod tests {
             view: Default::default(),
             chaos: Some(ChaosSchedule::from_seed(21, 3, &[0, 1, 2], 2_000_000)),
             recovery: Default::default(),
+            admission: None,
         };
         let a = run(mk(), &mut small_workload(80));
         let b = run(mk(), &mut small_workload(80));
@@ -820,6 +912,7 @@ mod tests {
                 fault: ChaosFault::ShardLoss { node: 0 },
             }])),
             recovery: Default::default(),
+            admission: None,
         };
         let r = run(cfg, &mut small_workload(70));
         assert_eq!(r.completions.len(), 70, "shard loss must not lose requests");
@@ -855,6 +948,7 @@ mod tests {
                 fault: ChaosFault::Straggler { pod: 1, factor: 6.0 },
             }])),
             recovery: Default::default(),
+            admission: None,
         };
         let r = run(cfg, &mut small_workload(50));
         assert_eq!(r.completions.len() + r.rejections.len(), 50);
@@ -883,9 +977,85 @@ mod tests {
             view: Default::default(),
             chaos: None,
             recovery: Default::default(),
+            admission: None,
         };
         let r = run(cfg, &mut small_workload(10_000));
         assert!(r.completions.len() < 10_000);
         assert!(r.makespan <= 2_500_000);
+    }
+
+    #[test]
+    fn overload_admission_sheds_by_tier_and_conserves() {
+        use crate::gateway::tier_index;
+        use crate::workload::Tier;
+        // A 240-request flood at 600 req/s onto ONE engine (max 48
+        // concurrent, queue-pressure denominator 96): pressure crosses the
+        // Batch shed threshold fast. The protected run must shed with
+        // typed reasons, keep the ledger consistent with the per-tier
+        // counters, never invert priority in aggregate, and stay
+        // deterministic.
+        let mk = |admission: Option<AdmissionConfig>| HarnessConfig {
+            engines: engines(1, false),
+            policy: Policy::LeastRequest,
+            arrival: ArrivalProcess::Poisson { rate: 600.0 },
+            kv_pool: None,
+            seed: 7,
+            deadline: 0,
+            closed_loop_clients: 0,
+            view: Default::default(),
+            chaos: None,
+            recovery: Default::default(),
+            admission,
+        };
+        let wl = || {
+            BirdSqlWorkload::new(BirdSqlConfig {
+                n_requests: 240,
+                n_schemas: 4,
+                schema_tokens_mean: 400,
+                question_tokens_mean: 100,
+                interactive_fraction: 0.2,
+                batch_fraction: 0.4,
+                ttft_budget_us: Some(300_000),
+                ..Default::default()
+            })
+        };
+        let r = run(mk(Some(AdmissionConfig::default())), &mut wl());
+        assert_eq!(
+            r.completions.len() + r.rejections.len(),
+            240,
+            "conservation: {} completed + {} rejected",
+            r.completions.len(),
+            r.rejections.len()
+        );
+        assert_eq!(r.rejections.len() as u64, r.rejected);
+        assert!(r.admission.total_shed() > 0, "overload must shed: {:?}", r.admission);
+        assert!(
+            r.admission.shed_pressure[tier_index(Tier::Batch)] > 0,
+            "Batch sheds first: {:?}",
+            r.admission
+        );
+        assert!(
+            r.admission.shed_pressure[tier_index(Tier::Interactive)]
+                <= r.admission.shed_pressure[tier_index(Tier::Batch)],
+            "priority-weighted shedding: {:?}",
+            r.admission
+        );
+        // Every pressure shed in the counters is a typed AdmissionShed in
+        // the ledger, one-for-one (deadline sheds share their reason with
+        // the engine's own dead-at-admission drops, so only the pressure
+        // lane is exactly attributable).
+        let ledger_shed = r
+            .rejections
+            .iter()
+            .filter(|&&(_, reason)| reason == RejectReason::AdmissionShed)
+            .count() as u64;
+        assert_eq!(ledger_shed, r.admission.shed_pressure.iter().sum::<u64>());
+        let r2 = run(mk(Some(AdmissionConfig::default())), &mut wl());
+        assert_eq!(r.rejections, r2.rejections, "admission must be deterministic");
+        // Unprotected leg: the admission counters stay zero and requests
+        // still conserve (doomed ones die at the engine, typed).
+        let open = run(mk(None), &mut wl());
+        assert_eq!(open.admission, AdmissionCounters::default());
+        assert_eq!(open.completions.len() + open.rejections.len(), 240);
     }
 }

@@ -145,14 +145,17 @@ fn word_at(code: &[char], pos: usize, w: &str) -> bool {
 /// names are load-bearing in this codebase: the workspace/buffer arenas
 /// are the runtime class (checked before the generic pool match), the
 /// router is the gateway's lock, cluster snapshots are `view`, the
-/// shared KV pool is `pool`, and engines wrap in `engine`. Unrecognized
-/// receivers (test scaffolding, channel receivers) are ignored.
+/// shared KV pool is `pool`, and engines wrap in `engine`. The overload
+/// admission controller sits beside the router at the gateway rank (it
+/// must never be taken while a snapshot or pool lock is held).
+/// Unrecognized receivers (test scaffolding, channel receivers) are
+/// ignored.
 fn classify_receiver(recv: &str) -> Option<usize> {
     let last = recv.rsplit('.').next().unwrap_or(recv);
     if last.contains("ws_pool") || last.contains("buf_pool") {
         return Some(4); // runtime
     }
-    if last.contains("router") {
+    if last.contains("router") || last.contains("admission") {
         return Some(0); // gateway
     }
     if last.contains("view") {
@@ -572,6 +575,21 @@ mod tests {
         g.check(&mut findings);
         // gateway→view, gateway→pool, view→pool: all forward.
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn admission_is_a_gateway_rank_lock() {
+        // The admission controller ranks with the router: taking it while
+        // a ClusterView snapshot lock is held is a back-edge (the serve
+        // path drops the view guard before evaluating admission).
+        assert_eq!(classify_receiver("admission"), Some(0));
+        assert_eq!(classify_receiver("self.admission"), Some(0));
+        let src = "fn bad() {\n    let v = lock_or_recover(&self.view);\n    let adm = lock_or_recover(&admission);\n}\n";
+        let (_, _, g) = run("rust/src/gateway/x.rs", src);
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("back-edge"));
     }
 
     #[test]

@@ -14,16 +14,17 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use aibrix::chaos::RejectReason;
 use aibrix::cli::Args;
 use aibrix::cluster::GpuKind;
 use aibrix::diagnostics::{diagnose, FailureInjector, InjectedFault};
-use aibrix::engine::real::{EngineOpts, EnginePool, RealEngineHandle, RealRequest};
+use aibrix::engine::real::{EngineOpts, EnginePool, RealEngineHandle, RealRequest, ServeOutcome};
 use aibrix::engine::ModelSpec;
 use aibrix::runtime::{Manifest, Precision};
 use aibrix::experiments::{fig7, hetero, routing, scaling, table1};
 use aibrix::gateway::{
-    ClusterView, ClusterViewConfig, CounterPod, Policy, Router, ScoreCtx, TenantUsage,
-    SCORER_NAMES,
+    tier_index, AdmissionConfig, AdmissionController, ClusterView, ClusterViewConfig, CounterPod,
+    Policy, Router, ScoreCtx, TenantUsage, SCORER_NAMES,
 };
 use aibrix::json::{parse, Json};
 use aibrix::optimizer::loadmonitor::LoadMonitor;
@@ -32,7 +33,7 @@ use aibrix::optimizer::GpuOptimizer;
 use aibrix::server::{Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
 use aibrix::util::lock::{lock_or_recover, lock_poison_total};
-use aibrix::workload::Request;
+use aibrix::workload::{Request, Tier};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -289,7 +290,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // The unified signal plane: pool residency (when --kv-pool), bounded
     // session stickiness, SLO headroom. Env knobs: AIBRIX_SLO_TTFT_MS,
     // AIBRIX_SLO_ITL_MS, AIBRIX_SESSION_CAP.
-    let view = {
+    let (view, slo_ttft_ms) = {
         let mut cfg = match ClusterViewConfig::from_env() {
             Ok(c) => c,
             Err(e) => {
@@ -301,7 +302,10 @@ fn cmd_serve(args: &Args) -> i32 {
             cfg.block_size = h.block_tokens();
             cfg.chain_seed = h.chain_seed();
         }
-        Arc::new(Mutex::new(ClusterView::new(cfg)))
+        // The SLO TTFT target doubles as the default per-request deadline
+        // (a body-level `deadline_ms` overrides; 0 opts out).
+        let slo_ttft_ms = cfg.slo.ttft_ms;
+        (Arc::new(Mutex::new(ClusterView::new(cfg))), slo_ttft_ms)
     };
     let view_handler = Arc::clone(&view);
     let pool_hook_handler = pool_hook.clone();
@@ -309,6 +313,12 @@ fn cmd_serve(args: &Args) -> i32 {
     // the sim gateway does (wall-clock µs since server start). Charged at
     // *completion* with served tokens, not at admission with promises.
     let usage = Arc::new(Mutex::new(TenantUsage::default()));
+    // Predictive overload admission (tier-aware pressure shedding +
+    // deadline feasibility) — the same controller the sim gateway runs.
+    // The serve path's pressure signal is queue depth: per-replica
+    // in-flight over SERVE_INFLIGHT_CAP (the handle exposes no KV gauge).
+    const SERVE_INFLIGHT_CAP: f64 = 32.0;
+    let admission = Arc::new(Mutex::new(AdmissionController::new(AdmissionConfig::default())));
     // Per-tenant routed-request counts per replica (bounded): the routing
     // skew signal /metrics surfaces.
     let tenant_routed: Arc<Mutex<std::collections::BTreeMap<u32, Vec<u64>>>> =
@@ -349,10 +359,38 @@ fn cmd_serve(args: &Args) -> i32 {
                     lock_poison_total()
                 ));
                 for (i, c) in inflight.iter().enumerate() {
+                    let q = c.load(Ordering::Relaxed);
+                    body.push_str(&format!("aibrix_inflight_requests{{replica=\"{i}\"}} {q}\n"));
                     body.push_str(&format!(
-                        "aibrix_inflight_requests{{replica=\"{i}\"}} {}\n",
-                        c.load(Ordering::Relaxed)
+                        "aibrix_pressure{{replica=\"{i}\"}} {:.6}\n",
+                        (q as f64 / SERVE_INFLIGHT_CAP).min(1.0)
                     ));
+                }
+                // Overload plane: admission outcomes by tier and typed
+                // reason, mirroring the gateway counters one-for-one.
+                {
+                    let adm = lock_or_recover(&admission);
+                    let ctr = adm.counters();
+                    for t in Tier::ALL {
+                        let i = tier_index(t);
+                        body.push_str(&format!(
+                            "aibrix_admission_admitted_total{{tier=\"{}\"}} {}\n",
+                            t.as_str(),
+                            ctr.admitted[i]
+                        ));
+                        body.push_str(&format!(
+                            "aibrix_admission_shed_total{{tier=\"{}\",reason=\"{}\"}} {}\n",
+                            t.as_str(),
+                            RejectReason::AdmissionShed.as_str(),
+                            ctr.shed_pressure[i]
+                        ));
+                        body.push_str(&format!(
+                            "aibrix_admission_shed_total{{tier=\"{}\",reason=\"{}\"}} {}\n",
+                            t.as_str(),
+                            RejectReason::DeadlineExceeded.as_str(),
+                            ctr.shed_deadline[i]
+                        ));
+                    }
                 }
                 // Per-replica runtime quant telemetry (answered by the
                 // engine thread between batches, so a scrape may briefly
@@ -476,7 +514,30 @@ fn cmd_serve(args: &Args) -> i32 {
                 // Final turn of a session: the client tells us the slot
                 // can be freed eagerly instead of idling to TTL/eviction.
                 let end_session = body["end_session"].as_bool().unwrap_or(false);
+                // Overload-plane inputs: priority tier (shed order under
+                // pressure) and TTFT deadline. `deadline_ms` overrides the
+                // AIBRIX_SLO_TTFT_MS default; an explicit 0 opts the
+                // request out of deadline enforcement.
+                let tier = match body["tier"].as_str() {
+                    Some(s) => match Tier::parse(s) {
+                        Some(t) => t,
+                        None => {
+                            return HttpResponse::json(
+                                400,
+                                r#"{"error":"tier must be interactive|standard|batch"}"#,
+                            )
+                        }
+                    },
+                    None => Tier::Standard,
+                };
+                let deadline_budget_us: Option<u64> = match body["deadline_ms"].as_u64() {
+                    Some(0) => None,
+                    Some(ms) => Some(ms.saturating_mul(1_000)),
+                    None if slo_ttft_ms > 0.0 => Some((slo_ttft_ms * 1_000.0) as u64),
+                    None => None,
+                };
                 let prompt_tokens = tokens.len();
+                let now_us = t_start.elapsed().as_micros() as u64;
                 let route_req = Request {
                     id,
                     session,
@@ -492,10 +553,69 @@ fn cmd_serve(args: &Args) -> i32 {
                     user,
                     shared_prefix_len: 0,
                     end_session,
+                    deadline: deadline_budget_us.map(|b| now_us.saturating_add(b)),
+                    tier,
                 };
-                let now_us = t_start.elapsed().as_micros() as u64;
                 let ctx =
                     ScoreCtx { tenant_share: lock_or_recover(&usage).share(now_us, user) };
+                let mk_pods = || -> Vec<CounterPod> {
+                    inflight
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| {
+                            // The handle only exposes an in-flight count;
+                            // admitted work is queued until its iteration.
+                            let q = c.load(Ordering::Relaxed);
+                            CounterPod {
+                                pod: i,
+                                node: i as u64,
+                                ready: true,
+                                waiting: q,
+                                running: 0,
+                                kv_pressure: 0.0,
+                                pressure: (q as f64 / SERVE_INFLIGHT_CAP).min(1.0),
+                                slo_attainment: 1.0,
+                                slo_samples: 0,
+                            }
+                        })
+                        .collect()
+                };
+                // Overload admission runs before select-and-claim, over its
+                // own short-lived snapshot: the view lock is released before
+                // the controller's lock is taken, and the router lock is
+                // never held around either (lock order stays acyclic).
+                let verdict = {
+                    let snaps = {
+                        let mut v = lock_or_recover(&view_handler);
+                        let mut pods = mk_pods();
+                        match &pool_hook_handler {
+                            Some(h) => {
+                                let now = h.clock_us();
+                                h.with_pool(|pool| {
+                                    v.snapshot(now, &route_req, &mut pods, Some(pool))
+                                })
+                            }
+                            None => v.snapshot(now_us, &route_req, &mut pods, None),
+                        }
+                    };
+                    lock_or_recover(&admission).evaluate(now_us, &route_req, &snaps)
+                };
+                if let Err(shed) = verdict {
+                    // Typed rejection surface: 429 + Retry-After, reason in
+                    // the body so clients can distinguish pressure sheds
+                    // (back off and retry) from dead deadlines (don't).
+                    let retry_after_s = (shed.retry_after_ms + 999) / 1000;
+                    return HttpResponse::json(
+                        429,
+                        &Json::obj([
+                            ("error", Json::from("overloaded")),
+                            ("reason", Json::from(shed.reason.as_str())),
+                            ("retry_after_ms", Json::from(shed.retry_after_ms)),
+                        ])
+                        .to_string(),
+                    )
+                    .with_header("Retry-After", retry_after_s.max(1).to_string());
+                }
                 // Select and claim under one lock: snapshotting loads,
                 // picking, and bumping the winner's in-flight count must be
                 // atomic or concurrent requests all see equal loads and
@@ -503,20 +623,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 let pick = {
                     let mut r = lock_or_recover(&router);
                     let mut v = lock_or_recover(&view_handler);
-                    let mut pods: Vec<CounterPod> = inflight
-                        .iter()
-                        .enumerate()
-                        .map(|(i, c)| CounterPod {
-                            pod: i,
-                            node: i as u64,
-                            ready: true,
-                            // The handle only exposes an in-flight count;
-                            // admitted work is queued until its iteration.
-                            waiting: c.load(Ordering::Relaxed),
-                            running: 0,
-                            kv_pressure: 0.0,
-                        })
-                        .collect();
+                    let mut pods = mk_pods();
                     // Pool residency reads the pool's own µs clock (the
                     // epoch visible_at stamps tick against).
                     let snaps = match &pool_hook_handler {
@@ -526,7 +633,19 @@ fn cmd_serve(args: &Args) -> i32 {
                         }
                         None => v.snapshot(now_us, &route_req, &mut pods, None),
                     };
-                    let p = r.select_with_ctx(&route_req, &snaps, &ctx).unwrap_or(0);
+                    let Some(p) = r.select_with_ctx(&route_req, &snaps, &ctx) else {
+                        // Nothing routable (all pods draining/cordoned):
+                        // typed 503, retry shortly.
+                        return HttpResponse::json(
+                            503,
+                            &Json::obj([
+                                ("error", Json::from("no capacity")),
+                                ("reason", Json::from(RejectReason::NoCapacity.as_str())),
+                            ])
+                            .to_string(),
+                        )
+                        .with_header("Retry-After", "1");
+                    };
                     if session != 0 {
                         if end_session {
                             // Last turn: route it (stickiness applied via
@@ -545,11 +664,31 @@ fn cmd_serve(args: &Args) -> i32 {
                         routed.entry(user).or_insert_with(|| vec![0u64; n_replicas])[pick] += 1;
                     }
                 }
-                let completion =
-                    replicas[pick].serve(RealRequest { id, tokens, max_new_tokens: max_tokens });
+                // The engine races the *remaining* TTFT budget: time spent
+                // in routing/admission already counts against the deadline.
+                let deadline_us = deadline_budget_us.map(|b| {
+                    let spent = (t_start.elapsed().as_micros() as u64).saturating_sub(now_us);
+                    b.saturating_sub(spent)
+                });
+                let completion = replicas[pick].serve(RealRequest {
+                    id,
+                    tokens,
+                    max_new_tokens: max_tokens,
+                    deadline_us,
+                    tier,
+                });
                 inflight[pick].fetch_sub(1, Ordering::Relaxed);
                 match completion {
-                    Ok(c) => {
+                    Ok(ServeOutcome::Rejected(reason)) => HttpResponse::json(
+                        429,
+                        &Json::obj([
+                            ("error", Json::from("deadline exceeded while queued")),
+                            ("reason", Json::from(reason.as_str())),
+                        ])
+                        .to_string(),
+                    )
+                    .with_header("Retry-After", "1"),
+                    Ok(ServeOutcome::Done(c)) => {
                         // Fairness meter: charge the tokens actually served
                         // (prompt + generated), at completion time.
                         lock_or_recover(&usage).record(

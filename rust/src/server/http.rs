@@ -48,11 +48,18 @@ pub struct HttpResponse {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers, e.g. `Retry-After` on 429/503 sheds.
+    pub headers: Vec<(String, String)>,
 }
 
 impl HttpResponse {
     pub fn text(status: u16, body: &str) -> HttpResponse {
-        HttpResponse { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        HttpResponse {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
+        }
     }
 
     pub fn json(status: u16, body: &str) -> HttpResponse {
@@ -60,7 +67,14 @@ impl HttpResponse {
             status,
             content_type: "application/json",
             body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
         }
+    }
+
+    /// Builder: attach one extra header.
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> HttpResponse {
+        self.headers.push((name.to_string(), value.into()));
+        self
     }
 
     fn reason(&self) -> &'static str {
@@ -76,14 +90,21 @@ impl HttpResponse {
 
     pub fn serialize(&self, keep_alive: bool) -> Vec<u8> {
         let mut out = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason(),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
-        )
-        .into_bytes();
+        );
+        for (name, value) in &self.headers {
+            out.push_str(name);
+            out.push_str(": ");
+            out.push_str(value);
+            out.push_str("\r\n");
+        }
+        out.push_str("\r\n");
+        let mut out = out.into_bytes();
         out.extend_from_slice(&self.body);
         out
     }
@@ -106,6 +127,17 @@ mod tests {
     fn route_strips_query() {
         assert_eq!(req("/v1/completions?policy=least-request").route(), "/v1/completions");
         assert_eq!(req("/healthz").route(), "/healthz");
+    }
+
+    #[test]
+    fn extra_headers_serialize_before_the_body() {
+        let r = HttpResponse::json(429, "{}").with_header("Retry-After", "2");
+        let s = String::from_utf8(r.serialize(false)).unwrap();
+        assert!(s.contains("Retry-After: 2\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n{}"), "{s}");
+        // Headerless responses keep the exact legacy shape.
+        let plain = String::from_utf8(HttpResponse::text(200, "ok").serialize(true)).unwrap();
+        assert!(plain.contains("Connection: keep-alive\r\n\r\nok"), "{plain}");
     }
 
     #[test]

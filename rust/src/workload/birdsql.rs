@@ -9,7 +9,7 @@
 //! Table-1 configuration matches the paper's totals (~1.08M prompt tokens,
 //! ~12.7k decode tokens over 640 requests).
 
-use super::{Request, Workload};
+use super::{tier_budget_us, tier_for, Request, Workload};
 use crate::sim::SimTime;
 use crate::util::{LogNormal, Rng, Zipf};
 
@@ -28,6 +28,14 @@ pub struct BirdSqlConfig {
     pub zipf_s: f64,
     pub model: String,
     pub seed: u64,
+    /// Fraction of requests in the Interactive tier (deterministic per
+    /// request id; no RNG draws consumed).
+    pub interactive_fraction: f64,
+    /// Fraction in the Batch tier; the remainder is Standard.
+    pub batch_fraction: f64,
+    /// Base TTFT budget (µs) → absolute per-request deadlines, tier-scaled
+    /// (Interactive 1x, Standard 2x, Batch 4x). None = best-effort.
+    pub ttft_budget_us: Option<u64>,
 }
 
 impl Default for BirdSqlConfig {
@@ -43,6 +51,9 @@ impl Default for BirdSqlConfig {
             zipf_s: 1.0,
             model: "deepseek-coder-7b".to_string(),
             seed: 2025,
+            interactive_fraction: 0.0,
+            batch_fraction: 0.0,
+            ttft_budget_us: None,
         }
     }
 }
@@ -101,6 +112,12 @@ impl Workload for BirdSqlWorkload {
         let output_len = (self.out_dist.sample(&mut self.rng).round() as usize).clamp(4, 128);
         let id = self.emitted as u64;
         self.emitted += 1;
+        let tier = tier_for(
+            self.cfg.seed,
+            id,
+            self.cfg.interactive_fraction,
+            self.cfg.batch_fraction,
+        );
         Some(Request {
             id,
             // Session ids are 1-based: 0 is reserved for "stateless"
@@ -116,6 +133,8 @@ impl Workload for BirdSqlWorkload {
             // Schema "sessions" are long-lived across the whole trace, so
             // affinity slots are only ever reclaimed by the TTL sweep.
             end_session: false,
+            deadline: self.cfg.ttft_budget_us.map(|b| now + tier_budget_us(tier, b)),
+            tier,
         })
     }
 }

@@ -14,6 +14,59 @@ pub use sharegpt::{ShareGptConfig, ShareGptWorkload};
 
 use crate::sim::SimTime;
 
+/// Priority tier for overload shedding (§3.2.5 SLO-driven serving).
+///
+/// Under pressure the admission plane sheds Batch first, Standard next,
+/// and Interactive last — shedding is weighted by tier, never by arrival
+/// order alone. Ordering: `Interactive > Standard > Batch` by priority,
+/// which is the *reverse* of the derived `Ord` on discriminants, so use
+/// [`Tier::priority`] (higher = more important) rather than comparing
+/// variants directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Tier {
+    /// Latency-sensitive chat traffic: shed last.
+    Interactive,
+    /// Ordinary API traffic.
+    #[default]
+    Standard,
+    /// Offline/bulk work (summarization, evals): shed first, browned out
+    /// first.
+    Batch,
+}
+
+impl Tier {
+    /// Higher number = higher priority = shed later.
+    pub fn priority(self) -> u8 {
+        match self {
+            Tier::Interactive => 2,
+            Tier::Standard => 1,
+            Tier::Batch => 0,
+        }
+    }
+
+    /// Metric-label form (`tier` label on admission counters).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Standard => "standard",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// All tiers, highest priority first (metrics iteration order).
+    pub const ALL: [Tier; 3] = [Tier::Interactive, Tier::Standard, Tier::Batch];
+
+    /// Parse the wire form (the HTTP body's optional `tier` field).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "interactive" => Some(Tier::Interactive),
+            "standard" => Some(Tier::Standard),
+            "batch" => Some(Tier::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One inference request as seen by the gateway.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -39,6 +92,13 @@ pub struct Request {
     /// session's sticky slot eagerly instead of letting it idle to the
     /// TTL or capacity eviction. Meaningless when `session == 0`.
     pub end_session: bool,
+    /// Absolute TTFT deadline (sim µs). A request whose first token cannot
+    /// land by this instant is worthless — admission sheds it up front and
+    /// the engine drops it from the waiting queue rather than burning
+    /// prefill budget on a guaranteed SLO miss. None = best-effort.
+    pub deadline: Option<SimTime>,
+    /// Priority tier for overload shedding.
+    pub tier: Tier,
 }
 
 impl Request {
@@ -48,6 +108,36 @@ impl Request {
 
     pub fn total_tokens(&self) -> usize {
         self.tokens.len() + self.output_len
+    }
+}
+
+/// Deterministic tier assignment for generators: hash `(seed, id)` into
+/// [0,1) and carve it by the configured fractions. A pure function — it
+/// consumes no generator RNG draws, so enabling a tier mix never perturbs
+/// the token/length streams existing tests and benches are blessed on.
+pub fn tier_for(seed: u64, id: u64, interactive_fraction: f64, batch_fraction: f64) -> Tier {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15u64 ^ id.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 31;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^= h >> 29;
+    let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+    if u < interactive_fraction {
+        Tier::Interactive
+    } else if u < interactive_fraction + batch_fraction {
+        Tier::Batch
+    } else {
+        Tier::Standard
+    }
+}
+
+/// Tier-scaled TTFT budget: Interactive keeps the base budget, Standard
+/// gets 2x, Batch 4x — lower tiers tolerate more queueing before their
+/// deadline makes admission pointless.
+pub fn tier_budget_us(tier: Tier, base_us: u64) -> u64 {
+    match tier {
+        Tier::Interactive => base_us,
+        Tier::Standard => base_us.saturating_mul(2),
+        Tier::Batch => base_us.saturating_mul(4),
     }
 }
 
@@ -74,8 +164,19 @@ mod tests {
             user: 0,
             shared_prefix_len: 2,
             end_session: false,
+            deadline: None,
+            tier: Tier::default(),
         };
         assert_eq!(r.prompt_len(), 3);
         assert_eq!(r.total_tokens(), 8);
+    }
+
+    #[test]
+    fn tier_priority_orders_shedding() {
+        assert!(Tier::Interactive.priority() > Tier::Standard.priority());
+        assert!(Tier::Standard.priority() > Tier::Batch.priority());
+        assert_eq!(Tier::default(), Tier::Standard);
+        assert_eq!(Tier::Batch.as_str(), "batch");
+        assert_eq!(Tier::ALL.len(), 3);
     }
 }

@@ -6,7 +6,7 @@
 //! full conversation so far (prefix sharing *within* a session), unlike
 //! Bird-SQL's cross-request schema sharing. Drives EXP-RT and EXP-HET.
 
-use super::{Request, Workload};
+use super::{tier_budget_us, tier_for, Request, Workload};
 use crate::sim::SimTime;
 use crate::util::{LogNormal, Rng};
 
@@ -25,6 +25,16 @@ pub struct ShareGptConfig {
     /// Fraction of requests that carry a LoRA adapter (0 disables).
     pub adapter_fraction: f64,
     pub n_adapters: usize,
+    /// Fraction of requests in the Interactive tier (deterministic per
+    /// request id — consumes no RNG draws, so enabling a mix never shifts
+    /// the token streams).
+    pub interactive_fraction: f64,
+    /// Fraction of requests in the Batch tier; the remainder is Standard.
+    pub batch_fraction: f64,
+    /// Base TTFT budget (µs). When set, every request carries an absolute
+    /// deadline of `arrival + tier_budget_us(tier, base)` (Interactive 1x,
+    /// Standard 2x, Batch 4x). None = no deadlines (best-effort).
+    pub ttft_budget_us: Option<u64>,
 }
 
 impl Default for ShareGptConfig {
@@ -41,6 +51,9 @@ impl Default for ShareGptConfig {
             seed: 7,
             adapter_fraction: 0.0,
             n_adapters: 0,
+            interactive_fraction: 0.0,
+            batch_fraction: 0.0,
+            ttft_budget_us: None,
         }
     }
 }
@@ -134,6 +147,12 @@ impl Workload for ShareGptWorkload {
             None
         };
 
+        let tier = tier_for(
+            self.cfg.seed,
+            id,
+            self.cfg.interactive_fraction,
+            self.cfg.batch_fraction,
+        );
         let mut req = Request {
             id,
             session: session.id,
@@ -145,6 +164,8 @@ impl Workload for ShareGptWorkload {
             user: session.user,
             shared_prefix_len: shared,
             end_session: false,
+            deadline: self.cfg.ttft_budget_us.map(|b| now + tier_budget_us(tier, b)),
+            tier,
         };
 
         // Assistant reply becomes part of the session history.
@@ -239,6 +260,32 @@ mod tests {
         for r in reqs.iter().filter(|r| r.adapter.is_some()) {
             let name = r.adapter.as_ref().unwrap();
             assert!(name.starts_with("lora-"));
+        }
+    }
+
+    #[test]
+    fn tier_mix_carries_scaled_deadlines_without_perturbing_tokens() {
+        use crate::workload::Tier;
+        let plain = drain(ShareGptConfig { n_requests: 300, ..Default::default() });
+        let mixed = drain(ShareGptConfig {
+            n_requests: 300,
+            interactive_fraction: 0.3,
+            batch_fraction: 0.3,
+            ttft_budget_us: Some(1_000_000),
+            ..Default::default()
+        });
+        // Tier assignment is RNG-free: the token streams are untouched.
+        for (a, b) in plain.iter().zip(&mixed) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.tier, Tier::Standard);
+            assert_eq!(a.deadline, None);
+        }
+        for t in Tier::ALL {
+            assert!(mixed.iter().any(|r| r.tier == t), "tier {t:?} never drawn");
+        }
+        for r in &mixed {
+            let budget = tier_budget_us(r.tier, 1_000_000);
+            assert_eq!(r.deadline, Some(r.arrival + budget));
         }
     }
 

@@ -29,6 +29,8 @@ fn req(tokens: Vec<u32>, session: u64) -> Request {
         user: 0,
         shared_prefix_len: 0,
         end_session: false,
+        deadline: None,
+        tier: Default::default(),
     }
 }
 
@@ -232,6 +234,7 @@ fn prop_pool_residency_matches_metadata() {
                     waiting: 0,
                     running: 0,
                     kv_pressure: 0.0,
+                    ..Default::default()
                 })
                 .collect();
             let snaps = view.snapshot(*now, &r, &mut pods, Some(&pool));

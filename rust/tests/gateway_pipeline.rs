@@ -24,6 +24,8 @@ fn req() -> Request {
         user: 0,
         shared_prefix_len: 0,
         end_session: false,
+        deadline: None,
+        tier: Default::default(),
     }
 }
 
@@ -44,6 +46,7 @@ fn snapshots(sigs: &[PodSig]) -> Vec<PodSnapshot> {
                 tokens_per_s: lat / 100.0,
                 avg_latency_us: lat,
                 prefix_hit_rate: kv,
+                ..Default::default()
             },
             prefix_match_blocks: pmb,
             prompt_blocks: 10,

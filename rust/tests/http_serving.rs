@@ -5,7 +5,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use aibrix::engine::real::{RealEngineHandle, RealRequest};
+use aibrix::engine::real::{RealEngineHandle, RealRequest, ServeOutcome};
 use aibrix::json::{parse, Json};
 use aibrix::server::{http_request, Handler, HttpRequest, HttpResponse, HttpServer};
 use aibrix::tokenizer::Tokenizer;
@@ -40,9 +40,12 @@ fn serves_real_completions_over_http() {
                 tokens.push(tokenizer.bos());
             }
             let id = ids.fetch_add(1, Ordering::Relaxed);
-            let c = engine
-                .serve(RealRequest { id, tokens, max_new_tokens: 4 })
+            let out = engine
+                .serve(RealRequest { id, tokens, max_new_tokens: 4, ..Default::default() })
                 .unwrap();
+            let ServeOutcome::Done(c) = out else {
+                panic!("deadline-free request must never be shed");
+            };
             HttpResponse::json(
                 200,
                 &Json::obj([

@@ -26,6 +26,8 @@ fn req(id: u64, prompt: usize, out: usize) -> Request {
         user: (id % 4) as u32,
         shared_prefix_len: 0,
         end_session: false,
+        deadline: None,
+        tier: Default::default(),
     }
 }
 

@@ -225,6 +225,7 @@ fn prop_router_totality() {
                         tokens_per_s: lat / 100.0,
                         avg_latency_us: lat,
                         prefix_hit_rate: kv,
+                        ..Default::default()
                     },
                     prefix_match_blocks: load % 11,
                     prompt_blocks: 10,
@@ -248,6 +249,8 @@ fn prop_router_totality() {
                 user: 0,
                 shared_prefix_len: 0,
                 end_session: false,
+                deadline: None,
+                tier: Default::default(),
             };
             let pick1 = Router::new(policy, *seed).select(&req, &snaps);
             let pick2 = Router::new(policy, *seed).select(&req, &snaps);
@@ -299,6 +302,8 @@ fn prop_fair_queue_conservation() {
                     user,
                     shared_prefix_len: 0,
                     end_session: false,
+                    deadline: None,
+                    tier: Default::default(),
                 });
             }
             let mut seen = std::collections::BTreeSet::new();
@@ -395,6 +400,8 @@ fn prop_engine_liveness_and_no_leaks() {
                     user: 0,
                     shared_prefix_len: 0,
                     end_session: false,
+                    deadline: None,
+                    tier: Default::default(),
                 });
             }
             let mut now = 0;
@@ -753,6 +760,7 @@ fn prop_chaos_request_conservation() {
                 view: Default::default(),
                 chaos: Some(ChaosSchedule::from_seed(seed, pods, &nodes, 2_000_000)),
                 recovery: Default::default(),
+                admission: None,
             };
             let mut w = EndSessionChaos {
                 inner: BirdSqlWorkload::new(BirdSqlConfig {
@@ -844,6 +852,7 @@ fn prop_sched_engine_matches_lockstep() {
                 id: i as u64,
                 tokens: (0..prompt).map(|s| ((i * 31 + s * 7 + 3) % 32) as u32).collect(),
                 max_new_tokens: max_new,
+                ..Default::default()
             };
             let mut lock = RealEngine::from_runtime(TinyLmRuntime::synthetic(&spec()), None)
                 .map_err(|e| e.to_string())?;
@@ -930,6 +939,7 @@ fn prop_sched_chaos_conservation() {
                 id: i as u64,
                 tokens: (0..prompt).map(|s| ((i * 31 + s * 7 + 3) % 32) as u32).collect(),
                 max_new_tokens: max_new,
+                ..Default::default()
             };
             // Fault-free reference (lockstep keeps the two engine cores
             // honest against each other here too).
@@ -1033,6 +1043,7 @@ fn prop_faults_detected_and_cordoned() {
                     fault: ChaosFault::ReplicaDeath { pod: victim },
                 }])),
                 recovery: Default::default(),
+                admission: None,
             };
             let mut w = BirdSqlWorkload::new(BirdSqlConfig {
                 n_requests: 120,
@@ -1055,6 +1066,243 @@ fn prop_faults_detected_and_cordoned() {
             let bound = 3 * RecoveryPolicy::default().sweep_interval_us;
             if d > bound {
                 return Err(format!("detect-to-cordon {d}µs exceeds {bound}µs"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------- overload protection
+
+/// ISSUE 9 anti-inversion invariant, checked at a single decision
+/// instant: whenever the admission controller admits a request, it must
+/// also admit any *higher*-priority request carrying an equal-or-later
+/// deadline against the very same fleet snapshots. The feasibility floor
+/// (predictive deadline sheds only engage at/above the next-lower tier's
+/// shed threshold) exists precisely to make this a theorem — without it,
+/// a queue-ahead estimate could shed an Interactive deadline while Batch
+/// sailed through.
+#[test]
+fn prop_admission_no_priority_inversion() {
+    use aibrix::engine::EngineStats;
+    use aibrix::gateway::{AdmissionConfig, AdmissionController};
+    use aibrix::workload::Tier;
+
+    fn mk(tier: Tier, deadline: Option<u64>) -> Request {
+        Request {
+            id: 0,
+            session: 0,
+            tokens: vec![1; 64],
+            output_len: 8,
+            arrival: 0,
+            model: "m".into(),
+            adapter: None,
+            user: 0,
+            shared_prefix_len: 0,
+            end_session: false,
+            deadline,
+            tier,
+        }
+    }
+
+    forall(
+        "admission-no-priority-inversion",
+        500,
+        |rng, _| {
+            let n = 1 + gen::usize_up_to(rng, 4);
+            let pods: Vec<(f64, usize, f64, f64)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.uniform(0.0, 1.0),     // pressure
+                        gen::usize_up_to(rng, 60), // waiting
+                        rng.uniform(0.0, 8_000.0), // tokens/s (0 = fallback)
+                        rng.uniform(0.0, 1.0),     // kv utilization
+                    )
+                })
+                .collect();
+            let now = rng.below(1_000_000);
+            let lo_deadline =
+                if rng.chance(0.3) { None } else { Some(now + 1 + rng.below(2_000_000)) };
+            let extra = rng.below(1_000_000);
+            (pods, now, lo_deadline, extra)
+        },
+        |&(ref pods, now, lo_deadline, extra)| {
+            let snaps: Vec<PodSnapshot> = pods
+                .iter()
+                .enumerate()
+                .map(|(i, &(pressure, waiting, tokens_per_s, kv_utilization))| PodSnapshot {
+                    pod: i,
+                    stats: EngineStats {
+                        pressure,
+                        waiting,
+                        running: waiting / 3,
+                        tokens_per_s,
+                        kv_utilization,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                })
+                .collect();
+            let mut ac = AdmissionController::new(AdmissionConfig::default());
+            // Every higher/lower tier pairing; the higher-priority request
+            // never carries the *tighter* deadline.
+            for (hi, lo) in [
+                (Tier::Interactive, Tier::Standard),
+                (Tier::Interactive, Tier::Batch),
+                (Tier::Standard, Tier::Batch),
+            ] {
+                let hi_deadline = lo_deadline.map(|d| d + extra);
+                let lo_ok = ac.evaluate(now, &mk(lo, lo_deadline), &snaps).is_ok();
+                let hi_ok = ac.evaluate(now, &mk(hi, hi_deadline), &snaps).is_ok();
+                if lo_ok && !hi_ok {
+                    return Err(format!(
+                        "priority inversion: {lo:?} (deadline {lo_deadline:?}) admitted \
+                         while {hi:?} (deadline {hi_deadline:?}) was shed"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 9 end-to-end overload conservation: under a random overload
+/// factor, tier mix, deadline budget and (optionally) a chaos schedule,
+/// every emitted request terminates as exactly one completion or one
+/// typed rejection with ids partitioning perfectly; the admission
+/// counters' pressure lane reconciles against the rejection ledger via
+/// the workload's deterministic id→tier map (exactly without chaos —
+/// post-fault retries re-run admission, so under chaos the terminal
+/// ledger is a lower bound); the unprotected leg conserves too with
+/// untouched counters; and the whole run replays bit-identically from
+/// its seed. Termination of the protected run doubles as the observable
+/// form of "brownout always recovers": a brownout that failed to exit
+/// would strand admitted work and break conservation.
+#[test]
+fn prop_overload_conservation() {
+    use aibrix::chaos::{ChaosSchedule, RejectReason};
+    use aibrix::engine::ModelSpec;
+    use aibrix::gateway::{tier_index, AdmissionConfig, AdmissionCounters};
+    use aibrix::harness::{run, HarnessConfig};
+    use aibrix::workload::{tier_for, ArrivalProcess, BirdSqlConfig, BirdSqlWorkload};
+    use std::collections::HashSet;
+
+    forall(
+        "overload-conservation",
+        8, // each case is three full harness runs — keep the count tight
+        |rng, _| {
+            (
+                rng.next_u64(),                  // seed
+                rng.below(2) as usize,           // extra pods
+                120 + rng.below(160) as usize,   // requests
+                200.0 + rng.uniform(0.0, 600.0), // arrival rate (overload factor)
+                rng.uniform(0.05, 0.4),          // interactive fraction
+                rng.uniform(0.1, 0.5),           // batch fraction
+                200_000 + rng.below(400_000),    // base TTFT budget, µs
+                rng.below(2) == 0,               // chaos on/off
+            )
+        },
+        |&(seed, extra_pods, n, rate, fi, fb, budget, chaos_on)| {
+            // Chaos kills replicas, so those cases keep a survivor.
+            let pods = if chaos_on { 2 + extra_pods } else { 1 + extra_pods };
+            let nodes: Vec<u64> = (0..pods as u64).collect();
+            let mk_cfg = |admission| HarnessConfig {
+                engines: (0..pods)
+                    .map(|i| {
+                        let mut ec =
+                            EngineConfig::new(GpuKind::A10, ModelSpec::deepseek_coder_7b());
+                        ec.prefix_caching = true;
+                        (ec, i as u64)
+                    })
+                    .collect(),
+                policy: Policy::LeastRequest,
+                arrival: ArrivalProcess::Poisson { rate },
+                kv_pool: None,
+                seed,
+                deadline: 0,
+                closed_loop_clients: 0,
+                view: Default::default(),
+                chaos: if chaos_on {
+                    Some(ChaosSchedule::from_seed(seed, pods, &nodes, 2_000_000))
+                } else {
+                    None
+                },
+                recovery: Default::default(),
+                admission,
+            };
+            let wl_seed = seed ^ 0xBEEF;
+            let wl = || {
+                BirdSqlWorkload::new(BirdSqlConfig {
+                    n_requests: n,
+                    n_schemas: 4,
+                    schema_tokens_mean: 350,
+                    question_tokens_mean: 90,
+                    interactive_fraction: fi,
+                    batch_fraction: fb,
+                    ttft_budget_us: Some(budget),
+                    seed: wl_seed,
+                    ..Default::default()
+                })
+            };
+
+            let r = run(mk_cfg(Some(AdmissionConfig::default())), &mut wl());
+            if r.completions.len() + r.rejections.len() != n {
+                return Err(format!(
+                    "lost requests: {} completed + {} rejected != {n}",
+                    r.completions.len(),
+                    r.rejections.len()
+                ));
+            }
+            let mut seen = HashSet::new();
+            for id in r
+                .completions
+                .iter()
+                .map(|c| c.id)
+                .chain(r.rejections.iter().map(|&(id, _)| id))
+            {
+                if !seen.insert(id) {
+                    return Err(format!("request {id} got two terminal outcomes"));
+                }
+            }
+            // Pressure-lane reconciliation: recompute each shed id's tier
+            // from the workload's deterministic map and compare against
+            // the per-tier counters.
+            let mut ledger = [0u64; 3];
+            for &(id, reason) in &r.rejections {
+                if reason == RejectReason::AdmissionShed {
+                    ledger[tier_index(tier_for(wl_seed, id, fi, fb))] += 1;
+                }
+            }
+            for t in 0..3 {
+                let counted = r.admission.shed_pressure[t];
+                let ok = if chaos_on { ledger[t] <= counted } else { ledger[t] == counted };
+                if !ok {
+                    return Err(format!(
+                        "tier {t}: ledger {} vs counted {counted} pressure sheds (chaos={chaos_on})",
+                        ledger[t]
+                    ));
+                }
+            }
+            // Deterministic replay.
+            let r2 = run(mk_cfg(Some(AdmissionConfig::default())), &mut wl());
+            if r.rejections != r2.rejections
+                || r.completions.len() != r2.completions.len()
+                || r.admission != r2.admission
+            {
+                return Err("protected run is not deterministic".into());
+            }
+            // Unprotected leg: counters untouched, conservation still holds
+            // (doomed requests die at the engine, typed).
+            let open = run(mk_cfg(None), &mut wl());
+            if open.admission != AdmissionCounters::default() {
+                return Err(format!("unprotected run touched counters: {:?}", open.admission));
+            }
+            if open.completions.len() + open.rejections.len() != n {
+                return Err(format!(
+                    "unprotected leg lost requests: {} + {} != {n}",
+                    open.completions.len(),
+                    open.rejections.len()
+                ));
             }
             Ok(())
         },

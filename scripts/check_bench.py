@@ -7,6 +7,7 @@ Usage:
     python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
     python3 scripts/check_bench.py --chaos BENCH_chaos_e2e.json
     python3 scripts/check_bench.py --sched BENCH_engine_sched_e2e.json
+    python3 scripts/check_bench.py --overload BENCH_overload_e2e.json
     python3 scripts/check_bench.py --lint lint_report.json
 
 - CURRENT: the BENCH_runtime.json a bench run just wrote.
@@ -30,6 +31,12 @@ Usage:
   (the continuous-batching scheduler strictly beats the lockstep engine
   on served tok/s and P99 TTFT, outputs bit-identical, and the tight-KV
   leg actually preempted while staying bit-identical).
+- --overload: validate an overload_e2e report — within-run gates only
+  (the protected plane achieves strictly higher goodput than the
+  unprotected run, Interactive P99 TTFT lands within the calibrated SLO,
+  both overload legs conserve every request as one completion or one
+  typed rejection, and served outputs stay bit-identical — or a Batch
+  brownout prefix — to the uncontended reference).
 - --lint: validate an `aibrix_lint --json` report — schema (version 1,
   files_scanned, findings, suppressions), zero findings, and every
   suppression carrying a non-empty reason. This is the CI hard gate for
@@ -237,6 +244,59 @@ def check_sched(path):
     return 0
 
 
+def check_overload(path):
+    """Within-run validation of an overload_e2e report (ISSUE 9
+    acceptance: protected goodput strictly above unprotected, Interactive
+    P99 TTFT within the calibrated SLO, conservation in both overload
+    legs, and served outputs bit-identical — or a Batch brownout prefix —
+    to the uncontended reference)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read overload report {path}: {e}")
+        return 2
+    derived = doc.get("derived", {})
+    gp_prot = derived.get("goodput_protected")
+    gp_unprot = derived.get("goodput_unprotected")
+    p99 = derived.get("interactive_p99_ttft_us")
+    slo = derived.get("slo_ttft_us")
+    out_prot = derived.get("outputs_ok_protected")
+    out_unprot = derived.get("outputs_ok_unprotected")
+    conserved = (derived.get("conserved_protected"),
+                 derived.get("conserved_unprotected"))
+    total = derived.get("total_requests")
+    if None in (gp_prot, gp_unprot, p99, slo, out_prot, out_unprot, total) \
+            or None in conserved:
+        print(f"check_bench: {path} is missing overload derived values")
+        return 2
+    print(f"check_bench: overload {total} requests, goodput protected "
+          f"{gp_prot:.1f}/s vs unprotected {gp_unprot:.1f}/s, Interactive "
+          f"P99 TTFT {p99 / 1e3:.1f}ms vs SLO {slo / 1e3:.1f}ms")
+    if gp_prot <= gp_unprot:
+        print("check_bench: FAIL — the overload plane did not lift goodput")
+        return 1
+    if p99 > slo:
+        print("check_bench: FAIL — protected Interactive P99 TTFT blew the SLO")
+        return 1
+    if conserved != (True, True):
+        print(f"check_bench: FAIL — a leg lost requests (conserved "
+              f"protected/unprotected = {conserved})")
+        return 1
+    if out_prot is not True or out_unprot is not True:
+        print("check_bench: FAIL — served outputs diverged from the "
+              "uncontended reference (beyond the Batch brownout prefix)")
+        return 1
+    rows = {r.get("name"): r for r in doc.get("results", [])}
+    prot = rows.get("protected", {})
+    if not prot.get("gateway_sheds", 0) > 0:
+        print("check_bench: FAIL — the protected leg never shed at the "
+              "gateway (the overload gate is vacuous)")
+        return 1
+    print("check_bench: OK — overload within-run gates hold")
+    return 0
+
+
 def check_lint(path):
     """Validate an aibrix_lint --json report (ISSUE 6 acceptance: schema
     well-formed, zero findings, every suppression has a reason)."""
@@ -288,6 +348,7 @@ def main(argv):
     routing = None
     chaos = None
     sched = None
+    overload = None
     lint = None
     args = []
     i = 1
@@ -295,7 +356,8 @@ def main(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--sched", "--lint"):
+        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--sched",
+                   "--overload", "--lint"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -309,6 +371,8 @@ def main(argv):
                 chaos = argv[i]
             elif a == "--sched":
                 sched = argv[i]
+            elif a == "--overload":
+                overload = argv[i]
             elif a == "--lint":
                 lint = argv[i]
             else:
@@ -320,9 +384,9 @@ def main(argv):
         else:
             args.append(a)
         i += 1
-    if sum(x is not None for x in (kvpool, routing, chaos, sched, lint)) > 1:
-        print("check_bench: pass one of --kvpool/--routing/--chaos/--sched/--lint "
-              "(run twice)")
+    if sum(x is not None for x in (kvpool, routing, chaos, sched, overload, lint)) > 1:
+        print("check_bench: pass one of --kvpool/--routing/--chaos/--sched/"
+              "--overload/--lint (run twice)")
         print(__doc__)
         return 2
     if chaos is not None:
@@ -337,6 +401,12 @@ def main(argv):
             print(__doc__)
             return 2
         return check_sched(sched)
+    if overload is not None:
+        if args:
+            print("check_bench: --overload takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_overload(overload)
     if lint is not None:
         if args:
             print("check_bench: --lint takes no positional arguments")
