@@ -192,12 +192,28 @@ fn main() -> aibrix::util::err::Result<()> {
     // Cross-replica KV reuse: what the shared pool did for this run.
     let ps = hook.stats();
     println!(
-        "kv pool: {} lookups, hit rate {:.0}% ({} local / {} remote blocks), {} dedup-dropped write-backs",
+        "kv pool: {} lookups, hit rate {:.0}% ({} local / {} remote / {} cold blocks), {} dedup-dropped write-backs",
         ps.lookups,
         ps.hit_rate() * 100.0,
         ps.blocks_hit_local,
         ps.blocks_hit_remote,
+        ps.blocks_hit_cold,
         ps.inserts_deduped
+    );
+    // Tiered-cache telemetry (AIBRIX_KV_QUANT / AIBRIX_KV_COLD_MB /
+    // AIBRIX_KV_PREFETCH): spill traffic, promotions, end-of-turn
+    // prefetch effectiveness, and int8 storage savings.
+    let (ram_blocks, cold_blocks) = hook.with_pool(|p| p.tier_blocks());
+    println!(
+        "kv tiers: {ram_blocks} RAM / {cold_blocks} cold blocks resident, {} spills, {} cold evictions, {} promotions",
+        ps.spills, ps.cold_evictions, ps.promotions
+    );
+    println!(
+        "kv prefetch: {} issued, {} hit ({:.0}% hit rate); int8 storage saved {:.1} MiB",
+        ps.prefetch_issued,
+        ps.prefetch_hits,
+        ps.prefetch_hit_rate() * 100.0,
+        ps.quant_bytes_saved as f64 / (1u64 << 20) as f64
     );
     println!("\nall layers composed: rust gateway -> engine threads -> TinyLM kernel runtime (AOT manifest)");
     for r in &replicas {

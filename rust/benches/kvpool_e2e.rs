@@ -15,12 +15,21 @@
 //! Writes `benchmarks/BENCH_kvpool_e2e.json` (schema in BENCHMARKS.md) and
 //! asserts: remote hits happened, pool-on served-prefill throughput beats
 //! pool-off, and the generated tokens are bit-identical either way.
+//!
+//! A second section exercises the *tiered* cache (ISSUE 10): the same
+//! workload against (a) no pool, (b) a RAM-budgeted f32 pool that must
+//! *drop* evicted blocks, and (c) the tiered configuration — int8 block
+//! storage at a quarter of (b)'s RAM bytes, a cold spill tier that keeps
+//! every eviction servable, and end-of-turn prefix prefetch. The working
+//! set exceeds the RAM tier in both (b) and (c); (c) must still beat both
+//! on served prefill tok/s. Writes `benchmarks/BENCH_kvpool_tiered.json`.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use aibrix::engine::real::{EnginePool, RealEngine, RealRequest};
 use aibrix::json::Json;
+use aibrix::kvcache::blocks::prompt_block_keys_seeded;
 use aibrix::kvcache::{DistKvPool, KvPoolConfig, PoolStats};
 use aibrix::runtime::{ModelCfg, RtStats, SyntheticSpec, TinyLmRuntime};
 use aibrix::telemetry::BenchReport;
@@ -56,6 +65,19 @@ fn conv_tok(c: usize, s: usize) -> u32 {
     ((c * 131 + s * 17 + 7) % 512) as u32
 }
 
+/// Pool configuration for one bench leg.
+#[derive(Clone, Copy)]
+enum PoolMode {
+    /// No pool: every turn re-prefills from scratch.
+    Off,
+    /// RAM-only f32 pool with `shard_bytes` per shard: evictions *drop*
+    /// blocks, so a working set over capacity thrashes.
+    RamOnly { shard_bytes: u64 },
+    /// The tiered cache: int8 block storage (`quant`), a bounded cold
+    /// spill tier, and end-of-turn prefix prefetch.
+    Tiered { shard_bytes: u64, cold_bytes: u64 },
+}
+
 struct RunOut {
     /// Generated tokens keyed by request id (conversation x turn).
     outputs: Vec<(u64, Vec<u32>)>,
@@ -63,19 +85,28 @@ struct RunOut {
     served_prompt_tokens: u64,
     wall_ms: f64,
     pool_stats: Option<PoolStats>,
+    /// (RAM-resident, cold-resident) blocks at end of run.
+    tier_blocks: Option<(usize, usize)>,
 }
 
-fn run_workload(with_pool: bool, convs: usize, spec: &SyntheticSpec) -> RunOut {
-    let pool = with_pool.then(|| {
-        let kv_bytes = spec.cfg.kv_bytes_per_token();
-        let mut cfg = KvPoolConfig::new(
-            (0..REPLICAS as u64).map(|i| (i, 1u64 << 30)).collect(),
-            kv_bytes,
-            BT,
-        );
-        cfg.metadata_delay_us = 0; // deterministic visibility for the bench
-        Arc::new(Mutex::new(DistKvPool::new(cfg)))
-    });
+fn run_workload(mode: PoolMode, convs: usize, spec: &SyntheticSpec) -> RunOut {
+    let pool = match mode {
+        PoolMode::Off => None,
+        PoolMode::RamOnly { shard_bytes } | PoolMode::Tiered { shard_bytes, .. } => {
+            let kv_bytes = spec.cfg.kv_bytes_per_token();
+            let mut cfg = KvPoolConfig::new(
+                (0..REPLICAS as u64).map(|i| (i, shard_bytes)).collect(),
+                kv_bytes,
+                BT,
+            );
+            cfg.metadata_delay_us = 0; // deterministic visibility for the bench
+            if let PoolMode::Tiered { cold_bytes, .. } = mode {
+                cfg.quant = true;
+                cfg.cold_bytes = cold_bytes;
+            }
+            Some(Arc::new(Mutex::new(DistKvPool::new(cfg))))
+        }
+    };
     let hook = pool.as_ref().map(|p| EnginePool::new(Arc::clone(p), "tinylm-bench"));
     let mut engines: Vec<RealEngine> = (0..REPLICAS)
         .map(|node| {
@@ -87,6 +118,7 @@ fn run_workload(with_pool: bool, convs: usize, spec: &SyntheticSpec) -> RunOut {
         })
         .collect();
 
+    let prefetch = matches!(mode, PoolMode::Tiered { .. });
     let mut served_prompt_tokens = 0u64;
     let t0 = Instant::now();
     for turn in 0..TURNS {
@@ -105,6 +137,23 @@ fn run_workload(with_pool: bool, convs: usize, spec: &SyntheticSpec) -> RunOut {
         for e in engines.iter_mut() {
             e.run_to_drain().unwrap();
         }
+        // End-of-turn prefetch (tiered leg): each conversation's *next*
+        // turn replays this prefix plus one new block, and we know which
+        // replica serves it — promote/warm its predicted chain there, off
+        // the serving path (the sticky-session pattern the scheduler
+        // drives through `StageCmd::Prefetch` in production).
+        if prefetch && turn + 1 < TURNS {
+            if let (Some(pool), Some(hook)) = (&pool, &hook) {
+                let now = hook.clock_us();
+                let mut p = pool.lock().unwrap();
+                for c in 0..convs {
+                    let next: Vec<u32> =
+                        (0..(turn + 2) * BT).map(|s| conv_tok(c, s)).collect();
+                    let keys = prompt_block_keys_seeded(hook.chain_seed(), &next, BT);
+                    p.prefetch(now, ((c + turn + 1) % REPLICAS) as u64, &keys);
+                }
+            }
+        }
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -121,12 +170,37 @@ fn run_workload(with_pool: bool, convs: usize, spec: &SyntheticSpec) -> RunOut {
         rt.seeded_prefill_rows += s.seeded_prefill_rows;
         rt.seeded_prefill_tokens += s.seeded_prefill_tokens;
     }
-    RunOut {
-        outputs,
-        rt,
-        served_prompt_tokens,
-        wall_ms,
-        pool_stats: pool.map(|p| p.lock().unwrap().stats.clone()),
+    let (pool_stats, tier_blocks) = match pool {
+        Some(p) => {
+            let p = p.lock().unwrap();
+            (Some(p.stats.clone()), Some(p.tier_blocks()))
+        }
+        None => (None, None),
+    };
+    RunOut { outputs, rt, served_prompt_tokens, wall_ms, pool_stats, tier_blocks }
+}
+
+/// Served prefill throughput: prompt tokens answered per second of
+/// prefill wall time (seeded rows answer tokens without computing them).
+fn served_tps(run: &RunOut) -> f64 {
+    run.served_prompt_tokens as f64 / (run.rt.prefill_us as f64 / 1e6)
+}
+
+/// Fraction of generated tokens that match position-for-position between
+/// two runs (greedy top-1 agreement — the relaxed exactness gate where
+/// int8 KV attention is in play).
+fn top1_agreement(a: &[(u64, Vec<u32>)], b: &[(u64, Vec<u32>)]) -> f64 {
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for ((ida, ta), (idb, tb)) in a.iter().zip(b) {
+        assert_eq!(ida, idb, "runs served different request sets");
+        total += ta.len().max(tb.len());
+        same += ta.iter().zip(tb.iter()).filter(|(x, y)| x == y).count();
+    }
+    if total == 0 {
+        1.0
+    } else {
+        same as f64 / total as f64
     }
 }
 
@@ -141,14 +215,14 @@ fn main() {
         spec.cfg.vocab, spec.cfg.d_model, spec.cfg.n_layers
     );
 
-    let off = run_workload(false, convs, &spec);
-    let on = run_workload(true, convs, &spec);
+    let off = run_workload(PoolMode::Off, convs, &spec);
+    let on = run_workload(PoolMode::RamOnly { shard_bytes: 1 << 30 }, convs, &spec);
 
     // Served-prefill throughput: prompt tokens answered per second of
     // prefill wall time. The pool side serves the same tokens while
     // computing only uncached suffixes (seeded rows skip the prefix).
-    let off_tps = off.served_prompt_tokens as f64 / (off.rt.prefill_us as f64 / 1e6);
-    let on_tps = on.served_prompt_tokens as f64 / (on.rt.prefill_us as f64 / 1e6);
+    let off_tps = served_tps(&off);
+    let on_tps = served_tps(&on);
     let speedup = on_tps / off_tps;
     // Wall time includes everything `prefill_us` can't see — block
     // hashing, pool locks, assemble/extract memcpys, insert_blocks — so
@@ -236,5 +310,140 @@ fn main() {
         "pool overheads outweighed the saved prefill: {:.1} ms on vs {:.1} ms off",
         on.wall_ms,
         off.wall_ms
+    );
+
+    // ---- Tiered section (ISSUE 10): working set > RAM-tier capacity ----
+    //
+    // The RAM-budgeted f32 leg gets half the working set's bytes, so it
+    // must drop blocks; the tiered leg gets a QUARTER of those bytes —
+    // the same *block* capacity once int8-quantized — plus a cold tier
+    // that keeps every spilled block servable and end-of-turn prefetch.
+    let block_bytes = spec.cfg.kv_bytes_per_token() * BT as u64;
+    let working_set = (convs * TURNS) as u64;
+    let ram_shard = (working_set / 4).max(1) * block_bytes;
+    let tiered_shard = (ram_shard / 4).max(block_bytes / 4);
+    println!(
+        "\n== kvpool_tiered ==\nworking set {working_set} blocks ({} KiB); ram-only {} KiB/shard (f32), tiered {} KiB/shard (int8) + 64 MiB cold",
+        working_set * block_bytes >> 10,
+        ram_shard >> 10,
+        tiered_shard >> 10
+    );
+    let ram = run_workload(PoolMode::RamOnly { shard_bytes: ram_shard }, convs, &spec);
+    let tiered = run_workload(
+        PoolMode::Tiered { shard_bytes: tiered_shard, cold_bytes: 64 << 20 },
+        convs,
+        &spec,
+    );
+    let ram_tps = served_tps(&ram);
+    let tiered_tps = served_tps(&tiered);
+    let pst = tiered.pool_stats.as_ref().unwrap();
+    let (ram_end, cold_end) = tiered.tier_blocks.unwrap();
+    let top1 = top1_agreement(&off.outputs, &tiered.outputs);
+    let ram_identical = off.outputs == ram.outputs;
+
+    let mut tr = BenchReport::new("kvpool_tiered");
+    tr.config("smoke", smoke)
+        .config("replicas", REPLICAS)
+        .config("conversations", convs)
+        .config("turns", TURNS)
+        .config("block_tokens", BT)
+        .config("working_set_blocks", working_set)
+        .config("ram_only_shard_bytes", ram_shard)
+        .config("tiered_shard_bytes", tiered_shard)
+        .config("cold_bytes", 64u64 << 20);
+    for (name, run, tps) in [
+        ("pool_off", &off, off_tps),
+        ("ram_only_f32", &ram, ram_tps),
+        ("tiered", &tiered, tiered_tps),
+    ] {
+        tr.result([
+            ("name", Json::from(name)),
+            ("tokens_per_s", Json::from(tps)),
+            ("served_prompt_tokens", Json::from(run.served_prompt_tokens)),
+            ("computed_prefill_tokens", Json::from(run.rt.prefill_tokens)),
+            ("seeded_prefill_tokens", Json::from(run.rt.seeded_prefill_tokens)),
+            ("prefill_ms", Json::from(run.rt.prefill_us as f64 / 1e3)),
+            ("wall_ms", Json::from(run.wall_ms)),
+        ]);
+    }
+    tr.derived("tiered_speedup_vs_off", tiered_tps / off_tps)
+        .derived("tiered_speedup_vs_ram_only", tiered_tps / ram_tps)
+        .derived("blocks_hit_local", pst.blocks_hit_local)
+        .derived("blocks_hit_remote", pst.blocks_hit_remote)
+        .derived("blocks_hit_cold", pst.blocks_hit_cold)
+        .derived("spills", pst.spills)
+        .derived("cold_evictions", pst.cold_evictions)
+        .derived("promotions", pst.promotions)
+        .derived("prefetch_issued", pst.prefetch_issued)
+        .derived("prefetch_hits", pst.prefetch_hits)
+        .derived("prefetch_hit_rate", pst.prefetch_hit_rate())
+        .derived("quant_bytes_saved", pst.quant_bytes_saved)
+        .derived("ram_blocks_end", ram_end)
+        .derived("cold_blocks_end", cold_end)
+        .derived("top1_agreement", top1)
+        .derived("ram_only_outputs_bit_identical", ram_identical);
+
+    println!(
+        "pool off    : {off_tps:>9.0} served tok/s  ({} computed tokens)",
+        off.rt.prefill_tokens
+    );
+    println!(
+        "ram-only f32: {ram_tps:>9.0} served tok/s  ({} computed, {} seeded)",
+        ram.rt.prefill_tokens, ram.rt.seeded_prefill_tokens
+    );
+    println!(
+        "tiered      : {tiered_tps:>9.0} served tok/s  ({} computed, {} seeded)",
+        tiered.rt.prefill_tokens, tiered.rt.seeded_prefill_tokens
+    );
+    println!(
+        "tiered hits: {} local / {} remote / {} cold; {} spills, {} promotions; prefetch {}/{} hit ({:.0}%)",
+        pst.blocks_hit_local,
+        pst.blocks_hit_remote,
+        pst.blocks_hit_cold,
+        pst.spills,
+        pst.promotions,
+        pst.prefetch_hits,
+        pst.prefetch_issued,
+        pst.prefetch_hit_rate() * 100.0
+    );
+    println!(
+        "tiers at end: {ram_end} RAM / {cold_end} cold blocks; int8 saved {} KiB; top-1 agreement {top1:.3}",
+        pst.quant_bytes_saved >> 10
+    );
+
+    let tpath = tr.default_path(env!("CARGO_MANIFEST_DIR"));
+    tr.write_to(&tpath).expect("write BENCH_kvpool_tiered.json");
+    println!("wrote {}", tpath.display());
+
+    // Tiered acceptance gates (mirrored by `check_bench.py
+    // --kvpool-tiered`): strict throughput ordering, a live cold tier,
+    // effective prefetch, and bounded quantization drift.
+    assert!(ram_identical, "ram-only f32 outputs diverged from pool-off");
+    assert!(
+        ram_tps > off_tps,
+        "ram-only pool must still beat pool-off: {ram_tps:.0} vs {off_tps:.0} tok/s"
+    );
+    assert!(
+        tiered_tps > ram_tps,
+        "tiered must beat ram-only f32: {tiered_tps:.0} vs {ram_tps:.0} tok/s"
+    );
+    assert!(pst.spills > 0, "working set never overflowed into the cold tier: {pst:?}");
+    assert!(pst.promotions > 0, "cold blocks were never promoted back: {pst:?}");
+    assert!(cold_end > 0, "cold tier empty at end of run: {pst:?}");
+    assert!(
+        pst.prefetch_issued > 0 && pst.prefetch_hits > 0,
+        "end-of-turn prefetch never warmed a block: {pst:?}"
+    );
+    assert!(
+        top1 >= 0.5,
+        "int8 KV drift broke top-1 agreement: {top1:.3}"
+    );
+    // PR 3 regression guard still holds with the cold tier on: tiered
+    // seeding never came from recomputing what the pool already held.
+    assert!(
+        tiered.rt.seeded_prefill_tokens > ram.rt.seeded_prefill_tokens,
+        "cold tier + prefetch must seed more than the thrashing RAM-only pool: {:?} vs {:?}",
+        tiered.rt,
+        ram.rt
     );
 }

@@ -14,7 +14,9 @@ use std::time::Instant;
 use crate::kvcache::blocks::{
     assemble_prefix, extract_block, model_chain_seed, prompt_block_keys_seeded,
 };
-use crate::kvcache::{DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolStats};
+use crate::kvcache::{
+    DistKvPool, KvBlockData, KvBlockShape, KvPoolConfig, PoolStats, StoredBlock,
+};
 use crate::runtime::{ModelCfg, Precision, RtStats, SeededPrefix, TinyLmRuntime};
 use crate::util::err::{Error, Result};
 use crate::util::lock::lock_or_recover;
@@ -50,12 +52,36 @@ pub struct EnginePool {
     /// over one pool, however late it is created, ticks the same µs
     /// visibility clock.
     epoch: Instant,
+    /// End-of-turn prefix prefetch on (`AIBRIX_KV_PREFETCH`, default on):
+    /// the scheduler hands a finished session's predicted next-turn block
+    /// keys to the staging thread so promotions/warm-ups happen off the
+    /// serving path.
+    prefetch: bool,
 }
 
 /// Visibility delay for the real serving path: write-backs publish after a
 /// short async-index beat rather than the simulator's 50ms modeling
 /// default.
 const REAL_PATH_METADATA_DELAY_US: u64 = 1_000;
+
+/// `"1"`/`"true"`/`"yes"`/`"on"` (any case) is true, `"0"`/`"false"`/
+/// `"no"`/`"off"` is false; unset or unrecognized falls back to `default`.
+fn env_bool(name: &str, default: bool) -> bool {
+    match std::env::var(name) {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "true" | "yes" | "on" => true,
+            "0" | "false" | "no" | "off" => false,
+            _ => default,
+        },
+        Err(_) => default,
+    }
+}
+
+/// Non-negative integer env knob; unset or unparsable falls back to
+/// `default`.
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.trim().parse::<u64>().ok()).unwrap_or(default)
+}
 
 impl EnginePool {
     /// Wrap a pool for one model. The pool config's `block_tokens` drives
@@ -66,7 +92,14 @@ impl EnginePool {
             let p = lock_or_recover(&pool);
             (p.config().block_tokens, p.epoch())
         };
-        EnginePool { pool, node: 0, model_seed: model_chain_seed(model_id), block_tokens, epoch }
+        EnginePool {
+            pool,
+            node: 0,
+            model_seed: model_chain_seed(model_id),
+            block_tokens,
+            epoch,
+            prefetch: env_bool("AIBRIX_KV_PREFETCH", true),
+        }
     }
 
     /// Build a fresh pool sized from a loaded model config — one
@@ -88,6 +121,11 @@ impl EnginePool {
             cfg.page_size,
         );
         pool_cfg.metadata_delay_us = REAL_PATH_METADATA_DELAY_US;
+        // Tiered-cache knobs (§3.2.5 extensions): int8 block storage and
+        // the bounded cold spill tier. Both default off so the baseline
+        // f32 RAM-only pool stays the out-of-the-box behavior.
+        pool_cfg.quant = env_bool("AIBRIX_KV_QUANT", false);
+        pool_cfg.cold_bytes = env_u64("AIBRIX_KV_COLD_MB", 0) << 20;
         EnginePool::new(Arc::new(Mutex::new(DistKvPool::new(pool_cfg))), model_id)
     }
 
@@ -116,6 +154,12 @@ impl EnginePool {
     /// Tokens per content-addressed block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// Whether end-of-turn prefix prefetch is enabled for this hook
+    /// (`AIBRIX_KV_PREFETCH`, default on).
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch
     }
 
     /// Run `f` against the shared pool (router residency probes, metrics).
@@ -389,7 +433,7 @@ impl RealEngine {
         // Arc clones; slab assembly (the big memcpy) happens after release
         // so other replicas aren't blocked behind it.
         let mut row_keys: Vec<Vec<u64>> = Vec::new();
-        let mut fetched: Vec<Vec<Arc<KvBlockData>>> = Vec::new();
+        let mut fetched: Vec<Vec<StoredBlock>> = Vec::new();
         // Leading blocks already resident *with data* (visible or not) —
         // the write-back below skips these. Probed under the same lock;
         // covers blocks the visibility delay still hides from lookup, and
@@ -426,7 +470,12 @@ impl RealEngine {
         if let Some(shape) = self.kv_shape {
             for (i, blocks) in fetched.iter().enumerate() {
                 if !blocks.is_empty() {
-                    let (k, v) = assemble_prefix(blocks, &shape);
+                    // Lockstep always seeds f32 slabs: int8 pool blocks are
+                    // dequantized here (outside the pool lock), which is
+                    // bit-identical to the scheduler's direct-i8 attend by
+                    // the `attend_one_i8` dequant-first contract.
+                    let full: Vec<Arc<KvBlockData>> = blocks.iter().map(|b| b.to_f32()).collect();
+                    let (k, v) = assemble_prefix(&full, &shape);
                     slabs[i] = Some((blocks.len() * shape.block_tokens, k, v));
                 }
             }

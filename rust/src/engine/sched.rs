@@ -10,8 +10,8 @@
 //!      (double-buffered write-back — the `insert_blocks` memcpy overlaps
 //!      this iteration's compute);
 //!   2. absorb finished pool fetches (rows staged by the same thread
-//!      become runnable with a seeded prefix — `assemble_prefix` also
-//!      never serializes with `forward_row`);
+//!      become runnable with a seeded prefix — `assemble_prefix_stored`
+//!      also never serializes with `forward_row`);
 //!   3. admit waiting requests into free slots while the KV token budget
 //!      holds;
 //!   4. preempt the youngest row when the budget would overflow — its
@@ -36,11 +36,14 @@ use std::time::Instant;
 use crate::chaos::RejectReason;
 use crate::engine::sim_engine::{DEFAULT_SLO_ITL_US, DEFAULT_SLO_TTFT_US};
 use crate::engine::EngineStats;
-use crate::kvcache::blocks::{assemble_prefix, extract_block, prompt_block_keys_seeded};
+use crate::kvcache::blocks::{
+    assemble_prefix_stored, extract_block, prompt_block_keys_seeded, SeedSlabs,
+};
 use crate::kvcache::{KvBlockData, KvBlockShape};
 use crate::metrics::SlidingWindow;
 use crate::runtime::{
-    DeviceTensor, Precision, RowChunk, RtStats, SeededPrefix, Tensor, TinyLmRuntime,
+    DeviceTensor, Precision, QuantSeededPrefix, RowChunk, RtStats, SeededPrefix, Tensor,
+    TinyLmRuntime,
 };
 use crate::util::err::{Error, Result};
 use crate::workload::Tier;
@@ -131,6 +134,10 @@ enum StageCmd {
     Fetch { slot: usize, tag: u64, keys: Vec<u64>, usable: usize },
     /// Insert a completed row's freshly computed blocks.
     WriteBack { items: Vec<(u64, Arc<KvBlockData>)> },
+    /// Warm a predicted next-turn chain (end-of-turn prefetch): promote
+    /// cold blocks and bump RAM residents ahead of the sticky session's
+    /// next request — overlapped with compute, no reply.
+    Prefetch { keys: Vec<u64> },
     /// Barrier: ack once every prior command has been applied.
     Sync(mpsc::Sender<()>),
     Stop,
@@ -145,13 +152,15 @@ struct StagedFetch {
     /// Leading blocks already resident with data (write-back skip).
     resident: usize,
     blocks: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// Assembled seed slabs — f32, or int8 with per-row scales when the
+    /// pool stores quantized blocks (the chunk then attends directly over
+    /// them via `RowChunk::qseed`).
+    seed: SeedSlabs,
 }
 
 /// Staging thread body: pool lock held only for the index walk + Arc
-/// clones; the slab memcpys (`assemble_prefix`) run here, overlapped with
-/// the engine's compute.
+/// clones; the slab memcpys (`assemble_prefix_stored`) run here,
+/// overlapped with the engine's compute.
 fn stager_loop(
     hook: EnginePool,
     shape: KvBlockShape,
@@ -171,13 +180,13 @@ fn stager_loop(
                     let resident = keys.iter().take_while(|&&k| p.has_data(k)).count();
                     (blocks, resident)
                 });
-                let (k, v) = if blocks.is_empty() {
-                    (Vec::new(), Vec::new())
-                } else {
-                    assemble_prefix(&blocks, &shape)
-                };
                 let n = blocks.len();
-                if tx.send(StagedFetch { slot, tag, resident, blocks: n, k, v }).is_err() {
+                let seed = if blocks.is_empty() {
+                    SeedSlabs::default()
+                } else {
+                    assemble_prefix_stored(&blocks, &shape)
+                };
+                if tx.send(StagedFetch { slot, tag, resident, blocks: n, seed }).is_err() {
                     return; // engine gone
                 }
             }
@@ -190,6 +199,13 @@ fn stager_loop(
                     // Degrade: a rejected write-back only costs future hits.
                     eprintln!("kv pool write-back skipped: {e}");
                 }
+            }
+            StageCmd::Prefetch { keys } => {
+                if keys.is_empty() {
+                    continue;
+                }
+                let now = hook.clock_us();
+                hook.with_pool_mut(|p| p.prefetch(now, hook.node, &keys));
             }
             StageCmd::Sync(ack) => {
                 let _ = ack.send(());
@@ -232,9 +248,9 @@ struct Slot {
     /// Last sampled token (valid in `Phase::Decode`).
     cur: u32,
     phase: Phase,
-    /// Staged pool prefix (installed by the first prefill chunk).
-    seed_k: Vec<f32>,
-    seed_v: Vec<f32>,
+    /// Staged pool prefix (installed by the first prefill chunk): f32
+    /// slabs, or int8 + scales when the pool stores quantized blocks.
+    seed: SeedSlabs,
     seed_len: usize,
     /// Write-back skip inputs (see lockstep admission for the contract).
     resident: usize,
@@ -593,8 +609,7 @@ impl SchedEngine {
             }
             slot.seed_len = sf.blocks * bt;
             slot.pos = slot.seed_len;
-            slot.seed_k = sf.k;
-            slot.seed_v = sf.v;
+            slot.seed = sf.seed;
             slot.resident = sf.resident;
             slot.fetched_blocks = sf.blocks;
             slot.phase = Phase::Prefill;
@@ -654,8 +669,7 @@ impl SchedEngine {
                 pos: 0,
                 cur: 0,
                 phase: Phase::Prefill,
-                seed_k: Vec::new(),
-                seed_v: Vec::new(),
+                seed: SeedSlabs::default(),
                 seed_len: 0,
                 resident: 0,
                 fetched_blocks: 0,
@@ -831,6 +845,22 @@ impl SchedEngine {
     fn complete(&mut self, idx: usize, events: &mut Vec<RealCompletion>) {
         let Some(slot) = self.slots.get_mut(idx).and_then(|s| s.take()) else { return };
         self.stage_writeback(&slot, idx);
+        // Async prefix prefetch (§3.2.5 tiered cache): a sticky session's
+        // next turn replays this context plus the tokens just generated, so
+        // hand the predicted block chain to the staging thread now —
+        // cold-tier promotions and eviction-policy warm-ups run off the
+        // serving path, before the follow-up request arrives.
+        if let (Some(hook), Some(shape), Some(tx)) = (&self.pool, self.kv_shape, &self.stage_tx) {
+            if hook.prefetch_enabled() {
+                let mut next_ctx = slot.ctx.clone();
+                next_ctx.extend_from_slice(&slot.gen);
+                let keys =
+                    prompt_block_keys_seeded(hook.chain_seed(), &next_ctx, shape.block_tokens);
+                if !keys.is_empty() {
+                    let _ = tx.send(StageCmd::Prefetch { keys });
+                }
+            }
+        }
         let total_us = slot.enq.elapsed().as_micros() as u64;
         let queue_us = slot.first_admit.duration_since(slot.enq).as_micros() as u64;
         let mut generated: Vec<u32> = slot.ctx[slot.prompt_len..].to_vec();
@@ -903,21 +933,42 @@ impl SchedEngine {
         let out = {
             let chunks: Vec<RowChunk<'_>> = plans
                 .iter()
-                .map(|p| RowChunk {
-                    row: p.slot,
-                    s0: p.s0,
-                    tokens: &p.tokens,
-                    seed: if p.seeded {
-                        self.slots.get(p.slot).and_then(|s| s.as_ref()).map(|s| SeededPrefix {
-                            len: s.seed_len,
-                            k: &s.seed_k,
-                            v: &s.seed_v,
-                        })
+                .map(|p| {
+                    // f32 slabs ride the memcpy-install seed; int8 slabs
+                    // ride qseed — the chunk attends directly over the
+                    // pool's bytes (bit-identical to the dequantized
+                    // install, see `attend_one_i8`'s contract).
+                    let (seed, qseed) = if p.seeded {
+                        match self.slots.get(p.slot).and_then(|s| s.as_ref()) {
+                            Some(s) => match &s.seed {
+                                SeedSlabs::F32 { k, v } => {
+                                    (Some(SeededPrefix { len: s.seed_len, k, v }), None)
+                                }
+                                SeedSlabs::I8 { k, v, k_scales, v_scales } => (
+                                    None,
+                                    Some(QuantSeededPrefix {
+                                        len: s.seed_len,
+                                        k,
+                                        v,
+                                        k_scales,
+                                        v_scales,
+                                    }),
+                                ),
+                            },
+                            None => (None, None),
+                        }
                     } else {
-                        None
-                    },
-                    emit_logits: p.emit,
-                    decode: p.decode,
+                        (None, None)
+                    };
+                    RowChunk {
+                        row: p.slot,
+                        s0: p.s0,
+                        tokens: &p.tokens,
+                        seed,
+                        qseed,
+                        emit_logits: p.emit,
+                        decode: p.decode,
+                    }
                 })
                 .collect();
             self.runtime.prefill_chunk(self.max_batch, &chunks, k, v)
@@ -939,8 +990,7 @@ impl SchedEngine {
             slot.pos = p.s0 + p.tokens.len();
             if p.seeded {
                 // Seed slabs are installed; free the staging copies.
-                slot.seed_k = Vec::new();
-                slot.seed_v = Vec::new();
+                slot.seed = SeedSlabs::default();
             }
             if !p.emit {
                 continue;
@@ -1171,6 +1221,32 @@ mod tests {
         let rs = b.runtime_stats();
         assert!(rs.seeded_prefill_tokens >= 16, "B must seed from A's blocks: {rs:?}");
         assert!(pool.lock().unwrap().stats.blocks_hit_remote >= 2);
+    }
+
+    #[test]
+    fn completion_issues_prefix_prefetch() {
+        // End-of-turn prefetch: when a request completes, the scheduler
+        // hands the predicted next-turn block chain (context + generated
+        // tokens) to the staging thread. A second identical turn then
+        // finds its prompt blocks warm, so the prefetch walk records hits.
+        let pool = shared_pool();
+        let hook = EnginePool::new(Arc::clone(&pool), "tinylm-sched");
+        let mut e = sched(Some(hook.for_node(0)), None);
+        let turn = |id| {
+            let tokens: Vec<u32> = (0..24).map(|i| (i * 5 % 32) as u32).collect();
+            RealRequest { id, tokens, max_new_tokens: 4, ..Default::default() }
+        };
+        e.enqueue(turn(1));
+        e.run_to_drain().unwrap();
+        // flush() syncs the staging thread, so the Prefetch sent at
+        // completion has been processed by the time stats are read.
+        let s1 = pool.lock().unwrap().stats.clone();
+        assert!(s1.prefetch_issued > 0, "completion must issue a prefetch: {s1:?}");
+        e.enqueue(turn(2));
+        e.run_to_drain().unwrap();
+        let s2 = pool.lock().unwrap().stats.clone();
+        assert!(s2.prefetch_issued > s1.prefetch_issued);
+        assert!(s2.prefetch_hits > 0, "second turn's prefetch must find warm blocks: {s2:?}");
     }
 
     #[test]

@@ -70,7 +70,9 @@ pub mod view;
 pub use admission::{tier_index, AdmissionConfig, AdmissionController, AdmissionCounters, Shed};
 pub use fairness::{FairQueue, TenantUsage};
 pub use ratelimit::{RateLimitConfig, RateLimiter};
-pub use router::{PodSnapshot, Policy, Router, DEFAULT_PREFIX_THRESHOLD, REMOTE_POOL_CREDIT};
+pub use router::{
+    PodSnapshot, Policy, Router, COLD_POOL_CREDIT, DEFAULT_PREFIX_THRESHOLD, REMOTE_POOL_CREDIT,
+};
 pub use scoring::{
     PipelineConfig, RouteTelemetry, ScoreCtx, ScoringPipeline, N_SCORERS, SCORER_NAMES,
 };

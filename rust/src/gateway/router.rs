@@ -22,6 +22,12 @@ use crate::workload::Request;
 /// outrank the shard that already holds the bytes.
 pub const REMOTE_POOL_CREDIT: f64 = 0.25;
 
+/// Credit a pool block resident only in the *cold tier* earns in the
+/// pool-affinity score: it still skips prefill compute, but pays a
+/// promotion (disk read + RAM insert) before it can seed, so it ranks
+/// below both colocated RAM (1.0) and remote RAM ([`REMOTE_POOL_CREDIT`]).
+pub const COLD_POOL_CREDIT: f64 = 0.10;
+
 /// Point-in-time view of one serving pod, as the gateway sees it.
 /// Produced by [`super::view::ClusterView`] — every entry point (harness,
 /// `aibrix serve`, autoscaler sim, benches) routes from the same snapshot
@@ -45,9 +51,13 @@ pub struct PodSnapshot {
     /// Leading prompt blocks resident in the distributed KV pool on this
     /// pod's own node (colocated — shared-memory fetch, no network).
     pub pool_blocks_local: usize,
-    /// Longest pool prefix visible to this pod at all (local + remote);
-    /// remote blocks still skip prefill compute at transfer cost.
+    /// Longest pool prefix visible to this pod at all (local + remote +
+    /// cold); remote blocks still skip prefill compute at transfer cost.
     pub pool_blocks_total: usize,
+    /// Leading prompt blocks within that prefix resident only in the
+    /// pool's cold spill tier (third residency class: promotable, but at
+    /// disk-read cost — scored by [`COLD_POOL_CREDIT`]).
+    pub pool_blocks_cold: usize,
     /// True when the request's session last routed to this pod
     /// (session-sticky signal; maintained by `ClusterView::note_route`).
     pub session_match: bool,
@@ -72,6 +82,7 @@ impl Default for PodSnapshot {
             prompt_blocks: 0,
             pool_blocks_local: 0,
             pool_blocks_total: 0,
+            pool_blocks_cold: 0,
             session_match: false,
             slo_headroom: 1.0,
             resident_adapters: Vec::new(),
@@ -101,18 +112,24 @@ impl PodSnapshot {
     }
 
     /// Pool-affinity signal in `[0, 1]`: the fraction of the prompt this
-    /// pod can source from the distributed pool, with colocated blocks at
-    /// full credit and remote ones discounted by [`REMOTE_POOL_CREDIT`].
-    /// Clamped like [`PodSnapshot::prefix_hit_fraction`] — a racing
-    /// snapshot can report more blocks than the prompt holds.
+    /// pod can source from the distributed pool, across the three
+    /// residency classes — colocated RAM at full credit, remote RAM
+    /// discounted by [`REMOTE_POOL_CREDIT`], cold-tier blocks by
+    /// [`COLD_POOL_CREDIT`]. Clamped like
+    /// [`PodSnapshot::prefix_hit_fraction`] — a racing snapshot can report
+    /// more blocks than the prompt holds.
     pub fn pool_hit_fraction(&self) -> f64 {
         if self.prompt_blocks == 0 {
             return 0.0;
         }
         let local = self.pool_blocks_local.min(self.prompt_blocks) as f64;
         let total = self.pool_blocks_total.min(self.prompt_blocks) as f64;
-        let remote = (total - local).max(0.0);
-        ((local + REMOTE_POOL_CREDIT * remote) / self.prompt_blocks as f64).min(1.0)
+        let cold = (self.pool_blocks_cold.min(self.prompt_blocks) as f64)
+            .min((total - local).max(0.0));
+        let remote = (total - local - cold).max(0.0);
+        ((local + REMOTE_POOL_CREDIT * remote + COLD_POOL_CREDIT * cold)
+            / self.prompt_blocks as f64)
+            .min(1.0)
     }
 }
 
@@ -761,6 +778,37 @@ mod tests {
         assert_eq!(q.pool_hit_fraction(), 1.0);
         q.prompt_blocks = 0;
         assert_eq!(q.pool_hit_fraction(), 0.0);
+    }
+
+    #[test]
+    fn pool_hit_fraction_ranks_three_residency_classes() {
+        // Same 8-block coverage, three residency classes: local RAM must
+        // outrank remote RAM, which must outrank cold — and cold must
+        // still beat nothing at all.
+        let mk = |local, cold| {
+            let mut p = snap(0);
+            p.prompt_blocks = 10;
+            p.pool_blocks_local = local;
+            p.pool_blocks_total = 8;
+            p.pool_blocks_cold = cold;
+            p
+        };
+        let all_local = mk(8, 0);
+        let all_remote = mk(0, 0);
+        let all_cold = mk(0, 8);
+        assert!(all_local.pool_hit_fraction() > all_remote.pool_hit_fraction());
+        assert!(all_remote.pool_hit_fraction() > all_cold.pool_hit_fraction());
+        assert!(all_cold.pool_hit_fraction() > 0.0);
+        let expect = COLD_POOL_CREDIT * 8.0 / 10.0;
+        assert!((all_cold.pool_hit_fraction() - expect).abs() < 1e-12);
+        // Mixed: 4 local + 2 remote + 2 cold.
+        let mixed = mk(4, 2);
+        let expect = (4.0 + REMOTE_POOL_CREDIT * 2.0 + COLD_POOL_CREDIT * 2.0) / 10.0;
+        assert!((mixed.pool_hit_fraction() - expect).abs() < 1e-12);
+        // A racing cold count exceeding the non-local coverage clamps to
+        // it (never double-counts local blocks as cold).
+        let over = mk(8, usize::MAX);
+        assert_eq!(over.pool_hit_fraction(), 0.8);
     }
 
     #[test]

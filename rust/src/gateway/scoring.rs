@@ -22,10 +22,12 @@
 //!     light tenants steer to idle pods, heavy tenants consolidate onto
 //!     busy pods so they cannot spread queueing delay across the fleet.
 //!   * `pool_affinity` — [`PodSnapshot::pool_hit_fraction`]: the fraction
-//!     of the prompt resident in the distributed KV pool, colocated blocks
-//!     at full credit, remote ones discounted (they skip compute but pay
-//!     the network). Continuous — ranks shard owners above remote readers
-//!     above cold pods. Fed by `ClusterView` from the pool's residency
+//!     of the prompt resident in the distributed KV pool across its three
+//!     residency classes — colocated RAM at full credit, remote RAM
+//!     discounted (skips compute but pays the network), cold-tier blocks
+//!     discounted further (promotable, but at disk cost). Continuous —
+//!     ranks shard owners above remote readers above cold-tier holders
+//!     above empty pods. Fed by `ClusterView` from the pool's residency
 //!     probe, so the distributed pool becomes a *placement* signal.
 //!   * `slo_headroom` — [`PodSnapshot::slo_headroom`]: room between the
 //!     pod's recent latency and the request's SLO budget (TTFT + ITL x
@@ -569,16 +571,20 @@ mod tests {
     fn pool_affinity_ranks_local_over_remote_over_cold() {
         let cfg = PipelineConfig::single("pool-affinity", 1.0);
         let pl = ScoringPipeline::new(cfg);
-        let mut pods = vec![snap(0), snap(1), snap(2)];
+        let mut pods = vec![snap(0), snap(1), snap(2), snap(3)];
         // Pod 0: 6 blocks on its own shard; pod 1: same 6 visible but all
-        // remote; pod 2: cold.
+        // remote RAM; pod 2: same 6 but spilled to the cold tier; pod 3:
+        // nothing. Strict ordering across all four residency situations.
         pods[0].pool_blocks_local = 6;
         pods[0].pool_blocks_total = 6;
         pods[1].pool_blocks_total = 6;
+        pods[2].pool_blocks_total = 6;
+        pods[2].pool_blocks_cold = 6;
         let mut scores = Vec::new();
         pl.score_into(&req(), &pods, &ScoreCtx::default(), &mut scores);
         assert!(scores[0] > scores[1], "{scores:?}");
         assert!(scores[1] > scores[2], "{scores:?}");
+        assert!(scores[2] > scores[3], "{scores:?}");
     }
 
     #[test]

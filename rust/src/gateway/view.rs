@@ -679,6 +679,7 @@ impl ClusterView {
                 prompt_blocks,
                 pool_blocks_local: res.local_blocks,
                 pool_blocks_total: res.visible_blocks,
+                pool_blocks_cold: res.cold_blocks,
                 session_match: sticky == Some(s.pod),
                 slo_headroom: slo_headroom(&s.stats),
                 resident_adapters: s.resident_adapters,

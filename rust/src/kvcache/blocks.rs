@@ -20,6 +20,8 @@
 
 use std::sync::Arc;
 
+use crate::runtime::kernels::{quantize_rows, QuantMat};
+
 pub use crate::engine::prefix::{model_chain_seed, prompt_block_keys_seeded, BlockKey};
 
 /// Geometry of the KV tensors a pool stores — everything needed to check a
@@ -103,6 +105,150 @@ pub fn assemble_prefix(blocks: &[Arc<KvBlockData>], shape: &KvBlockShape) -> (Ve
     (k, v)
 }
 
+/// A KV block quantized to int8 with the runtime's per-channel [`QuantMat`]
+/// scheme: each (layer, position) row of the block — `d_model` floats —
+/// gets one symmetric scale (`scale = max|x|/127`, `1.0` for an all-zero
+/// row), so `rows = n_layers * block_tokens` and `cols = d_model`. That is
+/// the row orientation `attend_one_i8` wants: one scale per attended cache
+/// position.
+///
+/// Dequantization is defined element-wise as `f32::from(q) * scale` —
+/// exactly the formula `kernels::install_kv_i8` and `kernels::attend_one_i8`
+/// apply inline, so "dequantize then attend" and "attend directly over int8"
+/// produce bit-identical outputs.
+#[derive(Debug, Clone)]
+pub struct QuantKvBlock {
+    pub k: QuantMat,
+    pub v: QuantMat,
+}
+
+impl QuantKvBlock {
+    /// Per-block scale rows in each of K and V.
+    pub fn rows(shape: &KvBlockShape) -> usize {
+        shape.n_layers * shape.block_tokens
+    }
+
+    /// Quantize a full-precision block. Error per element is at most
+    /// `scale/2` (round to nearest), the same contract `quantize_rows`
+    /// carries for weights.
+    pub fn quantize(block: &KvBlockData, shape: &KvBlockShape) -> QuantKvBlock {
+        let rows = Self::rows(shape);
+        QuantKvBlock {
+            k: quantize_rows(&block.k, rows, shape.d_model),
+            v: quantize_rows(&block.v, rows, shape.d_model),
+        }
+    }
+
+    pub fn matches(&self, shape: &KvBlockShape) -> bool {
+        let rows = Self::rows(shape);
+        self.k.rows == rows
+            && self.v.rows == rows
+            && self.k.cols == shape.d_model
+            && self.v.cols == shape.d_model
+            && self.k.data.len() == rows * shape.d_model
+            && self.v.data.len() == rows * shape.d_model
+            && self.k.scales.len() == rows
+            && self.v.scales.len() == rows
+    }
+
+    /// Expand back to f32 — bit-identical to what the i8 attend path sees.
+    pub fn dequantize(&self) -> KvBlockData {
+        KvBlockData { k: dequant_rows(&self.k), v: dequant_rows(&self.v) }
+    }
+}
+
+fn dequant_rows(m: &QuantMat) -> Vec<f32> {
+    let mut out = Vec::with_capacity(m.rows * m.cols);
+    for i in 0..m.rows {
+        let s = m.scales[i];
+        for &q in &m.data[i * m.cols..(i + 1) * m.cols] {
+            out.push(f32::from(q) * s);
+        }
+    }
+    out
+}
+
+/// What the pool actually holds for a key: full-precision or int8-resident.
+/// `Arc` so lookups under the pool lock are pointer clones; decoding work
+/// (dequantization, slab assembly) happens outside the lock.
+#[derive(Debug, Clone)]
+pub enum StoredBlock {
+    F32(Arc<KvBlockData>),
+    I8(Arc<QuantKvBlock>),
+}
+
+impl StoredBlock {
+    pub fn matches(&self, shape: &KvBlockShape) -> bool {
+        match self {
+            StoredBlock::F32(b) => b.matches(shape),
+            StoredBlock::I8(b) => b.matches(shape),
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, StoredBlock::I8(_))
+    }
+
+    /// Full-precision view: the stored tensor itself for f32 blocks, the
+    /// dequantized expansion for int8 ones.
+    pub fn to_f32(&self) -> Arc<KvBlockData> {
+        match self {
+            StoredBlock::F32(b) => Arc::clone(b),
+            StoredBlock::I8(b) => Arc::new(b.dequantize()),
+        }
+    }
+}
+
+/// Assembled seed slabs for a fetched prefix chain, in whichever precision
+/// the pool stores: the f32 variant feeds `RowChunk::seed` /
+/// `SeededPrefix`, the int8 variant feeds `RowChunk::qseed` /
+/// `QuantSeededPrefix` so the resuming chunk attends directly over the
+/// int8-resident rows. Data layout is `[L, len, Dm]` per side; scales are
+/// `[L, len]` (one per layer-position row).
+#[derive(Debug, Clone)]
+pub enum SeedSlabs {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    I8 { k: Vec<i8>, v: Vec<i8>, k_scales: Vec<f32>, v_scales: Vec<f32> },
+}
+
+impl Default for SeedSlabs {
+    fn default() -> Self {
+        SeedSlabs::F32 { k: Vec::new(), v: Vec::new() }
+    }
+}
+
+/// [`assemble_prefix`] over tier-tagged blocks. A uniform f32 chain stays
+/// f32; a uniform int8 chain is spliced *without* dequantizing (the slabs
+/// keep the pool's int8 bytes + per-row scales); a mixed chain — possible
+/// only transiently, e.g. a pool whose quant knob changed between inserts —
+/// conservatively expands everything to f32.
+pub fn assemble_prefix_stored(blocks: &[StoredBlock], shape: &KvBlockShape) -> SeedSlabs {
+    let (bt, dm) = (shape.block_tokens, shape.d_model);
+    if blocks.iter().all(|b| b.is_quantized()) && !blocks.is_empty() {
+        let len = blocks.len() * bt;
+        let mut k = Vec::with_capacity(shape.n_layers * len * dm);
+        let mut v = Vec::with_capacity(shape.n_layers * len * dm);
+        let mut k_scales = Vec::with_capacity(shape.n_layers * len);
+        let mut v_scales = Vec::with_capacity(shape.n_layers * len);
+        for layer in 0..shape.n_layers {
+            let side = layer * bt * dm;
+            let srow = layer * bt;
+            for block in blocks {
+                let StoredBlock::I8(q) = block else { continue };
+                debug_assert!(q.matches(shape), "block shape mismatch");
+                k.extend_from_slice(&q.k.data[side..side + bt * dm]);
+                v.extend_from_slice(&q.v.data[side..side + bt * dm]);
+                k_scales.extend_from_slice(&q.k.scales[srow..srow + bt]);
+                v_scales.extend_from_slice(&q.v.scales[srow..srow + bt]);
+            }
+        }
+        return SeedSlabs::I8 { k, v, k_scales, v_scales };
+    }
+    let f32s: Vec<Arc<KvBlockData>> = blocks.iter().map(|b| b.to_f32()).collect();
+    let (k, v) = assemble_prefix(&f32s, shape);
+    SeedSlabs::F32 { k, v }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +300,74 @@ mod tests {
     fn shape_mismatch_detected() {
         let short = KvBlockData { k: vec![0.0; 5], v: vec![0.0; 5] };
         assert!(!short.matches(&SHAPE));
+    }
+
+    #[test]
+    fn quantize_dequantize_error_within_half_scale() {
+        let n = SHAPE.floats_per_side();
+        let block = KvBlockData {
+            k: (0..n).map(|i| (i as f32 * 0.37 - 1.9).sin()).collect(),
+            v: (0..n).map(|i| (i as f32 * 0.11 + 0.4).cos()).collect(),
+        };
+        let q = QuantKvBlock::quantize(&block, &SHAPE);
+        assert!(q.matches(&SHAPE));
+        let deq = q.dequantize();
+        for row in 0..QuantKvBlock::rows(&SHAPE) {
+            for col in 0..SHAPE.d_model {
+                let i = row * SHAPE.d_model + col;
+                assert!(
+                    (deq.k[i] - block.k[i]).abs() <= q.k.scales[row] * 0.5 + 1e-6,
+                    "k row {row} col {col}"
+                );
+                assert!(
+                    (deq.v[i] - block.v[i]).abs() <= q.v.scales[row] * 0.5 + 1e-6,
+                    "v row {row} col {col}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stored_assemble_i8_matches_dequant_then_f32_assemble() {
+        let k_cache = coord_cache(0.0);
+        let v_cache = coord_cache(0.5);
+        let raw: Vec<KvBlockData> =
+            (0..2).map(|i| extract_block(&k_cache, &v_cache, &SHAPE, 2, 6, 1, i)).collect();
+        let stored: Vec<StoredBlock> = raw
+            .iter()
+            .map(|b| StoredBlock::I8(Arc::new(QuantKvBlock::quantize(b, &SHAPE))))
+            .collect();
+        let SeedSlabs::I8 { k, v, k_scales, v_scales } = assemble_prefix_stored(&stored, &SHAPE)
+        else {
+            panic!("uniform int8 chain must assemble as I8");
+        };
+        assert_eq!(k_scales.len(), 2 * 4); // [L, len]
+        assert_eq!(v_scales.len(), 2 * 4);
+        // Element-wise dequant of the assembled i8 slab must equal assembling
+        // the per-block dequantized expansions: the i8 path reads the same
+        // bits the f32 path would install.
+        let deq: Vec<Arc<KvBlockData>> = stored.iter().map(|b| b.to_f32()).collect();
+        let (k_ref, v_ref) = assemble_prefix(&deq, &SHAPE);
+        let dm = SHAPE.d_model;
+        for (pos, (&ks, &vs)) in k_scales.iter().zip(&v_scales).enumerate() {
+            for d in 0..dm {
+                let i = pos * dm + d;
+                assert_eq!(f32::from(k[i]) * ks, k_ref[i], "k pos {pos} d {d}");
+                assert_eq!(f32::from(v[i]) * vs, v_ref[i], "v pos {pos} d {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_chain_falls_back_to_f32_slabs() {
+        let k_cache = coord_cache(0.0);
+        let v_cache = coord_cache(0.5);
+        let b0 = extract_block(&k_cache, &v_cache, &SHAPE, 2, 6, 1, 0);
+        let b1 = extract_block(&k_cache, &v_cache, &SHAPE, 2, 6, 1, 1);
+        let stored = vec![
+            StoredBlock::F32(Arc::new(b0)),
+            StoredBlock::I8(Arc::new(QuantKvBlock::quantize(&b1, &SHAPE))),
+        ];
+        assert!(matches!(assemble_prefix_stored(&stored, &SHAPE), SeedSlabs::F32 { .. }));
     }
 }

@@ -1,0 +1,537 @@
+//! Cold tier for the distributed KV pool: a bounded disk/byte tier that
+//! catches S3-FIFO eviction victims instead of dropping them.
+//!
+//! The RAM tier ([`super::pool::DistKvPool`]) spills *data-bearing*
+//! victims here on eviction; a later lookup or prefetch that re-references
+//! a spilled key promotes it back into a RAM shard. Promotion is exact:
+//! blocks are serialized with a bit-preserving codec (`f32::to_bits` /
+//! `from_bits` round trips, int8 bytes verbatim), so a spill → promote →
+//! dequantize chain is bit-identical to the pre-spill block.
+//!
+//! Two backings:
+//!   * **memory** (default): payloads live in anonymous byte buffers —
+//!     the deterministic choice for tests and benches;
+//!   * **file**: payloads live in fixed-size slots of an unlinked temp
+//!     file (the disk tier proper). Any I/O failure degrades to dropping
+//!     the spill — the cold tier is a cache of recomputable state, so
+//!     losing a payload costs a recompute, never correctness.
+//!
+//! Capacity is bounded in bytes; when a spill does not fit, the oldest
+//! spills are evicted FIFO (cold entries carry no recency — a re-reference
+//! promotes out of the tier rather than reordering within it).
+//!
+//! Locking: the tier is owned by `DistKvPool` and mutated under the pool's
+//! lock. If it ever grows a lock of its own, the canonical order is
+//! pool → coldtier (see `lint::lockorder`), never the reverse.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::Arc;
+
+use super::blocks::{BlockKey, KvBlockData, QuantKvBlock, StoredBlock};
+use crate::runtime::kernels::QuantMat;
+use crate::sim::SimTime;
+
+/// Where cold payloads live.
+#[derive(Debug, Clone, Default)]
+pub enum ColdBacking {
+    /// In-memory byte buffers (deterministic; default).
+    #[default]
+    Mem,
+    /// Fixed-size slots in an unlinked temporary file under `dir`.
+    File {
+        dir: std::path::PathBuf,
+    },
+}
+
+/// Payload location for one spilled block.
+enum Loc {
+    Mem(Vec<u8>),
+    Slot(u64),
+}
+
+struct ColdEntry {
+    /// Shard the block was homed on when it was spilled — preserved so the
+    /// pool's owner-exempt visibility rule survives the round trip.
+    node: u64,
+    /// Original visibility instant — promotion must not restart the
+    /// metadata clock.
+    visible_at: SimTime,
+    /// Encoded payload bytes (the unit of capacity accounting).
+    bytes: u64,
+    loc: Loc,
+}
+
+/// Slot allocator over an unlinked temp file. Every slot is `slot_bytes`
+/// wide (sized by the first spill — all blocks of one pool share a shape,
+/// so encoded sizes are uniform per precision); freed slots are recycled.
+struct SlotFile {
+    file: File,
+    slot_bytes: u64,
+    free: Vec<u64>,
+    next: u64,
+}
+
+impl SlotFile {
+    fn write(&mut self, buf: &[u8]) -> Option<u64> {
+        if buf.len() as u64 > self.slot_bytes {
+            return None;
+        }
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let s = self.next;
+            self.next += 1;
+            s
+        });
+        let ok = self
+            .file
+            .seek(SeekFrom::Start(slot * self.slot_bytes))
+            .and_then(|_| self.file.write_all(buf))
+            .is_ok();
+        if ok {
+            Some(slot)
+        } else {
+            self.free.push(slot);
+            None
+        }
+    }
+
+    fn read(&mut self, slot: u64, len: usize) -> Option<Vec<u8>> {
+        let mut buf = vec![0u8; len];
+        let ok = self
+            .file
+            .seek(SeekFrom::Start(slot * self.slot_bytes))
+            .and_then(|_| self.file.read_exact(&mut buf))
+            .is_ok();
+        if ok {
+            Some(buf)
+        } else {
+            None
+        }
+    }
+}
+
+/// Counters the pool folds into its own `PoolStats`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ColdOutcome {
+    /// Spill accepted and resident.
+    pub stored: bool,
+    /// Oldest spills evicted to make room.
+    pub evicted: u64,
+}
+
+/// The bounded cold tier.
+pub struct ColdTier {
+    capacity: u64,
+    used: u64,
+    backing: ColdBacking,
+    file: Option<SlotFile>,
+    /// FIFO spill order (oldest at the front).
+    order: VecDeque<BlockKey>,
+    blocks: HashMap<BlockKey, ColdEntry>,
+}
+
+impl ColdTier {
+    pub fn new(capacity: u64, backing: ColdBacking) -> ColdTier {
+        ColdTier {
+            capacity,
+            used: 0,
+            backing,
+            file: None,
+            order: VecDeque::new(),
+            blocks: HashMap::new(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn contains(&self, key: BlockKey) -> bool {
+        self.blocks.contains_key(&key)
+    }
+
+    /// Visibility of a spilled block for a consumer on `node` at `now` —
+    /// the pool's owner-exempt rule, carried across the spill.
+    // lint:hot_path
+    pub fn visible(&self, key: BlockKey, now: SimTime, node: u64) -> bool {
+        match self.blocks.get(&key) {
+            Some(e) => e.visible_at <= now || e.node == node,
+            None => false,
+        }
+    }
+
+    /// Owner node and visibility instant of a spilled block.
+    pub fn owner(&self, key: BlockKey) -> Option<(u64, SimTime)> {
+        self.blocks.get(&key).map(|e| (e.node, e.visible_at))
+    }
+
+    /// Spill a block. Evicts the oldest spills (FIFO) until the payload
+    /// fits; a payload larger than the whole tier, or one that fails to
+    /// reach its backing, is dropped (`stored: false`). Re-spilling a key
+    /// already resident replaces it.
+    pub fn put(
+        &mut self,
+        key: BlockKey,
+        node: u64,
+        visible_at: SimTime,
+        block: &StoredBlock,
+    ) -> ColdOutcome {
+        let buf = encode(block);
+        let bytes = buf.len() as u64;
+        let mut out = ColdOutcome::default();
+        if bytes > self.capacity {
+            return out;
+        }
+        self.remove(key);
+        while self.used + bytes > self.capacity {
+            let Some(oldest) = self.order.pop_front() else { break };
+            if let Some(e) = self.blocks.remove(&oldest) {
+                self.used = self.used.saturating_sub(e.bytes);
+                self.free_loc(e.loc);
+                out.evicted += 1;
+            }
+        }
+        if self.used + bytes > self.capacity {
+            return out; // accounting slipped; refuse rather than overflow
+        }
+        let loc = match self.store_payload(&buf) {
+            Some(loc) => loc,
+            None => return out, // backing I/O failed: drop the spill
+        };
+        self.used += bytes;
+        self.order.push_back(key);
+        self.blocks.insert(key, ColdEntry { node, visible_at, bytes, loc });
+        out.stored = true;
+        out
+    }
+
+    /// Remove and decode a spilled block (the promotion path). Returns the
+    /// block with its original home node and visibility instant. A payload
+    /// that cannot be read back (file I/O error, torn codec) is dropped —
+    /// the caller sees a miss and recomputes.
+    pub fn take(&mut self, key: BlockKey) -> Option<(StoredBlock, u64, SimTime)> {
+        let e = self.blocks.remove(&key)?;
+        self.order.retain(|k| *k != key);
+        self.used = self.used.saturating_sub(e.bytes);
+        let buf = match e.loc {
+            Loc::Mem(b) => Some(b),
+            Loc::Slot(s) => {
+                let b = self.file.as_mut().and_then(|f| f.read(s, e.bytes as usize));
+                if let Some(f) = self.file.as_mut() {
+                    f.free.push(s);
+                }
+                b
+            }
+        };
+        decode(&buf?).map(|block| (block, e.node, e.visible_at))
+    }
+
+    /// Drop a spilled block without decoding it (a fresh RAM insert of the
+    /// same key supersedes the cold copy).
+    pub fn remove(&mut self, key: BlockKey) -> bool {
+        let Some(e) = self.blocks.remove(&key) else { return false };
+        self.order.retain(|k| *k != key);
+        self.used = self.used.saturating_sub(e.bytes);
+        self.free_loc(e.loc);
+        true
+    }
+
+    /// Tier-local consistency: byte accounting matches the entries, the
+    /// bound holds, and the FIFO order covers exactly the resident keys.
+    pub fn check_invariants(&self) -> bool {
+        let sum: u64 = self.blocks.values().map(|e| e.bytes).sum();
+        sum == self.used
+            && self.used <= self.capacity
+            && self.order.len() == self.blocks.len()
+            && self.order.iter().all(|k| self.blocks.contains_key(k))
+    }
+
+    fn free_loc(&mut self, loc: Loc) {
+        if let (Loc::Slot(s), Some(f)) = (loc, self.file.as_mut()) {
+            f.free.push(s);
+        }
+    }
+
+    fn store_payload(&mut self, buf: &[u8]) -> Option<Loc> {
+        match &self.backing {
+            ColdBacking::Mem => Some(Loc::Mem(buf.to_vec())),
+            ColdBacking::File { dir } => {
+                if self.file.is_none() {
+                    self.file = open_slot_file(dir, buf.len() as u64);
+                }
+                match self.file.as_mut().and_then(|f| f.write(buf)) {
+                    Some(slot) => Some(Loc::Slot(slot)),
+                    // Oversized for the slot width or write failure: keep
+                    // the spill in memory rather than losing it.
+                    None => Some(Loc::Mem(buf.to_vec())),
+                }
+            }
+        }
+    }
+}
+
+/// Open an unlinked temp file for slot storage: the path is removed
+/// immediately after creation (the open handle keeps the bytes alive on
+/// unix), so crashes never leave stale spill files behind. Returns `None`
+/// on any I/O failure — the tier then degrades to memory payloads.
+fn open_slot_file(dir: &std::path::Path, slot_bytes: u64) -> Option<SlotFile> {
+    let name = format!("aibrix-kv-cold-{}-{slot_bytes}.bin", std::process::id());
+    let path = dir.join(name);
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&path)
+        .ok()?;
+    let _ = std::fs::remove_file(&path);
+    Some(SlotFile { file, slot_bytes: slot_bytes.max(1), free: Vec::new(), next: 0 })
+}
+
+// --------------------------------------------------------------- codec
+
+const TAG_F32: u8 = 0;
+const TAG_I8: u8 = 1;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8], at: usize) -> Option<u32> {
+    let b = buf.get(at..at + 4)?;
+    Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn get_f32s(buf: &[u8], at: usize, n: usize) -> Option<Vec<f32>> {
+    let b = buf.get(at..at + 4 * n)?;
+    let mut out = Vec::with_capacity(n);
+    for c in b.chunks_exact(4) {
+        out.push(f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+    }
+    Some(out)
+}
+
+fn put_i8s(buf: &mut Vec<u8>, xs: &[i8]) {
+    for &x in xs {
+        buf.push(x as u8);
+    }
+}
+
+fn get_i8s(buf: &[u8], at: usize, n: usize) -> Option<Vec<i8>> {
+    let b = buf.get(at..at + n)?;
+    Some(b.iter().map(|&x| x as i8).collect())
+}
+
+/// Self-describing, bit-preserving serialization of a stored block.
+///
+/// Layout: `tag` then, for f32 — `n:u32, K[n]:f32, V[n]:f32`; for int8 —
+/// `rows:u32, cols:u32, Kq[rows*cols]:i8, Ks[rows]:f32, Vq[rows*cols]:i8,
+/// Vs[rows]:f32`. Floats travel as `to_bits` LE words, so the round trip
+/// is exact for every value including -0.0 and subnormals.
+fn encode(block: &StoredBlock) -> Vec<u8> {
+    match block {
+        StoredBlock::F32(b) => {
+            let mut buf = Vec::with_capacity(1 + 4 + 8 * b.k.len());
+            buf.push(TAG_F32);
+            put_u32(&mut buf, b.k.len() as u32);
+            put_f32s(&mut buf, &b.k);
+            put_f32s(&mut buf, &b.v);
+            buf
+        }
+        StoredBlock::I8(q) => {
+            let (rows, cols) = (q.k.rows, q.k.cols);
+            let mut buf = Vec::with_capacity(1 + 8 + 2 * (rows * cols + 4 * rows));
+            buf.push(TAG_I8);
+            put_u32(&mut buf, rows as u32);
+            put_u32(&mut buf, cols as u32);
+            put_i8s(&mut buf, &q.k.data);
+            put_f32s(&mut buf, &q.k.scales);
+            put_i8s(&mut buf, &q.v.data);
+            put_f32s(&mut buf, &q.v.scales);
+            buf
+        }
+    }
+}
+
+fn decode(buf: &[u8]) -> Option<StoredBlock> {
+    match *buf.first()? {
+        TAG_F32 => {
+            let n = get_u32(buf, 1)? as usize;
+            let k = get_f32s(buf, 5, n)?;
+            let v = get_f32s(buf, 5 + 4 * n, n)?;
+            Some(StoredBlock::F32(Arc::new(KvBlockData { k, v })))
+        }
+        TAG_I8 => {
+            let rows = get_u32(buf, 1)? as usize;
+            let cols = get_u32(buf, 5)? as usize;
+            let n = rows.checked_mul(cols)?;
+            let mut at = 9;
+            let k_data = get_i8s(buf, at, n)?;
+            at += n;
+            let k_scales = get_f32s(buf, at, rows)?;
+            at += 4 * rows;
+            let v_data = get_i8s(buf, at, n)?;
+            at += n;
+            let v_scales = get_f32s(buf, at, rows)?;
+            Some(StoredBlock::I8(Arc::new(QuantKvBlock {
+                k: QuantMat { rows, cols, data: k_data, scales: k_scales },
+                v: QuantMat { rows, cols, data: v_data, scales: v_scales },
+            })))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::blocks::KvBlockShape;
+
+    const SHAPE: KvBlockShape = KvBlockShape { n_layers: 2, block_tokens: 4, d_model: 8 };
+
+    fn f32_block(tag: f32) -> StoredBlock {
+        let n = SHAPE.floats_per_side();
+        let k: Vec<f32> = (0..n).map(|i| tag + (i as f32 * 0.31).sin()).collect();
+        let v: Vec<f32> = (0..n).map(|i| -tag - (i as f32 * 0.17).cos()).collect();
+        StoredBlock::F32(Arc::new(KvBlockData { k, v }))
+    }
+
+    fn i8_block(tag: f32) -> StoredBlock {
+        let StoredBlock::F32(b) = f32_block(tag) else { unreachable!() };
+        StoredBlock::I8(Arc::new(QuantKvBlock::quantize(&b, &SHAPE)))
+    }
+
+    fn block_bytes(b: &StoredBlock) -> u64 {
+        encode(b).len() as u64
+    }
+
+    fn bits_equal(a: &StoredBlock, b: &StoredBlock) -> bool {
+        match (a, b) {
+            (StoredBlock::F32(x), StoredBlock::F32(y)) => {
+                x.k.iter().zip(&y.k).all(|(p, q)| p.to_bits() == q.to_bits())
+                    && x.v.iter().zip(&y.v).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            (StoredBlock::I8(x), StoredBlock::I8(y)) => {
+                x.k.data == y.k.data
+                    && x.v.data == y.v.data
+                    && x.k.scales.iter().zip(&y.k.scales).all(|(p, q)| p.to_bits() == q.to_bits())
+                    && x.v.scales.iter().zip(&y.v.scales).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_bit_exactly_both_precisions() {
+        for b in [f32_block(1.0), i8_block(2.0)] {
+            let back = decode(&encode(&b)).expect("decode");
+            assert!(bits_equal(&b, &back));
+        }
+        // Odd bit patterns survive: -0.0, subnormal, inf.
+        let odd = StoredBlock::F32(Arc::new(KvBlockData {
+            k: vec![-0.0, f32::MIN_POSITIVE / 2.0, f32::INFINITY, 1.5e-42],
+            v: vec![0.0, -1.0, f32::NEG_INFINITY, -1.5e-42],
+        }));
+        let back = decode(&encode(&odd)).expect("decode");
+        assert!(bits_equal(&odd, &back));
+        // Garbage never panics.
+        assert!(decode(&[]).is_none());
+        assert!(decode(&[7, 1, 2, 3]).is_none());
+        assert!(decode(&[TAG_I8, 255, 255, 255, 255, 255, 255, 255, 255]).is_none());
+    }
+
+    #[test]
+    fn put_take_round_trip_preserves_bits_and_metadata() {
+        let b = i8_block(3.0);
+        let mut t = ColdTier::new(10 * block_bytes(&b), ColdBacking::Mem);
+        let out = t.put(42, 7, 12_345, &b);
+        assert!(out.stored && out.evicted == 0);
+        assert!(t.contains(42) && t.len() == 1);
+        assert!(t.check_invariants());
+        let (back, node, vis) = t.take(42).expect("take");
+        assert!(bits_equal(&b, &back), "spill -> promote must be bit-identical");
+        assert_eq!((node, vis), (7, 12_345));
+        assert!(t.is_empty() && t.used_bytes() == 0);
+        assert!(t.check_invariants());
+    }
+
+    #[test]
+    fn fifo_eviction_under_capacity_bound() {
+        let b = f32_block(0.0);
+        let bb = block_bytes(&b);
+        let mut t = ColdTier::new(3 * bb, ColdBacking::Mem);
+        for key in 1..=5u64 {
+            t.put(key, 0, 0, &f32_block(key as f32));
+            assert!(t.check_invariants());
+        }
+        assert_eq!(t.len(), 3);
+        assert!(!t.contains(1) && !t.contains(2), "oldest spills evicted first");
+        assert!(t.contains(3) && t.contains(4) && t.contains(5));
+        // A payload larger than the whole tier is refused outright.
+        let mut tiny = ColdTier::new(bb / 2, ColdBacking::Mem);
+        let out = tiny.put(9, 0, 0, &b);
+        assert!(!out.stored && tiny.is_empty());
+        assert!(tiny.check_invariants());
+    }
+
+    #[test]
+    fn respill_replaces_and_remove_frees_bytes() {
+        let b = f32_block(1.0);
+        let bb = block_bytes(&b);
+        let mut t = ColdTier::new(4 * bb, ColdBacking::Mem);
+        t.put(1, 0, 0, &b);
+        t.put(1, 0, 5, &f32_block(2.0));
+        assert_eq!(t.len(), 1, "re-spill replaces, never duplicates");
+        assert_eq!(t.used_bytes(), bb);
+        assert_eq!(t.owner(1), Some((0, 5)));
+        assert!(t.remove(1));
+        assert!(!t.remove(1));
+        assert!(t.is_empty() && t.check_invariants());
+    }
+
+    #[test]
+    fn visibility_carries_owner_exemption() {
+        let mut t = ColdTier::new(1 << 20, ColdBacking::Mem);
+        t.put(5, 3, 100, &f32_block(1.0));
+        assert!(t.visible(5, 100, 9), "published: visible to all");
+        assert!(!t.visible(5, 99, 9), "unpublished: hidden from others");
+        assert!(t.visible(5, 0, 3), "owner sees its own spill immediately");
+        assert!(!t.visible(6, 1000, 3), "unknown key");
+    }
+
+    #[test]
+    fn file_backing_round_trips_and_recycles_slots() {
+        let b = i8_block(4.0);
+        let mut t = ColdTier::new(1 << 20, ColdBacking::File { dir: std::env::temp_dir() });
+        let out = t.put(1, 0, 0, &b);
+        assert!(out.stored);
+        let (back, _, _) = t.take(1).expect("file take");
+        assert!(bits_equal(&b, &back), "disk round trip must be bit-identical");
+        // Freed slot is recycled for the next spill of the same width.
+        t.put(2, 0, 0, &i8_block(5.0));
+        t.put(3, 0, 0, &i8_block(6.0));
+        assert_eq!(t.len(), 2);
+        assert!(t.check_invariants());
+        let (b3, _, _) = t.take(3).expect("take 3");
+        assert!(bits_equal(&i8_block(6.0), &b3));
+    }
+}

@@ -19,12 +19,21 @@
 //!     for the real serving path;
 //!   * [`blocks`] — the content-addressed real-KV block format (model-
 //!     seeded chain hashing shared with `engine::prefix`) plus the
-//!     extract/assemble helpers between runtime cache tensors and blocks.
+//!     extract/assemble helpers between runtime cache tensors and blocks,
+//!     including the int8-quantized form ([`blocks::QuantKvBlock`]) the
+//!     pool stores under `KvPoolConfig::quant`;
+//!   * [`coldtier`] — the bounded spill tier backing the pool's third
+//!     residency class: eviction victims land here (memory buffers or an
+//!     unlinked temp file) and promote back to RAM on re-reference.
 
 pub mod blocks;
+pub mod coldtier;
 pub mod eviction;
 pub mod pool;
 
-pub use blocks::{KvBlockData, KvBlockShape};
+pub use blocks::{
+    assemble_prefix_stored, KvBlockData, KvBlockShape, QuantKvBlock, SeedSlabs, StoredBlock,
+};
+pub use coldtier::{ColdBacking, ColdTier};
 pub use eviction::{EvictionKind, EvictionPolicy, Fifo, Lru, S3Fifo};
-pub use pool::{DistKvPool, KvPoolConfig, PoolResidency, PoolStats};
+pub use pool::{BlockTier, DistKvPool, KvPoolConfig, PoolResidency, PoolStats};

@@ -12,7 +12,21 @@
 //!     needed — so a replica can always reuse its own write-backs;
 //!   * **dedup**: re-inserting a key that is already resident (or in
 //!     flight) is dropped, the paper's "reduced redundant data transfers";
-//!   * **scan-resistant eviction**: per-node policy, S3-FIFO by default.
+//!   * **scan-resistant eviction**: per-node policy, S3-FIFO by default;
+//!   * **int8 block storage** (`KvPoolConfig::quant`): data-bearing
+//!     inserts are quantized with the runtime's per-channel `QuantMat`
+//!     scheme (one scale per layer-position row), quartering the per-block
+//!     charge and the modeled transfer bytes. Consumers attend directly
+//!     over the int8 rows (`kernels::attend_one_i8`) or dequantize into
+//!     staging slabs — bit-identical either way;
+//!   * **cold tier** (`KvPoolConfig::cold_bytes`): eviction victims with
+//!     data spill to a bounded disk/byte tier ([`super::coldtier`])
+//!     instead of dropping; a lookup or prefetch that re-references a
+//!     spilled key promotes it back to RAM, keeping its original
+//!     visibility clock. Cold fetches are costed at `cold_gbps`;
+//!   * **prefetch** ([`DistKvPool::prefetch`]): predicted next-turn chains
+//!     are warmed ahead of admission — RAM hits get a recency bump, cold
+//!     hits are promoted — so the real fetch runs at RAM speed.
 //!
 //! Implements [`ExternalKv`], the hook the engine simulator calls at
 //! admission (lookup) and completion (write-back insert).
@@ -20,7 +34,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::blocks::{KvBlockData, KvBlockShape};
+use super::blocks::{KvBlockData, KvBlockShape, QuantKvBlock, StoredBlock};
+use super::coldtier::{ColdBacking, ColdTier};
 use super::eviction::{EvictionKind, EvictionPolicy};
 use crate::engine::{ExternalKv, KvFetch};
 use crate::sim::SimTime;
@@ -46,6 +61,18 @@ pub struct KvPoolConfig {
     /// Drop redundant inserts (paper's transfer dedup) — disable only for
     /// the ablation bench.
     pub dedup: bool,
+    /// Store data-bearing blocks as int8 (`AIBRIX_KV_QUANT`): quarters the
+    /// RAM-tier charge and the modeled transfer bytes at the measured
+    /// accuracy cost of the `attend_one_i8` contract. Requires the pool
+    /// shape to be declared before the first data insert.
+    pub quant: bool,
+    /// Cold-tier capacity in bytes (`AIBRIX_KV_COLD_MB`); 0 disables the
+    /// tier and eviction victims are dropped as before.
+    pub cold_bytes: u64,
+    /// Cold-tier read bandwidth, GB/s (disk-class; well under `net_gbps`).
+    pub cold_gbps: f64,
+    /// Where cold payloads live (memory buffers or an unlinked temp file).
+    pub cold_backing: ColdBacking,
 }
 
 impl KvPoolConfig {
@@ -59,11 +86,27 @@ impl KvPoolConfig {
             metadata_delay_us: 50_000,
             eviction: EvictionKind::S3Fifo,
             dedup: true,
+            quant: false,
+            cold_bytes: 0,
+            cold_gbps: 2.0,
+            cold_backing: ColdBacking::Mem,
         }
     }
 
     pub fn block_bytes(&self) -> u64 {
         self.kv_bytes_per_token * self.block_tokens as u64
+    }
+
+    /// Bytes charged per resident block in the RAM tier — and the modeled
+    /// transfer size of one block fetch. The f32 footprint, quartered
+    /// under int8 storage (f32 → i8; the per-row scale overhead is
+    /// uncharged — 4/d_model of the i8 bytes, under 2% for d_model ≥ 64).
+    pub fn charged_block_bytes(&self) -> u64 {
+        if self.quant {
+            (self.block_bytes() / 4).max(1)
+        } else {
+            self.block_bytes()
+        }
     }
 }
 
@@ -84,10 +127,24 @@ struct NodeShard {
 /// node, and how much of it is homed on the node's own shard.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolResidency {
-    /// Longest visible-to-this-node prefix, blocks (local + remote).
+    /// Longest visible-to-this-node prefix, blocks, across both tiers
+    /// (local + remote RAM + cold).
     pub visible_blocks: usize,
-    /// Blocks within that prefix homed on the node's own shard.
+    /// Blocks within that prefix homed on the node's own RAM shard.
     pub local_blocks: usize,
+    /// Blocks within that prefix resident only in the cold tier — usable,
+    /// but behind a promotion at disk bandwidth (the router discounts them
+    /// below remote-RAM blocks; see `gateway::router::COLD_POOL_CREDIT`).
+    pub cold_blocks: usize,
+}
+
+/// Which tier a resident block lives in ([`DistKvPool::block_owner`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockTier {
+    /// RAM shard (local or remote — the owner node disambiguates).
+    Ram,
+    /// Spilled to the cold tier; promotable on re-reference.
+    Cold,
 }
 
 /// Pool statistics (Table 1 analysis + ablations).
@@ -106,6 +163,22 @@ pub struct PoolStats {
     pub shards_dropped: u64,
     /// Blocks lost with those shards (metadata + data tiers).
     pub blocks_dropped: u64,
+    /// Lookup hits served by promotion out of the cold tier (a subset of
+    /// `blocks_hit`, costed at `cold_gbps`).
+    pub blocks_hit_cold: u64,
+    /// Eviction victims that landed in the cold tier instead of dropping.
+    pub spills: u64,
+    /// Spills the bounded cold tier aged out (FIFO) to make room.
+    pub cold_evictions: u64,
+    /// Blocks promoted cold → RAM (lookup- and prefetch-driven).
+    pub promotions: u64,
+    /// Blocks requested by [`DistKvPool::prefetch`].
+    pub prefetch_issued: u64,
+    /// Prefetched blocks found in either tier (warmed or promoted).
+    pub prefetch_hits: u64,
+    /// RAM bytes the int8 tier saved vs f32 storage, summed over
+    /// data-bearing inserts.
+    pub quant_bytes_saved: u64,
 }
 
 impl PoolStats {
@@ -116,6 +189,14 @@ impl PoolStats {
             self.blocks_hit as f64 / self.blocks_requested as f64
         }
     }
+
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / self.prefetch_issued as f64
+        }
+    }
 }
 
 /// The distributed pool.
@@ -123,12 +204,18 @@ pub struct DistKvPool {
     cfg: KvPoolConfig,
     index: HashMap<BlockKey, Entry>,
     shards: HashMap<u64, NodeShard>,
-    /// Data tier ([`super::blocks`]): the real K/V tensors, present for
-    /// blocks inserted through [`DistKvPool::insert_blocks`] (the real
-    /// serving path). Metadata-only inserts (the simulator's `ExternalKv`
-    /// hook) leave no entry here. Invariant: `store` keys ⊆ `index` keys —
-    /// eviction and replacement drop both together.
-    store: HashMap<BlockKey, Arc<KvBlockData>>,
+    /// Data tier ([`super::blocks`]): the real K/V tensors (f32 or int8
+    /// per `cfg.quant`), present for blocks inserted through
+    /// [`DistKvPool::insert_blocks`] (the real serving path).
+    /// Metadata-only inserts (the simulator's `ExternalKv` hook) leave no
+    /// entry here. Invariant: `store` keys ⊆ `index` keys — eviction and
+    /// replacement drop both together.
+    store: HashMap<BlockKey, StoredBlock>,
+    /// Bounded spill tier for data-bearing eviction victims
+    /// ([`super::coldtier`]); `None` when `cfg.cold_bytes == 0`.
+    /// Invariant: cold keys ∩ `index` keys == ∅ — a block lives in exactly
+    /// one tier, so promotion and re-insert can never duplicate a key.
+    cold: Option<ColdTier>,
     /// Expected geometry of stored blocks; set once by the first real
     /// consumer, then enforced on every data-bearing insert.
     shape: Option<KvBlockShape>,
@@ -149,11 +236,17 @@ impl DistKvPool {
                 (node, NodeShard { capacity, used: 0, policy: cfg.eviction.build() })
             })
             .collect();
+        let cold = if cfg.cold_bytes > 0 {
+            Some(ColdTier::new(cfg.cold_bytes, cfg.cold_backing.clone()))
+        } else {
+            None
+        };
         DistKvPool {
             cfg,
             index: HashMap::new(),
             shards,
             store: HashMap::new(),
+            cold,
             shape: None,
             epoch: std::time::Instant::now(),
             stats: PoolStats::default(),
@@ -209,6 +302,17 @@ impl DistKvPool {
         self.store.len()
     }
 
+    /// Live block counts per tier: `(RAM, cold)` — the `/metrics`
+    /// `aibrix_kvpool_tier{tier}` gauges.
+    pub fn tier_blocks(&self) -> (usize, usize) {
+        (self.index.len(), self.cold.as_ref().map_or(0, |c| c.len()))
+    }
+
+    /// Bytes resident in the cold tier (0 when the tier is disabled).
+    pub fn cold_used_bytes(&self) -> u64 {
+        self.cold.as_ref().map_or(0, |c| c.used_bytes())
+    }
+
     /// Is `key` resident (visible or not)?
     pub fn contains(&self, key: BlockKey) -> bool {
         self.index.contains_key(&key)
@@ -234,11 +338,13 @@ impl DistKvPool {
     }
 
     /// Read-only residency probe for the router: the longest prefix of
-    /// `keys` visible to `node`, split into local (own-shard) vs total
-    /// blocks. Unlike [`DistKvPool::lookup_blocks`] this mutates nothing —
-    /// no stats, no eviction-policy access bumps — because a routing
-    /// decision is not a data access (the chosen pod's admission lookup
-    /// does the real, accounted fetch).
+    /// `keys` visible to `node`, split into local (own-shard), remote-RAM
+    /// and cold residency classes. Unlike [`DistKvPool::lookup_blocks`]
+    /// this mutates nothing — no stats, no eviction-policy access bumps,
+    /// no promotions — because a routing decision is not a data access
+    /// (the chosen pod's admission lookup does the real, accounted fetch).
+    /// Allocation-free: the router probes every pod per request.
+    // lint:hot_path
     pub fn residency(&self, now: SimTime, node: u64, keys: &[BlockKey]) -> PoolResidency {
         let mut r = PoolResidency::default();
         for key in keys {
@@ -249,16 +355,30 @@ impl DistKvPool {
                         r.local_blocks += 1;
                     }
                 }
-                _ => break, // prefixes are contiguous
+                Some(_) => break, // resident but not yet visible here
+                None => {
+                    // A spilled block keeps the chain walkable — at the
+                    // cold discount.
+                    if self.cold.as_ref().is_some_and(|c| c.visible(*key, now, node)) {
+                        r.visible_blocks += 1;
+                        r.cold_blocks += 1;
+                    } else {
+                        break; // prefixes are contiguous
+                    }
+                }
             }
         }
         r
     }
 
-    /// Owner node and visibility instant of a resident block
-    /// (observability and residency tests).
-    pub fn block_owner(&self, key: BlockKey) -> Option<(u64, SimTime)> {
-        self.index.get(&key).map(|e| (e.node, e.visible_at))
+    /// Tier class, owner node and visibility instant of a resident block
+    /// (observability and residency tests). Cold blocks report the shard
+    /// they were homed on when spilled.
+    pub fn block_owner(&self, key: BlockKey) -> Option<(BlockTier, u64, SimTime)> {
+        if let Some(e) = self.index.get(&key) {
+            return Some((BlockTier::Ram, e.node, e.visible_at));
+        }
+        self.cold.as_ref().and_then(|c| c.owner(key)).map(|(n, t)| (BlockTier::Cold, n, t))
     }
 
     /// Pick the shard for a new block: the inserting node if it has a shard
@@ -280,15 +400,28 @@ impl DistKvPool {
             .map(|(id, _)| *id)
     }
 
+    /// Evict one block from `node`'s shard. With the cold tier enabled, a
+    /// data-bearing victim spills there (keeping its home node and
+    /// visibility clock for the round trip) instead of dropping;
+    /// metadata-only victims are dropped either way — there is nothing to
+    /// spill.
     fn evict_from(&mut self, node: u64) -> bool {
+        let cb = self.cfg.charged_block_bytes();
         let Some(shard) = self.shards.get_mut(&node) else {
             return false; // unknown shard: nothing to evict from
         };
         if let Some(victim) = shard.policy.evict() {
-            shard.used = shard.used.saturating_sub(self.cfg.block_bytes());
-            self.index.remove(&victim);
-            self.store.remove(&victim);
+            shard.used = shard.used.saturating_sub(cb);
+            let entry = self.index.remove(&victim);
+            let data = self.store.remove(&victim);
             self.stats.evictions += 1;
+            if let (Some(cold), Some(data), Some(e)) = (self.cold.as_mut(), data, entry) {
+                let out = cold.put(victim, e.node, e.visible_at, &data);
+                if out.stored {
+                    self.stats.spills += 1;
+                }
+                self.stats.cold_evictions += out.evicted;
+            }
             true
         } else {
             false
@@ -330,26 +463,95 @@ impl DistKvPool {
         self.shards.contains_key(&node)
     }
 
-    /// Consistency: index size == sum of per-shard policy sizes, used bytes
-    /// == blocks * block_bytes, no shard over capacity, and every
-    /// data-tier entry has a live index entry.
+    /// Consistency across both tiers: index size == sum of per-shard
+    /// policy sizes, used bytes == blocks * charged bytes, no shard over
+    /// capacity, every data-tier entry has a live index entry; the cold
+    /// tier's own byte accounting holds and its keys are disjoint from the
+    /// RAM index (a block lives in exactly one tier).
     pub fn check_invariants(&self) -> bool {
         let policy_total: usize = self.shards.values().map(|s| s.policy.len()).sum();
         if policy_total != self.index.len() {
             return false;
         }
         let used: u64 = self.used_bytes();
-        used == self.index.len() as u64 * self.cfg.block_bytes()
+        let ram_ok = used == self.index.len() as u64 * self.cfg.charged_block_bytes()
             && self.shards.values().all(|s| s.used <= s.capacity)
-            && self.store.keys().all(|k| self.index.contains_key(k))
+            && self.store.keys().all(|k| self.index.contains_key(k));
+        let cold_ok = match &self.cold {
+            None => true,
+            Some(c) => {
+                c.check_invariants() && self.index.keys().all(|k| !c.contains(*k))
+            }
+        };
+        ram_ok && cold_ok
     }
 
     // ------------------------------------------------------ shared paths
 
+    /// Promote a spilled block back into a RAM shard (placement follows
+    /// the referencing node), preserving its original visibility clock so
+    /// a published block stays published. The block is removed from the
+    /// cold tier *before* the RAM insert, so a key can never exist in both
+    /// tiers; if making room fails (no live shard, or the shard is smaller
+    /// than one block) the block is re-spilled untouched — promotion never
+    /// loses data.
+    fn promote_from_cold(&mut self, now: SimTime, node: u64, key: BlockKey) -> bool {
+        let visible = self.cold.as_ref().is_some_and(|c| c.visible(key, now, node));
+        if !visible {
+            return false;
+        }
+        let Some((block, home, visible_at)) = self.cold.as_mut().and_then(|c| c.take(key)) else {
+            return false;
+        };
+        let cb = self.cfg.charged_block_bytes();
+        let target = match self.placement(node) {
+            Some(t) => t,
+            None => {
+                if let Some(c) = self.cold.as_mut() {
+                    let _ = c.put(key, home, visible_at, &block);
+                }
+                return false;
+            }
+        };
+        loop {
+            let Some(shard) = self.shards.get_mut(&target) else {
+                if let Some(c) = self.cold.as_mut() {
+                    let _ = c.put(key, home, visible_at, &block);
+                }
+                return false;
+            };
+            if shard.used + cb <= shard.capacity {
+                break;
+            }
+            // Making room may cascade-spill other victims into the cold
+            // tier — `key` is already out of it, so no aliasing.
+            if !self.evict_from(target) {
+                if let Some(c) = self.cold.as_mut() {
+                    let _ = c.put(key, home, visible_at, &block);
+                }
+                return false;
+            }
+        }
+        let Some(shard) = self.shards.get_mut(&target) else {
+            if let Some(c) = self.cold.as_mut() {
+                let _ = c.put(key, home, visible_at, &block);
+            }
+            return false;
+        };
+        shard.used += cb;
+        shard.policy.on_insert(key);
+        self.store.insert(key, block);
+        self.index.insert(key, Entry { node: target, visible_at });
+        self.stats.promotions += 1;
+        true
+    }
+
     /// Longest visible prefix walk shared by the metadata [`ExternalKv`]
     /// lookup and the data-tier [`DistKvPool::lookup_blocks`]. Visibility
     /// is per-consumer: published blocks for everyone, unpublished ones
-    /// for their owning node only (see [`DistKvPool::residency`]). With
+    /// for their owning node only (see [`DistKvPool::residency`]). A key
+    /// missing from RAM but visible in the cold tier is promoted and
+    /// served (costed at `cold_gbps`), so the walk spans both tiers. With
     /// `need_data`, an entry that is visible but holds no real tensors ends
     /// the walk — a seeded prefill cannot skip past it.
     fn lookup_inner(
@@ -358,45 +560,89 @@ impl DistKvPool {
         node: u64,
         keys: &[BlockKey],
         need_data: bool,
-    ) -> (KvFetch, Vec<Arc<KvBlockData>>) {
+    ) -> (KvFetch, Vec<StoredBlock>) {
         self.stats.lookups += 1;
         self.stats.blocks_requested += keys.len() as u64;
         let mut local = 0u64;
         let mut remote = 0u64;
+        let mut cold = 0u64;
         let mut hit = 0usize;
         let mut data = Vec::new();
         for key in keys {
-            match self.index.get(key) {
-                Some(e) if Self::visible_to(e, now, node) => {
-                    if need_data {
-                        match self.store.get(key) {
-                            Some(d) => data.push(Arc::clone(d)),
-                            None => break,
-                        }
-                    }
-                    if e.node == node {
-                        local += 1;
-                    } else {
-                        remote += 1;
-                    }
-                    hit += 1;
-                    let home = e.node;
-                    if let Some(shard) = self.shards.get_mut(&home) {
-                        shard.policy.on_access(*key);
-                    }
+            let mut from_cold = false;
+            if !self.index.contains_key(key) {
+                if !self.promote_from_cold(now, node, *key) {
+                    break; // prefixes are contiguous
                 }
-                _ => break, // prefixes are contiguous
+                from_cold = true;
+            }
+            let Some(e) = self.index.get(key) else { break };
+            if !Self::visible_to(e, now, node) {
+                break; // resident but not yet visible here
+            }
+            if need_data {
+                match self.store.get(key) {
+                    Some(d) => data.push(d.clone()),
+                    None => break,
+                }
+            }
+            if from_cold {
+                cold += 1;
+            } else if e.node == node {
+                local += 1;
+            } else {
+                remote += 1;
+            }
+            hit += 1;
+            let home = e.node;
+            if let Some(shard) = self.shards.get_mut(&home) {
+                shard.policy.on_access(*key);
             }
         }
         self.stats.blocks_hit += hit as u64;
         self.stats.blocks_hit_local += local;
         self.stats.blocks_hit_remote += remote;
-        let bb = self.cfg.block_bytes() as f64;
+        self.stats.blocks_hit_cold += cold;
+        // Transfer size per block is the charged size: int8-resident
+        // blocks move a quarter of the f32 bytes — half the win of the
+        // quantized tier (the other half is capacity).
+        let bb = self.cfg.charged_block_bytes() as f64;
         let fetch_us = (local as f64 * bb / (self.cfg.shm_gbps * 1e9)
-            + remote as f64 * bb / (self.cfg.net_gbps * 1e9))
+            + remote as f64 * bb / (self.cfg.net_gbps * 1e9)
+            + cold as f64 * bb / (self.cfg.cold_gbps.max(1e-9) * 1e9))
             * 1e6;
-        self.stats.bytes_transferred += (local + remote) * self.cfg.block_bytes();
+        self.stats.bytes_transferred += (local + remote + cold) * self.cfg.charged_block_bytes();
         (KvFetch { blocks_hit: hit, fetch_us: fetch_us as u64 }, data)
+    }
+
+    /// Warm a predicted next-turn chain ahead of its admission lookup:
+    /// RAM-resident blocks get an eviction-policy recency bump, cold
+    /// blocks are promoted back to RAM — so when the sticky session's next
+    /// request arrives, its seeded prefill fetches at RAM speed instead of
+    /// paying `cold_gbps` inline. Called from the engine's background
+    /// staging thread at end-of-turn (overlapped with compute); no data is
+    /// returned and no fetch cost is charged here.
+    pub fn prefetch(&mut self, now: SimTime, node: u64, keys: &[BlockKey]) {
+        self.stats.prefetch_issued += keys.len() as u64;
+        for key in keys {
+            match self.index.get(key) {
+                Some(e) if Self::visible_to(e, now, node) => {
+                    let home = e.node;
+                    if let Some(shard) = self.shards.get_mut(&home) {
+                        shard.policy.on_access(*key);
+                    }
+                    self.stats.prefetch_hits += 1;
+                }
+                Some(_) => break, // not yet visible: the chain ends here
+                None => {
+                    if self.promote_from_cold(now, node, *key) {
+                        self.stats.prefetch_hits += 1;
+                    } else {
+                        break; // contiguous chains: a hole ends the warm
+                    }
+                }
+            }
+        }
     }
 
     /// Insert one block (metadata, optionally with real tensors), going
@@ -406,7 +652,7 @@ impl DistKvPool {
         now: SimTime,
         node: u64,
         key: BlockKey,
-        data: Option<Arc<KvBlockData>>,
+        data: Option<StoredBlock>,
     ) {
         self.stats.inserts += 1;
         if self.cfg.dedup && self.index.contains_key(&key) {
@@ -419,7 +665,7 @@ impl DistKvPool {
             }
             return;
         }
-        let bb = self.cfg.block_bytes();
+        let bb = self.cfg.charged_block_bytes();
         // Placement is recomputed per block (not once per insert call):
         // utilization shifts as each block of a multi-block write-back
         // lands, so a shard-less writer spreads across the pool instead of
@@ -456,8 +702,19 @@ impl DistKvPool {
         let Some(shard) = self.shards.get_mut(&target) else { return };
         shard.used += bb;
         shard.policy.on_insert(key);
+        // A fresh RAM-tier insert supersedes any spilled copy of the same
+        // key — a block lives in exactly one tier. If the insert carries
+        // no tensors but the cold tier has them, the spilled payload is
+        // reused so the data tier survives a drop→re-insert cycle.
+        let spilled = self.cold.as_mut().and_then(|c| c.take(key)).map(|(b, _, _)| b);
         if let Some(d) = data {
+            if self.cfg.quant && matches!(d, StoredBlock::I8(_)) {
+                self.stats.quant_bytes_saved +=
+                    self.cfg.block_bytes().saturating_sub(self.cfg.charged_block_bytes());
+            }
             self.store.insert(key, d);
+        } else if let Some(b) = spilled {
+            self.store.insert(key, b);
         }
         self.index
             .insert(key, Entry { node: target, visible_at: now + self.cfg.metadata_delay_us });
@@ -477,20 +734,23 @@ impl DistKvPool {
     // ----------------------------------------------------- data-tier API
 
     /// Longest visible *data-bearing* prefix of `keys`: the fetched K/V
-    /// blocks (cheap `Arc` clones) plus the same transfer costing and stats
-    /// accounting as the metadata lookup.
+    /// blocks (cheap `Arc` clones, f32 or int8 depending on the pool's
+    /// storage mode) plus the same transfer costing and stats accounting
+    /// as the metadata lookup. Cold-resident blocks are promoted inline.
     pub fn lookup_blocks(
         &mut self,
         now: SimTime,
         node: u64,
         keys: &[BlockKey],
-    ) -> (KvFetch, Vec<Arc<KvBlockData>>) {
+    ) -> (KvFetch, Vec<StoredBlock>) {
         self.lookup_inner(now, node, keys, true)
     }
 
     /// Write back freshly computed blocks *with their tensors*. Placement,
     /// dedup, eviction and the metadata visibility delay all apply exactly
-    /// as in the metadata-only [`ExternalKv::insert`]. A block that does
+    /// as in the metadata-only [`ExternalKv::insert`]. With `quant` on,
+    /// blocks are quantized to per-row int8 at the door and stored (and
+    /// charged) at a quarter of the f32 footprint. A block that does
     /// not match the pool's declared geometry rejects the whole batch
     /// before anything lands — the caller degrades (skips the write-back)
     /// instead of the pool corrupting its data tier or panicking.
@@ -500,17 +760,32 @@ impl DistKvPool {
         node: u64,
         items: &[(BlockKey, Arc<KvBlockData>)],
     ) -> Result<()> {
-        if let Some(shape) = self.shape {
-            for (key, d) in items {
-                if !d.matches(&shape) {
-                    return Err(Error::msg(format!(
-                        "block {key:#x} has wrong KV shape for this pool (expect {shape:?})"
-                    )));
+        let shape = match self.shape {
+            Some(shape) => {
+                for (key, d) in items {
+                    if !d.matches(&shape) {
+                        return Err(Error::msg(format!(
+                            "block {key:#x} has wrong KV shape for this pool (expect {shape:?})"
+                        )));
+                    }
                 }
+                Some(shape)
             }
-        }
+            None if self.cfg.quant => {
+                return Err(Error::msg(
+                    "int8 block storage needs a declared KV shape (with_shape)",
+                ));
+            }
+            None => None,
+        };
         for (key, d) in items {
-            self.insert_inner(now, node, *key, Some(Arc::clone(d)));
+            let stored = match shape {
+                Some(shape) if self.cfg.quant => {
+                    StoredBlock::I8(Arc::new(QuantKvBlock::quantize(d, &shape)))
+                }
+                _ => StoredBlock::F32(Arc::clone(d)),
+            };
+            self.insert_inner(now, node, *key, Some(stored));
         }
         Ok(())
     }
@@ -833,8 +1108,8 @@ mod tests {
         let (f, blocks) = p.lookup_blocks(60_000, 1, &[1, 2]);
         assert_eq!(f.blocks_hit, 2);
         assert_eq!(blocks.len(), 2);
-        assert_eq!(blocks[0].k[0], 1.0);
-        assert_eq!(blocks[1].v[0], -2.0);
+        assert_eq!(blocks[0].to_f32().k[0], 1.0);
+        assert_eq!(blocks[1].to_f32().v[0], -2.0);
         assert_eq!(p.stats.blocks_hit_remote, 2, "node 1 fetched node 0's blocks");
         assert_eq!(p.data_blocks(), 2);
         assert!(p.check_invariants());
@@ -868,7 +1143,7 @@ mod tests {
         // Visibility clock of the original insert stands.
         let (f, blocks) = p.lookup_blocks(50_000, 0, &[9]);
         assert_eq!(f.blocks_hit, 1);
-        assert_eq!(blocks[0].k[0], 9.0);
+        assert_eq!(blocks[0].to_f32().k[0], 9.0);
         assert!(p.check_invariants());
     }
 
@@ -899,18 +1174,18 @@ mod tests {
         // owns the head of the chain, node 1's blocks sit behind node 0's
         // still-unpublished ones.
         let r0 = p.residency(10, 0, &keys);
-        assert_eq!(r0, PoolResidency { visible_blocks: 2, local_blocks: 2 });
+        assert_eq!(r0, PoolResidency { visible_blocks: 2, local_blocks: 2, cold_blocks: 0 });
         let r1 = p.residency(10, 1, &keys);
-        assert_eq!(r1, PoolResidency { visible_blocks: 0, local_blocks: 0 });
+        assert_eq!(r1, PoolResidency { visible_blocks: 0, local_blocks: 0, cold_blocks: 0 });
         // After the delay the whole chain is visible; locality still
         // differs per node.
         let r0 = p.residency(60_000, 0, &keys);
-        assert_eq!(r0, PoolResidency { visible_blocks: 4, local_blocks: 2 });
+        assert_eq!(r0, PoolResidency { visible_blocks: 4, local_blocks: 2, cold_blocks: 0 });
         let r1 = p.residency(60_000, 1, &keys);
-        assert_eq!(r1, PoolResidency { visible_blocks: 4, local_blocks: 2 });
+        assert_eq!(r1, PoolResidency { visible_blocks: 4, local_blocks: 2, cold_blocks: 0 });
         // A shard-less router node sees visibility but owns nothing.
         let r9 = p.residency(60_000, 9, &keys);
-        assert_eq!(r9, PoolResidency { visible_blocks: 4, local_blocks: 0 });
+        assert_eq!(r9, PoolResidency { visible_blocks: 4, local_blocks: 0, cold_blocks: 0 });
         // Contiguity: a hole ends the walk.
         let r = p.residency(60_000, 0, &[1, 2, 99, 3]);
         assert_eq!(r.visible_blocks, 2);
@@ -925,7 +1200,7 @@ mod tests {
         let _ = p.residency(60_000, 0, &[1, 2, 3]);
         assert_eq!(format!("{:?}", p.stats), stats_before, "probe must not count");
         assert!(p.check_invariants());
-        assert_eq!(p.block_owner(1).map(|(n, _)| n), Some(0));
+        assert_eq!(p.block_owner(1).map(|(t, n, _)| (t, n)), Some((BlockTier::Ram, 0)));
         assert_eq!(p.block_owner(42), None);
     }
 
@@ -940,7 +1215,7 @@ mod tests {
         assert_eq!(p.data_blocks(), 1, "node 0's tensors are gone with its metadata");
         let (f, blocks) = p.lookup_blocks(100_000, 1, &[2]);
         assert_eq!(f.blocks_hit, 1);
-        assert_eq!(blocks[0].k[0], 2.0);
+        assert_eq!(blocks[0].to_f32().k[0], 2.0);
         assert!(p.check_invariants());
     }
 
@@ -956,6 +1231,227 @@ mod tests {
         assert!(p.resident_blocks() <= 8);
         assert_eq!(p.data_blocks(), p.resident_blocks());
         assert!(p.stats.evictions >= 12);
+        assert!(p.check_invariants());
+    }
+
+    // ------------------------------------------------- tiered / quantized
+
+    use crate::kvcache::blocks::QuantKvBlock;
+
+    /// A block with per-position structure so quantization is non-trivial
+    /// (different rows get different scales).
+    fn varied_block(seed: u64) -> Arc<KvBlockData> {
+        let n = SHAPE.floats_per_side();
+        let f = |i: usize, side: f32| {
+            let x = (i as u64).wrapping_mul(31).wrapping_add(seed.wrapping_mul(17));
+            side * (((x % 97) as f32) - 48.0) / 7.0
+        };
+        Arc::new(KvBlockData {
+            k: (0..n).map(|i| f(i, 1.0)).collect(),
+            v: (0..n).map(|i| f(i, -0.5)).collect(),
+        })
+    }
+
+    /// One shard sized in *charged* blocks, optional cold tier sized in
+    /// raw payload bytes, shape pre-declared.
+    fn tiered_pool(shard_blocks: u64, cold_bytes: u64, quant: bool) -> DistKvPool {
+        let mut cfg = KvPoolConfig::new(vec![(0, 0)], 524_288, 16);
+        cfg.quant = quant;
+        cfg.cold_bytes = cold_bytes;
+        cfg.nodes[0].1 = shard_blocks * cfg.charged_block_bytes();
+        let mut p = DistKvPool::new(cfg);
+        p.set_shape(SHAPE).unwrap();
+        p
+    }
+
+    #[test]
+    fn quantized_pool_quadruples_block_capacity() {
+        // One f32 block (8 MiB) worth of shard holds four int8 blocks.
+        let mut cfg = KvPoolConfig::new(vec![(0, 8 << 20)], 524_288, 16);
+        cfg.quant = true;
+        assert_eq!(cfg.charged_block_bytes(), cfg.block_bytes() / 4);
+        let mut p = DistKvPool::new(cfg);
+        p.set_shape(SHAPE).unwrap();
+        let items: Vec<(u64, Arc<KvBlockData>)> =
+            (1..=4).map(|i| (i, varied_block(i))).collect();
+        p.insert_blocks(0, 0, &items).unwrap();
+        assert_eq!(p.resident_blocks(), 4, "4x capacity under int8");
+        assert_eq!(p.stats.evictions, 0);
+        let saved = 4 * (p.config().block_bytes() - p.config().charged_block_bytes());
+        assert_eq!(p.stats.quant_bytes_saved, saved);
+        // Fetched blocks come back int8 and dequantize to the reference.
+        let (f, blocks) = p.lookup_blocks(10, 0, &[1]);
+        assert_eq!(f.blocks_hit, 1);
+        assert!(blocks[0].is_quantized());
+        let want = QuantKvBlock::quantize(&varied_block(1), &SHAPE).dequantize();
+        assert_eq!(blocks[0].to_f32().k, want.k);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn quant_without_shape_is_an_error() {
+        let mut cfg = KvPoolConfig::new(vec![(0, 8 << 20)], 524_288, 16);
+        cfg.quant = true;
+        let mut p = DistKvPool::new(cfg);
+        assert!(p.insert_blocks(0, 0, &[(1u64, varied_block(1))]).is_err());
+        assert_eq!(p.data_blocks(), 0);
+    }
+
+    #[test]
+    fn spill_then_promote_roundtrip_bit_identical() {
+        // Shard holds one charged block; inserting a second spills the
+        // first to the cold tier. Promoting it back must return the exact
+        // int8 payload that was spilled — bit for bit, scales included.
+        let mut p = tiered_pool(1, 1 << 20, true);
+        let want = QuantKvBlock::quantize(&varied_block(1), &SHAPE);
+        p.insert_blocks(0, 0, &[(1u64, varied_block(1))]).unwrap();
+        p.insert_blocks(10, 0, &[(2u64, varied_block(2))]).unwrap();
+        assert_eq!(p.stats.spills, 1);
+        assert_eq!(p.block_owner(1).map(|(t, _, _)| t), Some(BlockTier::Cold));
+        assert_eq!(p.tier_blocks(), (1, 1));
+        assert!(p.check_invariants());
+        // Re-reference promotes (and cascade-spills block 2).
+        let (f, blocks) = p.lookup_blocks(20, 0, &[1]);
+        assert_eq!(f.blocks_hit, 1);
+        assert_eq!(p.stats.promotions, 1);
+        assert_eq!(p.stats.blocks_hit_cold, 1);
+        assert_eq!(p.block_owner(1).map(|(t, _, _)| t), Some(BlockTier::Ram));
+        match &blocks[0] {
+            StoredBlock::I8(q) => {
+                assert_eq!(q.k.data, want.k.data);
+                assert_eq!(
+                    q.k.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                    want.k.scales.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+                );
+                assert_eq!(q.v.data, want.v.data);
+            }
+            StoredBlock::F32(_) => panic!("quantized pool must stay int8 across the round trip"),
+        }
+        assert!(p.check_invariants(), "promotion never duplicates a key across tiers");
+    }
+
+    #[test]
+    fn promotion_preserves_visibility_clock() {
+        // Spilled at t=10 with visible_at=60_010; a remote reader must not
+        // see it early, and promotion must keep the original clock.
+        let mut cfg = KvPoolConfig::new(vec![(0, 8 << 20), (1, 8 << 20)], 524_288, 16);
+        cfg.cold_bytes = 1 << 20;
+        let mut p = DistKvPool::new(cfg);
+        p.set_shape(SHAPE).unwrap();
+        p.insert_blocks(10, 0, &[(1u64, varied_block(1))]).unwrap();
+        let clock = p.block_owner(1).map(|(_, _, t)| t);
+        p.insert_blocks(20, 0, &[(2u64, varied_block(2))]).unwrap(); // evicts+spills 1
+        assert_eq!(p.block_owner(1).map(|(t, _, _)| t), Some(BlockTier::Cold));
+        // Not yet published: invisible to node 1, visible to its owner.
+        assert_eq!(p.residency(30, 1, &[1]).visible_blocks, 0);
+        assert_eq!(p.residency(30, 0, &[1]).cold_blocks, 1);
+        assert_eq!(p.lookup(100_000, 1, &[1]).blocks_hit, 1, "published after the delay");
+        assert_eq!(p.stats.promotions, 1);
+        assert_eq!(p.block_owner(1).map(|(_, _, t)| t), clock, "promotion keeps the clock");
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn reinsert_with_cold_tier_spares_innocents() {
+        // The PR 3 guarantee, now with the cold tier on: re-inserting a
+        // resident key into a full shard reclaims its own bytes — zero
+        // innocent evictions AND zero spills.
+        let mut cfg = KvPoolConfig::new(vec![(0, 16 << 20)], 524_288, 16); // cap = 2 blocks
+        cfg.dedup = false;
+        cfg.cold_bytes = 1 << 20;
+        let mut p = DistKvPool::new(cfg);
+        p.set_shape(SHAPE).unwrap();
+        p.insert_blocks(0, 0, &[(7u64, varied_block(7)), (8u64, varied_block(8))]).unwrap();
+        p.insert_blocks(10, 0, &[(7u64, varied_block(7))]).unwrap();
+        assert_eq!(p.stats.evictions, 0, "re-insert must reclaim its own bytes");
+        assert_eq!(p.stats.spills, 0, "nothing innocent reaches the cold tier");
+        assert_eq!(p.tier_blocks(), (2, 0));
+        assert_eq!(p.block_owner(8).map(|(t, _, _)| t), Some(BlockTier::Ram));
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn cold_tier_capacity_bounded_fifo() {
+        // Cold tier sized for ~2 f32 payloads; 6 spills keep it bounded by
+        // evicting oldest-first.
+        let one_payload = {
+            let mut probe = tiered_pool(1, 1 << 20, false);
+            probe.insert_blocks(0, 0, &[(1u64, varied_block(1))]).unwrap();
+            probe.insert_blocks(0, 0, &[(2u64, varied_block(2))]).unwrap();
+            probe.cold_used_bytes()
+        };
+        let mut p = tiered_pool(1, 2 * one_payload, false);
+        for i in 1..=7u64 {
+            p.insert_blocks(i, 0, &[(i, varied_block(i))]).unwrap();
+        }
+        assert_eq!(p.stats.spills, 6, "every data-bearing eviction spills");
+        assert!(p.stats.cold_evictions >= 4, "bounded tier sheds oldest spills");
+        assert!(p.cold_used_bytes() <= 2 * one_payload);
+        assert_eq!(p.tier_blocks().1, 2);
+        // FIFO: the two newest spills (5, 6) survive; the oldest are gone.
+        assert_eq!(p.block_owner(5).map(|(t, _, _)| t), Some(BlockTier::Cold));
+        assert_eq!(p.block_owner(6).map(|(t, _, _)| t), Some(BlockTier::Cold));
+        assert_eq!(p.block_owner(1), None);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn prefetch_warms_both_tiers_and_counts() {
+        let mut p = tiered_pool(1, 1 << 20, false);
+        p.insert_blocks(0, 0, &[(1u64, varied_block(1))]).unwrap();
+        p.insert_blocks(10, 0, &[(2u64, varied_block(2))]).unwrap(); // spills 1
+        assert_eq!(p.block_owner(1).map(|(t, _, _)| t), Some(BlockTier::Cold));
+        // 2 is RAM-resident (recency bump), 1 is promoted from cold.
+        p.prefetch(20, 0, &[2, 1]);
+        assert_eq!(p.stats.prefetch_issued, 2);
+        assert_eq!(p.stats.prefetch_hits, 2);
+        assert_eq!(p.stats.promotions, 1);
+        assert_eq!(p.block_owner(1).map(|(t, _, _)| t), Some(BlockTier::Ram));
+        assert!((p.stats.prefetch_hit_rate() - 1.0).abs() < 1e-9);
+        // A hole ends the warm: issued counts the request, hits do not grow.
+        p.prefetch(30, 0, &[99, 1]);
+        assert_eq!(p.stats.prefetch_issued, 4);
+        assert_eq!(p.stats.prefetch_hits, 2);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn drop_shard_leaves_cold_tier_servable() {
+        // Node 0's RAM shard dies; blocks it spilled earlier survive in
+        // the cold tier and are promoted onto a surviving shard on access.
+        let mut cfg = KvPoolConfig::new(vec![(0, 8 << 20), (1, 8 << 20)], 524_288, 16);
+        cfg.cold_bytes = 1 << 20;
+        let mut p = DistKvPool::new(cfg);
+        p.set_shape(SHAPE).unwrap();
+        p.insert_blocks(0, 0, &[(1u64, varied_block(1))]).unwrap();
+        p.insert_blocks(10, 0, &[(2u64, varied_block(2))]).unwrap(); // spills 1
+        assert_eq!(p.drop_shard(0), 1, "only the RAM-resident block dies with the shard");
+        assert_eq!(p.tier_blocks(), (0, 1));
+        assert!(p.check_invariants());
+        let (f, blocks) = p.lookup_blocks(100_000, 1, &[1]);
+        assert_eq!(f.blocks_hit, 1, "cold copy outlives its home shard");
+        assert_eq!(blocks[0].to_f32().k, varied_block(1).k);
+        assert_eq!(p.block_owner(1).map(|(t, n, _)| (t, n)), Some((BlockTier::Ram, 1)));
+        assert!(p.check_invariants());
+        // With every shard gone, promotion fails closed: the block stays
+        // spilled, residency still reports it, lookups serve nothing.
+        p.drop_shard(1);
+        assert_eq!(p.lookup(200_000, 0, &[1]).blocks_hit, 0);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn cold_fetch_costed_between_ram_and_miss() {
+        // A cold hit is slower than a local RAM hit (cold_gbps < shm_gbps)
+        // but still a hit — the whole point of spilling over dropping.
+        let mut p = tiered_pool(1, 1 << 20, false);
+        p.insert_blocks(0, 0, &[(1u64, varied_block(1))]).unwrap();
+        let (ram, _) = p.lookup_blocks(10, 0, &[1]);
+        p.insert_blocks(20, 0, &[(2u64, varied_block(2))]).unwrap(); // spills 1
+        let (cold, _) = p.lookup_blocks(30, 0, &[1]); // promotes
+        assert_eq!(ram.blocks_hit, 1);
+        assert_eq!(cold.blocks_hit, 1);
+        assert!(cold.fetch_us > ram.fetch_us, "{} vs {}", cold.fetch_us, ram.fetch_us);
         assert!(p.check_invariants());
     }
 }

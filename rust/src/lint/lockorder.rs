@@ -1,13 +1,15 @@
 //! Inter-module lock graph and canonical-order checker.
 //!
-//! The serving path crosses four lock domains; the canonical acquisition
-//! order is
+//! The serving path crosses several lock domains; the canonical
+//! acquisition order is
 //!
-//! > gateway → ClusterView → DistKvPool → engine → runtime
+//! > gateway → ClusterView → DistKvPool → coldtier → engine → runtime
 //!
 //! (a request is routed, the cluster snapshot consulted, the shared KV
-//! pool touched, the engine stepped, and only the runtime's arena pools
-//! sit below that). The rule engine reports every site where a lock of
+//! pool touched — spilling/promoting through the cold tier strictly
+//! below it, never the reverse — the engine stepped, and only the
+//! runtime's arena pools sit below that). The rule engine reports every
+//! site where a lock of
 //! one class is acquired while a lock of another class is held; this
 //! module folds those into a small directed graph over the classes and
 //! fails two ways: a **back-edge** (acquiring a class that sorts before
@@ -21,7 +23,8 @@ use std::collections::BTreeMap;
 use super::rules::{Finding, RULE_LOCK};
 
 /// Lock classes in canonical acquisition order; the index is the rank.
-pub const CLASSES: [&str; 5] = ["gateway", "ClusterView", "DistKvPool", "engine", "runtime"];
+pub const CLASSES: [&str; 6] =
+    ["gateway", "ClusterView", "DistKvPool", "coldtier", "engine", "runtime"];
 
 /// Render the canonical order for diagnostics.
 pub fn canonical_order() -> String {
@@ -166,10 +169,29 @@ mod tests {
         let mut g = LockGraph::new();
         g.add_edge(0, 1, site("route"));
         g.add_edge(1, 2, site("snapshot"));
-        g.add_edge(2, 3, site("admit"));
+        g.add_edge(2, 4, site("admit"));
         let mut findings = Vec::new();
         g.check(&mut findings);
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn pool_to_coldtier_is_forward_only() {
+        // Spill/promote acquires the cold tier while holding the pool —
+        // that is the canonical direction. The reverse (touching the pool
+        // from inside cold-tier code) is a back-edge.
+        let mut g = LockGraph::new();
+        g.add_edge(2, 3, site("spill"));
+        let mut findings = Vec::new();
+        g.check(&mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+        g.add_edge(3, 2, site("bad_promote"));
+        g.check(&mut findings);
+        assert!(findings.iter().any(|f| f.message.contains("back-edge")
+            && f.message.contains("DistKvPool")
+            && f.message.contains("coldtier")));
+        // A pool↔coldtier loop is a deadlock, reported as a cycle too.
+        assert!(findings.iter().any(|f| f.message.contains("lock-order cycle")));
     }
 
     #[test]

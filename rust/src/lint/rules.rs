@@ -144,8 +144,10 @@ fn word_at(code: &[char], pos: usize, w: &str) -> bool {
 /// Classify a lock receiver into a canonical lock class rank. Receiver
 /// names are load-bearing in this codebase: the workspace/buffer arenas
 /// are the runtime class (checked before the generic pool match), the
-/// router is the gateway's lock, cluster snapshots are `view`, the
-/// shared KV pool is `pool`, and engines wrap in `engine`. The overload
+/// router is the gateway's lock, cluster snapshots are `view`, cold-tier
+/// receivers rank just below the pool (also matched before the generic
+/// pool class), the shared KV pool is `pool`, and engines wrap in
+/// `engine`. The overload
 /// admission controller sits beside the router at the gateway rank (it
 /// must never be taken while a snapshot or pool lock is held).
 /// Unrecognized receivers (test scaffolding, channel receivers) are
@@ -153,7 +155,7 @@ fn word_at(code: &[char], pos: usize, w: &str) -> bool {
 fn classify_receiver(recv: &str) -> Option<usize> {
     let last = recv.rsplit('.').next().unwrap_or(recv);
     if last.contains("ws_pool") || last.contains("buf_pool") {
-        return Some(4); // runtime
+        return Some(5); // runtime
     }
     if last.contains("router") || last.contains("admission") {
         return Some(0); // gateway
@@ -161,11 +163,17 @@ fn classify_receiver(recv: &str) -> Option<usize> {
     if last.contains("view") {
         return Some(1); // ClusterView
     }
+    // Cold-tier receivers before the generic pool match: the spill tier
+    // sorts strictly below the pool (pool → coldtier is the only legal
+    // direction; cold-tier code must never reach back into the pool).
+    if last.contains("cold") {
+        return Some(3); // coldtier
+    }
     if last.contains("pool") {
         return Some(2); // DistKvPool
     }
     if last.contains("engine") || last.contains("sched") {
-        return Some(3); // engine (lockstep or continuous-batching core)
+        return Some(4); // engine (lockstep or continuous-batching core)
     }
     None
 }

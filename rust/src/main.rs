@@ -454,6 +454,42 @@ fn cmd_serve(args: &Args) -> i32 {
                     ));
                     body.push_str(&format!("aibrix_kvpool_evictions_total {}\n", ps.evictions));
                     body.push_str(&format!("aibrix_kvpool_hit_rate {:.6}\n", ps.hit_rate()));
+                    // Tiered-cache counters: cold-tier traffic, end-of-turn
+                    // prefetch effectiveness, and int8 storage savings.
+                    body.push_str(&format!(
+                        "aibrix_kvpool_blocks_hit_cold_total {}\n",
+                        ps.blocks_hit_cold
+                    ));
+                    body.push_str(&format!("aibrix_kvpool_spills_total {}\n", ps.spills));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_cold_evictions_total {}\n",
+                        ps.cold_evictions
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_promotions_total {}\n",
+                        ps.promotions
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_prefetch_issued_total {}\n",
+                        ps.prefetch_issued
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_prefetch_hit_total {}\n",
+                        ps.prefetch_hits
+                    ));
+                    body.push_str(&format!(
+                        "aibrix_kvpool_quant_bytes_saved_total {}\n",
+                        ps.quant_bytes_saved
+                    ));
+                    if let Some(h) = &pool_hook_handler {
+                        let (ram, cold) = h.with_pool(|p| p.tier_blocks());
+                        body.push_str(&format!(
+                            "aibrix_kvpool_tier{{tier=\"ram\"}} {ram}\n"
+                        ));
+                        body.push_str(&format!(
+                            "aibrix_kvpool_tier{{tier=\"cold\"}} {cold}\n"
+                        ));
+                    }
                 }
                 // Per-tenant fairness: decayed served-token share plus
                 // routing skew (largest replica fraction of the tenant's

@@ -386,6 +386,98 @@ pub fn attend_one(
     }
 }
 
+/// [`attend_one`] over a context whose first `qlen` positions are
+/// int8-resident: positions `0..qlen` read the `[qlen, n_heads*head_dim]`
+/// i8 slabs `k_q`/`v_q` (one symmetric scale per position — the
+/// `QuantKvBlock` row orientation), positions `qlen..kv_len` read the f32
+/// cache slabs `k_row`/`v_row` as usual. This is the seeded-prefill resume
+/// path when the KV pool stores int8: the fetched prefix is attended
+/// *directly* from the pool's bytes, no dequantized staging copy.
+///
+/// Bit-exactness contract: each i8 element is dequantized first
+/// (`f32::from(q) * scale` — the exact formula [`install_kv_i8`] and
+/// `QuantKvBlock::dequantize` use) and only then multiplied into the
+/// ascending-d dot, so this function is bit-identical to [`attend_one`]
+/// over a cache holding the dequantized expansion
+/// (`attend_one_i8_bit_matches_attend_over_dequant` pins it). The
+/// quantization *error* vs the original f32 KV is bounded analytically:
+/// per-score |Δs| ≤ (k_scale/2)·‖q‖₁/√hd, softmax weights move by at most
+/// e^{2Δmax}−1 in total variation, so per output element
+/// |Δout| ≤ max(v_scale)/2 + (e^{2Δmax}−1)·max|v| — the proptest tier
+/// bounds against exactly that (PR 4 `gemm_i8` contract style).
+#[allow(clippy::too_many_arguments)]
+// lint:hot_path
+pub fn attend_one_i8(
+    q: &[f32],
+    k_q: &[i8],
+    k_scales: &[f32],
+    v_q: &[i8],
+    v_scales: &[f32],
+    qlen: usize,
+    k_row: &[f32],
+    v_row: &[f32],
+    kv_len: usize,
+    head: usize,
+    n_heads: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = q.len();
+    let stride = n_heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert!(k_q.len() >= qlen * stride && v_q.len() >= qlen * stride, "i8 slab too short");
+    debug_assert!(k_scales.len() >= qlen && v_scales.len() >= qlen, "scale slab too short");
+    scores.clear();
+    let mut max_s = f32::NEG_INFINITY;
+    for j in 0..kv_len {
+        let off = j * stride + head * hd;
+        let mut dot = 0.0f32;
+        if j < qlen {
+            let kj = &k_q[off..off + hd];
+            let ks = k_scales[j];
+            for d in 0..hd {
+                let kd = f32::from(kj[d]) * ks;
+                dot += q[d] * kd;
+            }
+        } else {
+            let kj = &k_row[off..off + hd];
+            for d in 0..hd {
+                dot += q[d] * kj[d];
+            }
+        }
+        let s = dot * scale;
+        scores.push(s);
+        if s > max_s {
+            max_s = s;
+        }
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max_s).exp();
+        denom += *s;
+    }
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for (j, &p) in scores.iter().enumerate() {
+        let w = p / denom;
+        let off = j * stride + head * hd;
+        if j < qlen {
+            let vj = &v_q[off..off + hd];
+            let vs = v_scales[j];
+            for d in 0..hd {
+                let vd = f32::from(vj[d]) * vs;
+                out[d] += w * vd;
+            }
+        } else {
+            let vj = &v_row[off..off + hd];
+            for d in 0..hd {
+                out[d] += w * vj[d];
+            }
+        }
+    }
+}
+
 /// logits[t - t0] = xn . embed[t] for t in `t0..t1` (one vocab tile; each
 /// dot accumulates in ascending-d order, so vocab-chunked parallel runs
 /// match the serial pass bit-for-bit).
@@ -599,6 +691,44 @@ pub fn install_kv(
         // slabs (caller contract), and positions 0..len are in bounds.
         let dst = unsafe { raw.range_mut(row_base, len * dm) };
         dst.copy_from_slice(&slab[layer * len * dm..(layer + 1) * len * dm]);
+    }
+}
+
+/// [`install_kv`] from an int8 seed slab: dequantize-install the
+/// `[n_layers, len, dm]` i8 slab (per layer-position scales, `[n_layers,
+/// len]`) into the f32 cache behind `raw`. Each element is expanded as
+/// `f32::from(q) * scale` — the same formula [`attend_one_i8`] applies
+/// inline — so decode steps reading the cache see exactly the bits the
+/// resuming chunk attended over directly.
+///
+/// Same exclusivity contract as [`install_kv`].
+#[allow(clippy::too_many_arguments)]
+// lint:hot_path
+pub fn install_kv_i8(
+    slab: &[i8],
+    scales: &[f32],
+    raw: &RawSlice<'_>,
+    n_layers: usize,
+    batch: usize,
+    b: usize,
+    max_seq: usize,
+    dm: usize,
+    len: usize,
+) {
+    debug_assert_eq!(slab.len(), n_layers * len * dm, "i8 seed slab shape mismatch");
+    debug_assert_eq!(scales.len(), n_layers * len, "i8 seed scale shape mismatch");
+    for layer in 0..n_layers {
+        let row_base = (layer * batch + b) * max_seq * dm;
+        // SAFETY: worker `b` is the only thread touching the (layer, b)
+        // slabs (caller contract), and positions 0..len are in bounds.
+        let dst = unsafe { raw.range_mut(row_base, len * dm) };
+        for p in 0..len {
+            let s = scales[layer * len + p];
+            let src = &slab[(layer * len + p) * dm..(layer * len + p + 1) * dm];
+            for d in 0..dm {
+                dst[p * dm + d] = f32::from(src[d]) * s;
+            }
+        }
     }
 }
 
@@ -1055,6 +1185,134 @@ mod tests {
         logits_tile(&xn, &embed, 0, rows, &mut la);
         logits_tile_scalar(&xn, &embed, 0, rows, &mut lb);
         assert!(la.iter().zip(&lb).all(|(p, q)| p.to_bits() == q.to_bits()), "logits_tile");
+    }
+
+    /// Quantize a `[kv_len, stride]` cache slab per position (the
+    /// `QuantKvBlock` row orientation) for the attend_one_i8 tests.
+    fn quant_slab(rowslab: &[f32], kv_len: usize, stride: usize) -> (Vec<i8>, Vec<f32>) {
+        let q = quantize_rows(rowslab, kv_len, stride);
+        (q.data, q.scales)
+    }
+
+    fn dequant_slab(data: &[i8], scales: &[f32], stride: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(data.len());
+        for (j, &s) in scales.iter().enumerate() {
+            for &qv in &data[j * stride..(j + 1) * stride] {
+                out.push(f32::from(qv) * s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn attend_one_i8_bit_matches_attend_over_dequant() {
+        // The load-bearing equivalence for the tiered pool: attending
+        // directly over int8-resident rows == attending over the cache
+        // install_kv_i8 would populate, bit for bit — so the chunked
+        // scheduler (direct i8 read) and the lockstep engine (dequantized
+        // staging slabs) stay bit-identical under a quantized pool.
+        let mut rng = crate::util::Rng::new(42);
+        let (n_heads, hd, kv_len) = (2, 8, 12);
+        let stride = n_heads * hd;
+        let k_f: Vec<f32> = (0..kv_len * stride).map(|_| rng.normal() as f32).collect();
+        let v_f: Vec<f32> = (0..kv_len * stride).map(|_| rng.normal() as f32).collect();
+        let (k_q, k_s) = quant_slab(&k_f, kv_len, stride);
+        let (v_q, v_s) = quant_slab(&v_f, kv_len, stride);
+        let k_deq = dequant_slab(&k_q, &k_s, stride);
+        let v_deq = dequant_slab(&v_q, &v_s, stride);
+        // Mixed context: first `qlen` positions int8-resident, the tail a
+        // fresh f32 region (as when a resumed chunk appends new tokens).
+        for qlen in [0usize, 5, kv_len] {
+            for head in 0..n_heads {
+                let q: Vec<f32> = (0..hd).map(|_| rng.normal() as f32).collect();
+                // Reference cache: dequantized prefix + original f32 tail.
+                let mut k_cache = k_deq.clone();
+                let mut v_cache = v_deq.clone();
+                k_cache[qlen * stride..].copy_from_slice(&k_f[qlen * stride..]);
+                v_cache[qlen * stride..].copy_from_slice(&v_f[qlen * stride..]);
+                let mut scores = Vec::new();
+                let mut a = vec![0.0f32; hd];
+                let mut b = vec![0.0f32; hd];
+                attend_one(&q, &k_cache, &v_cache, kv_len, head, n_heads, &mut scores, &mut a);
+                attend_one_i8(
+                    &q, &k_q, &k_s, &v_q, &v_s, qlen, &k_cache, &v_cache, kv_len, head, n_heads,
+                    &mut scores, &mut b,
+                );
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "qlen {qlen} head {head}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn install_kv_i8_bit_matches_install_of_dequant() {
+        // Dequantize-install == install of the dequantized slab: decode
+        // reads the same bits the resuming chunk attended over.
+        let (n_layers, batch, b, max_seq, dm, len) = (2, 3, 1, 10, 6, 4);
+        let mut rng = crate::util::Rng::new(11);
+        let slab_f: Vec<f32> = (0..n_layers * len * dm).map(|_| rng.normal() as f32).collect();
+        let (slab_q, scales) = quant_slab(&slab_f, n_layers * len, dm);
+        let deq = dequant_slab(&slab_q, &scales, dm);
+        let mut cache_a = vec![0.0f32; n_layers * batch * max_seq * dm];
+        let mut cache_b = cache_a.clone();
+        install_kv_i8(
+            &slab_q,
+            &scales,
+            &RawSlice::new(&mut cache_a),
+            n_layers,
+            batch,
+            b,
+            max_seq,
+            dm,
+            len,
+        );
+        install_kv(&deq, &RawSlice::new(&mut cache_b), n_layers, batch, b, max_seq, dm, len);
+        assert!(cache_a.iter().zip(&cache_b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn attend_one_i8_error_within_analytic_bound() {
+        // PR 4 contract style: the quantization error of the int8 attend
+        // vs the f32 reference stays under the analytic bound — per-score
+        // |Δs| ≤ (k_scale_j/2)·‖q‖₁/√hd, softmax total variation ≤
+        // e^{2Δmax}−1, per-element |Δout| ≤ max(v_scale)/2 +
+        // (e^{2Δmax}−1)·max|v|, plus a small f32 rounding slack. The
+        // randomized sweep lives in tests/runtime_e2e.rs; this pins one
+        // deterministic instance in-tree.
+        let mut rng = crate::util::Rng::new(99);
+        let (n_heads, hd, kv_len) = (2, 8, 10);
+        let stride = n_heads * hd;
+        let k_f: Vec<f32> = (0..kv_len * stride).map(|_| rng.normal() as f32).collect();
+        let v_f: Vec<f32> = (0..kv_len * stride).map(|_| rng.normal() as f32).collect();
+        let (k_q, k_s) = quant_slab(&k_f, kv_len, stride);
+        let (v_q, v_s) = quant_slab(&v_f, kv_len, stride);
+        for head in 0..n_heads {
+            let q: Vec<f32> = (0..hd).map(|_| rng.normal() as f32).collect();
+            let mut scores = Vec::new();
+            let mut exact = vec![0.0f32; hd];
+            let mut quant = vec![0.0f32; hd];
+            attend_one(&q, &k_f, &v_f, kv_len, head, n_heads, &mut scores, &mut exact);
+            attend_one_i8(
+                &q, &k_q, &k_s, &v_q, &v_s, kv_len, &[], &[], kv_len, head, n_heads, &mut scores,
+                &mut quant,
+            );
+            let q_l1: f32 = q.iter().map(|x| x.abs()).sum();
+            let d_max = k_s.iter().fold(0.0f32, |a, &s| a.max(0.5 * s * q_l1))
+                / (hd as f32).sqrt();
+            let v_step = v_s.iter().fold(0.0f32, |a, &s| a.max(0.5 * s));
+            let v_max = v_f.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let bound = v_step + ((2.0 * d_max).exp() - 1.0) * v_max + 1e-4 * (1.0 + v_max);
+            for d in 0..hd {
+                assert!(
+                    (quant[d] - exact[d]).abs() <= bound,
+                    "head {head} d {d}: |{} - {}| > {bound}",
+                    quant[d],
+                    exact[d]
+                );
+            }
+        }
     }
 
     #[test]

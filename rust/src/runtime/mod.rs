@@ -335,6 +335,25 @@ pub struct SeededPrefix<'a> {
     pub v: &'a [f32],
 }
 
+/// An int8-resident fetched KV prefix ([`SeededPrefix`]'s quantized twin,
+/// produced by `kvcache::blocks::assemble_prefix_stored` when the pool
+/// stores int8): `[n_layers, len, d_model]` i8 slabs plus one symmetric
+/// scale per (layer, position) row. The suffix attends *directly* over
+/// these bytes (`kernels::attend_one_i8`) while the same bits are
+/// dequantize-installed into the f32 cache for later decode steps —
+/// bit-identical either way, because both use the dequantize-first
+/// `f32::from(q) * scale` formula.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantSeededPrefix<'a> {
+    pub len: usize,
+    pub k: &'a [i8],
+    pub v: &'a [i8],
+    /// `[n_layers, len]` per-row K scales.
+    pub k_scales: &'a [f32],
+    /// `[n_layers, len]` per-row V scales.
+    pub v_scales: &'a [f32],
+}
+
 /// Output of one decode step.
 pub struct DecodeOut {
     /// [B][V] logits.
@@ -373,6 +392,10 @@ pub struct RowChunk<'a> {
     /// Fetched KV prefix to install first (requires `s0 == seed.len`):
     /// the pool-seeded fast path for the chunk that resumes a row.
     pub seed: Option<SeededPrefix<'a>>,
+    /// Int8-resident fetched prefix (requires `s0 == qseed.len`; mutually
+    /// exclusive with `seed`): the suffix attends directly over the pool's
+    /// i8 bytes and the dequantized expansion is installed for decode.
+    pub qseed: Option<QuantSeededPrefix<'a>>,
     /// Project logits at this chunk's last position (the scheduler
     /// samples from them). Mid-prompt prefill chunks skip the vocab
     /// projection entirely.
@@ -917,6 +940,7 @@ impl TinyLmRuntime {
         x: &mut [f32],
         k_raw: &RawSlice<'_>,
         v_raw: &RawSlice<'_>,
+        qseed: Option<QuantSeededPrefix<'_>>,
         ws: &mut Workspace,
     ) {
         let cfg = &self.cfg;
@@ -968,20 +992,58 @@ impl TinyLmRuntime {
                 // SAFETY: shared read of row b's V slab, written above on
                 // this same thread (the mutable borrow has ended).
                 let v_row = unsafe { v_raw.range(row_base, seen) };
-                for s in 0..s_len {
-                    let pos = s0 + s;
-                    for head in 0..h {
-                        let o = s * dm + head * hd;
-                        kernels::attend_one(
-                            &ws.q[o..o + hd],
-                            k_row,
-                            v_row,
-                            pos + 1,
-                            head,
-                            h,
-                            &mut ws.scores,
-                            &mut ws.attn[o..o + hd],
-                        );
+                match qseed {
+                    // Int8-seeded resume: the prefix positions 0..len are
+                    // attended straight from the pool's i8 bytes (this
+                    // layer's [len, dm] slice of the seed slabs), the
+                    // freshly computed tail from the f32 cache —
+                    // bit-identical to attending over the dequantized
+                    // expansion installed above.
+                    Some(qs) if qs.len > 0 => {
+                        let side = qs.len * dm;
+                        let kq = &qs.k[layer * side..(layer + 1) * side];
+                        let vq = &qs.v[layer * side..(layer + 1) * side];
+                        let ks = &qs.k_scales[layer * qs.len..(layer + 1) * qs.len];
+                        let vs = &qs.v_scales[layer * qs.len..(layer + 1) * qs.len];
+                        for s in 0..s_len {
+                            let pos = s0 + s;
+                            for head in 0..h {
+                                let o = s * dm + head * hd;
+                                kernels::attend_one_i8(
+                                    &ws.q[o..o + hd],
+                                    kq,
+                                    ks,
+                                    vq,
+                                    vs,
+                                    qs.len,
+                                    k_row,
+                                    v_row,
+                                    pos + 1,
+                                    head,
+                                    h,
+                                    &mut ws.scores,
+                                    &mut ws.attn[o..o + hd],
+                                );
+                            }
+                        }
+                    }
+                    _ => {
+                        for s in 0..s_len {
+                            let pos = s0 + s;
+                            for head in 0..h {
+                                let o = s * dm + head * hd;
+                                kernels::attend_one(
+                                    &ws.q[o..o + hd],
+                                    k_row,
+                                    v_row,
+                                    pos + 1,
+                                    head,
+                                    h,
+                                    &mut ws.scores,
+                                    &mut ws.attn[o..o + hd],
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -1195,7 +1257,7 @@ impl TinyLmRuntime {
                     let tok = tokens[b * seq + sl + s] as usize;
                     x[s * dm..(s + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
                 }
-                self.forward_row(batch, b, sl, s_len, x, &k_raw, &v_raw, &mut ws);
+                self.forward_row(batch, b, sl, s_len, x, &k_raw, &v_raw, None, &mut ws);
                 self.return_ws(ws);
             });
         }
@@ -1362,7 +1424,7 @@ impl TinyLmRuntime {
                 // SAFETY: per-row residual regions are disjoint.
                 let x = unsafe { xs_raw.range_mut(b * dm, dm) };
                 x.copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
-                self.forward_row(batch, b, pos[b] as usize, 1, x, &k_raw, &v_raw, &mut ws);
+                self.forward_row(batch, b, pos[b] as usize, 1, x, &k_raw, &v_raw, None, &mut ws);
                 self.return_ws(ws);
             });
         }
@@ -1472,6 +1534,41 @@ impl TinyLmRuntime {
                     }
                 }
             }
+            if let Some(qs) = &c.qseed {
+                if qs.len > 0 {
+                    if c.seed.map(|s| s.len > 0).unwrap_or(false) {
+                        return Err(Error::msg(format!(
+                            "row {} carries both an f32 and an int8 seed",
+                            c.row
+                        )));
+                    }
+                    if c.s0 != qs.len {
+                        return Err(Error::msg(format!(
+                            "int8 seed covers {} positions but chunk starts at {} — a \
+                             seeded chunk must resume exactly where the prefix ends",
+                            qs.len, c.s0
+                        )));
+                    }
+                    let want = cfg.n_layers * qs.len * dm;
+                    let rows = cfg.n_layers * qs.len;
+                    if qs.k.len() != want || qs.v.len() != want {
+                        return Err(Error::msg(format!(
+                            "int8 seed slab for row {} has {}/{} bytes, want {want} per side",
+                            c.row,
+                            qs.k.len(),
+                            qs.v.len()
+                        )));
+                    }
+                    if qs.k_scales.len() != rows || qs.v_scales.len() != rows {
+                        return Err(Error::msg(format!(
+                            "int8 seed scales for row {} have {}/{} entries, want {rows}",
+                            c.row,
+                            qs.k_scales.len(),
+                            qs.v_scales.len()
+                        )));
+                    }
+                }
+            }
         }
         let mut k_cache = k;
         let mut v_cache = v;
@@ -1505,9 +1602,11 @@ impl TinyLmRuntime {
         // under interleaving.
         let dec_toks: u64 = chunks.iter().filter(|c| c.decode).map(|c| c.tokens.len() as u64).sum();
         let pre_toks: u64 = chunks.iter().filter(|c| !c.decode).map(|c| c.tokens.len() as u64).sum();
-        let seeded_rows =
-            chunks.iter().filter(|c| c.seed.map(|s| s.len > 0).unwrap_or(false)).count() as u64;
-        let seeded_toks: u64 = chunks.iter().filter_map(|c| c.seed).map(|s| s.len as u64).sum();
+        let seeded = |c: &RowChunk<'_>| {
+            c.seed.map(|s| s.len).unwrap_or(0) + c.qseed.map(|s| s.len).unwrap_or(0)
+        };
+        let seeded_rows = chunks.iter().filter(|c| seeded(c) > 0).count() as u64;
+        let seeded_toks: u64 = chunks.iter().map(|c| seeded(c) as u64).sum();
         let elapsed = t_start.elapsed().as_micros() as u64;
         if pre_toks > 0 {
             self.counters.prefill_calls.fetch_add(1, Ordering::Relaxed);
@@ -1564,6 +1663,19 @@ impl TinyLmRuntime {
                     );
                 }
             }
+            let qseed = c.qseed.filter(|qs| qs.len > 0);
+            if let Some(qs) = qseed {
+                // Int8 prefix: the suffix below attends directly over the
+                // i8 slabs; the dequantized expansion still lands in the
+                // f32 cache because later decode steps attend over the
+                // whole row with the f32 kernel. Same bits either way.
+                kernels::install_kv_i8(
+                    qs.k, qs.k_scales, &k_raw, cfg.n_layers, batch, c.row, cfg.max_seq, dm, qs.len,
+                );
+                kernels::install_kv_i8(
+                    qs.v, qs.v_scales, &v_raw, cfg.n_layers, batch, c.row, cfg.max_seq, dm, qs.len,
+                );
+            }
             let s_len = c.tokens.len();
             // SAFETY: per-chunk residual regions are disjoint (prefix-sum
             // offsets), and each row appears in at most one chunk.
@@ -1572,7 +1684,7 @@ impl TinyLmRuntime {
                 let tok = t as usize;
                 x[s * dm..(s + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
             }
-            self.forward_row(batch, c.row, c.s0, s_len, x, &k_raw, &v_raw, &mut ws);
+            self.forward_row(batch, c.row, c.s0, s_len, x, &k_raw, &v_raw, qseed, &mut ws);
             self.return_ws(ws);
         });
     }
@@ -1884,6 +1996,7 @@ mod tests {
                 s0: 0,
                 tokens: &prompt[..split],
                 seed: None,
+                qseed: None,
                 emit_logits: false,
                 decode: false,
             }];
@@ -1893,6 +2006,7 @@ mod tests {
                 s0: split,
                 tokens: &prompt[split..],
                 seed: None,
+                qseed: None,
                 emit_logits: true,
                 decode: false,
             }];
@@ -1942,6 +2056,7 @@ mod tests {
             s0: 0,
             tokens: &toks[..2],
             seed: None,
+            qseed: None,
             emit_logits: false,
             decode: false,
         }];
@@ -1951,6 +2066,7 @@ mod tests {
             s0: 2,
             tokens: &toks[2..],
             seed: None,
+            qseed: None,
             emit_logits: true,
             decode: false,
         }];
@@ -1964,6 +2080,7 @@ mod tests {
                 s0: prompt.len() + step,
                 tokens: &cur,
                 seed: None,
+                qseed: None,
                 emit_logits: true,
                 decode: true,
             }];
@@ -1994,16 +2111,16 @@ mod tests {
         let (k, v) = sched_caches(&rt, 2);
         // Iteration 1: row 0 finishes its prompt; row 1 starts a chunk.
         let it1 = [
-            RowChunk { row: 0, s0: 0, tokens: &toks_a, seed: None, emit_logits: true, decode: false },
-            RowChunk { row: 1, s0: 0, tokens: &b[..3], seed: None, emit_logits: false, decode: false },
+            RowChunk { row: 0, s0: 0, tokens: &toks_a, seed: None, qseed: None, emit_logits: true, decode: false },
+            RowChunk { row: 1, s0: 0, tokens: &b[..3], seed: None, qseed: None, emit_logits: false, decode: false },
         ];
         let o1 = rt.prefill_chunk(2, &it1, k, v).unwrap();
         let g0 = o1.argmax_of(0);
         // Iteration 2: row 0 decodes while row 1 finishes prefilling.
         let cur = [g0 as i32];
         let it2 = [
-            RowChunk { row: 0, s0: 3, tokens: &cur, seed: None, emit_logits: true, decode: true },
-            RowChunk { row: 1, s0: 3, tokens: &b[3..], seed: None, emit_logits: true, decode: false },
+            RowChunk { row: 0, s0: 3, tokens: &cur, seed: None, qseed: None, emit_logits: true, decode: true },
+            RowChunk { row: 1, s0: 3, tokens: &b[3..], seed: None, qseed: None, emit_logits: true, decode: false },
         ];
         let o2 = rt.prefill_chunk(2, &it2, o1.k, o1.v).unwrap();
         assert_eq!(g0, solo_a[0][0]);
@@ -2029,6 +2146,7 @@ mod tests {
             s0: 0,
             tokens: &prompt,
             seed: None,
+            qseed: None,
             emit_logits: true,
             decode: false,
         }];
@@ -2040,6 +2158,7 @@ mod tests {
             s0: 4,
             tokens: &prompt[4..],
             seed: Some(SeededPrefix { len: 4, k: &ks, v: &vs }),
+            qseed: None,
             emit_logits: true,
             decode: false,
         }];
@@ -2055,11 +2174,125 @@ mod tests {
     }
 
     #[test]
+    fn int8_seeded_chunk_matches_dequantized_seed() {
+        // The direct-int8 resume path (qseed: attend_one_i8 over the
+        // pool's bytes) must be bit-identical to resuming from the
+        // dequantized f32 expansion of the same bytes — logits AND every
+        // cache entry. This is the contract that lets the real engine
+        // attend straight over int8-resident KV while its f32 lockstep
+        // twin dequantizes first.
+        let rt = toy_runtime();
+        let prompt = [3i32, 8, 2, 1, 7, 5, 9];
+        let (k, v) = sched_caches(&rt, 1);
+        let cold_chunks = [RowChunk {
+            row: 0,
+            s0: 0,
+            tokens: &prompt,
+            seed: None,
+            qseed: None,
+            emit_logits: true,
+            decode: false,
+        }];
+        let cold = rt.prefill_chunk(1, &cold_chunks, k, v).unwrap();
+        let len = 4usize;
+        let (ks, vs) =
+            (seed_slab(&cold.k, &rt.cfg, 1, 0, len), seed_slab(&cold.v, &rt.cfg, 1, 0, len));
+        // Quantize the [L, len, Dm] slabs with one scale per (layer, pos)
+        // row — the QuantKvBlock orientation — then build both seeds.
+        let rows = rt.cfg.n_layers * len;
+        let kq = kernels::quantize_rows(&ks, rows, rt.cfg.d_model);
+        let vq = kernels::quantize_rows(&vs, rows, rt.cfg.d_model);
+        let dq = |q: &kernels::QuantMat| -> Vec<f32> {
+            let mut out = vec![0.0f32; q.rows * q.cols];
+            for r in 0..q.rows {
+                for c in 0..q.cols {
+                    out[r * q.cols + c] = f32::from(q.data[r * q.cols + c]) * q.scales[r];
+                }
+            }
+            out
+        };
+        let (dk, dv) = (dq(&kq), dq(&vq));
+        let run = |seed: Option<SeededPrefix<'_>>, qseed: Option<QuantSeededPrefix<'_>>| {
+            let (k, v) = sched_caches(&rt, 1);
+            let chunks = [RowChunk {
+                row: 0,
+                s0: len,
+                tokens: &prompt[len..],
+                seed,
+                qseed,
+                emit_logits: true,
+                decode: false,
+            }];
+            rt.prefill_chunk(1, &chunks, k, v).unwrap()
+        };
+        let f32_leg = run(Some(SeededPrefix { len, k: &dk, v: &dv }), None);
+        let i8_leg = run(
+            None,
+            Some(QuantSeededPrefix {
+                len,
+                k: &kq.data,
+                v: &vq.data,
+                k_scales: &kq.scales,
+                v_scales: &vq.scales,
+            }),
+        );
+        assert!(
+            i8_leg
+                .logits_of(0)
+                .iter()
+                .zip(f32_leg.logits_of(0))
+                .all(|(x, y)| x.to_bits() == y.to_bits()),
+            "int8-seeded logits diverge from dequantized-seed logits"
+        );
+        assert!(i8_leg.k.data.iter().zip(&f32_leg.k.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(i8_leg.v.data.iter().zip(&f32_leg.v.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // Both legs bill the seeded-prefill telemetry.
+        let s = rt.stats();
+        assert_eq!(s.seeded_prefill_rows, 2);
+        assert_eq!(s.seeded_prefill_tokens, 2 * len as u64);
+        // Guard rails: double-seeding and bad scale lengths are errors.
+        let both = [RowChunk {
+            row: 0,
+            s0: len,
+            tokens: &prompt[len..],
+            seed: Some(SeededPrefix { len, k: &dk, v: &dv }),
+            qseed: Some(QuantSeededPrefix {
+                len,
+                k: &kq.data,
+                v: &vq.data,
+                k_scales: &kq.scales,
+                v_scales: &vq.scales,
+            }),
+            emit_logits: true,
+            decode: false,
+        }];
+        let (k, v) = sched_caches(&rt, 1);
+        assert!(rt.prefill_chunk(1, &both, k, v).is_err(), "both seeds on one row must error");
+        let short = [RowChunk {
+            row: 0,
+            s0: len,
+            tokens: &prompt[len..],
+            seed: None,
+            qseed: Some(QuantSeededPrefix {
+                len,
+                k: &kq.data,
+                v: &vq.data,
+                k_scales: &kq.scales[..rows - 1],
+                v_scales: &vq.scales,
+            }),
+            emit_logits: true,
+            decode: false,
+        }];
+        let (k, v) = sched_caches(&rt, 1);
+        assert!(rt.prefill_chunk(1, &short, k, v).is_err(), "short scales must error");
+    }
+
+    #[test]
     fn chunk_error_paths() {
         let rt = toy_runtime();
         const TOKS: [i32; 2] = [1, 2];
         fn mk(row: usize, s0: usize, seed: Option<SeededPrefix<'_>>) -> RowChunk<'_> {
-            RowChunk { row, s0, tokens: &TOKS, seed, emit_logits: true, decode: false }
+            RowChunk { row, s0, tokens: &TOKS, seed, qseed: None, emit_logits: true, decode: false }
         }
         let run = |chunks: &[RowChunk<'_>]| {
             let (k, v) = sched_caches(&rt, 2);
@@ -2080,6 +2313,7 @@ mod tests {
             s0: 0,
             tokens: &bad_tok,
             seed: None,
+            qseed: None,
             emit_logits: true,
             decode: false,
         }])

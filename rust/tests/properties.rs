@@ -585,14 +585,19 @@ fn prop_tokenizer_prefix_stable() {
 
 // ---------------------------------------------------------- KV pool
 
-/// Random interleaved insert/lookup sequences over 1–4 shards, dedup
-/// on/off, shard-less writers, and a mix of metadata-only and data-bearing
+/// Random interleaved insert/lookup/prefetch sequences over 1–4 shards,
+/// dedup on/off, int8 quantization on/off, a cold spill tier on/off,
+/// shard-less writers, and a mix of metadata-only and data-bearing
 /// inserts: `check_invariants()` (index/policy/byte accounting agreement,
-/// per-shard capacity, data tier ⊆ index) holds after *every* operation.
-/// This property catches both historical pool accounting bugs — the
-/// dedup-off re-insert that ran the make-room loop before freeing its own
-/// old copy, and once-per-call placement hot-spotting a shard-less
-/// writer's multi-block write-back.
+/// per-shard capacity, data tier ⊆ index, cold-tier byte accounting, and
+/// RAM∩cold disjointness — a promotion must move a block, never duplicate
+/// it) holds after *every* operation. This property catches both
+/// historical pool accounting bugs — the dedup-off re-insert that ran the
+/// make-room loop before freeing its own old copy, and once-per-call
+/// placement hot-spotting a shard-less writer's multi-block write-back —
+/// and pins the tiered-cache extension: spills, promotions, prefetches,
+/// quantized inserts, and shard drops may interleave in any order without
+/// the two tiers ever disagreeing.
 #[test]
 fn prop_kv_pool_accounting_invariants() {
     use aibrix::engine::ExternalKv;
@@ -606,6 +611,10 @@ fn prop_kv_pool_accounting_invariants() {
     struct Scenario {
         shards: usize,
         dedup: bool,
+        quant: bool,
+        /// Cold-tier capacity in bytes (0 = off). Sized to a handful of
+        /// encoded blocks so the FIFO cold-eviction path churns too.
+        cold_bytes: u64,
         /// (op kind, writer/reader node, chain start key, chain length)
         ops: Vec<(u8, u64, u64, usize)>,
     }
@@ -616,13 +625,19 @@ fn prop_kv_pool_accounting_invariants() {
         |rng, size| Scenario {
             shards: 1 + rng.below(4) as usize,
             dedup: rng.below(2) == 0,
+            quant: rng.below(2) == 0,
+            cold_bytes: [0, 2 * 1024, 8 * 1024][rng.below(3) as usize],
             ops: (0..size.0.max(8))
                 .map(|_| {
                     (
                         // Rare shard drops (kind 3) interleave with the
-                        // insert/lookup churn: losing a node mid-stream
-                        // must keep both tiers consistent.
-                        if rng.chance(0.08) { 3 } else { rng.below(3) as u8 },
+                        // insert/lookup/prefetch churn: losing a node
+                        // mid-stream must keep both tiers consistent.
+                        if rng.chance(0.08) {
+                            3
+                        } else {
+                            [0, 1, 2, 4][rng.below(4) as usize]
+                        },
                         rng.below(6),                // nodes 4.. have no shard
                         1 + rng.below(24),           // small key space => collisions
                         1 + rng.below(6) as usize,   // blocks per op
@@ -631,15 +646,20 @@ fn prop_kv_pool_accounting_invariants() {
                 .collect(),
         },
         |sc| {
-            // Tiny shards (3 blocks each) force constant eviction churn.
+            // Tiny shards (3 blocks each) force constant eviction churn;
+            // with quant on the same bytes hold 4x the blocks, so the
+            // charged-bytes accounting is exercised at both densities.
             let nodes: Vec<(u64, u64)> = (0..sc.shards as u64).map(|i| (i, 3 * 1024)).collect();
             let mut cfg = KvPoolConfig::new(nodes, 64, 16); // block = 1024 bytes
             cfg.dedup = sc.dedup;
+            cfg.quant = sc.quant;
+            cfg.cold_bytes = sc.cold_bytes;
             let mut pool = DistKvPool::new(cfg);
             pool.set_shape(SHAPE).map_err(|e| e.to_string())?;
+            // Varied values so quantized blocks carry non-trivial scales.
             let data = Arc::new(KvBlockData {
-                k: vec![1.0; SHAPE.floats_per_side()],
-                v: vec![2.0; SHAPE.floats_per_side()],
+                k: (0..SHAPE.floats_per_side()).map(|i| (i % 7) as f32 - 3.0).collect(),
+                v: (0..SHAPE.floats_per_side()).map(|i| (i % 5) as f32 * 0.5).collect(),
             });
             for (step, &(kind, node, start, len)) in sc.ops.iter().enumerate() {
                 // Advancing clock straddles the 50ms visibility delay.
@@ -662,9 +682,22 @@ fn prop_kv_pool_accounting_invariants() {
                             ));
                         }
                     }
+                    4 => {
+                        // Prefetch promotes cold blocks / warms RAM ones;
+                        // its counters must stay internally consistent.
+                        pool.prefetch(now, node, &keys);
+                        let s = &pool.stats;
+                        if s.prefetch_hits > s.prefetch_issued {
+                            return Err(format!(
+                                "op {step}: {} prefetch hits for {} issued",
+                                s.prefetch_hits, s.prefetch_issued
+                            ));
+                        }
+                    }
                     _ => {
                         // Chaos: drop the node's shard (no-op for nodes
                         // that never had one, or already-dropped ones).
+                        // Cold-resident blocks survive the drop.
                         let had = pool.has_shard(node);
                         let dropped = pool.drop_shard(node);
                         if !had && dropped > 0 {
@@ -678,6 +711,88 @@ fn prop_kv_pool_accounting_invariants() {
                     return Err(format!(
                         "op {step} ({kind} node={node} keys={start}..+{len}) broke invariants"
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Int8-resident attention stays within its analytic error bound vs the
+/// full-f32 kernel (the `attend_one_i8` contract, PR 4 `gemm_i8` style):
+/// per-score |Δs| ≤ (k_scale/2)·‖q‖₁/√hd, softmax weights move by at most
+/// e^{2Δmax}−1 in total variation, so per output element
+/// |Δout| ≤ max(v_scale)/2 + (e^{2Δmax}−1)·(max|v| + max(v_scale)/2),
+/// plus a small float-accumulation slack. Random shapes, random mixed
+/// int8/f32 split points (qlen 0 = pure f32 passthrough, qlen = kv_len =
+/// fully int8-resident), every head checked.
+#[test]
+fn prop_attend_one_i8_error_within_analytic_bound() {
+    use aibrix::runtime::kernels::{attend_one, attend_one_i8, quantize_rows};
+
+    #[derive(Debug)]
+    struct Case {
+        n_heads: usize,
+        hd: usize,
+        kv_len: usize,
+        /// Positions `0..qlen` are int8-resident, the rest stay f32.
+        qlen: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    }
+
+    forall(
+        "attend-one-i8-bound",
+        200,
+        |rng, _size| {
+            let n_heads = 1 + rng.below(2) as usize;
+            let hd = if rng.below(2) == 0 { 4 } else { 8 };
+            let kv_len = 1 + rng.below(12) as usize;
+            let qlen = rng.below(kv_len as u64 + 1) as usize;
+            let stride = n_heads * hd;
+            let q: Vec<f32> = (0..hd).map(|_| rng.below(4001) as f32 / 1000.0 - 2.0).collect();
+            let k: Vec<f32> =
+                (0..kv_len * stride).map(|_| rng.below(6001) as f32 / 1000.0 - 3.0).collect();
+            let v: Vec<f32> =
+                (0..kv_len * stride).map(|_| rng.below(6001) as f32 / 1000.0 - 3.0).collect();
+            Case { n_heads, hd, kv_len, qlen, q, k, v }
+        },
+        |c| {
+            let stride = c.n_heads * c.hd;
+            let kq = quantize_rows(&c.k[..c.qlen * stride], c.qlen, stride);
+            let vq = quantize_rows(&c.v[..c.qlen * stride], c.qlen, stride);
+            // Analytic pieces of the bound.
+            let q_l1: f32 = c.q.iter().map(|x| x.abs()).sum();
+            let inv_sqrt = 1.0 / (c.hd as f32).sqrt();
+            let d_max =
+                kq.scales.iter().map(|s| 0.5 * s * q_l1 * inv_sqrt).fold(0.0f32, f32::max);
+            let max_vs = vq.scales.iter().fold(0.0f32, |a, &s| a.max(s));
+            let max_abs_v = c.v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let bound = (0.5 * max_vs
+                + ((2.0 * d_max).exp() - 1.0) * (max_abs_v + 0.5 * max_vs))
+                * 1.01
+                + 1e-4;
+            let mut scores = Vec::new();
+            let mut out_ref = vec![0.0f32; c.hd];
+            let mut out_q = vec![0.0f32; c.hd];
+            for head in 0..c.n_heads {
+                attend_one(&c.q, &c.k, &c.v, c.kv_len, head, c.n_heads, &mut scores, &mut out_ref);
+                attend_one_i8(
+                    &c.q, &kq.data, &kq.scales, &vq.data, &vq.scales, c.qlen, &c.k, &c.v,
+                    c.kv_len, head, c.n_heads, &mut scores, &mut out_q,
+                );
+                for d in 0..c.hd {
+                    let err = (out_ref[d] - out_q[d]).abs();
+                    if !err.is_finite() || err > bound {
+                        return Err(format!(
+                            "head {head} dim {d}: err {err} > bound {bound} (Δmax {d_max})"
+                        ));
+                    }
+                }
+                // qlen == 0 must be an exact f32 passthrough, bit for bit.
+                if c.qlen == 0 && out_ref != out_q {
+                    return Err("qlen=0 must be bit-identical to attend_one".into());
                 }
             }
             Ok(())

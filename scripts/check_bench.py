@@ -4,6 +4,7 @@
 Usage:
     python3 scripts/check_bench.py CURRENT BASELINE [--bless] [--tolerance T]
     python3 scripts/check_bench.py --kvpool BENCH_kvpool_e2e.json
+    python3 scripts/check_bench.py --kvpool-tiered BENCH_kvpool_tiered.json
     python3 scripts/check_bench.py --routing BENCH_routing_e2e.json
     python3 scripts/check_bench.py --chaos BENCH_chaos_e2e.json
     python3 scripts/check_bench.py --sched BENCH_engine_sched_e2e.json
@@ -19,6 +20,11 @@ Usage:
   (pool-on beats pool-off, cross-replica hits happened, outputs
   bit-identical); no baseline needed, so it is never in record mode for
   these structural checks.
+- --kvpool-tiered: validate a kvpool_tiered report — within-run gates only
+  (strict served-throughput ordering tiered > ram_only_f32 > pool_off, the
+  cold tier actually spilled and promoted, end-of-turn prefetch hit at
+  least once, ram-only outputs bit-identical, and int8 greedy top-1
+  agreement >= 0.5).
 - --routing: validate a routing_e2e report — within-run gates only
   (pool-aware hit ratio strictly above pool-blind, served-prefill
   throughput at least pool-blind's, session-sticky above blind, outputs
@@ -109,6 +115,70 @@ def check_kvpool(path):
               f"prefill (wall speedup {wall:.2f}x)")
         return 1
     print("check_bench: OK — kvpool within-run gates hold")
+    return 0
+
+
+def check_kvpool_tiered(path):
+    """Within-run validation of a kvpool_tiered report (ISSUE 10
+    acceptance: with the working set over RAM capacity, the tiered cache
+    — int8 blocks + cold spill + prefetch — strictly beats both the
+    thrashing RAM-only f32 pool and no pool at all, the cold tier did
+    real work, prefetch landed, and quantization drift stayed inside the
+    relaxed top-1 floor)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench: cannot read kvpool-tiered report {path}: {e}")
+        return 2
+    off = tokens_per_s(doc, "pool_off")
+    ram = tokens_per_s(doc, "ram_only_f32")
+    tiered = tokens_per_s(doc, "tiered")
+    derived = doc.get("derived", {})
+    spills = derived.get("spills")
+    promotions = derived.get("promotions")
+    cold_end = derived.get("cold_blocks_end")
+    pf_issued = derived.get("prefetch_issued")
+    pf_hits = derived.get("prefetch_hits")
+    pf_rate = derived.get("prefetch_hit_rate")
+    top1 = derived.get("top1_agreement")
+    ram_identical = derived.get("ram_only_outputs_bit_identical")
+    if None in (off, ram, tiered, spills, promotions, cold_end, pf_issued,
+                pf_hits, pf_rate, top1, ram_identical):
+        print(f"check_bench: {path} is missing kvpool-tiered rows/derived values")
+        return 2
+    print(f"check_bench: kvpool-tiered {tiered:.0f} vs ram-only {ram:.0f} vs "
+          f"pool-off {off:.0f} served tok/s ({int(spills)} spills, "
+          f"{int(promotions)} promotions, prefetch {int(pf_hits)}/{int(pf_issued)} "
+          f"hit, top-1 {top1:.3f})")
+    if ram_identical is not True:
+        print("check_bench: FAIL — ram-only f32 outputs were not bit-identical "
+              "to pool-off")
+        return 1
+    if not ram > off:
+        print("check_bench: FAIL — ram-only f32 pool did not beat pool-off")
+        return 1
+    if not tiered > ram:
+        print("check_bench: FAIL — tiered cache did not beat the ram-only f32 pool")
+        return 1
+    if not spills > 0:
+        print("check_bench: FAIL — the working set never spilled to the cold tier "
+              "(the tiered gate is vacuous)")
+        return 1
+    if not promotions > 0:
+        print("check_bench: FAIL — no cold block was ever promoted back to RAM")
+        return 1
+    if not cold_end > 0:
+        print("check_bench: FAIL — cold tier empty at end of run")
+        return 1
+    if not (pf_issued > 0 and pf_hits > 0 and pf_rate > 0):
+        print("check_bench: FAIL — end-of-turn prefetch never warmed a block")
+        return 1
+    if top1 < 0.5:
+        print(f"check_bench: FAIL — int8 KV drift broke greedy top-1 agreement "
+              f"({top1:.3f} < 0.5)")
+        return 1
+    print("check_bench: OK — kvpool-tiered within-run gates hold")
     return 0
 
 
@@ -345,6 +415,7 @@ def main(argv):
     bless = False
     tol = 0.30
     kvpool = None
+    kvpool_tiered = None
     routing = None
     chaos = None
     sched = None
@@ -356,8 +427,8 @@ def main(argv):
         a = argv[i]
         if a == "--bless":
             bless = True
-        elif a in ("--tolerance", "--kvpool", "--routing", "--chaos", "--sched",
-                   "--overload", "--lint"):
+        elif a in ("--tolerance", "--kvpool", "--kvpool-tiered", "--routing",
+                   "--chaos", "--sched", "--overload", "--lint"):
             i += 1
             if i >= len(argv):
                 print(f"check_bench: {a} expects a value")
@@ -367,6 +438,8 @@ def main(argv):
                 tol = float(argv[i])
             elif a == "--kvpool":
                 kvpool = argv[i]
+            elif a == "--kvpool-tiered":
+                kvpool_tiered = argv[i]
             elif a == "--chaos":
                 chaos = argv[i]
             elif a == "--sched":
@@ -384,9 +457,10 @@ def main(argv):
         else:
             args.append(a)
         i += 1
-    if sum(x is not None for x in (kvpool, routing, chaos, sched, overload, lint)) > 1:
-        print("check_bench: pass one of --kvpool/--routing/--chaos/--sched/"
-              "--overload/--lint (run twice)")
+    if sum(x is not None for x in (kvpool, kvpool_tiered, routing, chaos, sched,
+                                   overload, lint)) > 1:
+        print("check_bench: pass one of --kvpool/--kvpool-tiered/--routing/"
+              "--chaos/--sched/--overload/--lint (run twice)")
         print(__doc__)
         return 2
     if chaos is not None:
@@ -419,6 +493,12 @@ def main(argv):
             print(__doc__)
             return 2
         return check_kvpool(kvpool)
+    if kvpool_tiered is not None:
+        if args:
+            print("check_bench: --kvpool-tiered takes no positional arguments")
+            print(__doc__)
+            return 2
+        return check_kvpool_tiered(kvpool_tiered)
     if routing is not None:
         if args:
             print("check_bench: --routing takes no positional arguments")
